@@ -1,0 +1,67 @@
+//! Quickstart: train a tiny LM with and without DropCompute in a noisy
+//! simulated cluster, and compare loss-at-equal-virtual-time.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use dropcompute::config::{Config, NoiseKind, ThresholdPolicy};
+use dropcompute::report::{f, pct, Table};
+use dropcompute::train::Trainer;
+
+fn base_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.train.model_size = "tiny".into();
+    cfg.train.steps = 40;
+    cfg.train.lr = 2e-3;
+    cfg.train.log_every = 10;
+    cfg.cluster.workers = 8;
+    cfg.cluster.accumulations = 8;
+    // the paper's simulated-delay environment (App. B.1)
+    cfg.cluster.noise = NoiseKind::PaperLogNormal {
+        mu: 4.0,
+        sigma: 1.0,
+        alpha: 2.0 * (4.5f64).exp(),
+        beta: 5.5,
+    };
+    cfg
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut baseline_cfg = base_config();
+    baseline_cfg.dropcompute.policy = ThresholdPolicy::Off;
+    let mut dc_cfg = base_config();
+    dc_cfg.dropcompute.policy = ThresholdPolicy::Auto;
+
+    println!("== baseline synchronous training ==");
+    let base_log = Trainer::new(&baseline_cfg)?.train()?;
+    println!("\n== DropCompute (Algorithm 2 auto threshold) ==");
+    let mut dc_trainer = Trainer::new(&dc_cfg)?;
+    let dc_log = dc_trainer.train()?;
+
+    let mut t = Table::new(
+        "quickstart: tiny LM, 8 workers, simulated delay",
+        &["run", "final loss", "drop", "virtual time", "mb/s"],
+    );
+    for (name, log) in [("baseline", &base_log), ("DropCompute", &dc_log)] {
+        t.row(vec![
+            name.into(),
+            f(log.final_loss(), 4),
+            pct(log.mean_drop_rate()),
+            f(log.total_virtual_time(), 1),
+            f(log.throughput(), 2),
+        ]);
+    }
+    t.print();
+    println!(
+        "time saved: {:.1}%  (tau* = {:.2}s, predicted speedup {:.3})",
+        100.0 * (1.0 - dc_log.total_virtual_time() / base_log.total_virtual_time()),
+        dc_trainer.threshold.unwrap_or(f64::NAN),
+        dc_trainer
+            .calibration
+            .as_ref()
+            .map(|c| c.speedup)
+            .unwrap_or(f64::NAN)
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Straggler robustness demo (timing-only, no model compute): how the
+//! iteration time of synchronous training degrades with cluster size
+//! under several noise families, and what DropCompute recovers.
+//!
+//! ```sh
+//! cargo run --release --example straggler_sim -- [--workers 8,32,128]
+//! ```
+
+use dropcompute::analysis::Setting;
+use dropcompute::cli::Spec;
+use dropcompute::config::{ClusterConfig, NoiseKind};
+use dropcompute::coordinator::ScaleRun;
+use dropcompute::report::{ascii_series, f, pct, Table};
+use dropcompute::sim::LatencyModel;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Spec::new()
+        .value_keys(&["workers"])
+        .parse(std::env::args().skip(1))?;
+    let ns: Vec<usize> = args
+        .str_or("workers", "4,16,64,200")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+
+    for (label, noise) in [
+        ("no noise", NoiseKind::None),
+        (
+            "paper lognormal delay",
+            NoiseKind::PaperLogNormal {
+                mu: 4.0,
+                sigma: 1.0,
+                alpha: 2.0 * (4.5f64).exp(),
+                beta: 5.5,
+            },
+        ),
+        ("exponential", NoiseKind::Exponential { mean: 0.225 }),
+    ] {
+        let base = ClusterConfig {
+            workers: 1,
+            accumulations: 12,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            comm_latency: 0.5,
+            noise: noise.clone(),
+            ..Default::default()
+        };
+        let run = ScaleRun { base: base.clone(), ..Default::default() };
+        let pts = run.sweep(&ns);
+        let mut t = Table::new(
+            format!("scaling under `{label}`"),
+            &["N", "baseline mb/s", "DropCompute mb/s", "linear", "drop", "recovered"],
+        );
+        for p in &pts {
+            let gap = p.linear_throughput - p.baseline_throughput;
+            let rec = if gap > 1e-9 {
+                (p.dropcompute_throughput - p.baseline_throughput) / gap
+            } else {
+                0.0
+            };
+            t.row(vec![
+                p.workers.to_string(),
+                f(p.baseline_throughput, 1),
+                f(p.dropcompute_throughput, 1),
+                f(p.linear_throughput, 1),
+                pct(p.drop_rate),
+                pct(rec.clamp(0.0, 1.0)),
+            ]);
+        }
+        t.print();
+
+        // analytical scaling-efficiency curve for the same noise
+        let model = LatencyModel::from_config(&base);
+        let series: Vec<(String, f64)> = ns
+            .iter()
+            .map(|&n| {
+                let s = Setting {
+                    workers: n,
+                    accums: 12,
+                    mu: model.mean(),
+                    sigma2: model.variance(),
+                    comm: 0.5,
+                };
+                (
+                    format!("N={n}"),
+                    dropcompute::analysis::scaling_efficiency(&s),
+                )
+            })
+            .collect();
+        println!("{}", ascii_series("analytic scaling efficiency", &series, 40));
+    }
+    Ok(())
+}

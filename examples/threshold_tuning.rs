@@ -1,0 +1,83 @@
+//! Algorithm 2 walkthrough: record a latency trace, synchronize the
+//! empirical distribution across workers with a *real* ring AllGather
+//! (one thread per worker), and let every worker independently compute
+//! the same `tau*` — then show the analytical model's agreement.
+//!
+//! ```sh
+//! cargo run --release --example threshold_tuning
+//! ```
+
+use dropcompute::analysis::{choose_threshold, Setting};
+use dropcompute::config::{ClusterConfig, NoiseKind};
+use dropcompute::coordinator::decentralized_calibration;
+use dropcompute::report::{f, pct, Table};
+use dropcompute::sim::{ClusterSim, LatencyModel};
+
+fn main() {
+    let cfg = ClusterConfig {
+        workers: 16,
+        accumulations: 12,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        comm_latency: 0.5,
+        noise: NoiseKind::PaperLogNormal {
+            mu: 4.0,
+            sigma: 1.0,
+            alpha: 2.0 * (4.5f64).exp(),
+            beta: 5.5,
+        },
+        ..Default::default()
+    };
+
+    // 1. measure I calibration iterations (no drops)
+    let mut sim = ClusterSim::new(&cfg, 42);
+    let trace = sim.record_trace(20);
+    let (mu, var) = trace.microbatch_moments();
+    println!(
+        "measured micro-batch latency: mean {mu:.3}s var {var:.4} over {} samples",
+        trace.all_samples().len()
+    );
+
+    // 2. decentralized: one thread per worker, ring AllGather, local argmax
+    let choices = decentralized_calibration(&trace, 256);
+    let tau0 = choices[0].tau;
+    let consensus =
+        choices.iter().all(|c| c.tau.to_bits() == tau0.to_bits());
+    println!(
+        "decentralized consensus across {} workers: {} (tau* = {tau0:.3}s)",
+        choices.len(),
+        if consensus { "YES" } else { "NO (bug!)" }
+    );
+
+    // 3. the sweep (Fig 3c): effective speedup / completion / step speedup
+    let central = choose_threshold(&trace, 256);
+    let mut t = Table::new(
+        "Fig 3c — S_eff(tau) trade-off",
+        &["tau", "S_eff", "completion", "step speedup"],
+    );
+    for p in central.sweep.iter().step_by(central.sweep.len() / 14) {
+        t.row(vec![
+            f(p.tau, 2),
+            f(p.effective_speedup, 4),
+            pct(p.completion_rate),
+            f(p.step_speedup, 4),
+        ]);
+    }
+    t.print();
+
+    // 4. analytical model (Eq. 5 + Eq. 4) vs the empirical choice
+    let model = LatencyModel::from_config(&cfg);
+    let s = Setting {
+        workers: cfg.workers,
+        accums: cfg.accumulations,
+        mu: model.mean(),
+        sigma2: model.variance(),
+        comm: cfg.comm_latency,
+    };
+    let (tau_analytic, s_analytic) = s.optimal_threshold(512);
+    println!(
+        "empirical  tau* {:.3}  S_eff {:.4}\nanalytical tau* {:.3}  S_eff {:.4} \
+         (Gaussian E[T]; see Fig 3b for why heavy tails shift this)",
+        central.tau, central.speedup, tau_analytic, s_analytic
+    );
+}

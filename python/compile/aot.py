@@ -1,0 +1,104 @@
+"""AOT pipeline: lower the L2/L1 stack to HLO *text* artifacts.
+
+Python runs once, here; Rust loads the artifacts and never calls back.
+
+Interchange format is HLO TEXT (not serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Per model size this emits into ``artifacts/<size>/``:
+  grad.hlo.txt   — (params..., tokens[B,S] i32) -> (loss, grads...)
+  loss.hlo.txt   — (params..., tokens[B,S] i32) -> (loss,)
+  manifest.json  — shapes, param specs + init hints, flop estimate
+
+Usage: python -m compile.aot --out-dir ../artifacts --sizes test,tiny,...
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_size(cfg: model.ModelConfig, out_dir: str) -> dict:
+    """Lower grad + loss entry points for one size; return manifest entry."""
+    specs = model.param_specs(cfg)
+    param_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _, _ in specs]
+    tok_shape = jax.ShapeDtypeStruct((cfg.micro_batch, cfg.seq_len), jnp.int32)
+
+    os.makedirs(out_dir, exist_ok=True)
+
+    def grad_fn(params, tokens):
+        return model.grad_step(cfg, list(params), tokens)
+
+    def loss_fn(params, tokens):
+        return (model.loss_fn(cfg, list(params), tokens),)
+
+    for name, fn in [("grad", grad_fn), ("loss", loss_fn)]:
+        lowered = jax.jit(fn).lower(tuple(param_shapes), tok_shape)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    return {
+        "name": cfg.name,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "seq_len": cfg.seq_len, "micro_batch": cfg.micro_batch,
+            "d_ff": cfg.ff,
+        },
+        "param_count": model.param_count(cfg),
+        "flops_per_microbatch": model.flops_per_microbatch(cfg),
+        "params": [
+            {"name": n, "shape": list(s), "init": k, "scale": sc}
+            for n, s, k, sc in specs
+        ],
+        "inputs": {"tokens": [cfg.micro_batch, cfg.seq_len]},
+        "entrypoints": {
+            "grad": {"file": "grad.hlo.txt",
+                     "outputs": ["loss"] + [n for n, *_ in specs]},
+            "loss": {"file": "loss.hlo.txt", "outputs": ["loss"]},
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="test,tiny,small,base,large")
+    args = ap.parse_args()
+
+    for size in args.sizes.split(","):
+        size = size.strip()
+        cfg = model.CONFIGS[size]
+        print(f"lowering size={size} "
+              f"(params={model.param_count(cfg) / 1e6:.2f}M)")
+        entry = lower_size(cfg, os.path.join(args.out_dir, size))
+        with open(os.path.join(args.out_dir, size, "manifest.json"), "w") as f:
+            json.dump(entry, f, indent=1)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""L2 perf analysis: op statistics of the lowered HLO modules.
+
+The L2 target is structural: no redundant recomputation, fusable
+elementwise chains, no gratuitous transposes/copies. This tool counts op
+categories in the emitted HLO text so regressions show up as diffs in
+`make artifacts` output and in EXPERIMENTS.md §Perf.
+
+Run:  python -m compile.hlo_stats ../artifacts/small/grad.hlo.txt
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from collections import Counter
+
+
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{},\s/]*?\s(\w+)\(")
+
+CATEGORIES = {
+    "dot": "matmul",
+    "convolution": "matmul",
+    "transpose": "layout",
+    "copy": "layout",
+    "reshape": "layout",
+    "broadcast": "layout",
+    "exponential": "elementwise",
+    "add": "elementwise",
+    "multiply": "elementwise",
+    "divide": "elementwise",
+    "subtract": "elementwise",
+    "maximum": "elementwise",
+    "rsqrt": "elementwise",
+    "tanh": "elementwise",
+    "reduce": "reduce",
+    "scatter": "scatter",
+    "gather": "gather",
+    "dynamic-slice": "slice",
+    "dynamic-update-slice": "slice",
+    "while": "control",
+    "conditional": "control",
+    "fusion": "fusion",
+    "custom-call": "custom-call",
+}
+
+
+def stats(text: str) -> Counter:
+    ops = Counter()
+    for line in text.splitlines():
+        m = OP_RE.match(line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def categorize(ops: Counter) -> Counter:
+    cats = Counter()
+    for op, n in ops.items():
+        cats[CATEGORIES.get(op, "other")] += n
+    return cats
+
+
+def report(path: str) -> dict:
+    with open(path) as f:
+        text = f.read()
+    ops = stats(text)
+    cats = categorize(ops)
+    total = sum(ops.values())
+    dots = ops.get("dot", 0)
+    layout = cats.get("layout", 0)
+    out = {
+        "total_ops": total,
+        "dot": dots,
+        "layout_ops": layout,
+        "layout_fraction": layout / max(total, 1),
+        "custom_calls": ops.get("custom-call", 0),
+        "while_loops": ops.get("while", 0),
+        "top": ops.most_common(8),
+    }
+    return out
+
+
+def main() -> None:
+    for path in sys.argv[1:] or ["../artifacts/small/grad.hlo.txt"]:
+        r = report(path)
+        print(f"\n{path}")
+        print(f"  total ops      : {r['total_ops']}")
+        print(f"  dot (matmul)   : {r['dot']}")
+        print(f"  layout ops     : {r['layout_ops']} "
+              f"({100 * r['layout_fraction']:.1f}%)")
+        print(f"  custom-calls   : {r['custom_calls']} (must be 0 on CPU)")
+        print(f"  while loops    : {r['while_loops']}")
+        print(f"  top ops        : {r['top']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""L1 Pallas kernel: causal flash attention (forward).
+
+The paper's compute hot-spot for the BERT/transformer workloads is the
+attention block. The original system targets Habana Gaudi (MME systolic
+array + SRAM scratchpad); we re-think the kernel for the TPU model that
+Pallas exposes:
+
+* HBM <-> VMEM staging is expressed with ``BlockSpec``: queries are tiled
+  into ``(1, block_q, head_dim)`` VMEM blocks over a ``(batch*heads,
+  num_q_blocks)`` grid, keys/values are streamed through the kernel in
+  ``block_k`` chunks with an online-softmax accumulator — the classic
+  flash-attention schedule, which on a real TPU keeps the working set in
+  VMEM and feeds the MXU with ``(block_q, head_dim) x (head_dim, block_k)``
+  matmuls.
+* On this image Pallas must run with ``interpret=True`` (the CPU PJRT
+  plugin cannot execute Mosaic custom-calls), so the kernel lowers to plain
+  HLO. Correctness is asserted against the pure-jnp oracle in ``ref.py``;
+  the TPU performance analysis (VMEM footprint / MXU utilisation per block
+  shape) lives in ``DESIGN.md`` and ``python/compile/kernels/roofline.py``.
+
+The backward pass is provided via ``jax.custom_vjp`` using the reference
+implementation's VJP: numerics match the kernel (same math), and the
+combined fwd+bwd lowers into a single HLO module for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sm_scale: float,
+                  causal: bool, block_q: int, seq_len: int,
+                  padded_k_len: int):
+    """One (batch*head, q-block) cell of the flash-attention grid.
+
+    q_ref: (1, block_q, d) VMEM block of queries.
+    k_ref/v_ref: (1, seq_len, d) — streamed in ``block_k`` slices.
+    o_ref: (1, block_q, d) output block.
+    """
+    q = q_ref[0].astype(jnp.float32) * sm_scale  # (bq, d)
+    q_offset = pl.program_id(1) * block_q
+
+    num_k_blocks = padded_k_len // block_k
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k_offset = kb * block_k
+        k = k_ref[0, pl.dslice(k_offset, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(k_offset, block_k), :].astype(jnp.float32)
+
+        s = q @ k.T  # (bq, bk) — MXU matmul on real hardware
+        # Mask keys past seq_len: pl.dslice clamps an out-of-bounds start
+        # (dynamic_slice semantics), so the final partial block re-reads
+        # earlier keys — they must carry zero attention weight.
+        k_ids = k_offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = k_ids < seq_len
+        if causal:
+            q_ids = q_offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            valid = valid & (q_ids >= k_ids)
+        s = jnp.where(valid, s, -jnp.inf)
+
+        # Online softmax update (numerically stable streaming max/sum).
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Guard fully-masked rows: exp(-inf - -inf) -> exp(0); correct via l.
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(jnp.isneginf(s), 0.0, p)
+        alpha = jnp.exp(m_prev - m_new)
+        alpha = jnp.where(jnp.isneginf(m_prev) & jnp.isneginf(m_new), 0.0, alpha)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    if causal:
+        # Blocks strictly above the diagonal contribute nothing; skip them.
+        last_block = jnp.minimum(
+            num_k_blocks, (q_offset + block_q + block_k - 1) // block_k
+        )
+    else:
+        last_block = num_k_blocks
+
+    init = (
+        jnp.zeros((q.shape[0], v_ref.shape[-1]), jnp.float32),
+        jnp.full((q.shape[0],), -jnp.inf, jnp.float32),
+        jnp.zeros((q.shape[0],), jnp.float32),
+    )
+    acc, _, l = jax.lax.fori_loop(0, last_block, body, init)
+    # Rows that saw no unmasked key (cannot happen for causal q>=0) get 0.
+    denom = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = True) -> jax.Array:
+    """Flash attention forward over ``(bh, seq, head_dim)`` tensors."""
+    bh, seq_len, head_dim = q.shape
+    block_q = min(block_q, seq_len)
+    block_k = min(block_k, seq_len)
+
+    # Pad sequence to block multiples so every pl.dslice is in-bounds
+    # (dynamic_slice clamps OOB starts, which would misalign the final
+    # partial block); padded key positions are masked to -inf in-kernel.
+    pad_q = (-seq_len) % block_q
+    pad_k = (-seq_len) % block_k
+    pad = max(pad_q, pad_k)
+    if pad:
+        zeros = jnp.zeros((bh, pad, head_dim), q.dtype)
+        qp = jnp.concatenate([q, zeros[:, :pad_q]], axis=1)
+        kp = jnp.concatenate([k, zeros[:, :pad_k]], axis=1)
+        vp = jnp.concatenate([v, zeros[:, :pad_k]], axis=1)
+    else:
+        qp, kp, vp = q, k, v
+    padded_q_len = seq_len + pad_q
+    padded_k_len = seq_len + pad_k
+
+    sm_scale = 1.0 / math.sqrt(head_dim)
+    grid = (bh, padded_q_len // block_q)
+
+    kernel = functools.partial(
+        _flash_kernel, block_k=block_k, sm_scale=sm_scale, causal=causal,
+        block_q=block_q, seq_len=seq_len, padded_k_len=padded_k_len)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, head_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, padded_k_len, head_dim), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, padded_k_len, head_dim), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :seq_len, :]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q, k, v, causal=True):
+    """Causal attention: Pallas kernel forward, reference VJP backward."""
+    return flash_attention_fwd(q, k, v, causal=causal)
+
+
+def _fwd(q, k, v, causal):
+    return flash_attention_fwd(q, k, v, causal=causal), (q, k, v)
+
+
+def _bwd(causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: ref.attention(q, k, v, causal=causal),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def vmem_bytes(block_q: int, block_k: int, seq_len: int, head_dim: int,
+               dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid cell (perf-pass metric).
+
+    q block + streamed k/v chunks (double-buffered) + accumulator + output.
+    """
+    q_blk = block_q * head_dim
+    kv_blk = 2 * 2 * block_k * head_dim  # k+v, double buffered
+    acc = block_q * head_dim + 2 * block_q  # acc + m + l (f32)
+    out = block_q * head_dim
+    scores = block_q * block_k
+    return dtype_bytes * (q_blk + kv_blk + acc + out + scores)
+
+
+def mxu_utilization_estimate(block_q: int, block_k: int, head_dim: int,
+                             mxu: int = 128) -> float:
+    """Fraction of MXU lanes occupied by the two kernel matmuls.
+
+    A (m,k)x(k,n) matmul tiles the 128x128 systolic array in ceil(m/128)*
+    ceil(n/128) passes; utilization is the filled fraction of those tiles.
+    """
+    def util(m, n):
+        tiles = math.ceil(m / mxu) * math.ceil(n / mxu)
+        return (m * n) / (tiles * mxu * mxu)
+
+    # s = q@k.T : (bq, d)x(d, bk);  o = p@v : (bq, bk)x(bk, d)
+    return 0.5 * (util(block_q, block_k) + util(block_q, head_dim))

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: fused LayerNorm (forward).
+
+Fuses mean/variance/normalize/affine into a single VMEM-resident pass over
+``block_rows`` rows at a time — on TPU this avoids three HBM round-trips of
+the unfused lowering. Backward is the reference VJP via ``custom_vjp``
+(see attention.py for the rationale); ``interpret=True`` on this image.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _ln_kernel(x_ref, scale_ref, bias_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * scale_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+
+
+def layernorm_fwd(x: jax.Array, scale: jax.Array, bias: jax.Array, *,
+                  eps: float = 1e-5,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = True) -> jax.Array:
+    """Fused LayerNorm over the last axis of ``(rows, dim)``."""
+    rows, dim = x.shape
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, dim), lambda i: (i, 0)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, scale, bias)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def layernorm(x, scale, bias):
+    """Fused LayerNorm: Pallas forward, reference VJP backward."""
+    return layernorm_fwd(x, scale, bias)
+
+
+def _fwd(x, scale, bias):
+    return layernorm_fwd(x, scale, bias), (x, scale, bias)
+
+
+def _bwd(res, g):
+    x, scale, bias = res
+    _, vjp = jax.vjp(ref.layernorm, x, scale, bias)
+    return vjp(g)
+
+
+layernorm.defvjp(_fwd, _bwd)
+
+
+def vmem_bytes(block_rows: int, dim: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid cell (x block + out block + affine)."""
+    return dtype_bytes * (2 * block_rows * dim + 2 * dim + 2 * block_rows)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel in this package must
+match its oracle to float32 tolerance across the shape/dtype sweep in
+``python/tests/``. They are also the backward-pass implementations used by
+the kernels' ``custom_vjp`` (see attention.py), so fwd/bwd numerics agree
+by construction.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True) -> jnp.ndarray:
+    """Scaled dot-product attention over ``(bh, seq, head_dim)``."""
+    _, seq_len, head_dim = q.shape
+    scale = 1.0 / math.sqrt(head_dim)
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq_len, seq_len), bool))
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v).astype(q.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias

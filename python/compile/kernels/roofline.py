@@ -1,0 +1,97 @@
+"""L1 perf analysis: VMEM footprint + MXU utilization per BlockSpec.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so the
+kernel performance pass optimizes *structure*: keep the working set
+inside VMEM (~16 MiB/core), maximize MXU tile occupancy, and maximize
+arithmetic intensity (FLOPs per HBM byte). This module scores candidate
+block shapes and picks the best; DESIGN.md §Perf records the outcome.
+
+Run:  python -m compile.kernels.roofline
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List
+
+from . import attention
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM budget (TPU-like)
+MXU = 128
+
+
+@dataclasses.dataclass
+class BlockScore:
+    block_q: int
+    block_k: int
+    vmem_bytes: int
+    mxu_utilization: float
+    arithmetic_intensity: float  # flops per HBM byte
+    fits: bool
+
+    def figure_of_merit(self) -> float:
+        """Higher is better; infeasible shapes are disqualified."""
+        if not self.fits:
+            return 0.0
+        # utilization dominates; intensity breaks ties (log-scaled).
+        return self.mxu_utilization * math.log2(1.0 + self.arithmetic_intensity)
+
+
+def attention_hbm_bytes(seq_len: int, head_dim: int, block_q: int,
+                        dtype_bytes: int = 4) -> int:
+    """HBM traffic per (bh) for the flash schedule: Q/O once, K/V once per
+    q-block (streamed)."""
+    n_q_blocks = math.ceil(seq_len / block_q)
+    qo = 2 * seq_len * head_dim
+    kv = 2 * seq_len * head_dim * n_q_blocks
+    return dtype_bytes * (qo + kv)
+
+
+def attention_flops(seq_len: int, head_dim: int) -> int:
+    """2 matmuls over the (seq, seq) score matrix per bh (causal ~1/2)."""
+    return 2 * 2 * seq_len * seq_len * head_dim // 2
+
+
+def score(seq_len: int, head_dim: int, block_q: int, block_k: int) -> BlockScore:
+    vmem = attention.vmem_bytes(block_q, block_k, seq_len, head_dim)
+    util = attention.mxu_utilization_estimate(block_q, block_k, head_dim)
+    hbm = attention_hbm_bytes(seq_len, head_dim, block_q)
+    flops = attention_flops(seq_len, head_dim)
+    return BlockScore(
+        block_q=block_q,
+        block_k=block_k,
+        vmem_bytes=vmem,
+        mxu_utilization=util,
+        arithmetic_intensity=flops / hbm,
+        fits=vmem <= VMEM_BYTES,
+    )
+
+
+def sweep(seq_len: int, head_dim: int,
+          candidates=(32, 64, 128, 256)) -> List[BlockScore]:
+    out = []
+    for bq in candidates:
+        for bk in candidates:
+            if bq > seq_len or bk > seq_len:
+                continue
+            out.append(score(seq_len, head_dim, bq, bk))
+    return sorted(out, key=BlockScore.figure_of_merit, reverse=True)
+
+
+def main() -> None:
+    for (seq, hd) in [(128, 64), (512, 64), (2048, 128)]:
+        print(f"\nattention seq={seq} head_dim={hd}  (VMEM budget 16 MiB)")
+        print(f"{'bq':>5} {'bk':>5} {'VMEM KiB':>9} {'MXU util':>9} "
+              f"{'AI flop/B':>10} {'fits':>5} {'FoM':>7}")
+        for s in sweep(seq, hd)[:6]:
+            print(f"{s.block_q:>5} {s.block_k:>5} "
+                  f"{s.vmem_bytes / 1024:>9.0f} {s.mxu_utilization:>9.2f} "
+                  f"{s.arithmetic_intensity:>10.1f} {str(s.fits):>5} "
+                  f"{s.figure_of_merit():>7.3f}")
+        best = sweep(seq, hd)[0]
+        print(f"best: block_q={best.block_q} block_k={best.block_k}")
+
+
+if __name__ == "__main__":
+    main()

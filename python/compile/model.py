@@ -1,0 +1,200 @@
+"""L2: the training workload — a decoder-only transformer LM in JAX.
+
+This is the per-worker compute of the paper's data-parallel setup: one
+micro-batch forward+backward (``grad_step``) is the unit the DropCompute
+coordinator schedules ``M`` times per step per worker (Algorithm 1, line 5).
+The attention and LayerNorm blocks call the Pallas kernels from
+``kernels/``; everything is lowered by ``aot.py`` into a single HLO module
+per entry point, loaded and executed by the Rust runtime.
+
+Parameters are carried as a *flat list* of arrays in a deterministic order
+(see ``param_specs``) so the Rust side can marshal them without a pytree
+library. Initialization is performed Rust-side from the ``init`` hints in
+the manifest (python never runs at training time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import layernorm as ln_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters for one artifact size."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    micro_batch: int
+    d_ff: int = 0  # 0 -> 4*d_model
+    use_pallas: bool = True
+
+    @property
+    def ff(self) -> int:
+        return self.d_ff or 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Artifact sizes. `test` is for pytest; `base`+ for the e2e driver.
+CONFIGS = {
+    "test": ModelConfig("test", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                        seq_len=16, micro_batch=2),
+    "tiny": ModelConfig("tiny", vocab=512, d_model=64, n_layers=2, n_heads=4,
+                        seq_len=32, micro_batch=4),
+    "small": ModelConfig("small", vocab=2048, d_model=128, n_layers=4,
+                         n_heads=4, seq_len=64, micro_batch=8),
+    "base": ModelConfig("base", vocab=8192, d_model=256, n_layers=6,
+                        n_heads=8, seq_len=128, micro_batch=8),
+    # ~33M params: the e2e pretraining workload ("BERT-class" stand-in).
+    "large": ModelConfig("large", vocab=16384, d_model=512, n_layers=8,
+                         n_heads=8, seq_len=128, micro_batch=8),
+    # ~110M params: matches the paper-scale 100M-parameter ask; artifact
+    # builds fine, CPU execution is for short smoke runs.
+    "xl": ModelConfig("xl", vocab=32768, d_model=768, n_layers=12,
+                      n_heads=12, seq_len=128, micro_batch=4),
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str, float]]:
+    """Deterministic flat parameter order: (name, shape, init, init_scale).
+
+    init ∈ {"normal", "zeros", "ones"}; scale is the stddev for "normal".
+    The Rust side reproduces this exactly (see rust/src/train/params.rs).
+    """
+    d, f = cfg.d_model, cfg.ff
+    specs: List[Tuple[str, Tuple[int, ...], str, float]] = [
+        ("tok_embed", (cfg.vocab, d), "normal", 0.02),
+        ("pos_embed", (cfg.seq_len, d), "normal", 0.01),
+    ]
+    resid_scale = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.scale", (d,), "ones", 0.0),
+            (p + "ln1.bias", (d,), "zeros", 0.0),
+            (p + "attn.wq", (d, d), "normal", 0.02),
+            (p + "attn.wk", (d, d), "normal", 0.02),
+            (p + "attn.wv", (d, d), "normal", 0.02),
+            (p + "attn.wo", (d, d), "normal", resid_scale),
+            (p + "ln2.scale", (d,), "ones", 0.0),
+            (p + "ln2.bias", (d,), "zeros", 0.0),
+            (p + "mlp.w1", (d, f), "normal", 0.02),
+            (p + "mlp.b1", (f,), "zeros", 0.0),
+            (p + "mlp.w2", (f, d), "normal", resid_scale),
+            (p + "mlp.b2", (d,), "zeros", 0.0),
+        ]
+    specs += [
+        ("ln_f.scale", (d,), "ones", 0.0),
+        ("ln_f.bias", (d,), "zeros", 0.0),
+    ]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s, _, _ in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """Reference initializer (used by tests; Rust re-implements it)."""
+    params = []
+    for _, shape, kind, scale in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if kind == "normal":
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+        elif kind == "zeros":
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            params.append(jnp.ones(shape, jnp.float32))
+    return params
+
+
+def _layernorm(cfg, x2d, scale, bias):
+    if cfg.use_pallas:
+        return ln_k.layernorm(x2d, scale, bias)
+    from .kernels import ref
+    return ref.layernorm(x2d, scale, bias)
+
+
+def _attention(cfg, q, k, v):
+    if cfg.use_pallas:
+        return attn_k.flash_attention(q, k, v, True)
+    from .kernels import ref
+    return ref.attention(q, k, v, causal=True)
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array],
+            tokens: jax.Array) -> jax.Array:
+    """Logits ``(B, S, vocab)`` for int32 ``tokens (B, S)``."""
+    it = iter(params)
+
+    def take():
+        return next(it)
+
+    tok_embed, pos_embed = take(), take()
+    b, s = tokens.shape
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    x = tok_embed[tokens] + pos_embed[None, :s, :]
+
+    for _ in range(cfg.n_layers):
+        ln1s, ln1b = take(), take()
+        wq, wk, wv, wo = take(), take(), take(), take()
+        ln2s, ln2b = take(), take()
+        w1, b1, w2, b2 = take(), take(), take(), take()
+
+        hflat = _layernorm(cfg, x.reshape(b * s, d), ln1s, ln1b)
+        hx = hflat.reshape(b, s, d)
+
+        def heads(t):  # (b, s, d) -> (b*h, s, hd)
+            return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+        q, k, v = heads(hx @ wq), heads(hx @ wk), heads(hx @ wv)
+        o = _attention(cfg, q, k, v)
+        o = o.reshape(b, h, s, hd).transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + o @ wo
+
+        hflat = _layernorm(cfg, x.reshape(b * s, d), ln2s, ln2b)
+        hx = hflat.reshape(b, s, d)
+        x = x + (jax.nn.gelu(hx @ w1 + b1) @ w2 + b2)
+
+    lnfs, lnfb = take(), take()
+    x = _layernorm(cfg, x.reshape(b * s, d), lnfs, lnfb).reshape(b, s, d)
+    # Tied LM head (weight sharing with the token embedding).
+    return x @ tok_embed.T
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array],
+            tokens: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy; last position has no target."""
+    logits = forward(cfg, params, tokens)  # (B, S, V)
+    logits = logits[:, :-1, :]
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def grad_step(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array):
+    """One micro-batch: returns ``(loss, *grads)`` — the AOT entry point."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+    return (loss, *grads)
+
+
+def flops_per_microbatch(cfg: ModelConfig) -> int:
+    """~6 * params * tokens for fwd+bwd (standard transformer estimate)."""
+    return 6 * param_count(cfg) * cfg.micro_batch * cfg.seq_len

@@ -1,0 +1,146 @@
+"""Kernel vs oracle: the core L1 correctness signal.
+
+hypothesis sweeps shapes (incl. non-divisible-by-block sizes) and dtypes;
+every case asserts allclose against the pure-jnp reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm, ref
+
+settings.register_profile("kernels", max_examples=10, deadline=None)
+settings.load_profile("kernels")
+
+
+def _qkv(bh, s, d, dtype, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return tuple(
+        jax.random.normal(jax.random.fold_in(key, i), (bh, s, d)).astype(dtype)
+        for i in range(3)
+    )
+
+
+class TestFlashAttention:
+    @given(
+        bh=st.integers(1, 6),
+        s=st.integers(2, 96),
+        d=st.sampled_from([4, 8, 16, 32]),
+        causal=st.booleans(),
+    )
+    def test_matches_reference(self, bh, s, d, causal):
+        q, k, v = _qkv(bh, s, d, jnp.float32, seed=bh * 1000 + s)
+        got = attention.flash_attention_fwd(q, k, v, causal=causal)
+        want = ref.attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @given(
+        block_q=st.sampled_from([8, 16, 64, 128]),
+        block_k=st.sampled_from([8, 16, 64, 128]),
+    )
+    def test_block_shape_invariance(self, block_q, block_k):
+        """Output must not depend on the BlockSpec tiling choice."""
+        q, k, v = _qkv(2, 40, 16, jnp.float32, seed=7)
+        got = attention.flash_attention_fwd(
+            q, k, v, causal=True, block_q=block_q, block_k=block_k)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q, k, v = _qkv(2, 32, 16, dtype)
+        got = attention.flash_attention_fwd(q, k, v, causal=True)
+        want = ref.attention(q, k, v, causal=True)
+        tol = 2e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(
+            got.astype(jnp.float32), want.astype(jnp.float32),
+            rtol=tol, atol=tol)
+
+    def test_causality(self):
+        """Changing future keys must not change past outputs."""
+        q, k, v = _qkv(1, 24, 8, jnp.float32, seed=3)
+        out1 = attention.flash_attention_fwd(q, k, v, causal=True)
+        k2 = k.at[:, 12:, :].set(99.0)
+        v2 = v.at[:, 12:, :].set(-99.0)
+        out2 = attention.flash_attention_fwd(q, k2, v2, causal=True)
+        np.testing.assert_allclose(out1[:, :12], out2[:, :12],
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_gradients_match_reference(self):
+        q, k, v = _qkv(2, 20, 8, jnp.float32, seed=11)
+
+        def f_kernel(q, k, v):
+            return (attention.flash_attention(q, k, v, True) ** 2).sum()
+
+        def f_ref(q, k, v):
+            return (ref.attention(q, k, v, causal=True) ** 2).sum()
+
+        for got, want in zip(jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v),
+                             jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)):
+            np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_single_query_row(self):
+        q, k, v = _qkv(1, 1, 8, jnp.float32)
+        got = attention.flash_attention_fwd(q, k, v, causal=True)
+        np.testing.assert_allclose(got, v, rtol=1e-6, atol=1e-6)
+
+    def test_vmem_estimate_monotone(self):
+        a = attention.vmem_bytes(64, 64, 128, 64)
+        b = attention.vmem_bytes(128, 128, 128, 64)
+        assert 0 < a < b
+
+    def test_mxu_estimate_range(self):
+        for bq, bk, d in [(64, 64, 32), (128, 128, 64), (8, 8, 8)]:
+            u = attention.mxu_utilization_estimate(bq, bk, d)
+            assert 0.0 < u <= 1.0
+        # full tiles -> full utilization
+        assert attention.mxu_utilization_estimate(128, 128, 128) == 1.0
+
+
+class TestLayerNorm:
+    @given(
+        rows=st.integers(1, 300),
+        dim=st.sampled_from([8, 24, 64, 128]),
+    )
+    def test_matches_reference(self, rows, dim):
+        key = jax.random.PRNGKey(rows * 7 + dim)
+        x = jax.random.normal(key, (rows, dim), jnp.float32) * 3 + 1
+        sc = jax.random.normal(jax.random.fold_in(key, 1), (dim,)) + 1.0
+        bi = jax.random.normal(jax.random.fold_in(key, 2), (dim,))
+        got = layernorm.layernorm_fwd(x, sc, bi)
+        want = ref.layernorm(x, sc, bi)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    @given(block_rows=st.sampled_from([1, 16, 64, 256]))
+    def test_block_shape_invariance(self, block_rows):
+        key = jax.random.PRNGKey(5)
+        x = jax.random.normal(key, (100, 32), jnp.float32)
+        sc, bi = jnp.ones(32), jnp.zeros(32)
+        got = layernorm.layernorm_fwd(x, sc, bi, block_rows=block_rows)
+        want = ref.layernorm(x, sc, bi)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+    def test_normalized_moments(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (64, 48)) * 5 + 2
+        y = layernorm.layernorm_fwd(x, jnp.ones(48), jnp.zeros(48))
+        np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(jnp.var(y, -1), 1.0, rtol=1e-3, atol=1e-3)
+
+    def test_gradients_match_reference(self):
+        key = jax.random.PRNGKey(2)
+        x = jax.random.normal(key, (12, 16))
+        sc = jnp.ones(16) * 1.3
+        bi = jnp.zeros(16) + 0.1
+
+        def f_k(x, sc, bi):
+            return (layernorm.layernorm(x, sc, bi) ** 2).sum()
+
+        def f_r(x, sc, bi):
+            return (ref.layernorm(x, sc, bi) ** 2).sum()
+
+        for got, want in zip(jax.grad(f_k, argnums=(0, 1, 2))(x, sc, bi),
+                             jax.grad(f_r, argnums=(0, 1, 2))(x, sc, bi)):
+            np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,131 @@
+"""L2 model tests: shapes, loss semantics, gradient correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+CFG = model.CONFIGS["test"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(
+        jax.random.PRNGKey(1), (CFG.micro_batch, CFG.seq_len), 0, CFG.vocab)
+
+
+class TestForward:
+    def test_logits_shape(self, params, tokens):
+        logits = model.forward(CFG, params, tokens)
+        assert logits.shape == (CFG.micro_batch, CFG.seq_len, CFG.vocab)
+        assert logits.dtype == jnp.float32
+
+    def test_causality(self, params, tokens):
+        """Perturbing a future token must not change earlier logits."""
+        cut = CFG.seq_len // 2
+        base = model.forward(CFG, params, tokens)
+        toks2 = tokens.at[:, cut:].set((tokens[:, cut:] + 1) % CFG.vocab)
+        pert = model.forward(CFG, params, toks2)
+        np.testing.assert_allclose(base[:, :cut], pert[:, :cut],
+                                   rtol=1e-5, atol=1e-5)
+        assert not np.allclose(base[:, cut:], pert[:, cut:])
+
+    def test_pallas_matches_reference_path(self, params, tokens):
+        """use_pallas=False (pure jnp) must agree with the kernel path."""
+        import dataclasses
+        ref_cfg = dataclasses.replace(CFG, use_pallas=False)
+        a = model.forward(CFG, params, tokens)
+        b = model.forward(ref_cfg, params, tokens)
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+class TestLoss:
+    def test_initial_loss_near_uniform(self, params, tokens):
+        """With tiny init, loss should be ~log(vocab)."""
+        loss = model.loss_fn(CFG, params, tokens)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 0.3
+
+    def test_loss_is_scalar_finite(self, params, tokens):
+        loss = model.loss_fn(CFG, params, tokens)
+        assert loss.shape == ()
+        assert np.isfinite(float(loss))
+
+    def test_memorizes_constant_sequence(self, params):
+        """A few SGD steps on one repeated batch must reduce the loss."""
+        toks = jnp.tile(jnp.arange(CFG.seq_len, dtype=jnp.int32) % CFG.vocab,
+                        (CFG.micro_batch, 1))
+        p = list(params)
+        l0 = float(model.loss_fn(CFG, p, toks))
+        grad_fn = jax.jit(
+            lambda ps: model.grad_step(CFG, list(ps), toks))
+        for _ in range(20):
+            out = grad_fn(tuple(p))
+            grads = out[1:]
+            p = [w - 0.5 * g for w, g in zip(p, grads)]
+        l1 = float(model.loss_fn(CFG, p, toks))
+        assert l1 < l0 * 0.7, (l0, l1)
+
+
+class TestGradStep:
+    def test_output_arity_and_shapes(self, params, tokens):
+        out = model.grad_step(CFG, params, tokens)
+        specs = model.param_specs(CFG)
+        assert len(out) == 1 + len(specs)
+        assert out[0].shape == ()
+        for g, (_, shape, _, _) in zip(out[1:], specs):
+            assert g.shape == shape
+
+    def test_grad_matches_finite_differences(self, params, tokens):
+        """Directional finite-difference check of the full fwd+bwd stack."""
+        out = model.grad_step(CFG, params, tokens)
+        grads = out[1:]
+        key = jax.random.PRNGKey(42)
+        dirs = [jax.random.normal(jax.random.fold_in(key, i), p.shape)
+                for i, p in enumerate(params)]
+        eps = 1e-3
+        plus = [p + eps * d for p, d in zip(params, dirs)]
+        minus = [p - eps * d for p, d in zip(params, dirs)]
+        fd = (float(model.loss_fn(CFG, plus, tokens))
+              - float(model.loss_fn(CFG, minus, tokens))) / (2 * eps)
+        analytic = sum(float(jnp.vdot(g, d)) for g, d in zip(grads, dirs))
+        assert abs(fd - analytic) < 5e-2 * max(1.0, abs(analytic)), \
+            (fd, analytic)
+
+    def test_grad_accumulation_equals_big_batch(self, params):
+        """mean of micro-batch grads == grad of concatenated batch.
+
+        This is the identity DropCompute relies on: the surviving
+        micro-batches of a step average to an unbiased gradient.
+        """
+        key = jax.random.PRNGKey(3)
+        t1 = jax.random.randint(key, (CFG.micro_batch, CFG.seq_len), 0,
+                                CFG.vocab)
+        t2 = jax.random.randint(jax.random.fold_in(key, 1),
+                                (CFG.micro_batch, CFG.seq_len), 0, CFG.vocab)
+        g1 = model.grad_step(CFG, params, t1)[1:]
+        g2 = model.grad_step(CFG, params, t2)[1:]
+        gbig = model.grad_step(CFG, params, jnp.concatenate([t1, t2]))[1:]
+        for a, b, big in zip(g1, g2, gbig):
+            np.testing.assert_allclose((a + b) / 2, big, rtol=2e-4, atol=2e-5)
+
+
+class TestParamSpecs:
+    def test_spec_count_matches_init(self, params):
+        assert len(model.param_specs(CFG)) == len(params)
+
+    @pytest.mark.parametrize("size", ["test", "tiny", "small", "base"])
+    def test_param_count_positive(self, size):
+        cfg = model.CONFIGS[size]
+        assert model.param_count(cfg) > 0
+        assert model.flops_per_microbatch(cfg) > model.param_count(cfg)
+
+    def test_names_unique(self):
+        names = [n for n, *_ in model.param_specs(model.CONFIGS["small"])]
+        assert len(names) == len(set(names))

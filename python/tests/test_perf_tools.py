@@ -1,0 +1,64 @@
+"""Tests for the L1/L2 perf-analysis tooling (roofline + HLO stats)."""
+
+import os
+
+import pytest
+
+from compile import hlo_stats
+from compile.kernels import roofline
+
+
+class TestRoofline:
+    def test_scores_ordered_by_merit(self):
+        scores = roofline.sweep(512, 64)
+        merits = [s.figure_of_merit() for s in scores]
+        assert merits == sorted(merits, reverse=True)
+        assert merits[0] > 0.0
+
+    def test_vmem_budget_enforced(self):
+        # Oversized blocks on long sequences must be marked infeasible.
+        s = roofline.score(8192, 128, 256, 256)
+        big = roofline.attention.vmem_bytes(256, 256, 8192, 128)
+        assert s.fits == (big <= roofline.VMEM_BYTES)
+        # and a clearly-infeasible fabricated case
+        huge = roofline.BlockScore(1, 1, roofline.VMEM_BYTES + 1, 1.0, 10.0,
+                                   fits=False)
+        assert huge.figure_of_merit() == 0.0
+
+    def test_mxu_aligned_blocks_win(self):
+        # On a 128-lane MXU, 128-multiples should beat odd shapes.
+        aligned = roofline.score(512, 64, 128, 128)
+        odd = roofline.score(512, 64, 32, 32)
+        assert aligned.mxu_utilization >= odd.mxu_utilization
+
+    def test_intensity_grows_with_block_q(self):
+        # Bigger q-blocks stream K/V fewer times -> higher intensity.
+        small = roofline.score(2048, 64, 32, 64)
+        large = roofline.score(2048, 64, 256, 64)
+        assert large.arithmetic_intensity > small.arithmetic_intensity
+
+
+class TestHloStats:
+    @pytest.fixture(scope="class")
+    def grad_path(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "test", "grad.hlo.txt")
+        if not os.path.exists(path):
+            pytest.skip("run `make artifacts` first")
+        return path
+
+    def test_counts_plausible(self, grad_path):
+        r = hlo_stats.report(grad_path)
+        assert r["total_ops"] > 50
+        assert r["dot"] > 0, "a transformer grad must contain matmuls"
+
+    def test_no_custom_calls_on_cpu(self, grad_path):
+        # interpret=True must not leave Mosaic custom-calls behind.
+        r = hlo_stats.report(grad_path)
+        assert r["custom_calls"] == 0
+
+    def test_layout_fraction_bounded(self, grad_path):
+        r = hlo_stats.report(grad_path)
+        assert r["layout_fraction"] < 0.6, (
+            "layout ops dominating the module signals a lowering regression"
+        )

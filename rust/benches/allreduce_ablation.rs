@@ -1,0 +1,119 @@
+//! Design-choice ablation (DESIGN.md §Perf): ring vs tree vs naive
+//! all-reduce, measured on real gradient-sized buffers and in the
+//! analytical timing model. The paper takes the decentralized ring as
+//! given (§2); this quantifies why.
+
+mod common;
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use common::header;
+use dropcompute::collective::{
+    naive_all_reduce, ring_all_reduce, tree_all_reduce, Communicator, MeshComm,
+};
+use dropcompute::report::{f, Table};
+use dropcompute::sim::CommModel;
+
+fn measure_ring(n: usize, len: usize, reps: usize) -> f64 {
+    let comms = Communicator::ring(n);
+    let t0 = Instant::now();
+    let handles: Vec<_> = comms
+        .into_iter()
+        .map(|c| {
+            thread::spawn(move || {
+                let mut buf = vec![1.0f32; len];
+                for _ in 0..reps {
+                    ring_all_reduce(&c, &mut buf);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn measure_mesh(n: usize, len: usize, reps: usize, tree: bool) -> f64 {
+    let comms = MeshComm::full(n);
+    let tree = Arc::new(tree);
+    let t0 = Instant::now();
+    let handles: Vec<_> = comms
+        .into_iter()
+        .map(|c| {
+            let tree = Arc::clone(&tree);
+            thread::spawn(move || {
+                let mut buf = vec![1.0f32; len];
+                for _ in 0..reps {
+                    if *tree {
+                        tree_all_reduce(&c, &mut buf);
+                    } else {
+                        naive_all_reduce(&c, &mut buf);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    header(
+        "Ablation — all-reduce algorithm choice",
+        "ring is bandwidth-optimal (the large-gradient regime of data-\
+         parallel LM training); tree wins only tiny payloads; naive loses \
+         everywhere at scale",
+    );
+    let mut t = Table::new(
+        "measured all-reduce time (ms)",
+        &["N", "len", "ring", "tree", "naive"],
+    );
+    let mut rows = Vec::new();
+    for (n, len, reps) in [
+        (8usize, 1_000usize, 200usize),
+        (8, 1_000_000, 10),
+        (8, 8_000_000, 4),
+        (4, 1_000_000, 10),
+    ] {
+        let ring = measure_ring(n, len, reps);
+        let tree = measure_mesh(n, len, reps, true);
+        let naive = measure_mesh(n, len, reps, false);
+        t.row(vec![
+            n.to_string(),
+            len.to_string(),
+            f(ring * 1e3, 2),
+            f(tree * 1e3, 2),
+            f(naive * 1e3, 2),
+        ]);
+        rows.push((n, len, ring, tree, naive));
+    }
+    t.print();
+
+    // analytical T^c model comparison at cluster scale
+    let bytes = 4.0 * 33.7e6; // `large` model gradient
+    let mut t2 = Table::new(
+        "analytical serial latency T^c for a 33.7M-param gradient (s)",
+        &["N", "ring (bw-optimal)", "tree 2logN full-buffer"],
+    );
+    for n in [8usize, 64, 200] {
+        let ring = CommModel::Ring { latency: 25e-6, bandwidth: 12.5e9, bytes }
+            .serial_latency(n);
+        let hops = 2.0 * (n as f64).log2().ceil();
+        let tree = hops * (25e-6 + bytes / 12.5e9);
+        t2.row(vec![n.to_string(), f(ring, 4), f(tree, 4)]);
+    }
+    t2.print();
+
+    // shape: at the big-gradient sizes ring beats naive, and tree does
+    // not beat ring by more than the latency regime allows.
+    let big = rows.iter().find(|r| r.1 == 8_000_000).unwrap();
+    assert!(big.2 < big.4, "ring must beat naive on big buffers");
+    println!("\nSHAPE CHECK PASSED: ring wins the large-gradient regime \
+              (ring {:.1} ms vs naive {:.1} ms at 8x8M)",
+             big.2 * 1e3, big.4 * 1e3);
+}

@@ -1,0 +1,35 @@
+#![allow(dead_code)]
+//! Shared bench plumbing: the paper's simulated-delay cluster config.
+
+use dropcompute::config::{ClusterConfig, NoiseKind};
+
+/// The App. B.1 simulated-delay environment around a 0.45s micro-batch.
+pub fn paper_noise() -> NoiseKind {
+    NoiseKind::PaperLogNormal {
+        mu: 4.0,
+        sigma: 1.0,
+        alpha: 2.0 * (4.5f64).exp(),
+        beta: 5.5,
+    }
+}
+
+/// BERT-1.5B-like cluster shape: M=12 accumulations, T^c=0.5s.
+pub fn paper_cluster(workers: usize) -> ClusterConfig {
+    ClusterConfig {
+        workers,
+        accumulations: 12,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        comm_latency: 0.5,
+        noise: paper_noise(),
+        ..Default::default()
+    }
+}
+
+/// Section header shared by every bench.
+pub fn header(id: &str, paper_claim: &str) {
+    println!("\n================================================================");
+    println!("{id}");
+    println!("paper: {paper_claim}");
+    println!("================================================================");
+}

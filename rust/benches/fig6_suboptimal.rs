@@ -1,0 +1,99 @@
+//! Figure 6 (App. A) — single-iteration latency histograms in a
+//! sub-optimal system: per-worker heterogeneity + sporadic stragglers,
+//! the setting where DropCompute recovered ~18% runtime.
+
+mod common;
+
+use common::header;
+use dropcompute::analysis::choose_threshold;
+use dropcompute::config::{ClusterConfig, NoiseKind, StragglerKind};
+use dropcompute::report::{f, pct};
+use dropcompute::rng::Xoshiro256pp;
+use dropcompute::sim::{ClusterSim, LatencyModel};
+use dropcompute::stats::{Histogram, Welford};
+
+/// A sub-optimal system: 10% of hosts run 15-35% slow (bad cooling /
+/// noisy neighbours) and any worker can hiccup.
+fn suboptimal(workers: usize, accums: usize, seed: u64) -> ClusterSim {
+    let cfg = ClusterConfig {
+        workers,
+        accumulations: accums,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.025,
+        comm_latency: 0.5,
+        noise: NoiseKind::Gamma { mean: 0.05, var: 0.01 },
+        stragglers: StragglerKind::Uniform { p: 0.02, delay: 2.0 },
+        ..Default::default()
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let scales: Vec<f64> = (0..workers)
+        .map(|_| {
+            if rng.next_f64() < 0.10 {
+                1.15 + 0.2 * rng.next_f64()
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    let model = LatencyModel::from_config(&cfg).with_worker_scales(scales);
+    ClusterSim::with_model(
+        workers,
+        accums,
+        model,
+        dropcompute::sim::CommModel::Fixed(cfg.comm_latency),
+        seed,
+    )
+}
+
+fn panel(name: &str, workers: usize, accums: usize, lo: f64, hi: f64) -> f64 {
+    let mut sim = suboptimal(workers, accums, 61);
+    let mut hist = Histogram::new(lo, hi, 40);
+    let mut w = Welford::new();
+    let iters = 80;
+    for _ in 0..iters {
+        let out = sim.step(None);
+        hist.push(out.iter_time);
+        w.push(out.iter_time);
+    }
+    println!("\n{name}: iteration latency, mean {:.2}s std {:.2}s", w.mean(), w.std());
+    println!("  [{lo:.0}s .. {hi:.0}s] {}", hist.sparkline());
+
+    // DropCompute recovery on the same system
+    let mut cal = suboptimal(workers, accums, 62);
+    let trace = cal.record_trace(20);
+    let choice = choose_threshold(&trace, 192);
+    let mut dc = suboptimal(workers, accums, 63);
+    let mut w_dc = Welford::new();
+    let mut completed = 0usize;
+    for _ in 0..iters {
+        let out = dc.step(Some(choice.tau));
+        w_dc.push(out.iter_time);
+        completed += out.total_completed();
+    }
+    let completion = completed as f64 / (iters * workers * accums) as f64;
+    let speedup = w.mean() / w_dc.mean() * completion;
+    println!(
+        "  DropCompute(tau*={:.1}s): mean {:.2}s, drop {}, effective speedup x{}",
+        choice.tau,
+        w_dc.mean(),
+        pct(1.0 - completion),
+        f(speedup, 3)
+    );
+    speedup
+}
+
+fn main() {
+    header(
+        "Figure 6 — sub-optimal system latency histograms (App. A)",
+        "long straggler tail before optimization; DropCompute recovered \
+         ~18% with 162 workers / 64 accumulations",
+    );
+    let s1 = panel("162 workers, 64 accumulations", 162, 64, 28.0, 45.0);
+    let s2 = panel("190 workers, 16 accumulations", 190, 16, 7.0, 14.0);
+
+    assert!(s1 > 1.05, "64-accum system should recover >5%: x{s1:.3}");
+    assert!(s1 > s2 * 0.95, "more accumulations amortize better here");
+    println!(
+        "\nSHAPE CHECK PASSED: recovery x{s1:.3} (paper ~1.18) and x{s2:.3}"
+    );
+}

@@ -1,0 +1,152 @@
+//! §Perf — hot-path microbenchmarks for the L3 coordinator and runtime:
+//! ring AllReduce bandwidth, event-queue throughput, simulator step
+//! rate, Algorithm-2 sweep cost, PJRT grad-step + upload overhead.
+//! Results are recorded in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::time::Instant;
+
+use common::{header, paper_cluster};
+use dropcompute::analysis::choose_threshold;
+use dropcompute::collective::{ring_all_reduce, ring_all_reduce_naive, Communicator};
+use dropcompute::report::{f, Table};
+use dropcompute::rng::Xoshiro256pp;
+use dropcompute::runtime::ModelRuntime;
+use dropcompute::sim::{ClusterSim, EventQueue};
+use dropcompute::train::ParamStore;
+
+fn bench<R>(reps: usize, mut body: impl FnMut() -> R) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(body());
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    header("§Perf — L3/runtime hot paths", "coordinator must not be the bottleneck");
+    let mut t = Table::new("hot paths", &["path", "metric", "value"]);
+
+    // ---- ring AllReduce on gradient-sized buffers -------------------
+    // Threads are pre-spawned and iterate in-thread so the measurement
+    // excludes spawn cost; before = naive per-chunk allocation,
+    // after = buffer-recycling implementation.
+    fn measure_ring(n: usize, len: usize, reps: usize, naive: bool) -> f64 {
+        let comms = Communicator::ring(n);
+        let t0 = Instant::now();
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    for _ in 0..reps {
+                        if naive {
+                            ring_all_reduce_naive(&c, &mut buf);
+                        } else {
+                            ring_all_reduce(&c, &mut buf);
+                        }
+                    }
+                    buf[0]
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    }
+    for (n, len) in [(4usize, 1_000_000usize), (8, 1_000_000), (8, 8_000_000)] {
+        let reps = 8;
+        let before = measure_ring(n, len, reps, true);
+        let after = measure_ring(n, len, reps, false);
+        // algorithmic bytes moved per worker: 2(N-1)/N * 4*len
+        let alg = 2.0 * (n - 1) as f64 / n as f64 * 4.0 * len as f64;
+        t.row(vec![
+            format!("ring_all_reduce N={n} len={}M", len / 1_000_000),
+            "GB/s/worker before->after".into(),
+            format!("{} -> {} (x{})", f(alg / before / 1e9, 2),
+                    f(alg / after / 1e9, 2), f(before / after, 2)),
+        ]);
+    }
+
+    // ---- event queue -------------------------------------------------
+    let per = bench(20, || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.schedule_at((i % 97) as f64, i);
+        }
+        while q.pop().is_some() {}
+        q.processed()
+    });
+    t.row(vec![
+        "event queue 10k schedule+pop".into(),
+        "Mops/s".into(),
+        f(20_000.0 / per / 1e6, 2),
+    ]);
+
+    // ---- cluster simulator steps --------------------------------------
+    let cfg = paper_cluster(200);
+    let mut sim = ClusterSim::new(&cfg, 1);
+    let per = bench(200, || sim.step(Some(9.0)).iter_time);
+    t.row(vec![
+        "ClusterSim::step N=200 M=12".into(),
+        "steps/s".into(),
+        f(1.0 / per, 0),
+    ]);
+
+    // ---- Algorithm 2 sweep -------------------------------------------
+    let mut cal = ClusterSim::new(&cfg, 2);
+    let trace = cal.record_trace(20);
+    let per = bench(3, || choose_threshold(&trace, 256).tau);
+    t.row(vec![
+        "Algorithm 2 (N=200, I=20, grid=256)".into(),
+        "ms".into(),
+        f(per * 1e3, 1),
+    ]);
+
+    // ---- PJRT grad step + upload overhead ------------------------------
+    let mut rt = ModelRuntime::load(std::path::Path::new("artifacts"), "tiny")
+        .expect("run `make artifacts` first");
+    let store = ParamStore::init(&rt.manifest, 0);
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let toks: Vec<i32> = (0..rt.manifest.tokens_per_microbatch())
+        .map(|_| rng.next_below(rt.manifest.dims.vocab as u64) as i32)
+        .collect();
+    rt.upload_params(store.tensors()).unwrap();
+    rt.grad(&toks).unwrap(); // warmup/compile
+    let per_grad = bench(20, || rt.grad(&toks).unwrap().loss);
+    let per_upload = bench(20, || rt.upload_params(store.tensors()).unwrap());
+    // §Perf before/after: naive literal-per-call marshaling vs the
+    // device-resident-buffer path used by the trainer.
+    let per_unbuf =
+        bench(20, || rt.grad_unbuffered(store.tensors(), &toks).unwrap().loss);
+    t.row(vec![
+        "PJRT grad UNBUFFERED (before)".into(),
+        "ms".into(),
+        f(per_unbuf * 1e3, 2),
+    ]);
+    t.row(vec![
+        "buffered speedup (after/before)".into(),
+        "x".into(),
+        f(per_unbuf / per_grad, 2),
+    ]);
+    t.row(vec![
+        "PJRT grad microbatch (tiny)".into(),
+        "ms".into(),
+        f(per_grad * 1e3, 2),
+    ]);
+    t.row(vec![
+        "param upload (tiny, 0.13M)".into(),
+        "ms".into(),
+        f(per_upload * 1e3, 3),
+    ]);
+    t.row(vec![
+        "upload/compute overhead".into(),
+        "%".into(),
+        f(100.0 * per_upload / per_grad, 1),
+    ]);
+
+    t.print();
+    println!("(paste these rows into EXPERIMENTS.md §Perf)");
+}

@@ -1,0 +1,20 @@
+//! The paper's analytical runtime model and threshold selection.
+//!
+//! * [`order_stats`] — Eq. 4 / App. C.2: expected max iteration time;
+//! * [`speedup`] — Eq. 5/6/11: `E[M~]`, `S_eff`, scale-law extrapolation;
+//! * [`threshold`] — Algorithm 2: empirical `tau*` selection from traces.
+
+pub mod order_stats;
+pub mod speedup;
+pub mod threshold;
+
+pub use order_stats::{
+    asymptotic_max_normal, expected_max_cdf, expected_max_normal,
+    expected_max_normal_exact, expected_step_max, EULER_GAMMA,
+};
+pub use speedup::{expected_completed, extrapolate_speedup, scaling_efficiency, Setting};
+pub use threshold::{
+    choose_per_worker_thresholds, evaluate_per_worker,
+    choose_threshold, evaluate_threshold, threshold_for_drop_rate,
+    SweepPoint, ThresholdChoice,
+};

@@ -1,0 +1,175 @@
+//! Order statistics of the iteration time: `T = max_n T_n` (§4.2).
+//!
+//! * [`expected_max_normal`] — Eq. 4: Bailey et al.'s approximation of
+//!   `E[max of N iid N(mu, sigma^2)]`;
+//! * [`expected_max_cdf`] — exact `E[max]` for any CDF by numerically
+//!   integrating `E[T] = lo + ∫ (1 - F(x)^N) dx` (used where the Gaussian
+//!   assumption C.2 breaks, cf. Fig 3b);
+//! * [`asymptotic_max_normal`] — the `Θ(√log N)` tail (App. C.2), behind
+//!   the Fig 1-right extrapolation.
+
+use crate::stats::normal::{phi, phi_inv};
+
+/// Euler–Mascheroni constant (the paper's `gamma`).
+pub const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+
+/// Eq. 4: `E[max_n T_n]` for `T_n ~ N(mu, sigma^2)` iid over `n`.
+pub fn expected_max_normal(n: usize, mu: f64, sigma: f64) -> f64 {
+    if n <= 1 {
+        return mu;
+    }
+    let nf = n as f64;
+    sigma
+        * ((1.0 - EULER_GAMMA) * phi_inv(1.0 - 1.0 / nf)
+            + EULER_GAMMA * phi_inv(1.0 - 1.0 / (std::f64::consts::E * nf)))
+        + mu
+}
+
+/// Asymptotic form: `E[T] - mu = Θ(sigma sqrt(log N))` (App. C.2).
+///
+/// Uses the two-term Gumbel expansion
+/// `E[max] ≈ b_N + gamma/a_N`, `a_N = sqrt(2 ln N)`,
+/// `b_N = a_N - (ln ln N + ln 4π)/(2 a_N)` — the leading `sqrt(2 ln N)`
+/// alone overshoots badly at practical N (convergence is O(1/log N)).
+pub fn asymptotic_max_normal(n: usize, mu: f64, sigma: f64) -> f64 {
+    if n <= 2 {
+        return expected_max_normal(n, mu, sigma);
+    }
+    let ln_n = (n as f64).ln();
+    let a = (2.0 * ln_n).sqrt();
+    let b = a - (ln_n.ln() + (4.0 * std::f64::consts::PI).ln()) / (2.0 * a);
+    mu + sigma * (b + EULER_GAMMA / a)
+}
+
+/// Exact `E[max of N]` for iid samples with CDF `cdf`, via
+/// `E[T] = lo + ∫_{lo}^{hi} (1 - F(x)^N) dx` (Simpson's rule).
+///
+/// `lo` must satisfy `F(lo) ≈ 0`; `hi` must satisfy `F(hi)^N ≈ 1`.
+pub fn expected_max_cdf(
+    n: usize,
+    cdf: impl Fn(f64) -> f64,
+    lo: f64,
+    hi: f64,
+    intervals: usize,
+) -> f64 {
+    assert!(hi > lo && intervals >= 2);
+    let steps = intervals + (intervals % 2); // even for Simpson
+    let h = (hi - lo) / steps as f64;
+    let g = |x: f64| 1.0 - cdf(x).clamp(0.0, 1.0).powi(n as i32);
+    let mut sum = g(lo) + g(hi);
+    for k in 1..steps {
+        let w = if k % 2 == 1 { 4.0 } else { 2.0 };
+        sum += w * g(lo + h * k as f64);
+    }
+    lo + sum * h / 3.0
+}
+
+/// `E[max]` of N iid normals by the exact integral (reference for Eq. 4).
+pub fn expected_max_normal_exact(n: usize, mu: f64, sigma: f64) -> f64 {
+    let lo = mu - 8.0 * sigma;
+    let hi = mu + (8.0 + 2.0 * (n as f64).ln().sqrt()) * sigma;
+    expected_max_cdf(n, |x| phi((x - mu) / sigma), lo, hi, 4000)
+}
+
+/// `E[max]` of N iid sums of `m` micro-batches under CLT
+/// (`T_n ~ N(m*mu, m*sigma^2)`, Eq. 7 with the `T^c` term excluded).
+pub fn expected_step_max(n: usize, m: usize, mu: f64, sigma2: f64) -> f64 {
+    expected_max_normal(n, m as f64 * mu, (m as f64 * sigma2).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Normal, Xoshiro256pp};
+
+    /// Monte-Carlo `E[max of N]`.
+    fn mc_max(n: usize, d: &dyn Distribution, reps: usize, seed: u64) -> f64 {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut sum = 0.0;
+        for _ in 0..reps {
+            let mut mx = f64::NEG_INFINITY;
+            for _ in 0..n {
+                mx = mx.max(d.sample(&mut rng));
+            }
+            sum += mx;
+        }
+        sum / reps as f64
+    }
+
+    #[test]
+    fn bailey_matches_monte_carlo() {
+        let d = Normal::new(1.0, 0.2);
+        for n in [2usize, 8, 32, 128] {
+            let approx = expected_max_normal(n, 1.0, 0.2);
+            let mc = mc_max(n, &d, 20_000, n as u64);
+            assert!(
+                (approx - mc).abs() < 0.02,
+                "n={n}: bailey {approx} vs mc {mc}"
+            );
+        }
+    }
+
+    #[test]
+    fn bailey_matches_exact_integral() {
+        // Bailey et al.'s formula is an approximation (~3% relative);
+        // check it tracks the exact integral across three decades.
+        for n in [2usize, 10, 100, 1000] {
+            let a = expected_max_normal(n, 0.0, 1.0);
+            let e = expected_max_normal_exact(n, 0.0, 1.0);
+            assert!((a / e - 1.0).abs() < 0.09, "n={n}: {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn grows_like_sqrt_log_n() {
+        // E[max(N^2)]/E[max(N)] -> sqrt(2); finite-N convergence is slow
+        // (O(1/log N) corrections), so allow a one-sided band.
+        let e1 = expected_max_normal(100, 0.0, 1.0);
+        let e2 = expected_max_normal(10_000, 0.0, 1.0);
+        let ratio = e2 / e1;
+        let want = 2.0f64.sqrt();
+        assert!(ratio > want * 0.97 && ratio < want * 1.12, "ratio {ratio}");
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert_eq!(expected_max_normal(1, 5.0, 1.0), 5.0);
+        assert_eq!(expected_max_normal(0, 5.0, 1.0), 5.0);
+        // zero variance: max == mu at any N
+        assert!((expected_max_normal(64, 2.0, 0.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_integral_for_uniform() {
+        // max of N uniforms on [0,1] has E = N/(N+1).
+        for n in [1usize, 3, 10] {
+            let e = expected_max_cdf(n, |x| x.clamp(0.0, 1.0), 0.0, 1.0, 2000);
+            let want = n as f64 / (n as f64 + 1.0);
+            assert!((e - want).abs() < 1e-6, "n={n}: {e} vs {want}");
+        }
+    }
+
+    #[test]
+    fn asymptotic_tracks_bailey_at_large_n() {
+        for n in [1usize << 10, 1 << 16] {
+            let a = expected_max_normal(n, 0.0, 1.0);
+            let b = asymptotic_max_normal(n, 0.0, 1.0);
+            assert!((a / b - 1.0).abs() < 0.03, "n={n}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn asymptotic_matches_exact_at_large_n() {
+        let n = 1usize << 14;
+        let a = asymptotic_max_normal(n, 0.0, 1.0);
+        let e = expected_max_normal_exact(n, 0.0, 1.0);
+        assert!((a / e - 1.0).abs() < 0.02, "{a} vs {e}");
+    }
+
+    #[test]
+    fn step_max_scales_with_accumulations() {
+        let t12 = expected_step_max(64, 12, 0.45, 0.02 * 0.02);
+        let t24 = expected_step_max(64, 24, 0.45, 0.02 * 0.02);
+        assert!(t24 > 2.0 * t12 * 0.98 && t24 < 2.05 * t12);
+    }
+}

@@ -1,0 +1,275 @@
+//! The paper's analytical runtime model (§4.3–4.4, App. C.2).
+//!
+//! * Eq. 5 / 10 — `E[M~(tau)] = Σ_m Φ((tau - m mu)/sqrt(m) sigma)`;
+//! * Eq. 6 / 11 — effective speedup
+//!   `S_eff(tau) = M~ (T + T^c) / (M (min(tau,T) + T^c))`;
+//! * the analytic `tau* = argmax (1/(tau+T^c)) Σ_m Φ(...)`;
+//! * the Fig 1-right scale-law extrapolation.
+
+use crate::stats::normal::phi;
+
+use super::order_stats::expected_step_max;
+
+/// Statistical characteristics of one training setting: everything the
+/// analytical model needs (micro-batch latency moments + `M`, `N`, `T^c`).
+#[derive(Debug, Clone, Copy)]
+pub struct Setting {
+    /// Workers `N`.
+    pub workers: usize,
+    /// Micro-batches per step `M`.
+    pub accums: usize,
+    /// Mean micro-batch latency `mu`.
+    pub mu: f64,
+    /// Variance of micro-batch latency `sigma^2`.
+    pub sigma2: f64,
+    /// Serial per-iteration latency `T^c`.
+    pub comm: f64,
+}
+
+impl Setting {
+    /// Eq. 5: expected completed micro-batches per worker at threshold.
+    pub fn expected_completed(&self, tau: f64) -> f64 {
+        expected_completed(tau, self.accums, self.mu, self.sigma2)
+    }
+
+    /// Eq. 7/12: `E[T]` — expected baseline step compute time (no comm).
+    pub fn expected_step_time(&self) -> f64 {
+        expected_step_max(self.workers, self.accums, self.mu, self.sigma2)
+    }
+
+    /// Eq. 11 given an externally measured `E[T]` ("analytical given
+    /// E[T]" in Fig 3) — more accurate when CLT assumption C.2 is poor.
+    pub fn effective_speedup_given_t(&self, tau: f64, expected_t: f64) -> f64 {
+        let m_tilde = self.expected_completed(tau);
+        let m = self.accums as f64;
+        (m_tilde / m) * (expected_t + self.comm)
+            / (tau.min(expected_t) + self.comm)
+    }
+
+    /// Eq. 11 fully analytical (Gaussian `E[T]` via Eq. 12).
+    pub fn effective_speedup(&self, tau: f64) -> f64 {
+        self.effective_speedup_given_t(tau, self.expected_step_time())
+    }
+
+    /// Analytic optimal threshold:
+    /// `tau* = argmax (1/(tau+T^c)) Σ_m Φ((tau-m mu)/sqrt(m sigma^2))`,
+    /// grid-searched over `[M mu / 2, E[T]]` (Assumption C.3 lower bound).
+    pub fn optimal_threshold(&self, grid: usize) -> (f64, f64) {
+        let t_max = self.expected_step_time();
+        let lo = 0.5 * self.accums as f64 * self.mu;
+        let hi = t_max.max(lo * 1.0001);
+        let mut best = (hi, self.effective_speedup(hi));
+        for k in 0..=grid {
+            let tau = lo + (hi - lo) * k as f64 / grid as f64;
+            let s = self.effective_speedup(tau);
+            if s > best.1 {
+                best = (tau, s);
+            }
+        }
+        best
+    }
+
+    /// Expected drop rate at threshold: `1 - E[M~]/M`.
+    pub fn drop_rate(&self, tau: f64) -> f64 {
+        1.0 - self.expected_completed(tau) / self.accums as f64
+    }
+}
+
+/// Eq. 5 standalone: `E[M~(tau)] = Σ_{m=1..M} Φ((tau - m mu)/(sqrt(m) s))`.
+pub fn expected_completed(tau: f64, accums: usize, mu: f64, sigma2: f64) -> f64 {
+    let sigma = sigma2.max(0.0).sqrt();
+    (1..=accums)
+        .map(|m| {
+            let mf = m as f64;
+            if sigma == 0.0 {
+                if tau > mf * mu {
+                    1.0
+                } else {
+                    0.0
+                }
+            } else {
+                phi((tau - mf * mu) / (mf.sqrt() * sigma))
+            }
+        })
+        .sum()
+}
+
+/// Scale-law point: throughput of one setting relative to one worker —
+/// the Fig 1 scale graph ordinate. Perfect scaling doubles throughput
+/// with N; stragglers bend the curve.
+pub fn scaling_efficiency(setting: &Setting) -> f64 {
+    // single-worker iteration time: E[T_n] + T^c
+    let single = setting.accums as f64 * setting.mu + setting.comm;
+    let cluster = setting.expected_step_time() + setting.comm;
+    single / cluster
+}
+
+/// Fig 1-right: extrapolated speedup of DropCompute(tau*) over baseline
+/// as N grows, holding per-worker statistics fixed.
+pub fn extrapolate_speedup(base: &Setting, ns: &[usize], grid: usize)
+    -> Vec<(usize, f64)>
+{
+    ns.iter()
+        .map(|&n| {
+            let s = Setting { workers: n, ..*base };
+            let (_, speed) = s.optimal_threshold(grid);
+            (n, speed)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distribution, Normal, Xoshiro256pp};
+
+    fn setting() -> Setting {
+        Setting {
+            workers: 64,
+            accums: 12,
+            mu: 0.45,
+            sigma2: 0.05,
+            comm: 0.5,
+        }
+    }
+
+    #[test]
+    fn expected_completed_monte_carlo() {
+        // Eq. 5 vs simulation with normal micro-batch latencies.
+        let s = setting();
+        let d = Normal::new(s.mu, s.sigma2.sqrt());
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        for tau in [3.0, 4.5, 5.4, 6.0] {
+            let mut done = 0usize;
+            let reps = 40_000;
+            for _ in 0..reps {
+                let mut t = 0.0;
+                for _ in 0..s.accums {
+                    t += d.sample(&mut rng).max(0.0);
+                    if t < tau {
+                        done += 1;
+                    }
+                }
+            }
+            let mc = done as f64 / reps as f64;
+            let analytic = s.expected_completed(tau);
+            assert!(
+                (mc - analytic).abs() < 0.05,
+                "tau={tau}: mc {mc} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn completed_limits() {
+        let s = setting();
+        // huge threshold -> all M complete; near-zero threshold -> ~none
+        // (the CLT form keeps a little sub-zero Gaussian mass, cf. the
+        // Markov-bound discussion around Eq. 8).
+        assert!((s.expected_completed(1e9) - 12.0).abs() < 1e-9);
+        assert!(s.expected_completed(1e-9) < 0.05);
+        // monotone in tau
+        let mut prev = 0.0;
+        for k in 1..40 {
+            let v = s.expected_completed(k as f64 * 0.2);
+            assert!(v >= prev - 1e-12);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn speedup_one_at_infinite_threshold() {
+        let s = setting();
+        let t = s.expected_step_time();
+        // tau >= T: no drops, no time saved -> S_eff == 1.
+        let speed = s.effective_speedup(t * 1.5);
+        assert!((speed - 1.0).abs() < 1e-3, "{speed}");
+    }
+
+    #[test]
+    fn speedup_has_interior_maximum() {
+        // Fig 3c: S_eff rises then falls as tau decreases from T.
+        let s = Setting { sigma2: 0.15, ..setting() };
+        let (tau_star, best) = s.optimal_threshold(512);
+        assert!(best > 1.0, "optimal speedup {best} should beat baseline");
+        let t = s.expected_step_time();
+        assert!(tau_star < t, "tau* {tau_star} below E[T] {t}");
+        // speedup at much lower tau is worse than at tau*
+        let low = s.effective_speedup(0.55 * s.accums as f64 * s.mu);
+        assert!(low < best);
+    }
+
+    #[test]
+    fn speedup_grows_with_workers() {
+        // §4.4: E[S_eff](N) -> infinity as N -> infinity.
+        let base = setting();
+        let speeds = extrapolate_speedup(&base, &[8, 64, 512, 4096], 256);
+        for w in speeds.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1 - 1e-9,
+                "speedup should be nondecreasing in N: {speeds:?}"
+            );
+        }
+        assert!(speeds.last().unwrap().1 > speeds[0].1 + 0.01);
+    }
+
+    #[test]
+    fn scaling_efficiency_degrades_with_noise() {
+        let quiet = Setting { sigma2: 1e-6, ..setting() };
+        let noisy = Setting { sigma2: 0.3, ..setting() };
+        assert!(scaling_efficiency(&quiet) > scaling_efficiency(&noisy));
+        assert!(scaling_efficiency(&quiet) <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn drop_rate_tracks_completed() {
+        let s = setting();
+        let tau = 5.0;
+        let r = s.drop_rate(tau);
+        assert!((r - (1.0 - s.expected_completed(tau) / 12.0)).abs() < 1e-12);
+        assert!((0.0..=1.0).contains(&r));
+    }
+
+    #[test]
+    fn end_to_end_against_cluster_sim() {
+        // The analytical S_eff must match the virtual-clock simulator
+        // within tolerance under Gaussian noise (Fig 3a's agreement).
+        use crate::config::{ClusterConfig, NoiseKind};
+        use crate::sim::ClusterSim;
+        // Noise mean is kept 4 sigma above zero so the physical floor
+        // clamp never bites and Gaussian analytics apply exactly.
+        let s = Setting {
+            workers: 32,
+            mu: 0.45 + 0.6,
+            sigma2: 0.02 * 0.02 + 0.0221,
+            ..setting()
+        };
+        let cfg = ClusterConfig {
+            workers: 32,
+            accumulations: 12,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            comm_latency: s.comm,
+            noise: NoiseKind::Normal { mean: 0.6, var: 0.0221 },
+            ..Default::default()
+        };
+        let tau = 12.9;
+        let mut base = ClusterSim::new(&cfg, 5);
+        let mut dc = ClusterSim::new(&cfg, 5);
+        let iters = 400;
+        let t_base = base.mean_iter_time(iters, None);
+        let mut t_dc = 0.0;
+        let mut completed = 0.0;
+        for _ in 0..iters {
+            let out = dc.step(Some(tau));
+            t_dc += out.iter_time / iters as f64;
+            completed += out.total_completed() as f64 / (32.0 * iters as f64);
+        }
+        let sim_speedup = (completed / 12.0) * t_base / t_dc;
+        let analytic = s.effective_speedup(tau);
+        assert!(
+            (sim_speedup - analytic).abs() < 0.05,
+            "sim {sim_speedup} vs analytic {analytic}"
+        );
+    }
+}

@@ -1,0 +1,398 @@
+//! Algorithm 2 (App. C.1): automatic, decentralized selection of the
+//! drop threshold `tau*` from measured micro-batch latencies.
+//!
+//! Each worker measures `t_{i,n}^{(m)}` for `I` calibration iterations;
+//! the empirical distributions are synchronized (here: an AllGather of
+//! the trace — see `collective`), after which **every worker runs the
+//! same deterministic argmax** and therefore arrives at the same `tau*`
+//! without a central coordinator.
+
+use crate::sim::Trace;
+
+/// Result of the threshold search.
+#[derive(Debug, Clone)]
+pub struct ThresholdChoice {
+    /// The chosen `tau*` (seconds of per-step compute).
+    pub tau: f64,
+    /// Predicted effective speedup at `tau*`.
+    pub speedup: f64,
+    /// Predicted micro-batch completion rate `M~/M` at `tau*`.
+    pub completion_rate: f64,
+    /// The full sweep: (tau, S_eff(tau), completion, step_speedup).
+    pub sweep: Vec<SweepPoint>,
+}
+
+/// One candidate threshold's evaluation (the Fig 3c curves).
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    pub tau: f64,
+    pub effective_speedup: f64,
+    pub completion_rate: f64,
+    /// Raw step-time speedup `(T+T^c)/(min(tau,T)+T^c)` ignoring drops.
+    pub step_speedup: f64,
+    /// Empirical drop rate at this tau.
+    pub drop_rate: f64,
+}
+
+/// Evaluate `S_eff` for one candidate `tau` over a recorded trace —
+/// the inner loop of Algorithm 2, exactly as in App. C.1:
+/// `S_i(tau) = (T_i + T^c_i)/(min(tau,T_i) + T^c_i) * M~_i(tau)/M`.
+pub fn evaluate_threshold(trace: &Trace, tau: f64) -> SweepPoint {
+    let m = trace.accums as f64;
+    let mut s_eff = 0.0;
+    let mut completion = 0.0;
+    let mut step_speed = 0.0;
+    for i in 0..trace.iters {
+        let mut t_i = f64::NEG_INFINITY;
+        let mut m_i = 0.0;
+        for n in 0..trace.workers {
+            let mut cum = 0.0;
+            let mut done = 0usize;
+            for mm in 0..trace.accums {
+                cum += trace.get(i, n, mm);
+                if cum < tau {
+                    done += 1;
+                }
+            }
+            t_i = t_i.max(cum);
+            m_i += done as f64 / trace.workers as f64;
+        }
+        let tc = trace.comm[i];
+        let step = (t_i + tc) / (tau.min(t_i) + tc);
+        s_eff += step * (m_i / m);
+        completion += m_i / m;
+        step_speed += step;
+    }
+    let iters = trace.iters as f64;
+    SweepPoint {
+        tau,
+        effective_speedup: s_eff / iters,
+        completion_rate: completion / iters,
+        step_speedup: step_speed / iters,
+        drop_rate: 1.0 - completion / iters,
+    }
+}
+
+/// Algorithm 2: sweep a grid of candidate thresholds over the trace and
+/// return the argmax. The grid spans `[min worker-step time / 2, max
+/// worker-step time]` which covers Assumption C.3's valid range.
+pub fn choose_threshold(trace: &Trace, grid: usize) -> ThresholdChoice {
+    assert!(trace.iters > 0 && grid >= 2);
+    let mut t_max = f64::NEG_INFINITY;
+    let mut t_sum = 0.0;
+    for i in 0..trace.iters {
+        for n in 0..trace.workers {
+            let t = trace.worker_step_time(i, n);
+            t_max = t_max.max(t);
+            t_sum += t;
+        }
+    }
+    let t_mean = t_sum / (trace.iters * trace.workers) as f64;
+    let lo = 0.5 * t_mean;
+    let hi = t_max;
+
+    let mut sweep = Vec::with_capacity(grid + 1);
+    for k in 0..=grid {
+        let tau = lo + (hi - lo) * k as f64 / grid as f64;
+        sweep.push(evaluate_threshold(trace, tau));
+    }
+    let best = sweep
+        .iter()
+        .cloned()
+        .max_by(|a, b| {
+            a.effective_speedup
+                .partial_cmp(&b.effective_speedup)
+                .unwrap()
+        })
+        .unwrap();
+    ThresholdChoice {
+        tau: best.tau,
+        speedup: best.effective_speedup,
+        completion_rate: best.completion_rate,
+        sweep,
+    }
+}
+
+/// Find the threshold achieving a target drop rate (bisection over the
+/// empirically monotone drop-rate(tau) curve). Used by the Fig 4 /
+/// Table 1 benches that are parameterized by drop rate, not by tau.
+pub fn threshold_for_drop_rate(trace: &Trace, target: f64) -> f64 {
+    assert!((0.0..1.0).contains(&target));
+    let mut lo = 0.0f64;
+    let mut hi = (0..trace.iters)
+        .map(|i| trace.step_time(i))
+        .fold(f64::NEG_INFINITY, f64::max);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        let p = evaluate_threshold(trace, mid);
+        if p.drop_rate > target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Evaluate *per-worker* thresholds `taus[n]` over a trace (the
+/// heterogeneous-worker extension sketched in App. C.2: "it is possible
+/// to derive similar properties with nonidentical workers, each with
+/// their own mu_n, sigma_n"). Preemptive semantics: worker n computes
+/// `min(tau_n, T_{i,n})` and completes micro-batches below its own tau.
+pub fn evaluate_per_worker(trace: &Trace, taus: &[f64]) -> SweepPoint {
+    assert_eq!(taus.len(), trace.workers);
+    let m = trace.accums as f64;
+    let mut s_eff = 0.0;
+    let mut completion = 0.0;
+    let mut step_speed = 0.0;
+    for i in 0..trace.iters {
+        let mut t_full = f64::NEG_INFINITY;
+        let mut t_clipped = f64::NEG_INFINITY;
+        let mut m_i = 0.0;
+        for n in 0..trace.workers {
+            let mut cum = 0.0;
+            let mut done = 0usize;
+            for mm in 0..trace.accums {
+                cum += trace.get(i, n, mm);
+                if cum < taus[n] {
+                    done += 1;
+                }
+            }
+            t_full = t_full.max(cum);
+            t_clipped = t_clipped.max(cum.min(taus[n]));
+            m_i += done as f64 / trace.workers as f64;
+        }
+        let tc = trace.comm[i];
+        let step = (t_full + tc) / (t_clipped + tc);
+        s_eff += step * (m_i / m);
+        completion += m_i / m;
+        step_speed += step;
+    }
+    let iters = trace.iters as f64;
+    SweepPoint {
+        tau: taus.iter().sum::<f64>() / taus.len() as f64,
+        effective_speedup: s_eff / iters,
+        completion_rate: completion / iters,
+        step_speedup: step_speed / iters,
+        drop_rate: 1.0 - completion / iters,
+    }
+}
+
+/// Per-worker threshold selection for heterogeneous clusters: each
+/// worker's tau is `c * mean_n(T_n)` with a single shared factor `c`
+/// chosen by the same decentralized argmax.
+///
+/// Design finding (tested below, recorded in DESIGN.md): proportional
+/// per-worker thresholds equalize *drop probability* across workers —
+/// persistent stragglers keep contributing data instead of being
+/// starved — at the cost of raw `S_eff`, because a *global* tau gets its
+/// speedup precisely by hard-capping the slow worker. This is the
+/// fairness/speedup trade-off implied by App. C.2's non-identical-worker
+/// remark; the global rule remains the default (it matches the paper).
+pub fn choose_per_worker_thresholds(trace: &Trace, grid: usize)
+    -> (Vec<f64>, SweepPoint)
+{
+    assert!(trace.iters > 0 && grid >= 2);
+    let means: Vec<f64> = (0..trace.workers)
+        .map(|n| {
+            (0..trace.iters)
+                .map(|i| trace.worker_step_time(i, n))
+                .sum::<f64>()
+                / trace.iters as f64
+        })
+        .collect();
+    let mut best: Option<(f64, SweepPoint)> = None;
+    for k in 0..=grid {
+        let c = 0.5 + 1.5 * k as f64 / grid as f64; // c in [0.5, 2.0]
+        let taus: Vec<f64> = means.iter().map(|&m| c * m).collect();
+        let p = evaluate_per_worker(trace, &taus);
+        if best
+            .as_ref()
+            .map(|(_, b)| p.effective_speedup > b.effective_speedup)
+            .unwrap_or(true)
+        {
+            best = Some((c, p));
+        }
+    }
+    let (c, point) = best.unwrap();
+    (means.iter().map(|&m| c * m).collect(), point)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, NoiseKind};
+    use crate::sim::ClusterSim;
+
+    fn noisy_trace(workers: usize, iters: usize) -> Trace {
+        let cfg = ClusterConfig {
+            workers,
+            accumulations: 12,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            comm_latency: 0.5,
+            noise: NoiseKind::PaperLogNormal {
+                mu: 4.0,
+                sigma: 1.0,
+                alpha: 2.0 * (4.5f64).exp(),
+                beta: 5.5,
+            },
+            ..Default::default()
+        };
+        ClusterSim::new(&cfg, 123).record_trace(iters)
+    }
+
+    #[test]
+    fn infinite_threshold_is_baseline() {
+        let trace = noisy_trace(16, 20);
+        let p = evaluate_threshold(&trace, 1e9);
+        assert!((p.effective_speedup - 1.0).abs() < 1e-9);
+        assert!((p.completion_rate - 1.0).abs() < 1e-9);
+        assert_eq!(p.drop_rate, 0.0);
+    }
+
+    #[test]
+    fn chooses_speedup_above_one_under_noise() {
+        let trace = noisy_trace(64, 30);
+        let choice = choose_threshold(&trace, 128);
+        assert!(
+            choice.speedup > 1.02,
+            "heavy-tailed noise must give real speedup, got {}",
+            choice.speedup
+        );
+        assert!(choice.completion_rate > 0.7, "{}", choice.completion_rate);
+        assert!(choice.completion_rate < 1.0);
+        // sweep includes both extremes of the trade-off
+        assert!(choice.sweep.len() == 129);
+    }
+
+    #[test]
+    fn deterministic_consensus() {
+        // Decentralization requirement: same trace -> same tau on every
+        // worker (bitwise).
+        let trace = noisy_trace(8, 10);
+        let a = choose_threshold(&trace, 64);
+        let b = choose_threshold(&trace, 64);
+        assert_eq!(a.tau.to_bits(), b.tau.to_bits());
+    }
+
+    #[test]
+    fn drop_rate_inversion() {
+        let trace = noisy_trace(32, 20);
+        for target in [0.02, 0.05, 0.10, 0.20] {
+            let tau = threshold_for_drop_rate(&trace, target);
+            let got = evaluate_threshold(&trace, tau).drop_rate;
+            assert!(
+                (got - target).abs() < 0.02,
+                "target {target}: tau {tau} gives {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn step_speedup_dominates_effective() {
+        // S_eff = step_speedup * completion <= step_speedup.
+        let trace = noisy_trace(16, 15);
+        for tau in [4.0, 6.0, 8.0] {
+            let p = evaluate_threshold(&trace, tau);
+            assert!(p.effective_speedup <= p.step_speedup + 1e-12);
+        }
+    }
+
+    #[test]
+    fn per_worker_matches_global_when_homogeneous() {
+        // With identical workers the per-worker scheme degenerates to a
+        // global threshold and must not lose to it.
+        let trace = noisy_trace(16, 20);
+        let global = choose_threshold(&trace, 128);
+        let (_, per) = choose_per_worker_thresholds(&trace, 128);
+        assert!(
+            per.effective_speedup > global.speedup - 0.06,
+            "per-worker {} vs global {}",
+            per.effective_speedup,
+            global.speedup
+        );
+    }
+
+    #[test]
+    fn per_worker_wins_under_heterogeneity() {
+        // One 1.6x-slow worker: a global tau either drops most of the
+        // slow worker's batches or helps nobody; per-worker taus adapt.
+        use crate::sim::{ClusterSim, CommModel, LatencyModel};
+        let cfg = ClusterConfig {
+            workers: 8,
+            accumulations: 12,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            comm_latency: 0.5,
+            noise: NoiseKind::LogNormal { mean: 0.1, var: 0.02 },
+            ..Default::default()
+        };
+        let mut scales = vec![1.0; 8];
+        scales[0] = 1.6;
+        let model = LatencyModel::from_config(&cfg).with_worker_scales(scales);
+        let mut sim = ClusterSim::with_model(
+            8, 12, model, CommModel::Fixed(0.5), 321,
+        );
+        let trace = sim.record_trace(30);
+        let global = choose_threshold(&trace, 128);
+        let (taus, _per) = choose_per_worker_thresholds(&trace, 128);
+        // the slow worker gets a proportionally larger budget
+        assert!(taus[0] > 1.3 * taus[1], "{taus:?}");
+
+        // fairness: under the global tau the slow worker is starved
+        // (its drop rate far exceeds the others'); proportional taus
+        // equalize drop rates.
+        let drop_rate_of = |n: usize, tau: f64| -> f64 {
+            let mut done = 0usize;
+            for i in 0..trace.iters {
+                let mut cum = 0.0;
+                for mm in 0..trace.accums {
+                    cum += trace.get(i, n, mm);
+                    if cum < tau {
+                        done += 1;
+                    }
+                }
+            }
+            1.0 - done as f64 / (trace.iters * trace.accums) as f64
+        };
+        let slow_global = drop_rate_of(0, global.tau);
+        let fast_global = drop_rate_of(1, global.tau);
+        let slow_per = drop_rate_of(0, taus[0]);
+        let fast_per = drop_rate_of(1, taus[1]);
+        assert!(
+            slow_global > fast_global + 0.2,
+            "global tau starves the slow worker: {slow_global} vs {fast_global}"
+        );
+        assert!(
+            (slow_per - fast_per).abs() < 0.1,
+            "per-worker taus equalize drops: {slow_per} vs {fast_per}"
+        );
+    }
+
+    #[test]
+    fn per_worker_infinite_tau_is_baseline() {
+        let trace = noisy_trace(6, 10);
+        let p = evaluate_per_worker(&trace, &vec![1e9; 6]);
+        assert!((p.effective_speedup - 1.0).abs() < 1e-9);
+        assert_eq!(p.drop_rate, 0.0);
+    }
+
+    #[test]
+    fn quiet_cluster_prefers_no_drops() {
+        // Without noise the optimum is ~no dropping, speedup ~1.
+        let cfg = ClusterConfig {
+            workers: 16,
+            accumulations: 12,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.005,
+            comm_latency: 0.5,
+            noise: NoiseKind::None,
+            ..Default::default()
+        };
+        let trace = ClusterSim::new(&cfg, 7).record_trace(20);
+        let choice = choose_threshold(&trace, 128);
+        assert!(choice.speedup < 1.02, "{}", choice.speedup);
+        assert!(choice.completion_rate > 0.97);
+    }
+}

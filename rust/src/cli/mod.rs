@@ -1,0 +1,203 @@
+//! Command-line parsing (no clap in the sandbox registry).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]` with typed accessors, `--set a.b=c` config overrides
+//! (repeatable) and generated usage text.
+
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, options, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declares which option keys take values (everything else is a flag).
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    value_keys: Vec<&'static str>,
+    subcommands: Vec<&'static str>,
+}
+
+impl Spec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn value_keys(mut self, keys: &[&'static str]) -> Self {
+        self.value_keys.extend_from_slice(keys);
+        self
+    }
+
+    pub fn subcommands(mut self, subs: &[&'static str]) -> Self {
+        self.subcommands.extend_from_slice(subs);
+        self
+    }
+
+    /// Parse argv (without the program name).
+    pub fn parse<I, S>(&self, argv: I) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().map(Into::into).peekable();
+
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') && self.subcommands.contains(&first.as_str())
+            {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if self.value_keys.contains(&key.as_str()) {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| {
+                            Error::Cli(format!("--{key} expects a value"))
+                        })?,
+                    };
+                    out.options.entry(key).or_default().push(value);
+                } else if let Some(v) = inline {
+                    // unknown --k=v still recorded as option
+                    out.options.entry(key).or_default().push(v);
+                } else {
+                    out.flags.push(key);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.options
+            .get(key)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{key}: bad integer `{v}`"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{key}: bad integer `{v}`"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{key}: bad float `{v}`"))),
+        }
+    }
+
+    /// Load a config file (if `--config`) and apply `--set` overrides.
+    pub fn build_config(&self) -> Result<crate::config::Config> {
+        let mut doc = match self.get("config") {
+            Some(path) => crate::config::Document::load(std::path::Path::new(path))?,
+            None => crate::config::Document::parse("")?,
+        };
+        for ov in self.get_all("set") {
+            doc.set_raw(ov)?;
+        }
+        crate::config::Config::from_doc(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new()
+            .subcommands(&["train", "simulate"])
+            .value_keys(&["config", "set", "workers", "out"])
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = spec()
+            .parse(["train", "--config", "c.toml", "--verbose", "pos1"])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("c.toml"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_repeats() {
+        let a = spec()
+            .parse(["--set", "a.b=1", "--set=c.d=2", "--workers=8"])
+            .unwrap();
+        assert_eq!(a.get_all("set"), vec!["a.b=1", "c.d=2"]);
+        assert_eq!(a.usize_or("workers", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(spec().parse(["--config"]).is_err());
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let a = spec().parse(["--workers", "abc"]).unwrap();
+        assert!(a.usize_or("workers", 0).is_err());
+        assert_eq!(a.f64_or("missing", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn non_subcommand_first_positional() {
+        let a = spec().parse(["notasub", "x"]).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["notasub", "x"]);
+    }
+
+    #[test]
+    fn build_config_with_overrides() {
+        let a = spec()
+            .parse(["--set", "cluster.workers=99", "--set", "train.lr=0.5"])
+            .unwrap();
+        let c = a.build_config().unwrap();
+        assert_eq!(c.cluster.workers, 99);
+        assert_eq!(c.train.lr, 0.5);
+    }
+}

@@ -1,0 +1,201 @@
+//! Full-mesh communicator + tree / naive all-reduce variants.
+//!
+//! The paper assumes decentralized *ring* AllReduce (bandwidth-optimal,
+//! Patarasuk & Yuan 2009); these alternatives exist for the design-choice
+//! ablation in `benches/allreduce_ablation.rs`: a binary-tree
+//! reduce+broadcast (latency-optimal, 2·log2 N hops of the full buffer)
+//! and the naive all-to-all gather (N× bandwidth) — the trade-offs the
+//! paper's §2 discussion takes as given.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Full-mesh communicator: a channel from every rank to every rank.
+pub struct MeshComm {
+    pub rank: usize,
+    pub size: usize,
+    to: Vec<Sender<Vec<f32>>>,
+    from: Vec<Receiver<Vec<f32>>>,
+}
+
+impl MeshComm {
+    /// Create `n` fully-connected communicators.
+    pub fn full(n: usize) -> Vec<MeshComm> {
+        assert!(n > 0);
+        // txs[dst][src] sends to dst's receiver for messages from src.
+        let mut txs: Vec<Vec<Option<Sender<Vec<f32>>>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Vec<f32>>>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        for dst in 0..n {
+            for src in 0..n {
+                let (tx, rx) = channel();
+                txs[dst][src] = Some(tx);
+                rxs[dst][src] = Some(rx);
+            }
+        }
+        (0..n)
+            .map(|rank| MeshComm {
+                rank,
+                size: n,
+                to: (0..n)
+                    .map(|dst| txs[dst][rank].take().unwrap())
+                    .collect(),
+                from: rxs[rank]
+                    .iter_mut()
+                    .map(|r| r.take().unwrap())
+                    .collect(),
+            })
+            .collect()
+    }
+
+    pub fn send(&self, dst: usize, data: Vec<f32>) {
+        self.to[dst].send(data).expect("mesh send");
+    }
+
+    pub fn recv(&self, src: usize) -> Vec<f32> {
+        self.from[src].recv().expect("mesh recv")
+    }
+}
+
+/// Binary-tree all-reduce (sum): reduce to rank 0 up the tree, then
+/// broadcast down. 2·ceil(log2 N) hops of the full buffer.
+pub fn tree_all_reduce(comm: &MeshComm, buf: &mut [f32]) {
+    let n = comm.size;
+    let rank = comm.rank;
+    // Reduce phase: in round r (stride 2^r), ranks with bit set send to
+    // rank - stride; receivers accumulate.
+    let mut stride = 1;
+    while stride < n {
+        if rank & stride != 0 {
+            // sender: ship the buffer up and exit the reduce phase
+            comm.send(rank - stride, buf.to_vec());
+            break;
+        } else if rank + stride < n {
+            let incoming = comm.recv(rank + stride);
+            for (dst, src) in buf.iter_mut().zip(&incoming) {
+                *dst += *src;
+            }
+        }
+        stride <<= 1;
+    }
+    // Broadcast phase: mirror image, top-down.
+    let mut stride = usize::next_power_of_two(n) >> 1;
+    while stride >= 1 {
+        if rank & (stride - 1) == 0 {
+            if rank & stride != 0 {
+                let incoming = comm.recv(rank - stride);
+                buf.copy_from_slice(&incoming);
+            } else if rank + stride < n {
+                comm.send(rank + stride, buf.to_vec());
+            }
+        }
+        stride >>= 1;
+    }
+}
+
+/// Naive all-reduce: every worker sends its full buffer to every other
+/// worker (N-1 full-buffer sends per worker).
+pub fn naive_all_reduce(comm: &MeshComm, buf: &mut [f32]) {
+    let n = comm.size;
+    for dst in 0..n {
+        if dst != comm.rank {
+            comm.send(dst, buf.to_vec());
+        }
+    }
+    for src in 0..n {
+        if src != comm.rank {
+            let incoming = comm.recv(src);
+            for (dst, s) in buf.iter_mut().zip(&incoming) {
+                *dst += *s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn run_mesh<T, F>(n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize, &MeshComm) -> T + Send + Sync + 'static,
+    {
+        let comms = MeshComm::full(n);
+        let f = Arc::new(f);
+        comms
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                let f = Arc::clone(&f);
+                thread::spawn(move || f(rank, &comm))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    }
+
+    fn expected(n: usize, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| (0..n).map(|r| (r * len + i) as f32).sum())
+            .collect()
+    }
+
+    #[test]
+    fn tree_all_reduce_sums_all_sizes() {
+        // powers of two and odd sizes
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let len = 17;
+            let results = run_mesh(n, move |rank, comm| {
+                let mut buf: Vec<f32> =
+                    (0..len).map(|i| (rank * len + i) as f32).collect();
+                tree_all_reduce(comm, &mut buf);
+                buf
+            });
+            let want = expected(n, len);
+            for (rank, got) in results.iter().enumerate() {
+                assert_eq!(got, &want, "tree n={n} rank={rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_all_reduce_sums() {
+        for n in [1usize, 2, 4, 7] {
+            let len = 9;
+            let results = run_mesh(n, move |rank, comm| {
+                let mut buf: Vec<f32> =
+                    (0..len).map(|i| (rank * len + i) as f32).collect();
+                naive_all_reduce(comm, &mut buf);
+                buf
+            });
+            let want = expected(n, len);
+            for got in &results {
+                assert_eq!(got, &want, "naive n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn variants_agree_with_ring_differential() {
+        // tree == naive == ring on identical inputs (consensus + sums).
+        let n = 6;
+        let len = 23;
+        let tree = run_mesh(n, move |rank, comm| {
+            let mut buf: Vec<f32> =
+                (0..len).map(|i| ((rank + 1) * (i + 3)) as f32).collect();
+            tree_all_reduce(comm, &mut buf);
+            buf
+        });
+        let naive = run_mesh(n, move |rank, comm| {
+            let mut buf: Vec<f32> =
+                (0..len).map(|i| ((rank + 1) * (i + 3)) as f32).collect();
+            naive_all_reduce(comm, &mut buf);
+            buf
+        });
+        assert_eq!(tree, naive);
+    }
+}

@@ -1,0 +1,343 @@
+//! Decentralized collectives over in-process channels.
+//!
+//! The paper's setting is AllReduce-based synchronous training
+//! (von Luxburg et al.; Patarasuk & Yuan 2009) with **no parameter
+//! server** — DropCompute must work where no central entity decides who
+//! participates. These collectives run one OS thread per worker over
+//! `std::sync::mpsc` channels arranged in a ring, providing:
+//!
+//! * [`ring_all_reduce`] — reduce-scatter + all-gather sum (bandwidth
+//!   optimal), used for gradient aggregation;
+//! * [`all_gather_varlen`] — variable-length gather, used by Algorithm 2
+//!   to synchronize empirical latency distributions (and by stochastic
+//!   batch-size weighting to exchange per-worker completed counts);
+//! * [`Communicator`] — the per-worker handle tying a thread group
+//!   together.
+
+pub mod mesh;
+
+pub use mesh::{naive_all_reduce, tree_all_reduce, MeshComm};
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+/// Message on the ring: a chunk of f64/f32 payload.
+enum Msg {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+/// Per-worker communicator: ring neighbours + a group barrier.
+pub struct Communicator {
+    pub rank: usize,
+    pub size: usize,
+    to_next: Sender<Msg>,
+    from_prev: Receiver<Msg>,
+    barrier: Arc<Barrier>,
+}
+
+impl Communicator {
+    /// Create a fully-wired ring of `n` communicators.
+    pub fn ring(n: usize) -> Vec<Communicator> {
+        assert!(n > 0);
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(Some(rx));
+        }
+        let barrier = Arc::new(Barrier::new(n));
+        (0..n)
+            .map(|rank| Communicator {
+                rank,
+                size: n,
+                // worker `rank` sends to `rank+1`'s channel
+                to_next: senders[(rank + 1) % n].clone(),
+                from_prev: receivers[rank].take().unwrap(),
+                barrier: Arc::clone(&barrier),
+            })
+            .collect()
+    }
+
+    /// Block until every worker reaches this point (the Eq. 1 barrier).
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    fn send_f32(&self, data: Vec<f32>) {
+        self.to_next.send(Msg::F32(data)).expect("ring send");
+    }
+
+    fn recv_f32(&self) -> Vec<f32> {
+        match self.from_prev.recv().expect("ring recv") {
+            Msg::F32(v) => v,
+            _ => panic!("dtype mismatch on ring"),
+        }
+    }
+
+    fn send_f64(&self, data: Vec<f64>) {
+        self.to_next.send(Msg::F64(data)).expect("ring send");
+    }
+
+    fn recv_f64(&self) -> Vec<f64> {
+        match self.from_prev.recv().expect("ring recv") {
+            Msg::F64(v) => v,
+            _ => panic!("dtype mismatch on ring"),
+        }
+    }
+}
+
+/// Chunk boundaries for splitting `len` into `size` contiguous chunks.
+fn chunk_bounds(len: usize, size: usize, idx: usize) -> (usize, usize) {
+    let base = len / size;
+    let rem = len % size;
+    let start = idx * base + idx.min(rem);
+    let extra = if idx < rem { 1 } else { 0 };
+    (start, start + base + extra)
+}
+
+/// Ring all-reduce (sum) in place: reduce-scatter then all-gather,
+/// 2(N-1) phases of `len/N` chunks — the decentralized aggregation of
+/// Eq. 1. Call concurrently from every worker thread.
+///
+/// Perf note (§Perf in EXPERIMENTS.md): message buffers are *recycled* —
+/// each received `Vec` becomes the next send buffer, so after the first
+/// phase the ring circulates N buffers with zero steady-state
+/// allocation (the naive per-phase `to_vec()` version allocated
+/// 2(N-1) chunk buffers per call and was ~1.4x slower at 8x1M f32).
+pub fn ring_all_reduce(comm: &Communicator, buf: &mut [f32]) {
+    let n = comm.size;
+    if n == 1 {
+        return;
+    }
+    let len = buf.len();
+    let mut scratch: Vec<f32> = Vec::new();
+
+    let mut send_chunk = |comm: &Communicator, scratch: &mut Vec<f32>,
+                          src: &[f32]| {
+        let mut out = std::mem::take(scratch);
+        out.clear();
+        out.extend_from_slice(src);
+        comm.send_f32(out);
+    };
+
+    // Phase 1: reduce-scatter. In step s, send chunk (rank - s) and
+    // accumulate received chunk (rank - s - 1).
+    for s in 0..n - 1 {
+        let send_idx = (comm.rank + n - s) % n;
+        let recv_idx = (comm.rank + n - s - 1) % n;
+        let (a, b) = chunk_bounds(len, n, send_idx);
+        send_chunk(comm, &mut scratch, &buf[a..b]);
+        let incoming = comm.recv_f32();
+        let (a, b) = chunk_bounds(len, n, recv_idx);
+        debug_assert_eq!(incoming.len(), b - a);
+        for (dst, src) in buf[a..b].iter_mut().zip(&incoming) {
+            *dst += *src;
+        }
+        scratch = incoming; // recycle for the next send
+    }
+    // Phase 2: all-gather. In step s, send chunk (rank + 1 - s), receive
+    // chunk (rank - s).
+    for s in 0..n - 1 {
+        let send_idx = (comm.rank + 1 + n - s) % n;
+        let recv_idx = (comm.rank + n - s) % n;
+        let (a, b) = chunk_bounds(len, n, send_idx);
+        send_chunk(comm, &mut scratch, &buf[a..b]);
+        let incoming = comm.recv_f32();
+        let (a, b) = chunk_bounds(len, n, recv_idx);
+        buf[a..b].copy_from_slice(&incoming);
+        scratch = incoming;
+    }
+}
+
+/// The pre-optimization reference implementation (allocates every chunk);
+/// kept for the §Perf before/after measurement and as a differential
+///-testing oracle for the recycled version.
+pub fn ring_all_reduce_naive(comm: &Communicator, buf: &mut [f32]) {
+    let n = comm.size;
+    if n == 1 {
+        return;
+    }
+    let len = buf.len();
+    for s in 0..n - 1 {
+        let send_idx = (comm.rank + n - s) % n;
+        let recv_idx = (comm.rank + n - s - 1) % n;
+        let (a, b) = chunk_bounds(len, n, send_idx);
+        comm.send_f32(buf[a..b].to_vec());
+        let incoming = comm.recv_f32();
+        let (a, b) = chunk_bounds(len, n, recv_idx);
+        for (dst, src) in buf[a..b].iter_mut().zip(&incoming) {
+            *dst += *src;
+        }
+    }
+    for s in 0..n - 1 {
+        let send_idx = (comm.rank + 1 + n - s) % n;
+        let recv_idx = (comm.rank + n - s) % n;
+        let (a, b) = chunk_bounds(len, n, send_idx);
+        comm.send_f32(buf[a..b].to_vec());
+        let incoming = comm.recv_f32();
+        let (a, b) = chunk_bounds(len, n, recv_idx);
+        buf[a..b].copy_from_slice(&incoming);
+    }
+}
+
+/// All-gather of variable-length f64 payloads: returns every worker's
+/// contribution, indexed by rank. Ring-rotated N-1 times.
+pub fn all_gather_varlen(comm: &Communicator, mine: Vec<f64>) -> Vec<Vec<f64>> {
+    let n = comm.size;
+    let mut out: Vec<Vec<f64>> = vec![Vec::new(); n];
+    out[comm.rank] = mine;
+    let mut cursor = comm.rank;
+    for _ in 0..n - 1 {
+        comm.send_f64(out[cursor].clone());
+        let incoming = comm.recv_f64();
+        cursor = (cursor + n - 1) % n;
+        out[cursor] = incoming;
+    }
+    out
+}
+
+/// All-reduce of a single scalar (sum) — used for completed-batch counts
+/// in the stochastic batch-size weighting (App. B.2.2's "synchronize the
+/// computed batch of each worker ... during the AllReduce").
+pub fn all_reduce_scalar(comm: &Communicator, x: f64) -> f64 {
+    let gathered = all_gather_varlen(comm, vec![x]);
+    gathered.iter().map(|v| v[0]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// Run `f(rank, comm)` on one thread per ring member; collect results.
+    fn run_group<T, F>(n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize, &Communicator) -> T + Send + Sync + 'static,
+    {
+        let comms = Communicator::ring(n);
+        let f = Arc::new(f);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                let f = Arc::clone(&f);
+                thread::spawn(move || f(rank, &comm))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn chunk_bounds_partition() {
+        for (len, size) in [(10, 3), (7, 7), (5, 8), (16, 4)] {
+            let mut covered = 0;
+            for i in 0..size {
+                let (a, b) = chunk_bounds(len, size, i);
+                assert_eq!(a, covered);
+                covered = b;
+            }
+            assert_eq!(covered, len);
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_sums() {
+        for n in [1usize, 2, 3, 5, 8] {
+            let len = 23; // deliberately not divisible by n
+            let results = run_group(n, move |rank, comm| {
+                let mut buf: Vec<f32> =
+                    (0..len).map(|i| (rank * len + i) as f32).collect();
+                ring_all_reduce(comm, &mut buf);
+                buf
+            });
+            // expected sum over ranks for each position
+            for (rank, buf) in results.iter().enumerate() {
+                for (i, &v) in buf.iter().enumerate() {
+                    let want: f32 =
+                        (0..n).map(|r| (r * len + i) as f32).sum();
+                    assert_eq!(v, want, "n={n} rank={rank} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recycled_matches_naive_differential() {
+        // The optimized (buffer-recycling) implementation must be
+        // bit-identical to the naive reference on every topology.
+        for n in [2usize, 3, 6] {
+            let len = 37;
+            let fast = run_group(n, move |rank, comm| {
+                let mut buf: Vec<f32> =
+                    (0..len).map(|i| ((rank + 2) * (i + 1)) as f32).collect();
+                ring_all_reduce(comm, &mut buf);
+                buf
+            });
+            let slow = run_group(n, move |rank, comm| {
+                let mut buf: Vec<f32> =
+                    (0..len).map(|i| ((rank + 2) * (i + 1)) as f32).collect();
+                ring_all_reduce_naive(comm, &mut buf);
+                buf
+            });
+            assert_eq!(fast, slow, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_consensus_property() {
+        // All workers end with bit-identical buffers (model consensus —
+        // the synchronous-training invariant).
+        let results = run_group(6, |rank, comm| {
+            let mut buf: Vec<f32> =
+                (0..100).map(|i| ((rank + 1) * (i + 1)) as f32 * 0.5).collect();
+            ring_all_reduce(comm, &mut buf);
+            buf
+        });
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+    }
+
+    #[test]
+    fn all_gather_varlen_collects_everything() {
+        let results = run_group(4, |rank, comm| {
+            let mine: Vec<f64> = (0..=rank).map(|i| i as f64).collect();
+            all_gather_varlen(comm, mine)
+        });
+        for got in &results {
+            for (rank, v) in got.iter().enumerate() {
+                let want: Vec<f64> = (0..=rank).map(|i| i as f64).collect();
+                assert_eq!(v, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_all_reduce() {
+        let results = run_group(5, |rank, comm| {
+            all_reduce_scalar(comm, rank as f64 + 1.0)
+        });
+        for r in results {
+            assert_eq!(r, 15.0);
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let results = run_group(4, move |_rank, comm| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            comm.barrier();
+            // after the barrier, all 4 increments must be visible
+            c2.load(Ordering::SeqCst)
+        });
+        for r in results {
+            assert_eq!(r, 4);
+        }
+    }
+}

@@ -1,0 +1,515 @@
+//! Typed configuration: the launcher's single source of truth.
+//!
+//! A run is described by a TOML file (see `configs/`) plus CLI
+//! `--set path=value` overrides, parsed into the structs here. Every
+//! field has a validated default so `Config::default()` is runnable.
+
+pub mod toml;
+
+pub use self::toml::{Document, Value};
+
+use crate::util::{Error, Result};
+
+/// Which latency-noise family perturbs each micro-batch (App. B.1, C.3).
+#[derive(Debug, Clone, PartialEq)]
+pub enum NoiseKind {
+    /// No additive noise (homogeneous cluster).
+    None,
+    /// The paper's simulated-delay environment:
+    /// `eps = min(Z/alpha, beta)`, `Z ~ LogNormal(mu, sigma)`,
+    /// `t += mu_compute * eps`.
+    PaperLogNormal { mu: f64, sigma: f64, alpha: f64, beta: f64 },
+    /// Families of the Fig 13 ablation, parameterized by target moments.
+    LogNormal { mean: f64, var: f64 },
+    Normal { mean: f64, var: f64 },
+    Bernoulli { p: f64, value: f64 },
+    Exponential { mean: f64 },
+    Gamma { mean: f64, var: f64 },
+}
+
+/// Straggler injection scenarios (Fig 12).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StragglerKind {
+    None,
+    /// Each worker independently straggles with prob `p` per step/local
+    /// step, adding `delay` seconds ("uniform stragglers").
+    Uniform { p: f64, delay: f64 },
+    /// Only workers in one server (ids < `server_size`) can straggle
+    /// ("single server stragglers").
+    SingleServer { p: f64, delay: f64, server_size: usize },
+    /// Compute stall: worker `worker`'s compute pipeline hangs from step
+    /// `from_step` on (bad disk / preprocessing deadlock — effectively
+    /// infinite compute time), while its control thread stays alive.
+    /// Baseline synchronous training stalls with it; under DropCompute
+    /// the wall-clock timeout fires at `tau` and the worker joins the
+    /// AllReduce empty, so training degrades gracefully to the survivors
+    /// (§2's robustness comparison with redundancy methods — note the
+    /// paper's limitation that *network* faults during the AllReduce
+    /// itself remain out of scope).
+    Fatal { worker: usize, from_step: usize },
+}
+
+/// Compute-cluster shape and timing model.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of data-parallel workers `N`.
+    pub workers: usize,
+    /// Gradient accumulations per step `M` (micro-batches).
+    pub accumulations: usize,
+    /// Mean compute time of one micro-batch, seconds (`mu` in Eq. 5).
+    pub microbatch_mean: f64,
+    /// Std of one micro-batch's intrinsic compute time (hardware jitter).
+    pub microbatch_std: f64,
+    /// Serial per-iteration latency `T^c` (AllReduce + fixed overhead).
+    pub comm_latency: f64,
+    /// Additive noise model.
+    pub noise: NoiseKind,
+    /// Straggler scenario.
+    pub stragglers: StragglerKind,
+    /// OS threads for real execution.
+    pub threads: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            workers: 16,
+            accumulations: 12,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            comm_latency: 0.5,
+            noise: NoiseKind::None,
+            stragglers: StragglerKind::None,
+            threads: 0, // 0 = auto
+        }
+    }
+}
+
+/// How dropped samples are compensated (§4.5, Table 1b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compensation {
+    None,
+    /// Train `R * I_base` extra steps, `R = M/M~ - 1`.
+    ExtraSteps,
+    /// Increase the per-step batch by `R` so the average batch matches.
+    IncreasedBatch,
+    /// Re-queue dropped micro-batches before the next epoch.
+    Resample,
+}
+
+/// Threshold policy for Algorithm 1.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ThresholdPolicy {
+    /// DropCompute disabled (vanilla synchronous training).
+    Off,
+    /// Fixed compute threshold in seconds.
+    Fixed(f64),
+    /// Algorithm 2: measure `calibration_iters` iterations, synchronize
+    /// the empirical latency distribution, pick `tau* = argmax S_eff`.
+    Auto,
+    /// Pick tau to hit a target drop rate (used by the post-analysis
+    /// benches that sweep drop rate like Fig 4).
+    TargetDropRate(f64),
+}
+
+/// DropCompute method configuration (§3.2, §4.4, §4.5).
+#[derive(Debug, Clone)]
+pub struct DropComputeConfig {
+    pub policy: ThresholdPolicy,
+    /// Iterations measured before choosing tau (Algorithm 2's `I`).
+    pub calibration_iters: usize,
+    /// Candidate-threshold grid resolution for the argmax search.
+    pub search_points: usize,
+    pub compensation: Compensation,
+}
+
+impl Default for DropComputeConfig {
+    fn default() -> Self {
+        Self {
+            policy: ThresholdPolicy::Off,
+            calibration_iters: 20,
+            search_points: 256,
+            compensation: Compensation::None,
+        }
+    }
+}
+
+/// Optimizer selection (rust-side update rules in `train::optimizer`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum,
+    Adam,
+    AdamW,
+    Lamb,
+    Lars,
+    Lans,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sgd" => Self::Sgd,
+            "momentum" => Self::Momentum,
+            "adam" => Self::Adam,
+            "adamw" => Self::AdamW,
+            "lamb" => Self::Lamb,
+            "lars" => Self::Lars,
+            "lans" => Self::Lans,
+            other => {
+                return Err(Error::Config(format!("unknown optimizer `{other}`")))
+            }
+        })
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// Linear warmup over `warmup` fraction then linear decay to 0
+    /// (the BERT/LAMB regime of You et al. 2019).
+    WarmupLinear { warmup_ratio: f64 },
+    WarmupCosine { warmup_ratio: f64 },
+    /// Polynomial decay with warmup (power 1 == linear).
+    WarmupPoly { warmup_ratio: f64, power: f64 },
+}
+
+/// Training-loop configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact size name (`test`/`tiny`/`small`/`base`/`large`/`xl`).
+    pub model_size: String,
+    /// Total optimizer steps `I_base`.
+    pub steps: usize,
+    pub optimizer: OptimizerKind,
+    pub lr: f64,
+    pub schedule: LrSchedule,
+    pub weight_decay: f64,
+    pub seed: u64,
+    /// Local-SGD synchronization period H (1 = fully synchronous).
+    pub local_sgd_period: usize,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Gradient clipping by global norm (0 = off).
+    pub grad_clip: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model_size: "tiny".to_string(),
+            steps: 100,
+            optimizer: OptimizerKind::Adam,
+            lr: 1e-3,
+            schedule: LrSchedule::WarmupLinear { warmup_ratio: 0.1 },
+            weight_decay: 0.01,
+            seed: 0,
+            local_sgd_period: 1,
+            log_every: 10,
+            eval_every: 0,
+            eval_batches: 4,
+            grad_clip: 1.0,
+        }
+    }
+}
+
+/// Synthetic-corpus configuration (`data::corpus`).
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    /// Zipf exponent of the unigram backbone.
+    pub zipf_s: f64,
+    /// Markov-blend coefficient (0 = iid unigrams, 1 = deterministic).
+    pub markov_weight: f64,
+    /// Log-normal document length parameters (motivates compute variance).
+    pub doclen_mu: f64,
+    pub doclen_sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self {
+            zipf_s: 1.1,
+            markov_weight: 0.7,
+            doclen_mu: 4.0,
+            doclen_sigma: 1.0,
+            seed: 1234,
+        }
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub dropcompute: DropComputeConfig,
+    pub train: TrainConfig,
+    pub data: DataConfig,
+    /// Artifact root directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::default(),
+            dropcompute: DropComputeConfig::default(),
+            train: TrainConfig::default(),
+            data: DataConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    /// Build from a parsed document (all keys optional).
+    pub fn from_doc(doc: &Document) -> Result<Self> {
+        let mut c = Config::default();
+        c.artifacts_dir = doc.str_or("artifacts_dir", "artifacts");
+
+        // [cluster]
+        c.cluster.workers = doc.int_or("cluster.workers", 16).max(1) as usize;
+        c.cluster.accumulations =
+            doc.int_or("cluster.accumulations", 12).max(1) as usize;
+        c.cluster.microbatch_mean =
+            doc.float_or("cluster.microbatch_mean", 0.45);
+        c.cluster.microbatch_std = doc.float_or("cluster.microbatch_std", 0.02);
+        c.cluster.comm_latency = doc.float_or("cluster.comm_latency", 0.5);
+        c.cluster.threads = doc.int_or("cluster.threads", 0).max(0) as usize;
+        c.cluster.noise = parse_noise(doc)?;
+        c.cluster.stragglers = parse_stragglers(doc)?;
+
+        // [dropcompute]
+        c.dropcompute.policy = match doc.str_or("dropcompute.policy", "off").as_str() {
+            "off" => ThresholdPolicy::Off,
+            "auto" => ThresholdPolicy::Auto,
+            "fixed" => {
+                ThresholdPolicy::Fixed(doc.float_or("dropcompute.threshold", 1.0))
+            }
+            "drop_rate" => ThresholdPolicy::TargetDropRate(
+                doc.float_or("dropcompute.drop_rate", 0.05),
+            ),
+            other => {
+                return Err(Error::Config(format!(
+                    "dropcompute.policy `{other}` not in off/auto/fixed/drop_rate"
+                )))
+            }
+        };
+        c.dropcompute.calibration_iters =
+            doc.int_or("dropcompute.calibration_iters", 20).max(1) as usize;
+        c.dropcompute.search_points =
+            doc.int_or("dropcompute.search_points", 256).max(8) as usize;
+        c.dropcompute.compensation =
+            match doc.str_or("dropcompute.compensation", "none").as_str() {
+                "none" => Compensation::None,
+                "extra_steps" => Compensation::ExtraSteps,
+                "increased_batch" => Compensation::IncreasedBatch,
+                "resample" => Compensation::Resample,
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown compensation `{other}`"
+                    )))
+                }
+            };
+
+        // [train]
+        c.train.model_size = doc.str_or("train.model_size", "tiny");
+        c.train.steps = doc.int_or("train.steps", 100).max(1) as usize;
+        c.train.optimizer =
+            OptimizerKind::parse(&doc.str_or("train.optimizer", "adam"))?;
+        c.train.lr = doc.float_or("train.lr", 1e-3);
+        c.train.weight_decay = doc.float_or("train.weight_decay", 0.01);
+        c.train.seed = doc.int_or("train.seed", 0) as u64;
+        c.train.local_sgd_period =
+            doc.int_or("train.local_sgd_period", 1).max(1) as usize;
+        c.train.log_every = doc.int_or("train.log_every", 10).max(1) as usize;
+        c.train.eval_every = doc.int_or("train.eval_every", 0).max(0) as usize;
+        c.train.eval_batches = doc.int_or("train.eval_batches", 4).max(1) as usize;
+        c.train.grad_clip = doc.float_or("train.grad_clip", 1.0);
+        let warmup = doc.float_or("train.warmup_ratio", 0.1);
+        c.train.schedule = match doc.str_or("train.schedule", "warmup_linear").as_str()
+        {
+            "constant" => LrSchedule::Constant,
+            "warmup_linear" => LrSchedule::WarmupLinear { warmup_ratio: warmup },
+            "warmup_cosine" => LrSchedule::WarmupCosine { warmup_ratio: warmup },
+            "warmup_poly" => LrSchedule::WarmupPoly {
+                warmup_ratio: warmup,
+                power: doc.float_or("train.poly_power", 1.0),
+            },
+            other => {
+                return Err(Error::Config(format!("unknown schedule `{other}`")))
+            }
+        };
+
+        // [data]
+        c.data.zipf_s = doc.float_or("data.zipf_s", 1.1);
+        c.data.markov_weight = doc.float_or("data.markov_weight", 0.7);
+        c.data.doclen_mu = doc.float_or("data.doclen_mu", 4.0);
+        c.data.doclen_sigma = doc.float_or("data.doclen_sigma", 1.0);
+        c.data.seed = doc.int_or("data.seed", 1234) as u64;
+
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.cluster.microbatch_mean <= 0.0 {
+            return Err(Error::Config("microbatch_mean must be > 0".into()));
+        }
+        if self.cluster.comm_latency < 0.0 {
+            return Err(Error::Config("comm_latency must be >= 0".into()));
+        }
+        if let ThresholdPolicy::Fixed(t) = self.dropcompute.policy {
+            if t <= 0.0 {
+                return Err(Error::Config("fixed threshold must be > 0".into()));
+            }
+        }
+        if let ThresholdPolicy::TargetDropRate(r) = self.dropcompute.policy {
+            if !(0.0..1.0).contains(&r) {
+                return Err(Error::Config("drop_rate must be in [0,1)".into()));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.data.markov_weight) {
+            return Err(Error::Config("markov_weight must be in [0,1]".into()));
+        }
+        Ok(())
+    }
+}
+
+fn parse_noise(doc: &Document) -> Result<NoiseKind> {
+    Ok(match doc.str_or("noise.kind", "none").as_str() {
+        "none" => NoiseKind::None,
+        "paper_lognormal" => NoiseKind::PaperLogNormal {
+            mu: doc.float_or("noise.mu", 4.0),
+            sigma: doc.float_or("noise.sigma", 1.0),
+            alpha: doc.float_or("noise.alpha", 2.0 * (4.5f64).exp()),
+            beta: doc.float_or("noise.beta", 5.5),
+        },
+        "lognormal" => NoiseKind::LogNormal {
+            mean: doc.float_or("noise.mean", 0.225),
+            var: doc.float_or("noise.var", 0.05),
+        },
+        "normal" => NoiseKind::Normal {
+            mean: doc.float_or("noise.mean", 0.225),
+            var: doc.float_or("noise.var", 0.05),
+        },
+        "bernoulli" => NoiseKind::Bernoulli {
+            p: doc.float_or("noise.p", 0.5),
+            value: doc.float_or("noise.value", 0.45),
+        },
+        "exponential" => NoiseKind::Exponential {
+            mean: doc.float_or("noise.mean", 0.225),
+        },
+        "gamma" => NoiseKind::Gamma {
+            mean: doc.float_or("noise.mean", 0.225),
+            var: doc.float_or("noise.var", 0.05),
+        },
+        other => return Err(Error::Config(format!("unknown noise kind `{other}`"))),
+    })
+}
+
+fn parse_stragglers(doc: &Document) -> Result<StragglerKind> {
+    Ok(match doc.str_or("stragglers.kind", "none").as_str() {
+        "none" => StragglerKind::None,
+        "uniform" => StragglerKind::Uniform {
+            p: doc.float_or("stragglers.p", 0.04),
+            delay: doc.float_or("stragglers.delay", 1.0),
+        },
+        "single_server" => StragglerKind::SingleServer {
+            p: doc.float_or("stragglers.p", 0.04),
+            delay: doc.float_or("stragglers.delay", 1.0),
+            server_size: doc.int_or("stragglers.server_size", 8).max(1) as usize,
+        },
+        "fatal" => StragglerKind::Fatal {
+            worker: doc.int_or("stragglers.worker", 0).max(0) as usize,
+            from_step: doc.int_or("stragglers.from_step", 0).max(0) as usize,
+        },
+        other => {
+            return Err(Error::Config(format!("unknown straggler kind `{other}`")))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let doc = Document::parse(
+            r#"
+            artifacts_dir = "artifacts"
+            [cluster]
+            workers = 64
+            accumulations = 12
+            comm_latency = 0.35
+            [noise]
+            kind = "paper_lognormal"
+            [stragglers]
+            kind = "single_server"
+            server_size = 8
+            [dropcompute]
+            policy = "auto"
+            compensation = "extra_steps"
+            [train]
+            model_size = "base"
+            optimizer = "lamb"
+            schedule = "warmup_poly"
+            warmup_ratio = 0.2843
+            steps = 7038
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.cluster.workers, 64);
+        assert!(matches!(c.cluster.noise, NoiseKind::PaperLogNormal { .. }));
+        assert!(matches!(
+            c.cluster.stragglers,
+            StragglerKind::SingleServer { server_size: 8, .. }
+        ));
+        assert_eq!(c.dropcompute.policy, ThresholdPolicy::Auto);
+        assert_eq!(c.dropcompute.compensation, Compensation::ExtraSteps);
+        assert_eq!(c.train.optimizer, OptimizerKind::Lamb);
+        assert_eq!(c.train.steps, 7038);
+        assert!(matches!(
+            c.train.schedule,
+            LrSchedule::WarmupPoly { .. }
+        ));
+    }
+
+    #[test]
+    fn bad_enum_values_error() {
+        for text in [
+            "[dropcompute]\npolicy = \"nope\"",
+            "[noise]\nkind = \"nope\"",
+            "[train]\noptimizer = \"nope\"",
+            "[stragglers]\nkind = \"nope\"",
+        ] {
+            let doc = Document::parse(text).unwrap();
+            assert!(Config::from_doc(&doc).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn invalid_ranges_rejected() {
+        let doc =
+            Document::parse("[dropcompute]\npolicy = \"drop_rate\"\ndrop_rate = 1.5")
+                .unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn optimizer_parse_all() {
+        for s in ["sgd", "momentum", "adam", "adamw", "lamb", "lars", "lans"] {
+            OptimizerKind::parse(s).unwrap();
+        }
+        assert!(OptimizerKind::parse("adagrad").is_err());
+    }
+}

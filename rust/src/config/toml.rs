@@ -1,0 +1,340 @@
+//! A TOML-subset parser (no serde/toml crates in the sandbox registry).
+//!
+//! Supports the subset the launcher configs use: `[section]` and
+//! `[section.sub]` tables, `key = value` with string / integer / float /
+//! boolean / homogeneous-array values, `#` comments, and quoted strings
+//! with `\"`/`\\`/`\n`/`\t` escapes. Line-oriented; good error messages
+//! with line numbers.
+
+use std::collections::BTreeMap;
+
+use crate::util::{Error, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`3` == `3.0`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-path -> value (`section.key`).
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    values: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(err(lineno, "unterminated table header"));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(err(lineno, "empty table name"));
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.values.insert(path.clone(), value).is_some() {
+                return Err(err(lineno, &format!("duplicate key `{path}`")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.values.get(path)
+    }
+
+    /// Set/override a value (CLI `--set section.key=value` overrides).
+    pub fn set(&mut self, path: &str, value: Value) {
+        self.values.insert(path.to_string(), value);
+    }
+
+    /// Parse-and-set from a raw `path=value` string.
+    pub fn set_raw(&mut self, assignment: &str) -> Result<()> {
+        let eq = assignment.find('=').ok_or_else(|| {
+            Error::Config(format!("override `{assignment}` is not key=value"))
+        })?;
+        let value = parse_value(assignment[eq + 1..].trim(), 0)?;
+        self.set(assignment[..eq].trim(), value);
+        Ok(())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    // Typed accessors with defaults — the shape every config struct uses.
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn require_str(&self, path: &str) -> Result<String> {
+        self.get(path)
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| Error::Config(format!("missing string key `{path}`")))
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        return parse_string(stripped, lineno).map(Value::Str);
+    }
+    if s.starts_with('[') {
+        return parse_array(s, lineno);
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value `{s}`")))
+}
+
+fn parse_string(rest: &str, lineno: usize) -> Result<String> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Ok(out),
+            '\\' => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => {
+                    return Err(err(
+                        lineno,
+                        &format!("bad escape `\\{}`", other.unwrap_or(' ')),
+                    ))
+                }
+            },
+            c => out.push(c),
+        }
+    }
+    Err(err(lineno, "unterminated string"))
+}
+
+fn parse_array(s: &str, lineno: usize) -> Result<Value> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|t| t.strip_suffix(']'))
+        .ok_or_else(|| err(lineno, "unterminated array"))?;
+    let mut items = Vec::new();
+    // split on commas outside strings/brackets (no nested arrays needed)
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                let piece = inner[start..i].trim();
+                if !piece.is_empty() {
+                    items.push(parse_value(piece, lineno)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let piece = inner[start..].trim();
+    if !piece.is_empty() {
+        items.push(parse_value(piece, lineno)?);
+    }
+    Ok(Value::Array(items))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(
+            r#"
+            top = 1
+            [model]
+            size = "base"      # comment
+            lr = 1.5e-3
+            layers = 6
+            tied = true
+            dims = [1, 2, 3]
+            [noise.lognormal]
+            mu = -1.84
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.int_or("top", 0), 1);
+        assert_eq!(doc.str_or("model.size", ""), "base");
+        assert!((doc.float_or("model.lr", 0.0) - 1.5e-3).abs() < 1e-12);
+        assert_eq!(doc.int_or("model.layers", 0), 6);
+        assert!(doc.bool_or("model.tied", false));
+        assert_eq!(doc.float_or("noise.lognormal.mu", 0.0), -1.84);
+        let arr = doc.get("model.dims").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+    }
+
+    #[test]
+    fn int_literal_as_float() {
+        let doc = Document::parse("x = 3").unwrap();
+        assert_eq!(doc.float_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside() {
+        let doc = Document::parse(r#"s = "a#b\n\"q\"""#).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b\n\"q\"");
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = Document::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.int_or("n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(Document::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_lines_have_numbers() {
+        let e = Document::parse("ok = 1\nnonsense").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut doc = Document::parse("[a]\nb = 1").unwrap();
+        doc.set_raw("a.b=2").unwrap();
+        doc.set_raw("c.d=\"x\"").unwrap();
+        assert_eq!(doc.int_or("a.b", 0), 2);
+        assert_eq!(doc.str_or("c.d", ""), "x");
+        assert!(doc.set_raw("nope").is_err());
+    }
+
+    #[test]
+    fn empty_and_missing() {
+        let doc = Document::parse("").unwrap();
+        assert_eq!(doc.int_or("missing", 7), 7);
+        assert!(doc.require_str("missing").is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! The DropCompute coordinator: decentralized calibration + scale runs.
+//!
+//! [`decentralized_calibration`] demonstrates the paper's key systems
+//! property (§2 "Redundancy methods"): unlike parameter-server designs,
+//! no central entity decides who participates. Each worker thread
+//! measures its own latencies, the empirical distributions are exchanged
+//! with an AllGather over the real ring collective, and every worker
+//! independently runs the same argmax (Algorithm 2) — consensus on
+//! `tau*` follows from determinism, which the tests assert bitwise.
+//!
+//! [`ScaleRun`] drives the throughput-vs-N sweeps behind Figs 1/13/14.
+
+use std::thread;
+
+use crate::analysis::{choose_threshold, ThresholdChoice};
+use crate::collective::{all_gather_varlen, Communicator};
+use crate::config::ClusterConfig;
+use crate::sim::{ClusterSim, Trace};
+
+/// One worker's calibration measurements: its own micro-batch latencies
+/// for `I` iterations (what it would measure with real clocks).
+#[derive(Debug, Clone)]
+pub struct WorkerSamples {
+    pub worker: usize,
+    /// `[iter][accum]` latencies flattened row-major.
+    pub latencies: Vec<f64>,
+    pub iters: usize,
+    pub accums: usize,
+    pub comm: Vec<f64>,
+}
+
+impl WorkerSamples {
+    /// Extract worker `n`'s view from a recorded trace.
+    pub fn from_trace(trace: &Trace, n: usize) -> Self {
+        let mut latencies = Vec::with_capacity(trace.iters * trace.accums);
+        for i in 0..trace.iters {
+            for m in 0..trace.accums {
+                latencies.push(trace.get(i, n, m));
+            }
+        }
+        Self {
+            worker: n,
+            latencies,
+            iters: trace.iters,
+            accums: trace.accums,
+            comm: trace.comm.clone(),
+        }
+    }
+}
+
+/// Rebuild the full trace from all workers' gathered samples.
+fn assemble_trace(all: &[Vec<f64>], iters: usize, accums: usize, comm: &[f64])
+    -> Trace
+{
+    let workers = all.len();
+    let mut trace = Trace::new(iters, workers, accums);
+    for (n, lat) in all.iter().enumerate() {
+        assert_eq!(lat.len(), iters * accums, "worker {n} sample count");
+        for i in 0..iters {
+            for m in 0..accums {
+                trace.set(i, n, m, lat[i * accums + m]);
+            }
+        }
+    }
+    trace.comm.copy_from_slice(&comm[..iters]);
+    trace
+}
+
+/// Run Algorithm 2 decentralized: spawn one thread per worker, gather
+/// the latency distributions over the ring collective, and let every
+/// worker compute `tau*` independently. Returns each worker's choice
+/// (the caller can assert consensus; the tests do).
+pub fn decentralized_calibration(
+    trace: &Trace,
+    grid: usize,
+) -> Vec<ThresholdChoice> {
+    let n = trace.workers;
+    let comms = Communicator::ring(n);
+    let samples: Vec<WorkerSamples> =
+        (0..n).map(|w| WorkerSamples::from_trace(trace, w)).collect();
+    let iters = trace.iters;
+    let accums = trace.accums;
+    let comm_times = trace.comm.clone();
+
+    let handles: Vec<_> = comms
+        .into_iter()
+        .zip(samples)
+        .map(|(comm, mine)| {
+            let comm_times = comm_times.clone();
+            thread::spawn(move || {
+                // 1. synchronize empirical distributions (AllGather)
+                let all = all_gather_varlen(&comm, mine.latencies);
+                // 2. every worker rebuilds the same global view...
+                let trace = assemble_trace(&all, iters, accums, &comm_times);
+                // 3. ...and runs the same deterministic argmax.
+                choose_threshold(&trace, grid)
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("worker thread")).collect()
+}
+
+/// A throughput measurement at one cluster size (a Fig 1 data point).
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub workers: usize,
+    /// Micro-batches per second, baseline synchronous.
+    pub baseline_throughput: f64,
+    /// Micro-batches per second with DropCompute at its auto threshold
+    /// (dropped work excluded — this is *useful* throughput).
+    pub dropcompute_throughput: f64,
+    /// The auto-chosen threshold.
+    pub tau: f64,
+    /// Observed drop rate at that threshold.
+    pub drop_rate: f64,
+    /// Ideal linear scaling reference.
+    pub linear_throughput: f64,
+}
+
+/// Sweep cluster sizes and measure baseline vs DropCompute throughput —
+/// the engine behind Fig 1 (left), Fig 13 and Fig 14.
+pub struct ScaleRun {
+    pub base: ClusterConfig,
+    pub calibration_iters: usize,
+    pub measure_iters: usize,
+    pub grid: usize,
+    pub seed: u64,
+}
+
+impl Default for ScaleRun {
+    fn default() -> Self {
+        Self {
+            base: ClusterConfig::default(),
+            calibration_iters: 15,
+            measure_iters: 60,
+            grid: 128,
+            seed: 0xF16_1,
+        }
+    }
+}
+
+impl ScaleRun {
+    /// Single-worker iteration time (the linear-scaling anchor).
+    fn single_worker_iter_time(&self) -> f64 {
+        let mut cfg = self.base.clone();
+        cfg.workers = 1;
+        let mut sim = ClusterSim::new(&cfg, self.seed ^ 1);
+        sim.mean_iter_time(self.measure_iters, None)
+    }
+
+    /// Measure one cluster size.
+    pub fn point(&self, workers: usize) -> ScalePoint {
+        let mut cfg = self.base.clone();
+        cfg.workers = workers;
+        let m = cfg.accumulations as f64;
+
+        // baseline
+        let mut sim = ClusterSim::new(&cfg, self.seed);
+        let t_base = sim.mean_iter_time(self.measure_iters, None);
+        let baseline_throughput = workers as f64 * m / t_base;
+
+        // DropCompute: calibrate (Algorithm 2) then measure
+        let mut cal_sim = ClusterSim::new(&cfg, self.seed ^ 2);
+        let trace = cal_sim.record_trace(self.calibration_iters);
+        let choice = choose_threshold(&trace, self.grid);
+        let mut dc_sim = ClusterSim::new(&cfg, self.seed ^ 3);
+        let mut t_sum = 0.0;
+        let mut completed = 0usize;
+        for _ in 0..self.measure_iters {
+            let out = dc_sim.step(Some(choice.tau));
+            t_sum += out.iter_time;
+            completed += out.total_completed();
+        }
+        let dropcompute_throughput = completed as f64 / t_sum;
+        let drop_rate =
+            1.0 - completed as f64 / (self.measure_iters * workers) as f64 / m;
+
+        let single = self.single_worker_iter_time();
+        ScalePoint {
+            workers,
+            baseline_throughput,
+            dropcompute_throughput,
+            tau: choice.tau,
+            drop_rate,
+            linear_throughput: workers as f64 * m / single,
+        }
+    }
+
+    /// Sweep a worker grid.
+    pub fn sweep(&self, ns: &[usize]) -> Vec<ScalePoint> {
+        ns.iter().map(|&n| self.point(n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NoiseKind;
+
+    fn noisy_cfg() -> ClusterConfig {
+        ClusterConfig {
+            workers: 12,
+            accumulations: 12,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            comm_latency: 0.5,
+            noise: NoiseKind::PaperLogNormal {
+                mu: 4.0,
+                sigma: 1.0,
+                alpha: 2.0 * (4.5f64).exp(),
+                beta: 5.5,
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn decentralized_consensus_on_tau() {
+        let mut sim = ClusterSim::new(&noisy_cfg(), 77);
+        let trace = sim.record_trace(8);
+        let choices = decentralized_calibration(&trace, 64);
+        assert_eq!(choices.len(), 12);
+        let tau0 = choices[0].tau;
+        for c in &choices {
+            assert_eq!(
+                c.tau.to_bits(),
+                tau0.to_bits(),
+                "workers disagree on tau*"
+            );
+        }
+        // and the consensus equals the centralized computation
+        let central = choose_threshold(&trace, 64);
+        assert_eq!(central.tau.to_bits(), tau0.to_bits());
+    }
+
+    #[test]
+    fn scale_run_shapes_match_paper() {
+        // Fig 1's qualitative content: under heavy-tailed noise the
+        // baseline falls away from linear scaling as N grows and
+        // DropCompute recovers a chunk of it.
+        let run = ScaleRun {
+            base: noisy_cfg(),
+            calibration_iters: 10,
+            measure_iters: 30,
+            grid: 64,
+            seed: 5,
+        };
+        let pts = run.sweep(&[4, 32, 96]);
+        for p in &pts {
+            assert!(p.baseline_throughput <= p.linear_throughput * 1.02);
+            assert!(
+                p.dropcompute_throughput >= p.baseline_throughput * 0.98,
+                "N={}: dc {} vs base {}",
+                p.workers,
+                p.dropcompute_throughput,
+                p.baseline_throughput
+            );
+            assert!(p.drop_rate >= 0.0 && p.drop_rate < 0.5);
+        }
+        // scaling efficiency of the baseline degrades with N
+        let eff =
+            |p: &ScalePoint| p.baseline_throughput / p.linear_throughput;
+        assert!(
+            eff(&pts[2]) < eff(&pts[0]),
+            "baseline efficiency should degrade: {:?}",
+            pts.iter().map(eff).collect::<Vec<_>>()
+        );
+        // DropCompute's advantage grows with N
+        let adv = |p: &ScalePoint| {
+            p.dropcompute_throughput / p.baseline_throughput
+        };
+        assert!(adv(&pts[2]) > adv(&pts[0]) * 0.98);
+    }
+}

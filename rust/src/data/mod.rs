@@ -1,0 +1,16 @@
+//! Synthetic data substrates.
+//!
+//! * [`corpus`] — a Zipf–Markov language corpus with log-normal document
+//!   lengths (the heterogeneity that motivates compute variance, App. A);
+//! * [`loader`] — per-worker sharded micro-batch loader with a resample
+//!   pool for dropped samples (§4.5's third compensation method);
+//! * [`classification`] — synthetic classification task for the
+//!   ResNet-50 generalization analogue (Fig 10/11).
+
+pub mod classification;
+pub mod corpus;
+pub mod loader;
+
+pub use classification::ClassificationTask;
+pub use corpus::MarkovCorpus;
+pub use loader::{MicroBatch, ShardedLoader};

@@ -1,0 +1,27 @@
+//! DropCompute: robust distributed synchronous training via compute
+//! variance reduction (NeurIPS 2023) — reference reproduction.
+//!
+//! Layer 3 (this crate): the distributed-training coordinator — worker
+//! pool, decentralized AllReduce, gradient-accumulation scheduler with
+//! the DropCompute compute-threshold (Algorithm 1), automatic threshold
+//! selection (Algorithm 2), Local-SGD mode, optimizers, data pipeline,
+//! discrete-event cluster simulator and the analytical runtime model
+//! (Eqs. 4/5/6/11).
+//!
+//! Layers 2/1 (build-time python): JAX transformer fwd/bwd calling
+//! Pallas kernels, AOT-lowered to HLO text loaded by [`runtime`].
+
+pub mod analysis;
+pub mod cli;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod train;
+pub mod util;

@@ -1,0 +1,251 @@
+//! `dropcompute` — launcher CLI.
+//!
+//! Subcommands:
+//!   train        pretrain a model with/without DropCompute
+//!   local-sgd    Local-SGD (+ optional DropCompute) training
+//!   simulate     virtual-clock cluster timing (no real compute)
+//!   tune         run Algorithm 2 on a simulated trace, print the sweep
+//!   scale        throughput-vs-N sweep (Fig 1 style)
+//!   analyze      closed-form model: E[T], E[M~], S_eff(tau)
+//!
+//! Shared flags: `--config <file.toml>`, repeated `--set a.b=v`,
+//! `--out <dir>` for CSV/JSON dumps, `--quiet`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use dropcompute::analysis::{self, Setting};
+use dropcompute::cli::{Args, Spec};
+use dropcompute::config::Config;
+use dropcompute::coordinator::ScaleRun;
+use dropcompute::report::{f, pct, Table};
+use dropcompute::sim::ClusterSim;
+use dropcompute::train::{LocalSgdTrainer, Trainer};
+use dropcompute::util::Result;
+
+const USAGE: &str = "\
+dropcompute — DropCompute (NeurIPS 2023) reproduction
+
+USAGE: dropcompute <SUBCOMMAND> [--config file.toml] [--set a.b=v]... [opts]
+
+SUBCOMMANDS:
+  train       pretrain with/without DropCompute   [--out dir]
+  local-sgd   Local-SGD + DropCompute             [--periods N] [--tau T]
+  simulate    timing-only cluster simulation      [--iters N] [--tau T]
+  tune        Algorithm 2 threshold sweep         [--iters N]
+  scale       throughput vs N sweep               [--workers 8,16,...]
+  analyze     closed-form E[T], E[M~], S_eff      [--tau T]
+
+Config keys: see configs/*.toml and DESIGN.md.";
+
+fn main() -> ExitCode {
+    let spec = Spec::new()
+        .subcommands(&["train", "local-sgd", "simulate", "tune", "scale", "analyze"])
+        .value_keys(&[
+            "config", "set", "out", "iters", "tau", "periods", "workers",
+            "grid",
+        ]);
+    let args = match spec.parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if args.flag("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    if args.flag("quiet") {
+        dropcompute::util::set_verbosity(0);
+    }
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = args.build_config()?;
+    match args.subcommand.as_deref().unwrap() {
+        "train" => cmd_train(args, &cfg),
+        "local-sgd" => cmd_local_sgd(args, &cfg),
+        "simulate" => cmd_simulate(args, &cfg),
+        "tune" => cmd_tune(args, &cfg),
+        "scale" => cmd_scale(args, &cfg),
+        "analyze" => cmd_analyze(args, &cfg),
+        other => {
+            eprintln!("unknown subcommand `{other}`\n{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
+    let mut trainer = Trainer::new(cfg)?;
+    let log = trainer.train()?;
+    let mut t = Table::new(
+        format!("train {} ({} workers)", cfg.train.model_size, cfg.cluster.workers),
+        &["metric", "value"],
+    );
+    t.row(vec!["steps".into(), log.steps.len().to_string()]);
+    t.row(vec!["final train loss".into(), f(log.final_loss(), 4)]);
+    t.row(vec![
+        "final eval loss".into(),
+        f(log.summary["final_eval_loss"], 4),
+    ]);
+    t.row(vec!["mean drop rate".into(), pct(log.mean_drop_rate())]);
+    t.row(vec!["virtual time (s)".into(), f(log.total_virtual_time(), 1)]);
+    t.row(vec![
+        "throughput (microbatch/s)".into(),
+        f(log.throughput(), 2),
+    ]);
+    if let Some(tau) = trainer.threshold {
+        t.row(vec!["threshold tau*".into(), f(tau, 3)]);
+    }
+    t.print();
+    if let Some(out) = args.get("out") {
+        let dir = PathBuf::from(out);
+        log.write_csv(&dir.join("train.csv"))?;
+        log.write_json(&dir.join("train.json"))?;
+        println!("wrote {}/train.{{csv,json}}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_local_sgd(args: &Args, cfg: &Config) -> Result<()> {
+    let periods = args.usize_or("periods", 10)?;
+    let tau = args.f64_or("tau", 0.0)?;
+    let threshold = if tau > 0.0 { Some(tau) } else { None };
+    let mut trainer = LocalSgdTrainer::new(cfg, threshold)?;
+    let log = trainer.train(periods)?;
+    let mut t = Table::new("local-sgd", &["metric", "value"]);
+    t.row(vec!["periods".into(), periods.to_string()]);
+    t.row(vec!["H (local steps)".into(), cfg.train.local_sgd_period.to_string()]);
+    t.row(vec!["final loss".into(), f(log.final_loss(), 4)]);
+    t.row(vec!["drop rate".into(), pct(log.mean_drop_rate())]);
+    t.row(vec!["virtual time (s)".into(), f(log.total_virtual_time(), 1)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
+    let iters = args.usize_or("iters", 100)?;
+    let tau = args.f64_or("tau", 0.0)?;
+    let threshold = if tau > 0.0 { Some(tau) } else { None };
+    let mut sim = ClusterSim::new(&cfg.cluster, cfg.train.seed);
+    let mut iter_w = dropcompute::stats::Welford::new();
+    let mut completed = 0usize;
+    for _ in 0..iters {
+        let out = sim.step(threshold);
+        iter_w.push(out.iter_time);
+        completed += out.total_completed();
+    }
+    let scheduled = iters * cfg.cluster.workers * cfg.cluster.accumulations;
+    let mut t = Table::new(
+        format!("simulate N={} M={}", cfg.cluster.workers, cfg.cluster.accumulations),
+        &["metric", "value"],
+    );
+    t.row(vec!["iterations".into(), iters.to_string()]);
+    t.row(vec!["mean iter time".into(), f(iter_w.mean(), 3)]);
+    t.row(vec!["iter time std".into(), f(iter_w.std(), 3)]);
+    t.row(vec!["min/max".into(), format!("{:.3}/{:.3}", iter_w.min(), iter_w.max())]);
+    t.row(vec![
+        "drop rate".into(),
+        pct(1.0 - completed as f64 / scheduled as f64),
+    ]);
+    t.row(vec![
+        "throughput (mb/s)".into(),
+        f(completed as f64 / (iter_w.mean() * iters as f64), 2),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_tune(args: &Args, cfg: &Config) -> Result<()> {
+    let iters = args.usize_or("iters", cfg.dropcompute.calibration_iters)?;
+    let grid = args.usize_or("grid", cfg.dropcompute.search_points)?;
+    let mut sim = ClusterSim::new(&cfg.cluster, cfg.train.seed);
+    let trace = sim.record_trace(iters);
+    let choice = analysis::choose_threshold(&trace, grid);
+    let mut t = Table::new(
+        "Algorithm 2 threshold sweep",
+        &["tau", "S_eff", "completion", "step speedup", "drop"],
+    );
+    let stride = (choice.sweep.len() / 16).max(1);
+    for p in choice.sweep.iter().step_by(stride) {
+        t.row(vec![
+            f(p.tau, 3),
+            f(p.effective_speedup, 4),
+            pct(p.completion_rate),
+            f(p.step_speedup, 4),
+            pct(p.drop_rate),
+        ]);
+    }
+    t.print();
+    println!(
+        "tau* = {:.3}  predicted speedup {:.4}  completion {:.1}%",
+        choice.tau,
+        choice.speedup,
+        choice.completion_rate * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_scale(args: &Args, cfg: &Config) -> Result<()> {
+    let workers: Vec<usize> = args
+        .str_or("workers", "8,16,32,64,128,200")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let run = ScaleRun { base: cfg.cluster.clone(), ..Default::default() };
+    let pts = run.sweep(&workers);
+    let mut t = Table::new(
+        "scale sweep (Fig 1 style)",
+        &["N", "baseline mb/s", "DropCompute mb/s", "linear", "tau*", "drop"],
+    );
+    for p in &pts {
+        t.row(vec![
+            p.workers.to_string(),
+            f(p.baseline_throughput, 1),
+            f(p.dropcompute_throughput, 1),
+            f(p.linear_throughput, 1),
+            f(p.tau, 2),
+            pct(p.drop_rate),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args, cfg: &Config) -> Result<()> {
+    let model = dropcompute::sim::LatencyModel::from_config(&cfg.cluster);
+    let s = Setting {
+        workers: cfg.cluster.workers,
+        accums: cfg.cluster.accumulations,
+        mu: model.mean(),
+        sigma2: model.variance(),
+        comm: cfg.cluster.comm_latency,
+    };
+    let e_t = s.expected_step_time();
+    let (tau_star, speed) = s.optimal_threshold(512);
+    let tau = args.f64_or("tau", tau_star)?;
+    let mut t = Table::new("analytical model (Eq. 4/5/11)", &["quantity", "value"]);
+    t.row(vec!["mu (microbatch mean)".into(), f(s.mu, 4)]);
+    t.row(vec!["sigma^2".into(), f(s.sigma2, 5)]);
+    t.row(vec!["E[T] baseline".into(), f(e_t, 3)]);
+    t.row(vec!["E[T] single worker".into(), f(s.accums as f64 * s.mu, 3)]);
+    t.row(vec!["E[M~](tau)".into(), f(s.expected_completed(tau), 3)]);
+    t.row(vec!["S_eff(tau)".into(), f(s.effective_speedup(tau), 4)]);
+    t.row(vec!["tau*".into(), f(tau_star, 3)]);
+    t.row(vec!["S_eff(tau*)".into(), f(speed, 4)]);
+    t.row(vec![
+        "drop rate at tau*".into(),
+        pct(s.drop_rate(tau_star)),
+    ]);
+    t.print();
+    Ok(())
+}

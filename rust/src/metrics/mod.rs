@@ -1,0 +1,234 @@
+//! Run metrics: step records, counters, CSV/JSON export.
+//!
+//! Every trainer/simulator run produces a [`RunLog`]; the report layer
+//! and EXPERIMENTS.md consume its CSV/JSON output.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::Result;
+
+/// One training/simulation step record.
+#[derive(Debug, Clone, Default)]
+pub struct StepRecord {
+    pub step: usize,
+    /// Virtual (simulated) time at the *end* of this step, seconds.
+    pub virtual_time: f64,
+    /// Wall-clock spent on real compute this step, seconds.
+    pub wall_time: f64,
+    /// Iteration time (max worker compute + comm), seconds.
+    pub iter_time: f64,
+    /// Micro-batches completed, summed over workers.
+    pub completed_microbatches: usize,
+    /// Micro-batches scheduled (N*M).
+    pub scheduled_microbatches: usize,
+    pub loss: f64,
+    pub lr: f64,
+    pub grad_norm: f64,
+}
+
+impl StepRecord {
+    pub fn drop_rate(&self) -> f64 {
+        if self.scheduled_microbatches == 0 {
+            0.0
+        } else {
+            1.0 - self.completed_microbatches as f64
+                / self.scheduled_microbatches as f64
+        }
+    }
+}
+
+/// Full run log: steps + free-form scalar summary fields.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub steps: Vec<StepRecord>,
+    pub summary: BTreeMap<String, f64>,
+    pub label: String,
+}
+
+impl RunLog {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, rec: StepRecord) {
+        self.steps.push(rec);
+    }
+
+    pub fn set_summary(&mut self, key: &str, value: f64) {
+        self.summary.insert(key.to_string(), value);
+    }
+
+    pub fn total_virtual_time(&self) -> f64 {
+        self.steps.last().map(|s| s.virtual_time).unwrap_or(0.0)
+    }
+
+    pub fn mean_iter_time(&self) -> f64 {
+        if self.steps.is_empty() {
+            return f64::NAN;
+        }
+        self.steps.iter().map(|s| s.iter_time).sum::<f64>()
+            / self.steps.len() as f64
+    }
+
+    pub fn mean_drop_rate(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.drop_rate()).sum::<f64>()
+            / self.steps.len() as f64
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.steps.last().map(|s| s.loss).unwrap_or(f64::NAN)
+    }
+
+    /// Micro-batches per virtual second (the paper's throughput metric).
+    pub fn throughput(&self) -> f64 {
+        let t = self.total_virtual_time();
+        if t <= 0.0 {
+            return f64::NAN;
+        }
+        self.steps
+            .iter()
+            .map(|s| s.completed_microbatches as f64)
+            .sum::<f64>()
+            / t
+    }
+
+    /// Write steps as CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "step,virtual_time,wall_time,iter_time,completed,scheduled,drop_rate,loss,lr,grad_norm"
+        )?;
+        for s in &self.steps {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6},{:.8},{:.6}",
+                s.step,
+                s.virtual_time,
+                s.wall_time,
+                s.iter_time,
+                s.completed_microbatches,
+                s.scheduled_microbatches,
+                s.drop_rate(),
+                s.loss,
+                s.lr,
+                s.grad_norm
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Minimal JSON (summary + per-step arrays) without a JSON library.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"label\":\"{}\",", escape(&self.label)));
+        out.push_str("\"summary\":{");
+        let items: Vec<String> = self
+            .summary
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", escape(k), fmt_f64(*v)))
+            .collect();
+        out.push_str(&items.join(","));
+        out.push_str("},");
+        let col = |f: &dyn Fn(&StepRecord) -> String| -> String {
+            self.steps.iter().map(|s| f(s)).collect::<Vec<_>>().join(",")
+        };
+        out.push_str(&format!(
+            "\"step\":[{}],\"virtual_time\":[{}],\"iter_time\":[{}],\"loss\":[{}],\"drop_rate\":[{}]",
+            col(&|s| s.step.to_string()),
+            col(&|s| fmt_f64(s.virtual_time)),
+            col(&|s| fmt_f64(s.iter_time)),
+            col(&|s| fmt_f64(s.loss)),
+            col(&|s| fmt_f64(s.drop_rate())),
+        ));
+        out.push('}');
+        out
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log() -> RunLog {
+        let mut log = RunLog::new("test");
+        for i in 0..5 {
+            log.push(StepRecord {
+                step: i,
+                virtual_time: (i + 1) as f64,
+                iter_time: 1.0,
+                completed_microbatches: 9,
+                scheduled_microbatches: 10,
+                loss: 5.0 - i as f64 * 0.5,
+                ..Default::default()
+            });
+        }
+        log.set_summary("speedup", 1.25);
+        log
+    }
+
+    #[test]
+    fn drop_rate_and_throughput() {
+        let log = sample_log();
+        assert!((log.mean_drop_rate() - 0.1).abs() < 1e-12);
+        assert!((log.throughput() - 9.0).abs() < 1e-12);
+        assert_eq!(log.final_loss(), 3.0);
+        assert_eq!(log.mean_iter_time(), 1.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let log = sample_log();
+        let dir = std::env::temp_dir().join("dc_metrics_test");
+        let path = dir.join("run.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,"));
+        assert_eq!(text.lines().count(), 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = sample_log().to_json();
+        assert!(j.contains("\"label\":\"test\""));
+        assert!(j.contains("\"speedup\":1.25"));
+        assert!(j.contains("\"loss\":[5,4.5,4,3.5,3]"));
+    }
+
+    #[test]
+    fn empty_log_degenerate() {
+        let log = RunLog::new("empty");
+        assert_eq!(log.total_virtual_time(), 0.0);
+        assert!(log.mean_iter_time().is_nan());
+        assert!(log.throughput().is_nan());
+    }
+}

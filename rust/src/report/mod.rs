@@ -1,0 +1,131 @@
+//! Paper-style table/figure rendering: aligned text rows shared by the
+//! benches, so every experiment prints in a uniform, diffable format.
+
+/// A simple aligned-column table printer.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format helper: fixed-precision float cell.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Format helper: percentage cell.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+/// Render a simple ASCII series plot (x label, y values as bars) for
+/// terminal-friendly "figures".
+pub fn ascii_series(title: &str, points: &[(String, f64)], width: usize) -> String {
+    let max = points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let min = points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min).min(0.0);
+    let span = (max - min).max(1e-12);
+    let label_w = points.iter().map(|p| p.0.len()).max().unwrap_or(0);
+    let mut out = format!("-- {title} --\n");
+    for (label, v) in points {
+        let bars = (((v - min) / span) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:>w$} | {}{} {v:.4}\n",
+            label,
+            "#".repeat(bars),
+            " ".repeat(width.saturating_sub(bars)),
+            w = label_w
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["n", "speedup"]);
+        t.row(vec!["8".into(), f(1.05, 2)]);
+        t.row(vec!["128".into(), f(1.31, 2)]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("1.05"));
+        let lines: Vec<&str> = s.lines().collect();
+        // all data lines same width
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn pct_and_f() {
+        assert_eq!(pct(0.105), "10.5%");
+        assert_eq!(f(1.23456, 2), "1.23");
+    }
+
+    #[test]
+    fn ascii_series_shape() {
+        let s = ascii_series(
+            "t",
+            &[("a".into(), 1.0), ("bb".into(), 2.0)],
+            10,
+        );
+        assert!(s.contains("-- t --"));
+        assert!(s.lines().count() == 3);
+    }
+}

@@ -1,0 +1,213 @@
+//! Artifact manifests: what `python/compile/aot.py` emitted.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::{Error, Result};
+
+use super::json::Json;
+
+/// Initialization kind for one parameter tensor (mirrors model.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    Normal,
+    Zeros,
+    Ones,
+}
+
+/// One parameter tensor's spec.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+    pub scale: f64,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Whether this tensor gets weight decay (LN/bias tensors do not —
+    /// the standard transformer recipe, also what LAMB/BERT uses).
+    pub fn decayed(&self) -> bool {
+        !(self.name.ends_with(".bias")
+            || self.name.ends_with(".scale")
+            || self.name.contains("ln"))
+    }
+}
+
+/// Model hyper-parameters recorded in the manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub micro_batch: usize,
+    pub d_ff: usize,
+}
+
+/// A size directory under `artifacts/`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub param_count: usize,
+    pub flops_per_microbatch: f64,
+    pub params: Vec<ParamSpec>,
+    pub grad_file: PathBuf,
+    pub loss_file: PathBuf,
+}
+
+impl Manifest {
+    /// Load `artifacts/<size>/manifest.json`.
+    pub fn load(artifacts_dir: &Path, size: &str) -> Result<Self> {
+        let dir = artifacts_dir.join(size);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let req_str = |keys: &[&str]| -> Result<String> {
+            j.path(keys)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| {
+                    Error::Runtime(format!("manifest missing {}", keys.join(".")))
+                })
+        };
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| Error::Runtime("manifest missing config".into()))?;
+        let dim = |k: &str| -> usize {
+            cfg.get(k).and_then(Json::as_usize).unwrap_or(0)
+        };
+        let mut params = Vec::new();
+        for p in j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Runtime("manifest missing params".into()))?
+        {
+            let name = p
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Runtime("param missing name".into()))?
+                .to_string();
+            let shape: Vec<usize> = p
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Runtime("param missing shape".into()))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let init = match p.get("init").and_then(Json::as_str) {
+                Some("normal") => InitKind::Normal,
+                Some("zeros") => InitKind::Zeros,
+                Some("ones") => InitKind::Ones,
+                other => {
+                    return Err(Error::Runtime(format!(
+                        "param {name}: unknown init {other:?}"
+                    )))
+                }
+            };
+            let scale = p.get("scale").and_then(Json::as_f64).unwrap_or(0.0);
+            params.push(ParamSpec { name, shape, init, scale });
+        }
+        let manifest = Manifest {
+            name: req_str(&["name"])?,
+            grad_file: dir.join(req_str(&["entrypoints", "grad", "file"])?),
+            loss_file: dir.join(req_str(&["entrypoints", "loss", "file"])?),
+            dir,
+            dims: ModelDims {
+                vocab: dim("vocab"),
+                d_model: dim("d_model"),
+                n_layers: dim("n_layers"),
+                n_heads: dim("n_heads"),
+                seq_len: dim("seq_len"),
+                micro_batch: dim("micro_batch"),
+                d_ff: dim("d_ff"),
+            },
+            param_count: j
+                .get("param_count")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            flops_per_microbatch: j
+                .get("flops_per_microbatch")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            params,
+        };
+        // sanity: spec'd elements must sum to param_count
+        let total: usize = manifest.params.iter().map(ParamSpec::numel).sum();
+        if manifest.param_count != 0 && total != manifest.param_count {
+            return Err(Error::Runtime(format!(
+                "manifest param_count {} != sum of shapes {total}",
+                manifest.param_count
+            )));
+        }
+        Ok(manifest)
+    }
+
+    /// Tokens-per-micro-batch (batch * seq).
+    pub fn tokens_per_microbatch(&self) -> usize {
+        self.dims.micro_batch * self.dims.seq_len
+    }
+
+    /// Gradient bytes exchanged per AllReduce (f32).
+    pub fn grad_bytes(&self) -> f64 {
+        4.0 * self.param_count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from("artifacts")
+    }
+
+    #[test]
+    fn loads_test_manifest() {
+        let m = Manifest::load(&artifacts_dir(), "test").unwrap();
+        assert_eq!(m.name, "test");
+        assert_eq!(m.dims.vocab, 64);
+        assert_eq!(m.dims.seq_len, 16);
+        assert!(m.param_count > 0);
+        assert!(m.grad_file.exists(), "{:?}", m.grad_file);
+        assert!(m.loss_file.exists());
+        assert_eq!(m.params[0].name, "tok_embed");
+        assert_eq!(m.params[0].shape, vec![64, 32]);
+        assert_eq!(m.params[0].init, InitKind::Normal);
+    }
+
+    #[test]
+    fn decay_mask_excludes_norm_and_bias() {
+        let m = Manifest::load(&artifacts_dir(), "test").unwrap();
+        let decayed: Vec<&str> = m
+            .params
+            .iter()
+            .filter(|p| p.decayed())
+            .map(|p| p.name.as_str())
+            .collect();
+        assert!(decayed.contains(&"tok_embed"));
+        for p in &m.params {
+            if p.name.contains("ln") || p.name.ends_with(".bias") {
+                assert!(!p.decayed(), "{}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_size_errors_helpfully() {
+        let e = Manifest::load(&artifacts_dir(), "nonexistent").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"), "{e}");
+    }
+}

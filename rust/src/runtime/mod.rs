@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! * [`json`] — manifest parsing substrate;
+//! * [`artifacts`] — manifest schema (`artifacts/<size>/manifest.json`);
+//! * [`pjrt`] — compile-once/run-many executor with device-resident
+//!   parameter buffers.
+
+pub mod artifacts;
+pub mod json;
+pub mod pjrt;
+
+pub use artifacts::{InitKind, Manifest, ModelDims, ParamSpec};
+pub use pjrt::{GradOutput, ModelRuntime};

@@ -1,0 +1,233 @@
+//! PJRT execution: load HLO-text artifacts, compile once, run many.
+//!
+//! The interchange is HLO *text* (see `python/compile/aot.py`); the
+//! executor keeps parameters resident as device buffers between
+//! micro-batches of the same step (`execute_b`), so the per-micro-batch
+//! upload is just the token batch.
+
+use std::path::Path;
+
+use crate::util::{Error, Result};
+
+use super::artifacts::Manifest;
+
+/// Shared PJRT CPU client + compiled entry points for one model size.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    grad_exe: xla::PjRtLoadedExecutable,
+    loss_exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    /// Device-resident parameter buffers (refreshed once per step).
+    param_buffers: Option<Vec<xla::PjRtBuffer>>,
+}
+
+/// Result of one micro-batch gradient execution.
+#[derive(Debug)]
+pub struct GradOutput {
+    pub loss: f32,
+    /// Flat per-tensor gradients, same order as `manifest.params`.
+    pub grads: Vec<Vec<f32>>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path)
+    -> Result<xla::PjRtLoadedExecutable>
+{
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl ModelRuntime {
+    /// Load and compile the artifacts for `size` under `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path, size: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir, size)?;
+        let client = xla::PjRtClient::cpu()?;
+        let grad_exe = compile(&client, &manifest.grad_file)?;
+        let loss_exe = compile(&client, &manifest.loss_file)?;
+        Ok(Self { client, grad_exe, loss_exe, manifest, param_buffers: None })
+    }
+
+    /// Upload parameters once; subsequent `grad`/`loss` calls reuse the
+    /// device buffers until the next `upload_params`.
+    pub fn upload_params(&mut self, params: &[Vec<f32>]) -> Result<()> {
+        assert_eq!(params.len(), self.manifest.params.len(), "param arity");
+        let device = &self.client.devices()[0];
+        let mut bufs = Vec::with_capacity(params.len());
+        for (spec, data) in self.manifest.params.iter().zip(params) {
+            assert_eq!(spec.numel(), data.len(), "param {} size", spec.name);
+            let dims: Vec<usize> = spec.shape.clone();
+            bufs.push(self.client.buffer_from_host_buffer(
+                data,
+                &dims,
+                Some(device),
+            )?);
+        }
+        self.param_buffers = Some(bufs);
+        Ok(())
+    }
+
+    fn token_buffer(&self, tokens: &[i32]) -> Result<xla::PjRtBuffer> {
+        let dims =
+            [self.manifest.dims.micro_batch, self.manifest.dims.seq_len];
+        assert_eq!(tokens.len(), dims[0] * dims[1], "token batch size");
+        let device = &self.client.devices()[0];
+        Ok(self.client.buffer_from_host_buffer(tokens, &dims, Some(device))?)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        tokens: &[i32],
+    ) -> Result<Vec<xla::Literal>> {
+        let params = self.param_buffers.as_ref().ok_or_else(|| {
+            Error::Runtime("upload_params before execution".into())
+        })?;
+        let tok = self.token_buffer(tokens)?;
+        let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+        args.push(&tok);
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// One micro-batch forward+backward: `(loss, grads...)`.
+    pub fn grad(&self, tokens: &[i32]) -> Result<GradOutput> {
+        let outs = self.run(&self.grad_exe, tokens)?;
+        if outs.len() != 1 + self.manifest.params.len() {
+            return Err(Error::Runtime(format!(
+                "grad arity {} != 1+{}",
+                outs.len(),
+                self.manifest.params.len()
+            )));
+        }
+        let mut it = outs.into_iter();
+        let loss = it.next().unwrap().to_vec::<f32>()?[0];
+        let mut grads = Vec::with_capacity(self.manifest.params.len());
+        for lit in it {
+            grads.push(lit.to_vec::<f32>()?);
+        }
+        Ok(GradOutput { loss, grads })
+    }
+
+    /// Evaluation loss of one micro-batch.
+    pub fn loss(&self, tokens: &[i32]) -> Result<f32> {
+        let outs = self.run(&self.loss_exe, tokens)?;
+        Ok(outs[0].to_vec::<f32>()?[0])
+    }
+
+    /// UNOPTIMIZED reference path: marshal parameters as host literals on
+    /// *every* call (no device-resident buffers). Kept for the §Perf
+    /// before/after comparison in `benches/perf_hotpaths.rs` — the
+    /// buffered path amortizes the upload across a step's micro-batches.
+    pub fn grad_unbuffered(
+        &self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+    ) -> Result<GradOutput> {
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(params.len() + 1);
+        for (spec, data) in self.manifest.params.iter().zip(params) {
+            let dims: Vec<i64> =
+                spec.shape.iter().map(|&d| d as i64).collect();
+            args.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let dims =
+            [self.manifest.dims.micro_batch as i64, self.manifest.dims.seq_len as i64];
+        args.push(xla::Literal::vec1(tokens).reshape(&dims)?);
+        let result = self.grad_exe.execute::<xla::Literal>(&args)?;
+        let outs = result[0][0].to_literal_sync()?.to_tuple()?;
+        let mut it = outs.into_iter();
+        let loss = it.next().unwrap().to_vec::<f32>()?[0];
+        let grads: Result<Vec<Vec<f32>>> =
+            it.map(|l| l.to_vec::<f32>().map_err(Into::into)).collect();
+        Ok(GradOutput { loss, grads: grads? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::train::params::ParamStore;
+    use std::path::PathBuf;
+
+    fn runtime() -> ModelRuntime {
+        ModelRuntime::load(&PathBuf::from("artifacts"), "test").unwrap()
+    }
+
+    fn tokens(rt: &ModelRuntime, seed: u64) -> Vec<i32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..rt.manifest.tokens_per_microbatch())
+            .map(|_| rng.next_below(rt.manifest.dims.vocab as u64) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn grad_shapes_and_initial_loss() {
+        let mut rt = runtime();
+        let store = ParamStore::init(&rt.manifest, 0);
+        rt.upload_params(store.tensors()).unwrap();
+        let out = rt.grad(&tokens(&rt, 1)).unwrap();
+        // random init -> loss ~ ln(vocab) = ln 64 ~ 4.16
+        assert!(
+            (out.loss - (64f32).ln()).abs() < 0.5,
+            "initial loss {}",
+            out.loss
+        );
+        assert_eq!(out.grads.len(), rt.manifest.params.len());
+        for (g, spec) in out.grads.iter().zip(&rt.manifest.params) {
+            assert_eq!(g.len(), spec.numel(), "{}", spec.name);
+        }
+        // gradients must be finite and not all zero
+        let norm: f32 = out
+            .grads
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|x| x * x)
+            .sum::<f32>()
+            .sqrt();
+        assert!(norm.is_finite() && norm > 1e-3, "grad norm {norm}");
+    }
+
+    #[test]
+    fn loss_entry_matches_grad_entry() {
+        let mut rt = runtime();
+        let store = ParamStore::init(&rt.manifest, 0);
+        rt.upload_params(store.tensors()).unwrap();
+        let t = tokens(&rt, 2);
+        let g = rt.grad(&t).unwrap();
+        let l = rt.loss(&t).unwrap();
+        assert!((g.loss - l).abs() < 1e-5, "{} vs {l}", g.loss);
+    }
+
+    #[test]
+    fn sgd_on_constant_batch_reduces_loss() {
+        // End-to-end L3<->L2<->L1 sanity: a few SGD steps on a repeated
+        // batch must reduce the loss through the real HLO artifacts.
+        let mut rt = runtime();
+        let mut store = ParamStore::init(&rt.manifest, 0);
+        let t = tokens(&rt, 3);
+        rt.upload_params(store.tensors()).unwrap();
+        let l0 = rt.grad(&t).unwrap().loss;
+        for _ in 0..10 {
+            let out = rt.grad(&t).unwrap();
+            store.axpy(-0.5, &out.grads);
+            rt.upload_params(store.tensors()).unwrap();
+        }
+        let l1 = rt.grad(&t).unwrap().loss;
+        assert!(l1 < l0 * 0.8, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn requires_upload_before_run() {
+        let rt = runtime();
+        let t = tokens(&rt, 4);
+        assert!(rt.grad(&t).is_err());
+    }
+}

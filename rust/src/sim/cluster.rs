@@ -1,0 +1,401 @@
+//! Virtual-time cluster simulator: the timing semantics of synchronous
+//! training, DropCompute (Algorithm 1) and Local-SGD, over any
+//! [`LatencyModel`] and [`CommModel`].
+//!
+//! This mirrors the paper's own methodology: runtime results (Figs 1, 2,
+//! 4, 6, 13, 14) are driven by injected latency distributions; the
+//! *training semantics* (which micro-batches survive) feed the real
+//! trainer via [`StepOutcome::completed`].
+
+use crate::config::ClusterConfig;
+use crate::rng::Xoshiro256pp;
+
+use super::comm::CommModel;
+use super::noise::LatencyModel;
+use super::trace::Trace;
+
+/// When a worker notices its compute budget `tau` is exhausted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptionMode {
+    /// Theory model: worker stops exactly at `tau`
+    /// (`T~_n = min(tau, T_n)`; micro-batch m survives iff `T_n^(m) < tau`).
+    Preemptive,
+    /// Reference-implementation model (paper §6 Limitations): the timeout
+    /// is checked between accumulations, so the crossing micro-batch
+    /// finishes and counts.
+    BetweenAccumulations,
+}
+
+/// Timing outcome of one synchronous step.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// Compute time per worker (`T~_n`).
+    pub worker_compute: Vec<f64>,
+    /// Micro-batches completed per worker (`M~_n`).
+    pub completed: Vec<usize>,
+    /// Max-over-workers compute time (`min(tau, T)` under DropCompute).
+    pub compute_time: f64,
+    /// Full iteration time including communication.
+    pub iter_time: f64,
+}
+
+impl StepOutcome {
+    pub fn total_completed(&self) -> usize {
+        self.completed.iter().sum()
+    }
+
+    pub fn drop_rate(&self, accums: usize) -> f64 {
+        let scheduled = self.completed.len() * accums;
+        1.0 - self.total_completed() as f64 / scheduled as f64
+    }
+}
+
+/// The simulated cluster.
+pub struct ClusterSim {
+    pub workers: usize,
+    pub accums: usize,
+    model: LatencyModel,
+    comm: CommModel,
+    pub preemption: PreemptionMode,
+    /// Independent RNG stream per worker (decentralized by construction).
+    streams: Vec<Xoshiro256pp>,
+    /// Monotone step counter (drives step-indexed failures).
+    step_idx: usize,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: &ClusterConfig, seed: u64) -> Self {
+        Self::with_model(
+            cfg.workers,
+            cfg.accumulations,
+            LatencyModel::from_config(cfg),
+            CommModel::Fixed(cfg.comm_latency),
+            seed,
+        )
+    }
+
+    pub fn with_model(
+        workers: usize,
+        accums: usize,
+        model: LatencyModel,
+        comm: CommModel,
+        seed: u64,
+    ) -> Self {
+        let root = Xoshiro256pp::seed_from_u64(seed);
+        let streams = (0..workers).map(|n| root.split(n as u64)).collect();
+        Self {
+            workers,
+            accums,
+            model,
+            comm,
+            preemption: PreemptionMode::Preemptive,
+            streams,
+            step_idx: 0,
+        }
+    }
+
+    pub fn with_preemption(mut self, mode: PreemptionMode) -> Self {
+        self.preemption = mode;
+        self
+    }
+
+    pub fn latency_model(&self) -> &LatencyModel {
+        &self.model
+    }
+
+    pub fn comm_model(&self) -> &CommModel {
+        &self.comm
+    }
+
+    /// Serial comm constant `T^c` for the analytical model.
+    pub fn comm_latency(&self) -> f64 {
+        self.comm.serial_latency(self.workers)
+    }
+
+    /// Simulate one synchronous step; `threshold = None` is the baseline.
+    pub fn step(&mut self, threshold: Option<f64>) -> StepOutcome {
+        let step_idx = self.step_idx;
+        self.step_idx += 1;
+        let mut worker_compute = Vec::with_capacity(self.workers);
+        let mut completed = Vec::with_capacity(self.workers);
+        for n in 0..self.workers {
+            let rng = &mut self.streams[n];
+            let mut t = self.model.sample_straggler_at(n, step_idx, rng);
+            let mut done = 0usize;
+            match (threshold, self.preemption) {
+                (None, _) => {
+                    for _ in 0..self.accums {
+                        t += self.model.sample_microbatch(n, rng);
+                    }
+                    done = self.accums;
+                }
+                (Some(tau), PreemptionMode::Preemptive) => {
+                    for _ in 0..self.accums {
+                        let next = t + self.model.sample_microbatch(n, rng);
+                        if next < tau {
+                            t = next;
+                            done += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    // The timeout fires on the wall clock, so even a
+                    // stalled compute pipeline (Fatal stragglers) is
+                    // preempted at exactly tau — the worker joins the
+                    // AllReduce with whatever it has (possibly nothing).
+                    if done < self.accums {
+                        t = tau;
+                    }
+                }
+                (Some(tau), PreemptionMode::BetweenAccumulations) => {
+                    for _ in 0..self.accums {
+                        t += self.model.sample_microbatch(n, rng);
+                        done += 1;
+                        if t >= tau {
+                            break;
+                        }
+                    }
+                }
+            }
+            worker_compute.push(t);
+            completed.push(done);
+        }
+        let compute_time =
+            worker_compute.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let iter_time = self.comm.completion_time(&worker_compute);
+        StepOutcome { worker_compute, completed, compute_time, iter_time }
+    }
+
+    /// Simulate one Local-SGD synchronization period: `h` local steps of
+    /// one micro-batch group each, then a sync. DropCompute integrates by
+    /// thresholding each local step's compute (App. B.3).
+    pub fn local_sgd_period(&mut self, h: usize, threshold: Option<f64>)
+        -> StepOutcome
+    {
+        let step_idx = self.step_idx;
+        self.step_idx += 1;
+        let mut worker_compute = vec![0.0f64; self.workers];
+        let mut completed = vec![0usize; self.workers];
+        for _local in 0..h {
+            for n in 0..self.workers {
+                let rng = &mut self.streams[n];
+                let mut t = self.model.sample_straggler_at(n, step_idx, rng);
+                t += self.model.sample_microbatch(n, rng);
+                match threshold {
+                    Some(tau) => {
+                        if t < tau {
+                            completed[n] += 1;
+                            worker_compute[n] += t;
+                        } else {
+                            worker_compute[n] += tau;
+                        }
+                    }
+                    None => {
+                        completed[n] += 1;
+                        worker_compute[n] += t;
+                    }
+                }
+            }
+        }
+        let compute_time =
+            worker_compute.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let iter_time = self.comm.completion_time(&worker_compute);
+        StepOutcome { worker_compute, completed, compute_time, iter_time }
+    }
+
+    /// Record a no-drop latency trace of `iters` iterations — the input
+    /// of Algorithm 2 and of the Fig 4 post-analysis.
+    pub fn record_trace(&mut self, iters: usize) -> Trace {
+        let mut trace = Trace::new(iters, self.workers, self.accums);
+        for i in 0..iters {
+            let step_idx = self.step_idx;
+            self.step_idx += 1;
+            for n in 0..self.workers {
+                let rng = &mut self.streams[n];
+                let straggle = self.model.sample_straggler_at(n, step_idx, rng);
+                for m in 0..self.accums {
+                    let mut t = self.model.sample_microbatch(n, rng);
+                    if m == 0 {
+                        t += straggle;
+                    }
+                    trace.set(i, n, m, t);
+                }
+            }
+            trace.comm[i] = self.comm_latency();
+        }
+        trace
+    }
+
+    /// Mean iteration time over `iters` simulated steps.
+    pub fn mean_iter_time(&mut self, iters: usize, threshold: Option<f64>) -> f64 {
+        (0..iters).map(|_| self.step(threshold).iter_time).sum::<f64>()
+            / iters as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, NoiseKind};
+
+    fn config(workers: usize, accums: usize) -> ClusterConfig {
+        ClusterConfig {
+            workers,
+            accumulations: accums,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            comm_latency: 0.2,
+            noise: NoiseKind::None,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn baseline_step_all_complete() {
+        let mut sim = ClusterSim::new(&config(8, 12), 0);
+        let out = sim.step(None);
+        assert_eq!(out.total_completed(), 8 * 12);
+        assert!(out.iter_time > out.compute_time);
+        assert!((out.iter_time - out.compute_time - 0.2).abs() < 1e-12);
+        // with sigma=0.02 and M=12 the step should be ~5.4s
+        assert!((out.compute_time - 5.4).abs() < 0.5, "{}", out.compute_time);
+    }
+
+    #[test]
+    fn iteration_time_grows_with_workers() {
+        // E[max of N] increases with N — the core scalability problem.
+        let mut small = ClusterSim::new(&config(2, 12), 1);
+        let mut large = ClusterSim::new(&config(128, 12), 1);
+        let t_small = small.mean_iter_time(200, None);
+        let t_large = large.mean_iter_time(200, None);
+        assert!(t_large > t_small, "{t_large} vs {t_small}");
+    }
+
+    #[test]
+    fn threshold_caps_compute_time() {
+        let mut c = config(16, 12);
+        c.noise = NoiseKind::PaperLogNormal {
+            mu: 4.0,
+            sigma: 1.0,
+            alpha: 2.0 * (4.5f64).exp(),
+            beta: 5.5,
+        };
+        let tau = 9.0;
+        let mut sim = ClusterSim::new(&c, 2);
+        for _ in 0..50 {
+            let out = sim.step(Some(tau));
+            assert!(out.compute_time <= tau + 1e-9);
+            for (&t, &done) in out.worker_compute.iter().zip(&out.completed) {
+                assert!(t <= tau + 1e-9);
+                assert!(done <= 12);
+            }
+        }
+    }
+
+    #[test]
+    fn dropcompute_faster_but_drops() {
+        let mut c = config(64, 12);
+        c.noise = NoiseKind::PaperLogNormal {
+            mu: 4.0,
+            sigma: 1.0,
+            alpha: 2.0 * (4.5f64).exp(),
+            beta: 5.5,
+        };
+        let mut base = ClusterSim::new(&c, 3);
+        let mut dc = ClusterSim::new(&c, 3);
+        let t_base = base.mean_iter_time(100, None);
+        let mut dropped = 0usize;
+        let mut total = 0usize;
+        let mut t_dc = 0.0;
+        for _ in 0..100 {
+            let out = dc.step(Some(9.0));
+            t_dc += out.iter_time / 100.0;
+            dropped += 64 * 12 - out.total_completed();
+            total += 64 * 12;
+        }
+        let rate = dropped as f64 / total as f64;
+        assert!(t_dc < t_base, "dc {t_dc} vs base {t_base}");
+        assert!(rate > 0.0 && rate < 0.5, "drop rate {rate}");
+    }
+
+    #[test]
+    fn preemption_modes_differ_as_expected() {
+        let mut c = config(4, 8);
+        c.noise = NoiseKind::Exponential { mean: 0.3 };
+        let tau = 2.0;
+        let mut pre = ClusterSim::new(&c, 7)
+            .with_preemption(PreemptionMode::Preemptive);
+        let mut between = ClusterSim::new(&c, 7)
+            .with_preemption(PreemptionMode::BetweenAccumulations);
+        // Preemptive never exceeds tau; between-accums can overshoot.
+        let mut overshoot = false;
+        for _ in 0..200 {
+            let a = pre.step(Some(tau));
+            assert!(a.compute_time <= tau + 1e-9);
+            let b = between.step(Some(tau));
+            if b.compute_time > tau {
+                overshoot = true;
+            }
+        }
+        assert!(overshoot, "between-accumulations should overshoot sometimes");
+    }
+
+    #[test]
+    fn fatal_worker_stalls_baseline_but_not_dropcompute() {
+        // §2 robustness claim: a dead worker freezes synchronous
+        // training; DropCompute degrades to the survivors.
+        let mut c = config(6, 4);
+        c.stragglers = crate::config::StragglerKind::Fatal {
+            worker: 2,
+            from_step: 3,
+        };
+        let mut base = ClusterSim::new(&c, 17);
+        let mut dc = ClusterSim::new(&c, 17);
+        for step in 0..6 {
+            let b = base.step(None);
+            let d = dc.step(Some(2.5));
+            if step < 3 {
+                assert!(b.iter_time < 100.0);
+                assert_eq!(d.completed[2] > 0, true);
+            } else {
+                // baseline waits ~forever
+                assert!(b.iter_time >= LatencyModel::FATAL_DELAY);
+                // DropCompute: capped step, dead worker contributes 0
+                assert!(d.iter_time < 10.0, "{}", d.iter_time);
+                assert_eq!(d.completed[2], 0);
+                assert!(d.total_completed() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_dimensions_and_determinism() {
+        let mut a = ClusterSim::new(&config(3, 5), 42);
+        let mut b = ClusterSim::new(&config(3, 5), 42);
+        let ta = a.record_trace(4);
+        let tb = b.record_trace(4);
+        assert_eq!(ta, tb);
+        assert_eq!(ta.iters, 4);
+        assert_eq!(ta.workers, 3);
+        assert_eq!(ta.accums, 5);
+    }
+
+    #[test]
+    fn local_sgd_period_counts() {
+        let mut sim = ClusterSim::new(&config(4, 1), 9);
+        let out = sim.local_sgd_period(8, None);
+        assert_eq!(out.total_completed(), 4 * 8);
+        // 8 local steps of ~0.45s each
+        assert!((out.compute_time - 3.6).abs() < 0.5, "{}", out.compute_time);
+    }
+
+    #[test]
+    fn local_sgd_threshold_drops_steps() {
+        let mut c = config(4, 1);
+        c.stragglers = crate::config::StragglerKind::Uniform { p: 0.5, delay: 1.0 };
+        let mut sim = ClusterSim::new(&c, 11);
+        let out = sim.local_sgd_period(20, Some(0.9));
+        assert!(out.total_completed() < 4 * 20);
+        assert!(out.total_completed() > 0);
+    }
+}

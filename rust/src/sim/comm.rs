@@ -1,0 +1,161 @@
+//! Communication timing models for the synchronous AllReduce phase.
+//!
+//! The paper folds communication into a serial constant `T^c`; we provide
+//! that plus an event-driven **ring** model (Patarasuk & Yuan 2009 —
+//! the bandwidth-optimal algorithm the paper's decentralized setting
+//! assumes) where workers *arrive* at different times: late arrivals
+//! stall their ring neighbours, which is exactly why stragglers hurt.
+
+use super::event::EventQueue;
+
+/// Timing model for one AllReduce of `bytes` across `n` workers.
+#[derive(Debug, Clone)]
+pub enum CommModel {
+    /// Fixed serial latency `T^c` regardless of arrival times
+    /// (the paper's model: `T + T^c`).
+    Fixed(f64),
+    /// Ring all-reduce: 2(N-1) phases of `bytes/N` chunks; each hop costs
+    /// `latency + chunk_bytes / bandwidth`. Completion is computed by a
+    /// discrete-event simulation honoring per-worker arrival times.
+    Ring {
+        /// Per-hop latency, seconds.
+        latency: f64,
+        /// Link bandwidth, bytes/second.
+        bandwidth: f64,
+        /// Gradient bytes reduced.
+        bytes: f64,
+    },
+}
+
+impl CommModel {
+    /// Time from `max(arrivals)` until every worker holds the reduced
+    /// result; returns the absolute completion time.
+    pub fn completion_time(&self, arrivals: &[f64]) -> f64 {
+        let start = arrivals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        match self {
+            CommModel::Fixed(tc) => start + tc,
+            CommModel::Ring { latency, bandwidth, bytes } => {
+                ring_completion(arrivals, *latency, *bandwidth, *bytes)
+            }
+        }
+    }
+
+    /// The serial constant `T^c` this model contributes when all workers
+    /// arrive simultaneously (used by the analytical speedup model).
+    pub fn serial_latency(&self, n: usize) -> f64 {
+        match self {
+            CommModel::Fixed(tc) => *tc,
+            CommModel::Ring { latency, bandwidth, bytes } => {
+                if n <= 1 {
+                    return 0.0;
+                }
+                let phases = 2 * (n - 1);
+                let chunk = bytes / n as f64;
+                phases as f64 * (latency + chunk / bandwidth)
+            }
+        }
+    }
+}
+
+/// Event-driven ring all-reduce completion with heterogeneous arrivals.
+///
+/// Worker `w` can send its phase-`p` message once (a) it has arrived,
+/// and (b) it has received the phase-`p-1` message from its predecessor.
+/// Dependency: recv(w, p) happens at
+/// `max(arrive(w-1), recv(w-1, p-1)) + hop`, which we simulate rather
+/// than solve in closed form so the model extends to irregular topologies.
+fn ring_completion(arrivals: &[f64], latency: f64, bandwidth: f64, bytes: f64) -> f64 {
+    let n = arrivals.len();
+    if n <= 1 {
+        return arrivals.first().copied().unwrap_or(0.0);
+    }
+    let phases = 2 * (n - 1);
+    let hop = latency + bytes / n as f64 / bandwidth;
+
+    // ready[w] = earliest time worker w can send its next message.
+    let mut ready = arrivals.to_vec();
+    let mut recv_done = vec![0.0f64; n];
+    let mut q = EventQueue::new();
+    // tag encodes (phase, worker): fire when w's phase-p send *completes*
+    // at the receiver (w+1) % n.
+    let tag = |p: usize, w: usize| (p * n + w) as u64;
+
+    for w in 0..n {
+        q.schedule_at(ready[w].max(0.0) + hop, tag(0, w));
+    }
+    let mut last = 0.0f64;
+    while let Some(ev) = q.pop() {
+        let p = ev.tag as usize / n;
+        let w = ev.tag as usize % n; // sender
+        let dst = (w + 1) % n;
+        recv_done[dst] = recv_done[dst].max(ev.time);
+        last = last.max(ev.time);
+        if p + 1 < phases {
+            // dst forwards in phase p+1 once it has arrived and received.
+            let t_send = ready[dst].max(recv_done[dst]);
+            ready[dst] = t_send;
+            q.schedule_at(t_send.max(ev.time) + hop, tag(p + 1, dst));
+        }
+    }
+    last
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_model_adds_tc_to_max_arrival() {
+        let m = CommModel::Fixed(0.5);
+        assert!((m.completion_time(&[1.0, 3.0, 2.0]) - 3.5).abs() < 1e-12);
+        assert_eq!(m.serial_latency(8), 0.5);
+    }
+
+    #[test]
+    fn ring_simultaneous_arrivals_match_closed_form() {
+        let (lat, bw, bytes) = (1e-4, 1e9, 4e6);
+        let m = CommModel::Ring { latency: lat, bandwidth: bw, bytes };
+        for n in [2usize, 4, 8, 16] {
+            let arrivals = vec![0.0; n];
+            let got = m.completion_time(&arrivals);
+            let want = m.serial_latency(n);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "n={n}: event-sim {got} vs closed form {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_straggler_dominates() {
+        let m = CommModel::Ring { latency: 1e-4, bandwidth: 1e9, bytes: 4e6 };
+        let fast = m.completion_time(&[0.0, 0.0, 0.0, 0.0]);
+        let strag = m.completion_time(&[0.0, 0.0, 5.0, 0.0]);
+        // a 5s-late worker pushes completion past 5s + ring time ~ fast
+        assert!(strag > 5.0);
+        assert!((strag - (5.0 + fast)).abs() < fast, "{strag} vs {fast}");
+    }
+
+    #[test]
+    fn ring_more_workers_not_cheaper_total_latency() {
+        let m = CommModel::Ring { latency: 1e-3, bandwidth: 1e9, bytes: 1e3 };
+        // latency-dominated regime: more workers = more phases = slower
+        assert!(m.serial_latency(32) > m.serial_latency(4));
+    }
+
+    #[test]
+    fn ring_bandwidth_term_scales_with_bytes() {
+        let small = CommModel::Ring { latency: 0.0, bandwidth: 1e9, bytes: 1e6 };
+        let large = CommModel::Ring { latency: 0.0, bandwidth: 1e9, bytes: 4e6 };
+        let n = 8;
+        let r = large.serial_latency(n) / small.serial_latency(n);
+        assert!((r - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_single_worker() {
+        let m = CommModel::Ring { latency: 1e-3, bandwidth: 1e9, bytes: 1e6 };
+        assert_eq!(m.completion_time(&[2.0]), 2.0);
+        assert_eq!(m.serial_latency(1), 0.0);
+    }
+}

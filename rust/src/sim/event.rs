@@ -1,0 +1,151 @@
+//! A tiny discrete-event engine (virtual clock + binary-heap queue).
+//!
+//! Used by the ring-AllReduce timing model in `sim::comm` and available
+//! to any future protocol-level simulation. Events carry an opaque `u64`
+//! tag; handlers are dispatched by the driver loop.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A scheduled event: fires at `time`, carries a tag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub time: f64,
+    /// Monotonic sequence number — makes ordering deterministic for ties.
+    pub seq: u64,
+    pub tag: u64,
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap by (time, seq): invert for BinaryHeap's max-heap.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Virtual-time event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `tag` to fire `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: f64, tag: u64) {
+        debug_assert!(delay >= 0.0, "negative delay");
+        self.schedule_at(self.now + delay, tag);
+    }
+
+    /// Schedule `tag` at absolute virtual time `time` (>= now).
+    pub fn schedule_at(&mut self, time: f64, tag: u64) {
+        debug_assert!(time >= self.now, "scheduling into the past");
+        self.heap.push(Event { time, seq: self.seq, tag });
+        self.seq += 1;
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?;
+        self.now = ev.time;
+        self.processed += 1;
+        Some(ev)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Drain all events through `handler` until the queue is empty.
+    /// The handler may schedule more events.
+    pub fn run(&mut self, mut handler: impl FnMut(&mut EventQueue, Event)) {
+        while let Some(ev) = self.pop() {
+            // Hand the queue back to the handler via a scratch swap.
+            let mut scratch = std::mem::take(self);
+            handler(&mut scratch, ev);
+            *self = scratch;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, 3);
+        q.schedule_at(1.0, 1);
+        q.schedule_at(2.0, 2);
+        let tags: Vec<u64> = std::iter::from_fn(|| q.pop().map(|e| e.tag)).collect();
+        assert_eq!(tags, vec![1, 2, 3]);
+        assert_eq!(q.now(), 3.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn ties_fifo_by_seq() {
+        let mut q = EventQueue::new();
+        for tag in 0..10 {
+            q.schedule_at(1.0, tag);
+        }
+        let tags: Vec<u64> = std::iter::from_fn(|| q.pop().map(|e| e.tag)).collect();
+        assert_eq!(tags, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn relative_scheduling_advances() {
+        let mut q = EventQueue::new();
+        q.schedule_in(1.5, 0);
+        q.pop().unwrap();
+        q.schedule_in(0.5, 1);
+        let e = q.pop().unwrap();
+        assert_eq!(e.time, 2.0);
+    }
+
+    #[test]
+    fn run_with_cascading_events() {
+        let mut q = EventQueue::new();
+        q.schedule_at(0.0, 0);
+        let mut fired = Vec::new();
+        q.run(|q, ev| {
+            fired.push(ev.tag);
+            if ev.tag < 5 {
+                q.schedule_in(1.0, ev.tag + 1);
+            }
+        });
+        assert_eq!(fired, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Discrete-event / virtual-clock cluster simulation.
+//!
+//! * [`noise`] — per-micro-batch latency models (App. B.1 noise, Fig 13/14
+//!   families, Fig 12 straggler scenarios, Fig 6 heterogeneity);
+//! * [`event`] — virtual-clock event queue;
+//! * [`comm`] — AllReduce timing models (fixed `T^c` and event-driven ring);
+//! * [`cluster`] — synchronous / DropCompute / Local-SGD step timing;
+//! * [`trace`] — `t_{i,n}^{(m)}` recording for Algorithm 2 and post-analysis.
+
+pub mod cluster;
+pub mod comm;
+pub mod event;
+pub mod noise;
+pub mod trace;
+
+pub use cluster::{ClusterSim, PreemptionMode, StepOutcome};
+pub use comm::CommModel;
+pub use event::EventQueue;
+pub use noise::LatencyModel;
+pub use trace::Trace;

@@ -1,0 +1,271 @@
+//! Per-micro-batch latency models: the cluster's "compute variance".
+//!
+//! `t_n^{(m)} = base ⊕ additive-noise ⊕ straggler-delay` — exactly the
+//! paper's simulated-delay environment (App. B.1) plus the straggler
+//! scenarios of Fig 12 and the sub-optimal heterogeneous system of Fig 6.
+
+use crate::config::{ClusterConfig, NoiseKind, StragglerKind};
+use crate::rng::{
+    Bernoulli, BoundedLogNormal, Distribution, Exponential, Gamma, LogNormal,
+    Normal, Xoshiro256pp,
+};
+
+/// Build the additive-noise sampler for a config (None = no noise).
+/// For `PaperLogNormal` the sample is *relative*: `t += mu_compute * eps`.
+pub fn build_noise(kind: &NoiseKind) -> Option<Box<dyn Distribution>> {
+    match kind {
+        NoiseKind::None => None,
+        NoiseKind::PaperLogNormal { mu, sigma, alpha, beta } => {
+            Some(Box::new(BoundedLogNormal::new(*mu, *sigma, *alpha, *beta)))
+        }
+        NoiseKind::LogNormal { mean, var } => {
+            Some(Box::new(LogNormal::from_moments(*mean, *var)))
+        }
+        NoiseKind::Normal { mean, var } => {
+            Some(Box::new(Normal::from_moments(*mean, *var)))
+        }
+        NoiseKind::Bernoulli { p, value } => {
+            Some(Box::new(Bernoulli::new(*p, *value)))
+        }
+        NoiseKind::Exponential { mean } => {
+            Some(Box::new(Exponential::from_mean(*mean)))
+        }
+        NoiseKind::Gamma { mean, var } => {
+            Some(Box::new(Gamma::from_moments(*mean, *var)))
+        }
+    }
+}
+
+/// Whether the noise sample multiplies the base mean (paper's form) or is
+/// an absolute additive number of seconds (Fig 13/14 form).
+fn noise_is_relative(kind: &NoiseKind) -> bool {
+    matches!(kind, NoiseKind::PaperLogNormal { .. })
+}
+
+/// Per-worker latency sampler with optional heterogeneity.
+pub struct LatencyModel {
+    base: Normal,
+    noise: Option<Box<dyn Distribution>>,
+    relative: bool,
+    mean_scale: f64,
+    stragglers: StragglerKind,
+    /// Per-worker speed multipliers (1.0 = nominal). Length >= workers.
+    worker_scale: Vec<f64>,
+}
+
+impl std::fmt::Debug for LatencyModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyModel")
+            .field("base", &self.base)
+            .field("relative", &self.relative)
+            .finish()
+    }
+}
+
+impl LatencyModel {
+    pub fn from_config(c: &ClusterConfig) -> Self {
+        Self {
+            base: Normal::new(c.microbatch_mean, c.microbatch_std),
+            noise: build_noise(&c.noise),
+            relative: noise_is_relative(&c.noise),
+            mean_scale: c.microbatch_mean,
+            stragglers: c.stragglers.clone(),
+            worker_scale: vec![1.0; c.workers],
+        }
+    }
+
+    /// Inject per-worker heterogeneity (Fig 6's sub-optimal system):
+    /// worker n's base latency is multiplied by `scales[n]`.
+    pub fn with_worker_scales(mut self, scales: Vec<f64>) -> Self {
+        self.worker_scale = scales;
+        self
+    }
+
+    /// Sample the compute latency of one micro-batch for worker `n`.
+    pub fn sample_microbatch(&self, n: usize, rng: &mut Xoshiro256pp) -> f64 {
+        let scale = self.worker_scale.get(n).copied().unwrap_or(1.0);
+        // Base compute: truncated-at-10%-of-mean normal (hardware cannot
+        // be arbitrarily fast).
+        let mut t = self.base.sample(rng).max(0.1 * self.base.mu) * scale;
+        if let Some(noise) = &self.noise {
+            // Noise may be signed (the Fig 13 Normal family allows a
+            // worker to run *faster* than nominal); only the total
+            // latency is clamped to a physical floor.
+            let eps = noise.sample(rng);
+            t += if self.relative { self.mean_scale * eps } else { eps };
+        }
+        t.max(0.01 * self.base.mu)
+    }
+
+    /// Effectively-infinite delay of a failed worker (finite so the
+    /// max/CDF arithmetic stays well-defined).
+    pub const FATAL_DELAY: f64 = 1e9;
+
+    /// Per-step straggler delay for worker `n` (0 if not straggling).
+    pub fn sample_straggler(&self, n: usize, rng: &mut Xoshiro256pp) -> f64 {
+        self.sample_straggler_at(n, usize::MAX, rng)
+    }
+
+    /// Step-aware variant (needed by `Fatal`, which triggers at a step).
+    pub fn sample_straggler_at(
+        &self,
+        n: usize,
+        step: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> f64 {
+        match &self.stragglers {
+            StragglerKind::None => 0.0,
+            StragglerKind::Uniform { p, delay } => {
+                if rng.next_f64() < *p {
+                    *delay
+                } else {
+                    0.0
+                }
+            }
+            StragglerKind::SingleServer { p, delay, server_size } => {
+                if n < *server_size && rng.next_f64() < *p {
+                    *delay
+                } else {
+                    0.0
+                }
+            }
+            StragglerKind::Fatal { worker, from_step } => {
+                if n == *worker && step >= *from_step {
+                    Self::FATAL_DELAY
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Analytical mean of one micro-batch latency (no stragglers).
+    pub fn mean(&self) -> f64 {
+        let noise_mean = self
+            .noise
+            .as_ref()
+            .map(|d| if self.relative { self.mean_scale * d.mean() } else { d.mean() })
+            .unwrap_or(0.0);
+        self.base.mean() + noise_mean
+    }
+
+    /// Analytical variance of one micro-batch latency (no stragglers).
+    pub fn variance(&self) -> f64 {
+        let noise_var = self
+            .noise
+            .as_ref()
+            .map(|d| {
+                if self.relative {
+                    self.mean_scale * self.mean_scale * d.variance()
+                } else {
+                    d.variance()
+                }
+            })
+            .unwrap_or(0.0);
+        self.base.variance() + noise_var
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn base_config() -> ClusterConfig {
+        ClusterConfig {
+            workers: 4,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.01,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn no_noise_matches_base_moments() {
+        let m = LatencyModel::from_config(&base_config());
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| m.sample_microbatch(0, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 0.45).abs() < 1e-3, "{mean}");
+        assert!((m.mean() - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_noise_x15_slowdown() {
+        // App. B.1: with the paper constants each accumulation takes
+        // ~1.5x longer on average.
+        let mut c = base_config();
+        c.noise = NoiseKind::PaperLogNormal {
+            mu: 4.0,
+            sigma: 1.0,
+            alpha: 2.0 * (4.5f64).exp(),
+            beta: 5.5,
+        };
+        let m = LatencyModel::from_config(&c);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let n = 200_000;
+        let mean: f64 =
+            (0..n).map(|_| m.sample_microbatch(0, &mut rng)).sum::<f64>() / n as f64;
+        let ratio = mean / 0.45;
+        assert!((1.35..1.65).contains(&ratio), "ratio {ratio}");
+        // analytic model agrees with sampling
+        assert!((m.mean() - mean).abs() < 5e-3, "{} vs {mean}", m.mean());
+    }
+
+    #[test]
+    fn absolute_noise_families() {
+        for kind in [
+            NoiseKind::LogNormal { mean: 0.225, var: 0.05 },
+            NoiseKind::Normal { mean: 0.225, var: 0.05 },
+            NoiseKind::Exponential { mean: 0.225 },
+            NoiseKind::Gamma { mean: 0.225, var: 0.05 },
+            NoiseKind::Bernoulli { p: 0.5, value: 0.45 },
+        ] {
+            let mut c = base_config();
+            c.noise = kind.clone();
+            let m = LatencyModel::from_config(&c);
+            let mut rng = Xoshiro256pp::seed_from_u64(7);
+            let n = 150_000;
+            let mean: f64 = (0..n)
+                .map(|_| m.sample_microbatch(0, &mut rng))
+                .sum::<f64>()
+                / n as f64;
+            assert!(
+                (mean - m.mean()).abs() < 8e-3,
+                "{kind:?}: sampled {mean} vs analytic {}",
+                m.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn straggler_scenarios() {
+        let mut c = base_config();
+        c.stragglers = StragglerKind::SingleServer {
+            p: 1.0,
+            delay: 2.0,
+            server_size: 2,
+        };
+        let m = LatencyModel::from_config(&c);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        assert_eq!(m.sample_straggler(0, &mut rng), 2.0);
+        assert_eq!(m.sample_straggler(1, &mut rng), 2.0);
+        assert_eq!(m.sample_straggler(2, &mut rng), 0.0);
+        assert_eq!(m.sample_straggler(3, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn worker_scales_heterogeneity() {
+        let m = LatencyModel::from_config(&base_config())
+            .with_worker_scales(vec![1.0, 2.0, 1.0, 1.0]);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let n = 50_000;
+        let mean = |w: usize, rng: &mut Xoshiro256pp| -> f64 {
+            (0..n).map(|_| m.sample_microbatch(w, rng)).sum::<f64>() / n as f64
+        };
+        let m0 = mean(0, &mut rng);
+        let m1 = mean(1, &mut rng);
+        assert!((m1 / m0 - 2.0).abs() < 0.05, "{m0} {m1}");
+    }
+}

@@ -1,0 +1,222 @@
+//! Micro-batch latency traces: `t_{i,n}^{(m)}` tensors.
+//!
+//! Algorithm 2 (App. C.1) chooses the threshold from exactly this data;
+//! the Fig 4 "post-analysis" benches replay recorded traces through the
+//! DropCompute timing rule at many thresholds. CSV on disk so runs can
+//! be archived and re-analyzed.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::util::{Error, Result};
+
+/// Dense `[iters][workers][accums]` latency tensor (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub iters: usize,
+    pub workers: usize,
+    pub accums: usize,
+    data: Vec<f64>,
+    /// Per-iteration communication time `T^c_i` (may be empty = zeros).
+    pub comm: Vec<f64>,
+}
+
+impl Trace {
+    pub fn new(iters: usize, workers: usize, accums: usize) -> Self {
+        Self {
+            iters,
+            workers,
+            accums,
+            data: vec![0.0; iters * workers * accums],
+            comm: vec![0.0; iters],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, n: usize, m: usize) -> usize {
+        debug_assert!(i < self.iters && n < self.workers && m < self.accums);
+        (i * self.workers + n) * self.accums + m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, n: usize, m: usize) -> f64 {
+        self.data[self.idx(i, n, m)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, n: usize, m: usize, v: f64) {
+        let idx = self.idx(i, n, m);
+        self.data[idx] = v;
+    }
+
+    /// Cumulative compute time of worker `n` through micro-batch `m`
+    /// (inclusive) at iteration `i`: `T_n^{(m+1)}` in paper notation.
+    pub fn cumsum(&self, i: usize, n: usize, m: usize) -> f64 {
+        (0..=m).map(|j| self.get(i, n, j)).sum()
+    }
+
+    /// Full step compute time `T_{i,n}` of worker n.
+    pub fn worker_step_time(&self, i: usize, n: usize) -> f64 {
+        self.cumsum(i, n, self.accums - 1)
+    }
+
+    /// Max-over-workers step compute time `T_i`.
+    pub fn step_time(&self, i: usize) -> f64 {
+        (0..self.workers)
+            .map(|n| self.worker_step_time(i, n))
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// All micro-batch samples flattened (the distribution workers
+    /// synchronize in Algorithm 2).
+    pub fn all_samples(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mean/variance of the micro-batch latency across everything.
+    pub fn microbatch_moments(&self) -> (f64, f64) {
+        let n = self.data.len() as f64;
+        let mean = self.data.iter().sum::<f64>() / n;
+        let var =
+            self.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    pub fn mean_comm(&self) -> f64 {
+        if self.comm.is_empty() {
+            0.0
+        } else {
+            self.comm.iter().sum::<f64>() / self.comm.len() as f64
+        }
+    }
+
+    /// CSV: header then one row per (iter, worker): i,n,tc,m0,m1,...
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "# trace iters={} workers={} accums={}", self.iters,
+                 self.workers, self.accums)?;
+        for i in 0..self.iters {
+            for n in 0..self.workers {
+                let mut row = format!("{i},{n},{:.9}", self.comm[i]);
+                for m in 0..self.accums {
+                    row.push_str(&format!(",{:.9}", self.get(i, n, m)));
+                }
+                writeln!(f, "{row}")?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load_csv(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let mut lines = BufReader::new(f).lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| Error::Data("empty trace file".into()))??;
+        let dims: Vec<usize> = header
+            .split(|c: char| !c.is_ascii_digit())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().unwrap())
+            .collect();
+        if dims.len() != 3 {
+            return Err(Error::Data(format!("bad trace header `{header}`")));
+        }
+        let mut trace = Trace::new(dims[0], dims[1], dims[2]);
+        for line in lines {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split(',').collect();
+            if parts.len() != 3 + trace.accums {
+                return Err(Error::Data(format!("bad trace row `{line}`")));
+            }
+            let i: usize = parts[0]
+                .parse()
+                .map_err(|_| Error::Data("bad iter index".into()))?;
+            let n: usize = parts[1]
+                .parse()
+                .map_err(|_| Error::Data("bad worker index".into()))?;
+            trace.comm[i] = parts[2]
+                .parse()
+                .map_err(|_| Error::Data("bad comm value".into()))?;
+            for m in 0..trace.accums {
+                trace.set(
+                    i,
+                    n,
+                    m,
+                    parts[3 + m]
+                        .parse()
+                        .map_err(|_| Error::Data("bad latency value".into()))?,
+                );
+            }
+        }
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::new(2, 3, 4);
+        for i in 0..2 {
+            t.comm[i] = 0.1 * (i + 1) as f64;
+            for n in 0..3 {
+                for m in 0..4 {
+                    t.set(i, n, m, (i + n + m) as f64 * 0.01 + 0.1);
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn cumsum_and_step_time() {
+        let t = sample();
+        assert!((t.cumsum(0, 0, 1) - (0.1 + 0.11)).abs() < 1e-12);
+        // worker 2 is slowest at iter 0
+        assert!((t.step_time(0) - t.worker_step_time(0, 2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moments() {
+        let t = sample();
+        let (mean, var) = t.microbatch_moments();
+        assert!(mean > 0.1 && var > 0.0);
+        assert!((t.mean_comm() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = sample();
+        let dir = std::env::temp_dir().join("dc_trace_test");
+        let path = dir.join("t.csv");
+        t.save_csv(&path).unwrap();
+        let loaded = Trace::load_csv(&path).unwrap();
+        assert_eq!(t.iters, loaded.iters);
+        for i in 0..t.iters {
+            for n in 0..t.workers {
+                for m in 0..t.accums {
+                    assert!((t.get(i, n, m) - loaded.get(i, n, m)).abs() < 1e-8);
+                }
+            }
+            assert!((t.comm[i] - loaded.comm[i]).abs() < 1e-8);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("dc_trace_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "nonsense\n1,2,3\n").unwrap();
+        assert!(Trace::load_csv(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,186 @@
+//! Standard-normal special functions: `erf`, Φ, Φ⁻¹.
+//!
+//! The paper's analytical runtime model is built entirely on Φ and Φ⁻¹:
+//! Eq. 4 (expected max of N normals, via Bailey et al.'s approximation),
+//! Eq. 5 (expected completed micro-batches) and Eq. 11 (effective
+//! speedup). No libm special functions exist in `std`, so both are
+//! implemented here and tested against tabulated values.
+
+/// Complementary error function with *relative* error < 1.2e-7
+/// everywhere (Numerical Recipes' Chebyshev fit) — relative accuracy in
+/// the tail is what Eq. 4's `Φ⁻¹(1 - 1/N)` needs at large `N`.
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223
+                                            + t * 0.17087277)))))))))
+            .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Error function.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Standard normal CDF Φ(x).
+pub fn phi(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// Standard normal tail 1 - Φ(x), accurate for large x.
+pub fn phi_tail(x: f64) -> f64 {
+    0.5 * erfc(x / std::f64::consts::SQRT_2)
+}
+
+/// Standard normal PDF φ(x).
+pub fn pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Inverse standard normal CDF Φ⁻¹(p), Acklam's rational approximation
+/// refined by one Halley step (|rel err| < 1e-9 after refinement).
+pub fn phi_inv(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "phi_inv domain: got {p}");
+
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+
+    // Halley refinement against the forward CDF (tail-aware difference
+    // to keep relative precision near p -> 0 or 1).
+    // (phi(x) - p == (1-p) - phi_tail(x), computed without cancellation)
+    let e = if p > 0.5 { (1.0 - p) - phi_tail(x) } else { phi(x) - p };
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (0.5 * x * x).exp();
+    x - u / (1.0 + 0.5 * x * u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_table_values() {
+        // (x, erf(x)) from tables.
+        for (x, want) in [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (-1.0, -0.8427007929),
+        ] {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})={}", erf(x));
+        }
+    }
+
+    #[test]
+    fn phi_table_values() {
+        for (x, want) in [
+            (0.0, 0.5),
+            (1.0, 0.8413447461),
+            (1.6448536270, 0.95),
+            (2.3263478740, 0.99),
+            (-1.0, 0.1586552539),
+        ] {
+            assert!((phi(x) - want).abs() < 2e-7, "phi({x})={}", phi(x));
+        }
+    }
+
+    #[test]
+    fn phi_inv_table_values() {
+        for (p, want) in [
+            (0.5, 0.0),
+            (0.95, 1.6448536270),
+            (0.99, 2.3263478740),
+            (0.999, 3.0902323062),
+            (0.05, -1.6448536270),
+        ] {
+            assert!(
+                (phi_inv(p) - want).abs() < 1e-6,
+                "phi_inv({p})={}",
+                phi_inv(p)
+            );
+        }
+    }
+
+    #[test]
+    fn phi_roundtrip() {
+        for i in 1..200 {
+            let p = i as f64 / 200.0;
+            let x = phi_inv(p);
+            assert!((phi(x) - p).abs() < 1e-6, "p={p}");
+        }
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let (mut sum, h) = (0.0, 1e-3);
+        let mut x = -8.0;
+        while x < 8.0 {
+            sum += pdf(x) * h;
+            x += h;
+        }
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn phi_inv_rejects_zero() {
+        phi_inv(0.0);
+    }
+}

@@ -1,0 +1,258 @@
+//! Checkpointing: save/restore parameters + training progress.
+//!
+//! Format: a small self-describing binary (`DCKP` magic, version,
+//! step/seed metadata, then per-tensor f32 payloads with names and
+//! lengths). Written atomically (temp file + rename) so a straggling or
+//! killed leader never leaves a torn checkpoint — the same failure mode
+//! DropCompute is about at the step level.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::runtime::Manifest;
+use crate::util::{Error, Result};
+
+use super::params::ParamStore;
+
+const MAGIC: &[u8; 4] = b"DCKP";
+const VERSION: u32 = 1;
+
+/// Checkpoint payload: the model plus loop state to resume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: usize,
+    pub seed: u64,
+    pub virtual_time: f64,
+    pub tensors: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn from_params(
+        manifest: &Manifest,
+        params: &ParamStore,
+        step: usize,
+        seed: u64,
+        virtual_time: f64,
+    ) -> Self {
+        let tensors = manifest
+            .params
+            .iter()
+            .zip(params.tensors())
+            .map(|(spec, t)| (spec.name.clone(), t.clone()))
+            .collect();
+        Self { step, seed, virtual_time, tensors }
+    }
+
+    /// Restore into a ParamStore, validating names and shapes against
+    /// the manifest (refuses silently-wrong restores).
+    pub fn into_params(self, manifest: &Manifest) -> Result<ParamStore> {
+        if self.tensors.len() != manifest.params.len() {
+            return Err(Error::Runtime(format!(
+                "checkpoint has {} tensors, manifest {}",
+                self.tensors.len(),
+                manifest.params.len()
+            )));
+        }
+        let mut store = ParamStore::init(manifest, self.seed);
+        for ((spec, slot), (name, data)) in manifest
+            .params
+            .iter()
+            .zip(store.tensors_mut())
+            .zip(self.tensors)
+        {
+            if spec.name != name {
+                return Err(Error::Runtime(format!(
+                    "checkpoint tensor `{name}` where manifest expects `{}`",
+                    spec.name
+                )));
+            }
+            if spec.numel() != data.len() {
+                return Err(Error::Runtime(format!(
+                    "tensor `{name}`: {} elements, expected {}",
+                    data.len(),
+                    spec.numel()
+                )));
+            }
+            *slot = data;
+        }
+        Ok(store)
+    }
+
+    /// Atomic save: write to `<path>.tmp`, fsync, rename.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let file = std::fs::File::create(&tmp)?;
+            let mut w = BufWriter::new(file);
+            w.write_all(MAGIC)?;
+            w.write_all(&VERSION.to_le_bytes())?;
+            w.write_all(&(self.step as u64).to_le_bytes())?;
+            w.write_all(&self.seed.to_le_bytes())?;
+            w.write_all(&self.virtual_time.to_le_bytes())?;
+            w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+            for (name, data) in &self.tensors {
+                let nb = name.as_bytes();
+                w.write_all(&(nb.len() as u32).to_le_bytes())?;
+                w.write_all(nb)?;
+                w.write_all(&(data.len() as u64).to_le_bytes())?;
+                // little-endian f32 payload
+                for &x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            w.flush()?;
+            w.get_ref().sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)?;
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Runtime("not a DropCompute checkpoint".into()));
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            return Err(Error::Runtime(format!(
+                "checkpoint version {version}, expected {VERSION}"
+            )));
+        }
+        let step = read_u64(&mut r)? as usize;
+        let seed = read_u64(&mut r)?;
+        let virtual_time = f64::from_le_bytes(read_bytes::<8>(&mut r)?);
+        let count = read_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut nb = vec![0u8; name_len];
+            r.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)
+                .map_err(|_| Error::Runtime("bad tensor name".into()))?;
+            let len = read_u64(&mut r)? as usize;
+            let mut bytes = vec![0u8; len * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push((name, data));
+        }
+        Ok(Self { step, seed, virtual_time, tensors })
+    }
+}
+
+fn read_bytes<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    Ok(u32::from_le_bytes(read_bytes::<4>(r)?))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    Ok(u64::from_le_bytes(read_bytes::<8>(r)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        Manifest::load(&PathBuf::from("artifacts"), "test").unwrap()
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dc_ckpt_{name}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let m = manifest();
+        let params = ParamStore::init(&m, 3);
+        let ckpt = Checkpoint::from_params(&m, &params, 42, 3, 123.5);
+        let path = tmpdir("roundtrip").join("c.dckp");
+        ckpt.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, ckpt);
+        let restored = loaded.into_params(&m).unwrap();
+        assert_eq!(restored.tensors(), params.tensors());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let dir = tmpdir("garbage");
+        let bad = dir.join("bad.dckp");
+        std::fs::write(&bad, b"NOPE").unwrap();
+        assert!(Checkpoint::load(&bad).is_err());
+        // truncated real checkpoint
+        let m = manifest();
+        let ckpt =
+            Checkpoint::from_params(&m, &ParamStore::init(&m, 0), 1, 0, 0.0);
+        let good = dir.join("good.dckp");
+        ckpt.save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        let trunc = dir.join("trunc.dckp");
+        std::fs::write(&trunc, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&trunc).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn refuses_mismatched_manifest() {
+        let m = manifest();
+        let mut ckpt =
+            Checkpoint::from_params(&m, &ParamStore::init(&m, 0), 1, 0, 0.0);
+        ckpt.tensors[0].0 = "wrong_name".into();
+        assert!(ckpt.into_params(&m).is_err());
+        let mut ckpt2 =
+            Checkpoint::from_params(&m, &ParamStore::init(&m, 0), 1, 0, 0.0);
+        ckpt2.tensors[0].1.pop();
+        assert!(ckpt2.into_params(&m).is_err());
+    }
+
+    #[test]
+    fn resume_training_continues_descent() {
+        // Save mid-run, restore into a fresh trainer, keep training: the
+        // loss must continue from (not reset to) the checkpointed level.
+        crate::util::set_verbosity(0);
+        let mut cfg = crate::config::Config::default();
+        cfg.train.model_size = "test".into();
+        cfg.train.steps = 6;
+        cfg.train.lr = 3e-3;
+        cfg.train.log_every = 1000;
+        cfg.cluster.workers = 3;
+        cfg.cluster.accumulations = 2;
+        let mut t1 = crate::train::Trainer::new(&cfg).unwrap();
+        let log1 = t1.train().unwrap();
+        let m = manifest();
+        let path = tmpdir("resume").join("mid.dckp");
+        Checkpoint::from_params(&m, &t1.params, 6, cfg.train.seed, 0.0)
+            .save(&path)
+            .unwrap();
+
+        let mut t2 = crate::train::Trainer::new(&cfg).unwrap();
+        t2.params =
+            Checkpoint::load(&path).unwrap().into_params(&m).unwrap();
+        let rec = t2.train_step(6).unwrap();
+        assert!(
+            rec.loss < log1.steps[0].loss * 0.98,
+            "resumed loss {} should continue below the fresh-start {}",
+            rec.loss,
+            log1.steps[0].loss
+        );
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

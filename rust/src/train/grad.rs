@@ -1,0 +1,143 @@
+//! Gradient aggregation under stochastic batch size.
+//!
+//! With DropCompute the per-step sample count is random; Theorem 4.1's
+//! importance weighting (`alpha_i = b_i`) corresponds to normalizing the
+//! summed gradient by the *computed* number of micro-batches. The paper
+//! also evaluates normalizing by the *scheduled* count (App. B.2.2's
+//! "no correction", which implicitly scales the step down by the drop
+//! rate) — both are provided.
+
+/// Normalization mode for the aggregated gradient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradNorm {
+    /// Divide by micro-batches actually computed (the stochastic
+    /// correction; unbiased w.r.t. Eq. 1).
+    Computed,
+    /// Divide by `N * M` regardless of drops (paper's "None" row).
+    Scheduled,
+}
+
+/// Accumulates micro-batch gradient sums and produces the step gradient.
+#[derive(Debug)]
+pub struct GradAccumulator {
+    sum: Vec<Vec<f32>>,
+    computed: usize,
+    scheduled: usize,
+    pub norm: GradNorm,
+    loss_sum: f64,
+}
+
+impl GradAccumulator {
+    pub fn new(shapes: &[Vec<f32>], norm: GradNorm) -> Self {
+        Self {
+            sum: shapes.iter().map(|t| vec![0.0; t.len()]).collect(),
+            computed: 0,
+            scheduled: 0,
+            norm,
+            loss_sum: 0.0,
+        }
+    }
+
+    /// Add one computed micro-batch gradient.
+    pub fn add(&mut self, grads: &[Vec<f32>], loss: f64) {
+        debug_assert_eq!(grads.len(), self.sum.len());
+        for (s, g) in self.sum.iter_mut().zip(grads) {
+            for (a, &b) in s.iter_mut().zip(g) {
+                *a += b;
+            }
+        }
+        self.computed += 1;
+        self.scheduled += 1;
+        self.loss_sum += loss;
+    }
+
+    /// Record a dropped micro-batch (affects `Scheduled` normalization).
+    pub fn add_dropped(&mut self) {
+        self.scheduled += 1;
+    }
+
+    pub fn computed(&self) -> usize {
+        self.computed
+    }
+
+    pub fn scheduled(&self) -> usize {
+        self.scheduled
+    }
+
+    /// Mean loss over computed micro-batches.
+    pub fn mean_loss(&self) -> f64 {
+        if self.computed == 0 {
+            f64::NAN
+        } else {
+            self.loss_sum / self.computed as f64
+        }
+    }
+
+    /// Finalize into the step gradient; `None` if nothing was computed
+    /// (the step must then be skipped — consensus preserved since every
+    /// worker sees the same all-reduced count).
+    pub fn finalize(mut self) -> Option<(Vec<Vec<f32>>, f64)> {
+        if self.computed == 0 {
+            return None;
+        }
+        let denom = match self.norm {
+            GradNorm::Computed => self.computed,
+            GradNorm::Scheduled => self.scheduled,
+        } as f32;
+        for s in self.sum.iter_mut() {
+            for x in s.iter_mut() {
+                *x /= denom;
+            }
+        }
+        let loss = self.loss_sum / self.computed as f64;
+        Some((self.sum, loss))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<Vec<f32>> {
+        vec![vec![0.0; 3], vec![0.0; 2]]
+    }
+
+    #[test]
+    fn computed_normalization_is_mean() {
+        let mut acc = GradAccumulator::new(&shapes(), GradNorm::Computed);
+        acc.add(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0]], 1.0);
+        acc.add(&[vec![3.0, 2.0, 1.0], vec![0.0, 1.0]], 3.0);
+        acc.add_dropped();
+        let (g, loss) = acc.finalize().unwrap();
+        assert_eq!(g[0], vec![2.0, 2.0, 2.0]);
+        assert_eq!(g[1], vec![2.0, 3.0]);
+        assert_eq!(loss, 2.0);
+    }
+
+    #[test]
+    fn scheduled_normalization_shrinks_with_drops() {
+        let mut acc = GradAccumulator::new(&shapes(), GradNorm::Scheduled);
+        acc.add(&[vec![2.0, 2.0, 2.0], vec![2.0, 2.0]], 1.0);
+        acc.add_dropped(); // scheduled 2, computed 1
+        let (g, _) = acc.finalize().unwrap();
+        assert_eq!(g[0], vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn all_dropped_yields_none() {
+        let mut acc = GradAccumulator::new(&shapes(), GradNorm::Computed);
+        acc.add_dropped();
+        acc.add_dropped();
+        assert!(acc.finalize().is_none());
+    }
+
+    #[test]
+    fn counts_tracked() {
+        let mut acc = GradAccumulator::new(&shapes(), GradNorm::Computed);
+        acc.add(&[vec![0.0; 3], vec![0.0; 2]], 0.5);
+        acc.add_dropped();
+        assert_eq!(acc.computed(), 1);
+        assert_eq!(acc.scheduled(), 2);
+        assert_eq!(acc.mean_loss(), 0.5);
+    }
+}

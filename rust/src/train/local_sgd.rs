@@ -1,0 +1,201 @@
+//! Local-SGD (Lin et al. 2020) with optional DropCompute (App. B.3).
+//!
+//! Workers keep private parameter replicas, take `H` local SGD steps
+//! (one micro-batch each), then average parameters. DropCompute
+//! integrates per *local step*: a worker whose compute exceeds the
+//! threshold skips that local update (its replica simply doesn't move),
+//! bounding the straggler's effect on the period time.
+
+use std::path::Path;
+
+use crate::config::Config;
+use crate::data::ShardedLoader;
+use crate::metrics::{RunLog, StepRecord};
+use crate::runtime::ModelRuntime;
+use crate::sim::ClusterSim;
+use crate::util::{Result, Stopwatch};
+
+use super::params::ParamStore;
+
+/// Local-SGD trainer: private replicas + periodic averaging.
+pub struct LocalSgdTrainer {
+    pub cfg: Config,
+    runtime: ModelRuntime,
+    replicas: Vec<ParamStore>,
+    loaders: Vec<ShardedLoader>,
+    sim: ClusterSim,
+    pub threshold: Option<f64>,
+    virtual_time: f64,
+}
+
+impl LocalSgdTrainer {
+    pub fn new(cfg: &Config, threshold: Option<f64>) -> Result<Self> {
+        let runtime =
+            ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.train.model_size)?;
+        let params = ParamStore::init(&runtime.manifest, cfg.train.seed);
+        let dims = &runtime.manifest.dims;
+        let loaders = (0..cfg.cluster.workers)
+            .map(|n| {
+                ShardedLoader::new(
+                    dims.vocab,
+                    dims.micro_batch,
+                    dims.seq_len,
+                    &cfg.data,
+                    n,
+                )
+            })
+            .collect();
+        // one micro-batch per local step
+        let mut sim_cfg = cfg.cluster.clone();
+        sim_cfg.accumulations = 1;
+        let sim = ClusterSim::new(&sim_cfg, cfg.train.seed ^ 0x10CA1);
+        Ok(Self {
+            cfg: cfg.clone(),
+            replicas: vec![params; cfg.cluster.workers],
+            runtime,
+            loaders,
+            sim,
+            threshold,
+            virtual_time: 0.0,
+        })
+    }
+
+    /// One synchronization period: `H` local steps then averaging.
+    /// Returns (record, local updates performed).
+    pub fn period(&mut self, period_idx: usize) -> Result<StepRecord> {
+        let sw = Stopwatch::start();
+        let h = self.cfg.train.local_sgd_period;
+        let outcome = self.sim.local_sgd_period(h, self.threshold);
+
+        let lr = self.cfg.train.lr;
+        let mut loss_sum = 0.0;
+        let mut loss_count = 0usize;
+        for (n, &done) in outcome.completed.iter().enumerate() {
+            // `done` of the H local steps survived for worker n.
+            for _ in 0..done {
+                let mb = self.loaders[n].next();
+                self.runtime.upload_params(self.replicas[n].tensors())?;
+                let out = self.runtime.grad(&mb.tokens)?;
+                self.replicas[n].axpy(-(lr as f32), &out.grads);
+                loss_sum += out.loss as f64;
+                loss_count += 1;
+            }
+        }
+
+        // Parameter averaging (the periodic synchronization).
+        let n_workers = self.replicas.len();
+        let mut avg = self.replicas[0].clone();
+        for t in avg.tensors_mut() {
+            for x in t.iter_mut() {
+                *x /= n_workers as f32;
+            }
+        }
+        for rep in &self.replicas[1..] {
+            let scaled: Vec<Vec<f32>> = rep
+                .tensors()
+                .iter()
+                .map(|t| t.iter().map(|&x| x / n_workers as f32).collect())
+                .collect();
+            avg.axpy(1.0, &scaled);
+        }
+        for rep in self.replicas.iter_mut() {
+            *rep = avg.clone();
+        }
+
+        self.virtual_time += outcome.iter_time;
+        Ok(StepRecord {
+            step: period_idx,
+            virtual_time: self.virtual_time,
+            wall_time: sw.seconds(),
+            iter_time: outcome.iter_time,
+            completed_microbatches: outcome.total_completed(),
+            scheduled_microbatches: n_workers * h,
+            loss: if loss_count > 0 {
+                loss_sum / loss_count as f64
+            } else {
+                f64::NAN
+            },
+            lr,
+            grad_norm: 0.0,
+        })
+    }
+
+    pub fn train(&mut self, periods: usize) -> Result<RunLog> {
+        let mut log = RunLog::new(format!(
+            "local_sgd_h{}_{}",
+            self.cfg.train.local_sgd_period,
+            if self.threshold.is_some() { "dropcompute" } else { "plain" }
+        ));
+        for p in 0..periods {
+            log.push(self.period(p)?);
+        }
+        log.set_summary("total_virtual_time", log.total_virtual_time());
+        Ok(log)
+    }
+
+    /// Consensus check helper: max parameter divergence across replicas.
+    pub fn replica_divergence(&self) -> f32 {
+        let first = &self.replicas[0];
+        let mut max_d = 0.0f32;
+        for rep in &self.replicas[1..] {
+            for (a, b) in first.tensors().iter().zip(rep.tensors()) {
+                for (x, y) in a.iter().zip(b) {
+                    max_d = max_d.max((x - y).abs());
+                }
+            }
+        }
+        max_d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StragglerKind;
+
+    fn cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.train.model_size = "test".into();
+        cfg.train.lr = 3e-3;
+        cfg.train.local_sgd_period = 4;
+        cfg.cluster.workers = 3;
+        cfg.cluster.accumulations = 1;
+        cfg
+    }
+
+    #[test]
+    fn consensus_after_each_period() {
+        crate::util::set_verbosity(0);
+        let mut t = LocalSgdTrainer::new(&cfg(), None).unwrap();
+        t.period(0).unwrap();
+        assert_eq!(t.replica_divergence(), 0.0);
+    }
+
+    #[test]
+    fn loss_decreases_over_periods() {
+        crate::util::set_verbosity(0);
+        let mut t = LocalSgdTrainer::new(&cfg(), None).unwrap();
+        let log = t.train(8).unwrap();
+        let first = log.steps[0].loss;
+        let last = log.steps.last().unwrap().loss;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn dropcompute_bounds_period_time_under_stragglers() {
+        crate::util::set_verbosity(0);
+        let mut c = cfg();
+        c.cluster.stragglers = StragglerKind::Uniform { p: 0.3, delay: 1.0 };
+        let mut plain = LocalSgdTrainer::new(&c, None).unwrap();
+        let mut dc = LocalSgdTrainer::new(&c, Some(0.9)).unwrap();
+        let lp = plain.train(5).unwrap();
+        let ld = dc.train(5).unwrap();
+        assert!(
+            ld.total_virtual_time() < lp.total_virtual_time(),
+            "dc {} vs plain {}",
+            ld.total_virtual_time(),
+            lp.total_virtual_time()
+        );
+        assert!(ld.mean_drop_rate() > 0.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Learning-rate schedules (the You et al. 2019 BERT regime and friends).
+
+use crate::config::LrSchedule;
+
+/// Learning rate at `step` of `total` steps for base rate `lr`.
+pub fn lr_at(schedule: LrSchedule, lr: f64, step: usize, total: usize) -> f64 {
+    let total = total.max(1);
+    let t = (step as f64 / total as f64).min(1.0);
+    match schedule {
+        LrSchedule::Constant => lr,
+        LrSchedule::WarmupLinear { warmup_ratio } => {
+            warmup_then(lr, t, warmup_ratio, |p| 1.0 - p)
+        }
+        LrSchedule::WarmupCosine { warmup_ratio } => warmup_then(
+            lr,
+            t,
+            warmup_ratio,
+            |p| 0.5 * (1.0 + (std::f64::consts::PI * p).cos()),
+        ),
+        LrSchedule::WarmupPoly { warmup_ratio, power } => {
+            warmup_then(lr, t, warmup_ratio, |p| (1.0 - p).powf(power))
+        }
+    }
+}
+
+fn warmup_then(lr: f64, t: f64, warmup: f64, decay: impl Fn(f64) -> f64) -> f64 {
+    if warmup > 0.0 && t < warmup {
+        lr * t / warmup
+    } else {
+        let p = if warmup < 1.0 { (t - warmup) / (1.0 - warmup) } else { 1.0 };
+        lr * decay(p.clamp(0.0, 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        for s in [0, 50, 100] {
+            assert_eq!(lr_at(LrSchedule::Constant, 0.1, s, 100), 0.1);
+        }
+    }
+
+    #[test]
+    fn warmup_linear_shape() {
+        let sch = LrSchedule::WarmupLinear { warmup_ratio: 0.1 };
+        assert_eq!(lr_at(sch, 1.0, 0, 100), 0.0);
+        assert!((lr_at(sch, 1.0, 5, 100) - 0.5).abs() < 1e-12);
+        assert!((lr_at(sch, 1.0, 10, 100) - 1.0).abs() < 1e-12);
+        assert!((lr_at(sch, 1.0, 55, 100) - 0.5).abs() < 1e-12);
+        assert!(lr_at(sch, 1.0, 100, 100) < 1e-12);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let sch = LrSchedule::WarmupCosine { warmup_ratio: 0.0 };
+        assert!((lr_at(sch, 1.0, 0, 100) - 1.0).abs() < 1e-12);
+        assert!(lr_at(sch, 1.0, 100, 100) < 1e-12);
+        // midpoint = 0.5
+        assert!((lr_at(sch, 1.0, 50, 100) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poly_power_two_decays_faster_than_linear() {
+        let lin = LrSchedule::WarmupPoly { warmup_ratio: 0.0, power: 1.0 };
+        let sq = LrSchedule::WarmupPoly { warmup_ratio: 0.0, power: 2.0 };
+        let l = lr_at(lin, 1.0, 50, 100);
+        let s = lr_at(sq, 1.0, 50, 100);
+        assert!(s < l);
+        assert!((l - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_negative_never_exceeds_base() {
+        for sch in [
+            LrSchedule::WarmupLinear { warmup_ratio: 0.2843 },
+            LrSchedule::WarmupCosine { warmup_ratio: 0.128 },
+            LrSchedule::WarmupPoly { warmup_ratio: 0.1, power: 1.0 },
+        ] {
+            for s in 0..=200 {
+                let v = lr_at(sch, 0.006, s, 200);
+                assert!((0.0..=0.006 + 1e-12).contains(&v), "{sch:?} {s} {v}");
+            }
+        }
+    }
+}

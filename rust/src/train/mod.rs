@@ -1,0 +1,20 @@
+//! Training: parameters, optimizers, schedules, gradient aggregation,
+//! the synchronous DropCompute trainer and the Local-SGD variant.
+
+pub mod grad;
+pub mod local_sgd;
+pub mod lr;
+pub mod optimizer;
+pub mod params;
+pub mod checkpoint;
+pub mod classifier;
+pub mod trainer;
+
+pub use grad::{GradAccumulator, GradNorm};
+pub use local_sgd::LocalSgdTrainer;
+pub use lr::lr_at;
+pub use optimizer::{clip_global_norm, Optimizer, OptimizerConfig};
+pub use params::ParamStore;
+pub use checkpoint::Checkpoint;
+pub use classifier::{train_classifier, ClassifierConfig, ClassifierRun, LrCorrection};
+pub use trainer::Trainer;

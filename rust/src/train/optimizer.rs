@@ -1,0 +1,367 @@
+//! Update rules: SGD / Momentum / Adam / AdamW / LAMB / LARS / LANS.
+//!
+//! The paper's experiments use LAMB (BERT-Large pretraining, You et al.
+//! 2019), LANS (BERT-1.5B, Zheng et al. 2020), SGD+momentum (ResNet-50,
+//! Goyal et al. 2017) and LARS (MLPerf regime) — all are implemented so
+//! every generalization experiment runs with its original optimizer
+//! family. All state lives Rust-side over the flat parameter tensors.
+
+use crate::config::OptimizerKind;
+use crate::runtime::Manifest;
+
+use super::params::ParamStore;
+
+/// Hyper-parameters common across rules.
+#[derive(Debug, Clone, Copy)]
+pub struct OptimizerConfig {
+    pub kind: OptimizerKind,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub momentum: f64,
+    /// LARS/LAMB trust-ratio clamp.
+    pub trust_clip: f64,
+}
+
+impl OptimizerConfig {
+    pub fn new(kind: OptimizerKind, weight_decay: f64) -> Self {
+        Self {
+            kind,
+            weight_decay,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+            momentum: 0.9,
+            trust_clip: 10.0,
+        }
+    }
+}
+
+/// Optimizer with per-tensor state.
+pub struct Optimizer {
+    cfg: OptimizerConfig,
+    /// First moment / momentum buffers.
+    m: Vec<Vec<f32>>,
+    /// Second moment buffers (adaptive rules only).
+    v: Vec<Vec<f32>>,
+    /// Which tensors receive weight decay.
+    decayed: Vec<bool>,
+    step: u64,
+}
+
+impl Optimizer {
+    pub fn new(cfg: OptimizerConfig, manifest: &Manifest, params: &ParamStore)
+        -> Self
+    {
+        let need_v = matches!(
+            cfg.kind,
+            OptimizerKind::Adam
+                | OptimizerKind::AdamW
+                | OptimizerKind::Lamb
+                | OptimizerKind::Lans
+        );
+        Self {
+            cfg,
+            m: params.zeros_like().tensors().to_vec(),
+            v: if need_v {
+                params.zeros_like().tensors().to_vec()
+            } else {
+                Vec::new()
+            },
+            decayed: manifest.params.iter().map(|p| p.decayed()).collect(),
+            step: 0,
+        }
+    }
+
+    pub fn kind(&self) -> OptimizerKind {
+        self.cfg.kind
+    }
+
+    /// Apply one update with learning rate `lr` and gradients `grads`.
+    pub fn step(&mut self, params: &mut ParamStore, grads: &[Vec<f32>], lr: f64) {
+        self.step += 1;
+        match self.cfg.kind {
+            OptimizerKind::Sgd => self.sgd(params, grads, lr),
+            OptimizerKind::Momentum => self.momentum(params, grads, lr),
+            OptimizerKind::Adam => self.adam(params, grads, lr, false, false),
+            OptimizerKind::AdamW => self.adam(params, grads, lr, true, false),
+            OptimizerKind::Lamb => self.adam(params, grads, lr, true, true),
+            OptimizerKind::Lars => self.lars(params, grads, lr),
+            OptimizerKind::Lans => self.lans(params, grads, lr),
+        }
+    }
+
+    fn sgd(&mut self, params: &mut ParamStore, grads: &[Vec<f32>], lr: f64) {
+        let wd = self.cfg.weight_decay as f32;
+        for (i, (t, g)) in
+            params.tensors_mut().iter_mut().zip(grads).enumerate()
+        {
+            let decay = if self.decayed[i] { wd } else { 0.0 };
+            for (x, &gx) in t.iter_mut().zip(g) {
+                *x -= (lr as f32) * (gx + decay * *x);
+            }
+        }
+    }
+
+    fn momentum(&mut self, params: &mut ParamStore, grads: &[Vec<f32>], lr: f64) {
+        let mu = self.cfg.momentum as f32;
+        let wd = self.cfg.weight_decay as f32;
+        for (i, (t, g)) in
+            params.tensors_mut().iter_mut().zip(grads).enumerate()
+        {
+            let decay = if self.decayed[i] { wd } else { 0.0 };
+            for ((x, &gx), m) in t.iter_mut().zip(g).zip(self.m[i].iter_mut()) {
+                *m = mu * *m + gx + decay * *x;
+                *x -= (lr as f32) * *m;
+            }
+        }
+    }
+
+    /// Adam family. `decoupled_wd` = AdamW-style decay;
+    /// `trust_ratio` = LAMB layer-wise adaptation.
+    fn adam(
+        &mut self,
+        params: &mut ParamStore,
+        grads: &[Vec<f32>],
+        lr: f64,
+        decoupled_wd: bool,
+        trust_ratio: bool,
+    ) {
+        let (b1, b2) = (self.cfg.beta1 as f32, self.cfg.beta2 as f32);
+        let eps = self.cfg.eps as f32;
+        let wd = self.cfg.weight_decay as f32;
+        let bc1 = 1.0 - (self.cfg.beta1).powi(self.step as i32) as f32;
+        let bc2 = 1.0 - (self.cfg.beta2).powi(self.step as i32) as f32;
+        for (i, (t, g)) in
+            params.tensors_mut().iter_mut().zip(grads).enumerate()
+        {
+            let decay = if self.decayed[i] { wd } else { 0.0 };
+            // update moments + build raw update direction
+            let mut upd = vec![0.0f32; t.len()];
+            for (j, (&gx, x)) in g.iter().zip(t.iter()).enumerate() {
+                let gx = if decoupled_wd { gx } else { gx + decay * *x };
+                let m = &mut self.m[i][j];
+                let v = &mut self.v[i][j];
+                *m = b1 * *m + (1.0 - b1) * gx;
+                *v = b2 * *v + (1.0 - b2) * gx * gx;
+                let mhat = *m / bc1;
+                let vhat = *v / bc2;
+                upd[j] = mhat / (vhat.sqrt() + eps);
+                if decoupled_wd {
+                    upd[j] += decay * *x;
+                }
+            }
+            let ratio = if trust_ratio {
+                trust(t, &upd, self.cfg.trust_clip as f32)
+            } else {
+                1.0
+            };
+            for (x, &u) in t.iter_mut().zip(&upd) {
+                *x -= (lr as f32) * ratio * u;
+            }
+        }
+    }
+
+    fn lars(&mut self, params: &mut ParamStore, grads: &[Vec<f32>], lr: f64) {
+        let mu = self.cfg.momentum as f32;
+        let wd = self.cfg.weight_decay as f32;
+        for (i, (t, g)) in
+            params.tensors_mut().iter_mut().zip(grads).enumerate()
+        {
+            let decay = if self.decayed[i] { wd } else { 0.0 };
+            let upd: Vec<f32> =
+                g.iter().zip(t.iter()).map(|(&gx, &x)| gx + decay * x).collect();
+            let ratio = trust(t, &upd, self.cfg.trust_clip as f32);
+            for ((x, &u), m) in t.iter_mut().zip(&upd).zip(self.m[i].iter_mut())
+            {
+                *m = mu * *m + ratio * u;
+                *x -= (lr as f32) * *m;
+            }
+        }
+    }
+
+    /// LANS (Zheng et al. 2020): Nesterov-style LAMB — the BERT-1.5B
+    /// optimizer of the paper's runtime experiments (App. B.1).
+    fn lans(&mut self, params: &mut ParamStore, grads: &[Vec<f32>], lr: f64) {
+        let (b1, b2) = (self.cfg.beta1 as f32, self.cfg.beta2 as f32);
+        let eps = self.cfg.eps as f32;
+        let wd = self.cfg.weight_decay as f32;
+        let bc1 = 1.0 - (self.cfg.beta1).powi(self.step as i32) as f32;
+        let bc2 = 1.0 - (self.cfg.beta2).powi(self.step as i32) as f32;
+        for (i, (t, g)) in
+            params.tensors_mut().iter_mut().zip(grads).enumerate()
+        {
+            let decay = if self.decayed[i] { wd } else { 0.0 };
+            // normalize the gradient per tensor (LANS step 1)
+            let gnorm = (g.iter().map(|&x| x * x).sum::<f32>()).sqrt().max(eps);
+            let mut upd_m = vec![0.0f32; t.len()];
+            let mut upd_g = vec![0.0f32; t.len()];
+            for (j, (&graw, x)) in g.iter().zip(t.iter()).enumerate() {
+                let gx = graw / gnorm;
+                let m = &mut self.m[i][j];
+                let v = &mut self.v[i][j];
+                *m = b1 * *m + (1.0 - b1) * gx;
+                *v = b2 * *v + (1.0 - b2) * gx * gx;
+                let denom = (*v / bc2).sqrt() + eps;
+                upd_m[j] = (*m / bc1) / denom + decay * *x;
+                upd_g[j] = gx / denom + decay * *x;
+            }
+            let r_m = trust(t, &upd_m, self.cfg.trust_clip as f32);
+            let r_g = trust(t, &upd_g, self.cfg.trust_clip as f32);
+            for ((x, &um), &ug) in t.iter_mut().zip(&upd_m).zip(&upd_g) {
+                *x -= (lr as f32) * (b1 * r_m * um + (1.0 - b1) * r_g * ug);
+            }
+        }
+    }
+}
+
+/// Layer-wise trust ratio `phi(||w||)/||u||` with clamping (LARS/LAMB).
+fn trust(w: &[f32], upd: &[f32], clip: f32) -> f32 {
+    let wn = (w.iter().map(|&x| x * x).sum::<f32>()).sqrt();
+    let un = (upd.iter().map(|&x| x * x).sum::<f32>()).sqrt();
+    if wn > 0.0 && un > 0.0 {
+        (wn / un).min(clip)
+    } else {
+        1.0
+    }
+}
+
+/// Clip gradients by global norm (returns pre-clip norm).
+pub fn clip_global_norm(grads: &mut [Vec<f32>], max_norm: f64) -> f64 {
+    let norm = ParamStore::global_norm(grads);
+    if max_norm > 0.0 && norm > max_norm {
+        let scale = (max_norm / norm) as f32;
+        for g in grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn setup(kind: OptimizerKind) -> (Optimizer, ParamStore, Manifest) {
+        let m = Manifest::load(&PathBuf::from("artifacts"), "test").unwrap();
+        let p = ParamStore::init(&m, 1);
+        let opt = Optimizer::new(OptimizerConfig::new(kind, 0.01), &m, &p);
+        (opt, p, m)
+    }
+
+    /// Quadratic sanity: every optimizer must reduce ||w||^2 given
+    /// grads = w (loss = ||w||^2/2).
+    #[test]
+    fn all_optimizers_descend_quadratic() {
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::Momentum,
+            OptimizerKind::Adam,
+            OptimizerKind::AdamW,
+            OptimizerKind::Lamb,
+            OptimizerKind::Lars,
+            OptimizerKind::Lans,
+        ] {
+            let (mut opt, mut p, _) = setup(kind);
+            let before = ParamStore::global_norm(p.tensors());
+            for _ in 0..20 {
+                let grads: Vec<Vec<f32>> = p.tensors().to_vec();
+                opt.step(&mut p, &grads, 1e-2);
+            }
+            let after = ParamStore::global_norm(p.tensors());
+            assert!(after < before, "{kind:?}: {before} -> {after}");
+        }
+    }
+
+    #[test]
+    fn sgd_matches_manual_update() {
+        let (mut opt, mut p, m) = setup(OptimizerKind::Sgd);
+        // pick a decayed tensor (attn.wq), not a LayerNorm scale
+        let idx = m.params.iter().position(|s| s.decayed()).unwrap();
+        let w0 = p.tensors()[idx][0];
+        let grads: Vec<Vec<f32>> =
+            p.tensors().iter().map(|t| vec![0.5; t.len()]).collect();
+        opt.step(&mut p, &grads, 0.1);
+        let want = w0 - 0.1 * (0.5 + 0.01 * w0);
+        assert!((p.tensors()[idx][0] - want).abs() < 1e-7);
+    }
+
+    #[test]
+    fn no_decay_on_norm_tensors() {
+        // With zero gradients, non-decayed tensors must not move under
+        // SGD; decayed ones shrink.
+        let (mut opt, mut p, m) = setup(OptimizerKind::Sgd);
+        let zeros: Vec<Vec<f32>> =
+            p.tensors().iter().map(|t| vec![0.0; t.len()]).collect();
+        let before = p.tensors().to_vec();
+        opt.step(&mut p, &zeros, 0.1);
+        for ((spec, t0), t1) in
+            m.params.iter().zip(&before).zip(p.tensors())
+        {
+            if spec.decayed() {
+                // shrinks multiplicatively
+                for (a, b) in t0.iter().zip(t1) {
+                    assert!((b - a * (1.0 - 0.1 * 0.01)).abs() < 1e-7);
+                }
+            } else {
+                assert_eq!(t0, t1, "{}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        // First Adam step with grad g moves by ~lr*sign(g) regardless of
+        // magnitude (bias-corrected mhat/sqrt(vhat) = sign at step 1).
+        let (mut opt, mut p, _) = setup(OptimizerKind::Adam);
+        let w0 = p.tensors()[2][0];
+        let grads: Vec<Vec<f32>> =
+            p.tensors().iter().map(|t| vec![1e-3; t.len()]).collect();
+        opt.step(&mut p, &grads, 0.01);
+        let moved = w0 - p.tensors()[2][0];
+        assert!((moved - 0.01).abs() < 2e-3, "moved {moved}");
+    }
+
+    #[test]
+    fn lamb_trust_ratio_bounds_update() {
+        let (mut opt, mut p, _) = setup(OptimizerKind::Lamb);
+        let before = p.tensors().to_vec();
+        // gigantic gradients: LAMB normalizes by trust ratio
+        let grads: Vec<Vec<f32>> =
+            p.tensors().iter().map(|t| vec![1e6; t.len()]).collect();
+        opt.step(&mut p, &grads, 0.01);
+        for (t0, t1) in before.iter().zip(p.tensors()) {
+            let wn = (t0.iter().map(|&x| x * x).sum::<f32>()).sqrt();
+            if wn == 0.0 {
+                // zero-norm tensors (fresh biases) get ratio 1 by
+                // definition; the trust bound doesn't apply.
+                continue;
+            }
+            let dn = (t0
+                .iter()
+                .zip(t1)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>())
+            .sqrt();
+            // ||delta|| <= lr * ||w|| (trust ratio r = ||w||/||u||)
+            assert!(dn <= 0.0101 * wn + 1e-6, "{dn} vs {wn}");
+        }
+    }
+
+    #[test]
+    fn clip_global_norm_scales() {
+        let mut g = vec![vec![3.0f32, 4.0]];
+        let norm = clip_global_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        let after = ParamStore::global_norm(&g);
+        assert!((after - 1.0).abs() < 1e-6);
+        // below threshold: untouched
+        let mut g2 = vec![vec![0.3f32, 0.4]];
+        clip_global_norm(&mut g2, 1.0);
+        assert_eq!(g2[0], vec![0.3, 0.4]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Flat parameter store: init, vector algebra, (de)flattening.
+//!
+//! Initialization reproduces `model.py::param_specs` hints so a Rust-side
+//! init gives the same statistics as the JAX reference (python never runs
+//! at training time).
+
+use crate::rng::Xoshiro256pp;
+use crate::runtime::{InitKind, Manifest};
+
+/// All model parameters as per-tensor flat `Vec<f32>`s.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    tensors: Vec<Vec<f32>>,
+    /// Total element count.
+    numel: usize,
+}
+
+impl ParamStore {
+    /// Initialize from manifest init hints with a seeded RNG.
+    pub fn init(manifest: &Manifest, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x9E37_79B9);
+        let tensors: Vec<Vec<f32>> = manifest
+            .params
+            .iter()
+            .map(|spec| {
+                let n = spec.numel();
+                match spec.init {
+                    InitKind::Zeros => vec![0.0; n],
+                    InitKind::Ones => vec![1.0; n],
+                    InitKind::Normal => (0..n)
+                        .map(|_| {
+                            (rng.next_standard_normal() * spec.scale) as f32
+                        })
+                        .collect(),
+                }
+            })
+            .collect();
+        let numel = tensors.iter().map(Vec::len).sum();
+        Self { tensors, numel }
+    }
+
+    /// Zeros with the same shapes (gradient accumulators etc).
+    pub fn zeros_like(&self) -> Self {
+        Self {
+            tensors: self.tensors.iter().map(|t| vec![0.0; t.len()]).collect(),
+            numel: self.numel,
+        }
+    }
+
+    pub fn tensors(&self) -> &[Vec<f32>] {
+        &self.tensors
+    }
+
+    pub fn tensors_mut(&mut self) -> &mut [Vec<f32>] {
+        &mut self.tensors
+    }
+
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+
+    /// `self += alpha * grads` (per-tensor).
+    pub fn axpy(&mut self, alpha: f32, grads: &[Vec<f32>]) {
+        assert_eq!(grads.len(), self.tensors.len());
+        for (t, g) in self.tensors.iter_mut().zip(grads) {
+            debug_assert_eq!(t.len(), g.len());
+            for (x, &d) in t.iter_mut().zip(g) {
+                *x += alpha * d;
+            }
+        }
+    }
+
+    /// Global L2 norm across all tensors.
+    pub fn global_norm(tensors: &[Vec<f32>]) -> f64 {
+        tensors
+            .iter()
+            .flat_map(|t| t.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Flatten all tensors into one contiguous vector (AllReduce layout).
+    pub fn flatten(tensors: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(tensors.iter().map(Vec::len).sum());
+        for t in tensors {
+            out.extend_from_slice(t);
+        }
+        out
+    }
+
+    /// Inverse of [`flatten`]: scatter a flat buffer back into tensors.
+    pub fn unflatten(flat: &[f32], like: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(like.len());
+        let mut off = 0;
+        for t in like {
+            out.push(flat[off..off + t.len()].to_vec());
+            off += t.len();
+        }
+        assert_eq!(off, flat.len(), "flatten length mismatch");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn store() -> (ParamStore, Manifest) {
+        let m = Manifest::load(&PathBuf::from("artifacts"), "test").unwrap();
+        (ParamStore::init(&m, 42), m)
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let (s, m) = store();
+        assert_eq!(s.numel(), m.param_count);
+        for (t, spec) in s.tensors().iter().zip(&m.params) {
+            assert_eq!(t.len(), spec.numel());
+            match spec.init {
+                InitKind::Zeros => assert!(t.iter().all(|&x| x == 0.0)),
+                InitKind::Ones => assert!(t.iter().all(|&x| x == 1.0)),
+                InitKind::Normal => {
+                    let mean: f32 = t.iter().sum::<f32>() / t.len() as f32;
+                    let var: f32 = t.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+                        / t.len() as f32;
+                    assert!(mean.abs() < 0.02, "{}: mean {mean}", spec.name);
+                    let want = (spec.scale * spec.scale) as f32;
+                    assert!(
+                        (var - want).abs() < 0.3 * want.max(1e-8),
+                        "{}: var {var} vs {want}",
+                        spec.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_seeds() {
+        let m = Manifest::load(&PathBuf::from("artifacts"), "test").unwrap();
+        let a = ParamStore::init(&m, 7);
+        let b = ParamStore::init(&m, 7);
+        let c = ParamStore::init(&m, 8);
+        assert_eq!(a.tensors(), b.tensors());
+        assert_ne!(a.tensors()[0], c.tensors()[0]);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let (s, _) = store();
+        let flat = ParamStore::flatten(s.tensors());
+        assert_eq!(flat.len(), s.numel());
+        let back = ParamStore::unflatten(&flat, s.tensors());
+        assert_eq!(back, s.tensors());
+    }
+
+    #[test]
+    fn axpy_and_norm() {
+        let (mut s, _) = store();
+        let before = ParamStore::global_norm(s.tensors());
+        let grads: Vec<Vec<f32>> =
+            s.tensors().iter().map(|t| vec![1.0; t.len()]).collect();
+        s.axpy(0.0, &grads);
+        assert_eq!(ParamStore::global_norm(s.tensors()), before);
+        let mut z = s.zeros_like();
+        z.axpy(2.0, &grads);
+        let n = ParamStore::global_norm(z.tensors());
+        assert!((n - 2.0 * (s.numel() as f64).sqrt()).abs() < 1e-6);
+    }
+}

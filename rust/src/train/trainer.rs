@@ -1,0 +1,442 @@
+//! The synchronous data-parallel trainer with DropCompute (Algorithm 1).
+//!
+//! Semantics are exact data-parallelism: `N` simulated workers each own a
+//! data shard and schedule `M` micro-batches per step; *which* micro-
+//! batches survive is decided by the virtual-time cluster simulator
+//! (drop decisions = Algorithm 1 with the configured noise model), and
+//! the surviving ones are *really computed* through the PJRT artifacts.
+//! Wall-clock compute is therefore proportional to surviving work while
+//! iteration *time* follows the paper's timing model — the same
+//! methodology the paper uses (post-analysis + simulated delay).
+//!
+//! Compensation (§4.5): extra steps, increased batch, resampling.
+
+use std::path::Path;
+
+use crate::analysis::{choose_threshold, threshold_for_drop_rate, ThresholdChoice};
+use crate::config::{Compensation, Config, ThresholdPolicy};
+use crate::data::ShardedLoader;
+use crate::metrics::{RunLog, StepRecord};
+use crate::runtime::ModelRuntime;
+use crate::sim::ClusterSim;
+use crate::util::{Result, Stopwatch};
+
+use super::grad::{GradAccumulator, GradNorm};
+use super::lr::lr_at;
+use super::optimizer::{clip_global_norm, Optimizer, OptimizerConfig};
+use super::params::ParamStore;
+
+/// Everything needed to train one model under one cluster configuration.
+pub struct Trainer {
+    pub cfg: Config,
+    pub runtime: ModelRuntime,
+    pub params: ParamStore,
+    optimizer: Optimizer,
+    loaders: Vec<ShardedLoader>,
+    eval_loader: ShardedLoader,
+    sim: ClusterSim,
+    /// Chosen compute threshold (None = vanilla synchronous).
+    pub threshold: Option<f64>,
+    /// Calibration outcome, if Algorithm 2 ran.
+    pub calibration: Option<ThresholdChoice>,
+    pub norm: GradNorm,
+    virtual_time: f64,
+    /// Virtual time spent in Algorithm-2 calibration. Tracked separately:
+    /// in the paper the calibration iterations are ordinary (drop-free)
+    /// training steps, so they are not a training-time overhead; the
+    /// summary still reports them for honest accounting.
+    pub calibration_time: f64,
+    /// Effective accumulations per step (inflated by IncreasedBatch).
+    accums: usize,
+    /// Effective total steps (inflated by ExtraSteps).
+    total_steps: usize,
+}
+
+impl Trainer {
+    pub fn new(cfg: &Config) -> Result<Self> {
+        let runtime =
+            ModelRuntime::load(Path::new(&cfg.artifacts_dir), &cfg.train.model_size)?;
+        let params = ParamStore::init(&runtime.manifest, cfg.train.seed);
+        let optimizer = Optimizer::new(
+            OptimizerConfig::new(cfg.train.optimizer, cfg.train.weight_decay),
+            &runtime.manifest,
+            &params,
+        );
+        let dims = &runtime.manifest.dims;
+        let loaders = (0..cfg.cluster.workers)
+            .map(|n| {
+                ShardedLoader::new(
+                    dims.vocab,
+                    dims.micro_batch,
+                    dims.seq_len,
+                    &cfg.data,
+                    n,
+                )
+            })
+            .collect();
+        let eval_loader = ShardedLoader::new(
+            dims.vocab,
+            dims.micro_batch,
+            dims.seq_len,
+            &cfg.data,
+            usize::MAX / 2, // shard far away from any training worker
+        );
+        let sim = ClusterSim::new(&cfg.cluster, cfg.train.seed ^ 0x5EED);
+        Ok(Self {
+            cfg: cfg.clone(),
+            runtime,
+            params,
+            optimizer,
+            loaders,
+            eval_loader,
+            sim,
+            threshold: None,
+            calibration: None,
+            norm: GradNorm::Computed,
+            virtual_time: 0.0,
+            calibration_time: 0.0,
+            accums: cfg.cluster.accumulations,
+            total_steps: cfg.train.steps,
+        })
+    }
+
+    /// Phase 0 — choose the threshold per policy (Algorithm 2 for Auto),
+    /// then apply the configured compensation to the schedule.
+    pub fn calibrate(&mut self) {
+        let policy = self.cfg.dropcompute.policy.clone();
+        let (threshold, choice) = match policy {
+            ThresholdPolicy::Off => (None, None),
+            ThresholdPolicy::Fixed(tau) => (Some(tau), None),
+            ThresholdPolicy::Auto => {
+                let trace = self
+                    .sim
+                    .record_trace(self.cfg.dropcompute.calibration_iters);
+                let choice =
+                    choose_threshold(&trace, self.cfg.dropcompute.search_points);
+                self.calibration_time = (0..trace.iters)
+                    .map(|i| trace.step_time(i) + trace.comm[i])
+                    .sum::<f64>();
+                (Some(choice.tau), Some(choice))
+            }
+            ThresholdPolicy::TargetDropRate(rate) => {
+                let trace = self
+                    .sim
+                    .record_trace(self.cfg.dropcompute.calibration_iters);
+                let tau = threshold_for_drop_rate(&trace, rate);
+                self.calibration_time = (0..trace.iters)
+                    .map(|i| trace.step_time(i) + trace.comm[i])
+                    .sum::<f64>();
+                (Some(tau), None)
+            }
+        };
+        self.threshold = threshold;
+
+        // Compensation planning (§4.5): R = M/M~ - 1 from the predicted
+        // completion rate.
+        let completion = choice
+            .as_ref()
+            .map(|c| c.completion_rate)
+            .unwrap_or_else(|| match self.cfg.dropcompute.policy {
+                ThresholdPolicy::TargetDropRate(r) => 1.0 - r,
+                _ => 1.0,
+            });
+        if completion < 1.0 {
+            let r = 1.0 / completion - 1.0;
+            match self.cfg.dropcompute.compensation {
+                Compensation::ExtraSteps => {
+                    self.total_steps = ((self.cfg.train.steps as f64)
+                        * (1.0 + r))
+                        .round() as usize;
+                }
+                Compensation::IncreasedBatch => {
+                    self.accums = ((self.cfg.cluster.accumulations as f64)
+                        * (1.0 + r))
+                        .ceil() as usize;
+                }
+                Compensation::None | Compensation::Resample => {}
+            }
+        }
+        self.calibration = choice;
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.total_steps
+    }
+
+    pub fn accumulations(&self) -> usize {
+        self.accums
+    }
+
+    /// One synchronous training step. Returns the step record.
+    pub fn train_step(&mut self, step: usize) -> Result<StepRecord> {
+        let sw = Stopwatch::start();
+        // Timing + drop decisions from the cluster simulator. If the
+        // batch was inflated (IncreasedBatch) rebuild the sim dimension.
+        let outcome = if self.accums == self.sim.accums {
+            self.sim.step(self.threshold)
+        } else {
+            // temporary sim with adjusted accumulation count
+            let mut cfg = self.cfg.cluster.clone();
+            cfg.accumulations = self.accums;
+            let mut sim =
+                ClusterSim::new(&cfg, self.cfg.train.seed ^ step as u64);
+            sim.step(self.threshold)
+        };
+
+        self.runtime.upload_params(self.params.tensors())?;
+        let mut acc =
+            GradAccumulator::new(self.params.tensors(), self.norm);
+        for (n, &done) in outcome.completed.iter().enumerate() {
+            for _ in 0..done {
+                let mb = self.loaders[n].next();
+                let out = self.runtime.grad(&mb.tokens)?;
+                acc.add(&out.grads, out.loss as f64);
+            }
+            for _ in done..self.accums {
+                // dropped micro-batch: requeue under Resample
+                if self.cfg.dropcompute.compensation == Compensation::Resample {
+                    let mb = self.loaders[n].next();
+                    self.loaders[n].push_dropped(mb);
+                }
+                acc.add_dropped();
+            }
+        }
+
+        let completed = acc.computed();
+        let scheduled = acc.scheduled();
+        let lr = lr_at(
+            self.cfg.train.schedule,
+            self.cfg.train.lr,
+            step,
+            self.total_steps,
+        );
+        let (loss, grad_norm) = match acc.finalize() {
+            Some((mut grads, loss)) => {
+                let gn = clip_global_norm(&mut grads, self.cfg.train.grad_clip);
+                self.optimizer.step(&mut self.params, &grads, lr);
+                (loss, gn)
+            }
+            None => (f64::NAN, 0.0), // every worker dropped everything
+        };
+
+        self.virtual_time += outcome.iter_time;
+        Ok(StepRecord {
+            step,
+            virtual_time: self.virtual_time,
+            wall_time: sw.seconds(),
+            iter_time: outcome.iter_time,
+            completed_microbatches: completed,
+            scheduled_microbatches: scheduled,
+            loss,
+            lr,
+            grad_norm,
+        })
+    }
+
+    /// Mean eval loss over held-out micro-batches (the Table 1 quality
+    /// metric — see DESIGN.md on the SQuAD-F1 -> perplexity substitution).
+    pub fn eval_loss(&mut self, batches: usize) -> Result<f64> {
+        self.runtime.upload_params(self.params.tensors())?;
+        let mut sum = 0.0;
+        for _ in 0..batches {
+            let mb = self.eval_loader.next();
+            sum += self.runtime.loss(&mb.tokens)? as f64;
+        }
+        Ok(sum / batches as f64)
+    }
+
+    /// Full training run.
+    pub fn train(&mut self) -> Result<RunLog> {
+        self.calibrate();
+        let label = format!(
+            "{}-{}",
+            self.cfg.train.model_size,
+            match self.threshold {
+                Some(_) => "dropcompute",
+                None => "baseline",
+            }
+        );
+        let mut log = RunLog::new(label);
+        for step in 0..self.total_steps {
+            let rec = self.train_step(step)?;
+            if step % self.cfg.train.log_every == 0 {
+                crate::info!(
+                    "step {step:4} loss {:.4} drop {:5.1}% iter {:.2}s vt {:.1}s",
+                    rec.loss,
+                    rec.drop_rate() * 100.0,
+                    rec.iter_time,
+                    rec.virtual_time
+                );
+            }
+            if self.cfg.train.eval_every > 0
+                && step > 0
+                && step % self.cfg.train.eval_every == 0
+            {
+                let ev = self.eval_loss(self.cfg.train.eval_batches)?;
+                log.set_summary(&format!("eval_loss_{step}"), ev);
+            }
+            log.push(rec);
+        }
+        if let Some(tau) = self.threshold {
+            log.set_summary("threshold", tau);
+            log.set_summary("calibration_virtual_time", self.calibration_time);
+        }
+        if let Some(choice) = &self.calibration {
+            log.set_summary("predicted_speedup", choice.speedup);
+            log.set_summary("predicted_completion", choice.completion_rate);
+        }
+        let final_eval = self.eval_loss(self.cfg.train.eval_batches)?;
+        log.set_summary("final_eval_loss", final_eval);
+        log.set_summary("mean_drop_rate", log.mean_drop_rate());
+        log.set_summary("total_virtual_time", log.total_virtual_time());
+        Ok(log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NoiseKind, OptimizerKind};
+
+    fn test_config() -> Config {
+        let mut cfg = Config::default();
+        cfg.train.model_size = "test".into();
+        cfg.train.steps = 12;
+        cfg.train.lr = 3e-3;
+        cfg.train.optimizer = OptimizerKind::Adam;
+        cfg.train.log_every = 1000; // quiet
+        cfg.cluster.workers = 4;
+        cfg.cluster.accumulations = 3;
+        cfg
+    }
+
+    #[test]
+    fn baseline_training_reduces_loss() {
+        crate::util::set_verbosity(0);
+        let mut t = Trainer::new(&test_config()).unwrap();
+        let log = t.train().unwrap();
+        assert_eq!(log.steps.len(), 12);
+        let first = log.steps[0].loss;
+        let last = log.steps.last().unwrap().loss;
+        assert!(last < first, "loss {first} -> {last}");
+        assert_eq!(log.mean_drop_rate(), 0.0);
+        // every step computed N*M micro-batches
+        assert!(log
+            .steps
+            .iter()
+            .all(|s| s.completed_microbatches == 12));
+    }
+
+    #[test]
+    fn dropcompute_auto_calibrates_and_drops() {
+        crate::util::set_verbosity(0);
+        let mut cfg = test_config();
+        cfg.cluster.noise = NoiseKind::PaperLogNormal {
+            mu: 4.0,
+            sigma: 1.0,
+            alpha: 2.0 * (4.5f64).exp(),
+            beta: 5.5,
+        };
+        cfg.dropcompute.policy = ThresholdPolicy::Auto;
+        cfg.dropcompute.calibration_iters = 10;
+        let mut t = Trainer::new(&cfg).unwrap();
+        let log = t.train().unwrap();
+        assert!(t.threshold.is_some());
+        let choice = t.calibration.as_ref().unwrap();
+        assert!(choice.speedup > 1.0);
+        assert!(log.mean_drop_rate() > 0.0, "should drop something");
+        assert!(log.mean_drop_rate() < 0.6);
+        // training still converges
+        assert!(log.final_loss() < log.steps[0].loss);
+    }
+
+    #[test]
+    fn fixed_threshold_respected() {
+        crate::util::set_verbosity(0);
+        let mut cfg = test_config();
+        cfg.cluster.noise = NoiseKind::Exponential { mean: 0.4 };
+        cfg.dropcompute.policy = ThresholdPolicy::Fixed(1.8);
+        let mut t = Trainer::new(&cfg).unwrap();
+        let log = t.train().unwrap();
+        assert_eq!(t.threshold, Some(1.8));
+        for s in &log.steps {
+            // iter time = compute (<= tau) + comm
+            assert!(s.iter_time <= 1.8 + cfg.cluster.comm_latency + 1e-9);
+        }
+    }
+
+    #[test]
+    fn extra_steps_compensation_extends_run() {
+        crate::util::set_verbosity(0);
+        let mut cfg = test_config();
+        cfg.cluster.noise = NoiseKind::PaperLogNormal {
+            mu: 4.0,
+            sigma: 1.0,
+            alpha: 2.0 * (4.5f64).exp(),
+            beta: 5.5,
+        };
+        cfg.dropcompute.policy = ThresholdPolicy::TargetDropRate(0.10);
+        cfg.dropcompute.compensation = Compensation::ExtraSteps;
+        let mut t = Trainer::new(&cfg).unwrap();
+        t.calibrate();
+        assert!(
+            t.total_steps() > cfg.train.steps,
+            "{} should exceed {}",
+            t.total_steps(),
+            cfg.train.steps
+        );
+        // ~11% extra at 10% drop (paper §4.5)
+        assert!(t.total_steps() <= (cfg.train.steps as f64 * 1.25) as usize);
+    }
+
+    #[test]
+    fn increased_batch_compensation_inflates_accums() {
+        crate::util::set_verbosity(0);
+        let mut cfg = test_config();
+        cfg.dropcompute.policy = ThresholdPolicy::TargetDropRate(0.25);
+        cfg.dropcompute.compensation = Compensation::IncreasedBatch;
+        cfg.cluster.noise = NoiseKind::Exponential { mean: 0.4 };
+        let mut t = Trainer::new(&cfg).unwrap();
+        t.calibrate();
+        assert!(t.accumulations() == 4, "3 * 4/3 = 4, got {}", t.accumulations());
+    }
+
+    #[test]
+    fn resample_pool_grows_under_drops() {
+        crate::util::set_verbosity(0);
+        let mut cfg = test_config();
+        cfg.cluster.noise = NoiseKind::PaperLogNormal {
+            mu: 4.0,
+            sigma: 1.0,
+            alpha: 2.0 * (4.5f64).exp(),
+            beta: 5.5,
+        };
+        cfg.dropcompute.policy = ThresholdPolicy::TargetDropRate(0.3);
+        cfg.dropcompute.compensation = Compensation::Resample;
+        let mut t = Trainer::new(&cfg).unwrap();
+        let log = t.train().unwrap();
+        assert!(log.mean_drop_rate() > 0.05);
+        let total_resampled: usize =
+            t.loaders.iter().map(|l| l.resampled + l.pool_len()).sum();
+        assert!(total_resampled > 0, "dropped batches should be requeued");
+    }
+
+    #[test]
+    fn eval_loss_finite_and_near_train() {
+        crate::util::set_verbosity(0);
+        let mut t = Trainer::new(&test_config()).unwrap();
+        let log = t.train().unwrap();
+        let ev = log.summary["final_eval_loss"];
+        assert!(ev.is_finite());
+        assert!((ev - log.final_loss()).abs() < 1.5, "{ev} vs {}", log.final_loss());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        crate::util::set_verbosity(0);
+        let cfg = test_config();
+        let la = Trainer::new(&cfg).unwrap().train().unwrap();
+        let lb = Trainer::new(&cfg).unwrap().train().unwrap();
+        assert_eq!(la.final_loss().to_bits(), lb.final_loss().to_bits());
+    }
+}

@@ -1,0 +1,130 @@
+//! Small shared utilities: errors, logging, a scoped thread pool.
+
+mod threadpool;
+
+pub use threadpool::ThreadPool;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("cli error: {0}")]
+    Cli(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("data error: {0}")]
+    Data(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Log verbosity (0 = quiet, 1 = info, 2 = debug).
+static VERBOSITY: AtomicU8 = AtomicU8::new(1);
+
+pub fn set_verbosity(v: u8) {
+    VERBOSITY.store(v, Ordering::Relaxed);
+}
+
+pub fn verbosity() -> u8 {
+    VERBOSITY.load(Ordering::Relaxed)
+}
+
+/// Print an info-level line (respects verbosity).
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::verbosity() >= 1 {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Print a debug-level line.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::verbosity() >= 2 {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let s = self.seconds();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Format seconds human-readably (`1.23s`, `4m05s`).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 60.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{}m{:04.1}s", (s / 60.0) as u64, s % 60.0)
+    }
+}
+
+/// Format a count with SI suffix (`1.2K`, `3.4M`).
+pub fn fmt_count(n: f64) -> String {
+    let a = n.abs();
+    if a >= 1e9 {
+        format!("{:.2}B", n / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", n / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.1}K", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(1.234), "1.23s");
+        assert_eq!(fmt_secs(65.0), "1m05.0s");
+        assert_eq!(fmt_count(1_500.0), "1.5K");
+        assert_eq!(fmt_count(2_500_000.0), "2.50M");
+        assert_eq!(fmt_count(12.0), "12");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.seconds() >= 0.004);
+    }
+}

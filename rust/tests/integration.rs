@@ -1,0 +1,277 @@
+//! Cross-module integration tests: the full stack composed end-to-end.
+
+use dropcompute::analysis::{choose_threshold, Setting};
+use dropcompute::config::{
+    Compensation, Config, NoiseKind, StragglerKind, ThresholdPolicy,
+};
+use dropcompute::coordinator::{decentralized_calibration, ScaleRun};
+use dropcompute::sim::{ClusterSim, CommModel, LatencyModel};
+use dropcompute::train::{GradNorm, LocalSgdTrainer, Trainer};
+
+fn paper_noise() -> NoiseKind {
+    NoiseKind::PaperLogNormal {
+        mu: 4.0,
+        sigma: 1.0,
+        alpha: 2.0 * (4.5f64).exp(),
+        beta: 5.5,
+    }
+}
+
+fn tiny_training_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.train.model_size = "test".into();
+    cfg.train.steps = 15;
+    cfg.train.lr = 2.5e-3;
+    cfg.train.log_every = 10_000;
+    cfg.cluster.workers = 6;
+    cfg.cluster.accumulations = 4;
+    cfg.cluster.noise = paper_noise();
+    cfg
+}
+
+/// The headline composition: noisy cluster -> Algorithm 2 -> DropCompute
+/// training is faster per useful sample than the baseline AND converges.
+#[test]
+fn end_to_end_dropcompute_beats_baseline_throughput() {
+    dropcompute::util::set_verbosity(0);
+    let mut base_cfg = tiny_training_config();
+    base_cfg.dropcompute.policy = ThresholdPolicy::Off;
+    let base = Trainer::new(&base_cfg).unwrap().train().unwrap();
+
+    let mut dc_cfg = tiny_training_config();
+    dc_cfg.dropcompute.policy = ThresholdPolicy::Auto;
+    let dc = Trainer::new(&dc_cfg).unwrap().train().unwrap();
+
+    assert!(dc.throughput() > base.throughput(),
+        "useful throughput: dc {} vs base {}", dc.throughput(), base.throughput());
+    assert!(dc.final_loss() < dc.steps[0].loss, "dc run must converge");
+    assert!(dc.mean_drop_rate() > 0.0 && dc.mean_drop_rate() < 0.5);
+}
+
+/// Trainer + every compensation mode runs and converges.
+#[test]
+fn all_compensation_modes_run() {
+    dropcompute::util::set_verbosity(0);
+    for comp in [
+        Compensation::None,
+        Compensation::ExtraSteps,
+        Compensation::IncreasedBatch,
+        Compensation::Resample,
+    ] {
+        let mut cfg = tiny_training_config();
+        cfg.train.steps = 8;
+        cfg.dropcompute.policy = ThresholdPolicy::TargetDropRate(0.12);
+        cfg.dropcompute.compensation = comp;
+        let log = Trainer::new(&cfg).unwrap().train().unwrap();
+        assert!(log.final_loss().is_finite(), "{comp:?}");
+    }
+}
+
+/// Both gradient normalizations train.
+#[test]
+fn both_grad_norms_train() {
+    dropcompute::util::set_verbosity(0);
+    for norm in [GradNorm::Computed, GradNorm::Scheduled] {
+        let mut cfg = tiny_training_config();
+        cfg.train.steps = 8;
+        cfg.dropcompute.policy = ThresholdPolicy::TargetDropRate(0.1);
+        let mut t = Trainer::new(&cfg).unwrap();
+        t.norm = norm;
+        let log = t.train().unwrap();
+        assert!(log.final_loss().is_finite());
+    }
+}
+
+/// CLI -> config -> trainer plumbing.
+#[test]
+fn cli_config_roundtrip_drives_trainer() {
+    dropcompute::util::set_verbosity(0);
+    let spec = dropcompute::cli::Spec::new()
+        .subcommands(&["train"])
+        .value_keys(&["set", "config"]);
+    let args = spec
+        .parse([
+            "train",
+            "--set", "train.model_size=\"test\"",
+            "--set", "train.steps=5",
+            "--set", "train.log_every=1000",
+            "--set", "cluster.workers=3",
+            "--set", "cluster.accumulations=2",
+            "--set", "dropcompute.policy=\"fixed\"",
+            "--set", "dropcompute.threshold=2.0",
+        ])
+        .unwrap();
+    let cfg = args.build_config().unwrap();
+    assert_eq!(cfg.cluster.workers, 3);
+    let mut t = Trainer::new(&cfg).unwrap();
+    let log = t.train().unwrap();
+    assert_eq!(t.threshold, Some(2.0));
+    assert_eq!(log.steps.len(), 5);
+}
+
+/// Config file on disk -> trainer.
+#[test]
+fn config_file_loads() {
+    let doc = dropcompute::config::Document::load(std::path::Path::new(
+        "configs/bert_like_pretrain.toml",
+    ))
+    .unwrap();
+    let cfg = Config::from_doc(&doc).unwrap();
+    assert_eq!(cfg.cluster.accumulations, 12);
+    assert_eq!(cfg.dropcompute.policy, ThresholdPolicy::Auto);
+    assert!(matches!(cfg.cluster.noise, NoiseKind::PaperLogNormal { .. }));
+}
+
+/// Decentralized Algorithm 2 over the real ring == centralized result,
+/// at a size comparable to the paper's cluster.
+#[test]
+fn decentralized_calibration_at_scale() {
+    let cfg = dropcompute::config::ClusterConfig {
+        workers: 48,
+        accumulations: 12,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        comm_latency: 0.5,
+        noise: paper_noise(),
+        ..Default::default()
+    };
+    let mut sim = ClusterSim::new(&cfg, 99);
+    let trace = sim.record_trace(6);
+    let choices = decentralized_calibration(&trace, 64);
+    let central = choose_threshold(&trace, 64);
+    for c in &choices {
+        assert_eq!(c.tau.to_bits(), central.tau.to_bits());
+    }
+}
+
+/// Ring-comm timing model + analytical model compose: the emergent T^c
+/// feeds Eq. 11 sensibly.
+#[test]
+fn ring_comm_model_feeds_analysis() {
+    let comm = CommModel::Ring { latency: 1e-4, bandwidth: 1e9, bytes: 4e6 };
+    let tc = comm.serial_latency(64);
+    assert!(tc > 0.0 && tc < 1.0);
+    let s = Setting { workers: 64, accums: 12, mu: 0.45, sigma2: 0.05, comm: tc };
+    let (tau, speed) = s.optimal_threshold(128);
+    assert!(tau > 0.0 && speed >= 1.0);
+}
+
+/// Local-SGD under single-server stragglers: DropCompute strictly
+/// reduces the period time (App. B.3's harder scenario).
+#[test]
+fn local_sgd_single_server_stragglers() {
+    dropcompute::util::set_verbosity(0);
+    let mut cfg = tiny_training_config();
+    cfg.train.local_sgd_period = 3;
+    cfg.cluster.noise = NoiseKind::None;
+    cfg.cluster.stragglers =
+        StragglerKind::SingleServer { p: 0.5, delay: 1.5, server_size: 2 };
+    let plain = LocalSgdTrainer::new(&cfg, None).unwrap().train(4).unwrap();
+    let dc = LocalSgdTrainer::new(&cfg, Some(0.9)).unwrap().train(4).unwrap();
+    assert!(dc.total_virtual_time() < plain.total_virtual_time());
+}
+
+/// Failure injection: a worker whose compute stalls mid-run freezes the
+/// baseline, while DropCompute training proceeds on the survivors and
+/// still converges (graceful degradation, §2).
+#[test]
+fn dropcompute_survives_compute_stall() {
+    dropcompute::util::set_verbosity(0);
+    let mut cfg = tiny_training_config();
+    cfg.train.steps = 10;
+    cfg.cluster.noise = NoiseKind::None;
+    cfg.cluster.stragglers = StragglerKind::Fatal { worker: 1, from_step: 4 };
+    cfg.dropcompute.policy = ThresholdPolicy::Fixed(2.5);
+    let mut t = Trainer::new(&cfg).unwrap();
+    let log = t.train().unwrap();
+    // before the stall every worker contributes; after, worker 1 is gone
+    assert_eq!(log.steps[0].completed_microbatches, 6 * 4);
+    let after = &log.steps[6];
+    assert_eq!(after.completed_microbatches, 5 * 4);
+    assert!(after.iter_time < 3.5, "step time stays capped at tau + T^c");
+    assert!(log.final_loss() < log.steps[0].loss, "still converges");
+
+    // the baseline would stall: its simulated iteration takes ~forever
+    let mut base_cfg = cfg.clone();
+    base_cfg.dropcompute.policy = ThresholdPolicy::Off;
+    let mut sim = dropcompute::sim::ClusterSim::new(&base_cfg.cluster, 0);
+    for _ in 0..5 {
+        sim.step(None);
+    }
+    assert!(sim.step(None).iter_time > 1e8);
+}
+
+/// Checkpoint round-trip through the real trainer.
+#[test]
+fn checkpoint_restores_training_state() {
+    dropcompute::util::set_verbosity(0);
+    use dropcompute::train::Checkpoint;
+    let cfg = tiny_training_config();
+    let mut t = Trainer::new(&cfg).unwrap();
+    let _ = t.train().unwrap();
+    let dir = std::env::temp_dir().join("dc_integration_ckpt");
+    let path = dir.join("final.dckp");
+    Checkpoint::from_params(&t.runtime.manifest, &t.params, 15, 0, 0.0)
+        .save(&path)
+        .unwrap();
+    let restored = Checkpoint::load(&path)
+        .unwrap()
+        .into_params(&t.runtime.manifest)
+        .unwrap();
+    assert_eq!(restored.tensors(), t.params.tensors());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The scale runner's emergent numbers stay within physical bounds.
+#[test]
+fn scale_run_sanity() {
+    let run = ScaleRun {
+        base: dropcompute::config::ClusterConfig {
+            workers: 1,
+            accumulations: 12,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            comm_latency: 0.5,
+            noise: paper_noise(),
+            ..Default::default()
+        },
+        calibration_iters: 8,
+        measure_iters: 25,
+        grid: 64,
+        seed: 3,
+    };
+    let p = run.point(32);
+    assert!(p.dropcompute_throughput <= p.linear_throughput * 1.02);
+    assert!(p.tau > 0.0);
+}
+
+/// LatencyModel moments drive Setting: analytic speedup sits in the same
+/// ballpark as the trace-based Algorithm 2 prediction.
+#[test]
+fn analytic_and_empirical_agree_on_benefit() {
+    let cfg = dropcompute::config::ClusterConfig {
+        workers: 32,
+        accumulations: 12,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        comm_latency: 0.5,
+        noise: paper_noise(),
+        ..Default::default()
+    };
+    let model = LatencyModel::from_config(&cfg);
+    let s = Setting {
+        workers: 32,
+        accums: 12,
+        mu: model.mean(),
+        sigma2: model.variance(),
+        comm: 0.5,
+    };
+    let (_, analytic) = s.optimal_threshold(128);
+    let mut sim = ClusterSim::new(&cfg, 5);
+    let trace = sim.record_trace(25);
+    let empirical = choose_threshold(&trace, 128).speedup;
+    assert!(
+        (analytic - empirical).abs() < 0.15,
+        "analytic {analytic} vs empirical {empirical}"
+    );
+}
