@@ -37,7 +37,7 @@ fn measure_ring(n: usize, len: usize, reps: usize) -> f64 {
 }
 
 fn measure_mesh(n: usize, len: usize, reps: usize, tree: bool) -> f64 {
-    let comms = MeshComm::full(n);
+    let comms = MeshComm::<f32>::full(n);
     let tree = Arc::new(tree);
     let t0 = Instant::now();
     let handles: Vec<_> = comms

@@ -69,6 +69,7 @@ fn main() {
             measure_iters: 50,
             grid: 128,
             seed: 133,
+            ..ScaleRun::default()
         };
         let p = run.point(*ns.last().unwrap());
         t.row(vec![

@@ -57,6 +57,7 @@ fn main() {
             measure_iters: 50,
             grid: 128,
             seed: 143,
+            ..ScaleRun::default()
         };
         let p = run.point(200);
         t.row(vec![

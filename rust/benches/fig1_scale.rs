@@ -24,6 +24,7 @@ fn main() {
         measure_iters: 80,
         grid: 192,
         seed: 11,
+        ..ScaleRun::default()
     };
     let ns = [8usize, 16, 32, 64, 112, 160, 200];
     let pts = run.sweep(&ns);

@@ -1,0 +1,183 @@
+//! Topology ablation — the four-way drop sweep over collective shapes.
+//!
+//! For each topology (ring, tree, hierarchical, torus) and cluster size
+//! N, measures useful throughput under:
+//!   * no-drop        — plain synchronous training
+//!   * DropCompute    — compute threshold tau* (Algorithm 2)
+//!   * DropComm       — bounded-wait AllReduce (membership closes
+//!                      `DEADLINE` after the first arrival)
+//!   * both           — the two drops composed
+//!
+//! and emits a JSON document (validated in-process with the crate's own
+//! parser) of speedups vs the no-drop baseline — the comparison the
+//! paper's runtime model cannot express because it folds communication
+//! into one constant.
+
+mod common;
+
+use common::{header, paper_cluster};
+use dropcompute::coordinator::ScaleRun;
+use dropcompute::report::{f, Table};
+use dropcompute::runtime::json::Json;
+use dropcompute::topology::TopologyKind;
+
+/// DropComm membership deadline (s after first arrival). The paper's
+/// lognormal delay spreads worker step times by a few seconds around
+/// ~6.6s; 3s sheds the straggling tail while keeping the bulk of the
+/// cohort in the reduction.
+const DEADLINE: f64 = 3.0;
+
+struct Cell {
+    n: usize,
+    no_drop: f64,
+    drop_compute: f64,
+    drop_comm: f64,
+    both: f64,
+}
+
+fn measure(kind: TopologyKind, n: usize) -> Cell {
+    let mut base = paper_cluster(1);
+    base.topology = Some(kind);
+    // keep the event-driven collective in the same ballpark as the
+    // paper's T^c=0.5s so compute and comm both matter
+    base.link_latency = 25e-6;
+    base.link_bandwidth = 12.5e9;
+    base.grad_bytes = 4.0 * 335e6; // 335M-param fp32 gradient
+    let plain = ScaleRun {
+        base: base.clone(),
+        calibration_iters: 10,
+        measure_iters: 30,
+        grid: 96,
+        seed: 0x7070 + n as u64,
+        comm_drop_deadline: None,
+    };
+    let bounded = ScaleRun {
+        comm_drop_deadline: Some(DEADLINE),
+        base,
+        ..plain
+    };
+    let p = plain.point(n);
+    let b = bounded.point(n);
+    Cell {
+        n,
+        no_drop: p.baseline_throughput,
+        drop_compute: p.dropcompute_throughput,
+        drop_comm: b.baseline_throughput,
+        both: b.dropcompute_throughput,
+    }
+}
+
+fn main() {
+    header(
+        "Topology ablation — compute-side vs comm-side dropping",
+        "DropCompute (paper, Alg. 1) caps compute tails; DropComm \
+         (bounded-wait AllReduce) caps collective tails; hierarchical \
+         topologies shorten the dependency chains a straggler can stall",
+    );
+
+    let ns = [8usize, 24, 48];
+    let mut json = String::from("{\n  \"bench\": \"topology_ablation\",\n");
+    json.push_str(&format!("  \"comm_drop_deadline\": {DEADLINE},\n"));
+    json.push_str("  \"topologies\": [\n");
+
+    let mut all_cells: Vec<(&'static str, Vec<Cell>)> = Vec::new();
+    for (ti, kind) in TopologyKind::ALL.iter().enumerate() {
+        let cells: Vec<Cell> =
+            ns.iter().map(|&n| measure(*kind, n)).collect();
+
+        let mut t = Table::new(
+            format!("useful throughput (mb/s) — {} topology", kind.name()),
+            &["N", "no-drop", "DropCompute", "DropComm", "both",
+              "speedup DC", "speedup comm", "speedup both"],
+        );
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"points\": [\n",
+            kind.name()
+        ));
+        for (ci, c) in cells.iter().enumerate() {
+            t.row(vec![
+                c.n.to_string(),
+                f(c.no_drop, 1),
+                f(c.drop_compute, 1),
+                f(c.drop_comm, 1),
+                f(c.both, 1),
+                f(c.drop_compute / c.no_drop, 3),
+                f(c.drop_comm / c.no_drop, 3),
+                f(c.both / c.no_drop, 3),
+            ]);
+            json.push_str(&format!(
+                "      {{\"n\": {}, \"no_drop\": {:.4}, \
+                 \"drop_compute\": {:.4}, \"drop_comm\": {:.4}, \
+                 \"both\": {:.4}, \"speedup_drop_compute\": {:.4}, \
+                 \"speedup_drop_comm\": {:.4}, \"speedup_both\": {:.4}}}{}\n",
+                c.n,
+                c.no_drop,
+                c.drop_compute,
+                c.drop_comm,
+                c.both,
+                c.drop_compute / c.no_drop,
+                c.drop_comm / c.no_drop,
+                c.both / c.no_drop,
+                if ci + 1 < cells.len() { "," } else { "" },
+            ));
+        }
+        t.print();
+        json.push_str(&format!(
+            "    ]}}{}\n",
+            if ti + 1 < TopologyKind::ALL.len() { "," } else { "" }
+        ));
+        all_cells.push((kind.name(), cells));
+    }
+    json.push_str("  ]\n}\n");
+
+    println!("JSON_BEGIN");
+    print!("{json}");
+    println!("JSON_END");
+
+    // The emitted document must be machine-readable by the crate's own
+    // parser and cover every topology x variant x N combination.
+    let doc = Json::parse(&json).expect("bench must emit valid JSON");
+    let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+    assert_eq!(topos.len(), TopologyKind::ALL.len());
+    for t in topos {
+        assert_eq!(
+            t.get("points").unwrap().as_arr().unwrap().len(),
+            ns.len()
+        );
+    }
+
+    // Shape checks: dropping (either side) should not lose much useful
+    // throughput anywhere, and at the largest N the composed variant
+    // should beat the plain baseline for every topology.
+    for (name, cells) in &all_cells {
+        for c in cells {
+            assert!(
+                c.drop_compute > 0.9 * c.no_drop,
+                "{name} N={}: DropCompute lost throughput ({} vs {})",
+                c.n, c.drop_compute, c.no_drop
+            );
+            assert!(
+                c.drop_comm > 0.6 * c.no_drop,
+                "{name} N={}: DropComm lost too much throughput ({} vs {})",
+                c.n, c.drop_comm, c.no_drop
+            );
+            assert!(
+                c.both > 0.9 * c.no_drop,
+                "{name} N={}: composed variant lost throughput ({} vs {})",
+                c.n, c.both, c.no_drop
+            );
+        }
+        let last = cells.last().unwrap();
+        assert!(
+            last.both >= 0.95 * last.no_drop,
+            "{name}: at N={} composed drops should roughly match or beat \
+             no-drop ({} vs {})",
+            last.n, last.both, last.no_drop
+        );
+    }
+    println!(
+        "\nSHAPE CHECK PASSED: {} topologies x {} sizes x 4 variants",
+        all_cells.len(),
+        ns.len()
+    );
+}

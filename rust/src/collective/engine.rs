@@ -1,0 +1,240 @@
+//! Generic schedule executor: run any [`Schedule`] over the thread mesh.
+//!
+//! This is the real-execution consumer of the `topology` subsystem: the
+//! same phase/transfer object that drives the virtual-time model in
+//! [`crate::sim::comm`] is interpreted here over `std::sync::mpsc`
+//! channels, one OS thread per worker. Within a phase every worker
+//! first ships its outgoing chunk (pre-phase buffer contents), then
+//! applies its incoming chunk — the exact discipline of
+//! [`super::ring_all_reduce`], which is why executing the ring
+//! *schedule* is bitwise-identical to the hand-written ring collective
+//! on arbitrary floats, and every other topology is bitwise-identical
+//! on integer-valued payloads (where association cannot round).
+//!
+//! Reduction order is fixed by the schedule (receives apply in phase
+//! order, one per phase), giving the bitwise-deterministic aggregation
+//! synchronous training requires for reproducibility.
+
+use std::ops::AddAssign;
+
+use crate::topology::{Schedule, TopologyKind, TransferOp};
+
+use super::mesh::MeshComm;
+
+/// Element types the executor can reduce.
+pub trait Element: Copy + Send + AddAssign + 'static {}
+
+impl<T: Copy + Send + AddAssign + 'static> Element for T {}
+
+/// Execute an all-reduce `schedule` in place on this worker's `buf`.
+/// Call concurrently from every worker thread of the mesh with the same
+/// schedule. After the final phase every worker holds the global sum.
+pub fn schedule_all_reduce<T: Element>(
+    comm: &MeshComm<T>,
+    schedule: &Schedule,
+    buf: &mut [T],
+) {
+    debug_assert_eq!(schedule.workers, comm.size, "schedule/mesh size");
+    debug_assert!(schedule.validate().is_ok(), "invalid schedule");
+    let len = buf.len();
+    let rank = comm.rank;
+    for phase in &schedule.phases {
+        // 1. ship outgoing chunks (at most one per the schedule
+        //    invariant) — sends are buffered, so this never blocks.
+        for t in &phase.transfers {
+            if t.src == rank {
+                let (a, b) = t.chunk.bounds(len);
+                comm.send(t.dst, buf[a..b].to_vec());
+            }
+        }
+        // 2. apply incoming chunks in schedule order.
+        for t in &phase.transfers {
+            if t.dst == rank {
+                let incoming = comm.recv(t.src);
+                let (a, b) = t.chunk.bounds(len);
+                debug_assert_eq!(incoming.len(), b - a, "chunk size");
+                match t.op {
+                    TransferOp::Reduce => {
+                        for (dst, src) in
+                            buf[a..b].iter_mut().zip(&incoming)
+                        {
+                            *dst += *src;
+                        }
+                    }
+                    TransferOp::Copy => {
+                        buf[a..b].copy_from_slice(&incoming);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: build the schedule for this mesh's size and execute it.
+pub fn topology_all_reduce<T: Element>(
+    comm: &MeshComm<T>,
+    kind: TopologyKind,
+    buf: &mut [T],
+) {
+    let schedule = kind.build(comm.size);
+    schedule_all_reduce(comm, &schedule, buf);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{ring_all_reduce, Communicator};
+    use std::sync::Arc;
+    use std::thread;
+
+    fn run_mesh<F, R>(n: usize, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &MeshComm<f32>) -> R + Send + Sync + 'static,
+    {
+        let comms = MeshComm::<f32>::full(n);
+        let f = Arc::new(f);
+        comms
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                let f = Arc::clone(&f);
+                thread::spawn(move || f(rank, &comm))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    }
+
+    fn run_ring<F, R>(n: usize, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &Communicator) -> R + Send + Sync + 'static,
+    {
+        let comms = Communicator::ring(n);
+        let f = Arc::new(f);
+        comms
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                let f = Arc::clone(&f);
+                thread::spawn(move || f(rank, &comm))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    }
+
+    /// Integer-valued input: exact under any association, so all
+    /// topologies must agree to the bit with the ring collective.
+    fn int_input(rank: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| ((rank + 2) * (i + 1)) as f32).collect()
+    }
+
+    #[test]
+    fn every_topology_matches_ring_collective_bitwise() {
+        for kind in TopologyKind::ALL {
+            for n in [1usize, 2, 3, 4, 6, 8] {
+                let len = 23; // not divisible by tested n > 1
+                let want = run_ring(n, move |rank, comm| {
+                    let mut buf = int_input(rank, len);
+                    ring_all_reduce(comm, &mut buf);
+                    buf
+                });
+                let got = run_mesh(n, move |rank, comm| {
+                    let mut buf = int_input(rank, len);
+                    topology_all_reduce(comm, kind, &mut buf);
+                    buf
+                });
+                for (rank, (g, w)) in got.iter().zip(&want).enumerate() {
+                    let gb: Vec<u32> =
+                        g.iter().map(|x| x.to_bits()).collect();
+                    let wb: Vec<u32> =
+                        w.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(
+                        gb, wb,
+                        "{} n={n} rank={rank}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_schedule_matches_ring_collective_on_arbitrary_floats() {
+        // The ring schedule reproduces ring_all_reduce's association
+        // exactly, so agreement is bitwise even on non-integer values.
+        for n in [2usize, 3, 5, 8] {
+            let len = 37;
+            let input = move |rank: usize| -> Vec<f32> {
+                (0..len)
+                    .map(|i| {
+                        0.1f32 * (rank as f32 + 1.3)
+                            / (i as f32 + 0.7)
+                    })
+                    .collect()
+            };
+            let want = run_ring(n, move |rank, comm| {
+                let mut buf = input(rank);
+                ring_all_reduce(comm, &mut buf);
+                buf
+            });
+            let got = run_mesh(n, move |rank, comm| {
+                let mut buf = input(rank);
+                topology_all_reduce(comm, TopologyKind::Ring, &mut buf);
+                buf
+            });
+            for (rank, (g, w)) in got.iter().zip(&want).enumerate() {
+                let gb: Vec<u32> = g.iter().map(|x| x.to_bits()).collect();
+                let wb: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(gb, wb, "n={n} rank={rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn execution_is_deterministic_across_runs() {
+        // Same schedule, same inputs, two independent runs: bitwise
+        // equal (the synchronous-training reproducibility requirement).
+        let run = || {
+            run_mesh(6, |rank, comm| {
+                let mut buf: Vec<f32> = (0..50)
+                    .map(|i| (rank as f32 + 0.5) * (i as f32 + 0.25))
+                    .collect();
+                topology_all_reduce(
+                    comm,
+                    TopologyKind::Hierarchical { group: 2 },
+                    &mut buf,
+                );
+                buf
+            })
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            let xb: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb);
+        }
+    }
+
+    #[test]
+    fn consensus_on_every_topology() {
+        // All workers end with identical buffers under every topology.
+        for kind in TopologyKind::ALL {
+            let results = run_mesh(9, move |rank, comm| {
+                let mut buf: Vec<f32> = (0..40)
+                    .map(|i| ((rank + 1) * (i + 1)) as f32)
+                    .collect();
+                topology_all_reduce(comm, kind, &mut buf);
+                buf
+            });
+            for r in &results[1..] {
+                assert_eq!(r, &results[0], "{}", kind.name());
+            }
+        }
+    }
+}

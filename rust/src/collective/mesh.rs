@@ -6,25 +6,34 @@
 //! reduce+broadcast (latency-optimal, 2·log2 N hops of the full buffer)
 //! and the naive all-to-all gather (N× bandwidth) — the trade-offs the
 //! paper's §2 discussion takes as given.
+//!
+//! The mesh is also the substrate of the generic schedule executor
+//! ([`super::engine`]): any [`crate::topology::Schedule`] runs over
+//! these channels, which is how the `topology` subsystem's schedules
+//! get exercised on real threads and not just in virtual time.
+//!
+//! [`MeshComm`] is generic over the element type (default `f32`) so the
+//! same collectives serve f32 gradients and f64 latency statistics.
 
+use std::ops::AddAssign;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 /// Full-mesh communicator: a channel from every rank to every rank.
-pub struct MeshComm {
+pub struct MeshComm<T = f32> {
     pub rank: usize,
     pub size: usize,
-    to: Vec<Sender<Vec<f32>>>,
-    from: Vec<Receiver<Vec<f32>>>,
+    to: Vec<Sender<Vec<T>>>,
+    from: Vec<Receiver<Vec<T>>>,
 }
 
-impl MeshComm {
+impl<T: Send + 'static> MeshComm<T> {
     /// Create `n` fully-connected communicators.
-    pub fn full(n: usize) -> Vec<MeshComm> {
+    pub fn full(n: usize) -> Vec<MeshComm<T>> {
         assert!(n > 0);
         // txs[dst][src] sends to dst's receiver for messages from src.
-        let mut txs: Vec<Vec<Option<Sender<Vec<f32>>>>> =
+        let mut txs: Vec<Vec<Option<Sender<Vec<T>>>>> =
             (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
-        let mut rxs: Vec<Vec<Option<Receiver<Vec<f32>>>>> =
+        let mut rxs: Vec<Vec<Option<Receiver<Vec<T>>>>> =
             (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
         for dst in 0..n {
             for src in 0..n {
@@ -48,18 +57,23 @@ impl MeshComm {
             .collect()
     }
 
-    pub fn send(&self, dst: usize, data: Vec<f32>) {
+    pub fn send(&self, dst: usize, data: Vec<T>) {
         self.to[dst].send(data).expect("mesh send");
     }
 
-    pub fn recv(&self, src: usize) -> Vec<f32> {
+    pub fn recv(&self, src: usize) -> Vec<T> {
         self.from[src].recv().expect("mesh recv")
     }
 }
 
 /// Binary-tree all-reduce (sum): reduce to rank 0 up the tree, then
-/// broadcast down. 2·ceil(log2 N) hops of the full buffer.
-pub fn tree_all_reduce(comm: &MeshComm, buf: &mut [f32]) {
+/// broadcast down. 2·ceil(log2 N) hops of the full buffer. Association
+/// matches `topology::BinaryTree`'s schedule, so both paths produce
+/// bitwise-identical results.
+pub fn tree_all_reduce<T>(comm: &MeshComm<T>, buf: &mut [T])
+where
+    T: Copy + AddAssign + Send + 'static,
+{
     let n = comm.size;
     let rank = comm.rank;
     // Reduce phase: in round r (stride 2^r), ranks with bit set send to
@@ -94,8 +108,13 @@ pub fn tree_all_reduce(comm: &MeshComm, buf: &mut [f32]) {
 }
 
 /// Naive all-reduce: every worker sends its full buffer to every other
-/// worker (N-1 full-buffer sends per worker).
-pub fn naive_all_reduce(comm: &MeshComm, buf: &mut [f32]) {
+/// worker (N-1 full-buffer sends per worker). Accumulation in rank
+/// order, so the result is deterministic (and exact for integer-valued
+/// payloads regardless of association).
+pub fn naive_all_reduce<T>(comm: &MeshComm<T>, buf: &mut [T])
+where
+    T: Copy + AddAssign + Send + 'static,
+{
     let n = comm.size;
     for dst in 0..n {
         if dst != comm.rank {
@@ -118,12 +137,13 @@ mod tests {
     use std::sync::Arc;
     use std::thread;
 
-    fn run_mesh<T, F>(n: usize, f: F) -> Vec<T>
+    fn run_mesh<T, R, F>(n: usize, f: F) -> Vec<R>
     where
         T: Send + 'static,
-        F: Fn(usize, &MeshComm) -> T + Send + Sync + 'static,
+        R: Send + 'static,
+        F: Fn(usize, &MeshComm<T>) -> R + Send + Sync + 'static,
     {
-        let comms = MeshComm::full(n);
+        let comms = MeshComm::<T>::full(n);
         let f = Arc::new(f);
         comms
             .into_iter()
@@ -149,7 +169,7 @@ mod tests {
         // powers of two and odd sizes
         for n in [1usize, 2, 3, 5, 8, 13] {
             let len = 17;
-            let results = run_mesh(n, move |rank, comm| {
+            let results = run_mesh(n, move |rank, comm: &MeshComm| {
                 let mut buf: Vec<f32> =
                     (0..len).map(|i| (rank * len + i) as f32).collect();
                 tree_all_reduce(comm, &mut buf);
@@ -166,7 +186,7 @@ mod tests {
     fn naive_all_reduce_sums() {
         for n in [1usize, 2, 4, 7] {
             let len = 9;
-            let results = run_mesh(n, move |rank, comm| {
+            let results = run_mesh(n, move |rank, comm: &MeshComm| {
                 let mut buf: Vec<f32> =
                     (0..len).map(|i| (rank * len + i) as f32).collect();
                 naive_all_reduce(comm, &mut buf);
@@ -184,18 +204,79 @@ mod tests {
         // tree == naive == ring on identical inputs (consensus + sums).
         let n = 6;
         let len = 23;
-        let tree = run_mesh(n, move |rank, comm| {
+        let tree = run_mesh(n, move |rank, comm: &MeshComm| {
             let mut buf: Vec<f32> =
                 (0..len).map(|i| ((rank + 1) * (i + 3)) as f32).collect();
             tree_all_reduce(comm, &mut buf);
             buf
         });
-        let naive = run_mesh(n, move |rank, comm| {
+        let naive = run_mesh(n, move |rank, comm: &MeshComm| {
             let mut buf: Vec<f32> =
                 (0..len).map(|i| ((rank + 1) * (i + 3)) as f32).collect();
             naive_all_reduce(comm, &mut buf);
             buf
         });
         assert_eq!(tree, naive);
+    }
+
+    #[test]
+    fn tree_vs_naive_bitwise_f32_n1_to_8() {
+        // Integer-valued f32 payloads: every association is exact, so
+        // tree and naive must agree to the bit at every N (including
+        // non-powers of two) and on every rank.
+        for n in 1usize..=8 {
+            let len = 29; // not divisible by any tested n > 1
+            let tree = run_mesh(n, move |rank, comm: &MeshComm| {
+                let mut buf: Vec<f32> = (0..len)
+                    .map(|i| ((rank + 1) * (i + 2)) as f32)
+                    .collect();
+                tree_all_reduce(comm, &mut buf);
+                buf
+            });
+            let naive = run_mesh(n, move |rank, comm: &MeshComm| {
+                let mut buf: Vec<f32> = (0..len)
+                    .map(|i| ((rank + 1) * (i + 2)) as f32)
+                    .collect();
+                naive_all_reduce(comm, &mut buf);
+                buf
+            });
+            for (rank, (a, b)) in tree.iter().zip(&naive).enumerate() {
+                let a_bits: Vec<u32> =
+                    a.iter().map(|x| x.to_bits()).collect();
+                let b_bits: Vec<u32> =
+                    b.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a_bits, b_bits, "f32 n={n} rank={rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_vs_naive_bitwise_f64_n1_to_8() {
+        // Same agreement over the f64 instantiation of the generic mesh
+        // (used by the latency-statistics collectives).
+        for n in 1usize..=8 {
+            let len = 31;
+            let tree = run_mesh(n, move |rank, comm: &MeshComm<f64>| {
+                let mut buf: Vec<f64> = (0..len)
+                    .map(|i| ((rank + 3) * (i + 1)) as f64)
+                    .collect();
+                tree_all_reduce(comm, &mut buf);
+                buf
+            });
+            let naive = run_mesh(n, move |rank, comm: &MeshComm<f64>| {
+                let mut buf: Vec<f64> = (0..len)
+                    .map(|i| ((rank + 3) * (i + 1)) as f64)
+                    .collect();
+                naive_all_reduce(comm, &mut buf);
+                buf
+            });
+            for (rank, (a, b)) in tree.iter().zip(&naive).enumerate() {
+                let a_bits: Vec<u64> =
+                    a.iter().map(|x| x.to_bits()).collect();
+                let b_bits: Vec<u64> =
+                    b.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a_bits, b_bits, "f64 n={n} rank={rank}");
+            }
+        }
     }
 }

@@ -13,10 +13,20 @@
 //!   batch-size weighting to exchange per-worker completed counts);
 //! * [`Communicator`] — the per-worker handle tying a thread group
 //!   together.
+//!
+//! Beyond the fixed ring, [`engine`] executes any
+//! [`crate::topology::Schedule`] (ring / tree / hierarchical / torus)
+//! over the full [`mesh`], with the same phase discipline the
+//! virtual-time model in [`crate::sim::comm`] simulates — the two
+//! consumers of the `topology` subsystem.
 
+pub mod engine;
 pub mod mesh;
 
+pub use engine::{schedule_all_reduce, topology_all_reduce};
 pub use mesh::{naive_all_reduce, tree_all_reduce, MeshComm};
+
+use crate::topology::chunk_bounds;
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier};
@@ -86,15 +96,6 @@ impl Communicator {
             _ => panic!("dtype mismatch on ring"),
         }
     }
-}
-
-/// Chunk boundaries for splitting `len` into `size` contiguous chunks.
-fn chunk_bounds(len: usize, size: usize, idx: usize) -> (usize, usize) {
-    let base = len / size;
-    let rem = len % size;
-    let start = idx * base + idx.min(rem);
-    let extra = if idx < rem { 1 } else { 0 };
-    (start, start + base + extra)
 }
 
 /// Ring all-reduce (sum) in place: reduce-scatter then all-gather,

@@ -68,6 +68,18 @@ pub struct ClusterConfig {
     pub stragglers: StragglerKind,
     /// OS threads for real execution.
     pub threads: usize,
+    /// Collective topology for the event-driven comm model
+    /// (`None` = the paper's fixed `T^c` via `comm_latency`).
+    pub topology: Option<crate::topology::TopologyKind>,
+    /// Per-hop link latency, seconds (topology model only).
+    pub link_latency: f64,
+    /// Link bandwidth, bytes/second (topology model only).
+    pub link_bandwidth: f64,
+    /// Gradient bytes reduced per step (topology model only).
+    pub grad_bytes: f64,
+    /// DropComm bounded-wait deadline, seconds after the first arrival
+    /// (0 = wait for everyone; the synchronous baseline).
+    pub comm_drop_deadline: f64,
 }
 
 impl Default for ClusterConfig {
@@ -81,6 +93,12 @@ impl Default for ClusterConfig {
             noise: NoiseKind::None,
             stragglers: StragglerKind::None,
             threads: 0, // 0 = auto
+            topology: None,
+            link_latency: 25e-6,
+            link_bandwidth: 12.5e9,
+            // `large` model: 33.7M f32 params
+            grad_bytes: 4.0 * 33.7e6,
+            comm_drop_deadline: 0.0,
         }
     }
 }
@@ -281,6 +299,20 @@ impl Config {
         c.cluster.noise = parse_noise(doc)?;
         c.cluster.stragglers = parse_stragglers(doc)?;
 
+        // [comm] — topology-aware collective model (sim/comm.rs)
+        c.cluster.topology = match doc.str_or("comm.topology", "fixed").as_str() {
+            "fixed" => None,
+            spec => Some(crate::topology::TopologyKind::parse(spec)?),
+        };
+        c.cluster.link_latency =
+            doc.float_or("comm.link_latency", c.cluster.link_latency);
+        c.cluster.link_bandwidth =
+            doc.float_or("comm.link_bandwidth", c.cluster.link_bandwidth);
+        c.cluster.grad_bytes =
+            doc.float_or("comm.grad_bytes", c.cluster.grad_bytes);
+        c.cluster.comm_drop_deadline =
+            doc.float_or("comm.drop_deadline", 0.0);
+
         // [dropcompute]
         c.dropcompute.policy = match doc.str_or("dropcompute.policy", "off").as_str() {
             "off" => ThresholdPolicy::Off,
@@ -360,6 +392,17 @@ impl Config {
         }
         if self.cluster.comm_latency < 0.0 {
             return Err(Error::Config("comm_latency must be >= 0".into()));
+        }
+        if self.cluster.link_bandwidth <= 0.0 {
+            return Err(Error::Config("link_bandwidth must be > 0".into()));
+        }
+        if self.cluster.link_latency < 0.0 || self.cluster.grad_bytes < 0.0 {
+            return Err(Error::Config(
+                "link_latency and grad_bytes must be >= 0".into(),
+            ));
+        }
+        if self.cluster.comm_drop_deadline < 0.0 {
+            return Err(Error::Config("comm.drop_deadline must be >= 0".into()));
         }
         if let ThresholdPolicy::Fixed(t) = self.dropcompute.policy {
             if t <= 0.0 {
@@ -482,6 +525,40 @@ mod tests {
             c.train.schedule,
             LrSchedule::WarmupPoly { .. }
         ));
+    }
+
+    #[test]
+    fn comm_section_roundtrip() {
+        let doc = Document::parse(
+            r#"
+            [comm]
+            topology = "hierarchical:4"
+            link_latency = 1e-4
+            link_bandwidth = 1e9
+            grad_bytes = 4e6
+            drop_deadline = 1.5
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(
+            c.cluster.topology,
+            Some(crate::topology::TopologyKind::Hierarchical { group: 4 })
+        );
+        assert_eq!(c.cluster.link_latency, 1e-4);
+        assert_eq!(c.cluster.link_bandwidth, 1e9);
+        assert_eq!(c.cluster.grad_bytes, 4e6);
+        assert_eq!(c.cluster.comm_drop_deadline, 1.5);
+        // default stays the paper's fixed-T^c model with no comm drop
+        let d = Config::default();
+        assert_eq!(d.cluster.topology, None);
+        assert_eq!(d.cluster.comm_drop_deadline, 0.0);
+        // bad values rejected
+        let bad = Document::parse("[comm]\ntopology = \"moebius\"").unwrap();
+        assert!(Config::from_doc(&bad).is_err());
+        let neg =
+            Document::parse("[comm]\ndrop_deadline = -1.0").unwrap();
+        assert!(Config::from_doc(&neg).is_err());
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! independently runs the same argmax (Algorithm 2) — consensus on
 //! `tau*` follows from determinism, which the tests assert bitwise.
 //!
-//! [`ScaleRun`] drives the throughput-vs-N sweeps behind Figs 1/13/14.
+//! [`ScaleRun`] drives the throughput-vs-N sweeps behind Figs 1/13/14
+//! and, with a [`crate::topology::TopologyKind`] + DropComm deadline in
+//! its base config, the `benches/topology_ablation.rs` four-way sweep
+//! (no-drop / DropCompute / DropComm / both).
 
 use std::thread;
 
@@ -118,13 +121,21 @@ pub struct ScalePoint {
 }
 
 /// Sweep cluster sizes and measure baseline vs DropCompute throughput —
-/// the engine behind Fig 1 (left), Fig 13 and Fig 14.
+/// the engine behind Fig 1 (left), Fig 13, Fig 14 and the topology
+/// ablation. The collective model (topology + DropComm deadline) rides
+/// in `base` ([`ClusterConfig::topology`] /
+/// [`ClusterConfig::comm_drop_deadline`]); `comm_drop_deadline` here
+/// overrides the latter per run, so one base config can be swept with
+/// and without bounded-wait communication.
 pub struct ScaleRun {
     pub base: ClusterConfig,
     pub calibration_iters: usize,
     pub measure_iters: usize,
     pub grid: usize,
     pub seed: u64,
+    /// `Some(d)` forces the DropComm deadline for every measured sim
+    /// (including the baseline arm); `None` keeps `base`'s setting.
+    pub comm_drop_deadline: Option<f64>,
 }
 
 impl Default for ScaleRun {
@@ -135,6 +146,7 @@ impl Default for ScaleRun {
             measure_iters: 60,
             grid: 128,
             seed: 0xF16_1,
+            comm_drop_deadline: None,
         }
     }
 }
@@ -152,12 +164,23 @@ impl ScaleRun {
     pub fn point(&self, workers: usize) -> ScalePoint {
         let mut cfg = self.base.clone();
         cfg.workers = workers;
+        if let Some(d) = self.comm_drop_deadline {
+            cfg.comm_drop_deadline = d;
+        }
         let m = cfg.accumulations as f64;
 
-        // baseline
+        // baseline — counted from completed micro-batches so that a
+        // DropComm deadline's excluded workers aren't credited as
+        // useful work (without drops this equals workers * m / E[t]).
         let mut sim = ClusterSim::new(&cfg, self.seed);
-        let t_base = sim.mean_iter_time(self.measure_iters, None);
-        let baseline_throughput = workers as f64 * m / t_base;
+        let mut base_t_sum = 0.0;
+        let mut base_completed = 0usize;
+        for _ in 0..self.measure_iters {
+            let out = sim.step(None);
+            base_t_sum += out.iter_time;
+            base_completed += out.total_completed();
+        }
+        let baseline_throughput = base_completed as f64 / base_t_sum;
 
         // DropCompute: calibrate (Algorithm 2) then measure
         let mut cal_sim = ClusterSim::new(&cfg, self.seed ^ 2);
@@ -244,6 +267,7 @@ mod tests {
             measure_iters: 30,
             grid: 64,
             seed: 5,
+            ..ScaleRun::default()
         };
         let pts = run.sweep(&[4, 32, 96]);
         for p in &pts {

@@ -5,8 +5,10 @@
 //! pool, decentralized AllReduce, gradient-accumulation scheduler with
 //! the DropCompute compute-threshold (Algorithm 1), automatic threshold
 //! selection (Algorithm 2), Local-SGD mode, optimizers, data pipeline,
-//! discrete-event cluster simulator and the analytical runtime model
-//! (Eqs. 4/5/6/11).
+//! discrete-event cluster simulator, the analytical runtime model
+//! (Eqs. 4/5/6/11), and the topology-aware collective engine
+//! ([`topology`]: pluggable ring / tree / hierarchical / torus
+//! schedules plus the bounded-wait DropComm all-reduce).
 //!
 //! Layers 2/1 (build-time python): JAX transformer fwd/bwd calling
 //! Pallas kernels, AOT-lowered to HLO text loaded by [`runtime`].
@@ -23,5 +25,6 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod topology;
 pub mod train;
 pub mod util;

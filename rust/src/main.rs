@@ -36,6 +36,13 @@ SUBCOMMANDS:
   scale       throughput vs N sweep               [--workers 8,16,...]
   analyze     closed-form E[T], E[M~], S_eff      [--tau T]
 
+simulate/scale also take the topology-aware collective model:
+  --topology fixed|ring|tree|hierarchical[:group]|torus[:rows]
+              event-driven schedule model (`fixed` = the paper's T^c)
+  --comm-drop-deadline D
+              DropComm: bounded-wait AllReduce, membership closes D
+              seconds after the first arrival (0 = wait for everyone)
+
 Config keys: see configs/*.toml and DESIGN.md.";
 
 fn main() -> ExitCode {
@@ -43,7 +50,7 @@ fn main() -> ExitCode {
         .subcommands(&["train", "local-sgd", "simulate", "tune", "scale", "analyze"])
         .value_keys(&[
             "config", "set", "out", "iters", "tau", "periods", "workers",
-            "grid",
+            "grid", "topology", "comm-drop-deadline",
         ]);
     let args = match spec.parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -132,11 +139,33 @@ fn cmd_local_sgd(args: &Args, cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// Apply `--topology` / `--comm-drop-deadline` overrides to a cluster
+/// config (shared by `simulate` and `scale`).
+fn comm_overrides(
+    args: &Args,
+    cluster: &mut dropcompute::config::ClusterConfig,
+) -> Result<()> {
+    if let Some(spec) = args.get("topology") {
+        // "fixed" mirrors the comm.topology config key: back to the
+        // paper's fixed-T^c model (e.g. to override a config file).
+        cluster.topology = if spec == "fixed" {
+            None
+        } else {
+            Some(dropcompute::topology::TopologyKind::parse(spec)?)
+        };
+    }
+    cluster.comm_drop_deadline =
+        args.f64_or("comm-drop-deadline", cluster.comm_drop_deadline)?;
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
     let iters = args.usize_or("iters", 100)?;
     let tau = args.f64_or("tau", 0.0)?;
     let threshold = if tau > 0.0 { Some(tau) } else { None };
-    let mut sim = ClusterSim::new(&cfg.cluster, cfg.train.seed);
+    let mut cluster = cfg.cluster.clone();
+    comm_overrides(args, &mut cluster)?;
+    let mut sim = ClusterSim::new(&cluster, cfg.train.seed);
     let mut iter_w = dropcompute::stats::Welford::new();
     let mut completed = 0usize;
     for _ in 0..iters {
@@ -149,6 +178,22 @@ fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
         format!("simulate N={} M={}", cfg.cluster.workers, cfg.cluster.accumulations),
         &["metric", "value"],
     );
+    let drop_note = if cluster.comm_drop_deadline > 0.0 {
+        format!(", DropComm deadline {:.3}s", cluster.comm_drop_deadline)
+    } else {
+        String::new()
+    };
+    t.row(vec![
+        "comm model".into(),
+        match cluster.topology {
+            Some(kind) => {
+                format!("{} (event-driven{drop_note})", kind.name())
+            }
+            None => {
+                format!("fixed T^c = {:.3}s{drop_note}", cluster.comm_latency)
+            }
+        },
+    ]);
     t.row(vec!["iterations".into(), iters.to_string()]);
     t.row(vec!["mean iter time".into(), f(iter_w.mean(), 3)]);
     t.row(vec!["iter time std".into(), f(iter_w.std(), 3)]);
@@ -201,7 +246,9 @@ fn cmd_scale(args: &Args, cfg: &Config) -> Result<()> {
         .split(',')
         .filter_map(|s| s.trim().parse().ok())
         .collect();
-    let run = ScaleRun { base: cfg.cluster.clone(), ..Default::default() };
+    let mut base = cfg.cluster.clone();
+    comm_overrides(args, &mut base)?;
+    let run = ScaleRun { base, ..Default::default() };
     let pts = run.sweep(&workers);
     let mut t = Table::new(
         "scale sweep (Fig 1 style)",

@@ -57,6 +57,15 @@ pub struct ClusterSim {
     model: LatencyModel,
     comm: CommModel,
     pub preemption: PreemptionMode,
+    /// Bounded-wait (DropComm) deadline: workers arriving later than
+    /// this after the first arrival are excluded from the reduction
+    /// (their step contribution is dropped and the sum reweighted over
+    /// the survivors). `None` = wait for everyone.
+    comm_drop: Option<f64>,
+    /// Full-cluster schedule, built once (the worker count is fixed
+    /// for a sim's lifetime) so the per-step timing doesn't rebuild
+    /// O(N^2) transfers. `None` for the fixed-`T^c` model.
+    schedule: Option<crate::topology::Schedule>,
     /// Independent RNG stream per worker (decentralized by construction).
     streams: Vec<Xoshiro256pp>,
     /// Monotone step counter (drives step-indexed failures).
@@ -65,13 +74,28 @@ pub struct ClusterSim {
 
 impl ClusterSim {
     pub fn new(cfg: &ClusterConfig, seed: u64) -> Self {
+        let comm = match cfg.topology {
+            Some(kind) => CommModel::Topology {
+                kind,
+                latency: cfg.link_latency,
+                bandwidth: cfg.link_bandwidth,
+                bytes: cfg.grad_bytes,
+            },
+            None => CommModel::Fixed(cfg.comm_latency),
+        };
+        let drop = if cfg.comm_drop_deadline > 0.0 {
+            Some(cfg.comm_drop_deadline)
+        } else {
+            None
+        };
         Self::with_model(
             cfg.workers,
             cfg.accumulations,
             LatencyModel::from_config(cfg),
-            CommModel::Fixed(cfg.comm_latency),
+            comm,
             seed,
         )
+        .with_comm_drop(drop)
     }
 
     pub fn with_model(
@@ -83,12 +107,15 @@ impl ClusterSim {
     ) -> Self {
         let root = Xoshiro256pp::seed_from_u64(seed);
         let streams = (0..workers).map(|n| root.split(n as u64)).collect();
+        let schedule = comm.schedule_for(workers);
         Self {
             workers,
             accums,
             model,
             comm,
             preemption: PreemptionMode::Preemptive,
+            comm_drop: None,
+            schedule,
             streams,
             step_idx: 0,
         }
@@ -96,6 +123,12 @@ impl ClusterSim {
 
     pub fn with_preemption(mut self, mode: PreemptionMode) -> Self {
         self.preemption = mode;
+        self
+    }
+
+    /// Enable/disable the bounded-wait (DropComm) collective.
+    pub fn with_comm_drop(mut self, deadline: Option<f64>) -> Self {
+        self.comm_drop = deadline;
         self
     }
 
@@ -110,6 +143,45 @@ impl ClusterSim {
     /// Serial comm constant `T^c` for the analytical model.
     pub fn comm_latency(&self) -> f64 {
         self.comm.serial_latency(self.workers)
+    }
+
+    /// Common tail of a simulated step: the collective. Under DropComm
+    /// ([`Self::with_comm_drop`]) late workers are excluded — their
+    /// completed micro-batches are zeroed (dropped work) and the
+    /// survivors' reduction sets the iteration time.
+    fn finish_step(
+        &self,
+        worker_compute: Vec<f64>,
+        mut completed: Vec<usize>,
+    ) -> StepOutcome {
+        let compute_time =
+            worker_compute.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let cached = self.schedule.as_ref();
+        let iter_time = match self.comm_drop {
+            None => self.comm.completion_time_with(&worker_compute, cached),
+            Some(deadline) => {
+                let survivors = crate::sim::comm::bounded_wait_survivors(
+                    &worker_compute,
+                    deadline,
+                );
+                if survivors.iter().all(|&s| s) {
+                    // common path: nobody missed the deadline — plain
+                    // collective over the cached full-N schedule
+                    self.comm.completion_time_with(&worker_compute, cached)
+                } else {
+                    for (done, s) in completed.iter_mut().zip(&survivors) {
+                        if !*s {
+                            *done = 0;
+                        }
+                    }
+                    let (_, t) = self
+                        .comm
+                        .bounded_wait_completion(&worker_compute, deadline);
+                    t
+                }
+            }
+        };
+        StepOutcome { worker_compute, completed, compute_time, iter_time }
     }
 
     /// Simulate one synchronous step; `threshold = None` is the baseline.
@@ -160,10 +232,7 @@ impl ClusterSim {
             worker_compute.push(t);
             completed.push(done);
         }
-        let compute_time =
-            worker_compute.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let iter_time = self.comm.completion_time(&worker_compute);
-        StepOutcome { worker_compute, completed, compute_time, iter_time }
+        self.finish_step(worker_compute, completed)
     }
 
     /// Simulate one Local-SGD synchronization period: `h` local steps of
@@ -197,10 +266,7 @@ impl ClusterSim {
                 }
             }
         }
-        let compute_time =
-            worker_compute.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let iter_time = self.comm.completion_time(&worker_compute);
-        StepOutcome { worker_compute, completed, compute_time, iter_time }
+        self.finish_step(worker_compute, completed)
     }
 
     /// Record a no-drop latency trace of `iters` iterations — the input
@@ -366,6 +432,59 @@ mod tests {
                 assert!(d.total_completed() > 0);
             }
         }
+    }
+
+    #[test]
+    fn comm_drop_excludes_stragglers_and_caps_iter_time() {
+        // DropComm alone (no compute threshold): a fatally stalled
+        // worker is excluded at the collective membership deadline, so
+        // iteration time stays bounded — the comm-side dual of the
+        // DropCompute robustness test below.
+        let mut c = config(6, 4);
+        c.stragglers = crate::config::StragglerKind::Fatal {
+            worker: 2,
+            from_step: 0,
+        };
+        c.topology = Some(crate::topology::TopologyKind::Ring);
+        c.comm_drop_deadline = 2.0;
+        let mut sim = ClusterSim::new(&c, 5);
+        let out = sim.step(None);
+        assert_eq!(out.completed[2], 0, "dropped worker contributes 0");
+        assert_eq!(out.total_completed(), 5 * 4, "survivors all count");
+        assert!(out.iter_time < 10.0, "{}", out.iter_time);
+        // without DropComm the same cluster stalls
+        c.comm_drop_deadline = 0.0;
+        let mut base = ClusterSim::new(&c, 5);
+        assert!(base.step(None).iter_time >= LatencyModel::FATAL_DELAY);
+    }
+
+    #[test]
+    fn comm_drop_loose_deadline_changes_nothing() {
+        let mut c = config(8, 6);
+        c.noise = NoiseKind::Exponential { mean: 0.1 };
+        let mut plain = ClusterSim::new(&c, 21);
+        c.comm_drop_deadline = 1e6;
+        let mut drop = ClusterSim::new(&c, 21);
+        for _ in 0..20 {
+            let a = plain.step(None);
+            let b = drop.step(None);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+        }
+    }
+
+    #[test]
+    fn topology_config_drives_comm_model() {
+        let mut c = config(8, 4);
+        c.topology = Some(crate::topology::TopologyKind::Tree);
+        c.link_latency = 1e-4;
+        c.link_bandwidth = 1e9;
+        c.grad_bytes = 4e6;
+        let sim = ClusterSim::new(&c, 1);
+        let want = crate::topology::TopologyKind::Tree
+            .build(8)
+            .uniform_cost(1e-4, 1e9, 4e6);
+        assert!((sim.comm_latency() - want).abs() < 1e-12);
     }
 
     #[test]

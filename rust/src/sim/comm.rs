@@ -1,10 +1,21 @@
 //! Communication timing models for the synchronous AllReduce phase.
 //!
-//! The paper folds communication into a serial constant `T^c`; we provide
-//! that plus an event-driven **ring** model (Patarasuk & Yuan 2009 —
-//! the bandwidth-optimal algorithm the paper's decentralized setting
-//! assumes) where workers *arrive* at different times: late arrivals
-//! stall their ring neighbours, which is exactly why stragglers hurt.
+//! The paper folds communication into a serial constant `T^c`; we
+//! provide that plus **schedule-driven** event simulation: any
+//! [`crate::topology::Schedule`] (ring, tree, hierarchical, torus — see
+//! [`crate::topology`]) is timed by [`schedule_completion`] honoring
+//! per-worker arrival times, so late arrivals stall exactly the
+//! dependency chains the topology implies. The same schedule object is
+//! executed over real threads by [`crate::collective::engine`], which
+//! is what keeps virtual time and real execution in agreement.
+//!
+//! On top sits the bounded-wait **DropComm** membership rule
+//! ([`CommModel::bounded_wait_completion`]): the collective closes its
+//! membership a deadline after the first arrival and reduces over the
+//! survivors only — the communication-side analogue of DropCompute's
+//! compute threshold (cf. OptiReduce, arXiv:2310.06993).
+
+use crate::topology::{Schedule, TopologyKind};
 
 use super::event::EventQueue;
 
@@ -15,9 +26,19 @@ pub enum CommModel {
     /// (the paper's model: `T + T^c`).
     Fixed(f64),
     /// Ring all-reduce: 2(N-1) phases of `bytes/N` chunks; each hop costs
-    /// `latency + chunk_bytes / bandwidth`. Completion is computed by a
-    /// discrete-event simulation honoring per-worker arrival times.
+    /// `latency + chunk_bytes / bandwidth`. Shorthand for
+    /// [`CommModel::Topology`] with [`TopologyKind::Ring`].
     Ring {
+        /// Per-hop latency, seconds.
+        latency: f64,
+        /// Link bandwidth, bytes/second.
+        bandwidth: f64,
+        /// Gradient bytes reduced.
+        bytes: f64,
+    },
+    /// Any topology's schedule, timed by discrete-event simulation.
+    Topology {
+        kind: TopologyKind,
         /// Per-hop latency, seconds.
         latency: f64,
         /// Link bandwidth, bytes/second.
@@ -28,23 +49,64 @@ pub enum CommModel {
 }
 
 impl CommModel {
-    /// Time from `max(arrivals)` until every worker holds the reduced
-    /// result; returns the absolute completion time.
+    /// Time until every worker holds the reduced result; returns the
+    /// absolute completion time. Empty `arrivals` (a zero-worker
+    /// reduction) completes instantly at 0.0.
     pub fn completion_time(&self, arrivals: &[f64]) -> f64 {
-        let start = arrivals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        match self {
-            CommModel::Fixed(tc) => start + tc,
-            CommModel::Ring { latency, bandwidth, bytes } => {
-                ring_completion(arrivals, *latency, *bandwidth, *bytes)
+        self.completion_time_with(arrivals, None)
+    }
+
+    /// [`Self::completion_time`] with an optional pre-built schedule
+    /// for `arrivals.len()` workers — the hot-loop variant: a
+    /// `ClusterSim` caches its full-cluster schedule once instead of
+    /// rebuilding O(N^2) transfers every step. A schedule of the wrong
+    /// size (or `None`) falls back to building one.
+    pub fn completion_time_with(
+        &self,
+        arrivals: &[f64],
+        cached: Option<&Schedule>,
+    ) -> f64 {
+        if arrivals.is_empty() {
+            return 0.0;
+        }
+        match *self {
+            CommModel::Fixed(tc) => {
+                let start =
+                    arrivals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                start + tc
             }
+            CommModel::Ring { latency, bandwidth, bytes }
+            | CommModel::Topology { latency, bandwidth, bytes, .. } => {
+                match cached {
+                    Some(s) if s.workers == arrivals.len() => {
+                        schedule_completion(s, arrivals, latency, bandwidth, bytes)
+                    }
+                    _ => {
+                        let s = self
+                            .schedule_for(arrivals.len())
+                            .expect("non-fixed model has a schedule");
+                        schedule_completion(&s, arrivals, latency, bandwidth, bytes)
+                    }
+                }
+            }
+        }
+    }
+
+    /// The schedule this model executes for `n` workers (`None` for
+    /// the fixed-`T^c` model, which has no schedule).
+    pub fn schedule_for(&self, n: usize) -> Option<Schedule> {
+        match *self {
+            CommModel::Fixed(_) => None,
+            CommModel::Ring { .. } => Some(TopologyKind::Ring.build(n)),
+            CommModel::Topology { kind, .. } => Some(kind.build(n)),
         }
     }
 
     /// The serial constant `T^c` this model contributes when all workers
     /// arrive simultaneously (used by the analytical speedup model).
     pub fn serial_latency(&self, n: usize) -> f64 {
-        match self {
-            CommModel::Fixed(tc) => *tc,
+        match *self {
+            CommModel::Fixed(tc) => tc,
             CommModel::Ring { latency, bandwidth, bytes } => {
                 if n <= 1 {
                     return 0.0;
@@ -53,51 +115,118 @@ impl CommModel {
                 let chunk = bytes / n as f64;
                 phases as f64 * (latency + chunk / bandwidth)
             }
+            CommModel::Topology { kind, latency, bandwidth, bytes } => {
+                kind.build(n).uniform_cost(latency, bandwidth, bytes)
+            }
         }
+    }
+
+    /// Bounded-wait (DropComm) all-reduce: membership closes `deadline`
+    /// seconds after the *first* arrival; later workers are excluded
+    /// from the reduction (their gradient contribution is dropped and
+    /// the sum reweighted by the caller) and simply receive the result.
+    ///
+    /// Returns the per-worker survivor mask and the completion time of
+    /// the survivors' collective. The first arrival always survives, so
+    /// the reduction is never empty.
+    ///
+    /// Timing: with no exclusions, membership closes the moment the
+    /// last worker arrives and the collective runs exactly as the
+    /// plain model (no deadline wait is ever paid). When someone *is*
+    /// excluded, the survivor set — and therefore the k-member
+    /// schedule — is only knowable at `close = first + deadline`, so
+    /// the survivors' collective starts there (all of them have
+    /// arrived by definition) and completion is `close` plus its
+    /// simultaneous-start cost. No clairvoyant overlap of collective
+    /// work with the waiting window is assumed.
+    pub fn bounded_wait_completion(
+        &self,
+        arrivals: &[f64],
+        deadline: f64,
+    ) -> (Vec<bool>, f64) {
+        let survivors = bounded_wait_survivors(arrivals, deadline);
+        let sub: Vec<f64> = arrivals
+            .iter()
+            .zip(&survivors)
+            .filter(|(_, &s)| s)
+            .map(|(&a, _)| a)
+            .collect();
+        let t = if sub.len() < arrivals.len() {
+            let first =
+                arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
+            let close = first + deadline.max(0.0);
+            // every survivor arrived by `close`; the k-member
+            // collective starts simultaneously there
+            self.completion_time(&vec![close; sub.len()])
+        } else {
+            self.completion_time(&sub)
+        };
+        (survivors, t)
     }
 }
 
-/// Event-driven ring all-reduce completion with heterogeneous arrivals.
+/// The DropComm membership rule: worker `w` participates iff it arrives
+/// within `deadline` of the earliest arrival (`deadline < 0` is treated
+/// as 0 — only ties with the first arrival survive).
+pub fn bounded_wait_survivors(arrivals: &[f64], deadline: f64) -> Vec<bool> {
+    if arrivals.is_empty() {
+        return Vec::new();
+    }
+    let first = arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let cutoff = first + deadline.max(0.0);
+    arrivals.iter().map(|&a| a <= cutoff).collect()
+}
+
+/// Event-driven completion of a [`Schedule`] with heterogeneous
+/// arrivals.
 ///
-/// Worker `w` can send its phase-`p` message once (a) it has arrived,
-/// and (b) it has received the phase-`p-1` message from its predecessor.
-/// Dependency: recv(w, p) happens at
-/// `max(arrive(w-1), recv(w-1, p-1)) + hop`, which we simulate rather
-/// than solve in closed form so the model extends to irregular topologies.
-fn ring_completion(arrivals: &[f64], latency: f64, bandwidth: f64, bytes: f64) -> f64 {
-    let n = arrivals.len();
-    if n <= 1 {
-        return arrivals.first().copied().unwrap_or(0.0);
+/// Worker `w` can launch its phase-`p` send once it has arrived,
+/// delivered its earlier sends, and received everything addressed to it
+/// in phases `< p`; each transfer occupies its link for
+/// `latency + fraction·bytes/bandwidth`. Phases layer the dependency
+/// DAG, so the simulation drains one [`EventQueue`] per phase (events
+/// pop in time order, ties broken by schedule order) and carries each
+/// worker's readiness forward. With simultaneous arrivals this
+/// reproduces [`Schedule::uniform_cost`] exactly — for the ring, the
+/// closed-form `2(N-1)·(latency + bytes/(N·bw))`.
+pub fn schedule_completion(
+    schedule: &Schedule,
+    arrivals: &[f64],
+    latency: f64,
+    bandwidth: f64,
+    bytes: f64,
+) -> f64 {
+    assert_eq!(
+        schedule.workers,
+        arrivals.len(),
+        "schedule built for a different worker count"
+    );
+    if arrivals.is_empty() {
+        return 0.0;
     }
-    let phases = 2 * (n - 1);
-    let hop = latency + bytes / n as f64 / bandwidth;
-
-    // ready[w] = earliest time worker w can send its next message.
-    let mut ready = arrivals.to_vec();
-    let mut recv_done = vec![0.0f64; n];
-    let mut q = EventQueue::new();
-    // tag encodes (phase, worker): fire when w's phase-p send *completes*
-    // at the receiver (w+1) % n.
-    let tag = |p: usize, w: usize| (p * n + w) as u64;
-
-    for w in 0..n {
-        q.schedule_at(ready[w].max(0.0) + hop, tag(0, w));
-    }
-    let mut last = 0.0f64;
-    while let Some(ev) = q.pop() {
-        let p = ev.tag as usize / n;
-        let w = ev.tag as usize % n; // sender
-        let dst = (w + 1) % n;
-        recv_done[dst] = recv_done[dst].max(ev.time);
-        last = last.max(ev.time);
-        if p + 1 < phases {
-            // dst forwards in phase p+1 once it has arrived and received.
-            let t_send = ready[dst].max(recv_done[dst]);
-            ready[dst] = t_send;
-            q.schedule_at(t_send.max(ev.time) + hop, tag(p + 1, dst));
+    // ready[w] = earliest time w can act in the next phase.
+    let mut ready: Vec<f64> = arrivals.iter().map(|a| a.max(0.0)).collect();
+    for phase in &schedule.phases {
+        let mut q = EventQueue::new();
+        for (k, t) in phase.transfers.iter().enumerate() {
+            let hop = latency + t.chunk.fraction() * bytes / bandwidth;
+            q.schedule_at(ready[t.src] + hop, k as u64);
         }
+        let mut next = ready.clone();
+        while let Some(ev) = q.pop() {
+            let t = &phase.transfers[ev.tag as usize];
+            // data dependency: dst holds the chunk at delivery time
+            if ev.time > next[t.dst] {
+                next[t.dst] = ev.time;
+            }
+            // egress occupancy: src's link is busy until delivery
+            if ev.time > next[t.src] {
+                next[t.src] = ev.time;
+            }
+        }
+        ready = next;
     }
-    last
+    ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }
 
 #[cfg(test)]
@@ -109,6 +238,26 @@ mod tests {
         let m = CommModel::Fixed(0.5);
         assert!((m.completion_time(&[1.0, 3.0, 2.0]) - 3.5).abs() < 1e-12);
         assert_eq!(m.serial_latency(8), 0.5);
+    }
+
+    #[test]
+    fn empty_arrivals_complete_at_zero() {
+        // Regression: the old fold over max started at NEG_INFINITY and
+        // returned it for an empty reduction.
+        for m in [
+            CommModel::Fixed(0.5),
+            CommModel::Ring { latency: 1e-4, bandwidth: 1e9, bytes: 4e6 },
+            CommModel::Topology {
+                kind: TopologyKind::Tree,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                bytes: 4e6,
+            },
+        ] {
+            let t = m.completion_time(&[]);
+            assert_eq!(t, 0.0, "{m:?}");
+            assert!(t.is_finite());
+        }
     }
 
     #[test]
@@ -127,6 +276,45 @@ mod tests {
     }
 
     #[test]
+    fn every_topology_uniform_arrivals_match_uniform_cost() {
+        let (lat, bw, bytes) = (25e-6, 12.5e9, 1e8);
+        for kind in TopologyKind::ALL {
+            for n in [2usize, 4, 7, 8, 12] {
+                let m = CommModel::Topology {
+                    kind,
+                    latency: lat,
+                    bandwidth: bw,
+                    bytes,
+                };
+                let got = m.completion_time(&vec![0.0; n]);
+                let want = kind.build(n).uniform_cost(lat, bw, bytes);
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "{} n={n}: {got} vs {want}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_variant_is_topology_ring() {
+        let (lat, bw, bytes) = (1e-4, 1e9, 4e6);
+        let ring = CommModel::Ring { latency: lat, bandwidth: bw, bytes };
+        let topo = CommModel::Topology {
+            kind: TopologyKind::Ring,
+            latency: lat,
+            bandwidth: bw,
+            bytes,
+        };
+        let arrivals = [0.3, 0.1, 0.7, 0.2, 0.5];
+        assert_eq!(
+            ring.completion_time(&arrivals).to_bits(),
+            topo.completion_time(&arrivals).to_bits()
+        );
+    }
+
+    #[test]
     fn ring_straggler_dominates() {
         let m = CommModel::Ring { latency: 1e-4, bandwidth: 1e9, bytes: 4e6 };
         let fast = m.completion_time(&[0.0, 0.0, 0.0, 0.0]);
@@ -134,6 +322,26 @@ mod tests {
         // a 5s-late worker pushes completion past 5s + ring time ~ fast
         assert!(strag > 5.0);
         assert!((strag - (5.0 + fast)).abs() < fast, "{strag} vs {fast}");
+    }
+
+    #[test]
+    fn straggler_stalls_every_topology() {
+        // the dependency chains differ, but in every topology a very
+        // late worker delays global completion past its arrival.
+        for kind in TopologyKind::ALL {
+            let m = CommModel::Topology {
+                kind,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                bytes: 4e6,
+            };
+            let fast = m.completion_time(&vec![0.0; 8]);
+            let mut arr = vec![0.0; 8];
+            arr[3] = 5.0;
+            let strag = m.completion_time(&arr);
+            assert!(strag > 5.0, "{}: {strag}", kind.name());
+            assert!(fast < 1.0, "{}: {fast}", kind.name());
+        }
     }
 
     #[test]
@@ -157,5 +365,44 @@ mod tests {
         let m = CommModel::Ring { latency: 1e-3, bandwidth: 1e9, bytes: 1e6 };
         assert_eq!(m.completion_time(&[2.0]), 2.0);
         assert_eq!(m.serial_latency(1), 0.0);
+    }
+
+    #[test]
+    fn bounded_wait_mask_and_first_always_survives() {
+        let arr = [3.0, 0.5, 0.6, 9.0];
+        let surv = bounded_wait_survivors(&arr, 1.0);
+        assert_eq!(surv, vec![false, true, true, false]);
+        // negative deadline clamps to 0: only the first arrival survives
+        let surv0 = bounded_wait_survivors(&arr, -5.0);
+        assert_eq!(surv0, vec![false, true, false, false]);
+        assert!(bounded_wait_survivors(&[], 1.0).is_empty());
+    }
+
+    #[test]
+    fn dropcomm_caps_the_straggler_tail() {
+        let m = CommModel::Ring { latency: 1e-4, bandwidth: 1e9, bytes: 4e6 };
+        let arrivals = [0.1, 0.2, 0.15, 100.0];
+        let full = m.completion_time(&arrivals);
+        assert!(full > 100.0, "baseline waits for the straggler: {full}");
+        let (surv, t) = m.bounded_wait_completion(&arrivals, 1.0);
+        assert_eq!(surv, vec![true, true, true, false]);
+        // the membership decision is made at first + deadline = 1.1
+        // (no clairvoyance), then the survivors' collective is done.
+        assert!(t >= 1.1 - 1e-12, "cannot close membership early: {t}");
+        assert!(t < 2.0, "bounded wait completes without the straggler: {t}");
+    }
+
+    #[test]
+    fn dropcomm_with_loose_deadline_is_plain_allreduce() {
+        let m = CommModel::Topology {
+            kind: TopologyKind::Tree,
+            latency: 1e-4,
+            bandwidth: 1e9,
+            bytes: 4e6,
+        };
+        let arrivals = [0.3, 0.1, 0.7, 0.2, 0.5];
+        let (surv, t) = m.bounded_wait_completion(&arrivals, 10.0);
+        assert!(surv.iter().all(|&s| s));
+        assert_eq!(t.to_bits(), m.completion_time(&arrivals).to_bits());
     }
 }

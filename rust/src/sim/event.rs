@@ -60,13 +60,15 @@ impl EventQueue {
 
     /// Schedule `tag` to fire `delay` seconds from now.
     pub fn schedule_in(&mut self, delay: f64, tag: u64) {
-        debug_assert!(delay >= 0.0, "negative delay");
+        // negated comparison so a NaN delay doesn't trip the assert —
+        // NaN events are tolerated (they order as ties, see `Ord`).
+        debug_assert!(!(delay < 0.0), "negative delay");
         self.schedule_at(self.now + delay, tag);
     }
 
     /// Schedule `tag` at absolute virtual time `time` (>= now).
     pub fn schedule_at(&mut self, time: f64, tag: u64) {
-        debug_assert!(time >= self.now, "scheduling into the past");
+        debug_assert!(!(time < self.now), "scheduling into the past");
         self.heap.push(Event { time, seq: self.seq, tag });
         self.seq += 1;
     }
@@ -133,6 +135,55 @@ mod tests {
         q.schedule_in(0.5, 1);
         let e = q.pop().unwrap();
         assert_eq!(e.time, 2.0);
+    }
+
+    #[test]
+    fn min_heap_order_under_interleaved_push_pop() {
+        // heap property must survive pushes between pops
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, 5);
+        q.schedule_at(1.0, 1);
+        assert_eq!(q.pop().unwrap().tag, 1);
+        q.schedule_at(3.0, 3);
+        q.schedule_at(4.0, 4);
+        assert_eq!(q.pop().unwrap().tag, 3);
+        q.schedule_at(4.5, 45);
+        let tags: Vec<u64> =
+            std::iter::from_fn(|| q.pop().map(|e| e.tag)).collect();
+        assert_eq!(tags, vec![4, 45, 5]);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn nan_times_do_not_panic_or_lose_events() {
+        // A NaN-timed event must neither panic the comparator (the Ord
+        // impl treats incomparable times as ties) nor drop events.
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, 100);
+        q.schedule_at(1.0, 1);
+        q.schedule_at(f64::NAN, 101);
+        q.schedule_at(2.0, 2);
+        let mut popped = Vec::new();
+        while let Some(ev) = q.pop() {
+            popped.push(ev.tag);
+        }
+        assert_eq!(popped.len(), 4, "all events must surface: {popped:?}");
+        assert_eq!(q.processed(), 4);
+        for tag in [1, 2, 100, 101] {
+            assert!(popped.contains(&tag), "lost event {tag}");
+        }
+    }
+
+    #[test]
+    fn nan_now_does_not_block_future_scheduling() {
+        // after popping a NaN event, `now` is NaN; scheduling must still
+        // work (the past-check uses a negated comparison).
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, 0);
+        q.pop().unwrap();
+        q.schedule_at(1.0, 1);
+        assert_eq!(q.pop().unwrap().tag, 1);
     }
 
     #[test]

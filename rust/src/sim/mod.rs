@@ -3,8 +3,12 @@
 //! * [`noise`] — per-micro-batch latency models (App. B.1 noise, Fig 13/14
 //!   families, Fig 12 straggler scenarios, Fig 6 heterogeneity);
 //! * [`event`] — virtual-clock event queue;
-//! * [`comm`] — AllReduce timing models (fixed `T^c` and event-driven ring);
-//! * [`cluster`] — synchronous / DropCompute / Local-SGD step timing;
+//! * [`comm`] — AllReduce timing models: fixed `T^c`, plus any
+//!   [`crate::topology::Schedule`] (ring / tree / hierarchical / torus)
+//!   timed event-driven with per-worker arrivals, and the bounded-wait
+//!   DropComm membership rule;
+//! * [`cluster`] — synchronous / DropCompute / DropComm / Local-SGD
+//!   step timing;
 //! * [`trace`] — `t_{i,n}^{(m)}` recording for Algorithm 2 and post-analysis.
 
 pub mod cluster;
@@ -14,7 +18,7 @@ pub mod noise;
 pub mod trace;
 
 pub use cluster::{ClusterSim, PreemptionMode, StepOutcome};
-pub use comm::CommModel;
+pub use comm::{bounded_wait_survivors, schedule_completion, CommModel};
 pub use event::EventQueue;
 pub use noise::LatencyModel;
 pub use trace::Trace;

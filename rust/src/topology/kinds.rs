@@ -1,0 +1,498 @@
+//! The built-in collective topologies: ring, binomial tree, two-level
+//! hierarchical ring-of-rings, and 2D torus.
+//!
+//! Each builder emits a [`Schedule`] whose executed result is the sum
+//! over all workers (all-reduce). Reduction association differs between
+//! topologies (that is the point of the ablation), but *within* one
+//! topology it is fixed by the schedule, so repeated runs are bitwise
+//! identical — and the ring schedule reproduces
+//! [`crate::collective::ring_all_reduce`]'s association exactly.
+
+use crate::util::{Error, Result};
+
+use super::schedule::{Chunk, Phase, Schedule, Transfer, TransferOp};
+
+/// A collective topology: a named factory of all-reduce schedules.
+pub trait Topology {
+    fn name(&self) -> &'static str;
+
+    /// Build the all-reduce schedule for `n` workers. Must return a
+    /// schedule that passes [`Schedule::validate`] and whose execution
+    /// leaves every worker holding the global sum.
+    fn schedule(&self, n: usize) -> Schedule;
+}
+
+/// Ring all-reduce: reduce-scatter + all-gather, 2(N-1) phases of `1/N`
+/// chunks (bandwidth-optimal; Patarasuk & Yuan 2009).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Ring;
+
+/// Binomial-tree all-reduce: reduce to rank 0, then broadcast —
+/// 2·ceil(log2 N) phases of the full buffer (latency-optimal).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BinaryTree;
+
+/// Two-level ring-of-rings: ring all-reduce inside each group of
+/// `group` consecutive ranks, ring all-reduce across the group leaders,
+/// then a pipeline broadcast of the global sum inside each group.
+/// `group == 0` picks ceil(sqrt(N)) (balances the two levels).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HierarchicalRing {
+    pub group: usize,
+}
+
+/// 2D torus: ring all-reduce along every row, then along every column.
+/// `rows == 0` picks the largest divisor of N that is <= sqrt(N)
+/// (degenerates to a single ring when N is prime).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Torus2d {
+    pub rows: usize,
+}
+
+/// Ring all-reduce phases over an arbitrary member list: 2(k-1) phases,
+/// chunks of `1/k` of the full buffer. Mirrors `ring_all_reduce`'s
+/// send/recv indexing so the ring schedule is association-identical to
+/// the hand-written collective.
+fn ring_allreduce_phases(members: &[usize]) -> Vec<Phase> {
+    let k = members.len();
+    if k <= 1 {
+        return Vec::new();
+    }
+    let mut phases = Vec::with_capacity(2 * (k - 1));
+    // reduce-scatter: step s, member i sends chunk (i - s) mod k.
+    for s in 0..k - 1 {
+        let mut ph = Phase::default();
+        for (i, &w) in members.iter().enumerate() {
+            ph.transfers.push(Transfer {
+                src: w,
+                dst: members[(i + 1) % k],
+                chunk: Chunk { part: (i + k - s) % k, of: k },
+                op: TransferOp::Reduce,
+            });
+        }
+        phases.push(ph);
+    }
+    // all-gather: step s, member i sends chunk (i + 1 - s) mod k.
+    for s in 0..k - 1 {
+        let mut ph = Phase::default();
+        for (i, &w) in members.iter().enumerate() {
+            ph.transfers.push(Transfer {
+                src: w,
+                dst: members[(i + 1) % k],
+                chunk: Chunk { part: (i + 1 + k - s) % k, of: k },
+                op: TransferOp::Copy,
+            });
+        }
+        phases.push(ph);
+    }
+    phases
+}
+
+/// Merge several phase lists so they run concurrently: phase `p` of the
+/// result is the union of phase `p` of every input (shorter lists simply
+/// idle in the tail phases). Disjoint member sets keep the one-send/
+/// one-recv invariant.
+fn merge_concurrent(lists: Vec<Vec<Phase>>) -> Vec<Phase> {
+    let depth = lists.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out: Vec<Phase> = (0..depth).map(|_| Phase::default()).collect();
+    for list in lists {
+        for (p, phase) in list.into_iter().enumerate() {
+            out[p].transfers.extend(phase.transfers);
+        }
+    }
+    out
+}
+
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn schedule(&self, n: usize) -> Schedule {
+        let members: Vec<usize> = (0..n).collect();
+        Schedule { workers: n, phases: ring_allreduce_phases(&members) }
+    }
+}
+
+impl Topology for BinaryTree {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn schedule(&self, n: usize) -> Schedule {
+        let mut phases = Vec::new();
+        if n <= 1 {
+            return Schedule::empty(n);
+        }
+        // Reduce phase r (stride s = 2^r): rank w with w mod 2s == s
+        // ships its partial sum to w - s, which accumulates. Mirrors
+        // `tree_all_reduce`'s association exactly.
+        let mut s = 1;
+        while s < n {
+            let mut ph = Phase::default();
+            let mut w = s;
+            while w < n {
+                ph.transfers.push(Transfer {
+                    src: w,
+                    dst: w - s,
+                    chunk: Chunk::FULL,
+                    op: TransferOp::Reduce,
+                });
+                w += 2 * s;
+            }
+            phases.push(ph);
+            s <<= 1;
+        }
+        // Broadcast: mirror image top-down from rank 0.
+        let mut s = usize::next_power_of_two(n) >> 1;
+        while s >= 1 {
+            let mut ph = Phase::default();
+            let mut w = 0;
+            while w + s < n {
+                ph.transfers.push(Transfer {
+                    src: w,
+                    dst: w + s,
+                    chunk: Chunk::FULL,
+                    op: TransferOp::Copy,
+                });
+                w += 2 * s;
+            }
+            phases.push(ph);
+            s >>= 1;
+        }
+        Schedule { workers: n, phases }
+    }
+}
+
+impl HierarchicalRing {
+    /// Resolve the group size for `n` workers (0 = auto ceil(sqrt(n))).
+    pub fn group_for(&self, n: usize) -> usize {
+        if self.group > 0 {
+            return self.group.min(n.max(1));
+        }
+        let mut g = 1usize;
+        while g * g < n {
+            g += 1;
+        }
+        g.max(1)
+    }
+}
+
+impl Topology for HierarchicalRing {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn schedule(&self, n: usize) -> Schedule {
+        if n <= 1 {
+            return Schedule::empty(n);
+        }
+        let g = self.group_for(n);
+        let groups: Vec<Vec<usize>> = (0..n)
+            .step_by(g)
+            .map(|start| (start..(start + g).min(n)).collect())
+            .collect();
+        if groups.len() == 1 {
+            // one group covers everyone: its all-reduce is already
+            // global, so the leader ring and broadcast would be waste.
+            return Schedule {
+                workers: n,
+                phases: ring_allreduce_phases(&groups[0]),
+            };
+        }
+
+        // Level 1: concurrent ring all-reduce inside every group — each
+        // member ends with its group's sum.
+        let intra = merge_concurrent(
+            groups.iter().map(|m| ring_allreduce_phases(m)).collect(),
+        );
+        // Level 2: ring all-reduce across the group leaders.
+        let leaders: Vec<usize> = groups.iter().map(|m| m[0]).collect();
+        let inter = ring_allreduce_phases(&leaders);
+        // Level 3: pipeline broadcast of the global sum down each group
+        // (leader -> member1 -> member2 -> ...), full buffer per hop.
+        let bcast = merge_concurrent(
+            groups
+                .iter()
+                .map(|m| {
+                    m.windows(2)
+                        .map(|w| Phase {
+                            transfers: vec![Transfer {
+                                src: w[0],
+                                dst: w[1],
+                                chunk: Chunk::FULL,
+                                op: TransferOp::Copy,
+                            }],
+                        })
+                        .collect()
+                })
+                .collect(),
+        );
+
+        let mut phases = intra;
+        phases.extend(inter);
+        phases.extend(bcast);
+        Schedule { workers: n, phases }
+    }
+}
+
+impl Torus2d {
+    /// Resolve the row count for `n` workers (0 = auto: the largest
+    /// divisor of n not exceeding sqrt(n); 1 for prime n).
+    pub fn rows_for(&self, n: usize) -> usize {
+        if self.rows > 0 && n % self.rows == 0 {
+            return self.rows;
+        }
+        // rows == 0 or the requested rows don't divide n: auto-pick.
+        let mut best = 1usize;
+        let mut d = 1usize;
+        while d * d <= n {
+            if n % d == 0 {
+                best = d;
+            }
+            d += 1;
+        }
+        best
+    }
+}
+
+impl Topology for Torus2d {
+    fn name(&self) -> &'static str {
+        "torus"
+    }
+
+    fn schedule(&self, n: usize) -> Schedule {
+        if n <= 1 {
+            return Schedule::empty(n);
+        }
+        let r = self.rows_for(n);
+        let c = n / r;
+        // Step 1: ring all-reduce along every row (c members each) —
+        // each node ends with its row's sum.
+        let row_phases = merge_concurrent(
+            (0..r)
+                .map(|i| {
+                    let members: Vec<usize> = (i * c..(i + 1) * c).collect();
+                    ring_allreduce_phases(&members)
+                })
+                .collect(),
+        );
+        // Step 2: ring all-reduce along every column (r members each) —
+        // row sums combine into the global sum everywhere.
+        let col_phases = merge_concurrent(
+            (0..c)
+                .map(|j| {
+                    let members: Vec<usize> =
+                        (0..r).map(|i| i * c + j).collect();
+                    ring_allreduce_phases(&members)
+                })
+                .collect(),
+        );
+        let mut phases = row_phases;
+        phases.extend(col_phases);
+        Schedule { workers: n, phases }
+    }
+}
+
+/// Config/CLI-level topology selector (the trait objects above carry no
+/// state beyond these parameters, so a `Copy` enum travels through
+/// `ClusterConfig` cheaply).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    Ring,
+    Tree,
+    /// Two-level ring-of-rings; `group == 0` = auto ceil(sqrt(N)).
+    Hierarchical { group: usize },
+    /// 2D torus; `rows == 0` = auto largest divisor <= sqrt(N).
+    Torus { rows: usize },
+}
+
+impl TopologyKind {
+    /// Every kind with auto parameters — the ablation sweep set.
+    pub const ALL: [TopologyKind; 4] = [
+        TopologyKind::Ring,
+        TopologyKind::Tree,
+        TopologyKind::Hierarchical { group: 0 },
+        TopologyKind::Torus { rows: 0 },
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Ring => "ring",
+            TopologyKind::Tree => "tree",
+            TopologyKind::Hierarchical { .. } => "hierarchical",
+            TopologyKind::Torus { .. } => "torus",
+        }
+    }
+
+    /// Build the schedule for `n` workers.
+    pub fn build(&self, n: usize) -> Schedule {
+        match *self {
+            TopologyKind::Ring => Ring.schedule(n),
+            TopologyKind::Tree => BinaryTree.schedule(n),
+            TopologyKind::Hierarchical { group } => {
+                HierarchicalRing { group }.schedule(n)
+            }
+            TopologyKind::Torus { rows } => Torus2d { rows }.schedule(n),
+        }
+    }
+
+    /// Parse `ring | tree | hierarchical[:group] | torus[:rows]`
+    /// (the `--topology` CLI flag and `comm.topology` config key).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (head, param) = match s.split_once(':') {
+            Some((h, p)) => {
+                let v: usize = p.parse().map_err(|_| {
+                    Error::Config(format!("topology `{s}`: bad parameter `{p}`"))
+                })?;
+                (h, v)
+            }
+            None => (s, 0),
+        };
+        Ok(match head {
+            "ring" => TopologyKind::Ring,
+            "tree" => TopologyKind::Tree,
+            "hierarchical" | "hring" => {
+                TopologyKind::Hierarchical { group: param }
+            }
+            "torus" => TopologyKind::Torus { rows: param },
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown topology `{other}` \
+                     (ring | tree | hierarchical[:group] | torus[:rows])"
+                )))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_sizes() -> Vec<usize> {
+        vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 12, 16]
+    }
+
+    #[test]
+    fn every_topology_validates_at_every_size() {
+        for kind in TopologyKind::ALL {
+            for n in all_sizes() {
+                let s = kind.build(n);
+                assert_eq!(s.workers, n);
+                s.validate().unwrap_or_else(|e| {
+                    panic!("{} n={n}: {e}", kind.name())
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn ring_phase_count_is_2n_minus_2() {
+        for n in [2usize, 5, 8] {
+            assert_eq!(TopologyKind::Ring.build(n).phase_count(), 2 * (n - 1));
+        }
+        assert_eq!(TopologyKind::Ring.build(1).phase_count(), 0);
+    }
+
+    #[test]
+    fn tree_phase_count_is_2_log2() {
+        for (n, want) in [(2usize, 2usize), (4, 4), (5, 6), (8, 6), (9, 8)] {
+            let got = TopologyKind::Tree.build(n).phase_count();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_reduces_everything_to_rank0_then_broadcasts() {
+        // every rank != 0 sends exactly one Reduce transfer; rank 0 none.
+        for n in [3usize, 8, 13] {
+            let s = TopologyKind::Tree.build(n);
+            let mut reduce_sends = vec![0usize; n];
+            let mut copy_recvs = vec![0usize; n];
+            for ph in &s.phases {
+                for t in &ph.transfers {
+                    match t.op {
+                        TransferOp::Reduce => reduce_sends[t.src] += 1,
+                        TransferOp::Copy => copy_recvs[t.dst] += 1,
+                    }
+                }
+            }
+            assert_eq!(reduce_sends[0], 0, "n={n}");
+            for w in 1..n {
+                assert_eq!(reduce_sends[w], 1, "n={n} w={w}");
+                assert_eq!(copy_recvs[w], 1, "n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_auto_group_is_near_sqrt() {
+        let h = HierarchicalRing { group: 0 };
+        assert_eq!(h.group_for(16), 4);
+        assert_eq!(h.group_for(9), 3);
+        assert_eq!(h.group_for(10), 4);
+        assert_eq!(h.group_for(1), 1);
+    }
+
+    #[test]
+    fn torus_auto_rows_divides_n() {
+        let t = Torus2d { rows: 0 };
+        assert_eq!(t.rows_for(16), 4);
+        assert_eq!(t.rows_for(12), 3);
+        assert_eq!(t.rows_for(7), 1); // prime -> single ring
+        let forced = Torus2d { rows: 5 };
+        assert_eq!(forced.rows_for(10), 5);
+        assert_eq!(forced.rows_for(12), 3); // 5 doesn't divide 12 -> auto
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        assert_eq!(TopologyKind::parse("ring").unwrap(), TopologyKind::Ring);
+        assert_eq!(TopologyKind::parse("tree").unwrap(), TopologyKind::Tree);
+        assert_eq!(
+            TopologyKind::parse("hierarchical:4").unwrap(),
+            TopologyKind::Hierarchical { group: 4 }
+        );
+        assert_eq!(
+            TopologyKind::parse("torus:8").unwrap(),
+            TopologyKind::Torus { rows: 8 }
+        );
+        assert!(TopologyKind::parse("mesh").is_err());
+        assert!(TopologyKind::parse("torus:x").is_err());
+    }
+
+    #[test]
+    fn uniform_cost_ring_matches_bandwidth_optimal_closed_form() {
+        let (lat, bw, bytes) = (1e-4, 1e9, 4e6);
+        for n in [2usize, 4, 8, 16] {
+            let s = TopologyKind::Ring.build(n);
+            let got = s.uniform_cost(lat, bw, bytes);
+            let want =
+                (2 * (n - 1)) as f64 * (lat + bytes / n as f64 / bw);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn tree_beats_ring_on_latency_bound_payloads() {
+        // tiny payload, high latency: 2 log N phases < 2(N-1) phases.
+        let (lat, bw, bytes) = (1e-3, 1e9, 1e3);
+        let n = 32;
+        let ring = TopologyKind::Ring.build(n).uniform_cost(lat, bw, bytes);
+        let tree = TopologyKind::Tree.build(n).uniform_cost(lat, bw, bytes);
+        assert!(tree < ring, "tree {tree} vs ring {ring}");
+    }
+
+    #[test]
+    fn ring_beats_tree_on_bandwidth_bound_payloads() {
+        let (lat, bw, bytes) = (1e-6, 1e9, 1e8);
+        let n = 16;
+        let ring = TopologyKind::Ring.build(n).uniform_cost(lat, bw, bytes);
+        let tree = TopologyKind::Tree.build(n).uniform_cost(lat, bw, bytes);
+        assert!(ring < tree, "ring {ring} vs tree {tree}");
+    }
+}

@@ -1,0 +1,36 @@
+//! Topology-aware collective engine: pluggable all-reduce schedules.
+//!
+//! The paper folds communication into one constant `T^c`, but at scale
+//! the collective is the *other* tail-latency amplifier: in a ring, one
+//! late neighbour stalls all 2(N-1) phases. This subsystem makes the
+//! collective's shape a first-class, swappable object:
+//!
+//! * [`schedule`] — the [`Schedule`]/[`Phase`]/[`Transfer`] data model
+//!   both consumers interpret;
+//! * [`kinds`] — the [`Topology`] trait and the four built-ins
+//!   ([`Ring`], [`BinaryTree`], [`HierarchicalRing`], [`Torus2d`]),
+//!   selected by [`TopologyKind`];
+//!
+//! consumed by **both** sides of the codebase:
+//!
+//! * virtual time — [`crate::sim::comm::schedule_completion`] runs a
+//!   schedule through the event queue honoring per-worker arrival
+//!   times (the `--topology` flag of `simulate`/`scale`);
+//! * real threads — [`crate::collective::engine::schedule_all_reduce`]
+//!   executes the same schedule over the mpsc mesh with a
+//!   bitwise-deterministic reduction order.
+//!
+//! On top sits **DropComm** (bounded-wait all-reduce,
+//! [`crate::sim::comm::CommModel::bounded_wait_completion`]): workers
+//! that miss the membership deadline are excluded from the reduction
+//! and the sum is reweighted — the communication-side analogue of
+//! DropCompute's Algorithm 1 (cf. OptiReduce, arXiv:2310.06993; and the
+//! few-lost-contributions tolerance of arXiv:1702.05800).
+
+pub mod kinds;
+pub mod schedule;
+
+pub use kinds::{
+    BinaryTree, HierarchicalRing, Ring, Topology, TopologyKind, Torus2d,
+};
+pub use schedule::{chunk_bounds, Chunk, Phase, Schedule, Transfer, TransferOp};

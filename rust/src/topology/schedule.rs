@@ -1,0 +1,249 @@
+//! Phase-structured communication schedules.
+//!
+//! A [`Schedule`] is the *lingua franca* between the topology builders
+//! ([`super::kinds`]), the event-driven timing model
+//! ([`crate::sim::comm::schedule_completion`]) and the real in-process
+//! executor ([`crate::collective::engine`]): an ordered list of phases,
+//! each a set of point-to-point [`Transfer`]s. Both consumers interpret
+//! the same object, which is what lets the tests assert that virtual
+//! time and real threads agree on every topology.
+//!
+//! Invariant (checked by [`Schedule::validate`]): within one phase every
+//! worker sends at most one message and receives at most one message.
+//! All four built-in topologies satisfy it by construction; it is what
+//! makes the per-phase timing recurrence exact (one hop per worker per
+//! phase, no intra-phase link contention to model).
+
+/// Which slice of the flat gradient buffer a transfer carries: part
+/// `part` of `of` equal divisions. Resolved against the live buffer
+/// length with [`chunk_bounds`], so the same schedule serves any
+/// gradient size (uneven remainders go to the leading parts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub part: usize,
+    pub of: usize,
+}
+
+impl Chunk {
+    /// The whole buffer in one message.
+    pub const FULL: Chunk = Chunk { part: 0, of: 1 };
+
+    /// Fraction of the buffer's bytes this chunk occupies (timing model).
+    pub fn fraction(&self) -> f64 {
+        1.0 / self.of as f64
+    }
+
+    /// Concrete `[start, end)` element range for a buffer of `len`.
+    pub fn bounds(&self, len: usize) -> (usize, usize) {
+        chunk_bounds(len, self.of, self.part)
+    }
+}
+
+/// Chunk boundaries for splitting `len` into `size` contiguous chunks
+/// (chunk `idx` of `size`; the first `len % size` chunks get one extra
+/// element). Shared with the ring collective in `collective`.
+pub fn chunk_bounds(len: usize, size: usize, idx: usize) -> (usize, usize) {
+    let base = len / size;
+    let rem = len % size;
+    let start = idx * base + idx.min(rem);
+    let extra = if idx < rem { 1 } else { 0 };
+    (start, start + base + extra)
+}
+
+/// What the receiver does with an incoming chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferOp {
+    /// `local += incoming` elementwise (reduce-scatter / reduce phases).
+    /// The executor always accumulates *into* the local buffer in
+    /// schedule order, which fixes the reduction association — the
+    /// bitwise-determinism requirement of synchronous training.
+    Reduce,
+    /// `local = incoming` (all-gather / broadcast phases).
+    Copy,
+}
+
+/// One point-to-point message within a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    pub src: usize,
+    pub dst: usize,
+    pub chunk: Chunk,
+    pub op: TransferOp,
+}
+
+/// One phase: a set of transfers whose sends all depend only on the
+/// previous phases' receives.
+#[derive(Debug, Clone, Default)]
+pub struct Phase {
+    pub transfers: Vec<Transfer>,
+}
+
+/// A complete all-reduce schedule for `workers` participants.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub workers: usize,
+    pub phases: Vec<Phase>,
+}
+
+impl Schedule {
+    /// An empty (no-communication) schedule, correct for `n <= 1`.
+    pub fn empty(workers: usize) -> Self {
+        Self { workers, phases: Vec::new() }
+    }
+
+    pub fn phase_count(&self) -> usize {
+        self.phases.len()
+    }
+
+    /// Total messages across all phases.
+    pub fn transfer_count(&self) -> usize {
+        self.phases.iter().map(|p| p.transfers.len()).sum()
+    }
+
+    /// Check the structural invariants: indices in range, no self-sends,
+    /// and per phase at most one send and one receive per worker.
+    pub fn validate(&self) -> Result<(), String> {
+        for (pi, phase) in self.phases.iter().enumerate() {
+            let mut sends = vec![false; self.workers];
+            let mut recvs = vec![false; self.workers];
+            for t in &phase.transfers {
+                if t.src >= self.workers || t.dst >= self.workers {
+                    return Err(format!(
+                        "phase {pi}: transfer {}->{} out of range (n={})",
+                        t.src, t.dst, self.workers
+                    ));
+                }
+                if t.src == t.dst {
+                    return Err(format!("phase {pi}: self-send at {}", t.src));
+                }
+                if t.chunk.of == 0 || t.chunk.part >= t.chunk.of {
+                    return Err(format!(
+                        "phase {pi}: bad chunk {}/{}",
+                        t.chunk.part, t.chunk.of
+                    ));
+                }
+                if std::mem::replace(&mut sends[t.src], true) {
+                    return Err(format!(
+                        "phase {pi}: worker {} sends twice",
+                        t.src
+                    ));
+                }
+                if std::mem::replace(&mut recvs[t.dst], true) {
+                    return Err(format!(
+                        "phase {pi}: worker {} receives twice",
+                        t.dst
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Closed-form completion time for simultaneous arrivals at t=0:
+    /// the same per-phase readiness recurrence the event simulation
+    /// runs, collapsed (uniform arrivals make the dependency DAG
+    /// layered, so no queue is needed). Each transfer costs
+    /// `latency + fraction * bytes / bandwidth`.
+    pub fn uniform_cost(&self, latency: f64, bandwidth: f64, bytes: f64) -> f64 {
+        let mut ready = vec![0.0f64; self.workers];
+        for phase in &self.phases {
+            let mut next = ready.clone();
+            for t in &phase.transfers {
+                let hop = latency + t.chunk.fraction() * bytes / bandwidth;
+                let done = ready[t.src] + hop;
+                if done > next[t.dst] {
+                    next[t.dst] = done;
+                }
+                if done > next[t.src] {
+                    next[t.src] = done;
+                }
+            }
+            ready = next;
+        }
+        ready.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_bounds_partition_everything() {
+        for (len, size) in [(10, 3), (7, 7), (5, 8), (16, 4), (1, 1)] {
+            let mut covered = 0;
+            for i in 0..size {
+                let (a, b) = chunk_bounds(len, size, i);
+                assert_eq!(a, covered, "len={len} size={size} i={i}");
+                covered = b;
+            }
+            assert_eq!(covered, len);
+        }
+    }
+
+    #[test]
+    fn chunk_fraction_and_full() {
+        assert_eq!(Chunk::FULL.fraction(), 1.0);
+        assert_eq!(Chunk { part: 2, of: 4 }.fraction(), 0.25);
+        assert_eq!(Chunk::FULL.bounds(17), (0, 17));
+    }
+
+    #[test]
+    fn validate_catches_double_send() {
+        let bad = Schedule {
+            workers: 3,
+            phases: vec![Phase {
+                transfers: vec![
+                    Transfer {
+                        src: 0,
+                        dst: 1,
+                        chunk: Chunk::FULL,
+                        op: TransferOp::Reduce,
+                    },
+                    Transfer {
+                        src: 0,
+                        dst: 2,
+                        chunk: Chunk::FULL,
+                        op: TransferOp::Reduce,
+                    },
+                ],
+            }],
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_self_send_and_range() {
+        let self_send = Schedule {
+            workers: 2,
+            phases: vec![Phase {
+                transfers: vec![Transfer {
+                    src: 1,
+                    dst: 1,
+                    chunk: Chunk::FULL,
+                    op: TransferOp::Copy,
+                }],
+            }],
+        };
+        assert!(self_send.validate().is_err());
+        let oob = Schedule {
+            workers: 2,
+            phases: vec![Phase {
+                transfers: vec![Transfer {
+                    src: 0,
+                    dst: 5,
+                    chunk: Chunk::FULL,
+                    op: TransferOp::Copy,
+                }],
+            }],
+        };
+        assert!(oob.validate().is_err());
+    }
+
+    #[test]
+    fn empty_schedule_costs_nothing() {
+        let s = Schedule::empty(1);
+        assert_eq!(s.uniform_cost(1e-4, 1e9, 4e6), 0.0);
+        assert!(s.validate().is_ok());
+    }
+}

@@ -7,21 +7,44 @@ pub use threadpool::ThreadPool;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled Display/From — the sandbox
+/// registry has no thiserror).
+#[derive(Debug)]
 pub enum Error {
-    #[error("config error: {0}")]
     Config(String),
-    #[error("cli error: {0}")]
     Cli(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("data error: {0}")]
     Data(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("xla: {0}")]
+    Io(std::io::Error),
     Xla(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Cli(m) => write!(f, "cli error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

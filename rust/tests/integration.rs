@@ -239,6 +239,7 @@ fn scale_run_sanity() {
         measure_iters: 25,
         grid: 64,
         seed: 3,
+        ..ScaleRun::default()
     };
     let p = run.point(32);
     assert!(p.dropcompute_throughput <= p.linear_throughput * 1.02);
@@ -274,4 +275,83 @@ fn analytic_and_empirical_agree_on_benefit() {
         (analytic - empirical).abs() < 0.15,
         "analytic {analytic} vs empirical {empirical}"
     );
+}
+
+/// The topology subsystem end-to-end: a hierarchical event-driven
+/// collective + bounded-wait DropComm membership flow through
+/// ClusterSim and ScaleRun, and the numbers stay physical.
+#[test]
+fn topology_scale_run_end_to_end() {
+    use dropcompute::topology::TopologyKind;
+    let base = dropcompute::config::ClusterConfig {
+        workers: 1,
+        accumulations: 12,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        noise: paper_noise(),
+        topology: Some(TopologyKind::Hierarchical { group: 0 }),
+        link_latency: 25e-6,
+        link_bandwidth: 12.5e9,
+        grad_bytes: 4e6,
+        ..Default::default()
+    };
+    let plain = ScaleRun {
+        base: base.clone(),
+        calibration_iters: 6,
+        measure_iters: 20,
+        grid: 48,
+        seed: 9,
+        comm_drop_deadline: None,
+    };
+    let bounded = ScaleRun {
+        comm_drop_deadline: Some(3.0),
+        base: base.clone(),
+        ..plain
+    };
+    let p = plain.point(24);
+    let b = bounded.point(24);
+    for thr in [
+        p.baseline_throughput,
+        p.dropcompute_throughput,
+        b.baseline_throughput,
+        b.dropcompute_throughput,
+    ] {
+        assert!(thr.is_finite() && thr > 0.0, "{thr}");
+        assert!(thr <= p.linear_throughput * 1.05, "{thr}");
+    }
+    // both drop mechanisms must not lose much useful throughput
+    assert!(p.dropcompute_throughput > 0.9 * p.baseline_throughput);
+    assert!(b.baseline_throughput > 0.6 * p.baseline_throughput);
+}
+
+/// A fatally stalled worker: DropComm (bounded-wait collective) alone
+/// keeps iteration time finite, the comm-side twin of the DropCompute
+/// stall test above.
+#[test]
+fn dropcomm_survives_compute_stall() {
+    use dropcompute::topology::TopologyKind;
+    let cfg = dropcompute::config::ClusterConfig {
+        workers: 6,
+        accumulations: 4,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        stragglers: StragglerKind::Fatal { worker: 1, from_step: 2 },
+        topology: Some(TopologyKind::Torus { rows: 0 }),
+        link_latency: 25e-6,
+        link_bandwidth: 12.5e9,
+        grad_bytes: 4e6,
+        comm_drop_deadline: 2.0,
+        ..Default::default()
+    };
+    let mut sim = ClusterSim::new(&cfg, 13);
+    for step in 0..5 {
+        let out = sim.step(None);
+        assert!(out.iter_time < 10.0, "step {step}: {}", out.iter_time);
+        if step >= 2 {
+            assert_eq!(out.completed[1], 0, "stalled worker excluded");
+            assert_eq!(out.total_completed(), 5 * 4);
+        } else {
+            assert_eq!(out.total_completed(), 6 * 4);
+        }
+    }
 }

@@ -1,0 +1,141 @@
+//! API-compatible stub of the `xla-rs` PJRT bindings.
+//!
+//! The sandbox build has no network registry and no PJRT shared library,
+//! so this in-tree crate provides the exact API surface that
+//! `dropcompute::runtime::pjrt` consumes. Every operation that would
+//! require a real backend returns [`Error::Unavailable`]; the sim,
+//! collective, topology and analysis layers (which never touch PJRT)
+//! compile and run unaffected. Swap the `xla` path dependency in the
+//! workspace `Cargo.toml` for real xla-rs bindings to execute the
+//! layer-1 HLO artifacts.
+
+use std::fmt;
+
+/// Stub error: every backend-requiring call returns this.
+#[derive(Debug, Clone)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT backend unavailable (in-tree xla stub; \
+                 link real xla-rs bindings to execute HLO artifacts)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// One PJRT device (stub: carries no state).
+#[derive(Debug, Clone, Copy)]
+pub struct Device;
+
+/// An HLO module parsed from text (stub: never constructed).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Host-side literal value.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// The PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient {
+    devices: Vec<Device>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&Device>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
