@@ -59,27 +59,39 @@ fn main() {
         "Fig 13 — per-family scale behaviour (N=200) and E[T]/E[T_i] (N=64)",
         &["family", "E[T]/E[T_i]", "base eff N=200", "dc eff N=200", "speedup"],
     );
+    // Every family's measurement is independent — fan them over the
+    // sweep engine's deterministic parallel runner.
+    let n_big = *ns.last().unwrap();
+    let fams_run = fams.clone();
+    let measured = dropcompute::sweep::run_indexed(
+        fams_run.len(),
+        0,
+        Some("fig13"),
+        move |i| {
+            let (name, noise) = fams_run[i].clone();
+            let cfg = cluster(noise);
+            let r = ratio(&cfg, 64);
+            let run = ScaleRun {
+                base: cfg,
+                calibration_iters: 12,
+                measure_iters: 50,
+                grid: 128,
+                seed: 133,
+                ..ScaleRun::default()
+            };
+            (name, r, run.point(n_big))
+        },
+    );
     let mut ratios = Vec::new();
-    for (name, noise) in &fams {
-        let cfg = cluster(noise.clone());
-        let r = ratio(&cfg, 64);
-        let run = ScaleRun {
-            base: cfg,
-            calibration_iters: 12,
-            measure_iters: 50,
-            grid: 128,
-            seed: 133,
-            ..ScaleRun::default()
-        };
-        let p = run.point(*ns.last().unwrap());
+    for (name, r, p) in &measured {
         t.row(vec![
             name.to_string(),
-            f(r, 3),
+            f(*r, 3),
             f(p.baseline_throughput / p.linear_throughput, 3),
             f(p.dropcompute_throughput / p.linear_throughput, 3),
             f(p.dropcompute_throughput / p.baseline_throughput, 3),
         ]);
-        ratios.push((name.to_string(), r,
+        ratios.push((name.to_string(), *r,
                      p.dropcompute_throughput / p.baseline_throughput));
     }
     t.print();

@@ -47,19 +47,29 @@ fn main() {
         "Fig 14 — variance sweep at N=200",
         &["Var(eps)", "E[T]/E[T_i]", "base eff", "dc eff", "speedup", "drop"],
     );
+    // Independent variance points — fan them over the sweep engine.
+    let measured = dropcompute::sweep::run_indexed(
+        vars.len(),
+        0,
+        Some("fig14"),
+        move |i| {
+            let v = vars[i];
+            let cfg = cluster(v);
+            let r = ratio(&cfg, 64);
+            let run = ScaleRun {
+                base: cfg,
+                calibration_iters: 12,
+                measure_iters: 50,
+                grid: 128,
+                seed: 143,
+                ..ScaleRun::default()
+            };
+            (v, r, run.point(200))
+        },
+    );
     let mut rows = Vec::new();
-    for &v in &vars {
-        let cfg = cluster(v);
-        let r = ratio(&cfg, 64);
-        let run = ScaleRun {
-            base: cfg,
-            calibration_iters: 12,
-            measure_iters: 50,
-            grid: 128,
-            seed: 143,
-            ..ScaleRun::default()
-        };
-        let p = run.point(200);
+    for (v, r, p) in &measured {
+        let (v, r, p) = (*v, *r, p);
         t.row(vec![
             f(v, 2),
             f(r, 3),

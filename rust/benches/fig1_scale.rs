@@ -17,13 +17,16 @@ fn main() {
          near-linear; the gain grows with N and extrapolates to infinity",
     );
 
-    // Left panel: simulated measurement up to 200 workers.
+    // Left panel: simulated measurement up to 200 workers. The sweep
+    // engine fans the N-points over all cores; per-point seeding keeps
+    // the output bitwise identical to a serial run.
     let run = ScaleRun {
         base: paper_cluster(1),
         calibration_iters: 15,
         measure_iters: 80,
         grid: 192,
         seed: 11,
+        jobs: 0,
         ..ScaleRun::default()
     };
     let ns = [8usize, 16, 32, 64, 112, 160, 200];

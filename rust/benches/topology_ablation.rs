@@ -50,6 +50,9 @@ fn measure(kind: TopologyKind, n: usize) -> Cell {
         grid: 96,
         seed: 0x7070 + n as u64,
         comm_drop_deadline: None,
+        // the cells themselves fan out over the pool; each cell's
+        // 3-point inner sweep stays serial
+        jobs: 1,
     };
     let bounded = ScaleRun {
         comm_drop_deadline: Some(DEADLINE),
@@ -80,10 +83,28 @@ fn main() {
     json.push_str(&format!("  \"comm_drop_deadline\": {DEADLINE},\n"));
     json.push_str("  \"topologies\": [\n");
 
+    // The full topology x N grid fans out over the sweep engine's
+    // deterministic parallel runner (every cell derives its seeds from
+    // its own coordinates, so the order of execution is invisible).
+    let grid: Vec<(TopologyKind, usize)> = TopologyKind::ALL
+        .iter()
+        .flat_map(|&k| ns.iter().map(move |&n| (k, n)))
+        .collect();
+    let n_cells = grid.len();
+    let mut measured: Vec<Cell> = dropcompute::sweep::run_indexed(
+        n_cells,
+        0,
+        Some("topology_ablation"),
+        move |i| {
+            let (kind, n) = grid[i];
+            measure(kind, n)
+        },
+    );
+
     let mut all_cells: Vec<(&'static str, Vec<Cell>)> = Vec::new();
     for (ti, kind) in TopologyKind::ALL.iter().enumerate() {
         let cells: Vec<Cell> =
-            ns.iter().map(|&n| measure(*kind, n)).collect();
+            measured.drain(..ns.len()).collect();
 
         let mut t = Table::new(
             format!("useful throughput (mb/s) — {} topology", kind.name()),

@@ -258,6 +258,40 @@ impl Default for DataConfig {
     }
 }
 
+/// Parallel scenario-grid configuration (`[sweep]` section), consumed
+/// by the `sweep`/`scale` subcommands via [`crate::sweep::SweepSpec`].
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Worker threads for the grid runner (0 = all cores, 1 = serial).
+    pub jobs: usize,
+    /// Measured iterations per grid point.
+    pub iters: usize,
+    /// Cluster sizes `N` to sweep.
+    pub workers: Vec<usize>,
+    /// DropCompute thresholds (0.0 = off).
+    pub thresholds: Vec<f64>,
+    /// DropComm bounded-wait deadlines (0.0 = wait for everyone).
+    pub deadlines: Vec<f64>,
+    /// Seed axis (same seed across arms = paired comparisons).
+    pub seeds: Vec<u64>,
+    /// Progress/ETA reporting to stderr.
+    pub progress: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            jobs: 0,
+            iters: 50,
+            workers: vec![16],
+            thresholds: vec![0.0],
+            deadlines: vec![0.0],
+            seeds: vec![0],
+            progress: true,
+        }
+    }
+}
+
 /// Top-level run configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -265,6 +299,7 @@ pub struct Config {
     pub dropcompute: DropComputeConfig,
     pub train: TrainConfig,
     pub data: DataConfig,
+    pub sweep: SweepConfig,
     /// Artifact root directory.
     pub artifacts_dir: String,
 }
@@ -276,6 +311,7 @@ impl Default for Config {
             dropcompute: DropComputeConfig::default(),
             train: TrainConfig::default(),
             data: DataConfig::default(),
+            sweep: SweepConfig::default(),
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -375,6 +411,29 @@ impl Config {
             }
         };
 
+        // [sweep] — parallel scenario-grid runner (crate::sweep)
+        let jobs = doc.int_or("sweep.jobs", 0);
+        c.sweep.jobs = usize::try_from(jobs).map_err(|_| {
+            Error::Config(format!("sweep.jobs must be >= 0, got {jobs}"))
+        })?;
+        let iters = doc.int_or("sweep.iters", 50);
+        if iters < 1 {
+            return Err(Error::Config(format!(
+                "sweep.iters must be >= 1, got {iters}"
+            )));
+        }
+        c.sweep.iters = iters as usize;
+        c.sweep.progress = doc.bool_or("sweep.progress", true);
+        c.sweep.workers = int_list(doc, "sweep.workers", &c.sweep.workers)?
+            .into_iter()
+            .map(|n: usize| n.max(1))
+            .collect();
+        c.sweep.thresholds =
+            float_list(doc, "sweep.thresholds", &c.sweep.thresholds)?;
+        c.sweep.deadlines =
+            float_list(doc, "sweep.deadlines", &c.sweep.deadlines)?;
+        c.sweep.seeds = int_list(doc, "sweep.seeds", &c.sweep.seeds)?;
+
         // [data]
         c.data.zipf_s = doc.float_or("data.zipf_s", 1.1);
         c.data.markov_weight = doc.float_or("data.markov_weight", 0.7);
@@ -417,8 +476,73 @@ impl Config {
         if !(0.0..=1.0).contains(&self.data.markov_weight) {
             return Err(Error::Config("markov_weight must be in [0,1]".into()));
         }
+        if self.sweep.workers.is_empty()
+            || self.sweep.thresholds.is_empty()
+            || self.sweep.deadlines.is_empty()
+            || self.sweep.seeds.is_empty()
+        {
+            return Err(Error::Config("sweep axes must be non-empty".into()));
+        }
+        if self.sweep.thresholds.iter().any(|&t| t < 0.0)
+            || self.sweep.deadlines.iter().any(|&d| d < 0.0)
+        {
+            return Err(Error::Config(
+                "sweep.thresholds and sweep.deadlines must be >= 0".into(),
+            ));
+        }
         Ok(())
     }
+}
+
+/// `key = [a, b, c]` (or a bare scalar, treated as a one-element list)
+/// as integers `>= 0`.
+fn int_values(doc: &Document, key: &str) -> Result<Option<Vec<i64>>> {
+    let Some(v) = doc.get(key) else { return Ok(None) };
+    let items: Vec<&Value> = match v.as_array() {
+        Some(arr) => arr.iter().collect(),
+        None => vec![v],
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        out.push(item.as_int().ok_or_else(|| {
+            Error::Config(format!("{key}: expected integer list"))
+        })?);
+    }
+    Ok(Some(out))
+}
+
+/// `key = [...]` as any non-negative integer type (`usize`, `u64`, ...).
+fn int_list<T: TryFrom<i64> + Clone>(
+    doc: &Document,
+    key: &str,
+    default: &[T],
+) -> Result<Vec<T>> {
+    match int_values(doc, key)? {
+        None => Ok(default.to_vec()),
+        Some(v) => v
+            .into_iter()
+            .map(|i| {
+                T::try_from(i).map_err(|_| {
+                    Error::Config(format!("{key}: negative entry {i}"))
+                })
+            })
+            .collect(),
+    }
+}
+
+fn float_list(doc: &Document, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+    let Some(v) = doc.get(key) else { return Ok(default.to_vec()) };
+    let items: Vec<&Value> = match v.as_array() {
+        Some(arr) => arr.iter().collect(),
+        None => vec![v],
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        out.push(item.as_float().ok_or_else(|| {
+            Error::Config(format!("{key}: expected float list"))
+        })?);
+    }
+    Ok(out)
 }
 
 fn parse_noise(doc: &Document) -> Result<NoiseKind> {
@@ -559,6 +683,54 @@ mod tests {
         let neg =
             Document::parse("[comm]\ndrop_deadline = -1.0").unwrap();
         assert!(Config::from_doc(&neg).is_err());
+    }
+
+    #[test]
+    fn sweep_section_roundtrip() {
+        let doc = Document::parse(
+            r#"
+            [sweep]
+            jobs = 4
+            iters = 25
+            workers = [8, 16, 32]
+            thresholds = [0.0, 2.5, 9]
+            deadlines = [0.0, 3.0]
+            seeds = [1, 2, 3, 4]
+            progress = false
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.sweep.jobs, 4);
+        assert_eq!(c.sweep.iters, 25);
+        assert_eq!(c.sweep.workers, vec![8, 16, 32]);
+        assert_eq!(c.sweep.thresholds, vec![0.0, 2.5, 9.0]);
+        assert_eq!(c.sweep.deadlines, vec![0.0, 3.0]);
+        assert_eq!(c.sweep.seeds, vec![1, 2, 3, 4]);
+        assert!(!c.sweep.progress);
+        // defaults: auto jobs, one point per axis
+        let d = Config::default();
+        assert_eq!(d.sweep.jobs, 0);
+        assert_eq!(d.sweep.workers, vec![16]);
+        // scalars act as one-element lists
+        let doc1 = Document::parse("[sweep]\nworkers = 64").unwrap();
+        assert_eq!(
+            Config::from_doc(&doc1).unwrap().sweep.workers,
+            vec![64]
+        );
+        // bad values rejected
+        for bad in [
+            "[sweep]\nworkers = [\"x\"]",
+            "[sweep]\nworkers = [-2]",
+            "[sweep]\nseeds = [-1]",
+            "[sweep]\njobs = -4",
+            "[sweep]\niters = -40",
+            "[sweep]\nthresholds = [-1.0]",
+            "[sweep]\nworkers = []",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(Config::from_doc(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -127,6 +127,7 @@ pub struct ScalePoint {
 /// [`ClusterConfig::comm_drop_deadline`]); `comm_drop_deadline` here
 /// overrides the latter per run, so one base config can be swept with
 /// and without bounded-wait communication.
+#[derive(Debug, Clone)]
 pub struct ScaleRun {
     pub base: ClusterConfig,
     pub calibration_iters: usize,
@@ -136,6 +137,10 @@ pub struct ScaleRun {
     /// `Some(d)` forces the DropComm deadline for every measured sim
     /// (including the baseline arm); `None` keeps `base`'s setting.
     pub comm_drop_deadline: Option<f64>,
+    /// Threads for [`Self::sweep`] (0 = all cores, 1 = serial). Each
+    /// point derives every sim seed from `seed` alone, so the parallel
+    /// sweep is bitwise identical to the serial one.
+    pub jobs: usize,
 }
 
 impl Default for ScaleRun {
@@ -147,6 +152,7 @@ impl Default for ScaleRun {
             grid: 128,
             seed: 0xF16_1,
             comm_drop_deadline: None,
+            jobs: 1,
         }
     }
 }
@@ -162,6 +168,13 @@ impl ScaleRun {
 
     /// Measure one cluster size.
     pub fn point(&self, workers: usize) -> ScalePoint {
+        self.point_with_anchor(workers, self.single_worker_iter_time())
+    }
+
+    /// [`Self::point`] with the single-worker anchor precomputed — the
+    /// anchor depends only on `self`, so a sweep computes it once
+    /// instead of once per grid point (same bits either way).
+    fn point_with_anchor(&self, workers: usize, single: f64) -> ScalePoint {
         let mut cfg = self.base.clone();
         cfg.workers = workers;
         if let Some(d) = self.comm_drop_deadline {
@@ -172,11 +185,12 @@ impl ScaleRun {
         // baseline — counted from completed micro-batches so that a
         // DropComm deadline's excluded workers aren't credited as
         // useful work (without drops this equals workers * m / E[t]).
+        let mut out = crate::sim::StepOutcome::default();
         let mut sim = ClusterSim::new(&cfg, self.seed);
         let mut base_t_sum = 0.0;
         let mut base_completed = 0usize;
         for _ in 0..self.measure_iters {
-            let out = sim.step(None);
+            sim.step_into(None, &mut out);
             base_t_sum += out.iter_time;
             base_completed += out.total_completed();
         }
@@ -190,7 +204,7 @@ impl ScaleRun {
         let mut t_sum = 0.0;
         let mut completed = 0usize;
         for _ in 0..self.measure_iters {
-            let out = dc_sim.step(Some(choice.tau));
+            dc_sim.step_into(Some(choice.tau), &mut out);
             t_sum += out.iter_time;
             completed += out.total_completed();
         }
@@ -198,7 +212,6 @@ impl ScaleRun {
         let drop_rate =
             1.0 - completed as f64 / (self.measure_iters * workers) as f64 / m;
 
-        let single = self.single_worker_iter_time();
         ScalePoint {
             workers,
             baseline_throughput,
@@ -209,9 +222,18 @@ impl ScaleRun {
         }
     }
 
-    /// Sweep a worker grid.
+    /// Sweep a worker grid, fanning the points over the sweep engine's
+    /// thread pool (`self.jobs`; 0 = all cores). [`Self::point`] is a
+    /// pure function of `(self, n)`, so the output is bitwise identical
+    /// to the serial order regardless of scheduling. The single-worker
+    /// linear-scaling anchor is measured once for the whole sweep.
     pub fn sweep(&self, ns: &[usize]) -> Vec<ScalePoint> {
-        ns.iter().map(|&n| self.point(n)).collect()
+        let ns: Vec<usize> = ns.to_vec();
+        let single = self.single_worker_iter_time();
+        let run = std::sync::Arc::new(self.clone());
+        crate::sweep::run_indexed(ns.len(), self.jobs, None, move |i| {
+            run.point_with_anchor(ns[i], single)
+        })
     }
 }
 
@@ -254,6 +276,40 @@ mod tests {
         // and the consensus equals the centralized computation
         let central = choose_threshold(&trace, 64);
         assert_eq!(central.tau.to_bits(), tau0.to_bits());
+    }
+
+    #[test]
+    fn parallel_sweep_bitwise_matches_serial() {
+        let mut run = ScaleRun {
+            base: noisy_cfg(),
+            calibration_iters: 5,
+            measure_iters: 10,
+            grid: 32,
+            seed: 9,
+            ..ScaleRun::default()
+        };
+        let ns = [2usize, 4, 6];
+        let serial = run.sweep(&ns);
+        run.jobs = 3;
+        let parallel = run.sweep(&ns);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.workers, b.workers);
+            assert_eq!(
+                a.baseline_throughput.to_bits(),
+                b.baseline_throughput.to_bits()
+            );
+            assert_eq!(
+                a.dropcompute_throughput.to_bits(),
+                b.dropcompute_throughput.to_bits()
+            );
+            assert_eq!(a.tau.to_bits(), b.tau.to_bits());
+            assert_eq!(a.drop_rate.to_bits(), b.drop_rate.to_bits());
+            assert_eq!(
+                a.linear_throughput.to_bits(),
+                b.linear_throughput.to_bits()
+            );
+        }
     }
 
     #[test]

@@ -5,10 +5,13 @@
 //! pool, decentralized AllReduce, gradient-accumulation scheduler with
 //! the DropCompute compute-threshold (Algorithm 1), automatic threshold
 //! selection (Algorithm 2), Local-SGD mode, optimizers, data pipeline,
-//! discrete-event cluster simulator, the analytical runtime model
-//! (Eqs. 4/5/6/11), and the topology-aware collective engine
-//! ([`topology`]: pluggable ring / tree / hierarchical / torus
-//! schedules plus the bounded-wait DropComm all-reduce).
+//! discrete-event cluster simulator (with a compiled, heapless
+//! schedule-timing fast path, [`sim::CompiledSchedule`]), the
+//! analytical runtime model (Eqs. 4/5/6/11), the topology-aware
+//! collective engine ([`topology`]: pluggable ring / tree /
+//! hierarchical / torus schedules plus the bounded-wait DropComm
+//! all-reduce), and the deterministic parallel scenario-sweep engine
+//! ([`sweep`]).
 //!
 //! Layers 2/1 (build-time python): JAX transformer fwd/bwd calling
 //! Pallas kernels, AOT-lowered to HLO text loaded by [`runtime`].
@@ -25,6 +28,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod sweep;
 pub mod topology;
 pub mod train;
 pub mod util;

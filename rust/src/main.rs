@@ -33,24 +33,35 @@ SUBCOMMANDS:
   local-sgd   Local-SGD + DropCompute             [--periods N] [--tau T]
   simulate    timing-only cluster simulation      [--iters N] [--tau T]
   tune        Algorithm 2 threshold sweep         [--iters N]
-  scale       throughput vs N sweep               [--workers 8,16,...]
+  scale       throughput vs N sweep               [--workers 8,16,...] [--jobs J]
+  sweep       parallel scenario grid: workers x tau x deadline x seed
+              [--workers 8,16] [--thresholds 0,2.5] [--deadlines 0,3]
+              [--seeds 1,2,3] [--iters N] [--jobs J] [--out dir]
   analyze     closed-form E[T], E[M~], S_eff      [--tau T]
 
-simulate/scale also take the topology-aware collective model:
+simulate/scale/sweep also take the topology-aware collective model:
   --topology fixed|ring|tree|hierarchical[:group]|torus[:rows]
               event-driven schedule model (`fixed` = the paper's T^c)
   --comm-drop-deadline D
               DropComm: bounded-wait AllReduce, membership closes D
               seconds after the first arrival (0 = wait for everyone)
 
+scale/sweep fan grid points over a thread pool: --jobs J (0 = all
+cores, 1 = serial; output is bitwise identical either way). Grid axes
+default to the `[sweep]` config section.
+
 Config keys: see configs/*.toml and DESIGN.md.";
 
 fn main() -> ExitCode {
     let spec = Spec::new()
-        .subcommands(&["train", "local-sgd", "simulate", "tune", "scale", "analyze"])
+        .subcommands(&[
+            "train", "local-sgd", "simulate", "tune", "scale", "sweep",
+            "analyze",
+        ])
         .value_keys(&[
             "config", "set", "out", "iters", "tau", "periods", "workers",
-            "grid", "topology", "comm-drop-deadline",
+            "grid", "topology", "comm-drop-deadline", "jobs", "thresholds",
+            "deadlines", "seeds",
         ]);
     let args = match spec.parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -83,6 +94,7 @@ fn run(args: &Args) -> Result<()> {
         "simulate" => cmd_simulate(args, &cfg),
         "tune" => cmd_tune(args, &cfg),
         "scale" => cmd_scale(args, &cfg),
+        "sweep" => cmd_sweep(args, &cfg),
         "analyze" => cmd_analyze(args, &cfg),
         other => {
             eprintln!("unknown subcommand `{other}`\n{USAGE}");
@@ -240,15 +252,47 @@ fn cmd_tune(args: &Args, cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// `--key a,b,c` as a typed list, falling back to the config's values.
+fn csv_list<T: std::str::FromStr>(
+    args: &Args,
+    key: &str,
+    fallback: &[T],
+) -> Result<Vec<T>>
+where
+    T: Clone,
+{
+    match args.get(key) {
+        None => Ok(fallback.to_vec()),
+        Some(raw) => {
+            let parsed: Vec<T> = raw
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse().map_err(|_| {
+                        dropcompute::util::Error::Cli(format!(
+                            "--{key}: bad entry `{s}`"
+                        ))
+                    })
+                })
+                .collect::<Result<_>>()?;
+            if parsed.is_empty() {
+                return Err(dropcompute::util::Error::Cli(format!(
+                    "--{key}: empty list `{raw}`"
+                )));
+            }
+            Ok(parsed)
+        }
+    }
+}
+
 fn cmd_scale(args: &Args, cfg: &Config) -> Result<()> {
-    let workers: Vec<usize> = args
-        .str_or("workers", "8,16,32,64,128,200")
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .collect();
+    let workers =
+        csv_list::<usize>(args, "workers", &[8, 16, 32, 64, 128, 200])?;
     let mut base = cfg.cluster.clone();
     comm_overrides(args, &mut base)?;
-    let run = ScaleRun { base, ..Default::default() };
+    let jobs = args.usize_or("jobs", cfg.sweep.jobs)?;
+    let run = ScaleRun { base, jobs, ..Default::default() };
     let pts = run.sweep(&workers);
     let mut t = Table::new(
         "scale sweep (Fig 1 style)",
@@ -265,6 +309,91 @@ fn cmd_scale(args: &Args, cfg: &Config) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
+    let mut cluster = cfg.cluster.clone();
+    comm_overrides(args, &mut cluster)?;
+    let sc = &cfg.sweep;
+    let workers = csv_list::<usize>(args, "workers", &sc.workers)?;
+    let thresholds = csv_list::<f64>(args, "thresholds", &sc.thresholds)?;
+    // deadline axis precedence: explicit --deadlines, else a non-zero
+    // cluster deadline (from --comm-drop-deadline or the [comm] config
+    // key) pins the axis to that one value — neither source may be
+    // silently ignored — else the [sweep] config axis.
+    let deadlines = match args.get("deadlines") {
+        Some(_) => csv_list::<f64>(args, "deadlines", &sc.deadlines)?,
+        None if cluster.comm_drop_deadline > 0.0 && sc.deadlines == [0.0] => {
+            vec![cluster.comm_drop_deadline]
+        }
+        None => sc.deadlines.clone(),
+    };
+    let seeds = csv_list::<u64>(args, "seeds", &sc.seeds)?;
+    // same range rule the [sweep] config section enforces
+    if thresholds.iter().any(|&t| t < 0.0) || deadlines.iter().any(|&d| d < 0.0)
+    {
+        return Err(dropcompute::util::Error::Cli(
+            "--thresholds and --deadlines must be >= 0".into(),
+        ));
+    }
+    let spec = dropcompute::sweep::SweepSpec::new(cluster)
+        .workers(&workers)
+        .thresholds(&thresholds)
+        .deadlines(&deadlines)
+        .seeds(&seeds)
+        .iters(args.usize_or("iters", sc.iters)?)
+        .jobs(args.usize_or("jobs", sc.jobs)?)
+        .progress(sc.progress && !args.flag("quiet"));
+    let n = spec.len();
+    let jobs = dropcompute::sweep::resolve_jobs(spec.jobs);
+    println!(
+        "sweep: {} points ({} workers x {} thresholds x {} deadlines x {} \
+         seeds), {} iters each, {jobs} jobs",
+        n,
+        workers.len(),
+        thresholds.len(),
+        deadlines.len(),
+        seeds.len(),
+        spec.iters,
+    );
+    let t0 = std::time::Instant::now();
+    let result = spec.run();
+    let secs = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        "scenario grid",
+        &["N", "tau", "deadline", "seed", "iter time", "mb/s", "drop"],
+    );
+    // keep terminal output bounded on huge grids; the JSON has all points
+    let stride = (result.points.len() / 48).max(1);
+    for p in result.points.iter().step_by(stride) {
+        t.row(vec![
+            p.workers.to_string(),
+            f(p.threshold, 2),
+            f(p.deadline, 2),
+            p.seed.to_string(),
+            f(p.mean_iter_time, 3),
+            f(p.throughput, 1),
+            pct(p.drop_rate),
+        ]);
+    }
+    t.print();
+    if stride > 1 {
+        println!("(showing every {stride}-th of {} points)", result.points.len());
+    }
+    println!(
+        "{} points in {:.2}s ({:.1} points/s)",
+        result.points.len(),
+        secs,
+        result.points.len() as f64 / secs.max(1e-9),
+    );
+    if let Some(out) = args.get("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("sweep.json");
+        std::fs::write(&path, result.to_json())?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 

@@ -27,7 +27,11 @@ pub enum PreemptionMode {
 }
 
 /// Timing outcome of one synchronous step.
-#[derive(Debug, Clone)]
+///
+/// Reusable: hot loops keep one value and refill it through
+/// [`ClusterSim::step_into`], which recycles the per-worker vectors
+/// instead of allocating fresh ones every step.
+#[derive(Debug, Clone, Default)]
 pub struct StepOutcome {
     /// Compute time per worker (`T~_n`).
     pub worker_compute: Vec<f64>,
@@ -44,8 +48,14 @@ impl StepOutcome {
         self.completed.iter().sum()
     }
 
+    /// Fraction of scheduled micro-batches that were dropped. A
+    /// zero-worker outcome (or `accums == 0`) schedules nothing, so
+    /// nothing was dropped: 0.0, not NaN.
     pub fn drop_rate(&self, accums: usize) -> f64 {
         let scheduled = self.completed.len() * accums;
+        if scheduled == 0 {
+            return 0.0;
+        }
         1.0 - self.total_completed() as f64 / scheduled as f64
     }
 }
@@ -64,8 +74,21 @@ pub struct ClusterSim {
     comm_drop: Option<f64>,
     /// Full-cluster schedule, built once (the worker count is fixed
     /// for a sim's lifetime) so the per-step timing doesn't rebuild
-    /// O(N^2) transfers. `None` for the fixed-`T^c` model.
+    /// O(N^2) transfers. `None` for the fixed-`T^c` model. Kept as the
+    /// event-queue reference oracle behind
+    /// [`Self::with_reference_timing`].
     schedule: Option<crate::topology::Schedule>,
+    /// The schedule lowered to the heapless fast path
+    /// ([`super::compiled::CompiledSchedule`]): flat src/dst/hop arrays,
+    /// hop costs precomputed at construction.
+    compiled: Option<super::compiled::CompiledSchedule>,
+    /// Reusable timing buffers so steady-state stepping is
+    /// allocation-free.
+    scratch: super::compiled::ScheduleScratch,
+    /// `false` routes collective timing through the event-queue
+    /// reference instead of the compiled fast path (perf baselines and
+    /// the bitwise-equality property tests).
+    use_compiled: bool,
     /// Independent RNG stream per worker (decentralized by construction).
     streams: Vec<Xoshiro256pp>,
     /// Monotone step counter (drives step-indexed failures).
@@ -108,6 +131,17 @@ impl ClusterSim {
         let root = Xoshiro256pp::seed_from_u64(seed);
         let streams = (0..workers).map(|n| root.split(n as u64)).collect();
         let schedule = comm.schedule_for(workers);
+        // compile from the schedule just built rather than rebuilding
+        // O(N^2) transfers inside compile_for — sweeps construct one
+        // sim per grid point, so this fixed cost is paid per point
+        let compiled = match (&schedule, comm.link_params()) {
+            (Some(s), Some((latency, bandwidth, bytes))) => {
+                Some(super::compiled::CompiledSchedule::compile(
+                    s, latency, bandwidth, bytes,
+                ))
+            }
+            _ => None,
+        };
         Self {
             workers,
             accums,
@@ -116,6 +150,9 @@ impl ClusterSim {
             preemption: PreemptionMode::Preemptive,
             comm_drop: None,
             schedule,
+            compiled,
+            scratch: super::compiled::ScheduleScratch::default(),
+            use_compiled: true,
             streams,
             step_idx: 0,
         }
@@ -123,6 +160,15 @@ impl ClusterSim {
 
     pub fn with_preemption(mut self, mode: PreemptionMode) -> Self {
         self.preemption = mode;
+        self
+    }
+
+    /// Route collective timing through the per-phase event-queue
+    /// reference instead of the compiled heapless pass. The two are
+    /// bitwise identical (property-tested); this exists as the oracle
+    /// for those tests and as the "before" arm of perf benchmarks.
+    pub fn with_reference_timing(mut self) -> Self {
+        self.use_compiled = false;
         self
     }
 
@@ -145,51 +191,76 @@ impl ClusterSim {
         self.comm.serial_latency(self.workers)
     }
 
+    /// Full-cluster collective completion for `arrivals`: the compiled
+    /// heapless pass when available, else the cached-schedule event
+    /// reference, else the fixed-`T^c` model.
+    fn collective_time(&mut self, arrivals: &[f64]) -> f64 {
+        if self.use_compiled {
+            if let Some(c) = self.compiled.as_ref() {
+                return c.completion_with(arrivals, &mut self.scratch);
+            }
+        }
+        self.comm.completion_time_with(arrivals, self.schedule.as_ref())
+    }
+
     /// Common tail of a simulated step: the collective. Under DropComm
     /// ([`Self::with_comm_drop`]) late workers are excluded — their
     /// completed micro-batches are zeroed (dropped work) and the
-    /// survivors' reduction sets the iteration time.
-    fn finish_step(
-        &self,
-        worker_compute: Vec<f64>,
-        mut completed: Vec<usize>,
-    ) -> StepOutcome {
-        let compute_time =
-            worker_compute.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let cached = self.schedule.as_ref();
-        let iter_time = match self.comm_drop {
-            None => self.comm.completion_time_with(&worker_compute, cached),
+    /// survivors' reduction sets the iteration time. Operates in place
+    /// on `out`'s already-filled per-worker vectors.
+    fn finish_into(&mut self, out: &mut StepOutcome) {
+        out.compute_time = out
+            .worker_compute
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        out.iter_time = match self.comm_drop {
+            None => self.collective_time(&out.worker_compute),
             Some(deadline) => {
-                let survivors = crate::sim::comm::bounded_wait_survivors(
-                    &worker_compute,
+                // the shared membership rule, evaluated allocation-free
+                // for the common no-drop case
+                let cutoff = crate::sim::comm::bounded_wait_cutoff(
+                    &out.worker_compute,
                     deadline,
                 );
-                if survivors.iter().all(|&s| s) {
+                if out.worker_compute.iter().all(|&a| a <= cutoff) {
                     // common path: nobody missed the deadline — plain
-                    // collective over the cached full-N schedule
-                    self.comm.completion_time_with(&worker_compute, cached)
+                    // collective over the compiled full-N schedule
+                    self.collective_time(&out.worker_compute)
                 } else {
-                    for (done, s) in completed.iter_mut().zip(&survivors) {
-                        if !*s {
+                    for (done, &a) in
+                        out.completed.iter_mut().zip(&out.worker_compute)
+                    {
+                        if a > cutoff {
                             *done = 0;
                         }
                     }
                     let (_, t) = self
                         .comm
-                        .bounded_wait_completion(&worker_compute, deadline);
+                        .bounded_wait_completion(&out.worker_compute, deadline);
                     t
                 }
             }
         };
-        StepOutcome { worker_compute, completed, compute_time, iter_time }
     }
 
     /// Simulate one synchronous step; `threshold = None` is the baseline.
     pub fn step(&mut self, threshold: Option<f64>) -> StepOutcome {
+        let mut out = StepOutcome::default();
+        self.step_into(threshold, &mut out);
+        out
+    }
+
+    /// [`Self::step`] into a caller-owned outcome, recycling its
+    /// per-worker vectors — with a schedule-driven comm model the whole
+    /// step is allocation-free in steady state.
+    pub fn step_into(&mut self, threshold: Option<f64>, out: &mut StepOutcome) {
         let step_idx = self.step_idx;
         self.step_idx += 1;
-        let mut worker_compute = Vec::with_capacity(self.workers);
-        let mut completed = Vec::with_capacity(self.workers);
+        out.worker_compute.clear();
+        out.completed.clear();
+        out.worker_compute.reserve(self.workers);
+        out.completed.reserve(self.workers);
         for n in 0..self.workers {
             let rng = &mut self.streams[n];
             let mut t = self.model.sample_straggler_at(n, step_idx, rng);
@@ -229,10 +300,10 @@ impl ClusterSim {
                     }
                 }
             }
-            worker_compute.push(t);
-            completed.push(done);
+            out.worker_compute.push(t);
+            out.completed.push(done);
         }
-        self.finish_step(worker_compute, completed)
+        self.finish_into(out);
     }
 
     /// Simulate one Local-SGD synchronization period: `h` local steps of
@@ -266,7 +337,14 @@ impl ClusterSim {
                 }
             }
         }
-        self.finish_step(worker_compute, completed)
+        let mut out = StepOutcome {
+            worker_compute,
+            completed,
+            compute_time: 0.0,
+            iter_time: 0.0,
+        };
+        self.finish_into(&mut out);
+        out
     }
 
     /// Record a no-drop latency trace of `iters` iterations — the input
@@ -292,10 +370,16 @@ impl ClusterSim {
         trace
     }
 
-    /// Mean iteration time over `iters` simulated steps.
+    /// Mean iteration time over `iters` simulated steps (reuses one
+    /// outcome buffer across the loop).
     pub fn mean_iter_time(&mut self, iters: usize, threshold: Option<f64>) -> f64 {
-        (0..iters).map(|_| self.step(threshold).iter_time).sum::<f64>()
-            / iters as f64
+        let mut out = StepOutcome::default();
+        let mut sum = 0.0;
+        for _ in 0..iters {
+            self.step_into(threshold, &mut out);
+            sum += out.iter_time;
+        }
+        sum / iters as f64
     }
 }
 
@@ -506,6 +590,75 @@ mod tests {
         assert_eq!(out.total_completed(), 4 * 8);
         // 8 local steps of ~0.45s each
         assert!((out.compute_time - 3.6).abs() < 0.5, "{}", out.compute_time);
+    }
+
+    #[test]
+    fn drop_rate_guards_degenerate_outcomes() {
+        // Regression: workers == 0 or accums == 0 used to divide by zero
+        // and return NaN; an empty schedule drops nothing.
+        let empty = StepOutcome::default();
+        assert_eq!(empty.drop_rate(12), 0.0);
+        let out = StepOutcome {
+            worker_compute: vec![1.0, 1.0],
+            completed: vec![0, 0],
+            compute_time: 1.0,
+            iter_time: 1.5,
+        };
+        assert_eq!(out.drop_rate(0), 0.0);
+        assert!(!out.drop_rate(0).is_nan());
+        // the normal case still reports real drops
+        assert!((out.drop_rate(4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_into_reuses_buffers_and_matches_step() {
+        let mut c = config(8, 6);
+        c.noise = NoiseKind::Exponential { mean: 0.2 };
+        c.topology = Some(crate::topology::TopologyKind::Ring);
+        let mut a = ClusterSim::new(&c, 31);
+        let mut b = ClusterSim::new(&c, 31);
+        let mut out = StepOutcome::default();
+        for _ in 0..10 {
+            let fresh = a.step(Some(2.0));
+            b.step_into(Some(2.0), &mut out);
+            assert_eq!(fresh.completed, out.completed);
+            assert_eq!(fresh.iter_time.to_bits(), out.iter_time.to_bits());
+            assert_eq!(
+                fresh.compute_time.to_bits(),
+                out.compute_time.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn compiled_timing_bitwise_equals_reference() {
+        // the compiled heapless pass and the event-queue oracle must
+        // agree to the bit on every topology, with and without DropComm.
+        for kind in crate::topology::TopologyKind::ALL {
+            for deadline in [0.0, 1.5] {
+                let mut c = config(12, 6);
+                c.noise = NoiseKind::Exponential { mean: 0.4 };
+                c.topology = Some(kind);
+                c.link_latency = 1e-4;
+                c.link_bandwidth = 1e9;
+                c.grad_bytes = 4e6;
+                c.comm_drop_deadline = deadline;
+                let mut fast = ClusterSim::new(&c, 99);
+                let mut slow =
+                    ClusterSim::new(&c, 99).with_reference_timing();
+                for _ in 0..15 {
+                    let f = fast.step(Some(3.0));
+                    let s = slow.step(Some(3.0));
+                    assert_eq!(
+                        f.iter_time.to_bits(),
+                        s.iter_time.to_bits(),
+                        "{} deadline={deadline}",
+                        kind.name()
+                    );
+                    assert_eq!(f.completed, s.completed);
+                }
+            }
+        }
     }
 
     #[test]

@@ -102,6 +102,33 @@ impl CommModel {
         }
     }
 
+    /// `(latency, bandwidth, bytes)` of the schedule-driven models
+    /// (`None` for the fixed-`T^c` model).
+    pub fn link_params(&self) -> Option<(f64, f64, f64)> {
+        match *self {
+            CommModel::Fixed(_) => None,
+            CommModel::Ring { latency, bandwidth, bytes }
+            | CommModel::Topology { latency, bandwidth, bytes, .. } => {
+                Some((latency, bandwidth, bytes))
+            }
+        }
+    }
+
+    /// Lower this model's `n`-worker schedule into the heapless compiled
+    /// fast path ([`super::compiled::CompiledSchedule`]), with the hop
+    /// costs baked in. `None` for the fixed-`T^c` model. Callers that
+    /// already hold the built [`Schedule`] should compile it directly
+    /// ([`super::compiled::CompiledSchedule::compile`]) instead of
+    /// rebuilding it here.
+    pub fn compile_for(&self, n: usize) -> Option<super::compiled::CompiledSchedule> {
+        let (latency, bandwidth, bytes) = self.link_params()?;
+        self.schedule_for(n).map(|s| {
+            super::compiled::CompiledSchedule::compile(
+                &s, latency, bandwidth, bytes,
+            )
+        })
+    }
+
     /// The serial constant `T^c` this model contributes when all workers
     /// arrive simultaneously (used by the analytical speedup model).
     pub fn serial_latency(&self, n: usize) -> f64 {
@@ -165,15 +192,23 @@ impl CommModel {
     }
 }
 
-/// The DropComm membership rule: worker `w` participates iff it arrives
-/// within `deadline` of the earliest arrival (`deadline < 0` is treated
-/// as 0 — only ties with the first arrival survive).
+/// The DropComm membership cutoff: the single source of truth for the
+/// rule shared by [`bounded_wait_survivors`] and the allocation-free
+/// check in `ClusterSim` — worker `w` participates iff
+/// `arrival <= cutoff` (`deadline < 0` is treated as 0, so only ties
+/// with the first arrival survive).
+pub fn bounded_wait_cutoff(arrivals: &[f64], deadline: f64) -> f64 {
+    let first = arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
+    first + deadline.max(0.0)
+}
+
+/// The DropComm membership rule as a per-worker mask (see
+/// [`bounded_wait_cutoff`]).
 pub fn bounded_wait_survivors(arrivals: &[f64], deadline: f64) -> Vec<bool> {
     if arrivals.is_empty() {
         return Vec::new();
     }
-    let first = arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
-    let cutoff = first + deadline.max(0.0);
+    let cutoff = bounded_wait_cutoff(arrivals, deadline);
     arrivals.iter().map(|&a| a <= cutoff).collect()
 }
 

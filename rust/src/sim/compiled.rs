@@ -1,0 +1,227 @@
+//! Compiled (heapless) schedule timing — the hot-path twin of
+//! [`super::comm::schedule_completion`].
+//!
+//! The event-queue reference pays O(T log T) heap work per phase and
+//! re-derives every transfer's hop cost (`latency + fraction·bytes /
+//! bandwidth`) on every step, even though the schedule and the link
+//! parameters are fixed for a simulation's lifetime. But the per-phase
+//! recurrence needs no queue at all: within one phase every transfer's
+//! delivery time is `ready[src] + hop` where `ready` is frozen at phase
+//! entry, and the phase-exit state is a pure max over those deliveries —
+//! order-independent, so popping them in time order buys nothing.
+//!
+//! [`CompiledSchedule`] lowers a [`Schedule`] once into flat
+//! phase-offset + src/dst/hop arrays; [`CompiledSchedule::completion_with`]
+//! then times one all-reduce with two linear passes per phase over
+//! caller-owned scratch buffers (zero allocation in steady state). The
+//! result is **bitwise identical** to the event-queue reference: both
+//! paths clamp arrivals the same way, compute each hop with the same
+//! expression, and reduce the same set of delivery times with the same
+//! `>`-guarded max — property-tested in `tests/perf_equivalence.rs`.
+
+use crate::topology::Schedule;
+
+/// Reusable buffers for [`CompiledSchedule::completion_with`]. Keep one
+/// per simulation (e.g. in `ClusterSim`) so steady-state stepping never
+/// allocates.
+#[derive(Debug, Default, Clone)]
+pub struct ScheduleScratch {
+    ready: Vec<f64>,
+    next: Vec<f64>,
+}
+
+/// A [`Schedule`] lowered to flat arrays with precomputed hop costs for
+/// one fixed `(latency, bandwidth, bytes)` triple.
+#[derive(Debug, Clone)]
+pub struct CompiledSchedule {
+    workers: usize,
+    /// `offsets[p]..offsets[p + 1]` indexes the transfers of phase `p`.
+    offsets: Vec<u32>,
+    srcs: Vec<u32>,
+    dsts: Vec<u32>,
+    /// Per-transfer link occupancy, `latency + fraction·bytes/bandwidth`.
+    hops: Vec<f64>,
+}
+
+impl CompiledSchedule {
+    /// Lower `schedule` once for the given link parameters. O(transfers)
+    /// — run it at simulation construction, not per step.
+    pub fn compile(
+        schedule: &Schedule,
+        latency: f64,
+        bandwidth: f64,
+        bytes: f64,
+    ) -> Self {
+        let total = schedule.transfer_count();
+        let mut offsets = Vec::with_capacity(schedule.phases.len() + 1);
+        let mut srcs = Vec::with_capacity(total);
+        let mut dsts = Vec::with_capacity(total);
+        let mut hops = Vec::with_capacity(total);
+        offsets.push(0u32);
+        for phase in &schedule.phases {
+            for t in &phase.transfers {
+                srcs.push(t.src as u32);
+                dsts.push(t.dst as u32);
+                // exactly the reference's expression, evaluated once
+                hops.push(latency + t.chunk.fraction() * bytes / bandwidth);
+            }
+            offsets.push(srcs.len() as u32);
+        }
+        Self { workers: schedule.workers, offsets, srcs, dsts, hops }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn phase_count(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn transfer_count(&self) -> usize {
+        self.srcs.len()
+    }
+
+    /// One-shot completion time (allocates its own scratch; prefer
+    /// [`Self::completion_with`] in loops).
+    pub fn completion(&self, arrivals: &[f64]) -> f64 {
+        let mut scratch = ScheduleScratch::default();
+        self.completion_with(arrivals, &mut scratch)
+    }
+
+    /// Time until every worker holds the reduced result, bitwise equal
+    /// to [`super::comm::schedule_completion`] on the source schedule.
+    /// Empty `arrivals` complete instantly at 0.0.
+    pub fn completion_with(
+        &self,
+        arrivals: &[f64],
+        scratch: &mut ScheduleScratch,
+    ) -> f64 {
+        assert_eq!(
+            self.workers,
+            arrivals.len(),
+            "schedule compiled for a different worker count"
+        );
+        if arrivals.is_empty() {
+            return 0.0;
+        }
+        let ScheduleScratch { ready, next } = scratch;
+        ready.clear();
+        ready.extend(arrivals.iter().map(|a| a.max(0.0)));
+        next.resize(arrivals.len(), 0.0);
+        for p in 0..self.phase_count() {
+            next.copy_from_slice(ready);
+            let (lo, hi) =
+                (self.offsets[p] as usize, self.offsets[p + 1] as usize);
+            for k in lo..hi {
+                let (src, dst) =
+                    (self.srcs[k] as usize, self.dsts[k] as usize);
+                let done = ready[src] + self.hops[k];
+                // data dependency: dst holds the chunk at delivery time
+                if done > next[dst] {
+                    next[dst] = done;
+                }
+                // egress occupancy: src's link is busy until delivery
+                if done > next[src] {
+                    next[src] = done;
+                }
+            }
+            std::mem::swap(ready, next);
+        }
+        ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::comm::schedule_completion;
+    use crate::topology::TopologyKind;
+
+    #[test]
+    fn flat_layout_matches_schedule_counts() {
+        for kind in TopologyKind::ALL {
+            for n in [1usize, 2, 5, 8, 12] {
+                let s = kind.build(n);
+                let c = CompiledSchedule::compile(&s, 1e-4, 1e9, 4e6);
+                assert_eq!(c.workers(), n);
+                assert_eq!(c.phase_count(), s.phase_count());
+                assert_eq!(c.transfer_count(), s.transfer_count());
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_arrivals_match_uniform_cost() {
+        let (lat, bw, bytes) = (25e-6, 12.5e9, 1e8);
+        for kind in TopologyKind::ALL {
+            for n in [2usize, 4, 7, 12] {
+                let s = kind.build(n);
+                let c = CompiledSchedule::compile(&s, lat, bw, bytes);
+                let got = c.completion(&vec![0.0; n]);
+                let want = s.uniform_cost(lat, bw, bytes);
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "{} n={n}: {got} vs {want}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_equal_to_event_queue_on_stragglers() {
+        let (lat, bw, bytes) = (1e-4, 1e9, 4e6);
+        for kind in TopologyKind::ALL {
+            let n = 8;
+            let s = kind.build(n);
+            let c = CompiledSchedule::compile(&s, lat, bw, bytes);
+            let mut arrivals = vec![0.25; n];
+            arrivals[3] = 7.5;
+            arrivals[6] = 0.01;
+            let want = schedule_completion(&s, &arrivals, lat, bw, bytes);
+            assert_eq!(
+                c.completion(&arrivals).to_bits(),
+                want.to_bits(),
+                "{}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_single_worker_degenerate() {
+        let s = Schedule::empty(0);
+        let c = CompiledSchedule::compile(&s, 1e-4, 1e9, 4e6);
+        assert_eq!(c.completion(&[]), 0.0);
+        let s1 = TopologyKind::Ring.build(1);
+        let c1 = CompiledSchedule::compile(&s1, 1e-4, 1e9, 4e6);
+        assert_eq!(c1.completion(&[2.0]), 2.0);
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_sizes() {
+        // one scratch serving schedules of different worker counts must
+        // resize correctly and keep results exact.
+        let mut scratch = ScheduleScratch::default();
+        for n in [8usize, 3, 12, 2] {
+            let s = TopologyKind::Ring.build(n);
+            let c = CompiledSchedule::compile(&s, 1e-4, 1e9, 4e6);
+            let arrivals: Vec<f64> =
+                (0..n).map(|i| i as f64 * 0.1).collect();
+            let want =
+                schedule_completion(&s, &arrivals, 1e-4, 1e9, 4e6);
+            let got = c.completion_with(&arrivals, &mut scratch);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn negative_arrivals_clamp_like_reference() {
+        let s = TopologyKind::Tree.build(4);
+        let c = CompiledSchedule::compile(&s, 1e-4, 1e9, 4e6);
+        let arrivals = [-3.0, 0.2, -0.5, 0.1];
+        let want = schedule_completion(&s, &arrivals, 1e-4, 1e9, 4e6);
+        assert_eq!(c.completion(&arrivals).to_bits(), want.to_bits());
+    }
+}

@@ -7,18 +7,25 @@
 //!   [`crate::topology::Schedule`] (ring / tree / hierarchical / torus)
 //!   timed event-driven with per-worker arrivals, and the bounded-wait
 //!   DropComm membership rule;
+//! * [`compiled`] — the heapless compiled fast path for schedule
+//!   timing ([`CompiledSchedule`]), bitwise equal to the event-queue
+//!   reference but allocation-free in steady state;
 //! * [`cluster`] — synchronous / DropCompute / DropComm / Local-SGD
 //!   step timing;
 //! * [`trace`] — `t_{i,n}^{(m)}` recording for Algorithm 2 and post-analysis.
 
 pub mod cluster;
 pub mod comm;
+pub mod compiled;
 pub mod event;
 pub mod noise;
 pub mod trace;
 
 pub use cluster::{ClusterSim, PreemptionMode, StepOutcome};
-pub use comm::{bounded_wait_survivors, schedule_completion, CommModel};
+pub use comm::{
+    bounded_wait_cutoff, bounded_wait_survivors, schedule_completion, CommModel,
+};
+pub use compiled::{CompiledSchedule, ScheduleScratch};
 pub use event::EventQueue;
 pub use noise::LatencyModel;
 pub use trace::Trace;

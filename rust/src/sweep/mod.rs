@@ -1,0 +1,35 @@
+//! Parallel scenario-sweep engine.
+//!
+//! Every figure in the paper is a sweep — iteration time vs. `N`
+//! (Fig 1), vs. threshold (Fig 6), vs. noise family/variance
+//! (Figs 13/14) — and the roadmap's scenario grids multiply those axes
+//! together: `workers × threshold × DropComm deadline × seed`, times
+//! topologies and noise kinds in the base config. This subsystem turns
+//! that product into a first-class object and runs it as fast as the
+//! machine allows:
+//!
+//! * [`grid`] — [`SweepSpec`] (builder for the 4-axis grid, fixed
+//!   serial enumeration order, per-point derived seeds),
+//!   [`SweepPoint`] / [`SweepResult`] (+ JSON rendering);
+//! * [`runner`] — [`run_indexed`], the deterministic parallel map over
+//!   [`crate::util::ThreadPool`] with progress/ETA reporting.
+//!
+//! **Determinism contract:** a point's measurement depends only on its
+//! grid coordinates (each point seeds its own [`crate::sim::ClusterSim`]
+//! from a SplitMix64-derived seed), and [`run_indexed`] returns results
+//! in index order — so a `--jobs 32` run is bitwise identical to
+//! `--jobs 1`, property-tested in `tests/perf_equivalence.rs`. Combined
+//! with the compiled schedule fast path
+//! ([`crate::sim::CompiledSchedule`]) this is what makes million-point
+//! grids practical (cf. the tail-latency parameter studies of
+//! OptiReduce, arXiv:2310.06993).
+//!
+//! Consumers: [`crate::coordinator::ScaleRun::sweep`], the `scale` /
+//! `sweep` CLI subcommands (`--jobs`, `[sweep]` config section), and
+//! the figure benches.
+
+pub mod grid;
+pub mod runner;
+
+pub use grid::{SweepParams, SweepPoint, SweepResult, SweepSpec};
+pub use runner::{resolve_jobs, run_indexed, Progress};

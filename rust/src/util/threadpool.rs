@@ -61,6 +61,22 @@ impl ThreadPool {
         T: Send + 'static,
         F: Fn(usize) -> T + Send + Sync + 'static,
     {
+        self.map_indexed_with(n, f, |_| {})
+    }
+
+    /// [`Self::map_indexed`] invoking `on_done(completed_count)` on the
+    /// submitting thread as each job lands, in completion order —
+    /// the hook the sweep engine's progress/ETA reporting rides on.
+    pub fn map_indexed_with<T, F>(
+        &self,
+        n: usize,
+        f: F,
+        mut on_done: impl FnMut(usize),
+    ) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
         let f = Arc::new(f);
         let (tx, rx) = mpsc::channel();
         for i in 0..n {
@@ -73,8 +89,11 @@ impl ThreadPool {
         }
         drop(tx);
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut done = 0usize;
         for (i, out) in rx {
             slots[i] = Some(out);
+            done += 1;
+            on_done(done);
         }
         slots.into_iter().map(|s| s.expect("job completed")).collect()
     }
@@ -118,6 +137,16 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map_indexed(50, |i| i * i);
         assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_indexed_with_reports_completion_counts() {
+        let pool = ThreadPool::new(3);
+        let mut seen = Vec::new();
+        let out = pool.map_indexed_with(10, |i| i, |done| seen.push(done));
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+        // on_done runs on the submitting thread with a monotone count
+        assert_eq!(seen, (1..=10).collect::<Vec<_>>());
     }
 
     #[test]

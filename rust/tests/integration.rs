@@ -302,6 +302,7 @@ fn topology_scale_run_end_to_end() {
         grid: 48,
         seed: 9,
         comm_drop_deadline: None,
+        jobs: 1,
     };
     let bounded = ScaleRun {
         comm_drop_deadline: Some(3.0),

@@ -1,0 +1,186 @@
+//! Property tests for the perf core: the compiled schedule fast path
+//! must be bitwise equal to the event-queue reference oracle on every
+//! topology, and the parallel sweep engine must be bitwise equal to a
+//! serial run — the two invariants that make "fast" safe to trust.
+
+use dropcompute::config::{ClusterConfig, NoiseKind, StragglerKind};
+use dropcompute::coordinator::ScaleRun;
+use dropcompute::rng::Xoshiro256pp;
+use dropcompute::sim::{schedule_completion, ClusterSim, CompiledSchedule, ScheduleScratch};
+use dropcompute::sweep::SweepSpec;
+use dropcompute::topology::TopologyKind;
+
+/// Random-but-reproducible link parameters spanning latency-bound to
+/// bandwidth-bound regimes.
+fn random_link(rng: &mut Xoshiro256pp) -> (f64, f64, f64) {
+    let latency = 10f64.powf(-6.0 + 4.0 * rng.next_f64()); // 1us .. 10ms
+    let bandwidth = 10f64.powf(8.0 + 2.5 * rng.next_f64()); // 0.1 .. 30 GB/s
+    let bytes = 10f64.powf(3.0 + 6.0 * rng.next_f64()); // 1KB .. 1GB
+    (latency, bandwidth, bytes)
+}
+
+#[test]
+fn compiled_schedule_bitwise_equals_event_queue_for_all_topologies() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xC0_D1F1ED);
+    let mut scratch = ScheduleScratch::default();
+    for kind in TopologyKind::ALL {
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 12, 16, 23, 32] {
+            let schedule = kind.build(n);
+            for _case in 0..6 {
+                let (latency, bandwidth, bytes) = random_link(&mut rng);
+                // arrivals mixing tight clusters, stragglers, negatives
+                let arrivals: Vec<f64> = (0..n)
+                    .map(|_| match rng.next_below(4) {
+                        0 => rng.next_f64() * 0.01,
+                        1 => rng.next_f64() * 10.0,
+                        2 => 50.0 + rng.next_f64() * 100.0,
+                        _ => -rng.next_f64(),
+                    })
+                    .collect();
+                let want = schedule_completion(
+                    &schedule, &arrivals, latency, bandwidth, bytes,
+                );
+                let compiled = CompiledSchedule::compile(
+                    &schedule, latency, bandwidth, bytes,
+                );
+                let got = compiled.completion_with(&arrivals, &mut scratch);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{} n={n}: compiled {got} vs reference {want}",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cluster_sim_compiled_equals_reference_under_noise_and_drops() {
+    // End-to-end: full ClusterSim stepping (noise, stragglers,
+    // DropCompute threshold, DropComm deadline) with the compiled fast
+    // path vs the event-queue oracle, bit for bit.
+    for kind in TopologyKind::ALL {
+        for (deadline, tau) in [(0.0, None), (2.0, Some(6.5)), (1.0, None)] {
+            let cfg = ClusterConfig {
+                workers: 24,
+                accumulations: 8,
+                microbatch_mean: 0.45,
+                microbatch_std: 0.02,
+                noise: NoiseKind::LogNormal { mean: 0.3, var: 0.2 },
+                stragglers: StragglerKind::Uniform { p: 0.1, delay: 4.0 },
+                topology: Some(kind),
+                link_latency: 1e-4,
+                link_bandwidth: 2e9,
+                grad_bytes: 1e7,
+                comm_drop_deadline: deadline,
+                ..Default::default()
+            };
+            let mut fast = ClusterSim::new(&cfg, 0xAB);
+            let mut slow = ClusterSim::new(&cfg, 0xAB).with_reference_timing();
+            for step in 0..25 {
+                let a = fast.step(tau);
+                let b = slow.step(tau);
+                assert_eq!(
+                    a.iter_time.to_bits(),
+                    b.iter_time.to_bits(),
+                    "{} deadline={deadline} step={step}",
+                    kind.name()
+                );
+                assert_eq!(a.completed, b.completed);
+                assert_eq!(a.compute_time.to_bits(), b.compute_time.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_sweep_bitwise_equals_serial_run() {
+    for kind in TopologyKind::ALL {
+        let base = ClusterConfig {
+            workers: 4,
+            accumulations: 6,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            noise: NoiseKind::Exponential { mean: 0.3 },
+            topology: Some(kind),
+            link_latency: 1e-4,
+            link_bandwidth: 1e9,
+            grad_bytes: 4e6,
+            ..Default::default()
+        };
+        let spec = SweepSpec::new(base)
+            .workers(&[2, 5, 9])
+            .thresholds(&[0.0, 3.0])
+            .deadlines(&[0.0, 1.5])
+            .seeds(&[11, 12])
+            .iters(8);
+        let serial = spec.clone().jobs(1).run();
+        for jobs in [2usize, 4, 0] {
+            let parallel = spec.clone().jobs(jobs).run();
+            assert_eq!(serial.points.len(), parallel.points.len());
+            for (a, b) in serial.points.iter().zip(&parallel.points) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(
+                    (a.workers, a.seed),
+                    (b.workers, b.seed),
+                    "{} jobs={jobs}",
+                    kind.name()
+                );
+                for (x, y) in [
+                    (a.mean_iter_time, b.mean_iter_time),
+                    (a.mean_compute_time, b.mean_compute_time),
+                    (a.throughput, b.throughput),
+                    (a.drop_rate, b.drop_rate),
+                    (a.threshold, b.threshold),
+                    (a.deadline, b.deadline),
+                ] {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{} jobs={jobs} point {}",
+                        kind.name(),
+                        a.index
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scale_run_parallel_sweep_equals_serial() {
+    let base = ClusterConfig {
+        workers: 1,
+        accumulations: 6,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        comm_latency: 0.3,
+        noise: NoiseKind::Gamma { mean: 0.2, var: 0.05 },
+        ..Default::default()
+    };
+    let mut run = ScaleRun {
+        base,
+        calibration_iters: 4,
+        measure_iters: 8,
+        grid: 24,
+        seed: 77,
+        ..ScaleRun::default()
+    };
+    let ns = [2usize, 3, 5, 8];
+    let serial = run.sweep(&ns);
+    run.jobs = 4;
+    let parallel = run.sweep(&ns);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.workers, b.workers);
+        assert_eq!(
+            a.baseline_throughput.to_bits(),
+            b.baseline_throughput.to_bits()
+        );
+        assert_eq!(
+            a.dropcompute_throughput.to_bits(),
+            b.dropcompute_throughput.to_bits()
+        );
+        assert_eq!(a.tau.to_bits(), b.tau.to_bits());
+    }
+}
