@@ -22,15 +22,13 @@ fn cluster(stragglers: StragglerKind) -> ClusterConfig {
     }
 }
 
-/// Mean time per local step for each strategy.
+/// Mean time per local step for each strategy — via the buffer-reusing
+/// [`ClusterSim::mean_period_time`], so the measurement loop allocates
+/// nothing per period.
 fn measure(cfg: &ClusterConfig, h: usize, tau: Option<f64>, seed: u64) -> f64 {
     let mut sim = ClusterSim::new(cfg, seed);
-    let periods = 120 / h.max(1);
-    let mut total = 0.0;
-    for _ in 0..periods.max(20) {
-        total += sim.local_sgd_period(h, tau).iter_time;
-    }
-    total / (periods.max(20) * h) as f64
+    let periods = (120 / h.max(1)).max(20);
+    sim.mean_period_time(periods, h, tau) / h as f64
 }
 
 /// Fully synchronous = sync every local step (H=1).

@@ -1,12 +1,18 @@
 //! §Perf — hot-path microbenchmarks for the L3 coordinator and runtime:
 //! ring AllReduce bandwidth, event-queue throughput, simulator step
-//! rate (compiled vs event-queue schedule timing), parallel sweep
-//! scaling, Algorithm-2 sweep cost, PJRT grad-step + upload overhead.
+//! rate (compiled vs event-queue schedule timing), DropComm drop-path
+//! step rate (cached survivor schedules vs per-drop rebuild), batched
+//! noise sampling (enum vs boxed dispatch), parallel sweep scaling,
+//! Algorithm-2 sweep cost, PJRT grad-step + upload overhead.
 //!
 //! Besides the human-readable table, emits `BENCH_perf.json` — one
 //! entry per path with `metric`, `value` and (where the path has a
 //! before/after comparison) both arms — so the perf trajectory is
 //! machine-trackable across PRs.
+//!
+//! `--smoke` shrinks every section (fewer reps, smaller buffers) for
+//! the per-PR CI run, which uploads the JSON as an artifact; full runs
+//! are for measured numbers in the README.
 
 mod common;
 
@@ -15,11 +21,12 @@ use std::time::Instant;
 use common::{header, paper_cluster};
 use dropcompute::analysis::choose_threshold;
 use dropcompute::collective::{ring_all_reduce, ring_all_reduce_naive, Communicator};
+use dropcompute::config::{NoiseKind, StragglerKind};
 use dropcompute::report::{f, Table};
-use dropcompute::rng::Xoshiro256pp;
+use dropcompute::rng::{Distribution, Xoshiro256pp};
 use dropcompute::runtime::json::Json;
 use dropcompute::runtime::ModelRuntime;
-use dropcompute::sim::{ClusterSim, EventQueue, StepOutcome};
+use dropcompute::sim::{build_noise, ClusterSim, EventQueue, NoiseSampler, StepOutcome};
 use dropcompute::sweep::SweepSpec;
 use dropcompute::topology::TopologyKind;
 use dropcompute::train::ParamStore;
@@ -30,6 +37,30 @@ fn bench<R>(reps: usize, mut body: impl FnMut() -> R) -> f64 {
         std::hint::black_box(body());
     }
     t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Regression gate on a before/after timing pair: the "after" arm must
+/// win outright (panic in full runs, warn in --smoke where shared-runner
+/// noise makes wall-clock ratios unreliable — there the bitwise asserts
+/// are what gate), and speedups below `warn_ratio` print an advisory.
+/// The real acceptance targets are judged from BENCH_perf.json.
+fn gate(label: &str, t_before: f64, t_after: f64, warn_ratio: f64, smoke: bool) {
+    let ratio = t_before / t_after;
+    if ratio <= 1.0 {
+        let msg = format!(
+            "{label}: fast path should beat the reference \
+             ({:.0} vs {:.0} steps/s)",
+            1.0 / t_after,
+            1.0 / t_before,
+        );
+        if smoke {
+            println!("WARNING (smoke): {msg}");
+        } else {
+            panic!("{msg}");
+        }
+    } else if ratio < warn_ratio {
+        println!("WARNING: {label} speedup only x{ratio:.2} (machine load?)");
+    }
 }
 
 /// One machine-readable measurement: `before`/`after` are both set when
@@ -110,6 +141,11 @@ impl Perf {
 
 fn main() {
     header("§Perf — L3/runtime hot paths", "coordinator must not be the bottleneck");
+    // CI smoke mode: same sections, smaller workloads.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("(smoke mode: reduced reps/sizes)");
+    }
     let mut perf = Perf::new();
 
     // ---- ring AllReduce on gradient-sized buffers -------------------
@@ -140,8 +176,13 @@ fn main() {
         }
         t0.elapsed().as_secs_f64() / reps as f64
     }
-    for (n, len) in [(4usize, 1_000_000usize), (8, 1_000_000), (8, 8_000_000)] {
-        let reps = 8;
+    let ring_cases: &[(usize, usize)] = if smoke {
+        &[(4usize, 1_000_000usize)]
+    } else {
+        &[(4, 1_000_000), (8, 1_000_000), (8, 8_000_000)]
+    };
+    for &(n, len) in ring_cases {
+        let reps = if smoke { 3 } else { 8 };
         let before = measure_ring(n, len, reps, true);
         let after = measure_ring(n, len, reps, false);
         // algorithmic bytes moved per worker: 2(N-1)/N * 4*len
@@ -195,7 +236,7 @@ fn main() {
             );
         }
 
-        let reps = 60;
+        let reps = if smoke { 15 } else { 60 };
         let mut slow = ClusterSim::new(&cfg, 7).with_reference_timing();
         let t_before = bench(reps, || slow.step(Some(9.0)).iter_time);
         let mut fast = ClusterSim::new(&cfg, 7);
@@ -210,22 +251,120 @@ fn main() {
             1.0 / t_before,
             1.0 / t_after,
         );
-        // regression tripwire, loose enough to survive a loaded
-        // machine; the acceptance target (>=5x) is judged from the
-        // recorded BENCH_perf.json numbers, not asserted here
-        assert!(
-            t_before / t_after > 1.0,
-            "{label}: compiled path should beat the event queue \
-             ({:.0} vs {:.0} steps/s)",
-            1.0 / t_after,
-            1.0 / t_before,
+        gate(
+            &format!("sim_step_rate_{label}"),
+            t_before,
+            t_after,
+            5.0,
+            smoke,
         );
-        if t_before / t_after < 5.0 {
-            println!(
-                "WARNING: {label} compiled speedup only x{:.2} \
-                 (machine load?)",
-                t_before / t_after
+    }
+
+    // ---- DropComm drop-path step rate: survivor-schedule cache -------
+    // Drop-heavy regime (every worker misses the membership deadline
+    // with high probability, so essentially every step takes the
+    // exclusion branch): before = event-queue bounded_wait_completion,
+    // which allocates a mask + compacted arrivals and rebuilds the
+    // k-survivor schedule per drop step; after = the per-k compiled
+    // SurvivorScheduleCache (allocation-free after warmup). The
+    // acceptance bar for this path is cached >= 3x rebuild at N=64
+    // torus, judged from the recorded numbers.
+    {
+        let mut cfg = paper_cluster(64);
+        cfg.topology = Some(TopologyKind::Torus { rows: 0 });
+        cfg.link_latency = 25e-6;
+        cfg.link_bandwidth = 12.5e9;
+        cfg.grad_bytes = 4.0 * 335e6;
+        cfg.stragglers = StragglerKind::Uniform { p: 0.25, delay: 6.0 };
+        cfg.comm_drop_deadline = 2.0;
+
+        // sanity: both arms agree bitwise, and the config is actually
+        // drop-heavy
+        let mut a = ClusterSim::new(&cfg, 9);
+        let mut b = ClusterSim::new(&cfg, 9).with_reference_timing();
+        let mut drop_steps = 0usize;
+        for _ in 0..10 {
+            let x = a.step(None);
+            let y = b.step(None);
+            assert_eq!(
+                x.iter_time.to_bits(),
+                y.iter_time.to_bits(),
+                "cached survivor path must equal the event-queue oracle"
             );
+            if x.total_completed() < 64 * cfg.accumulations {
+                drop_steps += 1;
+            }
+        }
+        assert!(drop_steps >= 9, "drop-heavy config: {drop_steps}/10 dropped");
+
+        let reps = if smoke { 15 } else { 60 };
+        let mut slow = ClusterSim::new(&cfg, 9).with_reference_timing();
+        let t_before = bench(reps, || slow.step(None).iter_time);
+        let mut fast = ClusterSim::new(&cfg, 9);
+        let mut out = StepOutcome::default();
+        let t_after = bench(reps, || {
+            fast.step_into(None, &mut out);
+            out.iter_time
+        });
+        perf.record_ba(
+            "dropcomm_step_rate",
+            "steps/s (torus n64, drop-heavy)",
+            1.0 / t_before,
+            1.0 / t_after,
+        );
+        gate("dropcomm_step_rate", t_before, t_after, 3.0, smoke);
+    }
+
+    // ---- batched noise sampling: enum vs boxed dispatch --------------
+    // The innermost simulation loop draws one noise sample per
+    // micro-batch. before = Box<dyn Distribution> (indirect call per
+    // draw), after = the closed NoiseSampler enum's batched fill
+    // (dispatch hoisted out of the loop, inner sampler inlined).
+    {
+        let kind = common::paper_noise();
+        let boxed = build_noise(&kind).expect("paper noise is non-None");
+        let sampler = NoiseSampler::from_kind(&kind);
+        let len = if smoke { 4096 } else { 16384 };
+        let mut buf = vec![0.0f64; len];
+        let mut r1 = Xoshiro256pp::seed_from_u64(11);
+        let mut r2 = Xoshiro256pp::seed_from_u64(11);
+        // draw-for-draw identical before timing
+        sampler.fill(&mut buf, &mut r2);
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                boxed.sample(&mut r1).to_bits(),
+                "enum and boxed samplers must agree at draw {i}"
+            );
+        }
+        let reps = if smoke { 40 } else { 200 };
+        let t_before = bench(reps, || {
+            for s in buf.iter_mut() {
+                *s = boxed.sample(&mut r1);
+            }
+            buf[0]
+        });
+        let t_after = bench(reps, || {
+            sampler.fill(&mut buf, &mut r2);
+            buf[0]
+        });
+        perf.record_ba(
+            "noise_fill_rate",
+            "Msamples/s (paper lognormal)",
+            len as f64 / t_before / 1e6,
+            len as f64 / t_after / 1e6,
+        );
+        // NoiseKind coverage smoke: every family fills without dispatch
+        // through a vtable (value sanity only; the bitwise property
+        // tests live in tests/perf_equivalence.rs)
+        for fam in [
+            NoiseKind::LogNormal { mean: 0.225, var: 0.05 },
+            NoiseKind::Exponential { mean: 0.225 },
+            NoiseKind::Gamma { mean: 0.225, var: 0.05 },
+        ] {
+            let s = NoiseSampler::from_kind(&fam);
+            s.fill(&mut buf[..256], &mut r2);
+            assert!(buf[..256].iter().all(|v| v.is_finite()), "{fam:?}");
         }
     }
 
@@ -236,7 +375,7 @@ fn main() {
         .workers(&[8, 16, 24, 32])
         .thresholds(&[0.0, 9.0])
         .seeds(&[1, 2, 3, 4])
-        .iters(30)
+        .iters(if smoke { 10 } else { 30 })
         .progress(false);
     let n_points = sweep_spec.len() as f64;
     let t0 = Instant::now();
@@ -269,7 +408,7 @@ fn main() {
     let cfg = paper_cluster(200);
     let mut cal = ClusterSim::new(&cfg, 2);
     let trace = cal.record_trace(20);
-    let per = bench(3, || choose_threshold(&trace, 256).tau);
+    let per = bench(if smoke { 1 } else { 3 }, || choose_threshold(&trace, 256).tau);
     perf.record(
         "algorithm2_n200_grid256",
         "ms",
@@ -328,7 +467,13 @@ fn main() {
     let json = perf.to_json();
     let doc = Json::parse(&json).expect("bench must emit valid JSON");
     let entries = doc.get("entries").unwrap().as_arr().unwrap();
-    for want in ["sim_step_rate_ring_n64", "sim_step_rate_torus_n64", "sweep_points_per_sec"] {
+    for want in [
+        "sim_step_rate_ring_n64",
+        "sim_step_rate_torus_n64",
+        "dropcomm_step_rate",
+        "noise_fill_rate",
+        "sweep_points_per_sec",
+    ] {
         assert!(
             entries
                 .iter()

@@ -32,6 +32,7 @@ impl Uniform {
 }
 
 impl Distribution for Uniform {
+    #[inline]
     fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
         self.lo + (self.hi - self.lo) * rng.next_f64()
     }
@@ -64,6 +65,7 @@ impl Normal {
 }
 
 impl Distribution for Normal {
+    #[inline]
     fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
         self.mu + self.sigma * rng.next_standard_normal()
     }
@@ -100,6 +102,7 @@ impl LogNormal {
 }
 
 impl Distribution for LogNormal {
+    #[inline]
     fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
         (self.mu + self.sigma * rng.next_standard_normal()).exp()
     }
@@ -152,6 +155,7 @@ impl BoundedLogNormal {
 }
 
 impl Distribution for BoundedLogNormal {
+    #[inline]
     fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
         (self.inner.sample(rng) / self.alpha).min(self.beta)
     }
@@ -181,6 +185,7 @@ impl Exponential {
 }
 
 impl Distribution for Exponential {
+    #[inline]
     fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
         -rng.next_f64_open().ln() / self.lambda
     }
@@ -207,6 +212,7 @@ impl Bernoulli {
 }
 
 impl Distribution for Bernoulli {
+    #[inline]
     fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
         if rng.next_f64() < self.p {
             self.value
@@ -266,6 +272,7 @@ impl Gamma {
 }
 
 impl Distribution for Gamma {
+    #[inline]
     fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
         Self::sample_standard(self.shape, rng) / self.rate
     }

@@ -85,12 +85,19 @@ pub struct ClusterSim {
     /// Reusable timing buffers so steady-state stepping is
     /// allocation-free.
     scratch: super::compiled::ScheduleScratch,
+    /// Per-survivor-count compiled schedules for the DropComm exclusion
+    /// branch ([`super::survivor::SurvivorScheduleCache`]): after
+    /// warmup a drop step allocates nothing and builds no schedule.
+    survivors: super::survivor::SurvivorScheduleCache,
     /// `false` routes collective timing through the event-queue
     /// reference instead of the compiled fast path (perf baselines and
     /// the bitwise-equality property tests).
     use_compiled: bool,
     /// Independent RNG stream per worker (decentralized by construction).
     streams: Vec<Xoshiro256pp>,
+    /// Reusable micro-batch sample buffer: each worker's accumulation
+    /// run is drawn into it in one batched call.
+    sample_buf: Vec<f64>,
     /// Monotone step counter (drives step-indexed failures).
     step_idx: usize,
 }
@@ -142,6 +149,7 @@ impl ClusterSim {
             }
             _ => None,
         };
+        let survivors = super::survivor::SurvivorScheduleCache::new(&comm);
         Self {
             workers,
             accums,
@@ -152,8 +160,10 @@ impl ClusterSim {
             schedule,
             compiled,
             scratch: super::compiled::ScheduleScratch::default(),
+            survivors,
             use_compiled: true,
             streams,
+            sample_buf: Vec::new(),
             step_idx: 0,
         }
     }
@@ -209,11 +219,16 @@ impl ClusterSim {
     /// survivors' reduction sets the iteration time. Operates in place
     /// on `out`'s already-filled per-worker vectors.
     fn finish_into(&mut self, out: &mut StepOutcome) {
-        out.compute_time = out
-            .worker_compute
-            .iter()
-            .cloned()
-            .fold(f64::NEG_INFINITY, f64::max);
+        // max over an empty set folds to -inf; a zero-worker outcome
+        // computes for zero seconds
+        out.compute_time = if out.worker_compute.is_empty() {
+            0.0
+        } else {
+            out.worker_compute
+                .iter()
+                .cloned()
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
         out.iter_time = match self.comm_drop {
             None => self.collective_time(&out.worker_compute),
             Some(deadline) => {
@@ -228,17 +243,30 @@ impl ClusterSim {
                     // collective over the compiled full-N schedule
                     self.collective_time(&out.worker_compute)
                 } else {
+                    // drop path: zero the late workers' contributions
+                    // and count the k survivors while at it
+                    let mut k = 0usize;
                     for (done, &a) in
                         out.completed.iter_mut().zip(&out.worker_compute)
                     {
                         if a > cutoff {
                             *done = 0;
+                        } else {
+                            k += 1;
                         }
                     }
-                    let (_, t) = self
-                        .comm
-                        .bounded_wait_completion(&out.worker_compute, deadline);
-                    t
+                    if self.use_compiled {
+                        // the k-survivor collective starts at the
+                        // membership close (`cutoff`); memoized per k —
+                        // no allocation, no schedule rebuild
+                        self.survivors.completion(k, cutoff)
+                    } else {
+                        let (_, t) = self.comm.bounded_wait_completion(
+                            &out.worker_compute,
+                            deadline,
+                        );
+                        t
+                    }
                 }
             }
         };
@@ -254,6 +282,14 @@ impl ClusterSim {
     /// [`Self::step`] into a caller-owned outcome, recycling its
     /// per-worker vectors — with a schedule-driven comm model the whole
     /// step is allocation-free in steady state.
+    ///
+    /// Each worker's accumulation run is drawn in one batched
+    /// [`LatencyModel::fill_microbatches`] call (enum-dispatched once
+    /// per run, not per draw), then scanned against the threshold. The
+    /// bounded fill stops drawing exactly where the sequential
+    /// preemption loop stopped, so per-worker streams — and therefore
+    /// all seeded results — are bitwise identical to the un-batched
+    /// code (property-tested in `tests/perf_equivalence.rs`).
     pub fn step_into(&mut self, threshold: Option<f64>, out: &mut StepOutcome) {
         let step_idx = self.step_idx;
         self.step_idx += 1;
@@ -262,19 +298,36 @@ impl ClusterSim {
         out.worker_compute.reserve(self.workers);
         out.completed.reserve(self.workers);
         for n in 0..self.workers {
-            let rng = &mut self.streams[n];
-            let mut t = self.model.sample_straggler_at(n, step_idx, rng);
+            let mut t = self.model.sample_straggler_at(
+                n,
+                step_idx,
+                &mut self.streams[n],
+            );
             let mut done = 0usize;
             match (threshold, self.preemption) {
                 (None, _) => {
-                    for _ in 0..self.accums {
-                        t += self.model.sample_microbatch(n, rng);
+                    self.model.fill_microbatches(
+                        n,
+                        self.accums,
+                        &mut self.sample_buf,
+                        &mut self.streams[n],
+                    );
+                    for &s in &self.sample_buf {
+                        t += s;
                     }
                     done = self.accums;
                 }
                 (Some(tau), PreemptionMode::Preemptive) => {
-                    for _ in 0..self.accums {
-                        let next = t + self.model.sample_microbatch(n, rng);
+                    let filled = self.model.fill_microbatches_bounded(
+                        n,
+                        t,
+                        tau,
+                        self.accums,
+                        &mut self.sample_buf,
+                        &mut self.streams[n],
+                    );
+                    for &s in &self.sample_buf[..filled] {
+                        let next = t + s;
                         if next < tau {
                             t = next;
                             done += 1;
@@ -291,8 +344,16 @@ impl ClusterSim {
                     }
                 }
                 (Some(tau), PreemptionMode::BetweenAccumulations) => {
-                    for _ in 0..self.accums {
-                        t += self.model.sample_microbatch(n, rng);
+                    let filled = self.model.fill_microbatches_bounded(
+                        n,
+                        t,
+                        tau,
+                        self.accums,
+                        &mut self.sample_buf,
+                        &mut self.streams[n],
+                    );
+                    for &s in &self.sample_buf[..filled] {
+                        t += s;
                         done += 1;
                         if t >= tau {
                             break;
@@ -312,39 +373,86 @@ impl ClusterSim {
     pub fn local_sgd_period(&mut self, h: usize, threshold: Option<f64>)
         -> StepOutcome
     {
+        let mut out = StepOutcome::default();
+        self.local_sgd_period_into(h, threshold, &mut out);
+        out
+    }
+
+    /// [`Self::local_sgd_period`] into a caller-owned outcome, recycling
+    /// its per-worker vectors (the allocating form built two fresh
+    /// `Vec`s per period).
+    ///
+    /// Workers are processed worker-major: each worker owns its stream,
+    /// so its draw order — straggler then micro-batch, per local step —
+    /// is unchanged from the local-major loop and all seeded results
+    /// stay bitwise identical (property-tested). When the straggler
+    /// scenario consumes no randomness for a worker
+    /// ([`LatencyModel::straggler_draws`]), its h micro-batches are
+    /// drawn in one batched fill.
+    pub fn local_sgd_period_into(
+        &mut self,
+        h: usize,
+        threshold: Option<f64>,
+        out: &mut StepOutcome,
+    ) {
         let step_idx = self.step_idx;
         self.step_idx += 1;
-        let mut worker_compute = vec![0.0f64; self.workers];
-        let mut completed = vec![0usize; self.workers];
-        for _local in 0..h {
-            for n in 0..self.workers {
-                let rng = &mut self.streams[n];
-                let mut t = self.model.sample_straggler_at(n, step_idx, rng);
-                t += self.model.sample_microbatch(n, rng);
-                match threshold {
-                    Some(tau) => {
-                        if t < tau {
-                            completed[n] += 1;
-                            worker_compute[n] += t;
-                        } else {
-                            worker_compute[n] += tau;
-                        }
-                    }
-                    None => {
-                        completed[n] += 1;
-                        worker_compute[n] += t;
+        out.worker_compute.clear();
+        out.completed.clear();
+        out.worker_compute.resize(self.workers, 0.0);
+        out.completed.resize(self.workers, 0);
+        for n in 0..self.workers {
+            let mut compute = 0.0f64;
+            let mut done = 0usize;
+            let mut tally = |t: f64| match threshold {
+                Some(tau) => {
+                    if t < tau {
+                        done += 1;
+                        compute += t;
+                    } else {
+                        compute += tau;
                     }
                 }
+                None => {
+                    done += 1;
+                    compute += t;
+                }
+            };
+            if self.model.straggler_draws(n) {
+                // straggler coin flips interleave with micro-batch draws
+                // in this worker's stream: keep the sequential order
+                for _local in 0..h {
+                    let straggle = self.model.sample_straggler_at(
+                        n,
+                        step_idx,
+                        &mut self.streams[n],
+                    );
+                    let t = straggle
+                        + self.model.sample_microbatch(n, &mut self.streams[n]);
+                    tally(t);
+                }
+            } else {
+                // straggle is a pure function of (worker, step): draw the
+                // whole period's micro-batches in one batched fill
+                let straggle = self.model.sample_straggler_at(
+                    n,
+                    step_idx,
+                    &mut self.streams[n],
+                );
+                self.model.fill_microbatches(
+                    n,
+                    h,
+                    &mut self.sample_buf,
+                    &mut self.streams[n],
+                );
+                for &s in &self.sample_buf {
+                    tally(straggle + s);
+                }
             }
+            out.worker_compute[n] = compute;
+            out.completed[n] = done;
         }
-        let mut out = StepOutcome {
-            worker_compute,
-            completed,
-            compute_time: 0.0,
-            iter_time: 0.0,
-        };
-        self.finish_into(&mut out);
-        out
+        self.finish_into(out);
     }
 
     /// Record a no-drop latency trace of `iters` iterations — the input
@@ -355,13 +463,19 @@ impl ClusterSim {
             let step_idx = self.step_idx;
             self.step_idx += 1;
             for n in 0..self.workers {
-                let rng = &mut self.streams[n];
-                let straggle = self.model.sample_straggler_at(n, step_idx, rng);
-                for m in 0..self.accums {
-                    let mut t = self.model.sample_microbatch(n, rng);
-                    if m == 0 {
-                        t += straggle;
-                    }
+                let straggle = self.model.sample_straggler_at(
+                    n,
+                    step_idx,
+                    &mut self.streams[n],
+                );
+                self.model.fill_microbatches(
+                    n,
+                    self.accums,
+                    &mut self.sample_buf,
+                    &mut self.streams[n],
+                );
+                for (m, &s) in self.sample_buf.iter().enumerate() {
+                    let t = if m == 0 { s + straggle } else { s };
                     trace.set(i, n, m, t);
                 }
             }
@@ -380,6 +494,25 @@ impl ClusterSim {
             sum += out.iter_time;
         }
         sum / iters as f64
+    }
+
+    /// Mean synchronization-period time over `periods` Local-SGD periods
+    /// of `h` local steps each — the Local-SGD analogue of
+    /// [`Self::mean_iter_time`], reusing one outcome buffer across the
+    /// loop.
+    pub fn mean_period_time(
+        &mut self,
+        periods: usize,
+        h: usize,
+        threshold: Option<f64>,
+    ) -> f64 {
+        let mut out = StepOutcome::default();
+        let mut sum = 0.0;
+        for _ in 0..periods {
+            self.local_sgd_period_into(h, threshold, &mut out);
+            sum += out.iter_time;
+        }
+        sum / periods as f64
     }
 }
 
@@ -659,6 +792,126 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn finish_into_guards_zero_worker_outcome() {
+        // Regression: a zero-worker step used to fold compute_time to
+        // -inf (`fold(NEG_INFINITY, max)` over no elements). It must be
+        // 0.0 — nothing computed for zero seconds — and stay finite
+        // with and without DropComm.
+        for deadline in [None, Some(1.0)] {
+            let mut sim = ClusterSim::with_model(
+                0,
+                4,
+                LatencyModel::from_config(&config(0, 4)),
+                CommModel::Fixed(0.2),
+                13,
+            )
+            .with_comm_drop(deadline);
+            let out = sim.step(None);
+            assert_eq!(out.compute_time, 0.0, "deadline={deadline:?}");
+            assert!(out.compute_time.is_finite());
+            assert_eq!(out.iter_time, 0.0);
+            assert_eq!(out.drop_rate(4), 0.0);
+            assert!(!out.drop_rate(4).is_nan());
+        }
+        // zero accumulations: workers arrive with only their straggle,
+        // nothing scheduled, nothing dropped
+        let mut sim = ClusterSim::new(&config(3, 0), 13);
+        let out = sim.step(None);
+        assert_eq!(out.compute_time, 0.0);
+        assert_eq!(out.total_completed(), 0);
+        assert_eq!(out.drop_rate(0), 0.0);
+    }
+
+    #[test]
+    fn survivor_cache_drop_path_matches_reference() {
+        // a drop on (nearly) every step: the cached survivor collective
+        // against the event-queue bounded-wait oracle, bit for bit,
+        // while the cache compiles each survivor count at most once
+        let mut c = config(16, 4);
+        c.noise = NoiseKind::Exponential { mean: 0.6 };
+        c.stragglers = crate::config::StragglerKind::Uniform {
+            p: 0.4,
+            delay: 5.0,
+        };
+        c.topology = Some(crate::topology::TopologyKind::Torus { rows: 0 });
+        c.comm_drop_deadline = 1.0;
+        let mut fast = ClusterSim::new(&c, 77);
+        let mut slow = ClusterSim::new(&c, 77).with_reference_timing();
+        let mut dropped_steps = 0;
+        for step in 0..40 {
+            let a = fast.step(None);
+            let b = slow.step(None);
+            assert_eq!(
+                a.iter_time.to_bits(),
+                b.iter_time.to_bits(),
+                "step {step}"
+            );
+            assert_eq!(a.completed, b.completed);
+            if a.total_completed() < 16 * 4 {
+                dropped_steps += 1;
+            }
+        }
+        assert!(dropped_steps > 20, "drop-heavy config: {dropped_steps}/40");
+        assert!(
+            fast.survivors.compiled_count() <= 16,
+            "at most one compile per survivor count: {}",
+            fast.survivors.compiled_count()
+        );
+    }
+
+    #[test]
+    fn local_sgd_period_into_reuses_buffers_and_matches() {
+        // the recycling form against the allocating form, across
+        // straggler kinds that do and don't consume rng draws
+        for strag in [
+            crate::config::StragglerKind::None,
+            crate::config::StragglerKind::Uniform { p: 0.3, delay: 1.0 },
+            crate::config::StragglerKind::SingleServer {
+                p: 0.5,
+                delay: 2.0,
+                server_size: 2,
+            },
+            crate::config::StragglerKind::Fatal { worker: 1, from_step: 2 },
+        ] {
+            let mut c = config(4, 1);
+            c.noise = NoiseKind::Exponential { mean: 0.2 };
+            c.stragglers = strag.clone();
+            let mut a = ClusterSim::new(&c, 19);
+            let mut b = ClusterSim::new(&c, 19);
+            let mut out = StepOutcome::default();
+            for period in 0..6 {
+                let fresh = a.local_sgd_period(5, Some(0.9));
+                b.local_sgd_period_into(5, Some(0.9), &mut out);
+                assert_eq!(fresh.completed, out.completed, "{strag:?} {period}");
+                for (x, y) in fresh.worker_compute.iter().zip(&out.worker_compute)
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{strag:?} {period}");
+                }
+                assert_eq!(
+                    fresh.iter_time.to_bits(),
+                    out.iter_time.to_bits(),
+                    "{strag:?} {period}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mean_period_time_matches_manual_loop() {
+        let mut c = config(4, 1);
+        c.stragglers =
+            crate::config::StragglerKind::Uniform { p: 0.2, delay: 1.0 };
+        let mut a = ClusterSim::new(&c, 23);
+        let mut b = ClusterSim::new(&c, 23);
+        let mean = a.mean_period_time(10, 6, Some(0.8));
+        let mut sum = 0.0;
+        for _ in 0..10 {
+            sum += b.local_sgd_period(6, Some(0.8)).iter_time;
+        }
+        assert_eq!(mean.to_bits(), (sum / 10.0).to_bits());
     }
 
     #[test]

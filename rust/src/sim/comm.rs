@@ -153,6 +153,13 @@ impl CommModel {
     /// from the reduction (their gradient contribution is dropped and
     /// the sum reweighted by the caller) and simply receive the result.
     ///
+    /// This is the *oracle* form: it allocates a mask and a compacted
+    /// arrival vector and rebuilds the k-survivor schedule through the
+    /// event-queue simulation on every call. Hot loops route the
+    /// exclusion branch through
+    /// [`super::survivor::SurvivorScheduleCache`], which is bitwise
+    /// identical (property-tested) and allocation-free after warmup.
+    ///
     /// Returns the per-worker survivor mask and the completion time of
     /// the survivors' collective. The first arrival always survives, so
     /// the reduction is never empty.
@@ -179,11 +186,9 @@ impl CommModel {
             .map(|(&a, _)| a)
             .collect();
         let t = if sub.len() < arrivals.len() {
-            let first =
-                arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
-            let close = first + deadline.max(0.0);
-            // every survivor arrived by `close`; the k-member
-            // collective starts simultaneously there
+            // every survivor arrived by the membership close; the
+            // k-member collective starts simultaneously there
+            let close = bounded_wait_cutoff(arrivals, deadline);
             self.completion_time(&vec![close; sub.len()])
         } else {
             self.completion_time(&sub)

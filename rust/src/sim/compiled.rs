@@ -30,6 +30,18 @@ pub struct ScheduleScratch {
     next: Vec<f64>,
 }
 
+impl ScheduleScratch {
+    /// Scratch pre-sized for an `n`-worker schedule, so even the first
+    /// timing pass through it allocates nothing (used by the per-k
+    /// survivor cache, which sizes each slot's scratch at compile time).
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            ready: Vec::with_capacity(n),
+            next: Vec::with_capacity(n),
+        }
+    }
+}
+
 /// A [`Schedule`] lowered to flat arrays with precomputed hop costs for
 /// one fixed `(latency, bandwidth, bytes)` triple.
 #[derive(Debug, Clone)]

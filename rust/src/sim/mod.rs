@@ -10,6 +10,9 @@
 //! * [`compiled`] — the heapless compiled fast path for schedule
 //!   timing ([`CompiledSchedule`]), bitwise equal to the event-queue
 //!   reference but allocation-free in steady state;
+//! * [`survivor`] — per-survivor-count compiled schedules for the
+//!   DropComm exclusion branch ([`SurvivorScheduleCache`]), making
+//!   drop-heavy stepping as cheap as the no-drop path;
 //! * [`cluster`] — synchronous / DropCompute / DropComm / Local-SGD
 //!   step timing;
 //! * [`trace`] — `t_{i,n}^{(m)}` recording for Algorithm 2 and post-analysis.
@@ -19,6 +22,7 @@ pub mod comm;
 pub mod compiled;
 pub mod event;
 pub mod noise;
+pub mod survivor;
 pub mod trace;
 
 pub use cluster::{ClusterSim, PreemptionMode, StepOutcome};
@@ -27,5 +31,6 @@ pub use comm::{
 };
 pub use compiled::{CompiledSchedule, ScheduleScratch};
 pub use event::EventQueue;
-pub use noise::LatencyModel;
+pub use noise::{build_noise, LatencyModel, NoiseSampler};
+pub use survivor::SurvivorScheduleCache;
 pub use trace::Trace;

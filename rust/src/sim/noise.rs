@@ -3,6 +3,15 @@
 //! `t_n^{(m)} = base ⊕ additive-noise ⊕ straggler-delay` — exactly the
 //! paper's simulated-delay environment (App. B.1) plus the straggler
 //! scenarios of Fig 12 and the sub-optimal heterogeneous system of Fig 6.
+//!
+//! The noise families live behind [`NoiseSampler`], a *closed* enum over
+//! the six [`NoiseKind`] distributions. The old `Box<dyn Distribution>`
+//! paid an indirect call per draw in the innermost simulation loop; the
+//! enum dispatches once per accumulation run ([`LatencyModel`]'s batched
+//! `fill_*` methods hoist the match out of the loop entirely) and every
+//! inner `sample` inlines. The boxed builder ([`build_noise`]) survives
+//! as the reference arm of the `noise_fill_rate` benchmark and of the
+//! draw-for-draw property test in `tests/perf_equivalence.rs`.
 
 use crate::config::{ClusterConfig, NoiseKind, StragglerKind};
 use crate::rng::{
@@ -12,6 +21,9 @@ use crate::rng::{
 
 /// Build the additive-noise sampler for a config (None = no noise).
 /// For `PaperLogNormal` the sample is *relative*: `t += mu_compute * eps`.
+///
+/// This is the *boxed* (virtual-dispatch) form, kept as the reference
+/// oracle for [`NoiseSampler`]; the simulator's hot loops use the enum.
 pub fn build_noise(kind: &NoiseKind) -> Option<Box<dyn Distribution>> {
     match kind {
         NoiseKind::None => None,
@@ -42,10 +54,125 @@ fn noise_is_relative(kind: &NoiseKind) -> bool {
     matches!(kind, NoiseKind::PaperLogNormal { .. })
 }
 
+/// Closed, enum-dispatched noise sampler: one variant per
+/// [`NoiseKind`] family. Draw-for-draw identical to the boxed sampler
+/// [`build_noise`] returns for the same kind (property-tested), but
+/// `sample` inlines and [`NoiseSampler::fill`] draws a whole buffer with
+/// the variant match hoisted out of the loop.
+#[derive(Debug, Clone, Copy)]
+pub enum NoiseSampler {
+    None,
+    PaperBounded(BoundedLogNormal),
+    LogNormal(LogNormal),
+    Normal(Normal),
+    Bernoulli(Bernoulli),
+    Exponential(Exponential),
+    Gamma(Gamma),
+}
+
+impl NoiseSampler {
+    pub fn from_kind(kind: &NoiseKind) -> Self {
+        match kind {
+            NoiseKind::None => NoiseSampler::None,
+            NoiseKind::PaperLogNormal { mu, sigma, alpha, beta } => {
+                NoiseSampler::PaperBounded(BoundedLogNormal::new(
+                    *mu, *sigma, *alpha, *beta,
+                ))
+            }
+            NoiseKind::LogNormal { mean, var } => {
+                NoiseSampler::LogNormal(LogNormal::from_moments(*mean, *var))
+            }
+            NoiseKind::Normal { mean, var } => {
+                NoiseSampler::Normal(Normal::from_moments(*mean, *var))
+            }
+            NoiseKind::Bernoulli { p, value } => {
+                NoiseSampler::Bernoulli(Bernoulli::new(*p, *value))
+            }
+            NoiseKind::Exponential { mean } => {
+                NoiseSampler::Exponential(Exponential::from_mean(*mean))
+            }
+            NoiseKind::Gamma { mean, var } => {
+                NoiseSampler::Gamma(Gamma::from_moments(*mean, *var))
+            }
+        }
+    }
+
+    #[inline]
+    pub fn is_none(&self) -> bool {
+        matches!(self, NoiseSampler::None)
+    }
+
+    /// Draw one sample (0.0 for `None`). Same stream position per draw
+    /// as the boxed sampler for the same kind.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        match self {
+            NoiseSampler::None => 0.0,
+            NoiseSampler::PaperBounded(d) => d.sample(rng),
+            NoiseSampler::LogNormal(d) => d.sample(rng),
+            NoiseSampler::Normal(d) => d.sample(rng),
+            NoiseSampler::Bernoulli(d) => d.sample(rng),
+            NoiseSampler::Exponential(d) => d.sample(rng),
+            NoiseSampler::Gamma(d) => d.sample(rng),
+        }
+    }
+
+    /// Fill `buf` with `buf.len()` consecutive draws — identical stream
+    /// consumption to `buf.len()` calls of [`Self::sample`], with the
+    /// variant dispatch paid once instead of per draw (each arm
+    /// monomorphizes [`fill_slice`] for its concrete sampler).
+    pub fn fill(&self, buf: &mut [f64], rng: &mut Xoshiro256pp) {
+        match self {
+            NoiseSampler::None => buf.fill(0.0),
+            NoiseSampler::PaperBounded(d) => fill_slice(d, buf, rng),
+            NoiseSampler::LogNormal(d) => fill_slice(d, buf, rng),
+            NoiseSampler::Normal(d) => fill_slice(d, buf, rng),
+            NoiseSampler::Bernoulli(d) => fill_slice(d, buf, rng),
+            NoiseSampler::Exponential(d) => fill_slice(d, buf, rng),
+            NoiseSampler::Gamma(d) => fill_slice(d, buf, rng),
+        }
+    }
+
+    /// Analytical mean (0.0 for `None`).
+    pub fn mean(&self) -> f64 {
+        match self {
+            NoiseSampler::None => 0.0,
+            NoiseSampler::PaperBounded(d) => d.mean(),
+            NoiseSampler::LogNormal(d) => d.mean(),
+            NoiseSampler::Normal(d) => d.mean(),
+            NoiseSampler::Bernoulli(d) => d.mean(),
+            NoiseSampler::Exponential(d) => d.mean(),
+            NoiseSampler::Gamma(d) => d.mean(),
+        }
+    }
+
+    /// Analytical variance (0.0 for `None`).
+    pub fn variance(&self) -> f64 {
+        match self {
+            NoiseSampler::None => 0.0,
+            NoiseSampler::PaperBounded(d) => d.variance(),
+            NoiseSampler::LogNormal(d) => d.variance(),
+            NoiseSampler::Normal(d) => d.variance(),
+            NoiseSampler::Bernoulli(d) => d.variance(),
+            NoiseSampler::Exponential(d) => d.variance(),
+            NoiseSampler::Gamma(d) => d.variance(),
+        }
+    }
+}
+
+/// Statically-dispatched draw loop: monomorphized per sampler family,
+/// so the inner `sample` inlines with no per-draw branch.
+#[inline(always)]
+fn fill_slice<D: Distribution>(d: &D, buf: &mut [f64], rng: &mut Xoshiro256pp) {
+    for s in buf.iter_mut() {
+        *s = d.sample(rng);
+    }
+}
+
 /// Per-worker latency sampler with optional heterogeneity.
 pub struct LatencyModel {
     base: Normal,
-    noise: Option<Box<dyn Distribution>>,
+    noise: NoiseSampler,
     relative: bool,
     mean_scale: f64,
     stragglers: StragglerKind,
@@ -57,6 +184,7 @@ impl std::fmt::Debug for LatencyModel {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("LatencyModel")
             .field("base", &self.base)
+            .field("noise", &self.noise)
             .field("relative", &self.relative)
             .finish()
     }
@@ -66,7 +194,7 @@ impl LatencyModel {
     pub fn from_config(c: &ClusterConfig) -> Self {
         Self {
             base: Normal::new(c.microbatch_mean, c.microbatch_std),
-            noise: build_noise(&c.noise),
+            noise: NoiseSampler::from_kind(&c.noise),
             relative: noise_is_relative(&c.noise),
             mean_scale: c.microbatch_mean,
             stragglers: c.stragglers.clone(),
@@ -82,19 +210,137 @@ impl LatencyModel {
     }
 
     /// Sample the compute latency of one micro-batch for worker `n`.
+    #[inline]
     pub fn sample_microbatch(&self, n: usize, rng: &mut Xoshiro256pp) -> f64 {
         let scale = self.worker_scale.get(n).copied().unwrap_or(1.0);
         // Base compute: truncated-at-10%-of-mean normal (hardware cannot
         // be arbitrarily fast).
         let mut t = self.base.sample(rng).max(0.1 * self.base.mu) * scale;
-        if let Some(noise) = &self.noise {
+        if !self.noise.is_none() {
             // Noise may be signed (the Fig 13 Normal family allows a
             // worker to run *faster* than nominal); only the total
             // latency is clamped to a physical floor.
-            let eps = noise.sample(rng);
+            let eps = self.noise.sample(rng);
             t += if self.relative { self.mean_scale * eps } else { eps };
         }
         t.max(0.01 * self.base.mu)
+    }
+
+    /// The shared core of the batched fills: draw up to `m` micro-batch
+    /// latencies into `buf`, base and noise interleaved per sample in
+    /// exactly [`Self::sample_microbatch`]'s order. With
+    /// `bound = Some((start, tau))` the run stops after the first sample
+    /// whose running total `start + s_1 + ... + s_j` reaches `tau` —
+    /// precisely where the sequential preemption loops stopped drawing,
+    /// so the worker's stream position stays bitwise identical to the
+    /// un-batched code in both preemption modes.
+    #[inline(always)]
+    fn fill_core(
+        &self,
+        n: usize,
+        m: usize,
+        bound: Option<(f64, f64)>,
+        buf: &mut Vec<f64>,
+        rng: &mut Xoshiro256pp,
+        mut eps: impl FnMut(&mut Xoshiro256pp) -> f64,
+        has_noise: bool,
+    ) -> usize {
+        buf.clear();
+        buf.reserve(m);
+        let scale = self.worker_scale.get(n).copied().unwrap_or(1.0);
+        let base_floor = 0.1 * self.base.mu;
+        let total_floor = 0.01 * self.base.mu;
+        let mut cum = match bound {
+            Some((start, _)) => start,
+            None => 0.0,
+        };
+        for _ in 0..m {
+            let mut t = self.base.sample(rng).max(base_floor) * scale;
+            if has_noise {
+                let e = eps(rng);
+                t += if self.relative { self.mean_scale * e } else { e };
+            }
+            let t = t.max(total_floor);
+            buf.push(t);
+            if let Some((_, tau)) = bound {
+                cum += t;
+                // negated comparison: both preemption modes stop drawing
+                // at the first crossing (Preemptive's `next < tau` guard
+                // and BetweenAccumulations' `t >= tau` check agree here)
+                if !(cum < tau) {
+                    break;
+                }
+            }
+        }
+        buf.len()
+    }
+
+    /// Dispatch [`Self::fill_core`] once per run on the noise variant —
+    /// the whole accumulation run is drawn with no per-sample dispatch.
+    #[inline]
+    fn fill_dispatch(
+        &self,
+        n: usize,
+        m: usize,
+        bound: Option<(f64, f64)>,
+        buf: &mut Vec<f64>,
+        rng: &mut Xoshiro256pp,
+    ) -> usize {
+        match self.noise {
+            NoiseSampler::None => {
+                self.fill_core(n, m, bound, buf, rng, |_| 0.0, false)
+            }
+            NoiseSampler::PaperBounded(d) => {
+                self.fill_core(n, m, bound, buf, rng, |r| d.sample(r), true)
+            }
+            NoiseSampler::LogNormal(d) => {
+                self.fill_core(n, m, bound, buf, rng, |r| d.sample(r), true)
+            }
+            NoiseSampler::Normal(d) => {
+                self.fill_core(n, m, bound, buf, rng, |r| d.sample(r), true)
+            }
+            NoiseSampler::Bernoulli(d) => {
+                self.fill_core(n, m, bound, buf, rng, |r| d.sample(r), true)
+            }
+            NoiseSampler::Exponential(d) => {
+                self.fill_core(n, m, bound, buf, rng, |r| d.sample(r), true)
+            }
+            NoiseSampler::Gamma(d) => {
+                self.fill_core(n, m, bound, buf, rng, |r| d.sample(r), true)
+            }
+        }
+    }
+
+    /// Draw worker `n`'s whole accumulation run — `m` micro-batch
+    /// latencies — into `buf` in one batched call. Stream consumption is
+    /// bitwise identical to `m` sequential [`Self::sample_microbatch`]
+    /// calls (property-tested in `tests/perf_equivalence.rs`).
+    pub fn fill_microbatches(
+        &self,
+        n: usize,
+        m: usize,
+        buf: &mut Vec<f64>,
+        rng: &mut Xoshiro256pp,
+    ) {
+        self.fill_dispatch(n, m, None, buf, rng);
+    }
+
+    /// [`Self::fill_microbatches`] for a thresholded (DropCompute) run
+    /// starting at `start` (the straggler delay): stops drawing after
+    /// the first sample whose running total reaches `tau`, exactly where
+    /// the sequential preemption loops stopped — the worker's stream
+    /// position is bitwise identical to the un-batched code. Returns the
+    /// number of samples drawn (`buf.len()`).
+    pub fn fill_microbatches_bounded(
+        &self,
+        n: usize,
+        start: f64,
+        tau: f64,
+        m: usize,
+        buf: &mut Vec<f64>,
+        rng: &mut Xoshiro256pp,
+    ) -> usize {
+        self.fill_dispatch(n, m, Some((start, tau)), buf, rng)
     }
 
     /// Effectively-infinite delay of a failed worker (finite so the
@@ -104,6 +350,19 @@ impl LatencyModel {
     /// Per-step straggler delay for worker `n` (0 if not straggling).
     pub fn sample_straggler(&self, n: usize, rng: &mut Xoshiro256pp) -> f64 {
         self.sample_straggler_at(n, usize::MAX, rng)
+    }
+
+    /// Whether sampling worker `n`'s straggler delay consumes random
+    /// draws from its stream. `None` and `Fatal` are pure functions of
+    /// `(n, step)`; `Uniform` flips a coin every call, `SingleServer`
+    /// only for workers inside the server. Callers batching micro-batch
+    /// draws use this to know when straggler draws interleave.
+    pub fn straggler_draws(&self, n: usize) -> bool {
+        match &self.stragglers {
+            StragglerKind::None | StragglerKind::Fatal { .. } => false,
+            StragglerKind::Uniform { .. } => true,
+            StragglerKind::SingleServer { server_size, .. } => n < *server_size,
+        }
     }
 
     /// Step-aware variant (needed by `Fatal`, which triggers at a step).
@@ -141,27 +400,25 @@ impl LatencyModel {
 
     /// Analytical mean of one micro-batch latency (no stragglers).
     pub fn mean(&self) -> f64 {
-        let noise_mean = self
-            .noise
-            .as_ref()
-            .map(|d| if self.relative { self.mean_scale * d.mean() } else { d.mean() })
-            .unwrap_or(0.0);
+        let noise_mean = if self.noise.is_none() {
+            0.0
+        } else if self.relative {
+            self.mean_scale * self.noise.mean()
+        } else {
+            self.noise.mean()
+        };
         self.base.mean() + noise_mean
     }
 
     /// Analytical variance of one micro-batch latency (no stragglers).
     pub fn variance(&self) -> f64 {
-        let noise_var = self
-            .noise
-            .as_ref()
-            .map(|d| {
-                if self.relative {
-                    self.mean_scale * self.mean_scale * d.variance()
-                } else {
-                    d.variance()
-                }
-            })
-            .unwrap_or(0.0);
+        let noise_var = if self.noise.is_none() {
+            0.0
+        } else if self.relative {
+            self.mean_scale * self.mean_scale * self.noise.variance()
+        } else {
+            self.noise.variance()
+        };
         self.base.variance() + noise_var
     }
 }
@@ -240,6 +497,98 @@ mod tests {
     }
 
     #[test]
+    fn enum_sampler_matches_boxed_for_every_kind() {
+        // NoiseSampler must be draw-for-draw bitwise identical to the
+        // boxed Distribution the same kind builds (the deeper
+        // fill/stream property tests live in tests/perf_equivalence.rs).
+        for kind in [
+            NoiseKind::PaperLogNormal {
+                mu: 4.0,
+                sigma: 1.0,
+                alpha: 2.0 * (4.5f64).exp(),
+                beta: 5.5,
+            },
+            NoiseKind::LogNormal { mean: 0.225, var: 0.05 },
+            NoiseKind::Normal { mean: 0.225, var: 0.05 },
+            NoiseKind::Bernoulli { p: 0.5, value: 0.45 },
+            NoiseKind::Exponential { mean: 0.225 },
+            NoiseKind::Gamma { mean: 0.225, var: 0.05 },
+        ] {
+            let boxed = build_noise(&kind).expect("non-None kind");
+            let sampler = NoiseSampler::from_kind(&kind);
+            assert!(!sampler.is_none());
+            let mut r1 = Xoshiro256pp::seed_from_u64(0xD1CE);
+            let mut r2 = Xoshiro256pp::seed_from_u64(0xD1CE);
+            for i in 0..2_000 {
+                assert_eq!(
+                    boxed.sample(&mut r1).to_bits(),
+                    sampler.sample(&mut r2).to_bits(),
+                    "{kind:?} draw {i}"
+                );
+            }
+            assert_eq!(boxed.mean().to_bits(), sampler.mean().to_bits());
+            assert_eq!(boxed.variance().to_bits(), sampler.variance().to_bits());
+        }
+        assert!(NoiseSampler::from_kind(&NoiseKind::None).is_none());
+        assert!(build_noise(&NoiseKind::None).is_none());
+    }
+
+    #[test]
+    fn batched_fill_matches_sequential_microbatches() {
+        for kind in [
+            NoiseKind::None,
+            NoiseKind::PaperLogNormal {
+                mu: 4.0,
+                sigma: 1.0,
+                alpha: 2.0 * (4.5f64).exp(),
+                beta: 5.5,
+            },
+            NoiseKind::Gamma { mean: 0.225, var: 0.05 },
+        ] {
+            let mut c = base_config();
+            c.noise = kind;
+            let m = LatencyModel::from_config(&c)
+                .with_worker_scales(vec![1.0, 1.7, 1.0, 1.0]);
+            let mut r1 = Xoshiro256pp::seed_from_u64(0xF111);
+            let mut r2 = Xoshiro256pp::seed_from_u64(0xF111);
+            let mut buf = Vec::new();
+            for n in [0usize, 1] {
+                m.fill_microbatches(n, 16, &mut buf, &mut r2);
+                assert_eq!(buf.len(), 16);
+                for (i, &s) in buf.iter().enumerate() {
+                    assert_eq!(
+                        s.to_bits(),
+                        m.sample_microbatch(n, &mut r1).to_bits(),
+                        "worker {n} sample {i}"
+                    );
+                }
+            }
+            // streams end at the same position
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+    }
+
+    #[test]
+    fn bounded_fill_stops_at_the_crossing_sample() {
+        let m = LatencyModel::from_config(&base_config());
+        let mut r1 = Xoshiro256pp::seed_from_u64(3);
+        let mut r2 = Xoshiro256pp::seed_from_u64(3);
+        let mut buf = Vec::new();
+        // tau below one sample: exactly one draw happens
+        let drawn = m.fill_microbatches_bounded(0, 0.0, 0.1, 12, &mut buf, &mut r1);
+        assert_eq!(drawn, 1);
+        assert_eq!(buf[0].to_bits(), m.sample_microbatch(0, &mut r2).to_bits());
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        // huge tau: the full run is drawn
+        let drawn = m.fill_microbatches_bounded(0, 0.0, 1e9, 12, &mut buf, &mut r1);
+        assert_eq!(drawn, 12);
+        // a crossing mid-run stops mid-run (0.45s samples, tau = 1.0
+        // crosses on the third sample: 0.45, 0.90, 1.35)
+        let drawn = m.fill_microbatches_bounded(0, 0.0, 1.0, 12, &mut buf, &mut r1);
+        assert_eq!(drawn, 3, "{buf:?}");
+    }
+
+    #[test]
     fn straggler_scenarios() {
         let mut c = base_config();
         c.stragglers = StragglerKind::SingleServer {
@@ -253,6 +602,34 @@ mod tests {
         assert_eq!(m.sample_straggler(1, &mut rng), 2.0);
         assert_eq!(m.sample_straggler(2, &mut rng), 0.0);
         assert_eq!(m.sample_straggler(3, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn straggler_draws_tracks_rng_consumption() {
+        let mk = |s: StragglerKind| {
+            let mut c = base_config();
+            c.stragglers = s;
+            LatencyModel::from_config(&c)
+        };
+        assert!(!mk(StragglerKind::None).straggler_draws(0));
+        assert!(!mk(StragglerKind::Fatal { worker: 1, from_step: 0 })
+            .straggler_draws(1));
+        assert!(mk(StragglerKind::Uniform { p: 0.1, delay: 1.0 })
+            .straggler_draws(3));
+        let ss = mk(StragglerKind::SingleServer {
+            p: 0.1,
+            delay: 1.0,
+            server_size: 2,
+        });
+        // only in-server workers flip the coin (short-circuit in the
+        // sampler): rng state after sampling an out-of-server worker is
+        // untouched
+        assert!(ss.straggler_draws(0) && ss.straggler_draws(1));
+        assert!(!ss.straggler_draws(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let before = rng.clone().next_u64();
+        ss.sample_straggler(2, &mut rng);
+        assert_eq!(rng.next_u64(), before);
     }
 
     #[test]

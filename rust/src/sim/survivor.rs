@@ -1,0 +1,188 @@
+//! Per-survivor-count compiled schedules for the DropComm collective —
+//! the drop-path twin of [`super::compiled`].
+//!
+//! When the bounded-wait membership rule excludes at least one worker,
+//! the k survivors run a *k*-member collective starting simultaneously
+//! at the membership close (`first arrival + deadline`; see
+//! [`super::comm::CommModel::bounded_wait_completion`]). The oracle path
+//! rebuilds that k-worker [`crate::topology::Schedule`] — O(N²)
+//! transfers for torus/hierarchical — and times it through the
+//! event-queue simulation on **every** drop step, plus a survivor mask
+//! and a compacted-arrivals vector: three allocations and a schedule
+//! build in exactly the regime the Fig 1/13/14 sweeps hit millions of
+//! times.
+//!
+//! [`SurvivorScheduleCache`] memoizes one [`CompiledSchedule`] (and its
+//! [`ScheduleScratch`]) per survivor count k, compiled lazily on first
+//! use, plus one reusable arrivals buffer. After warmup a drop step
+//! performs zero allocations and zero schedule builds. The result is
+//! **bitwise identical** to the event-queue oracle: the cache builds the
+//! same k-worker schedule (`CommModel::schedule_for`), all survivors
+//! start at the same instant, and the compiled per-phase pass is
+//! bitwise equal to the event simulation (the PR-2 invariant) —
+//! property-tested in `tests/perf_equivalence.rs`.
+
+use super::comm::CommModel;
+use super::compiled::{CompiledSchedule, ScheduleScratch};
+
+#[derive(Debug)]
+struct Slot {
+    compiled: CompiledSchedule,
+    scratch: ScheduleScratch,
+}
+
+/// Lazily-compiled per-k survivor collectives for one [`CommModel`].
+/// Owned by [`super::ClusterSim`]; `completion` is its drop-branch hot
+/// path.
+#[derive(Debug)]
+pub struct SurvivorScheduleCache {
+    model: CommModel,
+    /// `slots[k]` holds the compiled k-survivor schedule once some step
+    /// has dropped down to k members.
+    slots: Vec<Option<Slot>>,
+    /// Reusable compacted-arrivals buffer (`[close; k]`).
+    arrivals: Vec<f64>,
+    compiled: usize,
+}
+
+impl SurvivorScheduleCache {
+    pub fn new(model: &CommModel) -> Self {
+        Self {
+            model: model.clone(),
+            slots: Vec::new(),
+            arrivals: Vec::new(),
+            compiled: 0,
+        }
+    }
+
+    /// How many distinct survivor counts have been compiled so far
+    /// (memoization introspection for tests and diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.compiled
+    }
+
+    /// Completion time of the k-survivor collective whose members all
+    /// start at `close` (the membership decision instant). Bitwise equal
+    /// to the oracle's `completion_time(&vec![close; k])` — the max over
+    /// k equal arrivals is `close`, and the compiled pass is bitwise
+    /// equal to the event-queue simulation of the same k-worker
+    /// schedule — with no allocation or schedule build after the first
+    /// drop to a given k.
+    pub fn completion(&mut self, k: usize, close: f64) -> f64 {
+        if k == 0 {
+            // an empty reduction completes instantly, matching
+            // `CommModel::completion_time(&[])`
+            return 0.0;
+        }
+        if let CommModel::Fixed(tc) = self.model {
+            return close + tc;
+        }
+        if self.slots.len() <= k {
+            self.slots.resize_with(k + 1, || None);
+        }
+        if self.slots[k].is_none() {
+            let (latency, bandwidth, bytes) = self
+                .model
+                .link_params()
+                .expect("schedule-driven model has link params");
+            let schedule = self
+                .model
+                .schedule_for(k)
+                .expect("schedule-driven model has a schedule");
+            self.slots[k] = Some(Slot {
+                compiled: CompiledSchedule::compile(
+                    &schedule, latency, bandwidth, bytes,
+                ),
+                scratch: ScheduleScratch::with_capacity(k),
+            });
+            self.compiled += 1;
+        }
+        let slot = self.slots[k].as_mut().expect("slot just ensured");
+        self.arrivals.clear();
+        self.arrivals.resize(k, close);
+        slot.compiled.completion_with(&self.arrivals, &mut slot.scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyKind;
+
+    #[test]
+    fn fixed_model_adds_tc_at_close() {
+        let mut cache = SurvivorScheduleCache::new(&CommModel::Fixed(0.5));
+        let (_, want) = CommModel::Fixed(0.5)
+            .bounded_wait_completion(&[0.0, 0.1, 9.0], 1.0);
+        assert_eq!(cache.completion(2, 1.0).to_bits(), want.to_bits());
+        assert_eq!(cache.compiled_count(), 0, "fixed model compiles nothing");
+        assert_eq!(cache.completion(0, 3.0), 0.0);
+    }
+
+    #[test]
+    fn memoizes_one_compile_per_k() {
+        let model = CommModel::Topology {
+            kind: TopologyKind::Torus { rows: 0 },
+            latency: 1e-4,
+            bandwidth: 1e9,
+            bytes: 4e6,
+        };
+        let mut cache = SurvivorScheduleCache::new(&model);
+        let a = cache.completion(5, 0.7);
+        assert_eq!(cache.compiled_count(), 1);
+        let b = cache.completion(5, 0.7);
+        assert_eq!(cache.compiled_count(), 1, "same k must not recompile");
+        assert_eq!(a.to_bits(), b.to_bits());
+        cache.completion(3, 0.7);
+        assert_eq!(cache.compiled_count(), 2);
+        cache.completion(1, 0.7);
+        assert_eq!(cache.compiled_count(), 3);
+    }
+
+    #[test]
+    fn matches_oracle_exclusion_branch() {
+        // the cache against bounded_wait_completion's exclusion arm on a
+        // concrete case per topology (the randomized sweep lives in
+        // tests/perf_equivalence.rs)
+        for kind in TopologyKind::ALL {
+            let model = CommModel::Topology {
+                kind,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                bytes: 4e6,
+            };
+            let mut cache = SurvivorScheduleCache::new(&model);
+            let arrivals = [0.2, 0.05, 7.0, 0.3, 50.0, 0.1];
+            for deadline in [0.0, 0.5, 2.0] {
+                let (mask, want) =
+                    model.bounded_wait_completion(&arrivals, deadline);
+                let k = mask.iter().filter(|&&s| s).count();
+                assert!(k < arrivals.len(), "exclusion case");
+                let close = crate::sim::comm::bounded_wait_cutoff(
+                    &arrivals, deadline,
+                );
+                let got = cache.completion(k, close);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{} deadline={deadline} k={k}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_survivor_completes_at_close() {
+        // k = 1: an empty schedule — completion is the (clamped) start
+        let model = CommModel::Ring {
+            latency: 1e-3,
+            bandwidth: 1e9,
+            bytes: 1e6,
+        };
+        let mut cache = SurvivorScheduleCache::new(&model);
+        assert_eq!(cache.completion(1, 2.5), 2.5);
+        // negative close clamps like the event path's arrival clamp
+        assert_eq!(cache.completion(1, -1.0), 0.0);
+    }
+}

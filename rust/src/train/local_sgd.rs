@@ -12,7 +12,7 @@ use crate::config::Config;
 use crate::data::ShardedLoader;
 use crate::metrics::{RunLog, StepRecord};
 use crate::runtime::ModelRuntime;
-use crate::sim::ClusterSim;
+use crate::sim::{ClusterSim, StepOutcome};
 use crate::util::{Result, Stopwatch};
 
 use super::params::ParamStore;
@@ -26,6 +26,9 @@ pub struct LocalSgdTrainer {
     sim: ClusterSim,
     pub threshold: Option<f64>,
     virtual_time: f64,
+    /// Reusable period-timing outcome
+    /// ([`ClusterSim::local_sgd_period_into`] recycles its vectors).
+    outcome: StepOutcome,
 }
 
 impl LocalSgdTrainer {
@@ -57,6 +60,7 @@ impl LocalSgdTrainer {
             sim,
             threshold,
             virtual_time: 0.0,
+            outcome: StepOutcome::default(),
         })
     }
 
@@ -65,7 +69,9 @@ impl LocalSgdTrainer {
     pub fn period(&mut self, period_idx: usize) -> Result<StepRecord> {
         let sw = Stopwatch::start();
         let h = self.cfg.train.local_sgd_period;
-        let outcome = self.sim.local_sgd_period(h, self.threshold);
+        self.sim
+            .local_sgd_period_into(h, self.threshold, &mut self.outcome);
+        let outcome = &self.outcome;
 
         let lr = self.cfg.train.lr;
         let mut loss_sum = 0.0;

@@ -1,12 +1,20 @@
 //! Property tests for the perf core: the compiled schedule fast path
 //! must be bitwise equal to the event-queue reference oracle on every
-//! topology, and the parallel sweep engine must be bitwise equal to a
-//! serial run — the two invariants that make "fast" safe to trust.
+//! topology, the cached survivor collective must be bitwise equal to
+//! the event-queue `bounded_wait_completion`, the enum noise sampler
+//! must be draw-for-draw identical to the boxed one (and the batched
+//! fills stream-identical to sequential draws), and the parallel sweep
+//! engine must be bitwise equal to a serial run — the invariants that
+//! make "fast" safe to trust.
 
 use dropcompute::config::{ClusterConfig, NoiseKind, StragglerKind};
 use dropcompute::coordinator::ScaleRun;
-use dropcompute::rng::Xoshiro256pp;
-use dropcompute::sim::{schedule_completion, ClusterSim, CompiledSchedule, ScheduleScratch};
+use dropcompute::rng::{Distribution, Xoshiro256pp};
+use dropcompute::sim::{
+    bounded_wait_cutoff, build_noise, schedule_completion, ClusterSim,
+    CommModel, CompiledSchedule, LatencyModel, NoiseSampler, PreemptionMode,
+    ScheduleScratch, SurvivorScheduleCache,
+};
 use dropcompute::sweep::SweepSpec;
 use dropcompute::topology::TopologyKind;
 
@@ -89,6 +97,337 @@ fn cluster_sim_compiled_equals_reference_under_noise_and_drops() {
                 );
                 assert_eq!(a.completed, b.completed);
                 assert_eq!(a.compute_time.to_bits(), b.compute_time.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn survivor_cache_bitwise_equals_bounded_wait_oracle() {
+    // The drop-path invariant: for every topology (and the fixed-T^c
+    // model), random arrivals and random deadlines — including 0 (only
+    // ties with the first arrival survive, everyone else dropped) and
+    // deadlines loose enough that nobody drops — the cached k-survivor
+    // collective must be bitwise equal to the event-queue
+    // bounded_wait_completion, while compiling each k at most once.
+    let mut rng = Xoshiro256pp::seed_from_u64(0x50F7_51DE);
+    let models: Vec<CommModel> = TopologyKind::ALL
+        .iter()
+        .map(|&kind| CommModel::Topology {
+            kind,
+            latency: 1e-4,
+            bandwidth: 1e9,
+            bytes: 4e6,
+        })
+        .chain(std::iter::once(CommModel::Fixed(0.35)))
+        .collect();
+    for model in &models {
+        for n in [1usize, 2, 3, 5, 8, 12, 16, 24] {
+            let mut cache = SurvivorScheduleCache::new(model);
+            let mut seen_ks = std::collections::HashSet::new();
+            for case in 0..40 {
+                let arrivals: Vec<f64> = (0..n)
+                    .map(|_| match rng.next_below(4) {
+                        0 => rng.next_f64() * 0.01,
+                        1 => rng.next_f64() * 5.0,
+                        2 => 20.0 + rng.next_f64() * 50.0,
+                        _ => -rng.next_f64(),
+                    })
+                    .collect();
+                let deadline = match case % 5 {
+                    0 => 0.0,
+                    1 => -1.0, // clamps to 0 like the membership rule
+                    2 => 1e9,  // nobody excluded
+                    3 => rng.next_f64() * 0.5,
+                    _ => rng.next_f64() * 30.0,
+                };
+                let (mask, want) =
+                    model.bounded_wait_completion(&arrivals, deadline);
+                let k = mask.iter().filter(|&&s| s).count();
+                if k == arrivals.len() {
+                    // no exclusion: the full-N compiled path covers this
+                    // (tested above); the cache only serves drop steps
+                    continue;
+                }
+                seen_ks.insert(k);
+                let close = bounded_wait_cutoff(&arrivals, deadline);
+                let got = cache.completion(k, close);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{model:?} n={n} k={k} deadline={deadline}: \
+                     cached {got} vs oracle {want}"
+                );
+            }
+            let is_fixed = matches!(model, CommModel::Fixed(_));
+            let want_compiles = if is_fixed { 0 } else { seen_ks.len() };
+            assert_eq!(
+                cache.compiled_count(),
+                want_compiles,
+                "{model:?} n={n}: one compile per survivor count"
+            );
+        }
+    }
+}
+
+#[test]
+fn enum_noise_sampler_matches_boxed_draw_for_draw() {
+    // Every NoiseKind family: the closed enum sampler must consume the
+    // stream identically to the boxed trait object — per draw, and
+    // through the batched fill.
+    let kinds = [
+        NoiseKind::None,
+        NoiseKind::PaperLogNormal {
+            mu: 4.0,
+            sigma: 1.0,
+            alpha: 2.0 * (4.5f64).exp(),
+            beta: 5.5,
+        },
+        NoiseKind::LogNormal { mean: 0.225, var: 0.05 },
+        NoiseKind::Normal { mean: 0.225, var: 0.05 },
+        NoiseKind::Bernoulli { p: 0.5, value: 0.45 },
+        NoiseKind::Exponential { mean: 0.225 },
+        NoiseKind::Gamma { mean: 0.225, var: 0.05 },
+        // alpha < 1 exercises Marsaglia-Tsang's boost branch
+        NoiseKind::Gamma { mean: 0.1, var: 0.05 },
+    ];
+    for kind in &kinds {
+        let sampler = NoiseSampler::from_kind(kind);
+        let Some(boxed) = build_noise(kind) else {
+            assert!(sampler.is_none(), "{kind:?}");
+            continue;
+        };
+        let mut r_boxed = Xoshiro256pp::seed_from_u64(0xBEEF);
+        let mut r_enum = Xoshiro256pp::seed_from_u64(0xBEEF);
+        for i in 0..20_000 {
+            assert_eq!(
+                boxed.sample(&mut r_boxed).to_bits(),
+                sampler.sample(&mut r_enum).to_bits(),
+                "{kind:?} draw {i}"
+            );
+        }
+        // batched fill: same values, same end-of-stream position
+        let mut buf = vec![0.0f64; 3_000];
+        sampler.fill(&mut buf, &mut r_enum);
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                boxed.sample(&mut r_boxed).to_bits(),
+                "{kind:?} fill draw {i}"
+            );
+        }
+        assert_eq!(r_boxed.next_u64(), r_enum.next_u64(), "{kind:?}");
+        assert_eq!(boxed.mean().to_bits(), sampler.mean().to_bits());
+        assert_eq!(boxed.variance().to_bits(), sampler.variance().to_bits());
+    }
+}
+
+/// The pre-batching sequential step algorithm, reconstructed from
+/// public APIs: per worker, straggler draw then one
+/// `sample_microbatch` per accumulation, stopping at the first
+/// threshold crossing. The batched `ClusterSim::step` must match it
+/// bitwise — including each worker's stream position, which is what the
+/// multi-step loop checks.
+fn reference_step(
+    model: &LatencyModel,
+    streams: &mut [Xoshiro256pp],
+    accums: usize,
+    threshold: Option<f64>,
+    mode: PreemptionMode,
+    step_idx: usize,
+) -> (Vec<f64>, Vec<usize>) {
+    let mut worker_compute = Vec::with_capacity(streams.len());
+    let mut completed = Vec::with_capacity(streams.len());
+    for (n, rng) in streams.iter_mut().enumerate() {
+        let mut t = model.sample_straggler_at(n, step_idx, rng);
+        let mut done = 0usize;
+        match (threshold, mode) {
+            (None, _) => {
+                for _ in 0..accums {
+                    t += model.sample_microbatch(n, rng);
+                }
+                done = accums;
+            }
+            (Some(tau), PreemptionMode::Preemptive) => {
+                for _ in 0..accums {
+                    let next = t + model.sample_microbatch(n, rng);
+                    if next < tau {
+                        t = next;
+                        done += 1;
+                    } else {
+                        break;
+                    }
+                }
+                if done < accums {
+                    t = tau;
+                }
+            }
+            (Some(tau), PreemptionMode::BetweenAccumulations) => {
+                for _ in 0..accums {
+                    t += model.sample_microbatch(n, rng);
+                    done += 1;
+                    if t >= tau {
+                        break;
+                    }
+                }
+            }
+        }
+        worker_compute.push(t);
+        completed.push(done);
+    }
+    (worker_compute, completed)
+}
+
+#[test]
+fn batched_step_bitwise_matches_sequential_reference() {
+    // Batched fills must not move any worker's stream position: every
+    // noise family x straggler scenario x preemption mode x threshold,
+    // over enough consecutive steps that one extra/missing draw
+    // anywhere would cascade into a mismatch.
+    let noises = [
+        NoiseKind::None,
+        NoiseKind::PaperLogNormal {
+            mu: 4.0,
+            sigma: 1.0,
+            alpha: 2.0 * (4.5f64).exp(),
+            beta: 5.5,
+        },
+        NoiseKind::Normal { mean: 0.225, var: 0.05 },
+        NoiseKind::Gamma { mean: 0.225, var: 0.05 },
+    ];
+    let stragglers = [
+        StragglerKind::None,
+        StragglerKind::Uniform { p: 0.3, delay: 2.0 },
+        StragglerKind::SingleServer { p: 0.5, delay: 2.0, server_size: 3 },
+        StragglerKind::Fatal { worker: 2, from_step: 4 },
+    ];
+    for noise in &noises {
+        for strag in &stragglers {
+            for (threshold, mode) in [
+                (None, PreemptionMode::Preemptive),
+                (Some(6.0), PreemptionMode::Preemptive),
+                (Some(6.0), PreemptionMode::BetweenAccumulations),
+                (Some(2.0), PreemptionMode::Preemptive),
+            ] {
+                let cfg = ClusterConfig {
+                    workers: 6,
+                    accumulations: 8,
+                    microbatch_mean: 0.45,
+                    microbatch_std: 0.02,
+                    comm_latency: 0.3,
+                    noise: noise.clone(),
+                    stragglers: strag.clone(),
+                    ..Default::default()
+                };
+                let seed = 0xA11CE;
+                let mut sim = ClusterSim::new(&cfg, seed).with_preemption(mode);
+                // mirror ClusterSim's stream construction
+                let root = Xoshiro256pp::seed_from_u64(seed);
+                let mut streams: Vec<Xoshiro256pp> =
+                    (0..cfg.workers).map(|n| root.split(n as u64)).collect();
+                let model = LatencyModel::from_config(&cfg);
+                for step in 0..12 {
+                    let out = sim.step(threshold);
+                    let (wc, done) = reference_step(
+                        &model,
+                        &mut streams,
+                        cfg.accumulations,
+                        threshold,
+                        mode,
+                        step,
+                    );
+                    assert_eq!(
+                        out.completed, done,
+                        "{noise:?} {strag:?} {threshold:?} {mode:?} step {step}"
+                    );
+                    for (w, (a, b)) in
+                        out.worker_compute.iter().zip(&wc).enumerate()
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{noise:?} {strag:?} {threshold:?} {mode:?} \
+                             step {step} worker {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_local_sgd_bitwise_matches_sequential_reference() {
+    // The worker-major, batched local_sgd_period against the original
+    // local-major sequential loop: per-worker streams see the same
+    // draw order either way (each worker owns its stream), so results
+    // must be bitwise identical across straggler kinds that do and
+    // don't consume randomness.
+    let stragglers = [
+        StragglerKind::None,
+        StragglerKind::Uniform { p: 0.25, delay: 1.0 },
+        StragglerKind::SingleServer { p: 0.6, delay: 1.5, server_size: 2 },
+        StragglerKind::Fatal { worker: 1, from_step: 1 },
+    ];
+    for strag in &stragglers {
+        for threshold in [None, Some(0.9)] {
+            let cfg = ClusterConfig {
+                workers: 5,
+                accumulations: 1,
+                microbatch_mean: 0.45,
+                microbatch_std: 0.02,
+                comm_latency: 0.2,
+                noise: NoiseKind::Exponential { mean: 0.15 },
+                stragglers: strag.clone(),
+                ..Default::default()
+            };
+            let seed = 0x10CA1;
+            let h = 7;
+            let mut sim = ClusterSim::new(&cfg, seed);
+            let root = Xoshiro256pp::seed_from_u64(seed);
+            let mut streams: Vec<Xoshiro256pp> =
+                (0..cfg.workers).map(|n| root.split(n as u64)).collect();
+            let model = LatencyModel::from_config(&cfg);
+            for period in 0..5usize {
+                let step_idx = period;
+                let out = sim.local_sgd_period(h, threshold);
+                // the original algorithm: local-step-major loops
+                let mut wc = vec![0.0f64; cfg.workers];
+                let mut done = vec![0usize; cfg.workers];
+                for _local in 0..h {
+                    for n in 0..cfg.workers {
+                        let rng = &mut streams[n];
+                        let mut t =
+                            model.sample_straggler_at(n, step_idx, rng);
+                        t += model.sample_microbatch(n, rng);
+                        match threshold {
+                            Some(tau) => {
+                                if t < tau {
+                                    done[n] += 1;
+                                    wc[n] += t;
+                                } else {
+                                    wc[n] += tau;
+                                }
+                            }
+                            None => {
+                                done[n] += 1;
+                                wc[n] += t;
+                            }
+                        }
+                    }
+                }
+                assert_eq!(
+                    out.completed, done,
+                    "{strag:?} {threshold:?} period {period}"
+                );
+                for (w, (a, b)) in out.worker_compute.iter().zip(&wc).enumerate()
+                {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{strag:?} {threshold:?} period {period} worker {w}"
+                    );
+                }
             }
         }
     }
