@@ -28,13 +28,17 @@ const BYTES: f64 = 4.0 * 33.7e6; // `large` model fp32 gradient
 fn main() {
     println!("== collective topologies at N={N} ==\n");
 
-    // 1 + 2: schedule shape and event-driven timing.
+    // 1 + 2: schedule shape and event-driven timing, step-level and
+    // per-phase DropComm (the `deadline=` / `phase-deadline=` policy
+    // clauses) side by side.
     let mut arrivals = vec![0.0f64; N];
     arrivals[5] = 2.0; // one worker 2s late
+    let phase_offsets =
+        dropcompute::policy::cumulative_offsets(&[0.5, 0.05, 0.05]);
     let mut t = Table::new(
         "schedules and timing (one worker 2s late, deadline 0.5s)",
         &["topology", "phases", "msgs", "uniform T^c", "straggled",
-          "DropComm", "dropped"],
+          "DropComm", "dropped", "per-phase", "dropped"],
     );
     for kind in TopologyKind::ALL {
         let sched = kind.build(N);
@@ -49,6 +53,12 @@ fn main() {
         let (survivors, bounded) =
             model.bounded_wait_completion(&arrivals, 0.5);
         let dropped = survivors.iter().filter(|&&s| !s).count();
+        let (pp_survivors, per_phase) = model.per_phase_bounded_completion(
+            &arrivals,
+            &phase_offsets,
+            Some(&sched),
+        );
+        let pp_dropped = pp_survivors.iter().filter(|&&s| !s).count();
         t.row(vec![
             kind.name().to_string(),
             sched.phase_count().to_string(),
@@ -57,13 +67,17 @@ fn main() {
             f(straggled, 4),
             f(bounded, 4),
             dropped.to_string(),
+            f(per_phase, 4),
+            pp_dropped.to_string(),
         ]);
     }
     t.print();
     println!(
         "the straggler adds its full 2s to every synchronous collective;\n\
          the bounded wait sheds it once the 0.5s membership deadline\n\
-         passes and completes at collective speed from there.\n"
+         passes, and the per-phase budgets (0.5/0.05/0.05 — the\n\
+         `phase-deadline=` policy clause) additionally police the first\n\
+         phases of the collective itself.\n"
     );
 
     // 3: execute each topology's schedule on real threads and check it

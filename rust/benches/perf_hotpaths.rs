@@ -1,9 +1,10 @@
 //! §Perf — hot-path microbenchmarks for the L3 coordinator and runtime:
 //! ring AllReduce bandwidth, event-queue throughput, simulator step
 //! rate (compiled vs event-queue schedule timing), DropComm drop-path
-//! step rate (cached survivor schedules vs per-drop rebuild), batched
-//! noise sampling (enum vs boxed dispatch), parallel sweep scaling,
-//! Algorithm-2 sweep cost, PJRT grad-step + upload overhead.
+//! step rate (cached survivor schedules vs per-drop rebuild), policy
+//! dispatch (unified DropPolicy surface vs direct legacy calls),
+//! batched noise sampling (enum vs boxed dispatch), parallel sweep
+//! scaling, Algorithm-2 sweep cost, PJRT grad-step + upload overhead.
 //!
 //! Besides the human-readable table, emits `BENCH_perf.json` — one
 //! entry per path with `metric`, `value` and (where the path has a
@@ -22,6 +23,7 @@ use common::{header, paper_cluster};
 use dropcompute::analysis::choose_threshold;
 use dropcompute::collective::{ring_all_reduce, ring_all_reduce_naive, Communicator};
 use dropcompute::config::{NoiseKind, StragglerKind};
+use dropcompute::policy::DropPolicy;
 use dropcompute::report::{f, Table};
 use dropcompute::rng::{Distribution, Xoshiro256pp};
 use dropcompute::runtime::json::Json;
@@ -315,6 +317,64 @@ fn main() {
         gate("dropcomm_step_rate", t_before, t_after, 3.0, smoke);
     }
 
+    // ---- policy dispatch: unified DropPolicy vs direct legacy calls --
+    // The API-redesign regression gate: stepping through the installed
+    // DropPolicy (enum resolution paid at install, equality check per
+    // step_with call) must cost the same as the direct
+    // step_into(Some(tau)) it replaced. before = legacy direct call,
+    // after = policy-driven step; parity (not speedup) is the bar.
+    {
+        let mut cfg = paper_cluster(64);
+        cfg.topology = Some(TopologyKind::Torus { rows: 0 });
+        cfg.link_latency = 25e-6;
+        cfg.link_bandwidth = 12.5e9;
+        cfg.grad_bytes = 4.0 * 335e6;
+        let policy = DropPolicy::compute_tau(9.0)
+            .and(DropPolicy::comm_deadline(2.0));
+
+        // sanity: the two surfaces agree bitwise before timing
+        let mut a = ClusterSim::new(&cfg, 13).with_comm_drop(Some(2.0));
+        let mut b = ClusterSim::new(&cfg, 13);
+        for _ in 0..3 {
+            assert_eq!(
+                a.step(Some(9.0)).iter_time.to_bits(),
+                b.step_with(&policy).iter_time.to_bits(),
+                "policy-driven step must equal the direct legacy call"
+            );
+        }
+
+        let reps = if smoke { 15 } else { 60 };
+        let mut direct = ClusterSim::new(&cfg, 13).with_comm_drop(Some(2.0));
+        let mut out = StepOutcome::default();
+        let t_before = bench(reps, || {
+            direct.step_into(Some(9.0), &mut out);
+            out.iter_time
+        });
+        let mut unified = ClusterSim::new(&cfg, 13);
+        let t_after = bench(reps, || {
+            unified.step_with_into(&policy, &mut out);
+            out.iter_time
+        });
+        perf.record_ba(
+            "policy_dispatch_rate",
+            "steps/s (tau=9 + deadline=2, torus n64)",
+            1.0 / t_before,
+            1.0 / t_after,
+        );
+        let overhead = t_after / t_before;
+        if overhead > 1.15 {
+            let msg = format!(
+                "policy_dispatch_rate: unified surface x{overhead:.2} \
+                 slower than the direct calls it replaced"
+            );
+            if smoke {
+                println!("WARNING (smoke): {msg}");
+            } else {
+                panic!("{msg}");
+            }
+        }
+    }
+
     // ---- batched noise sampling: enum vs boxed dispatch --------------
     // The innermost simulation loop draws one noise sample per
     // micro-batch. before = Box<dyn Distribution> (indirect call per
@@ -471,6 +531,7 @@ fn main() {
         "sim_step_rate_ring_n64",
         "sim_step_rate_torus_n64",
         "dropcomm_step_rate",
+        "policy_dispatch_rate",
         "noise_fill_rate",
         "sweep_points_per_sec",
     ] {

@@ -12,13 +12,20 @@
 //! parser) of speedups vs the no-drop baseline — the comparison the
 //! paper's runtime model cannot express because it folds communication
 //! into one constant.
+//!
+//! A second section sweeps a single [`SweepSpec::policies`] axis per
+//! topology — none / tau / step-level deadline / OptiReduce-style
+//! per-phase deadline / composed — the ablation the legacy
+//! thresholds × deadlines grid could not spell.
 
 mod common;
 
 use common::{header, paper_cluster};
 use dropcompute::coordinator::ScaleRun;
+use dropcompute::policy::DropPolicy;
 use dropcompute::report::{f, Table};
 use dropcompute::runtime::json::Json;
+use dropcompute::sweep::SweepSpec;
 use dropcompute::topology::TopologyKind;
 
 /// DropComm membership deadline (s after first arrival). The paper's
@@ -149,6 +156,73 @@ fn main() {
         ));
         all_cells.push((kind.name(), cells));
     }
+    json.push_str("  ],\n");
+
+    // ---- policy ablation: one SweepSpec::policies axis ---------------
+    // The unified drop surface sweeps arms the legacy
+    // thresholds x deadlines grid cannot express — per-phase deadlines
+    // (OptiReduce-style mid-collective cutoffs) next to tau, step-level
+    // DropComm and their composition — as ONE axis, per topology.
+    let policy_axis: Vec<DropPolicy> = [
+        "none".to_string(),
+        "tau=9".to_string(),
+        format!("deadline={DEADLINE}"),
+        format!("phase-deadline={DEADLINE}/0.5/0.5"),
+        format!("tau=9+deadline={DEADLINE}"),
+    ]
+    .iter()
+    .map(|s| DropPolicy::parse(s).expect("bench policy specs are valid"))
+    .collect();
+    const POLICY_N: usize = 24;
+    json.push_str("  \"policy_ablation\": [\n");
+    let mut policy_tables = Vec::new();
+    for (ti, kind) in TopologyKind::ALL.iter().enumerate() {
+        let mut base = paper_cluster(POLICY_N);
+        base.topology = Some(*kind);
+        base.link_latency = 25e-6;
+        base.link_bandwidth = 12.5e9;
+        base.grad_bytes = 4.0 * 335e6;
+        let result = SweepSpec::new(base)
+            .workers(&[POLICY_N])
+            .policies(&policy_axis)
+            .seeds(&[0x90_11C + ti as u64])
+            .iters(30)
+            .jobs(0)
+            .progress(false)
+            .run();
+        let mut t = Table::new(
+            format!("policy ablation — {} topology, N={POLICY_N}", kind.name()),
+            &["policy", "iter time", "mb/s", "drop"],
+        );
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"points\": [\n",
+            kind.name()
+        ));
+        for (pi, p) in result.points.iter().enumerate() {
+            let spec = p.policy.as_deref().expect("policy axis");
+            t.row(vec![
+                spec.to_string(),
+                f(p.mean_iter_time, 3),
+                f(p.throughput, 1),
+                f(p.drop_rate * 100.0, 1),
+            ]);
+            json.push_str(&format!(
+                "      {{\"policy\": \"{}\", \"mean_iter_time\": {:.4}, \
+                 \"throughput\": {:.4}, \"drop_rate\": {:.4}}}{}\n",
+                spec,
+                p.mean_iter_time,
+                p.throughput,
+                p.drop_rate,
+                if pi + 1 < result.points.len() { "," } else { "" },
+            ));
+        }
+        t.print();
+        json.push_str(&format!(
+            "    ]}}{}\n",
+            if ti + 1 < TopologyKind::ALL.len() { "," } else { "" }
+        ));
+        policy_tables.push((kind.name(), result));
+    }
     json.push_str("  ]\n}\n");
 
     println!("JSON_BEGIN");
@@ -164,6 +238,51 @@ fn main() {
         assert_eq!(
             t.get("points").unwrap().as_arr().unwrap().len(),
             ns.len()
+        );
+    }
+    // ...including the policy-axis ablation, with the per-phase arm
+    // present for every topology.
+    let pa = doc.get("policy_ablation").unwrap().as_arr().unwrap();
+    assert_eq!(pa.len(), TopologyKind::ALL.len());
+    for t in pa {
+        let pts = t.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), policy_axis.len());
+        assert!(
+            pts.iter().any(|p| p
+                .get("policy")
+                .and_then(Json::as_str)
+                .is_some_and(|s| s.starts_with("phase-deadline="))),
+            "per-phase arm missing from the policy ablation"
+        );
+    }
+    // Shape: both arms share the seed (paired arrivals), and the
+    // per-phase arm's checkpoints are a superset of the step-level
+    // entry check — so it can only drop at least as much, while its
+    // extra mid-collective cutoffs must not collapse throughput.
+    for (name, result) in &policy_tables {
+        let by = |prefix: &str| {
+            result
+                .points
+                .iter()
+                .find(|p| {
+                    p.policy.as_deref().is_some_and(|s| s.starts_with(prefix))
+                })
+                .expect("axis arm present")
+        };
+        let step = by("deadline=");
+        let phase = by("phase-deadline=");
+        assert!(
+            phase.drop_rate >= step.drop_rate - 1e-12,
+            "{name}: per-phase checkpoints subsume the entry check \
+             ({} vs {})",
+            phase.drop_rate,
+            step.drop_rate
+        );
+        assert!(
+            phase.throughput > 0.5 * step.throughput,
+            "{name}: per-phase arm collapsed ({} vs {})",
+            phase.throughput,
+            step.throughput
         );
     }
 
@@ -197,8 +316,10 @@ fn main() {
         );
     }
     println!(
-        "\nSHAPE CHECK PASSED: {} topologies x {} sizes x 4 variants",
+        "\nSHAPE CHECK PASSED: {} topologies x {} sizes x 4 variants, \
+         + policy axis ({} arms incl. per-phase deadlines)",
         all_cells.len(),
-        ns.len()
+        ns.len(),
+        policy_axis.len()
     );
 }

@@ -272,6 +272,11 @@ pub struct SweepConfig {
     pub thresholds: Vec<f64>,
     /// DropComm bounded-wait deadlines (0.0 = wait for everyone).
     pub deadlines: Vec<f64>,
+    /// Policy axis (`[policy] sweep = ["none", "tau=9", ...]`): when
+    /// non-empty it subsumes `thresholds`/`deadlines` — the grid runs
+    /// `workers × policies × seeds` over parsed
+    /// [`crate::policy::DropPolicy`] specs.
+    pub policies: Vec<crate::policy::DropPolicy>,
     /// Seed axis (same seed across arms = paired comparisons).
     pub seeds: Vec<u64>,
     /// Progress/ETA reporting to stderr.
@@ -286,6 +291,7 @@ impl Default for SweepConfig {
             workers: vec![16],
             thresholds: vec![0.0],
             deadlines: vec![0.0],
+            policies: Vec::new(),
             seeds: vec![0],
             progress: true,
         }
@@ -300,6 +306,10 @@ pub struct Config {
     pub train: TrainConfig,
     pub data: DataConfig,
     pub sweep: SweepConfig,
+    /// Explicit run-level drop policy (`[policy] spec = "..."`). `None`
+    /// falls back to the legacy `[comm] drop_deadline` surface — see
+    /// [`Config::effective_policy`].
+    pub policy: Option<crate::policy::DropPolicy>,
     /// Artifact root directory.
     pub artifacts_dir: String,
 }
@@ -312,6 +322,7 @@ impl Default for Config {
             train: TrainConfig::default(),
             data: DataConfig::default(),
             sweep: SweepConfig::default(),
+            policy: None,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -434,6 +445,27 @@ impl Config {
             float_list(doc, "sweep.deadlines", &c.sweep.deadlines)?;
         c.sweep.seeds = int_list(doc, "sweep.seeds", &c.sweep.seeds)?;
 
+        // [policy] — the unified drop-decision surface
+        // (crate::policy::DropPolicy). `spec` drives single runs;
+        // `sweep` is the grid's policy axis. The legacy [comm]
+        // drop_deadline keeps working: Config::effective_policy folds
+        // it in when no explicit spec is given.
+        c.policy = match doc.get("policy.spec") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    Error::Config("policy.spec: expected string".into())
+                })?;
+                Some(crate::policy::DropPolicy::parse(s)?)
+            }
+        };
+        if let Some(specs) = str_list(doc, "policy.sweep")? {
+            c.sweep.policies = specs
+                .iter()
+                .map(|s| crate::policy::DropPolicy::parse(s))
+                .collect::<Result<_>>()?;
+        }
+
         // [data]
         c.data.zipf_s = doc.float_or("data.zipf_s", 1.1);
         c.data.markov_weight = doc.float_or("data.markov_weight", 0.7);
@@ -443,6 +475,17 @@ impl Config {
 
         c.validate()?;
         Ok(c)
+    }
+
+    /// The run-level drop policy: the explicit `[policy] spec` when
+    /// given, else the legacy `[comm] drop_deadline` surfaced as a
+    /// [`crate::policy::DropPolicy::CommDeadline`] (back-compat), else
+    /// no drops.
+    pub fn effective_policy(&self) -> crate::policy::DropPolicy {
+        match &self.policy {
+            Some(p) => p.clone(),
+            None => crate::policy::DropPolicy::from_cluster(&self.cluster),
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -528,6 +571,27 @@ fn int_list<T: TryFrom<i64> + Clone>(
             })
             .collect(),
     }
+}
+
+/// `key = ["a", "b"]` (or a bare string, treated as a one-element
+/// list) as strings; `None` when the key is absent.
+fn str_list(doc: &Document, key: &str) -> Result<Option<Vec<String>>> {
+    let Some(v) = doc.get(key) else { return Ok(None) };
+    let items: Vec<&Value> = match v.as_array() {
+        Some(arr) => arr.iter().collect(),
+        None => vec![v],
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        out.push(
+            item.as_str()
+                .ok_or_else(|| {
+                    Error::Config(format!("{key}: expected string list"))
+                })?
+                .to_string(),
+        );
+    }
+    Ok(Some(out))
 }
 
 fn float_list(doc: &Document, key: &str, default: &[f64]) -> Result<Vec<f64>> {
@@ -727,6 +791,57 @@ mod tests {
             "[sweep]\niters = -40",
             "[sweep]\nthresholds = [-1.0]",
             "[sweep]\nworkers = []",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(Config::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn policy_section_roundtrip_and_comm_back_compat() {
+        use crate::policy::DropPolicy;
+        let doc = Document::parse(
+            r#"
+            [policy]
+            spec = "tau=9,between+deadline=3"
+            sweep = ["none", "tau=9", "phase-deadline=1.5/0.5"]
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        let want = DropPolicy::parse("tau=9,between+deadline=3").unwrap();
+        assert_eq!(c.policy, Some(want.clone()));
+        assert_eq!(c.effective_policy(), want);
+        assert_eq!(c.sweep.policies.len(), 3);
+        assert_eq!(c.sweep.policies[2].spec(), "phase-deadline=1.5/0.5");
+
+        // back-compat: the [comm] deadline alone surfaces as a policy
+        let doc = Document::parse("[comm]\ndrop_deadline = 1.5").unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.policy, None);
+        assert_eq!(
+            c.effective_policy(),
+            DropPolicy::CommDeadline { deadline: 1.5 }
+        );
+        // an explicit [policy] spec wins over the [comm] deadline
+        let doc = Document::parse(
+            "[comm]\ndrop_deadline = 1.5\n[policy]\nspec = \"deadline=3\"",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(
+            c.effective_policy(),
+            DropPolicy::CommDeadline { deadline: 3.0 }
+        );
+        // no policy anywhere: no drops
+        assert!(Config::default().effective_policy().is_none());
+
+        // bad specs rejected at the config boundary
+        for bad in [
+            "[policy]\nspec = \"wat=1\"",
+            "[policy]\nspec = 3",
+            "[policy]\nsweep = [\"tau=-1\"]",
+            "[policy]\nsweep = [3]",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(Config::from_doc(&doc).is_err(), "{bad}");

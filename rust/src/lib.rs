@@ -10,8 +10,10 @@
 //! analytical runtime model (Eqs. 4/5/6/11), the topology-aware
 //! collective engine ([`topology`]: pluggable ring / tree /
 //! hierarchical / torus schedules plus the bounded-wait DropComm
-//! all-reduce), and the deterministic parallel scenario-sweep engine
-//! ([`sweep`]).
+//! all-reduce), the unified drop-decision surface
+//! ([`policy::DropPolicy`]: compute-tau, step-level and per-phase
+//! DropComm deadlines, Local-SGD periods, composed), and the
+//! deterministic parallel scenario-sweep engine ([`sweep`]).
 //!
 //! Layers 2/1 (build-time python): JAX transformer fwd/bwd calling
 //! Pallas kernels, AOT-lowered to HLO text loaded by [`runtime`].
@@ -23,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod policy;
 pub mod report;
 pub mod rng;
 pub mod runtime;

@@ -18,6 +18,7 @@ use dropcompute::analysis::{self, Setting};
 use dropcompute::cli::{Args, Spec};
 use dropcompute::config::Config;
 use dropcompute::coordinator::ScaleRun;
+use dropcompute::policy::DropPolicy;
 use dropcompute::report::{f, pct, Table};
 use dropcompute::sim::ClusterSim;
 use dropcompute::train::{LocalSgdTrainer, Trainer};
@@ -34,10 +35,23 @@ SUBCOMMANDS:
   simulate    timing-only cluster simulation      [--iters N] [--tau T]
   tune        Algorithm 2 threshold sweep         [--iters N]
   scale       throughput vs N sweep               [--workers 8,16,...] [--jobs J]
-  sweep       parallel scenario grid: workers x tau x deadline x seed
+  sweep       parallel scenario grid: workers x tau x deadline x seed,
+              or workers x policy x seed with --policy
               [--workers 8,16] [--thresholds 0,2.5] [--deadlines 0,3]
-              [--seeds 1,2,3] [--iters N] [--jobs J] [--out dir]
+              [--policy SPEC]... [--seeds 1,2,3] [--iters N] [--jobs J]
+              [--out dir]
   analyze     closed-form E[T], E[M~], S_eff      [--tau T]
+
+Drop policies (simulate/sweep; the one drop-decision surface):
+  --policy SPEC
+              clause[+clause]... with clauses
+                none | tau=T[,preempt|,between] | deadline=D |
+                phase-deadline=B0[/B1...]       | local-sgd=H
+              e.g. `tau=9+deadline=3`, `phase-deadline=1.5/0.5/0.5`.
+              Repeat --policy in `sweep` for a policy axis (subsumes
+              --thresholds/--deadlines). Defaults to the `[policy]`
+              config section; legacy --tau/--comm-drop-deadline compose
+              into the same surface.
 
 simulate/scale/sweep also take the topology-aware collective model:
   --topology fixed|ring|tree|hierarchical[:group]|torus[:rows]
@@ -61,7 +75,7 @@ fn main() -> ExitCode {
         .value_keys(&[
             "config", "set", "out", "iters", "tau", "periods", "workers",
             "grid", "topology", "comm-drop-deadline", "jobs", "thresholds",
-            "deadlines", "seeds",
+            "deadlines", "seeds", "policy",
         ]);
     let args = match spec.parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -174,38 +188,54 @@ fn comm_overrides(
 fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
     let iters = args.usize_or("iters", 100)?;
     let tau = args.f64_or("tau", 0.0)?;
-    let threshold = if tau > 0.0 { Some(tau) } else { None };
     let mut cluster = cfg.cluster.clone();
     comm_overrides(args, &mut cluster)?;
-    let mut sim = ClusterSim::new(&cluster, cfg.train.seed);
+    // one drop surface: an explicit --policy replaces the config-level
+    // policy ([policy] spec, which itself replaces the [comm]
+    // deadline); the legacy --tau and --comm-drop-deadline flags
+    // compose on top of whichever applies, as the help text promises
+    let flag_deadline = args.f64_or("comm-drop-deadline", 0.0)?;
+    let (mut policy, deadline_folded) = match args.get("policy") {
+        Some(spec) => (DropPolicy::parse(spec)?, false),
+        None => match &cfg.policy {
+            Some(p) => (p.clone(), false),
+            // from_cluster reads cluster.comm_drop_deadline, which
+            // comm_overrides already updated from the flag
+            None => (DropPolicy::from_cluster(&cluster), true),
+        },
+    };
+    if !deadline_folded && flag_deadline > 0.0 {
+        policy = policy.and(DropPolicy::comm_deadline(flag_deadline));
+    }
+    if tau > 0.0 {
+        policy = policy.and(DropPolicy::compute_tau(tau));
+    }
+    let mut sim =
+        ClusterSim::new(&cluster, cfg.train.seed).with_policy(policy.clone());
+    let mut out = dropcompute::sim::StepOutcome::default();
     let mut iter_w = dropcompute::stats::Welford::new();
     let mut completed = 0usize;
     for _ in 0..iters {
-        let out = sim.step(threshold);
+        sim.step_installed_into(&mut out);
         iter_w.push(out.iter_time);
         completed += out.total_completed();
     }
-    let scheduled = iters * cfg.cluster.workers * cfg.cluster.accumulations;
+    // a Local-SGD policy schedules one micro-batch per local step
+    let per_iter =
+        policy.local_sgd_h().unwrap_or(cfg.cluster.accumulations);
+    let scheduled = iters * cfg.cluster.workers * per_iter;
     let mut t = Table::new(
         format!("simulate N={} M={}", cfg.cluster.workers, cfg.cluster.accumulations),
         &["metric", "value"],
     );
-    let drop_note = if cluster.comm_drop_deadline > 0.0 {
-        format!(", DropComm deadline {:.3}s", cluster.comm_drop_deadline)
-    } else {
-        String::new()
-    };
     t.row(vec![
         "comm model".into(),
         match cluster.topology {
-            Some(kind) => {
-                format!("{} (event-driven{drop_note})", kind.name())
-            }
-            None => {
-                format!("fixed T^c = {:.3}s{drop_note}", cluster.comm_latency)
-            }
+            Some(kind) => format!("{} (event-driven)", kind.name()),
+            None => format!("fixed T^c = {:.3}s", cluster.comm_latency),
         },
     ]);
+    t.row(vec!["drop policy".into(), policy.spec()]);
     t.row(vec!["iterations".into(), iters.to_string()]);
     t.row(vec!["mean iter time".into(), f(iter_w.mean(), 3)]);
     t.row(vec!["iter time std".into(), f(iter_w.std(), 3)]);
@@ -318,6 +348,24 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
     let sc = &cfg.sweep;
     let workers = csv_list::<usize>(args, "workers", &sc.workers)?;
     let thresholds = csv_list::<f64>(args, "thresholds", &sc.thresholds)?;
+    // policy axis precedence: repeated --policy flags, else the
+    // `[policy] sweep` config axis — unless explicit legacy axis flags
+    // (--thresholds/--deadlines) override it, so no explicit flag is
+    // ever silently discarded. When active, the policy axis subsumes
+    // the thresholds/deadlines axes entirely.
+    let policy_args = args.get_all("policy");
+    let legacy_axis_flags =
+        args.get("thresholds").is_some() || args.get("deadlines").is_some();
+    let policies: Vec<DropPolicy> = if !policy_args.is_empty() {
+        policy_args
+            .iter()
+            .map(|s| DropPolicy::parse(s))
+            .collect::<Result<_>>()?
+    } else if legacy_axis_flags {
+        Vec::new()
+    } else {
+        sc.policies.clone()
+    };
     // deadline axis precedence: explicit --deadlines, else a non-zero
     // cluster deadline (from --comm-drop-deadline or the [comm] config
     // key) pins the axis to that one value — neither source may be
@@ -341,41 +389,73 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         .workers(&workers)
         .thresholds(&thresholds)
         .deadlines(&deadlines)
+        .policies(&policies)
         .seeds(&seeds)
         .iters(args.usize_or("iters", sc.iters)?)
         .jobs(args.usize_or("jobs", sc.jobs)?)
         .progress(sc.progress && !args.flag("quiet"));
     let n = spec.len();
     let jobs = dropcompute::sweep::resolve_jobs(spec.jobs);
-    println!(
-        "sweep: {} points ({} workers x {} thresholds x {} deadlines x {} \
-         seeds), {} iters each, {jobs} jobs",
-        n,
-        workers.len(),
-        thresholds.len(),
-        deadlines.len(),
-        seeds.len(),
-        spec.iters,
-    );
+    if policies.is_empty() {
+        println!(
+            "sweep: {} points ({} workers x {} thresholds x {} deadlines x \
+             {} seeds), {} iters each, {jobs} jobs",
+            n,
+            workers.len(),
+            thresholds.len(),
+            deadlines.len(),
+            seeds.len(),
+            spec.iters,
+        );
+    } else {
+        println!(
+            "sweep: {} points ({} workers x {} policies x {} seeds), \
+             {} iters each, {jobs} jobs",
+            n,
+            workers.len(),
+            policies.len(),
+            seeds.len(),
+            spec.iters,
+        );
+    }
     let t0 = std::time::Instant::now();
     let result = spec.run();
     let secs = t0.elapsed().as_secs_f64();
-    let mut t = Table::new(
-        "scenario grid",
-        &["N", "tau", "deadline", "seed", "iter time", "mb/s", "drop"],
-    );
+    let policy_axis = !policies.is_empty();
+    let mut t = if policy_axis {
+        Table::new(
+            "scenario grid",
+            &["N", "policy", "seed", "iter time", "mb/s", "drop"],
+        )
+    } else {
+        Table::new(
+            "scenario grid",
+            &["N", "tau", "deadline", "seed", "iter time", "mb/s", "drop"],
+        )
+    };
     // keep terminal output bounded on huge grids; the JSON has all points
     let stride = (result.points.len() / 48).max(1);
     for p in result.points.iter().step_by(stride) {
-        t.row(vec![
-            p.workers.to_string(),
-            f(p.threshold, 2),
-            f(p.deadline, 2),
-            p.seed.to_string(),
-            f(p.mean_iter_time, 3),
-            f(p.throughput, 1),
-            pct(p.drop_rate),
-        ]);
+        if policy_axis {
+            t.row(vec![
+                p.workers.to_string(),
+                p.policy.clone().unwrap_or_else(|| "none".into()),
+                p.seed.to_string(),
+                f(p.mean_iter_time, 3),
+                f(p.throughput, 1),
+                pct(p.drop_rate),
+            ]);
+        } else {
+            t.row(vec![
+                p.workers.to_string(),
+                f(p.threshold, 2),
+                f(p.deadline, 2),
+                p.seed.to_string(),
+                f(p.mean_iter_time, 3),
+                f(p.throughput, 1),
+                pct(p.drop_rate),
+            ]);
+        }
     }
     t.print();
     if stride > 1 {

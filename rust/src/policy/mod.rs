@@ -1,0 +1,721 @@
+//! `DropPolicy` — the single drop-decision surface.
+//!
+//! DropCompute's core move is to bound each worker's step time; the
+//! codebase grew four disconnected knobs for it: the compute threshold
+//! `tau` (Algorithm 1), the step-level DropComm deadline (bounded-wait
+//! collective membership), Local-SGD's period `H`, and — new here —
+//! OptiReduce-style *per-phase* collective deadlines. [`DropPolicy`]
+//! folds them into one closed, composable value (mirroring the
+//! [`crate::sim::NoiseSampler`] redesign: a closed enum, no trait
+//! objects, every consumer dispatches on the same type):
+//!
+//! * [`DropPolicy::ComputeTau`] — the paper's method: preempt compute
+//!   at `tau`, drop the unfinished micro-batches;
+//! * [`DropPolicy::CommDeadline`] — step-level DropComm: collective
+//!   membership closes `deadline` after the first arrival;
+//! * [`DropPolicy::PerPhaseDeadline`] — per-phase cutoffs evaluated
+//!   inside the compiled schedule pass (and the event-queue oracle):
+//!   checkpoint `p` drops workers not ready to enter phase `p` by
+//!   `first_arrival + budgets[0] + ... + budgets[p]`;
+//! * [`DropPolicy::LocalSgdPeriod`] — measure Local-SGD periods of `H`
+//!   local steps (App. B.3) instead of synchronous steps;
+//! * [`DropPolicy::Composed`] — any combination (e.g. compute `tau` +
+//!   comm deadline = the topology ablation's "both" arm).
+//!
+//! Every variant answers the same two questions — *when does compute
+//! get cut?* ([`DropPolicy::compute_cutoff`]) and *when does collective
+//! phase `p` close its membership?* ([`DropPolicy::comm_cutoff`]) — and
+//! flattens to an [`EffectivePolicy`] that `ClusterSim` installs once
+//! (cumulative phase offsets precomputed, nothing allocated per step).
+//!
+//! Policies round-trip through a spec-string grammar shared by the CLI
+//! (`--policy`), the `[policy]` config section and the sweep JSON:
+//!
+//! ```text
+//! spec   := clause ('+' clause)*
+//! clause := "none"
+//!         | "tau=" f64 [",preempt" | ",between"]
+//!         | "deadline=" f64
+//!         | "phase-deadline=" f64 ('/' f64)*
+//!         | "local-sgd=" int
+//! ```
+//!
+//! e.g. `tau=9`, `deadline=3`, `tau=9,between+deadline=3`,
+//! `phase-deadline=1.5/0.5/0.5`, `local-sgd=4+tau=0.9`.
+
+use crate::config::ClusterConfig;
+use crate::sim::PreemptionMode;
+use crate::util::{Error, Result};
+
+/// One drop-decision policy: the closed union of every way this crate
+/// can bound a synchronous step (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DropPolicy {
+    /// No drops: vanilla synchronous training.
+    None,
+    /// Algorithm 1: preempt compute at `tau`; unfinished micro-batches
+    /// are dropped. `preemption` picks the theory model (stop exactly
+    /// at `tau`) or the reference-implementation model (finish the
+    /// crossing micro-batch).
+    ComputeTau { tau: f64, preemption: PreemptionMode },
+    /// Step-level DropComm: collective membership closes `deadline`
+    /// seconds after the first arrival; later workers are excluded and
+    /// their step contribution dropped.
+    CommDeadline { deadline: f64 },
+    /// Per-phase DropComm (à la OptiReduce): checkpoint `p` closes at
+    /// `first_arrival + budgets[0] + ... + budgets[p]`; a worker not
+    /// ready to *enter* phase `p` by that instant is excluded. With a
+    /// single lumped budget this is exactly [`DropPolicy::CommDeadline`]
+    /// (property-tested); extra budgets add checkpoints deeper into the
+    /// collective, catching workers stalled by slow dependency chains
+    /// that a step-level deadline cannot see. Phases beyond
+    /// `budgets.len()` are unconstrained.
+    PerPhaseDeadline { budgets: Vec<f64> },
+    /// Local-SGD (App. B.3): one period = `h` local steps of one
+    /// micro-batch each, then a sync. Composes with `ComputeTau` (the
+    /// threshold then applies per local step).
+    LocalSgdPeriod { h: usize },
+    /// Several policies applied together; cutoffs merge tightest-wins
+    /// (min over components).
+    Composed(Vec<DropPolicy>),
+}
+
+/// A [`DropPolicy`] flattened to the knobs one simulated step consumes.
+/// `ClusterSim` computes this once per installed policy, so stepping
+/// pays no per-step resolution cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EffectivePolicy {
+    /// Compute threshold (None = no compute drops).
+    pub tau: Option<f64>,
+    /// Preemption model for `tau` (meaningless without one).
+    pub preemption: PreemptionMode,
+    /// Step-level DropComm deadline (None = wait for everyone).
+    pub step_deadline: Option<f64>,
+    /// Cumulative per-phase cutoff offsets (`offsets[p]` = seconds
+    /// after the first arrival by which phase `p`'s entry closes;
+    /// empty = no per-phase policy). Already clamped non-negative.
+    pub phase_offsets: Vec<f64>,
+    /// Local-SGD period H (None = synchronous steps).
+    pub local_sgd_h: Option<usize>,
+}
+
+impl Default for EffectivePolicy {
+    fn default() -> Self {
+        Self {
+            tau: None,
+            preemption: PreemptionMode::Preemptive,
+            step_deadline: None,
+            phase_offsets: Vec::new(),
+            local_sgd_h: None,
+        }
+    }
+}
+
+impl EffectivePolicy {
+    /// The per-phase cutoff offsets with a step-level deadline folded
+    /// into the entry checkpoint — both express the same membership
+    /// rule at phase 0, so the tighter one wins there. Empty when no
+    /// per-phase policy is active (a pure step deadline stays on the
+    /// step-level path).
+    pub fn merged_phase_offsets(&self) -> Vec<f64> {
+        let mut offsets = self.phase_offsets.clone();
+        if let (Some(first), Some(d)) = (offsets.first_mut(), self.step_deadline)
+        {
+            let d = d.max(0.0);
+            if d < *first {
+                *first = d;
+            }
+        }
+        offsets
+    }
+}
+
+/// Cumulative cutoff offsets from raw per-phase budgets: entry `p` is
+/// `max(b_0,0) + ... + max(b_p,0)`. The single source of the cumsum —
+/// the compiled scan, the event-queue oracle and the tests all consume
+/// offsets produced here, so the f64 addition order (and therefore
+/// every bit) agrees everywhere.
+pub fn cumulative_offsets(budgets: &[f64]) -> Vec<f64> {
+    let mut cum = 0.0f64;
+    budgets
+        .iter()
+        .map(|&b| {
+            cum += b.max(0.0);
+            cum
+        })
+        .collect()
+}
+
+impl DropPolicy {
+    /// The no-drop policy (named constructor for symmetry).
+    pub fn none() -> Self {
+        DropPolicy::None
+    }
+
+    /// Algorithm 1 with the theory (preemptive) timeout model.
+    pub fn compute_tau(tau: f64) -> Self {
+        DropPolicy::ComputeTau { tau, preemption: PreemptionMode::Preemptive }
+    }
+
+    /// Step-level DropComm.
+    pub fn comm_deadline(deadline: f64) -> Self {
+        DropPolicy::CommDeadline { deadline }
+    }
+
+    /// Per-phase DropComm with the given raw budgets.
+    pub fn per_phase_deadline(budgets: Vec<f64>) -> Self {
+        DropPolicy::PerPhaseDeadline { budgets }
+    }
+
+    /// Local-SGD periods of `h` local steps.
+    pub fn local_sgd(h: usize) -> Self {
+        DropPolicy::LocalSgdPeriod { h }
+    }
+
+    /// Set the preemption model on every `ComputeTau` clause.
+    pub fn with_preemption(mut self, mode: PreemptionMode) -> Self {
+        self.set_preemption(mode);
+        self
+    }
+
+    fn set_preemption(&mut self, mode: PreemptionMode) {
+        match self {
+            DropPolicy::ComputeTau { preemption, .. } => *preemption = mode,
+            DropPolicy::Composed(ps) => {
+                for p in ps {
+                    p.set_preemption(mode);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Compose two policies (tightest cutoff wins where they overlap).
+    /// `None` clauses vanish; nested `Composed`s flatten.
+    pub fn and(self, other: DropPolicy) -> Self {
+        let mut parts = Vec::new();
+        self.flatten_into(&mut parts);
+        other.flatten_into(&mut parts);
+        match parts.len() {
+            0 => DropPolicy::None,
+            1 => parts.pop().expect("one part"),
+            _ => DropPolicy::Composed(parts),
+        }
+    }
+
+    fn flatten_into(self, out: &mut Vec<DropPolicy>) {
+        match self {
+            DropPolicy::None => {}
+            DropPolicy::Composed(ps) => {
+                for p in ps {
+                    p.flatten_into(out);
+                }
+            }
+            p => out.push(p),
+        }
+    }
+
+    /// The legacy config surface as a policy: a positive
+    /// `comm.drop_deadline` is a step-level [`DropPolicy::CommDeadline`]
+    /// (0 keeps the synchronous wait-for-everyone collective, as the
+    /// `[comm]` section always meant).
+    pub fn from_cluster(cfg: &ClusterConfig) -> Self {
+        if cfg.comm_drop_deadline > 0.0 {
+            DropPolicy::CommDeadline { deadline: cfg.comm_drop_deadline }
+        } else {
+            DropPolicy::None
+        }
+    }
+
+    /// Is this (recursively) the no-drop policy?
+    pub fn is_none(&self) -> bool {
+        match self {
+            DropPolicy::None => true,
+            DropPolicy::Composed(ps) => ps.iter().all(|p| p.is_none()),
+            _ => false,
+        }
+    }
+
+    /// Uniform compute-side query: the threshold at which compute is
+    /// cut, with its preemption model. Composed policies answer with
+    /// the tightest `tau` (first clause wins ties).
+    pub fn compute_cutoff(&self) -> Option<(f64, PreemptionMode)> {
+        match self {
+            DropPolicy::ComputeTau { tau, preemption } => {
+                Some((*tau, *preemption))
+            }
+            DropPolicy::Composed(ps) => {
+                let mut best: Option<(f64, PreemptionMode)> = None;
+                for p in ps {
+                    if let Some((tau, mode)) = p.compute_cutoff() {
+                        if best.map_or(true, |(t, _)| tau < t) {
+                            best = Some((tau, mode));
+                        }
+                    }
+                }
+                best
+            }
+            _ => None,
+        }
+    }
+
+    /// Uniform comm-side query: the absolute instant at which phase
+    /// `phase`'s entry membership closes, given the collective's first
+    /// arrival. `None` = this policy does not constrain that phase.
+    /// Step-level deadlines constrain phase 0 only; per-phase budgets
+    /// constrain phases `0..budgets.len()`; Composed takes the min.
+    pub fn comm_cutoff(&self, phase: usize, first: f64) -> Option<f64> {
+        match self {
+            DropPolicy::CommDeadline { deadline } => {
+                (phase == 0).then(|| first + deadline.max(0.0))
+            }
+            DropPolicy::PerPhaseDeadline { budgets } => {
+                if phase < budgets.len() {
+                    // same cumsum as the install path — one source of
+                    // truth for the offset arithmetic
+                    cumulative_offsets(&budgets[..=phase])
+                        .last()
+                        .map(|&cum| first + cum)
+                } else {
+                    None
+                }
+            }
+            DropPolicy::Composed(ps) => ps
+                .iter()
+                .filter_map(|p| p.comm_cutoff(phase, first))
+                .fold(None, |acc, c| {
+                    Some(match acc {
+                        Some(a) if a <= c => a,
+                        _ => c,
+                    })
+                }),
+            _ => None,
+        }
+    }
+
+    /// Local-SGD period, if this policy measures periods.
+    pub fn local_sgd_h(&self) -> Option<usize> {
+        match self {
+            DropPolicy::LocalSgdPeriod { h } => Some(*h),
+            DropPolicy::Composed(ps) => {
+                ps.iter().find_map(|p| p.local_sgd_h())
+            }
+            _ => None,
+        }
+    }
+
+    /// Flatten to the knobs one step consumes (see [`EffectivePolicy`]).
+    pub fn effective(&self) -> EffectivePolicy {
+        let mut eff = EffectivePolicy::default();
+        self.fold_into(&mut eff);
+        eff
+    }
+
+    fn fold_into(&self, eff: &mut EffectivePolicy) {
+        match self {
+            DropPolicy::None => {}
+            DropPolicy::ComputeTau { tau, preemption } => {
+                if eff.tau.map_or(true, |t| *tau < t) {
+                    eff.tau = Some(*tau);
+                    eff.preemption = *preemption;
+                }
+            }
+            DropPolicy::CommDeadline { deadline } => {
+                let d = deadline.max(0.0);
+                eff.step_deadline =
+                    Some(eff.step_deadline.map_or(d, |x| x.min(d)));
+            }
+            DropPolicy::PerPhaseDeadline { budgets } => {
+                let offs = cumulative_offsets(budgets);
+                if eff.phase_offsets.is_empty() {
+                    eff.phase_offsets = offs;
+                } else {
+                    // elementwise tightest-wins; the longer tail keeps
+                    // its extra checkpoints
+                    for (i, o) in offs.iter().enumerate() {
+                        if i < eff.phase_offsets.len() {
+                            if *o < eff.phase_offsets[i] {
+                                eff.phase_offsets[i] = *o;
+                            }
+                        } else {
+                            eff.phase_offsets.push(*o);
+                        }
+                    }
+                }
+            }
+            DropPolicy::LocalSgdPeriod { h } => {
+                if eff.local_sgd_h.is_none() {
+                    eff.local_sgd_h = Some(*h);
+                }
+            }
+            DropPolicy::Composed(ps) => {
+                for p in ps {
+                    p.fold_into(eff);
+                }
+            }
+        }
+    }
+
+    /// Structural validation (the config/CLI boundary calls this; the
+    /// builders don't, so programmatic construction stays infallible).
+    pub fn validate(&self) -> Result<()> {
+        self.validate_inner()?;
+        let mut h_count = 0usize;
+        self.count_local_sgd(&mut h_count);
+        if h_count > 1 {
+            return Err(Error::Config(
+                "policy: at most one local-sgd clause".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    fn count_local_sgd(&self, count: &mut usize) {
+        match self {
+            DropPolicy::LocalSgdPeriod { .. } => *count += 1,
+            DropPolicy::Composed(ps) => {
+                for p in ps {
+                    p.count_local_sgd(count);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn validate_inner(&self) -> Result<()> {
+        match self {
+            DropPolicy::None => Ok(()),
+            DropPolicy::ComputeTau { tau, .. } => {
+                if !(tau.is_finite() && *tau > 0.0) {
+                    return Err(Error::Config(format!(
+                        "policy: tau must be finite and > 0, got {tau}"
+                    )));
+                }
+                Ok(())
+            }
+            DropPolicy::CommDeadline { deadline } => {
+                if !(deadline.is_finite() && *deadline >= 0.0) {
+                    return Err(Error::Config(format!(
+                        "policy: deadline must be finite and >= 0, got {deadline}"
+                    )));
+                }
+                Ok(())
+            }
+            DropPolicy::PerPhaseDeadline { budgets } => {
+                if budgets.is_empty() {
+                    return Err(Error::Config(
+                        "policy: phase-deadline needs at least one budget"
+                            .into(),
+                    ));
+                }
+                for b in budgets {
+                    if !(b.is_finite() && *b >= 0.0) {
+                        return Err(Error::Config(format!(
+                            "policy: phase budgets must be finite and >= 0, \
+                             got {b}"
+                        )));
+                    }
+                }
+                Ok(())
+            }
+            DropPolicy::LocalSgdPeriod { h } => {
+                if *h == 0 {
+                    return Err(Error::Config(
+                        "policy: local-sgd period must be >= 1".into(),
+                    ));
+                }
+                Ok(())
+            }
+            DropPolicy::Composed(ps) => {
+                if ps.is_empty() {
+                    return Err(Error::Config(
+                        "policy: empty composition".into(),
+                    ));
+                }
+                for p in ps {
+                    p.validate_inner()?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Parse a spec string (see the module-docs grammar). Validates.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(Error::Config("policy: empty spec".into()));
+        }
+        let mut parts = Vec::new();
+        for clause in spec.split('+') {
+            let clause = clause.trim();
+            let parsed = Self::parse_clause(clause)?;
+            parsed.flatten_into(&mut parts);
+        }
+        let policy = match parts.len() {
+            0 => DropPolicy::None,
+            1 => parts.pop().expect("one part"),
+            _ => DropPolicy::Composed(parts),
+        };
+        policy.validate()?;
+        Ok(policy)
+    }
+
+    fn parse_clause(clause: &str) -> Result<Self> {
+        if clause.eq_ignore_ascii_case("none") {
+            return Ok(DropPolicy::None);
+        }
+        let (key, value) = clause.split_once('=').ok_or_else(|| {
+            Error::Config(format!(
+                "policy: bad clause `{clause}` (want none, tau=, deadline=, \
+                 phase-deadline=, local-sgd=)"
+            ))
+        })?;
+        let bad_num = |v: &str| {
+            Error::Config(format!("policy: bad number `{v}` in `{clause}`"))
+        };
+        match key.trim() {
+            "tau" => {
+                let (num, mode) = match value.split_once(',') {
+                    None => (value, PreemptionMode::Preemptive),
+                    Some((num, m)) => {
+                        let mode = match m.trim() {
+                            "preempt" | "preemptive" => {
+                                PreemptionMode::Preemptive
+                            }
+                            "between" | "between-accums" => {
+                                PreemptionMode::BetweenAccumulations
+                            }
+                            other => {
+                                return Err(Error::Config(format!(
+                                    "policy: unknown preemption `{other}` \
+                                     (want preempt or between)"
+                                )))
+                            }
+                        };
+                        (num, mode)
+                    }
+                };
+                let tau: f64 =
+                    num.trim().parse().map_err(|_| bad_num(num))?;
+                Ok(DropPolicy::ComputeTau { tau, preemption: mode })
+            }
+            "deadline" => {
+                let d: f64 =
+                    value.trim().parse().map_err(|_| bad_num(value))?;
+                Ok(DropPolicy::CommDeadline { deadline: d })
+            }
+            "phase-deadline" => {
+                let budgets: Vec<f64> = value
+                    .split('/')
+                    .map(|v| v.trim().parse().map_err(|_| bad_num(v)))
+                    .collect::<Result<_>>()?;
+                Ok(DropPolicy::PerPhaseDeadline { budgets })
+            }
+            "local-sgd" => {
+                let h: usize =
+                    value.trim().parse().map_err(|_| bad_num(value))?;
+                Ok(DropPolicy::LocalSgdPeriod { h })
+            }
+            other => Err(Error::Config(format!(
+                "policy: unknown clause key `{other}`"
+            ))),
+        }
+    }
+
+    /// Render back to the spec-string grammar (round-trips through
+    /// [`Self::parse`]; used by the sweep JSON and reports).
+    pub fn spec(&self) -> String {
+        match self {
+            DropPolicy::None => "none".into(),
+            DropPolicy::ComputeTau { tau, preemption } => match preemption {
+                PreemptionMode::Preemptive => format!("tau={tau}"),
+                PreemptionMode::BetweenAccumulations => {
+                    format!("tau={tau},between")
+                }
+            },
+            DropPolicy::CommDeadline { deadline } => {
+                format!("deadline={deadline}")
+            }
+            DropPolicy::PerPhaseDeadline { budgets } => {
+                let parts: Vec<String> =
+                    budgets.iter().map(|b| format!("{b}")).collect();
+                format!("phase-deadline={}", parts.join("/"))
+            }
+            DropPolicy::LocalSgdPeriod { h } => format!("local-sgd={h}"),
+            DropPolicy::Composed(ps) => {
+                let parts: Vec<String> =
+                    ps.iter().map(|p| p.spec()).collect();
+                if parts.is_empty() {
+                    "none".into()
+                } else {
+                    parts.join("+")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_clause() {
+        for spec in [
+            "none",
+            "tau=9",
+            "tau=9,between",
+            "deadline=3",
+            "deadline=0",
+            "phase-deadline=1.5",
+            "phase-deadline=1.5/0.5/0.25",
+            "local-sgd=4",
+            "tau=9+deadline=3",
+            "local-sgd=4+tau=0.9",
+            "tau=9,between+phase-deadline=1/1",
+        ] {
+            let p = DropPolicy::parse(spec).expect(spec);
+            assert_eq!(p.spec(), spec, "round trip");
+            let again = DropPolicy::parse(&p.spec()).expect(spec);
+            assert_eq!(p, again, "{spec}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for spec in [
+            "",
+            "tau=",
+            "tau=abc",
+            "tau=-1",
+            "tau=0",
+            "deadline=-2",
+            "phase-deadline=",
+            "phase-deadline=1//2",
+            "phase-deadline=-1",
+            "local-sgd=0",
+            "wat=3",
+            "tau=9,sometimes",
+            "local-sgd=2+local-sgd=3",
+        ] {
+            assert!(DropPolicy::parse(spec).is_err(), "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn and_flattens_and_drops_none() {
+        let p = DropPolicy::none()
+            .and(DropPolicy::compute_tau(9.0))
+            .and(DropPolicy::none())
+            .and(DropPolicy::comm_deadline(3.0));
+        assert_eq!(p.spec(), "tau=9+deadline=3");
+        assert_eq!(DropPolicy::none().and(DropPolicy::none()), DropPolicy::None);
+        // a single surviving clause is not wrapped
+        assert_eq!(
+            DropPolicy::none().and(DropPolicy::compute_tau(2.0)),
+            DropPolicy::compute_tau(2.0)
+        );
+    }
+
+    #[test]
+    fn effective_merges_tightest_wins() {
+        let p = DropPolicy::parse(
+            "tau=9+tau=5,between+deadline=3+deadline=7+local-sgd=4",
+        )
+        .unwrap();
+        let eff = p.effective();
+        assert_eq!(eff.tau, Some(5.0));
+        assert_eq!(eff.preemption, PreemptionMode::BetweenAccumulations);
+        assert_eq!(eff.step_deadline, Some(3.0));
+        assert_eq!(eff.local_sgd_h, Some(4));
+        assert!(eff.phase_offsets.is_empty());
+    }
+
+    #[test]
+    fn effective_merges_phase_offsets_elementwise() {
+        let p = DropPolicy::parse(
+            "phase-deadline=1/1/1+phase-deadline=0.5/2",
+        )
+        .unwrap();
+        let eff = p.effective();
+        // cumulative: [1,2,3] min [0.5,2.5] elementwise, tail kept
+        assert_eq!(eff.phase_offsets, vec![0.5, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn merged_offsets_fold_step_deadline_into_entry() {
+        let p = DropPolicy::parse("phase-deadline=2/1+deadline=0.5").unwrap();
+        let eff = p.effective();
+        assert_eq!(eff.phase_offsets, vec![2.0, 3.0]);
+        assert_eq!(eff.merged_phase_offsets(), vec![0.5, 3.0]);
+        // no per-phase clause: merged offsets stay empty (pure step
+        // deadline stays on the step-level path)
+        let eff2 = DropPolicy::comm_deadline(0.5).effective();
+        assert!(eff2.merged_phase_offsets().is_empty());
+    }
+
+    #[test]
+    fn cumulative_offsets_clamp_negatives() {
+        assert_eq!(cumulative_offsets(&[1.0, -2.0, 0.5]), vec![1.0, 1.0, 1.5]);
+        assert!(cumulative_offsets(&[]).is_empty());
+    }
+
+    #[test]
+    fn comm_cutoff_uniform_interface() {
+        let d = DropPolicy::comm_deadline(3.0);
+        assert_eq!(d.comm_cutoff(0, 1.0), Some(4.0));
+        assert_eq!(d.comm_cutoff(1, 1.0), None);
+        let pp = DropPolicy::per_phase_deadline(vec![1.0, 0.5]);
+        assert_eq!(pp.comm_cutoff(0, 1.0), Some(2.0));
+        assert_eq!(pp.comm_cutoff(1, 1.0), Some(2.5));
+        assert_eq!(pp.comm_cutoff(2, 1.0), None);
+        // composed: tightest wins per phase
+        let both = d.clone().and(pp.clone());
+        assert_eq!(both.comm_cutoff(0, 1.0), Some(2.0));
+        assert_eq!(both.comm_cutoff(1, 1.0), Some(2.5));
+        // compute-side policies never constrain comm phases
+        assert_eq!(DropPolicy::compute_tau(9.0).comm_cutoff(0, 1.0), None);
+        // negative deadline clamps like the membership rule
+        assert_eq!(
+            DropPolicy::comm_deadline(-5.0).comm_cutoff(0, 1.0),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn compute_cutoff_and_local_sgd_queries() {
+        let p = DropPolicy::parse("local-sgd=4+tau=0.9").unwrap();
+        assert_eq!(
+            p.compute_cutoff(),
+            Some((0.9, PreemptionMode::Preemptive))
+        );
+        assert_eq!(p.local_sgd_h(), Some(4));
+        assert_eq!(DropPolicy::None.compute_cutoff(), None);
+        assert_eq!(DropPolicy::None.local_sgd_h(), None);
+        assert!(DropPolicy::None.is_none());
+        assert!(!p.is_none());
+    }
+
+    #[test]
+    fn from_cluster_mirrors_legacy_deadline_sniffing() {
+        let mut cfg = ClusterConfig::default();
+        assert!(DropPolicy::from_cluster(&cfg).is_none());
+        cfg.comm_drop_deadline = 2.5;
+        assert_eq!(
+            DropPolicy::from_cluster(&cfg),
+            DropPolicy::CommDeadline { deadline: 2.5 }
+        );
+    }
+
+    #[test]
+    fn with_preemption_reaches_nested_taus() {
+        let p = DropPolicy::parse("tau=9+deadline=3")
+            .unwrap()
+            .with_preemption(PreemptionMode::BetweenAccumulations);
+        assert_eq!(
+            p.compute_cutoff(),
+            Some((9.0, PreemptionMode::BetweenAccumulations))
+        );
+    }
+}

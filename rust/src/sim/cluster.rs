@@ -8,9 +8,11 @@
 //! trainer via [`StepOutcome::completed`].
 
 use crate::config::ClusterConfig;
+use crate::policy::DropPolicy;
 use crate::rng::Xoshiro256pp;
 
 use super::comm::CommModel;
+use super::compiled::PhaseBounded;
 use super::noise::LatencyModel;
 use super::trace::Trace;
 
@@ -67,11 +69,27 @@ pub struct ClusterSim {
     model: LatencyModel,
     comm: CommModel,
     pub preemption: PreemptionMode,
+    /// The installed drop policy — the single source of truth for
+    /// [`Self::step_with`] and friends. The legacy knobs below are its
+    /// resolved form, precomputed at install time so stepping pays no
+    /// per-step policy resolution.
+    policy: DropPolicy,
+    /// Resolved compute threshold of the installed policy
+    /// ([`crate::policy::EffectivePolicy::tau`]).
+    eff_tau: Option<f64>,
+    /// Resolved Local-SGD period of the installed policy.
+    eff_h: Option<usize>,
     /// Bounded-wait (DropComm) deadline: workers arriving later than
     /// this after the first arrival are excluded from the reduction
     /// (their step contribution is dropped and the sum reweighted over
     /// the survivors). `None` = wait for everyone.
     comm_drop: Option<f64>,
+    /// Cumulative per-phase membership cutoff offsets
+    /// ([`crate::policy::cumulative_offsets`], with any step deadline
+    /// folded into the entry checkpoint). Empty = no per-phase policy.
+    phase_cutoffs: Vec<f64>,
+    /// Reusable per-worker dropped mask for the per-phase scan.
+    drop_mask: Vec<bool>,
     /// Full-cluster schedule, built once (the worker count is fixed
     /// for a sim's lifetime) so the per-step timing doesn't rebuild
     /// O(N^2) transfers. `None` for the fixed-`T^c` model. Kept as the
@@ -113,11 +131,6 @@ impl ClusterSim {
             },
             None => CommModel::Fixed(cfg.comm_latency),
         };
-        let drop = if cfg.comm_drop_deadline > 0.0 {
-            Some(cfg.comm_drop_deadline)
-        } else {
-            None
-        };
         Self::with_model(
             cfg.workers,
             cfg.accumulations,
@@ -125,7 +138,7 @@ impl ClusterSim {
             comm,
             seed,
         )
-        .with_comm_drop(drop)
+        .with_policy(DropPolicy::from_cluster(cfg))
     }
 
     pub fn with_model(
@@ -156,7 +169,12 @@ impl ClusterSim {
             model,
             comm,
             preemption: PreemptionMode::Preemptive,
+            policy: DropPolicy::None,
+            eff_tau: None,
+            eff_h: None,
             comm_drop: None,
+            phase_cutoffs: Vec::new(),
+            drop_mask: Vec::new(),
             schedule,
             compiled,
             scratch: super::compiled::ScheduleScratch::default(),
@@ -173,6 +191,41 @@ impl ClusterSim {
         self
     }
 
+    /// Install a [`DropPolicy`]: the unified drop-decision surface.
+    /// Resolves the policy once (compute threshold, preemption model,
+    /// step-level deadline, cumulative per-phase cutoffs, Local-SGD
+    /// period) so [`Self::step_installed_into`] pays nothing per step.
+    pub fn with_policy(mut self, policy: DropPolicy) -> Self {
+        self.set_policy(&policy);
+        self
+    }
+
+    /// [`Self::with_policy`] in place.
+    pub fn set_policy(&mut self, policy: &DropPolicy) {
+        let eff = policy.effective();
+        self.eff_tau = eff.tau;
+        if eff.tau.is_some() {
+            // a policy without a compute clause leaves the (builder-set)
+            // preemption mode alone
+            self.preemption = eff.preemption;
+        }
+        self.eff_h = eff.local_sgd_h;
+        self.phase_cutoffs = eff.merged_phase_offsets();
+        // a per-phase policy subsumes the step deadline (folded into
+        // its entry checkpoint by merged_phase_offsets)
+        self.comm_drop = if self.phase_cutoffs.is_empty() {
+            eff.step_deadline
+        } else {
+            None
+        };
+        self.policy = policy.clone();
+    }
+
+    /// The installed policy.
+    pub fn policy(&self) -> &DropPolicy {
+        &self.policy
+    }
+
     /// Route collective timing through the per-phase event-queue
     /// reference instead of the compiled heapless pass. The two are
     /// bitwise identical (property-tested); this exists as the oracle
@@ -182,10 +235,43 @@ impl ClusterSim {
         self
     }
 
-    /// Enable/disable the bounded-wait (DropComm) collective.
+    /// Enable/disable the step-level bounded-wait (DropComm)
+    /// collective. Legacy shim for [`Self::with_policy`] with a
+    /// [`DropPolicy::CommDeadline`]; replaces the installed policy's
+    /// clauses (per-phase cutoffs, compute and Local-SGD included) so
+    /// the installed state stays internally consistent. The
+    /// builder-level preemption mode is preserved, as it always was —
+    /// it only matters with a per-call `step(Some(tau))` threshold.
     pub fn with_comm_drop(mut self, deadline: Option<f64>) -> Self {
-        self.comm_drop = deadline;
+        let policy = match deadline {
+            Some(d) => DropPolicy::comm_deadline(d),
+            None => DropPolicy::None,
+        };
+        self.set_policy(&policy);
         self
+    }
+
+    /// Adopt a warm survivor-schedule cache (e.g. from a sweep's
+    /// [`crate::sweep::SurvivorCachePool`]). A cache built for a
+    /// different comm model is discarded — memoization must never
+    /// change results, only skip compiles.
+    pub fn with_survivor_cache(
+        mut self,
+        cache: super::survivor::SurvivorScheduleCache,
+    ) -> Self {
+        if cache.matches(&self.comm) {
+            self.survivors = cache;
+        }
+        self
+    }
+
+    /// Hand the survivor cache back (for pooling across sims sharing a
+    /// comm model), leaving a fresh empty one behind.
+    pub fn take_survivor_cache(&mut self) -> super::survivor::SurvivorScheduleCache {
+        std::mem::replace(
+            &mut self.survivors,
+            super::survivor::SurvivorScheduleCache::new(&self.comm),
+        )
     }
 
     pub fn latency_model(&self) -> &LatencyModel {
@@ -213,8 +299,8 @@ impl ClusterSim {
         self.comm.completion_time_with(arrivals, self.schedule.as_ref())
     }
 
-    /// Common tail of a simulated step: the collective. Under DropComm
-    /// ([`Self::with_comm_drop`]) late workers are excluded — their
+    /// Common tail of a simulated step: the collective. Under a
+    /// comm-side drop policy late workers are excluded — their
     /// completed micro-batches are zeroed (dropped work) and the
     /// survivors' reduction sets the iteration time. Operates in place
     /// on `out`'s already-filled per-worker vectors.
@@ -229,6 +315,10 @@ impl ClusterSim {
                 .cloned()
                 .fold(f64::NEG_INFINITY, f64::max)
         };
+        if !self.phase_cutoffs.is_empty() {
+            out.iter_time = self.per_phase_iter_time(out);
+            return;
+        }
         out.iter_time = match self.comm_drop {
             None => self.collective_time(&out.worker_compute),
             Some(deadline) => {
@@ -272,7 +362,94 @@ impl ClusterSim {
         };
     }
 
-    /// Simulate one synchronous step; `threshold = None` is the baseline.
+    /// The per-phase-deadline collective: compiled scan
+    /// ([`super::compiled::CompiledSchedule::bounded_completion_with`])
+    /// when available, else the event-queue oracle / fixed-`T^c` lumped
+    /// form ([`CommModel::per_phase_bounded_completion`]) — bitwise
+    /// identical pair, property-tested. Zeroes dropped workers'
+    /// completed counts; the survivors' restart reuses the per-k
+    /// compiled cache, so drop-heavy per-phase stepping is as
+    /// allocation-free as the step-level drop path.
+    fn per_phase_iter_time(&mut self, out: &mut StepOutcome) -> f64 {
+        if self.use_compiled {
+            if let Some(c) = self.compiled.as_ref() {
+                let res = c.bounded_completion_with(
+                    &out.worker_compute,
+                    &self.phase_cutoffs,
+                    &mut self.scratch,
+                    &mut self.drop_mask,
+                );
+                return match res {
+                    PhaseBounded::Complete(t) => t,
+                    PhaseBounded::Dropped { survivors, close } => {
+                        for (done, &d) in
+                            out.completed.iter_mut().zip(&self.drop_mask)
+                        {
+                            if d {
+                                *done = 0;
+                            }
+                        }
+                        if survivors == 0 {
+                            close.max(0.0)
+                        } else {
+                            self.survivors.completion(survivors, close)
+                        }
+                    }
+                };
+            }
+        }
+        // event-queue reference timing, or the fixed-T^c model (which
+        // has no phase structure — budgets lump to their total)
+        let (mask, t) = self.comm.per_phase_bounded_completion(
+            &out.worker_compute,
+            &self.phase_cutoffs,
+            self.schedule.as_ref(),
+        );
+        for (done, &alive) in out.completed.iter_mut().zip(&mask) {
+            if !alive {
+                *done = 0;
+            }
+        }
+        t
+    }
+
+    /// Simulate one step (or Local-SGD period, if the policy carries
+    /// one) under `policy`, installing it first when it differs from
+    /// the current one — a cheap equality check, so sweeps that step
+    /// the same policy repeatedly pay nothing.
+    pub fn step_with(&mut self, policy: &DropPolicy) -> StepOutcome {
+        let mut out = StepOutcome::default();
+        self.step_with_into(policy, &mut out);
+        out
+    }
+
+    /// [`Self::step_with`] into a caller-owned outcome.
+    pub fn step_with_into(
+        &mut self,
+        policy: &DropPolicy,
+        out: &mut StepOutcome,
+    ) {
+        if *policy != self.policy {
+            self.set_policy(policy);
+        }
+        self.step_installed_into(out);
+    }
+
+    /// One step under the already-installed policy
+    /// ([`Self::with_policy`]): a `LocalSgdPeriod` clause routes to
+    /// [`Self::local_sgd_period_into`] (threshold per local step),
+    /// anything else to [`Self::step_into`].
+    pub fn step_installed_into(&mut self, out: &mut StepOutcome) {
+        match self.eff_h {
+            Some(h) => self.local_sgd_period_into(h, self.eff_tau, out),
+            None => self.step_into(self.eff_tau, out),
+        }
+    }
+
+    /// Simulate one synchronous step; `threshold = None` is the
+    /// baseline. Legacy shim: the threshold rides per call while the
+    /// comm side comes from the installed policy — new code should
+    /// install a full [`DropPolicy`] and use [`Self::step_with`].
     pub fn step(&mut self, threshold: Option<f64>) -> StepOutcome {
         let mut out = StepOutcome::default();
         self.step_into(threshold, &mut out);
@@ -388,7 +565,10 @@ impl ClusterSim {
     /// stay bitwise identical (property-tested). When the straggler
     /// scenario consumes no randomness for a worker
     /// ([`LatencyModel::straggler_draws`]), its h micro-batches are
-    /// drawn in one batched fill.
+    /// drawn in one batched fill; when it flips a coin per local step,
+    /// the fused [`LatencyModel::fill_local_steps`] batches the
+    /// interleaved (coin, micro-batch) pairs instead — either way, one
+    /// dispatch per period, zero per-draw branches.
     pub fn local_sgd_period_into(
         &mut self,
         h: usize,
@@ -420,15 +600,16 @@ impl ClusterSim {
             };
             if self.model.straggler_draws(n) {
                 // straggler coin flips interleave with micro-batch draws
-                // in this worker's stream: keep the sequential order
-                for _local in 0..h {
-                    let straggle = self.model.sample_straggler_at(
-                        n,
-                        step_idx,
-                        &mut self.streams[n],
-                    );
-                    let t = straggle
-                        + self.model.sample_microbatch(n, &mut self.streams[n]);
+                // in this worker's stream: the fused fill keeps the
+                // sequential (coin, sample) order draw for draw while
+                // paying the straggler/noise dispatch once per period
+                self.model.fill_local_steps(
+                    n,
+                    h,
+                    &mut self.sample_buf,
+                    &mut self.streams[n],
+                );
+                for &t in &self.sample_buf {
                     tally(t);
                 }
             } else {
@@ -912,6 +1093,204 @@ mod tests {
             sum += b.local_sgd_period(6, Some(0.8)).iter_time;
         }
         assert_eq!(mean.to_bits(), (sum / 10.0).to_bits());
+    }
+
+    #[test]
+    fn step_with_policy_matches_legacy_paths_bitwise() {
+        // the unified surface against the legacy knobs: tau via the
+        // step() argument + deadline via config must equal one composed
+        // DropPolicy, bit for bit
+        let mut c = config(12, 6);
+        c.noise = NoiseKind::Exponential { mean: 0.4 };
+        c.topology = Some(crate::topology::TopologyKind::Ring);
+        c.comm_drop_deadline = 1.5;
+        let mut legacy = ClusterSim::new(&c, 42);
+        let mut unified = ClusterSim::new(&c, 42);
+        let policy = DropPolicy::compute_tau(3.0)
+            .and(DropPolicy::comm_deadline(1.5));
+        let mut out = StepOutcome::default();
+        for step in 0..15 {
+            let a = legacy.step(Some(3.0));
+            unified.step_with_into(&policy, &mut out);
+            assert_eq!(a.completed, out.completed, "step {step}");
+            assert_eq!(a.iter_time.to_bits(), out.iter_time.to_bits());
+            assert_eq!(a.compute_time.to_bits(), out.compute_time.to_bits());
+        }
+    }
+
+    #[test]
+    fn step_with_local_sgd_policy_matches_period_call() {
+        let mut c = config(4, 1);
+        c.stragglers =
+            crate::config::StragglerKind::Uniform { p: 0.3, delay: 1.0 };
+        let mut a = ClusterSim::new(&c, 7);
+        let mut b = ClusterSim::new(&c, 7);
+        let policy = DropPolicy::local_sgd(6)
+            .and(DropPolicy::compute_tau(0.9));
+        for _ in 0..5 {
+            let x = a.local_sgd_period(6, Some(0.9));
+            let y = b.step_with(&policy);
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.iter_time.to_bits(), y.iter_time.to_bits());
+        }
+    }
+
+    #[test]
+    fn per_phase_lumped_budget_equals_step_deadline() {
+        // the acceptance identity: a single lumped budget is the
+        // step-level CommDeadline, bitwise, on every topology and the
+        // fixed-T^c model, compiled and reference arms
+        let topos: Vec<Option<crate::topology::TopologyKind>> =
+            std::iter::once(None)
+                .chain(crate::topology::TopologyKind::ALL.iter().copied().map(Some))
+                .collect();
+        for topo in topos {
+            for reference in [false, true] {
+                let mut c = config(10, 4);
+                c.noise = NoiseKind::Exponential { mean: 0.5 };
+                c.stragglers = crate::config::StragglerKind::Uniform {
+                    p: 0.3,
+                    delay: 4.0,
+                };
+                c.topology = topo;
+                let mk = |cfg: &ClusterConfig, reference: bool| {
+                    let sim = ClusterSim::new(cfg, 0xFA7E);
+                    if reference {
+                        sim.with_reference_timing()
+                    } else {
+                        sim
+                    }
+                };
+                let mut lumped = mk(&c, reference).with_policy(
+                    DropPolicy::per_phase_deadline(vec![1.0]),
+                );
+                let mut step = mk(&c, reference)
+                    .with_policy(DropPolicy::comm_deadline(1.0));
+                for s in 0..20 {
+                    let a = lumped.step(None);
+                    let b = step.step(None);
+                    assert_eq!(
+                        a.completed, b.completed,
+                        "{topo:?} ref={reference} step {s}"
+                    );
+                    assert_eq!(
+                        a.iter_time.to_bits(),
+                        b.iter_time.to_bits(),
+                        "{topo:?} ref={reference} step {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_phase_compiled_equals_reference_timing() {
+        // multi-budget per-phase cutoffs: the compiled scan against the
+        // event-queue oracle, bit for bit, drop-heavy
+        for kind in crate::topology::TopologyKind::ALL {
+            let mut c = config(12, 4);
+            c.noise = NoiseKind::Exponential { mean: 0.6 };
+            c.stragglers = crate::config::StragglerKind::Uniform {
+                p: 0.4,
+                delay: 5.0,
+            };
+            c.topology = Some(kind);
+            let policy =
+                DropPolicy::per_phase_deadline(vec![1.0, 0.25, 0.25]);
+            let mut fast =
+                ClusterSim::new(&c, 99).with_policy(policy.clone());
+            let mut slow = ClusterSim::new(&c, 99)
+                .with_reference_timing()
+                .with_policy(policy);
+            let mut dropped_steps = 0;
+            for step in 0..25 {
+                let a = fast.step(None);
+                let b = slow.step(None);
+                assert_eq!(
+                    a.completed,
+                    b.completed,
+                    "{} step {step}",
+                    kind.name()
+                );
+                assert_eq!(
+                    a.iter_time.to_bits(),
+                    b.iter_time.to_bits(),
+                    "{} step {step}",
+                    kind.name()
+                );
+                if a.total_completed() < 12 * 4 {
+                    dropped_steps += 1;
+                }
+            }
+            assert!(dropped_steps > 5, "{}: {dropped_steps}", kind.name());
+        }
+    }
+
+    #[test]
+    fn policy_install_and_accessor() {
+        let c = config(4, 2);
+        let policy = DropPolicy::parse("tau=2,between+deadline=1").unwrap();
+        let mut sim = ClusterSim::new(&c, 1).with_policy(policy.clone());
+        assert_eq!(sim.policy(), &policy);
+        assert_eq!(sim.preemption, PreemptionMode::BetweenAccumulations);
+        // re-stepping the same policy must not reinstall (observable
+        // via the unchanged accessor; the equality check guards it)
+        sim.step_with(&policy);
+        assert_eq!(sim.policy(), &policy);
+        // legacy comm-drop shim replaces the comm side
+        let sim2 = ClusterSim::new(&c, 1).with_comm_drop(Some(2.0));
+        assert_eq!(sim2.policy(), &DropPolicy::comm_deadline(2.0));
+        // ...and the WHOLE installed state: compute/local clauses from
+        // an earlier policy must not survive the shim (regression: a
+        // stale eff_h/eff_tau made policy() lie about what steps ran)
+        let mut sim3 = ClusterSim::new(&c, 1)
+            .with_policy(DropPolicy::parse("local-sgd=4+tau=0.9").unwrap())
+            .with_comm_drop(Some(2.0));
+        assert_eq!(sim3.policy(), &DropPolicy::comm_deadline(2.0));
+        let mut plain = ClusterSim::new(&c, 1).with_comm_drop(Some(2.0));
+        let a = sim3.step_with(&DropPolicy::comm_deadline(2.0));
+        let b = plain.step(None);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+    }
+
+    #[test]
+    fn survivor_cache_adoption_is_pure_memoization() {
+        // a warm cache hopping between sims must not change a single
+        // bit of any outcome
+        let mut c = config(8, 4);
+        c.noise = NoiseKind::Exponential { mean: 0.6 };
+        c.stragglers =
+            crate::config::StragglerKind::Uniform { p: 0.4, delay: 5.0 };
+        c.topology = Some(crate::topology::TopologyKind::Tree);
+        c.comm_drop_deadline = 1.0;
+        let mut cold = ClusterSim::new(&c, 3);
+        let mut warmer = ClusterSim::new(&c, 3);
+        // warm a cache on a different-N sim of the same comm model
+        let mut donor_cfg = c.clone();
+        donor_cfg.workers = 5;
+        let mut donor = ClusterSim::new(&donor_cfg, 9);
+        for _ in 0..10 {
+            donor.step(None);
+        }
+        let warm = donor.take_survivor_cache();
+        warmer = warmer.with_survivor_cache(warm);
+        for _ in 0..20 {
+            let a = cold.step(None);
+            let b = warmer.step(None);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+        }
+        // a mismatched cache is rejected, not adopted
+        let mut other = c.clone();
+        other.topology = Some(crate::topology::TopologyKind::Ring);
+        let mut ring_sim = ClusterSim::new(&other, 1);
+        for _ in 0..10 {
+            ring_sim.step(None);
+        }
+        let ring_cache = ring_sim.take_survivor_cache();
+        let tree_sim = ClusterSim::new(&c, 3).with_survivor_cache(ring_cache);
+        assert_eq!(tree_sim.survivors.compiled_count(), 0);
     }
 
     #[test]

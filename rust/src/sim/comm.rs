@@ -20,7 +20,7 @@ use crate::topology::{Schedule, TopologyKind};
 use super::event::EventQueue;
 
 /// Timing model for one AllReduce of `bytes` across `n` workers.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum CommModel {
     /// Fixed serial latency `T^c` regardless of arrival times
     /// (the paper's model: `T + T^c`).
@@ -194,6 +194,122 @@ impl CommModel {
             self.completion_time(&sub)
         };
         (survivors, t)
+    }
+
+    /// Per-phase bounded-wait (the
+    /// [`crate::policy::DropPolicy::PerPhaseDeadline`] policy), oracle
+    /// form: the event-queue twin of
+    /// [`super::compiled::CompiledSchedule::bounded_completion_with`],
+    /// bitwise identical to it (property-tested in
+    /// `tests/policy_equivalence.rs`).
+    ///
+    /// `budget_offsets` are the *cumulative* checkpoint offsets
+    /// ([`crate::policy::cumulative_offsets`]): phase `p`'s entry closes
+    /// at `first_arrival + budget_offsets[p]`. Checkpoint 0 is the
+    /// step-level membership rule on raw arrivals (a single lumped
+    /// budget is exactly [`Self::bounded_wait_completion`]); later
+    /// checkpoints see the per-phase readiness of the event simulation.
+    /// When anyone is dropped, the survivors' collective restarts
+    /// simultaneously at the last triggering cutoff — same
+    /// non-clairvoyant reasoning as the step-level rule. The fixed-`T^c`
+    /// model has no phase structure, so its budgets lump to their total.
+    ///
+    /// Returns the per-worker *survivor* mask (`true` = participates)
+    /// and the completion time.
+    pub fn per_phase_bounded_completion(
+        &self,
+        arrivals: &[f64],
+        budget_offsets: &[f64],
+        cached: Option<&Schedule>,
+    ) -> (Vec<bool>, f64) {
+        if arrivals.is_empty() {
+            return (Vec::new(), 0.0);
+        }
+        let (latency, bandwidth, bytes) = match *self {
+            CommModel::Fixed(_) => {
+                // no phases: the budgets lump to their (cumulative)
+                // total; no budgets at all is unconstrained, matching
+                // the schedule models' checkpoint-free scan
+                return match budget_offsets.last() {
+                    None => {
+                        (vec![true; arrivals.len()],
+                         self.completion_time(arrivals))
+                    }
+                    Some(&total) => {
+                        self.bounded_wait_completion(arrivals, total)
+                    }
+                };
+            }
+            CommModel::Ring { latency, bandwidth, bytes }
+            | CommModel::Topology { latency, bandwidth, bytes, .. } => {
+                (latency, bandwidth, bytes)
+            }
+        };
+        let built;
+        let schedule = match cached {
+            Some(s) if s.workers == arrivals.len() => s,
+            _ => {
+                built = self
+                    .schedule_for(arrivals.len())
+                    .expect("non-fixed model has a schedule");
+                &built
+            }
+        };
+        let first = arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mut ready: Vec<f64> =
+            arrivals.iter().map(|a| a.max(0.0)).collect();
+        let mut alive = vec![true; arrivals.len()];
+        let mut survivors = arrivals.len();
+        let mut close = f64::NEG_INFINITY;
+        let phases = schedule.phases.len();
+        for p in 0..phases.max(budget_offsets.len()) {
+            if p < budget_offsets.len() {
+                let cutoff = first + budget_offsets[p];
+                for (n, a) in alive.iter_mut().enumerate() {
+                    if !*a {
+                        continue;
+                    }
+                    let v = if p == 0 { arrivals[n] } else { ready[n] };
+                    if v > cutoff {
+                        *a = false;
+                        survivors -= 1;
+                        close = cutoff;
+                    }
+                }
+            }
+            if p < phases {
+                // one event-queue drain, exactly schedule_completion's
+                // per-phase inner loop
+                let phase = &schedule.phases[p];
+                let mut q = EventQueue::new();
+                for (k, t) in phase.transfers.iter().enumerate() {
+                    let hop = latency + t.chunk.fraction() * bytes / bandwidth;
+                    q.schedule_at(ready[t.src] + hop, k as u64);
+                }
+                let mut next = ready.clone();
+                while let Some(ev) = q.pop() {
+                    let t = &phase.transfers[ev.tag as usize];
+                    if ev.time > next[t.dst] {
+                        next[t.dst] = ev.time;
+                    }
+                    if ev.time > next[t.src] {
+                        next[t.src] = ev.time;
+                    }
+                }
+                ready = next;
+            }
+        }
+        if survivors == arrivals.len() {
+            let t = ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            (alive, t)
+        } else if survivors == 0 {
+            // every worker missed a checkpoint: nothing to reduce, the
+            // step ends when the last membership window closes
+            (alive, close.max(0.0))
+        } else {
+            let t = self.completion_time(&vec![close; survivors]);
+            (alive, t)
+        }
     }
 }
 
@@ -430,6 +546,58 @@ mod tests {
         // (no clairvoyance), then the survivors' collective is done.
         assert!(t >= 1.1 - 1e-12, "cannot close membership early: {t}");
         assert!(t < 2.0, "bounded wait completes without the straggler: {t}");
+    }
+
+    #[test]
+    fn per_phase_lumped_budget_is_step_level_bounded_wait() {
+        // a single lumped budget must be bitwise the step-level rule,
+        // for every model kind, with and without exclusions
+        let models = [
+            CommModel::Fixed(0.5),
+            CommModel::Ring { latency: 1e-4, bandwidth: 1e9, bytes: 4e6 },
+            CommModel::Topology {
+                kind: TopologyKind::Torus { rows: 0 },
+                latency: 1e-4,
+                bandwidth: 1e9,
+                bytes: 4e6,
+            },
+        ];
+        let arrivals = [0.3, 0.1, 7.0, 0.2, 0.5];
+        for m in &models {
+            for deadline in [0.0, 1.0, 100.0] {
+                let (want_mask, want_t) =
+                    m.bounded_wait_completion(&arrivals, deadline);
+                let offsets = crate::policy::cumulative_offsets(&[deadline]);
+                let (mask, t) = m.per_phase_bounded_completion(
+                    &arrivals, &offsets, None,
+                );
+                assert_eq!(mask, want_mask, "{m:?} deadline={deadline}");
+                assert_eq!(
+                    t.to_bits(),
+                    want_t.to_bits(),
+                    "{m:?} deadline={deadline}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_phase_unconstrained_is_plain_collective() {
+        let m = CommModel::Topology {
+            kind: TopologyKind::Tree,
+            latency: 1e-4,
+            bandwidth: 1e9,
+            bytes: 4e6,
+        };
+        let arrivals = [0.3, 0.1, 0.7, 0.2, 0.5];
+        let (mask, t) =
+            m.per_phase_bounded_completion(&arrivals, &[1e9, 2e9], None);
+        assert!(mask.iter().all(|&s| s));
+        assert_eq!(t.to_bits(), m.completion_time(&arrivals).to_bits());
+        // empty arrivals complete instantly
+        let (mask, t) = m.per_phase_bounded_completion(&[], &[1.0], None);
+        assert!(mask.is_empty());
+        assert_eq!(t, 0.0);
     }
 
     #[test]

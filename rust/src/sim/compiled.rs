@@ -42,6 +42,22 @@ impl ScheduleScratch {
     }
 }
 
+/// Outcome of [`CompiledSchedule::bounded_completion_with`] — the
+/// per-phase-deadline ([`crate::policy::DropPolicy::PerPhaseDeadline`])
+/// scan over one collective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PhaseBounded {
+    /// Every worker made every checkpoint: the full collective ran, and
+    /// this is its completion time (bitwise identical to
+    /// [`CompiledSchedule::completion_with`] on the same arrivals).
+    Complete(f64),
+    /// Some worker missed a checkpoint: `survivors` workers remain and
+    /// membership was finally known at `close` (the last checkpoint
+    /// cutoff that dropped anyone). The caller times the survivors'
+    /// restarted collective from `close` (the per-k cache).
+    Dropped { survivors: usize, close: f64 },
+}
+
 /// A [`Schedule`] lowered to flat arrays with precomputed hop costs for
 /// one fixed `(latency, bandwidth, bytes)` triple.
 #[derive(Debug, Clone)]
@@ -142,6 +158,99 @@ impl CompiledSchedule {
         }
         ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
+
+    /// The phase pass with per-phase membership checkpoints — the
+    /// compiled arm of the per-phase DropComm policy
+    /// ([`crate::policy::DropPolicy::PerPhaseDeadline`]).
+    ///
+    /// `budget_offsets[p]` is the *cumulative* cutoff offset of phase
+    /// `p`'s entry checkpoint (see [`crate::policy::cumulative_offsets`]):
+    /// a worker not ready to enter phase `p` by
+    /// `first_arrival + budget_offsets[p]` is dropped. Checkpoint 0 is
+    /// the step-level membership rule evaluated on *raw* arrivals (so a
+    /// single lumped budget is bitwise the step-level `CommDeadline`,
+    /// and the first arrival always survives it); later checkpoints see
+    /// the readiness the pass itself produced, which is how a worker
+    /// stalled by a slow dependency chain gets caught mid-collective.
+    /// Checkpoints past the last phase apply to the final readiness.
+    ///
+    /// Non-clairvoyance: transfers already scheduled from a
+    /// subsequently-dropped worker still land in the scan, and the
+    /// survivors' restarted collective (timed by the caller from
+    /// `close`) is not re-checked against later budgets — mirroring the
+    /// step-level rule, whose survivor collective is also unchecked.
+    ///
+    /// `dropped` is a reusable out-mask (`true` = dropped). Bitwise
+    /// identical to the event-queue oracle
+    /// ([`crate::sim::CommModel::per_phase_bounded_completion`]) —
+    /// property-tested in `tests/policy_equivalence.rs`.
+    pub fn bounded_completion_with(
+        &self,
+        arrivals: &[f64],
+        budget_offsets: &[f64],
+        scratch: &mut ScheduleScratch,
+        dropped: &mut Vec<bool>,
+    ) -> PhaseBounded {
+        assert_eq!(
+            self.workers,
+            arrivals.len(),
+            "schedule compiled for a different worker count"
+        );
+        dropped.clear();
+        dropped.resize(arrivals.len(), false);
+        if arrivals.is_empty() {
+            return PhaseBounded::Complete(0.0);
+        }
+        let first = arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let ScheduleScratch { ready, next } = scratch;
+        ready.clear();
+        ready.extend(arrivals.iter().map(|a| a.max(0.0)));
+        next.resize(arrivals.len(), 0.0);
+        let mut survivors = arrivals.len();
+        let mut close = f64::NEG_INFINITY;
+        let phases = self.phase_count();
+        for p in 0..phases.max(budget_offsets.len()) {
+            if p < budget_offsets.len() {
+                let cutoff = first + budget_offsets[p];
+                for (n, d) in dropped.iter_mut().enumerate() {
+                    if *d {
+                        continue;
+                    }
+                    // checkpoint 0: the raw-arrival membership rule
+                    let v = if p == 0 { arrivals[n] } else { ready[n] };
+                    if v > cutoff {
+                        *d = true;
+                        survivors -= 1;
+                        close = cutoff;
+                    }
+                }
+            }
+            if p < phases {
+                next.copy_from_slice(ready);
+                let (lo, hi) =
+                    (self.offsets[p] as usize, self.offsets[p + 1] as usize);
+                for k in lo..hi {
+                    let (src, dst) =
+                        (self.srcs[k] as usize, self.dsts[k] as usize);
+                    let done = ready[src] + self.hops[k];
+                    if done > next[dst] {
+                        next[dst] = done;
+                    }
+                    if done > next[src] {
+                        next[src] = done;
+                    }
+                }
+                std::mem::swap(ready, next);
+            }
+        }
+        if survivors == arrivals.len() {
+            PhaseBounded::Complete(
+                ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            )
+        } else {
+            PhaseBounded::Dropped { survivors, close }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -235,5 +344,130 @@ mod tests {
         let arrivals = [-3.0, 0.2, -0.5, 0.1];
         let want = schedule_completion(&s, &arrivals, 1e-4, 1e9, 4e6);
         assert_eq!(c.completion(&arrivals).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn bounded_scan_loose_budgets_complete_like_plain_pass() {
+        // budgets nobody can miss: the scan must return Complete with
+        // the exact bits of the unbounded pass, and drop no one.
+        let mut scratch = ScheduleScratch::default();
+        let mut dropped = Vec::new();
+        for kind in TopologyKind::ALL {
+            let s = kind.build(9);
+            let c = CompiledSchedule::compile(&s, 1e-4, 1e9, 4e6);
+            let arrivals: Vec<f64> =
+                (0..9).map(|i| i as f64 * 0.3).collect();
+            let want = c.completion(&arrivals);
+            let got = c.bounded_completion_with(
+                &arrivals,
+                &[1e6, 2e6, 3e6],
+                &mut scratch,
+                &mut dropped,
+            );
+            assert_eq!(
+                got,
+                PhaseBounded::Complete(want),
+                "{}",
+                kind.name()
+            );
+            assert!(dropped.iter().all(|&d| !d));
+        }
+    }
+
+    #[test]
+    fn bounded_scan_entry_checkpoint_is_the_membership_rule() {
+        // a single lumped budget: checkpoint 0 on raw arrivals must
+        // reproduce bounded_wait_survivors exactly, close at the
+        // bounded_wait_cutoff.
+        use crate::sim::comm::{bounded_wait_cutoff, bounded_wait_survivors};
+        let s = TopologyKind::Ring.build(5);
+        let c = CompiledSchedule::compile(&s, 1e-4, 1e9, 4e6);
+        let arrivals = [0.2, 5.0, 0.1, -0.5, 9.0];
+        let budget = 1.0;
+        let mut scratch = ScheduleScratch::default();
+        let mut dropped = Vec::new();
+        let got = c.bounded_completion_with(
+            &arrivals,
+            &[budget],
+            &mut scratch,
+            &mut dropped,
+        );
+        let want_mask = bounded_wait_survivors(&arrivals, budget);
+        for (d, s) in dropped.iter().zip(&want_mask) {
+            assert_eq!(*d, !*s);
+        }
+        let close = bounded_wait_cutoff(&arrivals, budget);
+        assert_eq!(
+            got,
+            PhaseBounded::Dropped { survivors: 3, close }
+        );
+    }
+
+    #[test]
+    fn bounded_scan_catches_chain_stalled_worker_mid_collective() {
+        // worker 3 arrives on time but its ring neighbors' chunks route
+        // through a straggler, stalling its readiness; a deep
+        // checkpoint catches what the entry membership rule cannot.
+        let s = TopologyKind::Ring.build(4);
+        let c = CompiledSchedule::compile(&s, 0.05, 1e9, 4e6);
+        // worker 1 is late but inside the entry budget; its delay
+        // propagates around the ring
+        let arrivals = [0.0, 0.9, 0.0, 0.0];
+        let mut scratch = ScheduleScratch::default();
+        let mut dropped = Vec::new();
+        // entry budget 1.0 admits everyone; the zero follow-on budgets
+        // hold the cutoff flat at 1.0 while worker 1's 0.9s delay plus
+        // two 0.051s hops pushes the stalled chain's readiness past it
+        let got = c.bounded_completion_with(
+            &arrivals,
+            &[1.0, 0.0, 0.0],
+            &mut scratch,
+            &mut dropped,
+        );
+        match got {
+            PhaseBounded::Dropped { survivors, close } => {
+                assert!(survivors < 4, "someone must drop");
+                assert!(survivors > 0, "not everyone");
+                assert_eq!(close, 1.0, "last triggered checkpoint");
+            }
+            PhaseBounded::Complete(_) => {
+                panic!("deep checkpoints should have dropped the chain")
+            }
+        }
+        // step-level membership (single budget 1.0) admits everyone
+        let step = c.bounded_completion_with(
+            &arrivals,
+            &[1.0],
+            &mut scratch,
+            &mut dropped,
+        );
+        assert!(matches!(step, PhaseBounded::Complete(_)));
+    }
+
+    #[test]
+    fn bounded_scan_degenerate_empty_and_tiny() {
+        let s = Schedule::empty(0);
+        let c = CompiledSchedule::compile(&s, 1e-4, 1e9, 4e6);
+        let mut scratch = ScheduleScratch::default();
+        let mut dropped = vec![true; 3]; // stale contents must be cleared
+        assert_eq!(
+            c.bounded_completion_with(&[], &[1.0], &mut scratch, &mut dropped),
+            PhaseBounded::Complete(0.0)
+        );
+        assert!(dropped.is_empty());
+        // single worker, zero phases: trailing checkpoint 0 applies the
+        // raw-arrival rule — the lone (first) arrival always survives
+        let s1 = TopologyKind::Ring.build(1);
+        let c1 = CompiledSchedule::compile(&s1, 1e-4, 1e9, 4e6);
+        assert_eq!(
+            c1.bounded_completion_with(
+                &[2.0],
+                &[0.0],
+                &mut scratch,
+                &mut dropped
+            ),
+            PhaseBounded::Complete(2.0)
+        );
+        assert_eq!(dropped, vec![false]);
     }
 }

@@ -6,7 +6,8 @@
 //! * [`comm`] — AllReduce timing models: fixed `T^c`, plus any
 //!   [`crate::topology::Schedule`] (ring / tree / hierarchical / torus)
 //!   timed event-driven with per-worker arrivals, and the bounded-wait
-//!   DropComm membership rule;
+//!   DropComm membership rule (step-level and per-phase — see
+//!   [`crate::policy::DropPolicy`]);
 //! * [`compiled`] — the heapless compiled fast path for schedule
 //!   timing ([`CompiledSchedule`]), bitwise equal to the event-queue
 //!   reference but allocation-free in steady state;
@@ -14,7 +15,8 @@
 //!   DropComm exclusion branch ([`SurvivorScheduleCache`]), making
 //!   drop-heavy stepping as cheap as the no-drop path;
 //! * [`cluster`] — synchronous / DropCompute / DropComm / Local-SGD
-//!   step timing;
+//!   step timing, driven by the unified [`crate::policy::DropPolicy`]
+//!   surface ([`ClusterSim::step_with`]);
 //! * [`trace`] — `t_{i,n}^{(m)}` recording for Algorithm 2 and post-analysis.
 
 pub mod cluster;
@@ -29,7 +31,7 @@ pub use cluster::{ClusterSim, PreemptionMode, StepOutcome};
 pub use comm::{
     bounded_wait_cutoff, bounded_wait_survivors, schedule_completion, CommModel,
 };
-pub use compiled::{CompiledSchedule, ScheduleScratch};
+pub use compiled::{CompiledSchedule, PhaseBounded, ScheduleScratch};
 pub use event::EventQueue;
 pub use noise::{build_noise, LatencyModel, NoiseSampler};
 pub use survivor::SurvivorScheduleCache;

@@ -343,6 +343,95 @@ impl LatencyModel {
         self.fill_dispatch(n, m, Some((start, tau)), buf, rng)
     }
 
+    /// The Bernoulli straggler coin worker `n` flips every step/local
+    /// step, as `(p, delay)` — `Some` exactly when
+    /// [`Self::straggler_draws`] is true (`Uniform` everywhere,
+    /// `SingleServer` inside the server). `None` and `Fatal` flip no
+    /// coin.
+    fn straggler_coin(&self, n: usize) -> Option<(f64, f64)> {
+        match &self.stragglers {
+            StragglerKind::None | StragglerKind::Fatal { .. } => None,
+            StragglerKind::Uniform { p, delay } => Some((*p, *delay)),
+            StragglerKind::SingleServer { p, delay, server_size } => {
+                (n < *server_size).then(|| (*p, *delay))
+            }
+        }
+    }
+
+    /// The fused Local-SGD period fill: `h` (straggler coin,
+    /// micro-batch) pairs drawn in the exact sequential interleaving —
+    /// coin then sample, per local step — with the straggler *and*
+    /// noise dispatch hoisted out of the loop (the last per-draw branch
+    /// on the Local-SGD hot path). Each entry of `buf` is
+    /// `straggle + micro-batch latency`, the local step's compute time.
+    #[inline(always)]
+    fn fill_local_core(
+        &self,
+        n: usize,
+        h: usize,
+        p: f64,
+        delay: f64,
+        buf: &mut Vec<f64>,
+        rng: &mut Xoshiro256pp,
+        mut eps: impl FnMut(&mut Xoshiro256pp) -> f64,
+        has_noise: bool,
+    ) {
+        buf.clear();
+        buf.reserve(h);
+        let scale = self.worker_scale.get(n).copied().unwrap_or(1.0);
+        let base_floor = 0.1 * self.base.mu;
+        let total_floor = 0.01 * self.base.mu;
+        for _ in 0..h {
+            // exactly sample_straggler_at's Uniform / in-server coin
+            let straggle = if rng.next_f64() < p { delay } else { 0.0 };
+            // exactly sample_microbatch's draw order and clamps
+            let mut t = self.base.sample(rng).max(base_floor) * scale;
+            if has_noise {
+                let e = eps(rng);
+                t += if self.relative { self.mean_scale * e } else { e };
+            }
+            buf.push(straggle + t.max(total_floor));
+        }
+    }
+
+    /// Draw worker `n`'s whole Local-SGD period — `h` local steps whose
+    /// straggler coin flips interleave with the micro-batch draws in
+    /// its stream — in one batched call. Stream consumption is bitwise
+    /// identical to the sequential
+    /// `sample_straggler_at` + [`Self::sample_microbatch`] loop
+    /// (property-tested in `tests/perf_equivalence.rs`); the caller
+    /// must only use it when [`Self::straggler_draws`] is true (the
+    /// coin-free scenarios batch through [`Self::fill_microbatches`]
+    /// with the straggle hoisted instead).
+    pub fn fill_local_steps(
+        &self,
+        n: usize,
+        h: usize,
+        buf: &mut Vec<f64>,
+        rng: &mut Xoshiro256pp,
+    ) {
+        let (p, delay) = self
+            .straggler_coin(n)
+            .expect("fill_local_steps needs a coin-flipping straggler");
+        match self.noise {
+            NoiseSampler::None => {
+                self.fill_local_core(n, h, p, delay, buf, rng, |_| 0.0, false)
+            }
+            NoiseSampler::PaperBounded(d) => self
+                .fill_local_core(n, h, p, delay, buf, rng, |r| d.sample(r), true),
+            NoiseSampler::LogNormal(d) => self
+                .fill_local_core(n, h, p, delay, buf, rng, |r| d.sample(r), true),
+            NoiseSampler::Normal(d) => self
+                .fill_local_core(n, h, p, delay, buf, rng, |r| d.sample(r), true),
+            NoiseSampler::Bernoulli(d) => self
+                .fill_local_core(n, h, p, delay, buf, rng, |r| d.sample(r), true),
+            NoiseSampler::Exponential(d) => self
+                .fill_local_core(n, h, p, delay, buf, rng, |r| d.sample(r), true),
+            NoiseSampler::Gamma(d) => self
+                .fill_local_core(n, h, p, delay, buf, rng, |r| d.sample(r), true),
+        }
+    }
+
     /// Effectively-infinite delay of a failed worker (finite so the
     /// max/CDF arithmetic stays well-defined).
     pub const FATAL_DELAY: f64 = 1e9;
@@ -586,6 +675,58 @@ mod tests {
         // crosses on the third sample: 0.45, 0.90, 1.35)
         let drawn = m.fill_microbatches_bounded(0, 0.0, 1.0, 12, &mut buf, &mut r1);
         assert_eq!(drawn, 3, "{buf:?}");
+    }
+
+    #[test]
+    fn fused_local_fill_matches_sequential_coin_and_sample() {
+        // the fused (coin, micro-batch) fill must consume the stream
+        // exactly like the sequential interleaving, for coin-flipping
+        // straggler scenarios across noise families
+        for noise in [
+            NoiseKind::None,
+            NoiseKind::Exponential { mean: 0.2 },
+            NoiseKind::PaperLogNormal {
+                mu: 4.0,
+                sigma: 1.0,
+                alpha: 2.0 * (4.5f64).exp(),
+                beta: 5.5,
+            },
+        ] {
+            for strag in [
+                StragglerKind::Uniform { p: 0.4, delay: 1.5 },
+                StragglerKind::SingleServer {
+                    p: 0.6,
+                    delay: 2.0,
+                    server_size: 2,
+                },
+            ] {
+                let mut c = base_config();
+                c.noise = noise.clone();
+                c.stragglers = strag.clone();
+                let m = LatencyModel::from_config(&c)
+                    .with_worker_scales(vec![1.0, 1.3, 1.0, 1.0]);
+                let mut r1 = Xoshiro256pp::seed_from_u64(0xC01);
+                let mut r2 = Xoshiro256pp::seed_from_u64(0xC01);
+                let mut buf = Vec::new();
+                for n in [0usize, 1] {
+                    assert!(m.straggler_draws(n), "{strag:?}");
+                    m.fill_local_steps(n, 9, &mut buf, &mut r2);
+                    assert_eq!(buf.len(), 9);
+                    for (i, &t) in buf.iter().enumerate() {
+                        let straggle = m.sample_straggler(n, &mut r1);
+                        let want =
+                            straggle + m.sample_microbatch(n, &mut r1);
+                        assert_eq!(
+                            t.to_bits(),
+                            want.to_bits(),
+                            "{noise:?} {strag:?} worker {n} step {i}"
+                        );
+                    }
+                }
+                // streams end at the same position
+                assert_eq!(r1.next_u64(), r2.next_u64());
+            }
+        }
     }
 
     #[test]

@@ -61,6 +61,15 @@ impl SurvivorScheduleCache {
         self.compiled
     }
 
+    /// Whether this cache was built for `model` — the guard that lets a
+    /// warm cache hop between sims (and sweep points) sharing a comm
+    /// model. Survivor schedules depend only on the topology kind and
+    /// link parameters (a k-member schedule is the same whatever the
+    /// full cluster size), so one cache serves every `N`.
+    pub fn matches(&self, model: &CommModel) -> bool {
+        self.model == *model
+    }
+
     /// Completion time of the k-survivor collective whose members all
     /// start at `close` (the membership decision instant). Bitwise equal
     /// to the oracle's `completion_time(&vec![close; k])` — the max over

@@ -1,0 +1,162 @@
+//! Warm survivor-schedule caches shared across sweep points.
+//!
+//! Every grid point used to construct its own [`ClusterSim`] — and with
+//! it a cold [`SurvivorScheduleCache`], so each point re-paid the
+//! per-survivor-count schedule compiles the PR-3 cache exists to
+//! amortize. But survivor schedules depend only on the *comm model*
+//! (topology kind + link parameters): a k-member schedule is the same
+//! whatever the full cluster size, so one warm cache can serve every
+//! point of a grid that shares a topology — across worker counts,
+//! thresholds, deadlines, policies and seeds.
+//!
+//! [`SurvivorCachePool`] is that hand-off point. Threads check a cache
+//! out before a point and return it after; if another thread holds the
+//! pool entry, the point simply runs with a cold cache (correct, just
+//! unwarmed — memoization can never change a result, only skip
+//! compiles, which is what keeps the parallel sweep bitwise identical
+//! to the serial one; property-tested in `tests/policy_equivalence.rs`).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::sim::{ClusterSim, CommModel, SurvivorScheduleCache};
+use crate::topology::TopologyKind;
+
+/// The comm-model identity a survivor cache is valid for: topology kind
+/// plus the exact link-parameter bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PoolKey {
+    kind: TopologyKind,
+    latency: u64,
+    bandwidth: u64,
+    bytes: u64,
+}
+
+fn pool_key(model: &CommModel) -> Option<PoolKey> {
+    match *model {
+        // the fixed-T^c model compiles nothing; pooling buys nothing
+        CommModel::Fixed(_) => None,
+        CommModel::Ring { latency, bandwidth, bytes } => Some(PoolKey {
+            kind: TopologyKind::Ring,
+            latency: latency.to_bits(),
+            bandwidth: bandwidth.to_bits(),
+            bytes: bytes.to_bits(),
+        }),
+        CommModel::Topology { kind, latency, bandwidth, bytes } => {
+            Some(PoolKey {
+                kind,
+                latency: latency.to_bits(),
+                bandwidth: bandwidth.to_bits(),
+                bytes: bytes.to_bits(),
+            })
+        }
+    }
+}
+
+/// Shared pool of warm [`SurvivorScheduleCache`]s, keyed by comm model.
+/// One per [`super::SweepSpec::run`]; threads check caches in and out
+/// around each grid point.
+#[derive(Debug, Default)]
+pub struct SurvivorCachePool {
+    slots: Mutex<HashMap<PoolKey, Vec<SurvivorScheduleCache>>>,
+}
+
+impl SurvivorCachePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Hand `sim` a warm cache for its comm model, if the pool has one.
+    pub fn lend(&self, sim: ClusterSim) -> ClusterSim {
+        let Some(key) = pool_key(sim.comm_model()) else { return sim };
+        let cache = {
+            let mut slots = self.slots.lock().expect("cache pool poisoned");
+            slots.get_mut(&key).and_then(Vec::pop)
+        };
+        match cache {
+            Some(c) => sim.with_survivor_cache(c),
+            None => sim,
+        }
+    }
+
+    /// Take `sim`'s (now warmer) cache back into the pool.
+    pub fn reclaim(&self, sim: &mut ClusterSim) {
+        let Some(key) = pool_key(sim.comm_model()) else { return };
+        let cache = sim.take_survivor_cache();
+        let mut slots = self.slots.lock().expect("cache pool poisoned");
+        slots.entry(key).or_default().push(cache);
+    }
+
+    /// Total compiled survivor schedules currently pooled (test /
+    /// diagnostics introspection).
+    pub fn compiled_count(&self) -> usize {
+        let slots = self.slots.lock().expect("cache pool poisoned");
+        slots
+            .values()
+            .flat_map(|v| v.iter())
+            .map(SurvivorScheduleCache::compiled_count)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, NoiseKind, StragglerKind};
+
+    fn drop_heavy() -> ClusterConfig {
+        ClusterConfig {
+            workers: 8,
+            accumulations: 4,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            noise: NoiseKind::Exponential { mean: 0.5 },
+            stragglers: StragglerKind::Uniform { p: 0.4, delay: 5.0 },
+            topology: Some(TopologyKind::Torus { rows: 0 }),
+            comm_drop_deadline: 1.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pool_round_trip_amortizes_compiles() {
+        let pool = SurvivorCachePool::new();
+        let cfg = drop_heavy();
+        // first point: cold cache, compiles happen
+        let mut sim = pool.lend(ClusterSim::new(&cfg, 1));
+        for _ in 0..15 {
+            sim.step(None);
+        }
+        pool.reclaim(&mut sim);
+        let warmed = pool.compiled_count();
+        assert!(warmed > 0, "drop-heavy config must compile something");
+        // second point, different N, same comm model: reuses the warm
+        // cache, and identical outcomes to a cold run
+        let mut cfg2 = cfg.clone();
+        cfg2.workers = 5;
+        let mut pooled = pool.lend(ClusterSim::new(&cfg2, 2));
+        let mut cold = ClusterSim::new(&cfg2, 2);
+        for _ in 0..15 {
+            let a = pooled.step(None);
+            let b = cold.step(None);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+        }
+        pool.reclaim(&mut pooled);
+        assert!(
+            pool.compiled_count() >= warmed,
+            "reclaimed cache keeps its compiles"
+        );
+    }
+
+    #[test]
+    fn fixed_model_is_not_pooled() {
+        let pool = SurvivorCachePool::new();
+        let mut cfg = drop_heavy();
+        cfg.topology = None;
+        let mut sim = pool.lend(ClusterSim::new(&cfg, 1));
+        sim.step(None);
+        pool.reclaim(&mut sim);
+        assert_eq!(pool.compiled_count(), 0);
+    }
+}

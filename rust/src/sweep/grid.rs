@@ -1,13 +1,17 @@
 //! Scenario grids: the `(workers × threshold × deadline × seed)`
-//! cartesian product, its fixed serial enumeration order, and the
+//! cartesian product — or, with [`SweepSpec::policies`], the
+//! `(workers × policy × seed)` product over arbitrary
+//! [`DropPolicy`]s — its fixed serial enumeration order, and the
 //! per-point measurement.
 
 use std::sync::Arc;
 
 use crate::config::ClusterConfig;
+use crate::policy::DropPolicy;
 use crate::rng::SplitMix64;
 use crate::sim::{ClusterSim, StepOutcome};
 
+use super::cache::SurvivorCachePool;
 use super::runner::run_indexed;
 
 /// Domain-separation constant mixed into every per-point sim seed so
@@ -25,10 +29,20 @@ pub struct SweepSpec {
     pub base: ClusterConfig,
     /// Cluster sizes `N`.
     pub workers: Vec<usize>,
-    /// DropCompute thresholds `tau` (0.0 = DropCompute off).
+    /// DropCompute thresholds `tau` (0.0 = DropCompute off). Ignored
+    /// when [`Self::policies`] is set.
     pub thresholds: Vec<f64>,
     /// DropComm bounded-wait deadlines (0.0 = wait for everyone).
+    /// Ignored when [`Self::policies`] is set.
     pub deadlines: Vec<f64>,
+    /// Policy axis: when non-empty the grid is
+    /// `workers × policies × seeds` and each point steps under its
+    /// [`DropPolicy`] — subsuming the `thresholds`/`deadlines`/`period`
+    /// axes (a legacy `(tau, deadline)` point is the policy
+    /// `tau=T+deadline=D`; bitwise identical, property-tested) and
+    /// adding what they cannot express: per-phase deadlines, preemption
+    /// variants, Local-SGD arms, compositions — all in one axis.
+    pub policies: Vec<DropPolicy>,
     /// Seed axis. The same seed value across other axes gives paired
     /// (common-random-number) comparisons between arms.
     pub seeds: Vec<u64>,
@@ -46,13 +60,16 @@ pub struct SweepSpec {
     pub progress: bool,
 }
 
-/// Coordinates of one grid point.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Coordinates of one grid point. On the policy axis
+/// ([`SweepSpec::policies`]) `policy` is set and `threshold`/`deadline`
+/// carry its resolved compute/step-deadline values for display.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepParams {
     pub workers: usize,
     pub threshold: f64,
     pub deadline: f64,
     pub seed: u64,
+    pub policy: Option<DropPolicy>,
 }
 
 /// Measured outcome of one grid point.
@@ -64,6 +81,9 @@ pub struct SweepPoint {
     pub threshold: f64,
     pub deadline: f64,
     pub seed: u64,
+    /// Spec string of the point's [`DropPolicy`] (policy-axis sweeps
+    /// only; `None` on the legacy axes).
+    pub policy: Option<String>,
     pub mean_iter_time: f64,
     pub mean_compute_time: f64,
     /// Useful micro-batches per second (dropped work excluded).
@@ -87,12 +107,21 @@ impl SweepSpec {
             workers,
             thresholds: vec![0.0],
             deadlines,
+            policies: Vec::new(),
             seeds: vec![0],
             iters: 50,
             period: 1,
             jobs: 0,
             progress: false,
         }
+    }
+
+    /// Sweep [`DropPolicy`]s instead of the `thresholds × deadlines`
+    /// product (see the field docs). The grid becomes
+    /// `workers × policies × seeds`.
+    pub fn policies(mut self, policies: &[DropPolicy]) -> Self {
+        self.policies = policies.to_vec();
+        self
     }
 
     pub fn workers(mut self, ns: &[usize]) -> Self {
@@ -137,12 +166,18 @@ impl SweepSpec {
         self
     }
 
-    /// Number of grid points (product of the four axes).
+    /// Number of grid points: `workers × thresholds × deadlines × seeds`
+    /// on the legacy axes, `workers × policies × seeds` on the policy
+    /// axis.
     pub fn len(&self) -> usize {
-        self.workers.len()
-            * self.thresholds.len()
-            * self.deadlines.len()
-            * self.seeds.len()
+        if self.policies.is_empty() {
+            self.workers.len()
+                * self.thresholds.len()
+                * self.deadlines.len()
+                * self.seeds.len()
+        } else {
+            self.workers.len() * self.policies.len() * self.seeds.len()
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -150,18 +185,33 @@ impl SweepSpec {
     }
 
     /// Coordinates of point `index` in the fixed serial enumeration
-    /// order: workers slowest, then thresholds, then deadlines, seeds
-    /// fastest — the order a quadruple `for` loop would visit.
+    /// order: workers slowest, then thresholds, then deadlines (or the
+    /// policy axis in their place), seeds fastest — the order a nested
+    /// `for` loop would visit.
     pub fn params(&self, index: usize) -> SweepParams {
         debug_assert!(index < self.len());
         let seed = self.seeds[index % self.seeds.len()];
         let index = index / self.seeds.len();
-        let deadline = self.deadlines[index % self.deadlines.len()];
-        let index = index / self.deadlines.len();
-        let threshold = self.thresholds[index % self.thresholds.len()];
-        let index = index / self.thresholds.len();
-        let workers = self.workers[index % self.workers.len()];
-        SweepParams { workers, threshold, deadline, seed }
+        if self.policies.is_empty() {
+            let deadline = self.deadlines[index % self.deadlines.len()];
+            let index = index / self.deadlines.len();
+            let threshold = self.thresholds[index % self.thresholds.len()];
+            let index = index / self.thresholds.len();
+            let workers = self.workers[index % self.workers.len()];
+            SweepParams { workers, threshold, deadline, seed, policy: None }
+        } else {
+            let policy = self.policies[index % self.policies.len()].clone();
+            let index = index / self.policies.len();
+            let workers = self.workers[index % self.workers.len()];
+            let eff = policy.effective();
+            SweepParams {
+                workers,
+                threshold: eff.tau.unwrap_or(0.0),
+                deadline: eff.step_deadline.unwrap_or(0.0),
+                seed,
+                policy: Some(policy),
+            }
+        }
     }
 
     /// The simulator seed for a point: a pure function of the point's
@@ -174,31 +224,68 @@ impl SweepSpec {
         SplitMix64::new(params.seed ^ SEED_DOMAIN).next_u64()
     }
 
+    /// The whole drop surface of point `p` as one [`DropPolicy`]: the
+    /// point's own policy on the policy axis (with the spec-level
+    /// Local-SGD period folded in if the policy doesn't carry one), or
+    /// the legacy `(threshold, deadline, period)` coordinates composed
+    /// into the equivalent policy.
+    fn point_policy(&self, p: &SweepParams) -> DropPolicy {
+        let mut policy = match &p.policy {
+            Some(policy) => policy.clone(),
+            None => {
+                let mut policy = DropPolicy::None;
+                if p.threshold > 0.0 {
+                    policy = policy.and(DropPolicy::compute_tau(p.threshold));
+                }
+                if p.deadline > 0.0 {
+                    policy = policy.and(DropPolicy::comm_deadline(p.deadline));
+                }
+                policy
+            }
+        };
+        if self.period > 1 && policy.local_sgd_h().is_none() {
+            policy = policy.and(DropPolicy::local_sgd(self.period));
+        }
+        policy
+    }
+
     /// Measure one grid point. Pure per index — this is what makes the
     /// parallel run bitwise identical to the serial one.
     pub fn run_point(&self, index: usize) -> SweepPoint {
+        self.run_point_pooled(index, &SurvivorCachePool::new())
+    }
+
+    /// [`Self::run_point`] borrowing warm survivor schedules from
+    /// `pool` (pure memoization — bitwise the same with or without a
+    /// pool, property-tested in `tests/policy_equivalence.rs`).
+    pub fn run_point_pooled(
+        &self,
+        index: usize,
+        pool: &SurvivorCachePool,
+    ) -> SweepPoint {
         let p = self.params(index);
+        let policy = self.point_policy(&p);
         let mut cfg = self.base.clone();
         cfg.workers = p.workers;
-        cfg.comm_drop_deadline = p.deadline;
-        let mut sim = ClusterSim::new(&cfg, Self::sim_seed(&p));
-        let threshold = if p.threshold > 0.0 { Some(p.threshold) } else { None };
+        // the point's policy is its entire drop surface; neutralize the
+        // base config's own deadline so nothing is applied twice
+        cfg.comm_drop_deadline = 0.0;
+        let sim = ClusterSim::new(&cfg, Self::sim_seed(&p))
+            .with_policy(policy.clone());
+        let mut sim = pool.lend(sim);
         let mut out = StepOutcome::default();
         let mut t_sum = 0.0;
         let mut compute_sum = 0.0;
         let mut completed = 0usize;
         for _ in 0..self.iters {
-            if self.period > 1 {
-                sim.local_sgd_period_into(self.period, threshold, &mut out);
-            } else {
-                sim.step_into(threshold, &mut out);
-            }
+            sim.step_installed_into(&mut out);
             t_sum += out.iter_time;
             compute_sum += out.compute_time;
             completed += out.total_completed();
         }
+        pool.reclaim(&mut sim);
         // Local-SGD schedules one micro-batch per local step
-        let per_iter = if self.period > 1 { self.period } else { cfg.accumulations };
+        let per_iter = policy.local_sgd_h().unwrap_or(cfg.accumulations);
         let scheduled = self.iters * p.workers * per_iter;
         SweepPoint {
             index,
@@ -206,6 +293,7 @@ impl SweepSpec {
             threshold: p.threshold,
             deadline: p.deadline,
             seed: p.seed,
+            policy: p.policy.as_ref().map(DropPolicy::spec),
             mean_iter_time: t_sum / self.iters as f64,
             mean_compute_time: compute_sum / self.iters as f64,
             throughput: completed as f64 / t_sum,
@@ -220,12 +308,15 @@ impl SweepSpec {
     /// Run the whole grid, fanning points over the thread pool. Output
     /// is in serial enumeration order and bitwise identical to a
     /// `jobs = 1` run (property-tested in `tests/perf_equivalence.rs`).
+    /// One [`SurvivorCachePool`] spans the run, so points sharing a
+    /// comm model reuse each other's compiled survivor schedules.
     pub fn run(&self) -> SweepResult {
         let spec = Arc::new(self.clone());
+        let pool = Arc::new(SurvivorCachePool::new());
         let label = if self.progress { Some("sweep") } else { None };
         let points =
             run_indexed(self.len(), self.jobs, label, move |i| {
-                spec.run_point(i)
+                spec.run_point_pooled(i, &pool)
             });
         SweepResult { points }
     }
@@ -237,9 +328,14 @@ impl SweepResult {
     pub fn to_json(&self) -> String {
         let mut s = String::from("{\n  \"bench\": \"sweep\",\n  \"points\": [\n");
         for (i, p) in self.points.iter().enumerate() {
+            let policy = match &p.policy {
+                // policy spec strings contain no JSON-special characters
+                Some(spec) => format!("\"policy\": \"{spec}\", "),
+                None => String::new(),
+            };
             s.push_str(&format!(
                 "    {{\"index\": {}, \"workers\": {}, \"threshold\": {:?}, \
-                 \"deadline\": {:?}, \"seed\": {}, \"mean_iter_time\": {:?}, \
+                 \"deadline\": {:?}, \"seed\": {}, {}\"mean_iter_time\": {:?}, \
                  \"mean_compute_time\": {:?}, \"throughput\": {:?}, \
                  \"drop_rate\": {:?}}}{}\n",
                 p.index,
@@ -247,6 +343,7 @@ impl SweepResult {
                 p.threshold,
                 p.deadline,
                 p.seed,
+                policy,
                 p.mean_iter_time,
                 p.mean_compute_time,
                 p.throughput,
@@ -296,7 +393,8 @@ mod tests {
                             workers: w,
                             threshold: tau,
                             deadline: 0.0,
-                            seed
+                            seed,
+                            policy: None,
                         },
                         "idx={idx}"
                     );
@@ -308,12 +406,19 @@ mod tests {
 
     #[test]
     fn sim_seed_is_pure_and_decorrelates_adjacent_seeds() {
-        let a = SweepParams { workers: 2, threshold: 0.0, deadline: 0.0, seed: 0 };
-        let b = SweepParams { workers: 2, threshold: 0.0, deadline: 0.0, seed: 1 };
+        let p = |workers, threshold, deadline, seed| SweepParams {
+            workers,
+            threshold,
+            deadline,
+            seed,
+            policy: None,
+        };
+        let a = p(2, 0.0, 0.0, 0);
+        let b = p(2, 0.0, 0.0, 1);
         assert_eq!(SweepSpec::sim_seed(&a), SweepSpec::sim_seed(&a));
         assert_ne!(SweepSpec::sim_seed(&a), SweepSpec::sim_seed(&b));
         // the sim seed ignores the non-seed axes: paired comparisons
-        let c = SweepParams { workers: 64, threshold: 9.0, deadline: 2.0, seed: 0 };
+        let c = p(64, 9.0, 2.0, 0);
         assert_eq!(SweepSpec::sim_seed(&a), SweepSpec::sim_seed(&c));
     }
 
@@ -368,6 +473,109 @@ mod tests {
         assert_eq!(r.points[0].drop_rate, 0.0);
         assert!(r.points[1].drop_rate > 0.0);
         assert!(r.points[1].drop_rate < 1.0);
+    }
+
+    #[test]
+    fn policy_axis_subsumes_legacy_axes_bitwise() {
+        // every legacy (tau, deadline) cell expressed as one DropPolicy
+        // must reproduce the legacy grid bit for bit, point for point
+        let mut cfg = base();
+        cfg.topology = Some(crate::topology::TopologyKind::Ring);
+        cfg.link_latency = 1e-4;
+        cfg.link_bandwidth = 1e9;
+        cfg.grad_bytes = 4e6;
+        let legacy = SweepSpec::new(cfg.clone())
+            .workers(&[3, 6])
+            .thresholds(&[0.0, 2.0])
+            .deadlines(&[0.0, 1.0])
+            .seeds(&[4, 5])
+            .iters(6)
+            .jobs(1)
+            .run();
+        let mut policies = Vec::new();
+        for &tau in &[0.0, 2.0] {
+            for &d in &[0.0, 1.0] {
+                let mut p = DropPolicy::None;
+                if tau > 0.0 {
+                    p = p.and(DropPolicy::compute_tau(tau));
+                }
+                if d > 0.0 {
+                    p = p.and(DropPolicy::comm_deadline(d));
+                }
+                policies.push(p);
+            }
+        }
+        let unified = SweepSpec::new(cfg)
+            .workers(&[3, 6])
+            .policies(&policies)
+            .seeds(&[4, 5])
+            .iters(6)
+            .jobs(1)
+            .run();
+        assert_eq!(legacy.points.len(), unified.points.len());
+        for (a, b) in legacy.points.iter().zip(&unified.points) {
+            assert_eq!(a.workers, b.workers);
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(
+                a.mean_iter_time.to_bits(),
+                b.mean_iter_time.to_bits(),
+                "point {} ({:?})",
+                a.index,
+                b.policy
+            );
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+            assert_eq!(a.drop_rate.to_bits(), b.drop_rate.to_bits());
+            assert!(b.policy.is_some());
+            assert!(a.policy.is_none());
+        }
+    }
+
+    #[test]
+    fn policy_axis_sweeps_per_phase_and_local_sgd() {
+        let mut cfg = base();
+        cfg.topology = Some(crate::topology::TopologyKind::Torus { rows: 0 });
+        cfg.link_latency = 1e-4;
+        cfg.link_bandwidth = 1e9;
+        cfg.grad_bytes = 4e6;
+        cfg.stragglers =
+            crate::config::StragglerKind::Uniform { p: 0.4, delay: 4.0 };
+        let policies = [
+            DropPolicy::None,
+            DropPolicy::parse("phase-deadline=1/0.2/0.2").unwrap(),
+            DropPolicy::parse("local-sgd=5+tau=0.9").unwrap(),
+        ];
+        let r = SweepSpec::new(cfg)
+            .workers(&[6])
+            .policies(&policies)
+            .seeds(&[2])
+            .iters(10)
+            .jobs(1)
+            .run();
+        assert_eq!(r.points.len(), 3);
+        assert_eq!(r.points[0].policy.as_deref(), Some("none"));
+        assert_eq!(
+            r.points[1].policy.as_deref(),
+            Some("phase-deadline=1/0.2/0.2")
+        );
+        assert_eq!(r.points[0].drop_rate, 0.0);
+        assert!(
+            r.points[1].drop_rate > 0.0,
+            "per-phase budgets must drop under heavy stragglers"
+        );
+        assert!(
+            r.points[1].mean_iter_time < r.points[0].mean_iter_time,
+            "dropping the tail must shorten the step"
+        );
+        // the Local-SGD arm counts scheduled work per local step
+        assert!(r.points[2].drop_rate > 0.0);
+        assert!(r.points[2].drop_rate < 1.0);
+        // JSON carries the policy axis and round-trips
+        let doc = Json::parse(&r.to_json()).expect("valid JSON");
+        let pts = doc.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(
+            pts[1].get("policy").and_then(Json::as_str),
+            Some("phase-deadline=1/0.2/0.2")
+        );
     }
 
     #[test]

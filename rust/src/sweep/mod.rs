@@ -8,9 +8,15 @@
 //! that product into a first-class object and runs it as fast as the
 //! machine allows:
 //!
-//! * [`grid`] — [`SweepSpec`] (builder for the 4-axis grid, fixed
-//!   serial enumeration order, per-point derived seeds),
-//!   [`SweepPoint`] / [`SweepResult`] (+ JSON rendering);
+//! * [`grid`] — [`SweepSpec`] (builder for the 4-axis grid — or the
+//!   `workers × policies × seeds` grid over
+//!   [`crate::policy::DropPolicy`]s, which subsumes the
+//!   threshold/deadline/period axes — fixed serial enumeration order,
+//!   per-point derived seeds), [`SweepPoint`] / [`SweepResult`]
+//!   (+ JSON rendering);
+//! * [`cache`] — [`SurvivorCachePool`], warm survivor-schedule caches
+//!   handed between points that share a comm model, so grid warmup
+//!   compiles are paid once per topology instead of once per point;
 //! * [`runner`] — [`run_indexed`], the deterministic parallel map over
 //!   [`crate::util::ThreadPool`] with progress/ETA reporting.
 //!
@@ -28,8 +34,10 @@
 //! `sweep` CLI subcommands (`--jobs`, `[sweep]` config section), and
 //! the figure benches.
 
+pub mod cache;
 pub mod grid;
 pub mod runner;
 
+pub use cache::SurvivorCachePool;
 pub use grid::{SweepParams, SweepPoint, SweepResult, SweepSpec};
 pub use runner::{resolve_jobs, run_indexed, Progress};

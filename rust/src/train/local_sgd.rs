@@ -11,6 +11,7 @@ use std::path::Path;
 use crate::config::Config;
 use crate::data::ShardedLoader;
 use crate::metrics::{RunLog, StepRecord};
+use crate::policy::DropPolicy;
 use crate::runtime::ModelRuntime;
 use crate::sim::{ClusterSim, StepOutcome};
 use crate::util::{Result, Stopwatch};
@@ -25,6 +26,9 @@ pub struct LocalSgdTrainer {
     loaders: Vec<ShardedLoader>,
     sim: ClusterSim,
     pub threshold: Option<f64>,
+    /// The period's full drop surface: `local-sgd=H` composed with the
+    /// per-local-step threshold and the config's comm-side policy.
+    pub drop_policy: DropPolicy,
     virtual_time: f64,
     /// Reusable period-timing outcome
     /// ([`ClusterSim::local_sgd_period_into`] recycles its vectors).
@@ -51,7 +55,19 @@ impl LocalSgdTrainer {
         // one micro-batch per local step
         let mut sim_cfg = cfg.cluster.clone();
         sim_cfg.accumulations = 1;
-        let sim = ClusterSim::new(&sim_cfg, cfg.train.seed ^ 0x10CA1);
+        // the unified drop surface: the config's policy, a local-sgd
+        // clause (from the policy itself or the train config) and the
+        // per-local-step threshold
+        let mut policy = cfg.effective_policy();
+        if policy.local_sgd_h().is_none() {
+            policy = policy
+                .and(DropPolicy::local_sgd(cfg.train.local_sgd_period));
+        }
+        if let Some(tau) = threshold {
+            policy = policy.and(DropPolicy::compute_tau(tau));
+        }
+        let sim = ClusterSim::new(&sim_cfg, cfg.train.seed ^ 0x10CA1)
+            .with_policy(policy.clone());
         Ok(Self {
             cfg: cfg.clone(),
             replicas: vec![params; cfg.cluster.workers],
@@ -59,18 +75,25 @@ impl LocalSgdTrainer {
             loaders,
             sim,
             threshold,
+            drop_policy: policy,
             virtual_time: 0.0,
             outcome: StepOutcome::default(),
         })
+    }
+
+    /// The synchronization period H the policy measures.
+    pub fn period_len(&self) -> usize {
+        self.drop_policy
+            .local_sgd_h()
+            .unwrap_or(self.cfg.train.local_sgd_period)
     }
 
     /// One synchronization period: `H` local steps then averaging.
     /// Returns (record, local updates performed).
     pub fn period(&mut self, period_idx: usize) -> Result<StepRecord> {
         let sw = Stopwatch::start();
-        let h = self.cfg.train.local_sgd_period;
-        self.sim
-            .local_sgd_period_into(h, self.threshold, &mut self.outcome);
+        let h = self.period_len();
+        self.sim.step_installed_into(&mut self.outcome);
         let outcome = &self.outcome;
 
         let lr = self.cfg.train.lr;

@@ -17,6 +17,7 @@ use crate::analysis::{choose_threshold, threshold_for_drop_rate, ThresholdChoice
 use crate::config::{Compensation, Config, ThresholdPolicy};
 use crate::data::ShardedLoader;
 use crate::metrics::{RunLog, StepRecord};
+use crate::policy::DropPolicy;
 use crate::runtime::ModelRuntime;
 use crate::sim::ClusterSim;
 use crate::util::{Result, Stopwatch};
@@ -35,8 +36,15 @@ pub struct Trainer {
     loaders: Vec<ShardedLoader>,
     eval_loader: ShardedLoader,
     sim: ClusterSim,
-    /// Chosen compute threshold (None = vanilla synchronous).
+    /// Chosen compute threshold (None = vanilla synchronous). Kept for
+    /// reporting/back-compat; [`Self::drop_policy`] is what stepping
+    /// actually consumes (`calibrate` keeps the two in sync — mutating
+    /// this field directly changes nothing).
     pub threshold: Option<f64>,
+    /// The full drop surface the timing sim steps under: the config's
+    /// policy ([`Config::effective_policy`]) with the calibrated
+    /// threshold composed in.
+    pub drop_policy: DropPolicy,
     /// Calibration outcome, if Algorithm 2 ran.
     pub calibration: Option<ThresholdChoice>,
     pub norm: GradNorm,
@@ -81,7 +89,16 @@ impl Trainer {
             &cfg.data,
             usize::MAX / 2, // shard far away from any training worker
         );
-        let sim = ClusterSim::new(&cfg.cluster, cfg.train.seed ^ 0x5EED);
+        let base_policy = cfg.effective_policy();
+        if base_policy.local_sgd_h().is_some() {
+            return Err(crate::util::Error::Config(
+                "a local-sgd policy clause requires the local-sgd trainer \
+                 (`local-sgd` subcommand)"
+                    .into(),
+            ));
+        }
+        let sim = ClusterSim::new(&cfg.cluster, cfg.train.seed ^ 0x5EED)
+            .with_policy(base_policy.clone());
         Ok(Self {
             cfg: cfg.clone(),
             runtime,
@@ -91,6 +108,7 @@ impl Trainer {
             eval_loader,
             sim,
             threshold: None,
+            drop_policy: base_policy,
             calibration: None,
             norm: GradNorm::Computed,
             virtual_time: 0.0,
@@ -130,6 +148,14 @@ impl Trainer {
             }
         };
         self.threshold = threshold;
+        // fold the chosen threshold into the unified drop surface
+        self.drop_policy = {
+            let mut p = self.cfg.effective_policy();
+            if let Some(tau) = threshold {
+                p = p.and(DropPolicy::compute_tau(tau));
+            }
+            p
+        };
 
         // Compensation planning (§4.5): R = M/M~ - 1 from the predicted
         // completion rate.
@@ -173,14 +199,14 @@ impl Trainer {
         // Timing + drop decisions from the cluster simulator. If the
         // batch was inflated (IncreasedBatch) rebuild the sim dimension.
         let outcome = if self.accums == self.sim.accums {
-            self.sim.step(self.threshold)
+            self.sim.step_with(&self.drop_policy)
         } else {
             // temporary sim with adjusted accumulation count
             let mut cfg = self.cfg.cluster.clone();
             cfg.accumulations = self.accums;
             let mut sim =
                 ClusterSim::new(&cfg, self.cfg.train.seed ^ step as u64);
-            sim.step(self.threshold)
+            sim.step_with(&self.drop_policy)
         };
 
         self.runtime.upload_params(self.params.tensors())?;

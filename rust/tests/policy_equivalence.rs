@@ -1,0 +1,375 @@
+//! Property tests for the unified `DropPolicy` surface: the
+//! policy-driven timing paths must be bitwise equal to the legacy
+//! tau/deadline code they replaced, the per-phase-deadline compiled
+//! scan must be bitwise equal to its event-queue oracle, a single
+//! lumped per-phase budget must be bitwise the step-level CommDeadline,
+//! and the sweep's policy axis / survivor-cache pooling must reproduce
+//! the legacy grids bit for bit.
+
+use dropcompute::config::{ClusterConfig, NoiseKind, StragglerKind};
+use dropcompute::policy::{cumulative_offsets, DropPolicy};
+use dropcompute::rng::Xoshiro256pp;
+use dropcompute::sim::{
+    ClusterSim, CommModel, CompiledSchedule, PhaseBounded, PreemptionMode,
+    ScheduleScratch,
+};
+use dropcompute::sweep::{SurvivorCachePool, SweepSpec};
+use dropcompute::topology::TopologyKind;
+
+/// Arrivals mixing tight clusters, moderate lateness, far stragglers
+/// and negatives — the same regime grid the perf tests use.
+fn random_arrivals(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..n)
+        .map(|_| match rng.next_below(4) {
+            0 => rng.next_f64() * 0.01,
+            1 => rng.next_f64() * 5.0,
+            2 => 20.0 + rng.next_f64() * 50.0,
+            _ => -rng.next_f64(),
+        })
+        .collect()
+}
+
+/// Random budget lists spanning single lumped, short, and deep shapes,
+/// including zero budgets (flat cutoffs).
+fn random_budgets(rng: &mut Xoshiro256pp) -> Vec<f64> {
+    let len = 1 + rng.next_below(6) as usize;
+    (0..len)
+        .map(|_| match rng.next_below(4) {
+            0 => 0.0,
+            1 => rng.next_f64() * 0.5,
+            2 => rng.next_f64() * 5.0,
+            _ => rng.next_f64() * 40.0,
+        })
+        .collect()
+}
+
+#[test]
+fn per_phase_compiled_scan_bitwise_equals_event_queue_oracle() {
+    // the new capability's core invariant: the compiled per-phase scan
+    // and the event-queue oracle agree to the bit — drop decisions,
+    // survivor counts and completion times — over every topology,
+    // random arrivals and random budget shapes.
+    let mut rng = Xoshiro256pp::seed_from_u64(0x9A5E_D1DE);
+    let mut scratch = ScheduleScratch::default();
+    let mut dropped = Vec::new();
+    for kind in TopologyKind::ALL {
+        for n in [1usize, 2, 3, 5, 8, 12, 16, 24] {
+            let model = CommModel::Topology {
+                kind,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                bytes: 4e6,
+            };
+            let schedule = model.schedule_for(n).expect("topology model");
+            let compiled =
+                CompiledSchedule::compile(&schedule, 1e-4, 1e9, 4e6);
+            for case in 0..25 {
+                let arrivals = random_arrivals(n, &mut rng);
+                let offsets = cumulative_offsets(&random_budgets(&mut rng));
+                let (mask, want) = model.per_phase_bounded_completion(
+                    &arrivals,
+                    &offsets,
+                    Some(&schedule),
+                );
+                let got = compiled.bounded_completion_with(
+                    &arrivals,
+                    &offsets,
+                    &mut scratch,
+                    &mut dropped,
+                );
+                let survivors = mask.iter().filter(|&&s| s).count();
+                for (w, (&d, &s)) in dropped.iter().zip(&mask).enumerate() {
+                    assert_eq!(
+                        d, !s,
+                        "{} n={n} case={case} worker {w}",
+                        kind.name()
+                    );
+                }
+                match got {
+                    PhaseBounded::Complete(t) => {
+                        assert_eq!(survivors, n, "{} case={case}", kind.name());
+                        assert_eq!(
+                            t.to_bits(),
+                            want.to_bits(),
+                            "{} n={n} case={case}",
+                            kind.name()
+                        );
+                    }
+                    PhaseBounded::Dropped { survivors: k, close } => {
+                        assert_eq!(k, survivors);
+                        // reproduce the oracle's completion from the
+                        // scan's (k, close) pair exactly
+                        let t = if k == 0 {
+                            close.max(0.0)
+                        } else {
+                            model.completion_time(&vec![close; k])
+                        };
+                        assert_eq!(
+                            t.to_bits(),
+                            want.to_bits(),
+                            "{} n={n} case={case} k={k}",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lumped_per_phase_budget_bitwise_equals_comm_deadline() {
+    // acceptance identity: PerPhaseDeadline with one lumped budget is
+    // the step-level CommDeadline — end to end through ClusterSim, all
+    // four topologies plus the fixed-T^c model, compiled and reference
+    // arms, drop-heavy random stepping.
+    let topos: Vec<Option<TopologyKind>> = std::iter::once(None)
+        .chain(TopologyKind::ALL.iter().copied().map(Some))
+        .collect();
+    for topo in topos {
+        for reference in [false, true] {
+            for deadline in [0.0, 0.8, 3.0] {
+                let cfg = ClusterConfig {
+                    workers: 14,
+                    accumulations: 6,
+                    microbatch_mean: 0.45,
+                    microbatch_std: 0.02,
+                    noise: NoiseKind::LogNormal { mean: 0.3, var: 0.2 },
+                    stragglers: StragglerKind::Uniform {
+                        p: 0.25,
+                        delay: 4.0,
+                    },
+                    topology: topo,
+                    link_latency: 1e-4,
+                    link_bandwidth: 2e9,
+                    grad_bytes: 1e7,
+                    ..Default::default()
+                };
+                let build = |policy: DropPolicy| {
+                    let sim = ClusterSim::new(&cfg, 0x1DEA).with_policy(policy);
+                    if reference {
+                        sim.with_reference_timing()
+                    } else {
+                        sim
+                    }
+                };
+                let mut lumped = build(DropPolicy::per_phase_deadline(vec![
+                    deadline,
+                ]));
+                let mut step =
+                    build(DropPolicy::comm_deadline(deadline));
+                for s in 0..20 {
+                    let a = lumped.step(Some(6.0));
+                    let b = step.step(Some(6.0));
+                    assert_eq!(
+                        a.completed, b.completed,
+                        "{topo:?} ref={reference} d={deadline} step {s}"
+                    );
+                    assert_eq!(
+                        a.iter_time.to_bits(),
+                        b.iter_time.to_bits(),
+                        "{topo:?} ref={reference} d={deadline} step {s}"
+                    );
+                    assert_eq!(
+                        a.compute_time.to_bits(),
+                        b.compute_time.to_bits()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn policy_driven_stepping_bitwise_equals_legacy_paths() {
+    // every legacy (tau, preemption, deadline, H) combination expressed
+    // as one DropPolicy must step bitwise identically to the legacy
+    // call surface, across all four topologies.
+    for kind in TopologyKind::ALL {
+        let cfg = ClusterConfig {
+            workers: 10,
+            accumulations: 6,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            noise: NoiseKind::Exponential { mean: 0.4 },
+            stragglers: StragglerKind::Uniform { p: 0.2, delay: 3.0 },
+            topology: Some(kind),
+            link_latency: 1e-4,
+            link_bandwidth: 1e9,
+            grad_bytes: 4e6,
+            comm_drop_deadline: 1.2,
+            ..Default::default()
+        };
+        // synchronous arms: tau x preemption against step()
+        for (tau, mode) in [
+            (None, PreemptionMode::Preemptive),
+            (Some(4.0), PreemptionMode::Preemptive),
+            (Some(4.0), PreemptionMode::BetweenAccumulations),
+        ] {
+            let mut legacy =
+                ClusterSim::new(&cfg, 0xBEA7).with_preemption(mode);
+            let mut policy = DropPolicy::comm_deadline(1.2);
+            if let Some(t) = tau {
+                policy = policy.and(
+                    DropPolicy::compute_tau(t).with_preemption(mode),
+                );
+            }
+            let mut unified = ClusterSim::new(&cfg, 0xBEA7);
+            for step in 0..12 {
+                let a = legacy.step(tau);
+                let b = unified.step_with(&policy);
+                assert_eq!(
+                    a.completed,
+                    b.completed,
+                    "{} tau={tau:?} {mode:?} step {step}",
+                    kind.name()
+                );
+                assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+                assert_eq!(
+                    a.compute_time.to_bits(),
+                    b.compute_time.to_bits()
+                );
+            }
+        }
+        // Local-SGD arm against local_sgd_period()
+        let mut legacy = ClusterSim::new(&cfg, 0x10CA);
+        let mut unified = ClusterSim::new(&cfg, 0x10CA);
+        let policy = DropPolicy::parse("local-sgd=5+tau=0.9+deadline=1.2")
+            .expect("valid spec");
+        for period in 0..8 {
+            let a = legacy.local_sgd_period(5, Some(0.9));
+            let b = unified.step_with(&policy);
+            assert_eq!(a.completed, b.completed, "{} {period}", kind.name());
+            assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+        }
+    }
+}
+
+#[test]
+fn sweep_policy_axis_and_cache_pool_reproduce_legacy_grid() {
+    // the policy axis must reproduce the legacy thresholds x deadlines
+    // grid bit for bit — serial, parallel, and through the pooled
+    // survivor caches (memoization must be invisible).
+    for kind in [TopologyKind::Ring, TopologyKind::Torus { rows: 0 }] {
+        let base = ClusterConfig {
+            workers: 4,
+            accumulations: 5,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            noise: NoiseKind::Exponential { mean: 0.5 },
+            stragglers: StragglerKind::Uniform { p: 0.3, delay: 4.0 },
+            topology: Some(kind),
+            link_latency: 1e-4,
+            link_bandwidth: 1e9,
+            grad_bytes: 4e6,
+            ..Default::default()
+        };
+        let taus = [0.0, 2.5];
+        let deadlines = [0.0, 1.0];
+        let legacy = SweepSpec::new(base.clone())
+            .workers(&[3, 7])
+            .thresholds(&taus)
+            .deadlines(&deadlines)
+            .seeds(&[1, 2])
+            .iters(6)
+            .jobs(1)
+            .run();
+        let mut policies = Vec::new();
+        for &tau in &taus {
+            for &d in &deadlines {
+                let mut p = DropPolicy::None;
+                if tau > 0.0 {
+                    p = p.and(DropPolicy::compute_tau(tau));
+                }
+                if d > 0.0 {
+                    p = p.and(DropPolicy::comm_deadline(d));
+                }
+                policies.push(p);
+            }
+        }
+        let spec = SweepSpec::new(base)
+            .workers(&[3, 7])
+            .policies(&policies)
+            .seeds(&[1, 2])
+            .iters(6);
+        for jobs in [1usize, 3, 0] {
+            let unified = spec.clone().jobs(jobs).run();
+            assert_eq!(legacy.points.len(), unified.points.len());
+            for (a, b) in legacy.points.iter().zip(&unified.points) {
+                assert_eq!(a.index, b.index);
+                assert_eq!((a.workers, a.seed), (b.workers, b.seed));
+                for (x, y) in [
+                    (a.mean_iter_time, b.mean_iter_time),
+                    (a.mean_compute_time, b.mean_compute_time),
+                    (a.throughput, b.throughput),
+                    (a.drop_rate, b.drop_rate),
+                ] {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{} jobs={jobs} point {} ({:?})",
+                        kind.name(),
+                        a.index,
+                        b.policy
+                    );
+                }
+            }
+        }
+        // pooled vs per-point-fresh caches: identical bits
+        let pool = SurvivorCachePool::new();
+        for i in 0..spec.len() {
+            let fresh = spec.run_point(i);
+            let pooled = spec.run_point_pooled(i, &pool);
+            assert_eq!(
+                fresh.mean_iter_time.to_bits(),
+                pooled.mean_iter_time.to_bits(),
+                "{} pooled point {i}",
+                kind.name()
+            );
+            assert_eq!(
+                fresh.drop_rate.to_bits(),
+                pooled.drop_rate.to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn per_phase_policy_sweeps_and_drops_deeper_than_step_level() {
+    // end-to-end through the sweep: with paired seeds the per-phase
+    // arm's checkpoints subsume the step-level entry check, so it drops
+    // at least as much; with tight follow-on budgets under heavy
+    // stragglers it must drop strictly more somewhere.
+    let base = ClusterConfig {
+        workers: 12,
+        accumulations: 4,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        noise: NoiseKind::Exponential { mean: 0.5 },
+        stragglers: StragglerKind::Uniform { p: 0.4, delay: 3.0 },
+        topology: Some(TopologyKind::Ring),
+        link_latency: 5e-3,
+        link_bandwidth: 1e9,
+        grad_bytes: 4e7,
+        ..Default::default()
+    };
+    let r = SweepSpec::new(base)
+        .workers(&[12])
+        .policies(&[
+            DropPolicy::comm_deadline(1.0),
+            DropPolicy::per_phase_deadline(vec![1.0, 0.0, 0.0, 0.0]),
+        ])
+        .seeds(&[3])
+        .iters(30)
+        .jobs(1)
+        .run();
+    let (step, phase) = (&r.points[0], &r.points[1]);
+    assert!(
+        phase.drop_rate > step.drop_rate,
+        "flat follow-on cutoffs must catch chain-stalled workers the \
+         entry check admits: {} vs {}",
+        phase.drop_rate,
+        step.drop_rate
+    );
+    assert!(phase.drop_rate < 1.0, "not everyone drops");
+}
