@@ -1,0 +1,102 @@
+//! Trace record -> replay -> fit, end to end.
+//!
+//! 1. record a replayable trace from a live straggler-heavy run;
+//! 2. round-trip it through the versioned JSON format;
+//! 3. replay it on both timing paths and verify the recorded outcomes
+//!    reproduce bitwise (the conformance contract);
+//! 4. fit drop budgets (tau + step-level and per-phase DropComm
+//!    deadlines) from the trace and compare the fitted policies by
+//!    replay — the Algorithm-2 analogue for the comm side.
+//!
+//! Run: `cargo run --release --example trace_workflow`
+
+use dropcompute::analysis::{evaluate_policy, fit_budgets};
+use dropcompute::config::{ClusterConfig, NoiseKind, StragglerKind};
+use dropcompute::policy::DropPolicy;
+use dropcompute::sim::{ClusterSim, StepOutcome, TraceRecord};
+use dropcompute::topology::TopologyKind;
+
+fn main() {
+    let cfg = ClusterConfig {
+        workers: 16,
+        accumulations: 8,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        noise: NoiseKind::Exponential { mean: 0.25 },
+        stragglers: StragglerKind::Uniform { p: 0.15, delay: 5.0 },
+        topology: Some(TopologyKind::Torus { rows: 0 }),
+        link_latency: 25e-6,
+        link_bandwidth: 12.5e9,
+        grad_bytes: 4.0 * 33.7e6,
+        ..Default::default()
+    };
+
+    // 1. record a live run (no drops, so the trace is fit-ready)
+    let mut live = ClusterSim::new(&cfg, 42);
+    live.start_recording();
+    let mut out = StepOutcome::default();
+    for _ in 0..60 {
+        live.step_installed_into(&mut out);
+    }
+    let trace = live.finish_recording().expect("consistent recording");
+    println!(
+        "recorded {} steps (N={} M={}), policy `{}`",
+        trace.len(),
+        trace.meta.workers,
+        trace.meta.accums,
+        trace.meta.policy
+    );
+
+    // 2. JSON round trip is bitwise-lossless
+    let parsed = TraceRecord::parse(&trace.to_json()).expect("parse back");
+    assert_eq!(parsed, trace);
+    println!("JSON round trip: {} bytes, lossless", trace.to_json().len());
+
+    // 3. replay reproduces the recorded outcomes bitwise on both paths
+    for (label, reference) in [("compiled", false), ("event-queue", true)] {
+        let mut replay = ClusterSim::from_trace(&parsed).expect("replayable");
+        if reference {
+            replay = replay.with_reference_timing();
+        }
+        let outs = replay.replay_all().expect("whole trace");
+        let ok = parsed
+            .outcomes
+            .iter()
+            .zip(&outs)
+            .filter(|(rec, out)| rec.matches(out))
+            .count();
+        println!("replay [{label}]: {ok}/{} steps bitwise", parsed.len());
+        assert_eq!(ok, parsed.len());
+    }
+
+    // 4. fit drop budgets from the recorded reality
+    let fit = fit_budgets(&parsed, 12, 24).expect("fit");
+    println!("\nfitted policies (predictions measured by replay):");
+    for (label, e) in [
+        ("baseline", None),
+        ("step-level", Some(&fit.step_level)),
+        ("deadline", Some(&fit.deadline_level)),
+        ("per-phase", Some(&fit.per_phase)),
+        ("best", Some(&fit.best)),
+    ] {
+        match e {
+            None => println!(
+                "  {label:10} none                          iter {:.3}s",
+                fit.baseline_iter_time
+            ),
+            Some(e) => println!(
+                "  {label:10} {:28} S_eff {:.4}  completion {:.1}%  iter {:.3}s",
+                e.spec,
+                e.speedup,
+                e.completion * 100.0,
+                e.mean_iter_time
+            ),
+        }
+    }
+
+    // the emitted spec is directly usable as --policy / [policy] spec
+    let refit = DropPolicy::parse(&fit.best.spec).expect("parseable spec");
+    let (t, _) = evaluate_policy(&parsed, &refit).expect("replayable");
+    assert_eq!(t.to_bits(), fit.best.mean_iter_time.to_bits());
+    println!("\nready-to-use spec: --policy '{}'", fit.best.spec);
+}

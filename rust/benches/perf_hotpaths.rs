@@ -2,9 +2,11 @@
 //! ring AllReduce bandwidth, event-queue throughput, simulator step
 //! rate (compiled vs event-queue schedule timing), DropComm drop-path
 //! step rate (cached survivor schedules vs per-drop rebuild), policy
-//! dispatch (unified DropPolicy surface vs direct legacy calls),
-//! batched noise sampling (enum vs boxed dispatch), parallel sweep
-//! scaling, Algorithm-2 sweep cost, PJRT grad-step + upload overhead.
+//! dispatch (unified DropPolicy surface vs direct legacy calls), trace
+//! replay rate (recorded trace through the compiled pass vs the
+//! event-queue oracle, conformance-gated), batched noise sampling (enum
+//! vs boxed dispatch), parallel sweep scaling, Algorithm-2 sweep cost,
+//! PJRT grad-step + upload overhead.
 //!
 //! Besides the human-readable table, emits `BENCH_perf.json` — one
 //! entry per path with `metric`, `value` and (where the path has a
@@ -375,6 +377,68 @@ fn main() {
         }
     }
 
+    // ---- trace replay rate: recorded trace through both timing paths -
+    // The trace subsystem's hot path: replaying a recorded run (the
+    // budget-fit evaluator's inner loop) must run at simulator speed.
+    // before = event-queue oracle replay, after = compiled replay; the
+    // sanity gate is the conformance contract itself (replay ==
+    // recorded outcomes, bitwise, on both arms).
+    {
+        let mut cfg = paper_cluster(64);
+        cfg.topology = Some(TopologyKind::Torus { rows: 0 });
+        cfg.link_latency = 25e-6;
+        cfg.link_bandwidth = 12.5e9;
+        cfg.grad_bytes = 4.0 * 335e6;
+        cfg.stragglers = StragglerKind::Uniform { p: 0.2, delay: 6.0 };
+        let policy = DropPolicy::parse("tau=9+phase-deadline=2/0.5/0.5")
+            .expect("valid spec");
+        let steps = if smoke { 20 } else { 120 };
+        let mut live = ClusterSim::new(&cfg, 0x7A11).with_policy(policy);
+        live.start_recording();
+        let mut out = StepOutcome::default();
+        for _ in 0..steps {
+            live.step_installed_into(&mut out);
+        }
+        let trace = live.finish_recording().expect("consistent recording");
+        // conformance sanity on both arms before timing
+        for reference in [false, true] {
+            let mut sim =
+                ClusterSim::from_trace(&trace).expect("valid trace");
+            if reference {
+                sim = sim.with_reference_timing();
+            }
+            for (i, rec) in trace.outcomes.iter().enumerate() {
+                sim.replay_into(&mut out).expect("within length");
+                assert!(
+                    rec.matches(&out),
+                    "replay must reproduce the recorded outcome bitwise \
+                     (step {i}, reference={reference})"
+                );
+            }
+        }
+        let mut timed = |reference: bool| -> f64 {
+            let mut sim =
+                ClusterSim::from_trace(&trace).expect("valid trace");
+            if reference {
+                sim = sim.with_reference_timing();
+            }
+            let t0 = Instant::now();
+            while sim.replay_remaining() > 0 {
+                sim.replay_into(&mut out).expect("within length");
+            }
+            t0.elapsed().as_secs_f64() / steps as f64
+        };
+        let t_before = timed(true);
+        let t_after = timed(false);
+        perf.record_ba(
+            "trace_replay_rate",
+            "steps/s (torus n64, recorded drop-heavy trace)",
+            1.0 / t_before,
+            1.0 / t_after,
+        );
+        gate("trace_replay_rate", t_before, t_after, 2.0, smoke);
+    }
+
     // ---- batched noise sampling: enum vs boxed dispatch --------------
     // The innermost simulation loop draws one noise sample per
     // micro-batch. before = Box<dyn Distribution> (indirect call per
@@ -532,6 +596,7 @@ fn main() {
         "sim_step_rate_torus_n64",
         "dropcomm_step_rate",
         "policy_dispatch_rate",
+        "trace_replay_rate",
         "noise_fill_rate",
         "sweep_points_per_sec",
     ] {

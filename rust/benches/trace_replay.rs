@@ -1,0 +1,139 @@
+//! §Trace — record / replay throughput per topology.
+//!
+//! Records one golden trace per topology from a live seeded run (under
+//! a per-phase drop policy, so the drop paths are on the clock), proves
+//! replay == recorded bitwise on both timing paths, then measures:
+//!
+//! * `record_rate`  — live steps/s with the [`TraceWriter`] tap on;
+//! * `replay_rate`  — replayed steps/s, event-queue oracle (before)
+//!   vs compiled pass (after).
+//!
+//! Emits `BENCH_trace_replay.json` (same machine-readable shape as
+//! `BENCH_perf.json`; the CI-tracked smoke entry lives in
+//! `perf_hotpaths --smoke` as `trace_replay_rate`).
+
+mod common;
+
+use std::time::Instant;
+
+use common::{header, paper_cluster};
+use dropcompute::policy::DropPolicy;
+use dropcompute::report::{f, Table};
+use dropcompute::runtime::json::Json;
+use dropcompute::sim::{ClusterSim, StepOutcome};
+use dropcompute::topology::TopologyKind;
+
+fn main() {
+    header(
+        "§Trace — record/replay throughput",
+        "replay must reproduce recorded runs bitwise at simulator speed",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let steps = if smoke { 60 } else { 400 };
+    let workers = 32;
+
+    let mut table = Table::new(
+        "trace replay",
+        &["topology", "metric", "value"],
+    );
+    let mut entries = String::new();
+    let mut first = true;
+
+    for kind in TopologyKind::ALL {
+        let mut cfg = paper_cluster(workers);
+        cfg.topology = Some(kind);
+        cfg.link_latency = 25e-6;
+        cfg.link_bandwidth = 12.5e9;
+        cfg.grad_bytes = 4.0 * 335e6;
+        cfg.stragglers = dropcompute::config::StragglerKind::Uniform {
+            p: 0.2,
+            delay: 6.0,
+        };
+        let policy = DropPolicy::parse("tau=9+phase-deadline=2/0.5/0.5")
+            .expect("valid spec");
+
+        // --- record (writer tap on) ---------------------------------
+        let mut live = ClusterSim::new(&cfg, 0x7AC5).with_policy(policy);
+        live.start_recording();
+        let mut out = StepOutcome::default();
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            live.step_installed_into(&mut out);
+        }
+        let record_secs = t0.elapsed().as_secs_f64();
+        let trace = live.finish_recording().expect("consistent recording");
+        assert_eq!(trace.len(), steps);
+
+        // --- conformance: replay == recorded, both paths ------------
+        for reference in [false, true] {
+            let mut replay =
+                ClusterSim::from_trace(&trace).expect("valid trace");
+            if reference {
+                replay = replay.with_reference_timing();
+            }
+            for (i, rec) in trace.outcomes.iter().enumerate() {
+                replay.replay_into(&mut out).expect("within length");
+                assert!(
+                    rec.matches(&out),
+                    "{} step {i} (reference={reference}): replay must \
+                     reproduce the recorded outcome bitwise",
+                    kind.name()
+                );
+            }
+        }
+
+        // --- replay rate: oracle (before) vs compiled (after) -------
+        let mut timed = |reference: bool| -> f64 {
+            let mut sim = ClusterSim::from_trace(&trace).expect("valid");
+            if reference {
+                sim = sim.with_reference_timing();
+            }
+            let t0 = Instant::now();
+            while sim.replay_remaining() > 0 {
+                sim.replay_into(&mut out).expect("within length");
+            }
+            t0.elapsed().as_secs_f64()
+        };
+        let t_oracle = timed(true);
+        let t_compiled = timed(false);
+
+        let record_rate = steps as f64 / record_secs;
+        let rate_oracle = steps as f64 / t_oracle;
+        let rate_compiled = steps as f64 / t_compiled;
+        table.row(vec![
+            kind.name().into(),
+            "record steps/s".into(),
+            f(record_rate, 0),
+        ]);
+        table.row(vec![
+            kind.name().into(),
+            "replay steps/s oracle->compiled".into(),
+            format!(
+                "{} -> {} (x{})",
+                f(rate_oracle, 0),
+                f(rate_compiled, 0),
+                f(rate_compiled / rate_oracle, 2)
+            ),
+        ]);
+        if !first {
+            entries.push_str(",\n");
+        }
+        first = false;
+        entries.push_str(&format!(
+            "    {{\"topology\": \"{}\", \"record_rate\": {record_rate:?}, \
+             \"replay_rate_oracle\": {rate_oracle:?}, \
+             \"replay_rate_compiled\": {rate_compiled:?}}}",
+            kind.name()
+        ));
+    }
+    table.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"trace_replay\",\n  \"workers\": {workers},\n  \
+         \"steps\": {steps},\n  \"entries\": [\n{entries}\n  ]\n}}\n"
+    );
+    Json::parse(&json).expect("bench must emit valid JSON");
+    std::fs::write("BENCH_trace_replay.json", &json)
+        .expect("write BENCH_trace_replay.json");
+    println!("wrote BENCH_trace_replay.json");
+}

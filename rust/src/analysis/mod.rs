@@ -2,12 +2,17 @@
 //!
 //! * [`order_stats`] — Eq. 4 / App. C.2: expected max iteration time;
 //! * [`speedup`] — Eq. 5/6/11: `E[M~]`, `S_eff`, scale-law extrapolation;
-//! * [`threshold`] — Algorithm 2: empirical `tau*` selection from traces.
+//! * [`threshold`] — Algorithm 2: empirical `tau*` selection from traces;
+//! * [`budget_fit`] — the Algorithm-2 analogue for the comm side:
+//!   fit `tau` + DropComm deadlines (step-level and per-phase) from a
+//!   recorded replayable trace, predictions measured by replay.
 
+pub mod budget_fit;
 pub mod order_stats;
 pub mod speedup;
 pub mod threshold;
 
+pub use budget_fit::{evaluate_policy, fit_budgets, BudgetFit, FitEval};
 pub use order_stats::{
     asymptotic_max_normal, expected_max_cdf, expected_max_normal,
     expected_max_normal_exact, expected_step_max, EULER_GAMMA,

@@ -80,6 +80,11 @@ pub struct ClusterConfig {
     /// DropComm bounded-wait deadline, seconds after the first arrival
     /// (0 = wait for everyone; the synchronous baseline).
     pub comm_drop_deadline: f64,
+    /// Restore the legacy *single-restart* per-phase semantics: a
+    /// restarted survivor collective is timed unchecked. The default
+    /// (false) re-checks restarts against the remaining phase budgets
+    /// recursively — see [`crate::sim::ClusterSim::with_single_restart`].
+    pub single_restart: bool,
 }
 
 impl Default for ClusterConfig {
@@ -99,6 +104,7 @@ impl Default for ClusterConfig {
             // `large` model: 33.7M f32 params
             grad_bytes: 4.0 * 33.7e6,
             comm_drop_deadline: 0.0,
+            single_restart: false,
         }
     }
 }
@@ -258,6 +264,33 @@ impl Default for DataConfig {
     }
 }
 
+/// Trace record/replay/fit configuration (`[trace]` section), consumed
+/// by the `trace` CLI subcommands (see
+/// [`crate::sim::TraceRecord`] and [`crate::analysis::budget_fit`]).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Default trace file path for `trace record` / `replay` / `fit`.
+    pub path: String,
+    /// Steps recorded by `trace record`.
+    pub iters: usize,
+    /// Compute-threshold grid resolution of `trace fit`.
+    pub fit_grid: usize,
+    /// Cap on the deadline candidates `trace fit` evaluates (the
+    /// observed arrival offsets are subsampled down to this many).
+    pub fit_deadlines: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            path: "artifacts/trace.json".to_string(),
+            iters: 50,
+            fit_grid: 8,
+            fit_deadlines: 16,
+        }
+    }
+}
+
 /// Parallel scenario-grid configuration (`[sweep]` section), consumed
 /// by the `sweep`/`scale` subcommands via [`crate::sweep::SweepSpec`].
 #[derive(Debug, Clone)]
@@ -306,6 +339,7 @@ pub struct Config {
     pub train: TrainConfig,
     pub data: DataConfig,
     pub sweep: SweepConfig,
+    pub trace: TraceConfig,
     /// Explicit run-level drop policy (`[policy] spec = "..."`). `None`
     /// falls back to the legacy `[comm] drop_deadline` surface — see
     /// [`Config::effective_policy`].
@@ -322,6 +356,7 @@ impl Default for Config {
             train: TrainConfig::default(),
             data: DataConfig::default(),
             sweep: SweepConfig::default(),
+            trace: TraceConfig::default(),
             policy: None,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -465,6 +500,33 @@ impl Config {
                 .map(|s| crate::policy::DropPolicy::parse(s))
                 .collect::<Result<_>>()?;
         }
+        c.cluster.single_restart = doc.bool_or("policy.single_restart", false);
+
+        // [trace] — trace record / replay / fit (crate::sim::TraceRecord,
+        // crate::analysis::budget_fit)
+        c.trace.path = doc.str_or("trace.path", &c.trace.path);
+        let t_iters = doc.int_or("trace.iters", c.trace.iters as i64);
+        if t_iters < 1 {
+            return Err(Error::Config(format!(
+                "trace.iters must be >= 1, got {t_iters}"
+            )));
+        }
+        c.trace.iters = t_iters as usize;
+        let t_grid = doc.int_or("trace.fit_grid", c.trace.fit_grid as i64);
+        if t_grid < 2 {
+            return Err(Error::Config(format!(
+                "trace.fit_grid must be >= 2, got {t_grid}"
+            )));
+        }
+        c.trace.fit_grid = t_grid as usize;
+        let t_dl =
+            doc.int_or("trace.fit_deadlines", c.trace.fit_deadlines as i64);
+        if t_dl < 1 {
+            return Err(Error::Config(format!(
+                "trace.fit_deadlines must be >= 1, got {t_dl}"
+            )));
+        }
+        c.trace.fit_deadlines = t_dl as usize;
 
         // [data]
         c.data.zipf_s = doc.float_or("data.zipf_s", 1.1);
@@ -842,6 +904,42 @@ mod tests {
             "[policy]\nspec = 3",
             "[policy]\nsweep = [\"tau=-1\"]",
             "[policy]\nsweep = [3]",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(Config::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn trace_section_and_single_restart_roundtrip() {
+        let doc = Document::parse(
+            r#"
+            [policy]
+            single_restart = true
+            [trace]
+            path = "runs/golden.trace.json"
+            iters = 12
+            fit_grid = 24
+            fit_deadlines = 8
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert!(c.cluster.single_restart);
+        assert_eq!(c.trace.path, "runs/golden.trace.json");
+        assert_eq!(c.trace.iters, 12);
+        assert_eq!(c.trace.fit_grid, 24);
+        assert_eq!(c.trace.fit_deadlines, 8);
+        // defaults: recursive restarts, artifacts trace path
+        let d = Config::default();
+        assert!(!d.cluster.single_restart);
+        assert_eq!(d.trace.path, "artifacts/trace.json");
+        assert_eq!(d.trace.iters, 50);
+        // bad values rejected
+        for bad in [
+            "[trace]\niters = 0",
+            "[trace]\nfit_grid = 1",
+            "[trace]\nfit_deadlines = 0",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(Config::from_doc(&doc).is_err(), "{bad}");

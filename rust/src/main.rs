@@ -6,6 +6,7 @@
 //!   simulate     virtual-clock cluster timing (no real compute)
 //!   tune         run Algorithm 2 on a simulated trace, print the sweep
 //!   scale        throughput-vs-N sweep (Fig 1 style)
+//!   trace        record / replay / fit replayable timing traces
 //!   analyze      closed-form model: E[T], E[M~], S_eff(tau)
 //!
 //! Shared flags: `--config <file.toml>`, repeated `--set a.b=v`,
@@ -40,6 +41,17 @@ SUBCOMMANDS:
               [--workers 8,16] [--thresholds 0,2.5] [--deadlines 0,3]
               [--policy SPEC]... [--seeds 1,2,3] [--iters N] [--jobs J]
               [--out dir]
+  trace       record / replay / fit replayable timing traces:
+                trace record [--iters N] [--policy SPEC] [--trace file]
+                    run the simulator, record per-worker draws +
+                    outcomes into versioned JSON ([trace] config keys)
+                trace replay [--trace file] [--policy SPEC] [--reference]
+                    replay a recorded trace; without a policy override,
+                    verifies the recorded outcomes bitwise (conformance)
+                trace fit    [--trace file] [--grid G]
+                    fit tau + DropComm deadlines (step-level and
+                    per-phase) maximizing predicted speedup over the
+                    trace; emits a ready-to-use --policy spec
   analyze     closed-form E[T], E[M~], S_eff      [--tau T]
 
 Drop policies (simulate/sweep; the one drop-decision surface):
@@ -59,6 +71,10 @@ simulate/scale/sweep also take the topology-aware collective model:
   --comm-drop-deadline D
               DropComm: bounded-wait AllReduce, membership closes D
               seconds after the first arrival (0 = wait for everyone)
+  --single-restart
+              legacy per-phase restart semantics: survivors' restarted
+              collective is NOT re-checked against the remaining phase
+              budgets (default: recursive re-check)
 
 scale/sweep fan grid points over a thread pool: --jobs J (0 = all
 cores, 1 = serial; output is bitwise identical either way). Grid axes
@@ -70,12 +86,12 @@ fn main() -> ExitCode {
     let spec = Spec::new()
         .subcommands(&[
             "train", "local-sgd", "simulate", "tune", "scale", "sweep",
-            "analyze",
+            "trace", "analyze",
         ])
         .value_keys(&[
             "config", "set", "out", "iters", "tau", "periods", "workers",
             "grid", "topology", "comm-drop-deadline", "jobs", "thresholds",
-            "deadlines", "seeds", "policy",
+            "deadlines", "seeds", "policy", "trace",
         ]);
     let args = match spec.parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -109,6 +125,7 @@ fn run(args: &Args) -> Result<()> {
         "tune" => cmd_tune(args, &cfg),
         "scale" => cmd_scale(args, &cfg),
         "sweep" => cmd_sweep(args, &cfg),
+        "trace" => cmd_trace(args, &cfg),
         "analyze" => cmd_analyze(args, &cfg),
         other => {
             eprintln!("unknown subcommand `{other}`\n{USAGE}");
@@ -182,6 +199,11 @@ fn comm_overrides(
     }
     cluster.comm_drop_deadline =
         args.f64_or("comm-drop-deadline", cluster.comm_drop_deadline)?;
+    // legacy single-restart per-phase semantics (the default is the
+    // recursive re-check; see ClusterSim::with_single_restart)
+    if args.flag("single-restart") {
+        cluster.single_restart = true;
+    }
     Ok(())
 }
 
@@ -475,6 +497,180 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         println!("wrote {}", path.display());
     }
     Ok(())
+}
+
+fn cmd_trace(args: &Args, cfg: &Config) -> Result<()> {
+    use dropcompute::sim::{StepOutcome, TraceRecord};
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("record");
+    let path = PathBuf::from(args.str_or("trace", &cfg.trace.path));
+    match action {
+        "record" => {
+            let iters = args.usize_or("iters", cfg.trace.iters)?;
+            if iters == 0 {
+                return Err(dropcompute::util::Error::Cli(
+                    "trace record: --iters must be >= 1".into(),
+                ));
+            }
+            let mut cluster = cfg.cluster.clone();
+            comm_overrides(args, &mut cluster)?;
+            let policy = match args.get("policy") {
+                Some(spec) => DropPolicy::parse(spec)?,
+                None => match &cfg.policy {
+                    Some(p) => p.clone(),
+                    None => DropPolicy::from_cluster(&cluster),
+                },
+            };
+            let mut sim = ClusterSim::new(&cluster, cfg.train.seed)
+                .with_policy(policy.clone());
+            sim.start_recording();
+            let mut out = dropcompute::sim::StepOutcome::default();
+            let mut t_sum = 0.0;
+            for _ in 0..iters {
+                sim.step_installed_into(&mut out);
+                t_sum += out.iter_time;
+            }
+            let trace = sim.finish_recording()?;
+            trace.save(&path)?;
+            let mut t = Table::new("trace record", &["metric", "value"]);
+            t.row(vec!["steps".into(), iters.to_string()]);
+            t.row(vec![
+                "cluster".into(),
+                format!("N={} M={}", cluster.workers, cluster.accumulations),
+            ]);
+            t.row(vec!["policy".into(), policy.spec()]);
+            t.row(vec!["mean iter time".into(), f(t_sum / iters as f64, 3)]);
+            t.print();
+            println!("wrote {}", path.display());
+            Ok(())
+        }
+        "replay" => {
+            let trace = TraceRecord::load(&path)?;
+            let override_policy = match args.get("policy") {
+                Some(spec) => Some(DropPolicy::parse(spec)?),
+                None => None,
+            };
+            let mut sim = ClusterSim::from_trace(&trace)?;
+            if args.flag("reference") {
+                sim = sim.with_reference_timing();
+            }
+            if let Some(p) = &override_policy {
+                sim.set_policy(p);
+            }
+            let mut out = StepOutcome::default();
+            let mut t_sum = 0.0;
+            let mut completed = 0usize;
+            let mut conform = 0usize;
+            for i in 0..trace.len() {
+                sim.replay_into(&mut out)?;
+                t_sum += out.iter_time;
+                completed += out.total_completed();
+                if override_policy.is_none()
+                    && trace.outcomes.get(i).is_some_and(|o| o.matches(&out))
+                {
+                    conform += 1;
+                }
+            }
+            let scheduled =
+                trace.len() * trace.meta.workers * trace.meta.accums;
+            let mut t = Table::new("trace replay", &["metric", "value"]);
+            t.row(vec![
+                "timing path".into(),
+                if args.flag("reference") {
+                    "event-queue oracle".into()
+                } else {
+                    "compiled".into()
+                },
+            ]);
+            t.row(vec![
+                "policy".into(),
+                override_policy
+                    .as_ref()
+                    .map(DropPolicy::spec)
+                    .unwrap_or_else(|| trace.meta.policy.clone()),
+            ]);
+            t.row(vec!["steps".into(), trace.len().to_string()]);
+            t.row(vec![
+                "mean iter time".into(),
+                f(t_sum / trace.len().max(1) as f64, 3),
+            ]);
+            t.row(vec![
+                "drop rate".into(),
+                pct(1.0 - completed as f64 / scheduled.max(1) as f64),
+            ]);
+            if override_policy.is_none() {
+                t.row(vec![
+                    "conformance".into(),
+                    format!("{conform}/{} steps bitwise", trace.len()),
+                ]);
+            }
+            t.print();
+            if override_policy.is_none()
+                && !trace.outcomes.is_empty()
+                && conform != trace.len()
+            {
+                return Err(dropcompute::util::Error::Runtime(format!(
+                    "replay diverged from the recorded outcomes \
+                     ({conform}/{} steps bitwise)",
+                    trace.len()
+                )));
+            }
+            Ok(())
+        }
+        "fit" => {
+            let trace = TraceRecord::load(&path)?;
+            let grid = args.usize_or("grid", cfg.trace.fit_grid)?;
+            let fit = dropcompute::analysis::fit_budgets(
+                &trace,
+                grid,
+                cfg.trace.fit_deadlines,
+            )?;
+            let mut t = Table::new(
+                "trace fit (Algorithm-2 analogue, replay-measured)",
+                &["candidate", "spec", "S_eff", "completion", "iter time"],
+            );
+            for (label, e) in [
+                ("step-level", &fit.step_level),
+                ("deadline", &fit.deadline_level),
+                ("per-phase", &fit.per_phase),
+                ("best", &fit.best),
+            ] {
+                t.row(vec![
+                    label.into(),
+                    e.spec.clone(),
+                    f(e.speedup, 4),
+                    pct(e.completion),
+                    f(e.mean_iter_time, 3),
+                ]);
+            }
+            t.print();
+            if fit.censored {
+                println!(
+                    "WARNING: trace was recorded under `{}` — its samples \
+                     are censored at that compute threshold, so speedups \
+                     are relative to the recorded policy, not a true \
+                     no-drop baseline (record without a tau clause for \
+                     absolute numbers)",
+                    trace.meta.policy
+                );
+            }
+            println!(
+                "fitted policy spec: {}  (predicted speedup {:.4} over {} \
+                 candidates, baseline iter {:.3}s)",
+                fit.best.spec,
+                fit.best.speedup,
+                fit.evaluated.len(),
+                fit.baseline_iter_time,
+            );
+            Ok(())
+        }
+        other => Err(dropcompute::util::Error::Cli(format!(
+            "unknown trace action `{other}` (want record, replay or fit)"
+        ))),
+    }
 }
 
 fn cmd_analyze(args: &Args, cfg: &Config) -> Result<()> {

@@ -146,6 +146,39 @@ pub fn cumulative_offsets(budgets: &[f64]) -> Vec<f64> {
         .collect()
 }
 
+/// The cutoff offsets *remaining* after checkpoint `last` triggered a
+/// drop, rebased to the survivors' restart instant: entry `j` is
+/// `offsets[last + 1 + j] - offsets[last]`. The recursive restart
+/// semantics re-check the restarted collective against these (see
+/// [`crate::sim::ClusterSim`]); the compiled path and the event-queue
+/// oracle both consume offsets produced by this one expression, so the
+/// f64 subtraction — and therefore every bit of the recursion — agrees
+/// everywhere. Offsets are cumulative (nondecreasing), so every rebased
+/// entry is `>= 0`.
+pub fn rebased_offsets(offsets: &[f64], last: usize) -> Vec<f64> {
+    match offsets.get(last + 1..) {
+        Some(rest) => rest.iter().map(|o| o - offsets[last]).collect(),
+        None => Vec::new(),
+    }
+}
+
+/// [`rebased_offsets`] in place (the allocation-free form the compiled
+/// drop path uses): shifts the rebased tail to the front and truncates.
+/// Bitwise identical to the allocating form — same subtraction, same
+/// order.
+pub fn rebase_offsets_in_place(offsets: &mut Vec<f64>, last: usize) {
+    if last + 1 >= offsets.len() {
+        offsets.clear();
+        return;
+    }
+    let pivot = offsets[last];
+    let tail = offsets.len() - last - 1;
+    for j in 0..tail {
+        offsets[j] = offsets[last + 1 + j] - pivot;
+    }
+    offsets.truncate(tail);
+}
+
 impl DropPolicy {
     /// The no-drop policy (named constructor for symmetry).
     pub fn none() -> Self {
@@ -659,6 +692,30 @@ mod tests {
     fn cumulative_offsets_clamp_negatives() {
         assert_eq!(cumulative_offsets(&[1.0, -2.0, 0.5]), vec![1.0, 1.0, 1.5]);
         assert!(cumulative_offsets(&[]).is_empty());
+    }
+
+    #[test]
+    fn rebased_offsets_shift_and_agree_with_in_place() {
+        let offsets = cumulative_offsets(&[1.0, 0.25, 0.5, 0.0]);
+        assert_eq!(offsets, vec![1.0, 1.25, 1.75, 1.75]);
+        let rem = rebased_offsets(&offsets, 0);
+        assert_eq!(rem, vec![0.25, 0.75, 0.75]);
+        // nondecreasing offsets rebase to nonnegative entries
+        assert!(rem.iter().all(|&o| o >= 0.0));
+        // triggering at (or past) the last checkpoint leaves nothing
+        assert!(rebased_offsets(&offsets, 3).is_empty());
+        assert!(rebased_offsets(&offsets, 9).is_empty());
+        assert!(rebased_offsets(&[], 0).is_empty());
+        // the in-place form is the same map, bit for bit
+        for last in 0..4 {
+            let want = rebased_offsets(&offsets, last);
+            let mut buf = offsets.clone();
+            rebase_offsets_in_place(&mut buf, last);
+            assert_eq!(want.len(), buf.len(), "last={last}");
+            for (a, b) in want.iter().zip(&buf) {
+                assert_eq!(a.to_bits(), b.to_bits(), "last={last}");
+            }
+        }
     }
 
     #[test]

@@ -10,11 +10,15 @@
 use crate::config::ClusterConfig;
 use crate::policy::DropPolicy;
 use crate::rng::Xoshiro256pp;
+use crate::util::{Error, Result};
 
 use super::comm::CommModel;
 use super::compiled::PhaseBounded;
 use super::noise::LatencyModel;
-use super::trace::Trace;
+use super::trace::{
+    StepTrace, Trace, TraceComm, TraceMeta, TraceMode, TraceRecord,
+    TraceWriter, TRACE_FORMAT_VERSION,
+};
 
 /// When a worker notices its compute budget `tau` is exhausted.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -118,6 +122,32 @@ pub struct ClusterSim {
     sample_buf: Vec<f64>,
     /// Monotone step counter (drives step-indexed failures).
     step_idx: usize,
+    /// Recursive survivor-restart semantics (the default): a restarted
+    /// per-phase collective is re-checked against the budgets remaining
+    /// after its trigger ([`crate::policy::rebased_offsets`]),
+    /// recursively. [`Self::with_single_restart`] restores the legacy
+    /// unchecked restart.
+    recursive_restart: bool,
+    /// Reusable survivor-index map for the recursive drop path
+    /// (sub-scan position -> global worker id).
+    alive_buf: Vec<usize>,
+    /// Reusable rebased-offsets buffer for the recursive drop path.
+    rebase_buf: Vec<f64>,
+    /// Root seed (stamped into recorded trace metadata).
+    seed: u64,
+    /// Active trace recording ([`Self::start_recording`]), if any.
+    writer: Option<TraceWriter>,
+    /// Replay timing source ([`Self::with_replay`]): when set, worker
+    /// compute comes from the recorded trace instead of the latency
+    /// model — the comm side stays the sim's own deterministic timing.
+    replay: Option<ReplayState>,
+}
+
+/// Cursor over a recorded trace's steps (the replay `TimingSource`).
+struct ReplayState {
+    steps: Vec<StepTrace>,
+    mode: TraceMode,
+    pos: usize,
 }
 
 impl ClusterSim {
@@ -131,14 +161,19 @@ impl ClusterSim {
             },
             None => CommModel::Fixed(cfg.comm_latency),
         };
-        Self::with_model(
+        let sim = Self::with_model(
             cfg.workers,
             cfg.accumulations,
             LatencyModel::from_config(cfg),
             comm,
             seed,
         )
-        .with_policy(DropPolicy::from_cluster(cfg))
+        .with_policy(DropPolicy::from_cluster(cfg));
+        if cfg.single_restart {
+            sim.with_single_restart()
+        } else {
+            sim
+        }
     }
 
     pub fn with_model(
@@ -183,6 +218,12 @@ impl ClusterSim {
             streams,
             sample_buf: Vec::new(),
             step_idx: 0,
+            recursive_restart: true,
+            alive_buf: Vec::new(),
+            rebase_buf: Vec::new(),
+            seed,
+            writer: None,
+            replay: None,
         }
     }
 
@@ -202,6 +243,13 @@ impl ClusterSim {
 
     /// [`Self::with_policy`] in place.
     pub fn set_policy(&mut self, policy: &DropPolicy) {
+        if let Some(w) = self.writer.as_mut() {
+            if *policy != self.policy {
+                // a mid-recording policy swap would make the recorded
+                // metadata lie about what the steps ran under
+                w.mark_policy_changed();
+            }
+        }
         let eff = policy.effective();
         self.eff_tau = eff.tau;
         if eff.tau.is_some() {
@@ -232,6 +280,18 @@ impl ClusterSim {
     /// for those tests and as the "before" arm of perf benchmarks.
     pub fn with_reference_timing(mut self) -> Self {
         self.use_compiled = false;
+        self
+    }
+
+    /// Restore the legacy *single-restart* per-phase semantics: a
+    /// restarted survivor collective is timed unchecked, ignoring the
+    /// budgets after the triggering checkpoint. The default (recursive)
+    /// semantics re-check the restart against the rebased remaining
+    /// budgets — see [`CommModel::per_phase_bounded_completion_recursive`]
+    /// — which only differs when checkpoints follow the trigger, so a
+    /// single lumped budget behaves identically under both.
+    pub fn with_single_restart(mut self) -> Self {
+        self.recursive_restart = false;
         self
     }
 
@@ -370,6 +430,13 @@ impl ClusterSim {
     /// completed counts; the survivors' restart reuses the per-k
     /// compiled cache, so drop-heavy per-phase stepping is as
     /// allocation-free as the step-level drop path.
+    ///
+    /// Restart semantics: by default a restarted survivor collective is
+    /// *re-checked* against the budgets remaining after its trigger
+    /// (rebased to the restart instant), recursively — the compiled arm
+    /// of [`CommModel::per_phase_bounded_completion_recursive`], bitwise
+    /// identical to it. [`Self::with_single_restart`] restores the old
+    /// unchecked restart.
     fn per_phase_iter_time(&mut self, out: &mut StepOutcome) -> f64 {
         if self.use_compiled {
             if let Some(c) = self.compiled.as_ref() {
@@ -381,7 +448,7 @@ impl ClusterSim {
                 );
                 return match res {
                     PhaseBounded::Complete(t) => t,
-                    PhaseBounded::Dropped { survivors, close } => {
+                    PhaseBounded::Dropped { survivors, close, checkpoint } => {
                         for (done, &d) in
                             out.completed.iter_mut().zip(&self.drop_mask)
                         {
@@ -392,25 +459,115 @@ impl ClusterSim {
                         if survivors == 0 {
                             close.max(0.0)
                         } else {
-                            self.survivors.completion(survivors, close)
+                            // budgets remaining after the trigger,
+                            // rebased to the restart instant — the same
+                            // subtraction the oracle's rebased_offsets
+                            // performs, bit for bit
+                            self.rebase_buf.clear();
+                            self.rebase_buf
+                                .extend_from_slice(&self.phase_cutoffs);
+                            crate::policy::rebase_offsets_in_place(
+                                &mut self.rebase_buf,
+                                checkpoint,
+                            );
+                            if !self.recursive_restart
+                                || self.rebase_buf.is_empty()
+                            {
+                                self.survivors.completion(survivors, close)
+                            } else {
+                                self.recursive_survivor_time(
+                                    out, survivors, close,
+                                )
+                            }
                         }
                     }
                 };
             }
         }
         // event-queue reference timing, or the fixed-T^c model (which
-        // has no phase structure — budgets lump to their total)
-        let (mask, t) = self.comm.per_phase_bounded_completion(
-            &out.worker_compute,
-            &self.phase_cutoffs,
-            self.schedule.as_ref(),
-        );
+        // has no phase structure — budgets lump to their total and
+        // nothing remains to re-check)
+        let (mask, t) = if self.recursive_restart {
+            self.comm.per_phase_bounded_completion_recursive(
+                &out.worker_compute,
+                &self.phase_cutoffs,
+                self.schedule.as_ref(),
+            )
+        } else {
+            self.comm.per_phase_bounded_completion(
+                &out.worker_compute,
+                &self.phase_cutoffs,
+                self.schedule.as_ref(),
+            )
+        };
         for (done, &alive) in out.completed.iter_mut().zip(&mask) {
             if !alive {
                 *done = 0;
             }
         }
         t
+    }
+
+    /// The recursive restart loop of the compiled per-phase path:
+    /// survivors restart at `close` and are re-checked against
+    /// `self.rebase_buf` (the already-rebased remaining offsets), each
+    /// further drop rebasing again — through the per-k compiled cache,
+    /// with reusable index/offset buffers so even deep recursion
+    /// allocates nothing in steady state. Structurally identical to the
+    /// oracle loop in
+    /// [`CommModel::per_phase_bounded_completion_recursive`] (bitwise
+    /// pair, property-tested in `tests/policy_equivalence.rs`).
+    fn recursive_survivor_time(
+        &mut self,
+        out: &mut StepOutcome,
+        mut k: usize,
+        mut close: f64,
+    ) -> f64 {
+        // sub-scan position -> global worker id, from the level-0 mask
+        self.alive_buf.clear();
+        for (w, &d) in self.drop_mask.iter().enumerate() {
+            if !d {
+                self.alive_buf.push(w);
+            }
+        }
+        debug_assert_eq!(self.alive_buf.len(), k);
+        loop {
+            let res = self.survivors.bounded_completion(
+                k,
+                close,
+                &self.rebase_buf,
+                &mut self.drop_mask,
+            );
+            match res {
+                PhaseBounded::Complete(t) => return t,
+                PhaseBounded::Dropped { survivors, close: c2, checkpoint } => {
+                    // zero the newly dropped and compact the alive map
+                    let mut w = 0usize;
+                    for j in 0..k {
+                        let worker = self.alive_buf[j];
+                        if self.drop_mask[j] {
+                            out.completed[worker] = 0;
+                        } else {
+                            self.alive_buf[w] = worker;
+                            w += 1;
+                        }
+                    }
+                    self.alive_buf.truncate(w);
+                    if survivors == 0 {
+                        return c2.max(0.0);
+                    }
+                    crate::policy::rebase_offsets_in_place(
+                        &mut self.rebase_buf,
+                        checkpoint,
+                    );
+                    if self.rebase_buf.is_empty() {
+                        return self.survivors.completion(survivors, c2);
+                    }
+                    k = survivors;
+                    close = c2;
+                }
+            }
+        }
     }
 
     /// Simulate one step (or Local-SGD period, if the policy carries
@@ -474,74 +631,82 @@ impl ClusterSim {
         out.completed.clear();
         out.worker_compute.reserve(self.workers);
         out.completed.reserve(self.workers);
-        for n in 0..self.workers {
-            let mut t = self.model.sample_straggler_at(
-                n,
-                step_idx,
-                &mut self.streams[n],
+        if let Some(r) = &self.replay {
+            assert!(
+                r.mode == TraceMode::Step,
+                "replay source records Local-SGD periods, not synchronous \
+                 steps (ClusterSim::replay_into reports this as a typed \
+                 error)"
             );
-            let mut done = 0usize;
-            match (threshold, self.preemption) {
-                (None, _) => {
-                    self.model.fill_microbatches(
-                        n,
-                        self.accums,
-                        &mut self.sample_buf,
-                        &mut self.streams[n],
-                    );
-                    for &s in &self.sample_buf {
-                        t += s;
+            assert!(
+                r.pos < r.steps.len(),
+                "replay source exhausted after {} steps \
+                 (ClusterSim::replay_into reports this as a typed error)",
+                r.steps.len()
+            );
+        }
+        if let Some(w) = self.writer.as_mut() {
+            w.begin_step(TraceMode::Step, threshold == self.eff_tau);
+        }
+        for n in 0..self.workers {
+            let straggle;
+            if let Some(r) = &self.replay {
+                // replay: the recorded draws stand in for the latency
+                // model; the shared scan below then reproduces the
+                // recorded run's compute decisions bit for bit
+                let rec = &r.steps[r.pos];
+                straggle = rec.straggle[n];
+                self.sample_buf.clear();
+                self.sample_buf.extend_from_slice(&rec.samples[n]);
+            } else {
+                straggle = self.model.sample_straggler_at(
+                    n,
+                    step_idx,
+                    &mut self.streams[n],
+                );
+                match threshold {
+                    None => {
+                        self.model.fill_microbatches(
+                            n,
+                            self.accums,
+                            &mut self.sample_buf,
+                            &mut self.streams[n],
+                        );
                     }
-                    done = self.accums;
-                }
-                (Some(tau), PreemptionMode::Preemptive) => {
-                    let filled = self.model.fill_microbatches_bounded(
-                        n,
-                        t,
-                        tau,
-                        self.accums,
-                        &mut self.sample_buf,
-                        &mut self.streams[n],
-                    );
-                    for &s in &self.sample_buf[..filled] {
-                        let next = t + s;
-                        if next < tau {
-                            t = next;
-                            done += 1;
-                        } else {
-                            break;
-                        }
-                    }
-                    // The timeout fires on the wall clock, so even a
-                    // stalled compute pipeline (Fatal stragglers) is
-                    // preempted at exactly tau — the worker joins the
-                    // AllReduce with whatever it has (possibly nothing).
-                    if done < self.accums {
-                        t = tau;
-                    }
-                }
-                (Some(tau), PreemptionMode::BetweenAccumulations) => {
-                    let filled = self.model.fill_microbatches_bounded(
-                        n,
-                        t,
-                        tau,
-                        self.accums,
-                        &mut self.sample_buf,
-                        &mut self.streams[n],
-                    );
-                    for &s in &self.sample_buf[..filled] {
-                        t += s;
-                        done += 1;
-                        if t >= tau {
-                            break;
-                        }
+                    Some(tau) => {
+                        // the bounded fill stops drawing at the first
+                        // threshold crossing in both preemption modes
+                        self.model.fill_microbatches_bounded(
+                            n,
+                            straggle,
+                            tau,
+                            self.accums,
+                            &mut self.sample_buf,
+                            &mut self.streams[n],
+                        );
                     }
                 }
             }
+            if let Some(w) = self.writer.as_mut() {
+                w.push_worker(straggle, &self.sample_buf);
+            }
+            let (t, done) = scan_samples(
+                threshold,
+                self.preemption,
+                self.accums,
+                straggle,
+                &self.sample_buf,
+            );
             out.worker_compute.push(t);
             out.completed.push(done);
         }
+        if let Some(r) = self.replay.as_mut() {
+            r.pos += 1;
+        }
         self.finish_into(out);
+        if let Some(w) = self.writer.as_mut() {
+            w.push_outcome(out);
+        }
     }
 
     /// Simulate one Local-SGD synchronization period: `h` local steps of
@@ -581,24 +746,34 @@ impl ClusterSim {
         out.completed.clear();
         out.worker_compute.resize(self.workers, 0.0);
         out.completed.resize(self.workers, 0);
+        if let Some(r) = &self.replay {
+            assert!(
+                r.mode == TraceMode::Period,
+                "replay source records synchronous steps, not Local-SGD \
+                 periods (ClusterSim::replay_into reports this as a typed \
+                 error)"
+            );
+            assert!(
+                r.pos < r.steps.len(),
+                "replay source exhausted after {} periods \
+                 (ClusterSim::replay_into reports this as a typed error)",
+                r.steps.len()
+            );
+        }
+        if let Some(w) = self.writer.as_mut() {
+            w.begin_step(
+                TraceMode::Period,
+                threshold == self.eff_tau && Some(h) == self.eff_h,
+            );
+        }
         for n in 0..self.workers {
-            let mut compute = 0.0f64;
-            let mut done = 0usize;
-            let mut tally = |t: f64| match threshold {
-                Some(tau) => {
-                    if t < tau {
-                        done += 1;
-                        compute += t;
-                    } else {
-                        compute += tau;
-                    }
-                }
-                None => {
-                    done += 1;
-                    compute += t;
-                }
-            };
-            if self.model.straggler_draws(n) {
+            if let Some(r) = &self.replay {
+                // replay: each recorded entry is one local step's total
+                // compute time (straggle folded in at record time)
+                let rec = &r.steps[r.pos];
+                self.sample_buf.clear();
+                self.sample_buf.extend_from_slice(&rec.samples[n]);
+            } else if self.model.straggler_draws(n) {
                 // straggler coin flips interleave with micro-batch draws
                 // in this worker's stream: the fused fill keeps the
                 // sequential (coin, sample) order draw for draw while
@@ -609,12 +784,11 @@ impl ClusterSim {
                     &mut self.sample_buf,
                     &mut self.streams[n],
                 );
-                for &t in &self.sample_buf {
-                    tally(t);
-                }
             } else {
                 // straggle is a pure function of (worker, step): draw the
-                // whole period's micro-batches in one batched fill
+                // whole period's micro-batches in one batched fill, then
+                // fold the constant straggle into each local step — the
+                // same `straggle + s` sum the tally always consumed
                 let straggle = self.model.sample_straggler_at(
                     n,
                     step_idx,
@@ -626,14 +800,220 @@ impl ClusterSim {
                     &mut self.sample_buf,
                     &mut self.streams[n],
                 );
-                for &s in &self.sample_buf {
-                    tally(straggle + s);
+                for s in self.sample_buf.iter_mut() {
+                    *s = straggle + *s;
+                }
+            }
+            if let Some(w) = self.writer.as_mut() {
+                // period traces record the combined local-step times;
+                // the straggle column is unused
+                w.push_worker(0.0, &self.sample_buf);
+            }
+            let mut compute = 0.0f64;
+            let mut done = 0usize;
+            for &t in &self.sample_buf {
+                match threshold {
+                    Some(tau) => {
+                        if t < tau {
+                            done += 1;
+                            compute += t;
+                        } else {
+                            compute += tau;
+                        }
+                    }
+                    None => {
+                        done += 1;
+                        compute += t;
+                    }
                 }
             }
             out.worker_compute[n] = compute;
             out.completed[n] = done;
         }
+        if let Some(r) = self.replay.as_mut() {
+            r.pos += 1;
+        }
         self.finish_into(out);
+        if let Some(w) = self.writer.as_mut() {
+            w.push_outcome(out);
+        }
+    }
+
+    /// Begin recording a [`TraceRecord`] of every subsequent step: each
+    /// worker's straggler delay and drawn micro-batch latencies (or, in
+    /// Local-SGD mode, per-local-step compute times), plus the step's
+    /// [`StepOutcome`] — the versioned-JSON trace the `trace` CLI
+    /// subcommands, the conformance fixtures and
+    /// [`crate::analysis::budget_fit`] consume. Replaying the record
+    /// through [`Self::from_trace`] reproduces the recorded outcomes
+    /// bitwise (property-tested in `tests/trace_conformance.rs`).
+    ///
+    /// Recording captures steps made under the *installed* policy;
+    /// [`Self::finish_recording`] returns a typed error if per-call
+    /// thresholds diverged from it (or the policy was swapped
+    /// mid-recording), because the metadata would then lie about what
+    /// the steps ran under.
+    pub fn start_recording(&mut self) {
+        self.writer = Some(TraceWriter::new(TraceMeta {
+            version: TRACE_FORMAT_VERSION,
+            mode: if self.eff_h.is_some() {
+                TraceMode::Period
+            } else {
+                TraceMode::Step
+            },
+            workers: self.workers,
+            accums: self.accums,
+            seed: self.seed,
+            policy: self.policy.spec(),
+            comm: TraceComm::from_model(&self.comm),
+            single_restart: !self.recursive_restart,
+        }));
+    }
+
+    /// Stop recording and return the finished [`TraceRecord`]
+    /// (validated). Typed errors: no recording in progress, or the
+    /// recorded steps diverged from the installed policy (see
+    /// [`Self::start_recording`]).
+    pub fn finish_recording(&mut self) -> Result<TraceRecord> {
+        match self.writer.take() {
+            Some(w) => w.finish(),
+            None => Err(Error::Runtime(
+                "no trace recording in progress (ClusterSim::start_recording)"
+                    .into(),
+            )),
+        }
+    }
+
+    /// Whether a [`Self::start_recording`] recording is active.
+    pub fn is_recording(&self) -> bool {
+        self.writer.is_some()
+    }
+
+    /// Install `trace` as this sim's timing source: subsequent steps
+    /// draw compute from the recorded steps instead of the latency
+    /// model (the comm side stays the sim's own deterministic timing —
+    /// compiled pass or event-queue oracle, whichever is selected).
+    /// Validates the trace and its shape against the sim.
+    pub fn with_replay(mut self, trace: &TraceRecord) -> Result<Self> {
+        trace.validate()?;
+        if trace.meta.workers != self.workers
+            || trace.meta.accums != self.accums
+        {
+            return Err(Error::Data(format!(
+                "replay shape mismatch: trace is {}x{} (workers x accums), \
+                 sim is {}x{}",
+                trace.meta.workers,
+                trace.meta.accums,
+                self.workers,
+                self.accums
+            )));
+        }
+        self.replay = Some(ReplayState {
+            steps: trace.steps.clone(),
+            mode: trace.meta.mode,
+            pos: 0,
+        });
+        Ok(self)
+    }
+
+    /// Build a complete replay sim from a recorded trace: cluster shape,
+    /// comm model, policy and seed all come from the trace metadata, and
+    /// the recorded steps are installed as the timing source. Replaying
+    /// ([`Self::replay_all`]) reproduces the recorded run's
+    /// [`StepOutcome`]s bitwise. Chain [`Self::with_reference_timing`]
+    /// for the event-queue oracle arm, or [`Self::set_policy`] to
+    /// re-time the recorded compute under a *different* drop policy
+    /// (the [`crate::analysis::budget_fit`] evaluator).
+    pub fn from_trace(trace: &TraceRecord) -> Result<Self> {
+        trace.validate()?;
+        let policy = DropPolicy::parse(&trace.meta.policy)?;
+        let cfg = ClusterConfig {
+            workers: trace.meta.workers,
+            accumulations: trace.meta.accums,
+            ..Default::default()
+        };
+        let mut sim = Self::with_model(
+            trace.meta.workers,
+            trace.meta.accums,
+            LatencyModel::from_config(&cfg),
+            trace.meta.comm.to_model(),
+            trace.meta.seed,
+        )
+        .with_policy(policy);
+        if trace.meta.single_restart {
+            // restore the recorded run's restart semantics — bitwise
+            // conformance requires replaying under the same rules
+            sim = sim.with_single_restart();
+        }
+        sim.with_replay(trace)
+    }
+
+    /// Steps left in the installed replay source (0 when none).
+    pub fn replay_remaining(&self) -> usize {
+        self.replay.as_ref().map_or(0, |r| r.steps.len() - r.pos)
+    }
+
+    /// Reset the replay cursor to the first recorded step, so the same
+    /// source can be re-timed under another policy without rebuilding
+    /// the sim (the [`crate::analysis::budget_fit`] evaluator replays
+    /// one trace hundreds of times; cursor resets beat hundreds of
+    /// deep trace copies). Typed error when no source is installed.
+    pub fn rewind_replay(&mut self) -> Result<()> {
+        match self.replay.as_mut() {
+            Some(r) => {
+                r.pos = 0;
+                Ok(())
+            }
+            None => Err(Error::Runtime(
+                "no replay source installed (ClusterSim::with_replay)".into(),
+            )),
+        }
+    }
+
+    /// One replayed step under the installed policy. Typed errors
+    /// instead of panics: no replay source, source exhausted (short
+    /// trace), or the trace's mode (step vs Local-SGD period) does not
+    /// match the installed policy.
+    pub fn replay_into(&mut self, out: &mut StepOutcome) -> Result<()> {
+        let r = self.replay.as_ref().ok_or_else(|| {
+            Error::Runtime(
+                "no replay source installed (ClusterSim::with_replay)".into(),
+            )
+        })?;
+        if r.pos >= r.steps.len() {
+            return Err(Error::Data(format!(
+                "replay source exhausted after {} steps",
+                r.steps.len()
+            )));
+        }
+        match (self.eff_h, r.mode) {
+            (Some(_), TraceMode::Step) => Err(Error::Data(
+                "replay mode mismatch: the trace records synchronous steps \
+                 but the installed policy measures Local-SGD periods"
+                    .into(),
+            )),
+            (None, TraceMode::Period) => Err(Error::Data(
+                "replay mode mismatch: the trace records Local-SGD periods \
+                 but the installed policy measures synchronous steps"
+                    .into(),
+            )),
+            _ => {
+                self.step_installed_into(out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Replay every remaining recorded step ([`Self::replay_into`] in a
+    /// loop), returning the outcomes in step order.
+    pub fn replay_all(&mut self) -> Result<Vec<StepOutcome>> {
+        let mut outs = Vec::with_capacity(self.replay_remaining());
+        while self.replay_remaining() > 0 {
+            let mut out = StepOutcome::default();
+            self.replay_into(&mut out)?;
+            outs.push(out);
+        }
+        Ok(outs)
     }
 
     /// Record a no-drop latency trace of `iters` iterations — the input
@@ -695,6 +1075,60 @@ impl ClusterSim {
         }
         sum / periods as f64
     }
+}
+
+/// Scan one worker's micro-batch samples against the compute threshold —
+/// the single compute-side decision procedure shared by the live path
+/// (samples freshly drawn, the bounded fill having stopped at the first
+/// crossing) and the replay path (samples from a recorded trace), so
+/// both produce bitwise-identical `(compute_time, completed)` for the
+/// same sample values.
+#[inline]
+fn scan_samples(
+    threshold: Option<f64>,
+    preemption: PreemptionMode,
+    accums: usize,
+    straggle: f64,
+    samples: &[f64],
+) -> (f64, usize) {
+    let mut t = straggle;
+    let mut done = 0usize;
+    match (threshold, preemption) {
+        (None, _) => {
+            for &s in samples {
+                t += s;
+            }
+            done = samples.len();
+        }
+        (Some(tau), PreemptionMode::Preemptive) => {
+            for &s in samples {
+                let next = t + s;
+                if next < tau {
+                    t = next;
+                    done += 1;
+                } else {
+                    break;
+                }
+            }
+            // The timeout fires on the wall clock, so even a stalled
+            // compute pipeline (Fatal stragglers) is preempted at
+            // exactly tau — the worker joins the AllReduce with
+            // whatever it has (possibly nothing).
+            if done < accums {
+                t = tau;
+            }
+        }
+        (Some(tau), PreemptionMode::BetweenAccumulations) => {
+            for &s in samples {
+                t += s;
+                done += 1;
+                if t >= tau {
+                    break;
+                }
+            }
+        }
+    }
+    (t, done)
 }
 
 #[cfg(test)]
@@ -1291,6 +1725,209 @@ mod tests {
         let ring_cache = ring_sim.take_survivor_cache();
         let tree_sim = ClusterSim::new(&c, 3).with_survivor_cache(ring_cache);
         assert_eq!(tree_sim.survivors.compiled_count(), 0);
+    }
+
+    #[test]
+    fn record_replay_reproduces_outcomes_bitwise() {
+        // record a live run under a composed policy, then replay the
+        // record from scratch: every StepOutcome must match bit for bit
+        // on the compiled path AND the event-queue oracle path (the
+        // full topology x policy sweep lives in
+        // tests/trace_conformance.rs)
+        let mut c = config(6, 4);
+        c.noise = NoiseKind::Exponential { mean: 0.4 };
+        c.stragglers =
+            crate::config::StragglerKind::Uniform { p: 0.3, delay: 3.0 };
+        c.topology = Some(crate::topology::TopologyKind::Ring);
+        let policy = DropPolicy::parse("tau=2.5+deadline=1").unwrap();
+        let mut live = ClusterSim::new(&c, 0x7ACE).with_policy(policy);
+        live.start_recording();
+        let mut recorded = Vec::new();
+        for _ in 0..8 {
+            let mut out = StepOutcome::default();
+            live.step_installed_into(&mut out);
+            recorded.push(out);
+        }
+        let trace = live.finish_recording().unwrap();
+        assert_eq!(trace.len(), 8);
+        for (rec, out) in trace.outcomes.iter().zip(&recorded) {
+            assert!(rec.matches(out), "writer embeds the live outcomes");
+        }
+        // compiled replay
+        let mut replay = ClusterSim::from_trace(&trace).unwrap();
+        let outs = replay.replay_all().unwrap();
+        assert_eq!(outs.len(), 8);
+        for (i, (rec, out)) in trace.outcomes.iter().zip(&outs).enumerate() {
+            assert!(rec.matches(out), "compiled replay step {i}");
+        }
+        // event-queue oracle replay
+        let mut oracle =
+            ClusterSim::from_trace(&trace).unwrap().with_reference_timing();
+        for (i, rec) in trace.outcomes.iter().enumerate() {
+            let mut out = StepOutcome::default();
+            oracle.replay_into(&mut out).unwrap();
+            assert!(rec.matches(&out), "oracle replay step {i}");
+        }
+        // JSON round trip preserves all of it
+        let parsed =
+            crate::sim::TraceRecord::parse(&trace.to_json()).unwrap();
+        let mut again = ClusterSim::from_trace(&parsed).unwrap();
+        for (i, rec) in parsed.outcomes.iter().enumerate() {
+            let mut out = StepOutcome::default();
+            again.replay_into(&mut out).unwrap();
+            assert!(rec.matches(&out), "parsed replay step {i}");
+        }
+    }
+
+    #[test]
+    fn replay_errors_are_typed_not_panics() {
+        let mut c = config(3, 2);
+        c.noise = NoiseKind::Exponential { mean: 0.2 };
+        let mut live = ClusterSim::new(&c, 5);
+        live.start_recording();
+        for _ in 0..3 {
+            live.step(None);
+        }
+        let trace = live.finish_recording().unwrap();
+        // exhausting the source is an error, not a panic
+        let mut replay = ClusterSim::from_trace(&trace).unwrap();
+        assert_eq!(replay.replay_remaining(), 3);
+        replay.replay_all().unwrap();
+        let mut out = StepOutcome::default();
+        assert!(replay.replay_into(&mut out).is_err(), "short trace");
+        // mode mismatch: replaying a step trace under a local-sgd policy
+        let mut wrong_mode = ClusterSim::from_trace(&trace).unwrap();
+        wrong_mode.set_policy(&DropPolicy::parse("local-sgd=2").unwrap());
+        assert!(wrong_mode.replay_into(&mut out).is_err());
+        // shape mismatch: a sim of the wrong size rejects the source
+        let other = ClusterSim::new(&config(5, 2), 5);
+        assert!(other.with_replay(&trace).is_err());
+        // no source installed
+        let mut plain = ClusterSim::new(&c, 5);
+        assert!(plain.replay_into(&mut out).is_err());
+        // no recording in progress
+        assert!(plain.finish_recording().is_err());
+    }
+
+    #[test]
+    fn recording_rejects_divergent_per_call_thresholds() {
+        let mut c = config(3, 2);
+        c.noise = NoiseKind::Exponential { mean: 0.2 };
+        // per-call threshold != installed policy: typed error at finish
+        let mut sim = ClusterSim::new(&c, 1);
+        sim.start_recording();
+        sim.step(Some(1.5));
+        assert!(sim.finish_recording().is_err());
+        // a mid-recording policy swap is flagged too
+        let mut sim = ClusterSim::new(&c, 1);
+        sim.start_recording();
+        sim.step(None);
+        sim.step_with(&DropPolicy::compute_tau(2.0));
+        assert!(sim.finish_recording().is_err());
+        // stepping the installed policy is fine, including local-SGD
+        let mut sim = ClusterSim::new(&c, 1)
+            .with_policy(DropPolicy::parse("local-sgd=3+tau=0.9").unwrap());
+        sim.start_recording();
+        let mut out = StepOutcome::default();
+        for _ in 0..4 {
+            sim.step_installed_into(&mut out);
+        }
+        let trace = sim.finish_recording().unwrap();
+        assert_eq!(trace.meta.mode, crate::sim::TraceMode::Period);
+        // ...and the period trace replays bitwise
+        let mut replay = ClusterSim::from_trace(&trace).unwrap();
+        for (i, rec) in trace.outcomes.iter().enumerate() {
+            let mut out = StepOutcome::default();
+            replay.replay_into(&mut out).unwrap();
+            assert!(rec.matches(&out), "period replay step {i}");
+        }
+    }
+
+    #[test]
+    fn single_restart_flag_restores_unchecked_survivor_timing() {
+        // the crafted re-check case from sim::comm: root straggler on a
+        // tree, tight second budget — recursive (default) and
+        // single-restart semantics must differ, the flag must restore
+        // the legacy value, and each arm must stay bitwise equal to its
+        // event-queue oracle
+        let mut c = config(5, 1);
+        c.microbatch_std = 0.0;
+        c.topology = Some(crate::topology::TopologyKind::Tree);
+        c.link_latency = 1e-3;
+        c.link_bandwidth = 1e9;
+        c.grad_bytes = 4e6;
+        c.stragglers = crate::config::StragglerKind::Fatal {
+            worker: 0,
+            from_step: 0,
+        };
+        let policy =
+            DropPolicy::per_phase_deadline(vec![1.0, 0.004, 0.0, 0.0]);
+        let mk = |single: bool, reference: bool| {
+            let mut sim =
+                ClusterSim::new(&c, 3).with_policy(policy.clone());
+            if single {
+                sim = sim.with_single_restart();
+            }
+            if reference {
+                sim = sim.with_reference_timing();
+            }
+            sim
+        };
+        let rec = mk(false, false).step(None);
+        let rec_oracle = mk(false, true).step(None);
+        let single = mk(true, false).step(None);
+        let single_oracle = mk(true, true).step(None);
+        assert_eq!(rec.iter_time.to_bits(), rec_oracle.iter_time.to_bits());
+        assert_eq!(rec.completed, rec_oracle.completed);
+        assert_eq!(
+            single.iter_time.to_bits(),
+            single_oracle.iter_time.to_bits()
+        );
+        assert_eq!(single.completed, single_oracle.completed);
+        assert_ne!(
+            rec.iter_time.to_bits(),
+            single.iter_time.to_bits(),
+            "the re-check must change this crafted case"
+        );
+        assert!(
+            rec.total_completed() < single.total_completed(),
+            "recursive re-check drops more: {} vs {}",
+            rec.total_completed(),
+            single.total_completed()
+        );
+        // the config-level flag reaches the sim
+        let mut cfg2 = c.clone();
+        cfg2.single_restart = true;
+        let via_cfg = ClusterSim::new(&cfg2, 3)
+            .with_policy(policy.clone())
+            .step(None);
+        assert_eq!(via_cfg.iter_time.to_bits(), single.iter_time.to_bits());
+        // ...and survives the trace round trip: a run recorded under the
+        // flag replays bitwise, because the metadata carries it
+        let mut rec_sim = ClusterSim::new(&cfg2, 3).with_policy(policy);
+        rec_sim.start_recording();
+        let mut out = StepOutcome::default();
+        for _ in 0..3 {
+            rec_sim.step_installed_into(&mut out);
+        }
+        let trace = rec_sim.finish_recording().unwrap();
+        assert!(trace.meta.single_restart);
+        let parsed =
+            crate::sim::TraceRecord::parse(&trace.to_json()).unwrap();
+        assert!(parsed.meta.single_restart, "flag survives the JSON");
+        let mut replay = ClusterSim::from_trace(&parsed).unwrap();
+        for (i, rec) in parsed.outcomes.iter().enumerate() {
+            let mut out = StepOutcome::default();
+            replay.replay_into(&mut out).unwrap();
+            assert!(rec.matches(&out), "single-restart replay step {i}");
+        }
+        // rewinding replays the same outcomes again, bit for bit
+        replay.rewind_replay().unwrap();
+        let mut out = StepOutcome::default();
+        replay.replay_into(&mut out).unwrap();
+        assert!(parsed.outcomes[0].matches(&out), "rewound replay");
+        // no source -> typed error
+        assert!(ClusterSim::new(&c, 1).rewind_replay().is_err());
     }
 
     #[test]

@@ -255,62 +255,204 @@ impl CommModel {
                 &built
             }
         };
-        let first = arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
-        let mut ready: Vec<f64> =
-            arrivals.iter().map(|a| a.max(0.0)).collect();
-        let mut alive = vec![true; arrivals.len()];
-        let mut survivors = arrivals.len();
-        let mut close = f64::NEG_INFINITY;
-        let phases = schedule.phases.len();
-        for p in 0..phases.max(budget_offsets.len()) {
-            if p < budget_offsets.len() {
-                let cutoff = first + budget_offsets[p];
-                for (n, a) in alive.iter_mut().enumerate() {
-                    if !*a {
-                        continue;
-                    }
-                    let v = if p == 0 { arrivals[n] } else { ready[n] };
-                    if v > cutoff {
-                        *a = false;
-                        survivors -= 1;
-                        close = cutoff;
-                    }
-                }
-            }
-            if p < phases {
-                // one event-queue drain, exactly schedule_completion's
-                // per-phase inner loop
-                let phase = &schedule.phases[p];
-                let mut q = EventQueue::new();
-                for (k, t) in phase.transfers.iter().enumerate() {
-                    let hop = latency + t.chunk.fraction() * bytes / bandwidth;
-                    q.schedule_at(ready[t.src] + hop, k as u64);
-                }
-                let mut next = ready.clone();
-                while let Some(ev) = q.pop() {
-                    let t = &phase.transfers[ev.tag as usize];
-                    if ev.time > next[t.dst] {
-                        next[t.dst] = ev.time;
-                    }
-                    if ev.time > next[t.src] {
-                        next[t.src] = ev.time;
-                    }
-                }
-                ready = next;
-            }
-        }
-        if survivors == arrivals.len() {
-            let t = ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            (alive, t)
-        } else if survivors == 0 {
+        let scan = per_phase_event_scan(
+            schedule,
+            arrivals,
+            budget_offsets,
+            latency,
+            bandwidth,
+            bytes,
+        );
+        if scan.survivors == arrivals.len() {
+            let t =
+                scan.ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            (scan.alive, t)
+        } else if scan.survivors == 0 {
             // every worker missed a checkpoint: nothing to reduce, the
             // step ends when the last membership window closes
-            (alive, close.max(0.0))
+            (scan.alive, scan.close.max(0.0))
         } else {
-            let t = self.completion_time(&vec![close; survivors]);
-            (alive, t)
+            let t = self.completion_time(&vec![scan.close; scan.survivors]);
+            (scan.alive, t)
         }
     }
+
+    /// [`Self::per_phase_bounded_completion`] under the *recursive*
+    /// restart semantics (the default since the trace PR): when a
+    /// checkpoint drops workers, the survivors' restarted collective is
+    /// itself re-checked against the budgets *after* the triggering
+    /// checkpoint, rebased to the restart instant
+    /// ([`crate::policy::rebased_offsets`]) — and so on recursively,
+    /// until a level completes, runs out of checkpoints, or drops
+    /// everyone. A level with no remaining budgets times the survivors
+    /// exactly like the single-restart rule, so the two semantics agree
+    /// bitwise whenever no checkpoint follows the triggering one (in
+    /// particular, a single lumped budget is still bitwise the
+    /// step-level [`Self::bounded_wait_completion`]).
+    ///
+    /// This is the event-queue oracle of the compiled recursion in
+    /// [`crate::sim::ClusterSim`] — bitwise identical (property-tested
+    /// in `tests/policy_equivalence.rs`). The fixed-`T^c` model has no
+    /// phase structure, so there is nothing to re-check and the lumped
+    /// single-restart form applies unchanged.
+    pub fn per_phase_bounded_completion_recursive(
+        &self,
+        arrivals: &[f64],
+        budget_offsets: &[f64],
+        cached: Option<&Schedule>,
+    ) -> (Vec<bool>, f64) {
+        if arrivals.is_empty() {
+            return (Vec::new(), 0.0);
+        }
+        let (latency, bandwidth, bytes) = match self.link_params() {
+            // fixed model: budgets lump, no phases to re-check
+            None => {
+                return self.per_phase_bounded_completion(
+                    arrivals,
+                    budget_offsets,
+                    cached,
+                )
+            }
+            Some(p) => p,
+        };
+        let mut alive = vec![true; arrivals.len()];
+        let mut alive_idx: Vec<usize> = (0..arrivals.len()).collect();
+        let mut cur_arrivals: Vec<f64> = arrivals.to_vec();
+        let mut offsets: Vec<f64> = budget_offsets.to_vec();
+        let mut top_level = true;
+        loop {
+            let built;
+            let schedule = match (top_level, cached) {
+                (true, Some(s)) if s.workers == cur_arrivals.len() => s,
+                _ => {
+                    built = self
+                        .schedule_for(cur_arrivals.len())
+                        .expect("non-fixed model has a schedule");
+                    &built
+                }
+            };
+            let scan = per_phase_event_scan(
+                schedule,
+                &cur_arrivals,
+                &offsets,
+                latency,
+                bandwidth,
+                bytes,
+            );
+            if scan.survivors == cur_arrivals.len() {
+                let t = scan
+                    .ready
+                    .iter()
+                    .cloned()
+                    .fold(f64::NEG_INFINITY, f64::max);
+                return (alive, t);
+            }
+            // map the level's drops back to global worker ids and
+            // compact the alive list
+            let mut w = 0usize;
+            for (j, &worker) in alive_idx.clone().iter().enumerate() {
+                if scan.alive[j] {
+                    alive_idx[w] = worker;
+                    w += 1;
+                } else {
+                    alive[worker] = false;
+                }
+            }
+            alive_idx.truncate(w);
+            if scan.survivors == 0 {
+                return (alive, scan.close.max(0.0));
+            }
+            let rem = crate::policy::rebased_offsets(&offsets, scan.checkpoint);
+            if rem.is_empty() {
+                // no checkpoints beyond the trigger: the single-restart
+                // rule, bit for bit
+                let t =
+                    self.completion_time(&vec![scan.close; scan.survivors]);
+                return (alive, t);
+            }
+            offsets = rem;
+            cur_arrivals.clear();
+            cur_arrivals.resize(scan.survivors, scan.close);
+            top_level = false;
+        }
+    }
+}
+
+/// Result of one bounded per-phase event-queue scan (the oracle twin of
+/// [`super::compiled::CompiledSchedule::bounded_completion_with`]).
+struct PhaseScan {
+    /// `true` = survived every checkpoint of this scan.
+    alive: Vec<bool>,
+    /// Per-worker readiness after the last phase.
+    ready: Vec<f64>,
+    survivors: usize,
+    /// Cutoff of the last checkpoint that dropped anyone
+    /// (`NEG_INFINITY` when nobody dropped).
+    close: f64,
+    /// Index of that checkpoint (0 when nobody dropped).
+    checkpoint: usize,
+}
+
+/// One bounded per-phase scan of `schedule` with event-queue phase
+/// timing: checkpoint `p` closes phase-`p` entry at
+/// `first_arrival + budget_offsets[p]` (checkpoint 0 on raw arrivals),
+/// phases drain one [`EventQueue`] each — exactly
+/// [`schedule_completion`]'s inner loop. Shared by the single-restart
+/// and recursive oracle forms so both see identical bits.
+fn per_phase_event_scan(
+    schedule: &Schedule,
+    arrivals: &[f64],
+    budget_offsets: &[f64],
+    latency: f64,
+    bandwidth: f64,
+    bytes: f64,
+) -> PhaseScan {
+    let first = arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut ready: Vec<f64> = arrivals.iter().map(|a| a.max(0.0)).collect();
+    let mut alive = vec![true; arrivals.len()];
+    let mut survivors = arrivals.len();
+    let mut close = f64::NEG_INFINITY;
+    let mut checkpoint = 0usize;
+    let phases = schedule.phases.len();
+    for p in 0..phases.max(budget_offsets.len()) {
+        if p < budget_offsets.len() {
+            let cutoff = first + budget_offsets[p];
+            for (n, a) in alive.iter_mut().enumerate() {
+                if !*a {
+                    continue;
+                }
+                let v = if p == 0 { arrivals[n] } else { ready[n] };
+                if v > cutoff {
+                    *a = false;
+                    survivors -= 1;
+                    close = cutoff;
+                    checkpoint = p;
+                }
+            }
+        }
+        if p < phases {
+            // one event-queue drain, exactly schedule_completion's
+            // per-phase inner loop
+            let phase = &schedule.phases[p];
+            let mut q = EventQueue::new();
+            for (k, t) in phase.transfers.iter().enumerate() {
+                let hop = latency + t.chunk.fraction() * bytes / bandwidth;
+                q.schedule_at(ready[t.src] + hop, k as u64);
+            }
+            let mut next = ready.clone();
+            while let Some(ev) = q.pop() {
+                let t = &phase.transfers[ev.tag as usize];
+                if ev.time > next[t.dst] {
+                    next[t.dst] = ev.time;
+                }
+                if ev.time > next[t.src] {
+                    next[t.src] = ev.time;
+                }
+            }
+            ready = next;
+        }
+    }
+    PhaseScan { alive, ready, survivors, close, checkpoint }
 }
 
 /// The DropComm membership cutoff: the single source of truth for the
@@ -598,6 +740,88 @@ mod tests {
         let (mask, t) = m.per_phase_bounded_completion(&[], &[1.0], None);
         assert!(mask.is_empty());
         assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn recursive_restart_agrees_with_single_when_no_budgets_remain() {
+        // a single lumped budget (and any trigger at the last
+        // checkpoint) leaves nothing to re-check: the recursive form
+        // must be bitwise the single-restart form — and therefore still
+        // bitwise the step-level bounded wait.
+        let models = [
+            CommModel::Fixed(0.5),
+            CommModel::Ring { latency: 1e-4, bandwidth: 1e9, bytes: 4e6 },
+            CommModel::Topology {
+                kind: TopologyKind::Tree,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                bytes: 4e6,
+            },
+        ];
+        let arrivals = [0.3, 0.1, 7.0, 0.2, 0.5];
+        for m in &models {
+            for deadline in [0.0, 1.0, 100.0] {
+                let offsets = crate::policy::cumulative_offsets(&[deadline]);
+                let (want_mask, want_t) =
+                    m.per_phase_bounded_completion(&arrivals, &offsets, None);
+                let (mask, t) = m.per_phase_bounded_completion_recursive(
+                    &arrivals, &offsets, None,
+                );
+                assert_eq!(mask, want_mask, "{m:?} deadline={deadline}");
+                assert_eq!(
+                    t.to_bits(),
+                    want_t.to_bits(),
+                    "{m:?} deadline={deadline}"
+                );
+            }
+        }
+        // empty arrivals complete instantly in both forms
+        let m = &models[1];
+        let (mask, t) =
+            m.per_phase_bounded_completion_recursive(&[], &[1.0], None);
+        assert!(mask.is_empty());
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn recursive_restart_rechecks_survivors_against_remaining_budgets() {
+        // tree, the ROOT straggles: during the reduce phases the other
+        // workers' readiness stays low (they only send), so the single
+        // scan's later checkpoints admit all four survivors and the last
+        // trigger stays at the entry checkpoint. Single-restart then
+        // times the survivors' full tree unchecked; the recursive
+        // semantics re-check that restart against the remaining tight
+        // budgets, whose cutoff (restart + 0.004) the restart's first
+        // 0.005s hop already misses — everyone is dropped and the step
+        // ends at the final window close.
+        let m = CommModel::Topology {
+            kind: TopologyKind::Tree,
+            latency: 1e-3,
+            bandwidth: 1e9,
+            bytes: 4e6, // full-buffer tree hop = 1e-3 + 4e-3 = 5e-3
+        };
+        let arrivals = [1.0005, 0.0, 0.1, 0.2, 0.15];
+        let offsets = crate::policy::cumulative_offsets(&[1.0, 0.004, 0.0, 0.0]);
+        let (mask_s, t_single) =
+            m.per_phase_bounded_completion(&arrivals, &offsets, None);
+        assert_eq!(
+            mask_s,
+            vec![false, true, true, true, true],
+            "single scan drops only the root straggler"
+        );
+        let want_single = m.completion_time(&vec![1.0; 4]);
+        assert_eq!(t_single.to_bits(), want_single.to_bits());
+        let (mask_r, t_rec) =
+            m.per_phase_bounded_completion_recursive(&arrivals, &offsets, None);
+        assert_eq!(
+            mask_r,
+            vec![false; 5],
+            "the restarted tree misses the rebased 0.004 budget"
+        );
+        assert!(t_rec < t_single, "{t_rec} vs {t_single}");
+        // the recursive step ends at the re-check's window close:
+        // restart at 1.0 plus the rebased second budget
+        assert!((t_rec - 1.004).abs() < 1e-9, "{t_rec}");
     }
 
     #[test]

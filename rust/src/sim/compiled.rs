@@ -53,9 +53,12 @@ pub enum PhaseBounded {
     Complete(f64),
     /// Some worker missed a checkpoint: `survivors` workers remain and
     /// membership was finally known at `close` (the last checkpoint
-    /// cutoff that dropped anyone). The caller times the survivors'
-    /// restarted collective from `close` (the per-k cache).
-    Dropped { survivors: usize, close: f64 },
+    /// cutoff that dropped anyone). `checkpoint` is that checkpoint's
+    /// index — the recursive restart semantics re-check the survivors'
+    /// collective against the budgets *after* it
+    /// ([`crate::policy::rebased_offsets`]). The caller times the
+    /// survivors' restarted collective from `close` (the per-k cache).
+    Dropped { survivors: usize, close: f64, checkpoint: usize },
 }
 
 /// A [`Schedule`] lowered to flat arrays with precomputed hop costs for
@@ -208,6 +211,7 @@ impl CompiledSchedule {
         next.resize(arrivals.len(), 0.0);
         let mut survivors = arrivals.len();
         let mut close = f64::NEG_INFINITY;
+        let mut last_checkpoint = 0usize;
         let phases = self.phase_count();
         for p in 0..phases.max(budget_offsets.len()) {
             if p < budget_offsets.len() {
@@ -222,6 +226,7 @@ impl CompiledSchedule {
                         *d = true;
                         survivors -= 1;
                         close = cutoff;
+                        last_checkpoint = p;
                     }
                 }
             }
@@ -248,7 +253,7 @@ impl CompiledSchedule {
                 ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
             )
         } else {
-            PhaseBounded::Dropped { survivors, close }
+            PhaseBounded::Dropped { survivors, close, checkpoint: last_checkpoint }
         }
     }
 }
@@ -399,7 +404,7 @@ mod tests {
         let close = bounded_wait_cutoff(&arrivals, budget);
         assert_eq!(
             got,
-            PhaseBounded::Dropped { survivors: 3, close }
+            PhaseBounded::Dropped { survivors: 3, close, checkpoint: 0 }
         );
     }
 
@@ -425,10 +430,11 @@ mod tests {
             &mut dropped,
         );
         match got {
-            PhaseBounded::Dropped { survivors, close } => {
+            PhaseBounded::Dropped { survivors, close, checkpoint } => {
                 assert!(survivors < 4, "someone must drop");
                 assert!(survivors > 0, "not everyone");
                 assert_eq!(close, 1.0, "last triggered checkpoint");
+                assert!(checkpoint > 0, "a deep checkpoint triggered");
             }
             PhaseBounded::Complete(_) => {
                 panic!("deep checkpoints should have dropped the chain")

@@ -17,7 +17,13 @@
 //! * [`cluster`] — synchronous / DropCompute / DropComm / Local-SGD
 //!   step timing, driven by the unified [`crate::policy::DropPolicy`]
 //!   surface ([`ClusterSim::step_with`]);
-//! * [`trace`] — `t_{i,n}^{(m)}` recording for Algorithm 2 and post-analysis.
+//! * [`trace`] — `t_{i,n}^{(m)}` recording for Algorithm 2 and
+//!   post-analysis, plus the versioned replayable [`TraceRecord`]
+//!   format: any live run records its per-worker draws and outcomes
+//!   ([`ClusterSim::start_recording`]), and replaying the record
+//!   ([`ClusterSim::from_trace`]) reproduces those outcomes bitwise on
+//!   both timing paths — the conformance harness and the input of
+//!   [`crate::analysis::budget_fit`].
 
 pub mod cluster;
 pub mod comm;
@@ -35,4 +41,7 @@ pub use compiled::{CompiledSchedule, PhaseBounded, ScheduleScratch};
 pub use event::EventQueue;
 pub use noise::{build_noise, LatencyModel, NoiseSampler};
 pub use survivor::SurvivorScheduleCache;
-pub use trace::Trace;
+pub use trace::{
+    StepTrace, Trace, TraceComm, TraceMeta, TraceMode, TraceOutcome,
+    TraceRecord, TraceWriter, TRACE_FORMAT_VERSION,
+};

@@ -23,7 +23,7 @@
 //! property-tested in `tests/perf_equivalence.rs`.
 
 use super::comm::CommModel;
-use super::compiled::{CompiledSchedule, ScheduleScratch};
+use super::compiled::{CompiledSchedule, PhaseBounded, ScheduleScratch};
 
 #[derive(Debug)]
 struct Slot {
@@ -111,6 +111,65 @@ impl SurvivorScheduleCache {
         self.arrivals.resize(k, close);
         slot.compiled.completion_with(&self.arrivals, &mut slot.scratch)
     }
+
+    /// The k-survivor collective starting at `close`, *re-checked*
+    /// against the (rebased) remaining per-phase budget offsets — the
+    /// compiled arm of the recursive restart semantics
+    /// ([`crate::policy::rebased_offsets`]). Same memoized per-k
+    /// schedule and scratch as [`Self::completion`]; with no drops the
+    /// returned `Complete` value is bitwise [`Self::completion`]'s
+    /// (checkpoint comparisons never perturb the readiness pass).
+    /// `dropped` is the caller's reusable sub-mask (index = survivor
+    /// position, not global worker id).
+    pub fn bounded_completion(
+        &mut self,
+        k: usize,
+        close: f64,
+        offsets: &[f64],
+        dropped: &mut Vec<bool>,
+    ) -> PhaseBounded {
+        if k == 0 {
+            dropped.clear();
+            return PhaseBounded::Complete(0.0);
+        }
+        if let CommModel::Fixed(tc) = self.model {
+            // no phase structure: equal arrivals survive every cumulative
+            // cutoff (cutoff = close + offset >= close), so the re-check
+            // can never drop — same as the unchecked completion
+            dropped.clear();
+            dropped.resize(k, false);
+            return PhaseBounded::Complete(close + tc);
+        }
+        if self.slots.len() <= k {
+            self.slots.resize_with(k + 1, || None);
+        }
+        if self.slots[k].is_none() {
+            let (latency, bandwidth, bytes) = self
+                .model
+                .link_params()
+                .expect("schedule-driven model has link params");
+            let schedule = self
+                .model
+                .schedule_for(k)
+                .expect("schedule-driven model has a schedule");
+            self.slots[k] = Some(Slot {
+                compiled: CompiledSchedule::compile(
+                    &schedule, latency, bandwidth, bytes,
+                ),
+                scratch: ScheduleScratch::with_capacity(k),
+            });
+            self.compiled += 1;
+        }
+        let slot = self.slots[k].as_mut().expect("slot just ensured");
+        self.arrivals.clear();
+        self.arrivals.resize(k, close);
+        slot.compiled.bounded_completion_with(
+            &self.arrivals,
+            offsets,
+            &mut slot.scratch,
+            dropped,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -179,6 +238,58 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn bounded_completion_matches_unchecked_when_budgets_are_loose() {
+        // the re-checked form with budgets nobody can miss must return
+        // Complete with exactly the unchecked completion's bits, reuse
+        // the same memoized slots, and drop no one
+        use crate::sim::compiled::PhaseBounded;
+        for kind in TopologyKind::ALL {
+            let model = CommModel::Topology {
+                kind,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                bytes: 4e6,
+            };
+            let mut cache = SurvivorScheduleCache::new(&model);
+            let mut dropped = Vec::new();
+            for k in [1usize, 3, 5] {
+                let want = cache.completion(k, 0.7);
+                let compiles = cache.compiled_count();
+                let got = cache.bounded_completion(
+                    k,
+                    0.7,
+                    &[1e6, 2e6],
+                    &mut dropped,
+                );
+                assert_eq!(
+                    got,
+                    PhaseBounded::Complete(want),
+                    "{} k={k}",
+                    kind.name()
+                );
+                assert!(dropped.iter().all(|&d| !d));
+                assert_eq!(
+                    cache.compiled_count(),
+                    compiles,
+                    "re-check must reuse the slot"
+                );
+            }
+            // k = 0 completes instantly, like the unchecked form
+            assert_eq!(
+                cache.bounded_completion(0, 3.0, &[1.0], &mut dropped),
+                PhaseBounded::Complete(0.0)
+            );
+        }
+        // fixed model: equal arrivals can never miss a cumulative cutoff
+        let mut fixed = SurvivorScheduleCache::new(&CommModel::Fixed(0.5));
+        let mut dropped = Vec::new();
+        assert_eq!(
+            fixed.bounded_completion(3, 1.0, &[0.0], &mut dropped),
+            PhaseBounded::Complete(1.5)
+        );
     }
 
     #[test]

@@ -1,14 +1,55 @@
-//! Micro-batch latency traces: `t_{i,n}^{(m)}` tensors.
+//! Latency traces — the crate's `TraceSource`.
 //!
-//! Algorithm 2 (App. C.1) chooses the threshold from exactly this data;
-//! the Fig 4 "post-analysis" benches replay recorded traces through the
-//! DropCompute timing rule at many thresholds. CSV on disk so runs can
-//! be archived and re-analyzed.
+//! Two layers:
+//!
+//! * [`Trace`] — the dense `[iters][workers][accums]` tensor Algorithm 2
+//!   (App. C.1) consumes and the Fig 4 post-analysis benches sweep
+//!   (CSV on disk, no-drop recordings only);
+//! * [`TraceRecord`] — the versioned-JSON *replayable* trace: per step,
+//!   each worker's straggler delay and the micro-batch latencies its
+//!   live run actually drew, plus the run's metadata (cluster shape,
+//!   comm model, installed [`crate::policy::DropPolicy`] spec, seed)
+//!   and the recorded [`super::StepOutcome`]s. Replaying a record
+//!   through [`super::ClusterSim::from_trace`] reproduces the recorded
+//!   outcomes **bitwise**, on both the compiled and event-queue timing
+//!   paths — which is what makes checked-in golden traces a permanent
+//!   conformance harness (`rust/tests/trace_conformance.rs`), and what
+//!   lets [`crate::analysis::budget_fit`] evaluate candidate drop
+//!   policies against recorded reality instead of synthetic noise
+//!   (OptiReduce derives its per-phase deadlines from measured tails
+//!   the same way).
+//!
+//! JSON schema (version 1):
+//!
+//! ```json
+//! {
+//!   "format": "dropcompute-trace",
+//!   "version": 1,
+//!   "mode": "step",                    // or "period" (Local-SGD)
+//!   "workers": 6, "accums": 3, "seed": 42,
+//!   "policy": "deadline=0.75",         // DropPolicy spec grammar
+//!   "comm": {"kind": "ring", "latency": 1e-3,
+//!            "bandwidth": 1e9, "bytes": 4e6},   // or {"kind": "fixed", "latency": 0.5}
+//!   "steps":    [{"straggle": [..N..], "samples": [[..],..N..]}, ..],
+//!   "outcomes": [{"iter_time": t, "compute_time": c,
+//!                 "worker_compute": [..N..], "completed": [..N..]}, ..]
+//! }
+//! ```
+//!
+//! Floats are written in Rust's shortest round-trip form and parsed by
+//! the std `f64` parser, so every value survives the JSON round trip
+//! bit for bit. Malformed, short, non-finite or mis-shaped records
+//! produce typed [`Error`]s, never panics.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
+use crate::runtime::json::Json;
+use crate::topology::TopologyKind;
 use crate::util::{Error, Result};
+
+use super::cluster::StepOutcome;
+use super::comm::CommModel;
 
 /// Dense `[iters][workers][accums]` latency tensor (seconds).
 #[derive(Debug, Clone, PartialEq)]
@@ -158,6 +199,621 @@ impl Trace {
     }
 }
 
+/// Version of the replayable-trace JSON format this build writes (and
+/// the only one it reads — forward versions are a typed error, not a
+/// guess).
+pub const TRACE_FORMAT_VERSION: u64 = 1;
+
+/// What one recorded entry of a [`TraceRecord`] is: a synchronous step
+/// (per-worker straggle + micro-batch latency draws) or a Local-SGD
+/// period (per-worker local-step compute times, straggle folded in).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    Step,
+    Period,
+}
+
+impl TraceMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceMode::Step => "step",
+            TraceMode::Period => "period",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "step" => Ok(TraceMode::Step),
+            "period" => Ok(TraceMode::Period),
+            other => Err(Error::Data(format!(
+                "trace: unknown mode `{other}` (want step or period)"
+            ))),
+        }
+    }
+}
+
+/// The comm model a trace was recorded under — enough to rebuild the
+/// exact [`CommModel`] (and therefore the exact collective timing) at
+/// replay time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceComm {
+    /// The paper's fixed serial constant `T^c`.
+    Fixed { latency: f64 },
+    /// Schedule-driven topology with its link parameters.
+    Topology { kind: TopologyKind, latency: f64, bandwidth: f64, bytes: f64 },
+}
+
+impl TraceComm {
+    pub fn from_model(m: &CommModel) -> Self {
+        match *m {
+            CommModel::Fixed(latency) => TraceComm::Fixed { latency },
+            CommModel::Ring { latency, bandwidth, bytes } => {
+                TraceComm::Topology {
+                    kind: TopologyKind::Ring,
+                    latency,
+                    bandwidth,
+                    bytes,
+                }
+            }
+            CommModel::Topology { kind, latency, bandwidth, bytes } => {
+                TraceComm::Topology { kind, latency, bandwidth, bytes }
+            }
+        }
+    }
+
+    pub fn to_model(&self) -> CommModel {
+        match *self {
+            TraceComm::Fixed { latency } => CommModel::Fixed(latency),
+            TraceComm::Topology { kind, latency, bandwidth, bytes } => {
+                CommModel::Topology { kind, latency, bandwidth, bytes }
+            }
+        }
+    }
+
+    /// The `kind` string of the JSON schema (`fixed`, or the
+    /// [`TopologyKind::parse`] grammar: `ring`, `torus:2`, ...).
+    fn kind_spec(&self) -> String {
+        match self {
+            TraceComm::Fixed { .. } => "fixed".into(),
+            TraceComm::Topology { kind, .. } => match kind {
+                TopologyKind::Ring => "ring".into(),
+                TopologyKind::Tree => "tree".into(),
+                TopologyKind::Hierarchical { group } => {
+                    format!("hierarchical:{group}")
+                }
+                TopologyKind::Torus { rows } => format!("torus:{rows}"),
+            },
+        }
+    }
+}
+
+/// Run metadata of a [`TraceRecord`]: everything needed to rebuild the
+/// recorded sim (minus the latency model, which replay never samples).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    pub version: u64,
+    pub mode: TraceMode,
+    pub workers: usize,
+    pub accums: usize,
+    pub seed: u64,
+    /// Spec string of the installed [`crate::policy::DropPolicy`].
+    pub policy: String,
+    pub comm: TraceComm,
+    /// The run used the legacy single-restart per-phase semantics
+    /// ([`super::ClusterSim::with_single_restart`]). Recorded so replay
+    /// restores the exact semantics — otherwise a trace recorded under
+    /// the flag would not reproduce bitwise. Serialized only when true
+    /// (absent = recursive default).
+    pub single_restart: bool,
+}
+
+/// One recorded step (or Local-SGD period): per worker, the straggler
+/// delay and the latency samples the live run drew. In `Period` mode
+/// each sample is a whole local step's compute time (straggle folded
+/// in) and the straggle column is zero.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepTrace {
+    pub straggle: Vec<f64>,
+    pub samples: Vec<Vec<f64>>,
+}
+
+/// The [`StepOutcome`] the live run produced for one recorded step —
+/// the golden values replay must reproduce bitwise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceOutcome {
+    pub iter_time: f64,
+    pub compute_time: f64,
+    pub worker_compute: Vec<f64>,
+    pub completed: Vec<usize>,
+}
+
+impl TraceOutcome {
+    pub fn from_outcome(out: &StepOutcome) -> Self {
+        Self {
+            iter_time: out.iter_time,
+            compute_time: out.compute_time,
+            worker_compute: out.worker_compute.clone(),
+            completed: out.completed.clone(),
+        }
+    }
+
+    /// Bitwise equality against a replayed outcome (floats compared by
+    /// bits, not tolerance — this is the conformance contract).
+    pub fn matches(&self, out: &StepOutcome) -> bool {
+        self.iter_time.to_bits() == out.iter_time.to_bits()
+            && self.compute_time.to_bits() == out.compute_time.to_bits()
+            && self.completed == out.completed
+            && self.worker_compute.len() == out.worker_compute.len()
+            && self
+                .worker_compute
+                .iter()
+                .zip(&out.worker_compute)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+/// A replayable recorded run: metadata + per-step draws + the recorded
+/// outcomes (see the module docs for the JSON schema).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    pub meta: TraceMeta,
+    pub steps: Vec<StepTrace>,
+    /// One entry per step when recorded by [`TraceWriter`]; may be
+    /// empty in hand-authored records (then only replay-vs-replay
+    /// conformance is checkable, not replay-vs-recorded).
+    pub outcomes: Vec<TraceOutcome>,
+}
+
+fn json_f64_list(vals: &[f64]) -> String {
+    let parts: Vec<String> = vals.iter().map(|v| format!("{v:?}")).collect();
+    format!("[{}]", parts.join(", "))
+}
+
+fn json_usize_list(vals: &[usize]) -> String {
+    let parts: Vec<String> = vals.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", parts.join(", "))
+}
+
+fn req<'a>(obj: &'a Json, key: &str) -> Result<&'a Json> {
+    obj.get(key)
+        .ok_or_else(|| Error::Data(format!("trace: missing field `{key}`")))
+}
+
+fn req_str(obj: &Json, key: &str) -> Result<String> {
+    req(obj, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Data(format!("trace: `{key}` must be a string")))
+}
+
+fn req_f64(obj: &Json, key: &str) -> Result<f64> {
+    req(obj, key)?
+        .as_f64()
+        .ok_or_else(|| Error::Data(format!("trace: `{key}` must be a number")))
+}
+
+fn req_uint(obj: &Json, key: &str) -> Result<u64> {
+    let f = req_f64(obj, key)?;
+    if f < 0.0 || f.fract() != 0.0 || !f.is_finite() {
+        return Err(Error::Data(format!(
+            "trace: `{key}` must be a non-negative integer, got {f}"
+        )));
+    }
+    Ok(f as u64)
+}
+
+fn f64_list(v: &Json, what: &str) -> Result<Vec<f64>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| Error::Data(format!("trace: {what} must be an array")))?;
+    arr.iter()
+        .map(|x| {
+            x.as_f64().ok_or_else(|| {
+                Error::Data(format!("trace: {what} must hold numbers"))
+            })
+        })
+        .collect()
+}
+
+fn usize_list(v: &Json, what: &str) -> Result<Vec<usize>> {
+    f64_list(v, what)?
+        .into_iter()
+        .map(|f| {
+            if f < 0.0 || f.fract() != 0.0 {
+                Err(Error::Data(format!(
+                    "trace: {what} must hold non-negative integers"
+                )))
+            } else {
+                Ok(f as usize)
+            }
+        })
+        .collect()
+}
+
+impl TraceRecord {
+    /// Recorded steps (or periods).
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Render as the versioned JSON document. Floats use Rust's
+    /// shortest round-trip formatting, so `parse(to_json())` is
+    /// bitwise-lossless (asserted by the unit tests and the conformance
+    /// suite).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str("  \"format\": \"dropcompute-trace\",\n");
+        s.push_str(&format!("  \"version\": {},\n", self.meta.version));
+        s.push_str(&format!("  \"mode\": \"{}\",\n", self.meta.mode.name()));
+        s.push_str(&format!("  \"workers\": {},\n", self.meta.workers));
+        s.push_str(&format!("  \"accums\": {},\n", self.meta.accums));
+        s.push_str(&format!("  \"seed\": {},\n", self.meta.seed));
+        s.push_str(&format!("  \"policy\": \"{}\",\n", self.meta.policy));
+        if self.meta.single_restart {
+            s.push_str("  \"single_restart\": true,\n");
+        }
+        match &self.meta.comm {
+            TraceComm::Fixed { latency } => {
+                s.push_str(&format!(
+                    "  \"comm\": {{\"kind\": \"fixed\", \"latency\": {latency:?}}},\n"
+                ));
+            }
+            TraceComm::Topology { latency, bandwidth, bytes, .. } => {
+                s.push_str(&format!(
+                    "  \"comm\": {{\"kind\": \"{}\", \"latency\": {latency:?}, \
+                     \"bandwidth\": {bandwidth:?}, \"bytes\": {bytes:?}}},\n",
+                    self.meta.comm.kind_spec()
+                ));
+            }
+        }
+        s.push_str("  \"steps\": [\n");
+        for (i, st) in self.steps.iter().enumerate() {
+            let samples: Vec<String> =
+                st.samples.iter().map(|row| json_f64_list(row)).collect();
+            s.push_str(&format!(
+                "    {{\"straggle\": {}, \"samples\": [{}]}}{}\n",
+                json_f64_list(&st.straggle),
+                samples.join(", "),
+                if i + 1 < self.steps.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ],\n  \"outcomes\": [\n");
+        for (i, o) in self.outcomes.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"iter_time\": {:?}, \"compute_time\": {:?}, \
+                 \"worker_compute\": {}, \"completed\": {}}}{}\n",
+                o.iter_time,
+                o.compute_time,
+                json_f64_list(&o.worker_compute),
+                json_usize_list(&o.completed),
+                if i + 1 < self.outcomes.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Parse and validate a trace document. Every failure mode —
+    /// malformed JSON, missing/mistyped fields, unknown version or
+    /// mode, non-finite or negative values, mis-shaped steps — is a
+    /// typed [`Error`], never a panic.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Json::parse(text)?;
+        let format = req_str(&doc, "format")?;
+        if format != "dropcompute-trace" {
+            return Err(Error::Data(format!(
+                "trace: not a dropcompute trace (format `{format}`)"
+            )));
+        }
+        let version = req_uint(&doc, "version")?;
+        let mode = TraceMode::parse(&req_str(&doc, "mode")?)?;
+        let workers = req_uint(&doc, "workers")? as usize;
+        let accums = req_uint(&doc, "accums")? as usize;
+        let seed = req_uint(&doc, "seed")?;
+        let policy = req_str(&doc, "policy")?;
+        let single_restart = match doc.get("single_restart") {
+            None => false,
+            Some(Json::Bool(b)) => *b,
+            Some(_) => {
+                return Err(Error::Data(
+                    "trace: `single_restart` must be a boolean".into(),
+                ))
+            }
+        };
+        let comm_obj = req(&doc, "comm")?;
+        let kind = req_str(comm_obj, "kind")?;
+        let comm = if kind == "fixed" {
+            TraceComm::Fixed { latency: req_f64(comm_obj, "latency")? }
+        } else {
+            TraceComm::Topology {
+                kind: TopologyKind::parse(&kind)?,
+                latency: req_f64(comm_obj, "latency")?,
+                bandwidth: req_f64(comm_obj, "bandwidth")?,
+                bytes: req_f64(comm_obj, "bytes")?,
+            }
+        };
+        let steps_json = req(&doc, "steps")?
+            .as_arr()
+            .ok_or_else(|| Error::Data("trace: `steps` must be an array".into()))?;
+        let mut steps = Vec::with_capacity(steps_json.len());
+        for (i, st) in steps_json.iter().enumerate() {
+            let straggle =
+                f64_list(req(st, "straggle")?, &format!("steps[{i}].straggle"))?;
+            let rows = req(st, "samples")?.as_arr().ok_or_else(|| {
+                Error::Data(format!("trace: steps[{i}].samples must be an array"))
+            })?;
+            let samples = rows
+                .iter()
+                .map(|row| f64_list(row, &format!("steps[{i}].samples")))
+                .collect::<Result<Vec<_>>>()?;
+            steps.push(StepTrace { straggle, samples });
+        }
+        let mut outcomes = Vec::new();
+        if let Some(outs) = doc.get("outcomes") {
+            let outs = outs.as_arr().ok_or_else(|| {
+                Error::Data("trace: `outcomes` must be an array".into())
+            })?;
+            for (i, o) in outs.iter().enumerate() {
+                outcomes.push(TraceOutcome {
+                    iter_time: req_f64(o, "iter_time")?,
+                    compute_time: req_f64(o, "compute_time")?,
+                    worker_compute: f64_list(
+                        req(o, "worker_compute")?,
+                        &format!("outcomes[{i}].worker_compute"),
+                    )?,
+                    completed: usize_list(
+                        req(o, "completed")?,
+                        &format!("outcomes[{i}].completed"),
+                    )?,
+                });
+            }
+        }
+        let record = TraceRecord {
+            meta: TraceMeta {
+                version,
+                mode,
+                workers,
+                accums,
+                seed,
+                policy,
+                comm,
+                single_restart,
+            },
+            steps,
+            outcomes,
+        };
+        record.validate()?;
+        Ok(record)
+    }
+
+    /// Structural validation (see [`Self::parse`]): version, shapes,
+    /// finiteness, and mode-vs-policy consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.meta.version != TRACE_FORMAT_VERSION {
+            return Err(Error::Data(format!(
+                "trace: unsupported format version {} (this build reads {})",
+                self.meta.version, TRACE_FORMAT_VERSION
+            )));
+        }
+        let policy = crate::policy::DropPolicy::parse(&self.meta.policy)?;
+        let eff_h = policy.local_sgd_h();
+        match (self.meta.mode, eff_h) {
+            (TraceMode::Period, None) => {
+                return Err(Error::Data(
+                    "trace: period mode requires a local-sgd policy clause"
+                        .into(),
+                ))
+            }
+            (TraceMode::Step, Some(_)) => {
+                return Err(Error::Data(
+                    "trace: step mode is inconsistent with a local-sgd policy"
+                        .into(),
+                ))
+            }
+            _ => {}
+        }
+        let n = self.meta.workers;
+        for (i, st) in self.steps.iter().enumerate() {
+            if st.straggle.len() != n || st.samples.len() != n {
+                return Err(Error::Data(format!(
+                    "trace: step {i} is shaped for {}x{} workers, meta says {n}",
+                    st.straggle.len(),
+                    st.samples.len(),
+                )));
+            }
+            for (w, &v) in st.straggle.iter().enumerate() {
+                if !v.is_finite() || v < 0.0 {
+                    return Err(Error::Data(format!(
+                        "trace: step {i} worker {w}: bad straggle {v}"
+                    )));
+                }
+            }
+            for (w, row) in st.samples.iter().enumerate() {
+                let limit = match self.meta.mode {
+                    TraceMode::Step => self.meta.accums,
+                    TraceMode::Period => {
+                        eff_h.expect("period mode checked above")
+                    }
+                };
+                if row.len() > limit {
+                    return Err(Error::Data(format!(
+                        "trace: step {i} worker {w}: {} samples exceed the \
+                         {} scheduled per {}",
+                        row.len(),
+                        limit,
+                        self.meta.mode.name(),
+                    )));
+                }
+                for &v in row {
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(Error::Data(format!(
+                            "trace: step {i} worker {w}: bad sample {v}"
+                        )));
+                    }
+                }
+            }
+        }
+        if !self.outcomes.is_empty() && self.outcomes.len() != self.steps.len()
+        {
+            return Err(Error::Data(format!(
+                "trace: {} outcomes for {} steps",
+                self.outcomes.len(),
+                self.steps.len()
+            )));
+        }
+        for (i, o) in self.outcomes.iter().enumerate() {
+            if o.worker_compute.len() != n || o.completed.len() != n {
+                return Err(Error::Data(format!(
+                    "trace: outcome {i} is mis-shaped for {n} workers"
+                )));
+            }
+            if !o.iter_time.is_finite() || !o.compute_time.is_finite() {
+                return Err(Error::Data(format!(
+                    "trace: outcome {i} has non-finite times"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.validate()?;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Data(format!("trace: cannot read {}: {e}", path.display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Bridge to the dense Algorithm-2 tensor: requires a full `step`
+    /// record (every worker drew all `accums` micro-batches, i.e. a
+    /// no-drop-policy recording); the straggle folds into each worker's
+    /// first micro-batch and the comm column is the model's serial
+    /// latency — exactly [`super::ClusterSim::record_trace`]'s
+    /// convention.
+    pub fn to_trace(&self) -> Result<Trace> {
+        if self.meta.mode != TraceMode::Step {
+            return Err(Error::Data(
+                "trace: only step-mode records convert to the dense tensor"
+                    .into(),
+            ));
+        }
+        let (iters, n, m) = (self.steps.len(), self.meta.workers, self.meta.accums);
+        let mut dense = Trace::new(iters, n, m);
+        let tc = self.meta.comm.to_model().serial_latency(n);
+        for (i, st) in self.steps.iter().enumerate() {
+            for w in 0..n {
+                if st.samples[w].len() != m {
+                    return Err(Error::Data(format!(
+                        "trace: step {i} worker {w} drew {} of {m} \
+                         micro-batches; the dense tensor needs a full \
+                         (no-drop) recording",
+                        st.samples[w].len()
+                    )));
+                }
+                for (j, &s) in st.samples[w].iter().enumerate() {
+                    let t = if j == 0 { s + st.straggle[w] } else { s };
+                    dense.set(i, w, j, t);
+                }
+            }
+            dense.comm[i] = tc;
+        }
+        Ok(dense)
+    }
+}
+
+/// Incremental [`TraceRecord`] builder owned by a recording
+/// [`super::ClusterSim`] (see `ClusterSim::start_recording`). Collects
+/// per-worker draws and per-step outcomes; [`TraceWriter::finish`]
+/// returns a typed error if the recorded steps diverged from the
+/// installed policy (per-call thresholds, mode changes, mid-recording
+/// policy swaps) — the metadata would otherwise lie about what the
+/// steps ran under.
+#[derive(Debug)]
+pub struct TraceWriter {
+    meta: TraceMeta,
+    steps: Vec<StepTrace>,
+    outcomes: Vec<TraceOutcome>,
+    cur: StepTrace,
+    problem: Option<String>,
+}
+
+impl TraceWriter {
+    pub fn new(meta: TraceMeta) -> Self {
+        Self {
+            meta,
+            steps: Vec::new(),
+            outcomes: Vec::new(),
+            cur: StepTrace::default(),
+            problem: None,
+        }
+    }
+
+    /// Open a new step. `matches_installed` is the sim's check that the
+    /// per-call knobs (threshold, period) equal the installed policy's.
+    pub fn begin_step(&mut self, mode: TraceMode, matches_installed: bool) {
+        if !matches_installed && self.problem.is_none() {
+            self.problem = Some(
+                "a step ran with per-call knobs diverging from the installed \
+                 policy; install the full DropPolicy before recording"
+                    .into(),
+            );
+        }
+        if mode != self.meta.mode && self.problem.is_none() {
+            self.problem = Some(format!(
+                "a {} was recorded into a {} trace",
+                mode.name(),
+                self.meta.mode.name()
+            ));
+        }
+        self.cur = StepTrace::default();
+    }
+
+    pub fn push_worker(&mut self, straggle: f64, samples: &[f64]) {
+        self.cur.straggle.push(straggle);
+        self.cur.samples.push(samples.to_vec());
+    }
+
+    pub fn push_outcome(&mut self, out: &StepOutcome) {
+        self.steps.push(std::mem::take(&mut self.cur));
+        self.outcomes.push(TraceOutcome::from_outcome(out));
+    }
+
+    /// The sim's policy changed mid-recording.
+    pub fn mark_policy_changed(&mut self) {
+        if self.problem.is_none() {
+            self.problem =
+                Some("the drop policy changed mid-recording".into());
+        }
+    }
+
+    pub fn finish(self) -> Result<TraceRecord> {
+        if let Some(p) = self.problem {
+            return Err(Error::Runtime(format!(
+                "trace recording inconsistent: {p}"
+            )));
+        }
+        let record = TraceRecord {
+            meta: self.meta,
+            steps: self.steps,
+            outcomes: self.outcomes,
+        };
+        record.validate()?;
+        Ok(record)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,5 +874,181 @@ mod tests {
         std::fs::write(&path, "nonsense\n1,2,3\n").unwrap();
         assert!(Trace::load_csv(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn sample_record() -> TraceRecord {
+        TraceRecord {
+            meta: TraceMeta {
+                version: TRACE_FORMAT_VERSION,
+                mode: TraceMode::Step,
+                workers: 2,
+                accums: 3,
+                seed: 7,
+                policy: "deadline=0.75".into(),
+                comm: TraceComm::Topology {
+                    kind: TopologyKind::Ring,
+                    latency: 1e-3,
+                    bandwidth: 1e9,
+                    bytes: 4e6,
+                },
+                single_restart: false,
+            },
+            steps: vec![
+                StepTrace {
+                    straggle: vec![0.0, 2.5],
+                    samples: vec![vec![0.4, 0.45, 0.5], vec![0.4, 0.6, 0.41]],
+                },
+                StepTrace {
+                    straggle: vec![0.1, 0.0],
+                    // third root of two etc: values with no short
+                    // decimal form must still round-trip bitwise
+                    samples: vec![
+                        vec![2f64.sqrt(), 0.1 + 0.2, 1.0 / 3.0],
+                        vec![0.45, 0.45, 0.45],
+                    ],
+                },
+            ],
+            outcomes: vec![
+                TraceOutcome {
+                    iter_time: 4.125,
+                    compute_time: 3.9099999999,
+                    worker_compute: vec![1.35, 3.9099999999],
+                    completed: vec![3, 3],
+                },
+                TraceOutcome {
+                    iter_time: 2.0,
+                    compute_time: 1.9,
+                    worker_compute: vec![1.9, 1.35],
+                    completed: vec![3, 3],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip_is_bitwise() {
+        let r = sample_record();
+        let parsed = TraceRecord::parse(&r.to_json()).unwrap();
+        assert_eq!(parsed.meta, r.meta);
+        assert_eq!(parsed.steps.len(), r.steps.len());
+        for (a, b) in r.steps.iter().zip(&parsed.steps) {
+            for (x, y) in a.straggle.iter().zip(&b.straggle) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (ra, rb) in a.samples.iter().zip(&b.samples) {
+                assert_eq!(ra.len(), rb.len());
+                for (x, y) in ra.iter().zip(rb) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+        for (a, b) in r.outcomes.iter().zip(&parsed.outcomes) {
+            assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+            assert_eq!(a.compute_time.to_bits(), b.compute_time.to_bits());
+            assert_eq!(a.completed, b.completed);
+        }
+        // save/load through disk too
+        let dir = std::env::temp_dir().join("dc_trace_record");
+        let path = dir.join("r.trace.json");
+        r.save(&path).unwrap();
+        let loaded = TraceRecord::load(&path).unwrap();
+        assert_eq!(loaded, parsed);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn record_parse_rejects_malformed_documents_with_typed_errors() {
+        let good = sample_record().to_json();
+        // each mutation must fail with an Err, never panic
+        let cases: Vec<String> = vec![
+            "not json at all".into(),
+            "{}".into(),
+            good.replace("dropcompute-trace", "other-format"),
+            good.replace("\"version\": 1", "\"version\": 99"),
+            good.replace("\"mode\": \"step\"", "\"mode\": \"sideways\""),
+            good.replace("\"kind\": \"ring\"", "\"kind\": \"moebius\""),
+            good.replace("\"workers\": 2", "\"workers\": 5"), // shape lie
+            good.replace("2.5", "-2.5"),                      // negative straggle
+            good.replace("0.45, 0.45, 0.45", "0.45, 1e999, 0.45"), // inf sample
+            good.replace(
+                "\"policy\": \"deadline=0.75\"",
+                "\"policy\": \"wat=1\"",
+            ),
+            good.replace(
+                "\"policy\": \"deadline=0.75\"",
+                "\"policy\": \"local-sgd=3\"",
+            ), // period policy on a step trace
+            good.replace("\"completed\": [3, 3]", "\"completed\": [3, -1]"),
+        ];
+        for (i, text) in cases.iter().enumerate() {
+            assert!(
+                TraceRecord::parse(text).is_err(),
+                "case {i} should be rejected"
+            );
+        }
+        // a trace with too many samples per worker is rejected
+        let mut fat = sample_record();
+        fat.steps[0].samples[0].push(0.5);
+        assert!(fat.validate().is_err());
+        // mismatched outcome count is rejected
+        let mut odd = sample_record();
+        odd.outcomes.pop();
+        assert!(odd.validate().is_err());
+    }
+
+    #[test]
+    fn record_to_dense_trace_bridges_full_recordings() {
+        let mut r = sample_record();
+        r.meta.policy = "none".into();
+        let dense = r.to_trace().unwrap();
+        assert_eq!((dense.iters, dense.workers, dense.accums), (2, 2, 3));
+        // straggle folds into the first micro-batch
+        assert_eq!(dense.get(0, 1, 0).to_bits(), (0.4f64 + 2.5).to_bits());
+        assert_eq!(dense.get(0, 1, 1).to_bits(), 0.6f64.to_bits());
+        // comm column is the model's serial latency
+        let want = r.meta.comm.to_model().serial_latency(2);
+        assert_eq!(dense.comm[0].to_bits(), want.to_bits());
+        // a truncated (dropped) recording cannot bridge
+        let mut short = r.clone();
+        short.steps[0].samples[0].pop();
+        assert!(short.to_trace().is_err());
+        // nor can a period recording
+        let mut period = r;
+        period.meta.mode = TraceMode::Period;
+        period.meta.policy = "local-sgd=3".into();
+        assert!(period.to_trace().is_err());
+    }
+
+    #[test]
+    fn writer_collects_steps_and_flags_inconsistency() {
+        let meta = sample_record().meta;
+        let mut w = TraceWriter::new(meta.clone());
+        w.begin_step(TraceMode::Step, true);
+        w.push_worker(0.0, &[0.4, 0.45, 0.5]);
+        w.push_worker(2.5, &[0.4, 0.6, 0.41]);
+        let out = StepOutcome {
+            worker_compute: vec![1.35, 3.41],
+            completed: vec![3, 3],
+            compute_time: 3.41,
+            iter_time: 4.0,
+        };
+        w.push_outcome(&out);
+        let rec = w.finish().unwrap();
+        assert_eq!(rec.len(), 1);
+        assert!(rec.outcomes[0].matches(&out));
+        // a diverging per-call threshold poisons the recording
+        let mut w = TraceWriter::new(meta.clone());
+        w.begin_step(TraceMode::Step, false);
+        w.push_worker(0.0, &[0.4, 0.45, 0.5]);
+        w.push_worker(0.0, &[0.4, 0.6, 0.41]);
+        w.push_outcome(&out);
+        assert!(w.finish().is_err());
+        // so does a mode flip
+        let mut w = TraceWriter::new(meta);
+        w.begin_step(TraceMode::Period, true);
+        w.push_worker(0.0, &[0.4, 0.45, 0.5]);
+        w.push_worker(0.0, &[0.4, 0.6, 0.41]);
+        w.push_outcome(&out);
+        assert!(w.finish().is_err());
     }
 }

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use crate::config::ClusterConfig;
 use crate::policy::DropPolicy;
 use crate::rng::SplitMix64;
-use crate::sim::{ClusterSim, StepOutcome};
+use crate::sim::{ClusterSim, StepOutcome, TraceRecord};
 
 use super::cache::SurvivorCachePool;
 use super::runner::run_indexed;
@@ -46,6 +46,16 @@ pub struct SweepSpec {
     /// Seed axis. The same seed value across other axes gives paired
     /// (common-random-number) comparisons between arms.
     pub seeds: Vec<u64>,
+    /// Replay axis: when set, every point replays this recorded trace
+    /// ([`ClusterSim::from_trace`]) under the point's policy instead of
+    /// sampling synthetic noise — recorded reality as a grid dimension
+    /// alongside the synthetic ones. [`Self::replay`] pins the workers
+    /// axis to the trace's shape and clamps `iters` to its length;
+    /// replay is deterministic, so the seed axis leaves replay points
+    /// unchanged (a useful cross-check). Policies whose mode (step vs
+    /// local-sgd) contradicts the trace are a programmer error and
+    /// panic with a clear message.
+    pub replay: Option<Arc<TraceRecord>>,
     /// Measured iterations per point.
     pub iters: usize,
     /// Local-SGD synchronization period H: 1 (default) measures
@@ -109,11 +119,22 @@ impl SweepSpec {
             deadlines,
             policies: Vec::new(),
             seeds: vec![0],
+            replay: None,
             iters: 50,
             period: 1,
             jobs: 0,
             progress: false,
         }
+    }
+
+    /// Replay `trace` at every grid point instead of sampling synthetic
+    /// noise (see the field docs): the workers axis becomes the trace's
+    /// worker count and `iters` is clamped to the recorded length.
+    pub fn replay(mut self, trace: TraceRecord) -> Self {
+        self.workers = vec![trace.meta.workers];
+        self.iters = self.iters.min(trace.len().max(1));
+        self.replay = Some(Arc::new(trace));
+        self
     }
 
     /// Sweep [`DropPolicy`]s instead of the `thresholds × deadlines`
@@ -265,6 +286,9 @@ impl SweepSpec {
     ) -> SweepPoint {
         let p = self.params(index);
         let policy = self.point_policy(&p);
+        if let Some(trace) = &self.replay {
+            return self.run_replay_point(index, &p, policy, trace, pool);
+        }
         let mut cfg = self.base.clone();
         cfg.workers = p.workers;
         // the point's policy is its entire drop surface; neutralize the
@@ -297,6 +321,69 @@ impl SweepSpec {
             mean_iter_time: t_sum / self.iters as f64,
             mean_compute_time: compute_sum / self.iters as f64,
             throughput: completed as f64 / t_sum,
+            drop_rate: if scheduled == 0 {
+                0.0
+            } else {
+                1.0 - completed as f64 / scheduled as f64
+            },
+        }
+    }
+
+    /// One replay-axis grid point: the recorded trace re-timed under
+    /// the point's policy (the [`crate::analysis::budget_fit`]
+    /// evaluator as a grid dimension). Deterministic per index — replay
+    /// never samples — so the parallel-equals-serial contract holds
+    /// trivially, and the warm survivor caches still amortize the drop
+    /// path across points.
+    fn run_replay_point(
+        &self,
+        index: usize,
+        p: &SweepParams,
+        policy: DropPolicy,
+        trace: &TraceRecord,
+        pool: &SurvivorCachePool,
+    ) -> SweepPoint {
+        assert_eq!(
+            p.workers, trace.meta.workers,
+            "replay sweeps pin the workers axis to the trace's shape \
+             (SweepSpec::replay)"
+        );
+        let mut sim = ClusterSim::from_trace(trace)
+            .expect("SweepSpec::replay holds a validated trace");
+        sim.set_policy(&policy);
+        let mut sim = pool.lend(sim);
+        let iters = self.iters.min(trace.len());
+        let mut out = StepOutcome::default();
+        let mut t_sum = 0.0;
+        let mut compute_sum = 0.0;
+        let mut completed = 0usize;
+        for _ in 0..iters {
+            sim.replay_into(&mut out).expect(
+                "replay point within the recorded length and mode \
+                 (policy mode must match the trace)",
+            );
+            t_sum += out.iter_time;
+            compute_sum += out.compute_time;
+            completed += out.total_completed();
+        }
+        pool.reclaim(&mut sim);
+        let per_iter =
+            policy.local_sgd_h().unwrap_or(trace.meta.accums);
+        let scheduled = iters * p.workers * per_iter;
+        SweepPoint {
+            index,
+            workers: p.workers,
+            threshold: p.threshold,
+            deadline: p.deadline,
+            seed: p.seed,
+            policy: p.policy.as_ref().map(DropPolicy::spec),
+            mean_iter_time: t_sum / iters.max(1) as f64,
+            mean_compute_time: compute_sum / iters.max(1) as f64,
+            throughput: if t_sum > 0.0 {
+                completed as f64 / t_sum
+            } else {
+                0.0
+            },
             drop_rate: if scheduled == 0 {
                 0.0
             } else {
@@ -575,6 +662,73 @@ mod tests {
         assert_eq!(
             pts[1].get("policy").and_then(Json::as_str),
             Some("phase-deadline=1/0.2/0.2")
+        );
+    }
+
+    #[test]
+    fn replay_axis_sweeps_a_recorded_trace_deterministically() {
+        // record once, sweep policies over the recording: points are a
+        // pure function of the policy (the seed axis is inert), the
+        // parallel run is bitwise the serial one, and each point equals
+        // the direct replay evaluator
+        let mut cfg = base();
+        cfg.workers = 5;
+        cfg.noise = NoiseKind::Exponential { mean: 0.4 };
+        cfg.stragglers =
+            crate::config::StragglerKind::Uniform { p: 0.3, delay: 3.0 };
+        cfg.topology = Some(crate::topology::TopologyKind::Ring);
+        cfg.link_latency = 1e-4;
+        cfg.link_bandwidth = 1e9;
+        cfg.grad_bytes = 4e6;
+        let mut sim = ClusterSim::new(&cfg, 0x5EED);
+        sim.start_recording();
+        for _ in 0..12 {
+            sim.step(None);
+        }
+        let trace = sim.finish_recording().unwrap();
+        let policies = [
+            DropPolicy::None,
+            DropPolicy::comm_deadline(1.0),
+            DropPolicy::parse("tau=2.5+deadline=1").unwrap(),
+        ];
+        let spec = SweepSpec::new(cfg)
+            .policies(&policies)
+            .seeds(&[1, 2])
+            .iters(12)
+            .replay(trace.clone());
+        assert_eq!(spec.len(), 6, "workers axis pinned to the trace");
+        let serial = spec.clone().jobs(1).run();
+        let parallel = spec.clone().jobs(3).run();
+        for (a, b) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!(a.mean_iter_time.to_bits(), b.mean_iter_time.to_bits());
+            assert_eq!(a.drop_rate.to_bits(), b.drop_rate.to_bits());
+        }
+        // seeds are inert under replay: seed-1 and seed-2 rows agree
+        for i in 0..3 {
+            let (s1, s2) = (&serial.points[2 * i], &serial.points[2 * i + 1]);
+            assert_eq!(
+                s1.mean_iter_time.to_bits(),
+                s2.mean_iter_time.to_bits(),
+                "policy {i}"
+            );
+        }
+        // each point equals the direct replay evaluator
+        let (want, _) = crate::analysis::evaluate_policy(
+            &trace,
+            &policies[1],
+        )
+        .unwrap();
+        assert_eq!(serial.points[2].mean_iter_time.to_bits(), want.to_bits());
+        // and the baseline row is the recorded run itself
+        let recorded_mean = trace
+            .outcomes
+            .iter()
+            .map(|o| o.iter_time)
+            .sum::<f64>()
+            / trace.len() as f64;
+        assert_eq!(
+            serial.points[0].mean_iter_time.to_bits(),
+            recorded_mean.to_bits()
         );
     }
 

@@ -95,8 +95,9 @@ fn per_phase_compiled_scan_bitwise_equals_event_queue_oracle() {
                             kind.name()
                         );
                     }
-                    PhaseBounded::Dropped { survivors: k, close } => {
+                    PhaseBounded::Dropped { survivors: k, close, checkpoint } => {
                         assert_eq!(k, survivors);
+                        assert!(checkpoint < offsets.len());
                         // reproduce the oracle's completion from the
                         // scan's (k, close) pair exactly
                         let t = if k == 0 {
@@ -351,6 +352,11 @@ fn per_phase_policy_sweeps_and_drops_deeper_than_step_level() {
         link_latency: 5e-3,
         link_bandwidth: 1e9,
         grad_bytes: 4e7,
+        // flat zero follow-on budgets leave a restarted collective no
+        // slack at all under the recursive re-check (every drop step
+        // would drop everyone); this test is about the *scan*'s deep
+        // checkpoints, so it pins the legacy single-restart semantics
+        single_restart: true,
         ..Default::default()
     };
     let r = SweepSpec::new(base)
@@ -372,4 +378,281 @@ fn per_phase_policy_sweeps_and_drops_deeper_than_step_level() {
         step.drop_rate
     );
     assert!(phase.drop_rate < 1.0, "not everyone drops");
+}
+
+#[test]
+fn recursive_restart_compiled_bitwise_equals_event_queue_oracle() {
+    // the recursive restart semantics (the default since the trace PR)
+    // must keep the compiled drop path and the event-queue oracle a
+    // bitwise pair: random arrivals, random budget shapes, every
+    // topology, end to end through ClusterSim — including cases where
+    // restarts re-drop (tight follow-on budgets) and cascade several
+    // levels deep.
+    for kind in TopologyKind::ALL {
+        for budgets in [
+            vec![1.0, 0.25, 0.25],
+            vec![1.0, 0.004, 0.0, 0.0], // restart misses the re-check
+            vec![0.8, 0.002],
+            vec![2.0, 0.001, 0.001, 0.001, 0.001],
+        ] {
+            let cfg = ClusterConfig {
+                workers: 10,
+                accumulations: 4,
+                microbatch_mean: 0.45,
+                microbatch_std: 0.02,
+                noise: NoiseKind::Exponential { mean: 0.6 },
+                stragglers: StragglerKind::Uniform { p: 0.4, delay: 4.0 },
+                topology: Some(kind),
+                link_latency: 1e-3,
+                link_bandwidth: 1e9,
+                grad_bytes: 4e6,
+                ..Default::default()
+            };
+            let policy = DropPolicy::per_phase_deadline(budgets.clone());
+            let mut fast =
+                ClusterSim::new(&cfg, 0x5EC5).with_policy(policy.clone());
+            let mut slow = ClusterSim::new(&cfg, 0x5EC5)
+                .with_reference_timing()
+                .with_policy(policy);
+            let mut dropped_steps = 0usize;
+            for step in 0..30 {
+                let a = fast.step(None);
+                let b = slow.step(None);
+                assert_eq!(
+                    a.completed,
+                    b.completed,
+                    "{} {budgets:?} step {step}",
+                    kind.name()
+                );
+                assert_eq!(
+                    a.iter_time.to_bits(),
+                    b.iter_time.to_bits(),
+                    "{} {budgets:?} step {step}",
+                    kind.name()
+                );
+                if a.total_completed() < 10 * 4 {
+                    dropped_steps += 1;
+                }
+            }
+            assert!(
+                dropped_steps > 5,
+                "{} {budgets:?}: drop-heavy config ({dropped_steps}/30)",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn recursive_and_single_restart_agree_when_nothing_remains_to_recheck() {
+    // a single lumped budget leaves no checkpoints after the trigger:
+    // the two semantics must be bitwise identical (which also keeps the
+    // lumped == step-level CommDeadline acceptance identity intact
+    // under the new default).
+    for kind in TopologyKind::ALL {
+        let cfg = ClusterConfig {
+            workers: 8,
+            accumulations: 4,
+            microbatch_mean: 0.45,
+            microbatch_std: 0.02,
+            noise: NoiseKind::Exponential { mean: 0.5 },
+            stragglers: StragglerKind::Uniform { p: 0.35, delay: 4.0 },
+            topology: Some(kind),
+            link_latency: 1e-3,
+            link_bandwidth: 1e9,
+            grad_bytes: 4e6,
+            ..Default::default()
+        };
+        let policy = DropPolicy::per_phase_deadline(vec![1.0]);
+        let mut recursive =
+            ClusterSim::new(&cfg, 0xA11).with_policy(policy.clone());
+        let mut single = ClusterSim::new(&cfg, 0xA11)
+            .with_single_restart()
+            .with_policy(policy);
+        for step in 0..20 {
+            let a = recursive.step(None);
+            let b = single.step(None);
+            assert_eq!(a.completed, b.completed, "{} {step}", kind.name());
+            assert_eq!(
+                a.iter_time.to_bits(),
+                b.iter_time.to_bits(),
+                "{} {step}",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// A random structurally-valid policy for the round-trip fuzz below.
+fn random_policy(rng: &mut Xoshiro256pp) -> DropPolicy {
+    let clause = |rng: &mut Xoshiro256pp| match rng.next_below(4) {
+        0 => DropPolicy::compute_tau(0.1 + rng.next_f64() * 10.0)
+            .with_preemption(if rng.next_below(2) == 0 {
+                PreemptionMode::Preemptive
+            } else {
+                PreemptionMode::BetweenAccumulations
+            }),
+        1 => DropPolicy::comm_deadline(rng.next_f64() * 5.0),
+        2 => {
+            let len = 1 + rng.next_below(4) as usize;
+            DropPolicy::per_phase_deadline(
+                (0..len).map(|_| rng.next_f64() * 2.0).collect(),
+            )
+        }
+        _ => DropPolicy::local_sgd(1 + rng.next_below(8) as usize),
+    };
+    let parts = 1 + rng.next_below(3) as usize;
+    let mut p = DropPolicy::None;
+    let mut have_local = false;
+    for _ in 0..parts {
+        let mut c = clause(rng);
+        // at most one local-sgd clause is valid; resample compute taus
+        while have_local && matches!(c, DropPolicy::LocalSgdPeriod { .. }) {
+            c = DropPolicy::compute_tau(0.1 + rng.next_f64() * 10.0);
+        }
+        if matches!(c, DropPolicy::LocalSgdPeriod { .. }) {
+            have_local = true;
+        }
+        p = p.and(c);
+    }
+    if p.is_none() {
+        DropPolicy::None
+    } else {
+        p
+    }
+}
+
+#[test]
+fn spec_grammar_roundtrips_over_randomized_policies() {
+    // parse(spec(p)) == p for randomized policies across every clause
+    // kind, composition depth, and float formatting
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5FEC);
+    for case in 0..500 {
+        let p = random_policy(&mut rng);
+        let spec = p.spec();
+        let parsed = DropPolicy::parse(&spec)
+            .unwrap_or_else(|e| panic!("case {case} `{spec}`: {e}"));
+        assert_eq!(parsed, p, "case {case}: `{spec}`");
+        // and the spec is a fixed point
+        assert_eq!(parsed.spec(), spec, "case {case}");
+    }
+}
+
+#[test]
+fn spec_grammar_edge_cases_left_from_the_policy_pr() {
+    // empty / whitespace-only specs
+    for bad in ["", "   ", "+", "tau=1++deadline=2", " + "] {
+        assert!(DropPolicy::parse(bad).is_err(), "{bad:?}");
+    }
+    // duplicate keys are legal composition: tightest wins
+    let p = DropPolicy::parse("tau=5+tau=2+deadline=3+deadline=0.5").unwrap();
+    let eff = p.effective();
+    assert_eq!(eff.tau, Some(2.0));
+    assert_eq!(eff.step_deadline, Some(0.5));
+    // duplicate phase-deadline clauses merge elementwise-tightest
+    let p = DropPolicy::parse(
+        "phase-deadline=1/1+phase-deadline=0.5/2/2",
+    )
+    .unwrap();
+    assert_eq!(p.effective().merged_phase_offsets(), vec![0.5, 2.0, 4.5]);
+    // negative budgets are rejected at the grammar boundary...
+    assert!(DropPolicy::parse("phase-deadline=1/-0.5").is_err());
+    // ...and NaN/infinite numbers never parse into a policy
+    for bad in ["tau=NaN", "deadline=inf", "phase-deadline=1/infinity"] {
+        assert!(DropPolicy::parse(bad).is_err(), "{bad}");
+    }
+}
+
+#[test]
+fn phase_deadline_with_wrong_phase_count_vs_topology_is_well_defined() {
+    // more budgets than the topology has phases: trailing checkpoints
+    // apply to the final readiness (documented), never panic, and the
+    // compiled/oracle pair stays bitwise — here end to end on the
+    // smallest schedules, where budget lists overshoot the most
+    for kind in TopologyKind::ALL {
+        for workers in [1usize, 2, 3] {
+            let cfg = ClusterConfig {
+                workers,
+                accumulations: 2,
+                microbatch_mean: 0.45,
+                microbatch_std: 0.02,
+                noise: NoiseKind::Exponential { mean: 0.4 },
+                stragglers: StragglerKind::Uniform { p: 0.5, delay: 2.0 },
+                topology: Some(kind),
+                link_latency: 1e-3,
+                link_bandwidth: 1e9,
+                grad_bytes: 4e6,
+                ..Default::default()
+            };
+            // 8 budgets >> phase count of a 1-3 worker schedule
+            let policy = DropPolicy::per_phase_deadline(vec![
+                1.0, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1,
+            ]);
+            let mut fast =
+                ClusterSim::new(&cfg, 0x0DD).with_policy(policy.clone());
+            let mut slow = ClusterSim::new(&cfg, 0x0DD)
+                .with_reference_timing()
+                .with_policy(policy);
+            for step in 0..10 {
+                let a = fast.step(None);
+                let b = slow.step(None);
+                assert_eq!(
+                    a.completed,
+                    b.completed,
+                    "{} n={workers} step {step}",
+                    kind.name()
+                );
+                assert_eq!(
+                    a.iter_time.to_bits(),
+                    b.iter_time.to_bits(),
+                    "{} n={workers} step {step}",
+                    kind.name()
+                );
+                assert!(a.iter_time.is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn fitted_budgets_step_bitwise_like_their_lumped_step_deadline() {
+    // extends the lumped == step-level acceptance identity to the
+    // budget fitter's output: stepping a live cluster under
+    // PerPhaseDeadline([D*]) (the fitted budgets lumped into one) must
+    // be bitwise CommDeadline(D*)
+    let cfg = ClusterConfig {
+        workers: 8,
+        accumulations: 4,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        noise: NoiseKind::Exponential { mean: 0.3 },
+        stragglers: StragglerKind::Uniform { p: 0.25, delay: 4.0 },
+        topology: Some(TopologyKind::Ring),
+        link_latency: 1e-4,
+        link_bandwidth: 1e9,
+        grad_bytes: 4e6,
+        ..Default::default()
+    };
+    let mut rec = ClusterSim::new(&cfg, 0xF00D);
+    rec.start_recording();
+    for _ in 0..20 {
+        rec.step(None);
+    }
+    let trace = rec.finish_recording().unwrap();
+    let fit = dropcompute::analysis::fit_budgets(&trace, 8, 16).unwrap();
+    let deadline = fit.step_deadline.expect("tail-heavy trace fits a deadline");
+    let lumped = *dropcompute::policy::cumulative_offsets(&fit.phase_budgets)
+        .last()
+        .expect("fitted budgets");
+    assert_eq!(lumped.to_bits(), deadline.to_bits());
+    let mut a = ClusterSim::new(&cfg, 0xD1E)
+        .with_policy(DropPolicy::per_phase_deadline(vec![lumped]));
+    let mut b = ClusterSim::new(&cfg, 0xD1E)
+        .with_policy(DropPolicy::comm_deadline(deadline));
+    for step in 0..20 {
+        let x = a.step(None);
+        let y = b.step(None);
+        assert_eq!(x.completed, y.completed, "step {step}");
+        assert_eq!(x.iter_time.to_bits(), y.iter_time.to_bits(), "step {step}");
+    }
 }

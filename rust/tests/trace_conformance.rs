@@ -1,0 +1,325 @@
+//! Trace record / replay conformance: the golden-trace harness.
+//!
+//! The contract under test (the trace PR's headline property): replaying
+//! a recorded [`TraceRecord`] reproduces the recorded run's
+//! `StepOutcome`s **bitwise**, for every topology x `DropPolicy`
+//! variant, on both the compiled and the event-queue timing paths — and
+//! the JSON round trip loses nothing. The checked-in fixtures under
+//! `rust/tests/data/` pin those timing paths across future refactors:
+//! their embedded outcomes were computed when they were minted, so any
+//! drift in schedule building, the compiled pass, the bounded scans,
+//! survivor restarts or the policy arithmetic fails this suite.
+//!
+//! On failure, CI re-runs the ignored `regen_golden_traces` test with
+//! `TRACE_REGEN_DIR` set and uploads freshly-replayed fixtures as a
+//! diff-friendly artifact.
+
+use std::path::PathBuf;
+
+use dropcompute::analysis::{evaluate_policy, fit_budgets};
+use dropcompute::config::{ClusterConfig, NoiseKind, StragglerKind};
+use dropcompute::policy::{cumulative_offsets, DropPolicy};
+use dropcompute::sim::{ClusterSim, StepOutcome, TraceRecord};
+use dropcompute::topology::TopologyKind;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data")
+        .join(name)
+}
+
+const FIXTURES: [&str; 4] = [
+    "ring.trace.json",
+    "tree.trace.json",
+    "hierarchical.trace.json",
+    "torus.trace.json",
+];
+
+#[test]
+fn golden_fixtures_replay_bitwise_on_both_timing_paths() {
+    for name in FIXTURES {
+        let trace = TraceRecord::load(&fixture_path(name))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(trace.meta.version, 1, "{name}");
+        assert!(!trace.outcomes.is_empty(), "{name}: golden outcomes");
+        assert_eq!(trace.outcomes.len(), trace.len(), "{name}");
+        for reference in [false, true] {
+            let mut sim = ClusterSim::from_trace(&trace)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            if reference {
+                sim = sim.with_reference_timing();
+            }
+            for (i, rec) in trace.outcomes.iter().enumerate() {
+                let mut out = StepOutcome::default();
+                sim.replay_into(&mut out)
+                    .unwrap_or_else(|e| panic!("{name} step {i}: {e}"));
+                assert!(
+                    rec.matches(&out),
+                    "{name} step {i} (reference={reference}): replay \
+                     diverged from the golden outcome\n  recorded: \
+                     iter={:?} compute={:?} completed={:?}\n  replayed: \
+                     iter={:?} compute={:?} completed={:?}",
+                    rec.iter_time,
+                    rec.compute_time,
+                    rec.completed,
+                    out.iter_time,
+                    out.compute_time,
+                    out.completed,
+                );
+            }
+        }
+        // the fixtures exercise real drop paths, not just no-ops
+        let scheduled = trace.meta.workers * trace.meta.accums;
+        let has_drops = trace
+            .outcomes
+            .iter()
+            .any(|o| o.completed.iter().sum::<usize>() < scheduled);
+        if name != "hierarchical.trace.json" {
+            assert!(has_drops, "{name}: must pin a drop path");
+        }
+    }
+}
+
+#[test]
+fn record_serialize_parse_replay_roundtrips_bitwise_for_all_policies() {
+    // the acceptance property: for every topology (plus the fixed-T^c
+    // model) x every DropPolicy variant, a recorded seeded live run
+    // replays bitwise after a full JSON round trip, on both timing
+    // paths.
+    let topologies: Vec<Option<TopologyKind>> = std::iter::once(None)
+        .chain(TopologyKind::ALL.iter().copied().map(Some))
+        .collect();
+    let policies = [
+        "none",
+        "tau=2.5",
+        "tau=2.5,between",
+        "deadline=1",
+        "phase-deadline=1/0.3/0.3",
+        "tau=2.5+deadline=1",
+        "tau=2+phase-deadline=0.8/0.2",
+        "local-sgd=4+tau=0.9",
+    ];
+    for &topo in &topologies {
+        for spec in policies {
+            let policy = DropPolicy::parse(spec).expect(spec);
+            let cfg = ClusterConfig {
+                workers: 6,
+                accumulations: 3,
+                microbatch_mean: 0.45,
+                microbatch_std: 0.02,
+                comm_latency: 0.3,
+                noise: NoiseKind::Exponential { mean: 0.4 },
+                stragglers: StragglerKind::Uniform { p: 0.3, delay: 3.0 },
+                topology: topo,
+                link_latency: 1e-3,
+                link_bandwidth: 1e9,
+                grad_bytes: 4e6,
+                ..Default::default()
+            };
+            let mut live =
+                ClusterSim::new(&cfg, 0xC0FFEE).with_policy(policy);
+            live.start_recording();
+            let mut recorded = Vec::new();
+            for _ in 0..7 {
+                let mut out = StepOutcome::default();
+                live.step_installed_into(&mut out);
+                recorded.push(out);
+            }
+            let trace = live
+                .finish_recording()
+                .unwrap_or_else(|e| panic!("{topo:?} {spec}: {e}"));
+            // serialize -> parse must be lossless
+            let parsed = TraceRecord::parse(&trace.to_json())
+                .unwrap_or_else(|e| panic!("{topo:?} {spec}: {e}"));
+            assert_eq!(parsed, trace, "{topo:?} {spec}: JSON round trip");
+            for reference in [false, true] {
+                let mut replay = ClusterSim::from_trace(&parsed)
+                    .unwrap_or_else(|e| panic!("{topo:?} {spec}: {e}"));
+                if reference {
+                    replay = replay.with_reference_timing();
+                }
+                let outs = replay
+                    .replay_all()
+                    .unwrap_or_else(|e| panic!("{topo:?} {spec}: {e}"));
+                assert_eq!(outs.len(), recorded.len());
+                for (i, (want, got)) in
+                    recorded.iter().zip(&outs).enumerate()
+                {
+                    assert_eq!(
+                        want.iter_time.to_bits(),
+                        got.iter_time.to_bits(),
+                        "{topo:?} {spec} step {i} ref={reference}"
+                    );
+                    assert_eq!(
+                        want.compute_time.to_bits(),
+                        got.compute_time.to_bits(),
+                        "{topo:?} {spec} step {i} ref={reference}"
+                    );
+                    assert_eq!(want.completed, got.completed);
+                    for (a, b) in
+                        want.worker_compute.iter().zip(&got.worker_compute)
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{topo:?} {spec} step {i} ref={reference}"
+                        );
+                    }
+                }
+                // the writer's embedded outcomes agree too
+                for (i, rec) in parsed.outcomes.iter().enumerate() {
+                    assert!(
+                        rec.matches(&outs[i]),
+                        "{topo:?} {spec} step {i}: embedded outcome"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn malformed_short_and_nan_traces_are_typed_errors() {
+    // a missing file is an error, not a panic
+    assert!(TraceRecord::load(&fixture_path("missing.trace.json")).is_err());
+    let good = TraceRecord::load(&fixture_path("ring.trace.json")).unwrap();
+    let text = good.to_json();
+    // NaN / infinity cannot enter through JSON; both fail typed
+    // (the target "2.5," is step 1's straggler delay)
+    for bad in [
+        text.replace("2.5,", "NaN,"),
+        text.replace("2.5,", "1e999,"),
+        text.replace("\"version\": 1", "\"version\": 2"),
+        text.replace("\"steps\"", "\"stepz\""),
+        text.replace("\"mode\": \"step\"", "\"mode\": \"period\""),
+    ] {
+        assert!(TraceRecord::parse(&bad).is_err());
+    }
+    // short trace: replaying past the end is a typed error
+    let mut sim = ClusterSim::from_trace(&good).unwrap();
+    sim.replay_all().unwrap();
+    let mut out = StepOutcome::default();
+    let err = sim.replay_into(&mut out);
+    assert!(err.is_err(), "exhausted replay must be Err");
+    assert!(
+        format!("{}", err.unwrap_err()).contains("exhausted"),
+        "error names the failure"
+    );
+}
+
+#[test]
+fn fit_on_golden_traces_emits_parseable_specs_near_the_grid_optimum() {
+    // acceptance: `trace fit` on the golden traces produces a parseable
+    // policy spec whose predicted speedup is within tolerance of an
+    // independently enumerated denser grid optimum, and the fitted
+    // per-phase budgets lump bitwise to the fitted step deadline.
+    for name in FIXTURES {
+        let trace = TraceRecord::load(&fixture_path(name)).unwrap();
+        let fit = fit_budgets(&trace, 16, 32)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let parsed = DropPolicy::parse(&fit.best.spec)
+            .unwrap_or_else(|e| panic!("{name}: spec `{}`: {e}", fit.best.spec));
+        assert_eq!(parsed, fit.best.policy, "{name}");
+        // the tree fixture was recorded under tau=1.2 — the fit must
+        // flag its censored baseline; the others are uncensored
+        assert_eq!(fit.censored, name == "tree.trace.json", "{name}");
+        if let Some(deadline) = fit.step_deadline {
+            let lump = *cumulative_offsets(&fit.phase_budgets)
+                .last()
+                .unwrap_or_else(|| panic!("{name}: budgets"));
+            assert_eq!(
+                lump.to_bits(),
+                deadline.to_bits(),
+                "{name}: lumped fitted budgets == step-level deadline"
+            );
+        }
+        // denser independent grid: finer taus, every deadline boundary
+        let dense = fit_budgets(&trace, 32, 4096).unwrap();
+        assert!(
+            fit.best.speedup >= 0.95 * dense.step_level.speedup,
+            "{name}: fit {} vs dense optimum {}",
+            fit.best.speedup,
+            dense.step_level.speedup
+        );
+    }
+}
+
+#[test]
+fn replay_equals_live_run_under_every_policy_through_the_sweep_axis() {
+    // the sweep's replay axis re-times one recording under many
+    // policies; the no-drop policy row must equal the recorded run, and
+    // a tightened policy must never complete more work than recorded
+    let cfg = ClusterConfig {
+        workers: 5,
+        accumulations: 3,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        noise: NoiseKind::Exponential { mean: 0.5 },
+        stragglers: StragglerKind::Uniform { p: 0.35, delay: 3.0 },
+        topology: Some(TopologyKind::Tree),
+        link_latency: 1e-3,
+        link_bandwidth: 1e9,
+        grad_bytes: 4e6,
+        ..Default::default()
+    };
+    let mut sim = ClusterSim::new(&cfg, 0xABCD);
+    sim.start_recording();
+    for _ in 0..10 {
+        sim.step(None);
+    }
+    let trace = sim.finish_recording().unwrap();
+    let recorded_mean = trace.outcomes.iter().map(|o| o.iter_time).sum::<f64>()
+        / trace.len() as f64;
+    let policies = [
+        DropPolicy::None,
+        DropPolicy::comm_deadline(1.0),
+        DropPolicy::parse("tau=2+phase-deadline=1/0.2").unwrap(),
+    ];
+    let r = dropcompute::sweep::SweepSpec::new(cfg)
+        .policies(&policies)
+        .seeds(&[0])
+        .iters(10)
+        .replay(trace.clone())
+        .jobs(1)
+        .run();
+    assert_eq!(r.points.len(), 3);
+    assert_eq!(
+        r.points[0].mean_iter_time.to_bits(),
+        recorded_mean.to_bits(),
+        "the no-drop replay row is the recorded run"
+    );
+    assert_eq!(r.points[0].drop_rate, 0.0);
+    for p in &r.points[1..] {
+        assert!(p.drop_rate >= 0.0 && p.drop_rate < 1.0);
+    }
+    // direct evaluator agreement
+    let (want, _) = evaluate_policy(&trace, &policies[1]).unwrap();
+    assert_eq!(r.points[1].mean_iter_time.to_bits(), want.to_bits());
+}
+
+/// Regenerate the golden fixtures from the *current* code: parse each
+/// fixture, replay it, and write a copy with freshly-computed outcomes
+/// to `$TRACE_REGEN_DIR` — CI runs this (ignored) test when the suite
+/// fails and uploads the result, so a legitimate semantic change ships
+/// as a reviewable fixture diff instead of archaeology.
+#[test]
+#[ignore]
+fn regen_golden_traces() {
+    let Some(dir) = std::env::var_os("TRACE_REGEN_DIR") else {
+        eprintln!("TRACE_REGEN_DIR not set; nothing to do");
+        return;
+    };
+    let dir = PathBuf::from(dir);
+    std::fs::create_dir_all(&dir).expect("create regen dir");
+    for name in FIXTURES {
+        let mut trace = TraceRecord::load(&fixture_path(name)).unwrap();
+        let mut sim = ClusterSim::from_trace(&trace).unwrap();
+        let outs = sim.replay_all().unwrap();
+        trace.outcomes = outs
+            .iter()
+            .map(dropcompute::sim::TraceOutcome::from_outcome)
+            .collect();
+        trace.save(&dir.join(name)).unwrap();
+        eprintln!("regenerated {}", dir.join(name).display());
+    }
+}
