@@ -2,8 +2,9 @@
 //! ring AllReduce bandwidth, event-queue throughput, simulator step
 //! rate (compiled vs event-queue schedule timing), DropComm drop-path
 //! step rate (cached survivor schedules vs per-drop rebuild), policy
-//! dispatch (unified DropPolicy surface vs direct legacy calls), trace
-//! replay rate (recorded trace through the compiled pass vs the
+//! dispatch (unified DropPolicy surface vs direct legacy calls),
+//! observer overhead (NoopObserver step path vs a live ObsRecorder),
+//! trace replay rate (recorded trace through the compiled pass vs the
 //! event-queue oracle, conformance-gated), batched noise sampling (enum
 //! vs boxed dispatch), parallel sweep scaling, Algorithm-2 sweep cost,
 //! PJRT grad-step + upload overhead.
@@ -377,6 +378,75 @@ fn main() {
         }
     }
 
+    // ---- observer overhead: NoopObserver vs live ObsRecorder ---------
+    // The observability PR's acceptance pair. before = observer
+    // disabled (the public step_into, which monomorphizes through
+    // NoopObserver — the hooks must compile to nothing, so this arm is
+    // the one tracked against pre-obs step rates in BENCH_perf.json);
+    // after = a live ObsRecorder attached (histograms + attribution
+    // fed every step). The recorder is allocation-free after warmup,
+    // so the on-arm should stay within a few percent of off.
+    {
+        use dropcompute::obs::{NoopObserver, ObsRecorder};
+        let mut cfg = paper_cluster(64);
+        cfg.topology = Some(TopologyKind::Torus { rows: 0 });
+        cfg.link_latency = 25e-6;
+        cfg.link_bandwidth = 12.5e9;
+        cfg.grad_bytes = 4.0 * 335e6;
+        cfg.stragglers = StragglerKind::Uniform { p: 0.2, delay: 6.0 };
+        cfg.comm_drop_deadline = 2.0;
+
+        // sanity: attaching an observer must not perturb the outcome
+        let mut a = ClusterSim::new(&cfg, 17);
+        let mut b = ClusterSim::new(&cfg, 17);
+        let mut out_a = StepOutcome::default();
+        let mut out_b = StepOutcome::default();
+        let mut rec = ObsRecorder::new(64);
+        for i in 0..5 {
+            a.step_into(Some(9.0), &mut out_a);
+            b.step_observed(Some(9.0), &mut out_b, &mut rec);
+            assert_eq!(
+                out_a.iter_time.to_bits(),
+                out_b.iter_time.to_bits(),
+                "observer must not perturb the step (iter {i})"
+            );
+            assert_eq!(out_a.completed, out_b.completed, "iter {i}");
+        }
+
+        let reps = if smoke { 15 } else { 60 };
+        let mut off = ClusterSim::new(&cfg, 17);
+        let mut out = StepOutcome::default();
+        let mut noop = NoopObserver;
+        let t_off = bench(reps, || {
+            off.step_observed(Some(9.0), &mut out, &mut noop);
+            out.iter_time
+        });
+        let mut on = ClusterSim::new(&cfg, 17);
+        let mut rec = ObsRecorder::new(64);
+        let t_on = bench(reps, || {
+            on.step_observed(Some(9.0), &mut out, &mut rec);
+            out.iter_time
+        });
+        perf.record_ba(
+            "obs_overhead",
+            "steps/s (observer off -> on, torus n64)",
+            1.0 / t_off,
+            1.0 / t_on,
+        );
+        let overhead = t_on / t_off;
+        if overhead > 1.25 {
+            let msg = format!(
+                "obs_overhead: live recorder x{overhead:.2} slower than \
+                 the noop path"
+            );
+            if smoke {
+                println!("WARNING (smoke): {msg}");
+            } else {
+                panic!("{msg}");
+            }
+        }
+    }
+
     // ---- trace replay rate: recorded trace through both timing paths -
     // The trace subsystem's hot path: replaying a recorded run (the
     // budget-fit evaluator's inner loop) must run at simulator speed.
@@ -596,6 +666,7 @@ fn main() {
         "sim_step_rate_torus_n64",
         "dropcomm_step_rate",
         "policy_dispatch_rate",
+        "obs_overhead",
         "trace_replay_rate",
         "noise_fill_rate",
         "sweep_points_per_sec",

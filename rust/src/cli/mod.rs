@@ -21,6 +21,7 @@ pub struct Args {
 pub struct Spec {
     value_keys: Vec<&'static str>,
     subcommands: Vec<&'static str>,
+    shorts: Vec<(char, &'static str)>,
 }
 
 impl Spec {
@@ -36,6 +37,26 @@ impl Spec {
     pub fn subcommands(mut self, subs: &[&'static str]) -> Self {
         self.subcommands.extend_from_slice(subs);
         self
+    }
+
+    /// Register a single-dash alias: `-c` expands to `--long` before
+    /// parsing. Unregistered single-dash arguments stay positional, so
+    /// existing invocations (e.g. negative-number positionals) keep
+    /// working.
+    pub fn short(mut self, c: char, long: &'static str) -> Self {
+        self.shorts.push((c, long));
+        self
+    }
+
+    /// If `arg` is a registered short alias (`-x`), return its long
+    /// flag name.
+    fn expand_short(&self, arg: &str) -> Option<&'static str> {
+        let mut chars = arg.strip_prefix('-')?.chars();
+        let c = chars.next()?;
+        if chars.next().is_some() || arg.starts_with("--") {
+            return None;
+        }
+        self.shorts.iter().find(|(s, _)| *s == c).map(|(_, l)| *l)
     }
 
     /// Parse argv (without the program name).
@@ -55,6 +76,10 @@ impl Spec {
         }
 
         while let Some(arg) = it.next() {
+            let arg = match self.expand_short(&arg) {
+                Some(long) => format!("--{long}"),
+                None => arg,
+            };
             if let Some(body) = arg.strip_prefix("--") {
                 let (key, inline) = match body.split_once('=') {
                     Some((k, v)) => (k.to_string(), Some(v.to_string())),
@@ -150,6 +175,9 @@ mod tests {
         Spec::new()
             .subcommands(&["train", "simulate"])
             .value_keys(&["config", "set", "workers", "out"])
+            .short('v', "verbose")
+            .short('q', "quiet")
+            .short('c', "config")
     }
 
     #[test]
@@ -182,6 +210,21 @@ mod tests {
         let a = spec().parse(["--workers", "abc"]).unwrap();
         assert!(a.usize_or("workers", 0).is_err());
         assert_eq!(a.f64_or("missing", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn short_flags_expand_to_long() {
+        let a = spec().parse(["train", "-v", "-c", "c.toml"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("config"), Some("c.toml"));
+    }
+
+    #[test]
+    fn unregistered_single_dash_stays_positional() {
+        let a = spec().parse(["train", "-x", "-1.5", "-vv"]).unwrap();
+        assert_eq!(a.positional, vec!["-x", "-1.5", "-vv"]);
+        assert!(!a.flag("verbose"));
     }
 
     #[test]

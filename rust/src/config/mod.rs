@@ -331,6 +331,24 @@ impl Default for SweepConfig {
     }
 }
 
+/// `[obs]` — the opt-in observability layer ([`crate::obs`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsConfig {
+    /// Attach an [`crate::obs::ObsRecorder`] to sim/sweep/replay runs
+    /// even without an output path (summary table to stdout).
+    pub enabled: bool,
+    /// Export base path: writes `<out>.prom` (Prometheus text) and
+    /// `<out>.json` (snapshot). Empty = no files. Implies `enabled`.
+    pub out: String,
+}
+
+impl ObsConfig {
+    /// Whether any recording is requested.
+    pub fn active(&self) -> bool {
+        self.enabled || !self.out.is_empty()
+    }
+}
+
 /// Top-level run configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -340,6 +358,7 @@ pub struct Config {
     pub data: DataConfig,
     pub sweep: SweepConfig,
     pub trace: TraceConfig,
+    pub obs: ObsConfig,
     /// Explicit run-level drop policy (`[policy] spec = "..."`). `None`
     /// falls back to the legacy `[comm] drop_deadline` surface — see
     /// [`Config::effective_policy`].
@@ -357,6 +376,7 @@ impl Default for Config {
             data: DataConfig::default(),
             sweep: SweepConfig::default(),
             trace: TraceConfig::default(),
+            obs: ObsConfig::default(),
             policy: None,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -534,6 +554,10 @@ impl Config {
         c.data.doclen_mu = doc.float_or("data.doclen_mu", 4.0);
         c.data.doclen_sigma = doc.float_or("data.doclen_sigma", 1.0);
         c.data.seed = doc.int_or("data.seed", 1234) as u64;
+
+        // [obs] — opt-in observability layer (crate::obs)
+        c.obs.enabled = doc.bool_or("obs.enabled", false);
+        c.obs.out = doc.str_or("obs.out", "");
 
         c.validate()?;
         Ok(c)

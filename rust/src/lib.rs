@@ -13,7 +13,10 @@
 //! all-reduce), the unified drop-decision surface
 //! ([`policy::DropPolicy`]: compute-tau, step-level and per-phase
 //! DropComm deadlines, Local-SGD periods, composed), and the
-//! deterministic parallel scenario-sweep engine ([`sweep`]).
+//! deterministic parallel scenario-sweep engine ([`sweep`]), and the
+//! opt-in zero-overhead observability layer ([`obs`]: step probes,
+//! mergeable tail histograms, straggler attribution, Prometheus/JSON
+//! export).
 //!
 //! Layers 2/1 (build-time python): JAX transformer fwd/bwd calling
 //! Pallas kernels, AOT-lowered to HLO text loaded by [`runtime`].
@@ -25,6 +28,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;
+pub mod obs;
 pub mod policy;
 pub mod report;
 pub mod rng;

@@ -18,6 +18,7 @@ use std::process::ExitCode;
 use dropcompute::analysis::{self, Setting};
 use dropcompute::cli::{Args, Spec};
 use dropcompute::config::Config;
+use dropcompute::obs::ObsRecorder;
 use dropcompute::coordinator::ScaleRun;
 use dropcompute::policy::DropPolicy;
 use dropcompute::report::{f, pct, Table};
@@ -53,6 +54,8 @@ SUBCOMMANDS:
                     per-phase) maximizing predicted speedup over the
                     trace; emits a ready-to-use --policy spec
   analyze     closed-form E[T], E[M~], S_eff      [--tau T]
+  obs         observability utilities:
+                obs lint <file.prom>   check Prometheus exposition format
 
 Drop policies (simulate/sweep; the one drop-decision surface):
   --policy SPEC
@@ -80,19 +83,28 @@ scale/sweep fan grid points over a thread pool: --jobs J (0 = all
 cores, 1 = serial; output is bitwise identical either way). Grid axes
 default to the `[sweep]` config section.
 
+Observability (simulate/sweep/trace replay): --obs-out BASE attaches
+the zero-overhead step recorder and writes BASE.prom (Prometheus text)
++ BASE.json (snapshot: tail histograms, per-worker straggler table,
+drop causes). The `[obs]` config section (`enabled`, `out`) does the
+same from a file; `-v`/`--verbose` and `-q`/`--quiet` set the log
+level.
+
 Config keys: see configs/*.toml and DESIGN.md.";
 
 fn main() -> ExitCode {
     let spec = Spec::new()
         .subcommands(&[
             "train", "local-sgd", "simulate", "tune", "scale", "sweep",
-            "trace", "analyze",
+            "trace", "analyze", "obs",
         ])
         .value_keys(&[
             "config", "set", "out", "iters", "tau", "periods", "workers",
             "grid", "topology", "comm-drop-deadline", "jobs", "thresholds",
-            "deadlines", "seeds", "policy", "trace",
-        ]);
+            "deadlines", "seeds", "policy", "trace", "obs-out",
+        ])
+        .short('v', "verbose")
+        .short('q', "quiet");
     let args = match spec.parse(std::env::args().skip(1)) {
         Ok(a) => a,
         Err(e) => {
@@ -104,9 +116,10 @@ fn main() -> ExitCode {
         println!("{USAGE}");
         return ExitCode::SUCCESS;
     }
-    if args.flag("quiet") {
-        dropcompute::util::set_verbosity(0);
-    }
+    dropcompute::obs::log::set_from_flags(
+        args.flag("quiet"),
+        args.flag("verbose"),
+    );
     match run(&args) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
@@ -127,6 +140,7 @@ fn run(args: &Args) -> Result<()> {
         "sweep" => cmd_sweep(args, &cfg),
         "trace" => cmd_trace(args, &cfg),
         "analyze" => cmd_analyze(args, &cfg),
+        "obs" => cmd_obs(args),
         other => {
             eprintln!("unknown subcommand `{other}`\n{USAGE}");
             Ok(())
@@ -180,6 +194,130 @@ fn cmd_local_sgd(args: &Args, cfg: &Config) -> Result<()> {
     t.row(vec!["virtual time (s)".into(), f(log.total_virtual_time(), 1)]);
     t.print();
     Ok(())
+}
+
+/// Whether this invocation should attach an [`ObsRecorder`]: either
+/// `--obs-out` on the command line or the `[obs]` config section.
+fn obs_active(args: &Args, cfg: &Config) -> bool {
+    args.get("obs-out").is_some() || cfg.obs.active()
+}
+
+/// File base for observability exports (`BASE.prom` / `BASE.json`):
+/// `--obs-out` beats `[obs] out`; `[obs] enabled = true` with no `out`
+/// records and prints the summary without writing files.
+fn obs_base(args: &Args, cfg: &Config) -> Option<PathBuf> {
+    if let Some(p) = args.get("obs-out") {
+        return Some(PathBuf::from(p));
+    }
+    if !cfg.obs.out.is_empty() {
+        return Some(PathBuf::from(&cfg.obs.out));
+    }
+    None
+}
+
+/// Write `BASE.prom` (Prometheus text exposition) and `BASE.json`
+/// (snapshot), creating parent directories as needed.
+fn write_obs_outputs(rec: &ObsRecorder, base: &std::path::Path) -> Result<()> {
+    if let Some(dir) = base.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let prom = base.with_extension("prom");
+    let json = base.with_extension("json");
+    std::fs::write(&prom, dropcompute::obs::to_prometheus(rec))?;
+    std::fs::write(&json, dropcompute::obs::to_json_snapshot(rec))?;
+    println!("wrote {} and {}", prom.display(), json.display());
+    Ok(())
+}
+
+/// Terminal summary of a recorder: step/drop totals, tail latency, and
+/// the worst straggler by times-was-max.
+fn print_obs_summary(rec: &ObsRecorder) {
+    let mut t = Table::new("observability", &["metric", "value"]);
+    t.row(vec!["steps".into(), rec.steps.to_string()]);
+    t.row(vec![
+        "microbatches".into(),
+        format!(
+            "{}/{} completed",
+            rec.completed_microbatches, rec.scheduled_microbatches
+        ),
+    ]);
+    t.row(vec![
+        "drops (tau/ddl/phase/restart)".into(),
+        format!(
+            "{}/{}/{}/{}",
+            rec.drops.tau_events,
+            rec.drops.step_deadline,
+            rec.drops.phase_checkpoint,
+            rec.drops.survivor_restart
+        ),
+    ]);
+    for (name, h) in [
+        ("iter time", &rec.iter_time),
+        ("compute time", &rec.compute_time),
+        ("arrival offset", &rec.arrival_offset),
+    ] {
+        if h.count() == 0 {
+            continue;
+        }
+        t.row(vec![
+            format!("{name} p50/p90/p99/p99.9"),
+            format!(
+                "{:.4}/{:.4}/{:.4}/{:.4}",
+                h.percentile(0.5),
+                h.percentile(0.9),
+                h.percentile(0.99),
+                h.percentile(0.999)
+            ),
+        ]);
+    }
+    if let Some((w, s)) = rec
+        .workers
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, s)| s.was_max)
+    {
+        t.row(vec![
+            "worst straggler".into(),
+            format!(
+                "worker {w}: was-max {} dropped {} triggered-ckpt {}",
+                s.was_max, s.dropped, s.triggered_checkpoint
+            ),
+        ]);
+    }
+    t.print();
+}
+
+/// `obs` subcommand: utilities over exported observability files.
+fn cmd_obs(args: &Args) -> Result<()> {
+    let action = args.positional.first().map(String::as_str).unwrap_or("");
+    match action {
+        "lint" => {
+            let path = args.positional.get(1).ok_or_else(|| {
+                dropcompute::util::Error::Cli(
+                    "obs lint: expects a .prom file path".into(),
+                )
+            })?;
+            let text = std::fs::read_to_string(path)?;
+            let issues = dropcompute::obs::lint_prometheus(&text);
+            if issues.is_empty() {
+                println!("{path}: OK ({} lines)", text.lines().count());
+                Ok(())
+            } else {
+                for i in &issues {
+                    eprintln!("{path}: {i}");
+                }
+                Err(dropcompute::util::Error::Runtime(format!(
+                    "obs lint: {} issue(s) in {path}",
+                    issues.len()
+                )))
+            }
+        }
+        other => Err(dropcompute::util::Error::Cli(format!(
+            "unknown obs action `{other}` (want lint <file.prom>)"
+        ))),
+    }
 }
 
 /// Apply `--topology` / `--comm-drop-deadline` overrides to a cluster
@@ -237,8 +375,13 @@ fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
     let mut out = dropcompute::sim::StepOutcome::default();
     let mut iter_w = dropcompute::stats::Welford::new();
     let mut completed = 0usize;
+    let mut obs = obs_active(args, cfg)
+        .then(|| ObsRecorder::new(cluster.workers));
     for _ in 0..iters {
-        sim.step_installed_into(&mut out);
+        match obs.as_mut() {
+            Some(rec) => sim.step_installed_observed(&mut out, rec),
+            None => sim.step_installed_into(&mut out),
+        }
         iter_w.push(out.iter_time);
         completed += out.total_completed();
     }
@@ -271,6 +414,12 @@ fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
         f(completed as f64 / (iter_w.mean() * iters as f64), 2),
     ]);
     t.print();
+    if let Some(rec) = &obs {
+        print_obs_summary(rec);
+        if let Some(base) = obs_base(args, cfg) {
+            write_obs_outputs(rec, &base)?;
+        }
+    }
     Ok(())
 }
 
@@ -441,7 +590,12 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         );
     }
     let t0 = std::time::Instant::now();
-    let result = spec.run();
+    let (result, sweep_obs) = if obs_active(args, cfg) {
+        let (r, o) = spec.run_observed();
+        (r, Some(o))
+    } else {
+        (spec.run(), None)
+    };
     let secs = t0.elapsed().as_secs_f64();
     let policy_axis = !policies.is_empty();
     let mut t = if policy_axis {
@@ -495,6 +649,23 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         let path = dir.join("sweep.json");
         std::fs::write(&path, result.to_json())?;
         println!("wrote {}", path.display());
+    }
+    if let Some(o) = &sweep_obs {
+        print_obs_summary(&o.merged);
+        if let Some(base) = obs_base(args, cfg) {
+            write_obs_outputs(&o.merged, &base)?;
+            // per-point snapshots, one JSON object per grid point in
+            // enumeration order
+            let pts = o
+                .per_point
+                .iter()
+                .map(dropcompute::obs::to_json_snapshot)
+                .collect::<Vec<_>>()
+                .join(",\n");
+            let path = base.with_extension("points.json");
+            std::fs::write(&path, format!("[\n{pts}\n]\n"))?;
+            println!("wrote {}", path.display());
+        }
     }
     Ok(())
 }
@@ -564,8 +735,13 @@ fn cmd_trace(args: &Args, cfg: &Config) -> Result<()> {
             let mut t_sum = 0.0;
             let mut completed = 0usize;
             let mut conform = 0usize;
+            let mut obs = obs_active(args, cfg)
+                .then(|| ObsRecorder::new(trace.meta.workers));
             for i in 0..trace.len() {
-                sim.replay_into(&mut out)?;
+                match obs.as_mut() {
+                    Some(rec) => sim.replay_observed(&mut out, rec)?,
+                    None => sim.replay_into(&mut out)?,
+                }
                 t_sum += out.iter_time;
                 completed += out.total_completed();
                 if override_policy.is_none()
@@ -608,6 +784,12 @@ fn cmd_trace(args: &Args, cfg: &Config) -> Result<()> {
                 ]);
             }
             t.print();
+            if let Some(rec) = &obs {
+                print_obs_summary(rec);
+                if let Some(base) = obs_base(args, cfg) {
+                    write_obs_outputs(rec, &base)?;
+                }
+            }
             if override_policy.is_none()
                 && !trace.outcomes.is_empty()
                 && conform != trace.len()

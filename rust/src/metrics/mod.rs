@@ -141,12 +141,21 @@ impl RunLog {
         let col = |f: &dyn Fn(&StepRecord) -> String| -> String {
             self.steps.iter().map(|s| f(s)).collect::<Vec<_>>().join(",")
         };
+        // Every CSV column rides along (wall_time, completed/scheduled,
+        // lr, grad_norm used to be silently dropped here).
         out.push_str(&format!(
-            "\"step\":[{}],\"virtual_time\":[{}],\"iter_time\":[{}],\"loss\":[{}],\"drop_rate\":[{}]",
+            "\"step\":[{}],\"virtual_time\":[{}],\"wall_time\":[{}],\
+             \"iter_time\":[{}],\"completed\":[{}],\"scheduled\":[{}],\
+             \"loss\":[{}],\"lr\":[{}],\"grad_norm\":[{}],\"drop_rate\":[{}]",
             col(&|s| s.step.to_string()),
             col(&|s| fmt_f64(s.virtual_time)),
+            col(&|s| fmt_f64(s.wall_time)),
             col(&|s| fmt_f64(s.iter_time)),
+            col(&|s| s.completed_microbatches.to_string()),
+            col(&|s| s.scheduled_microbatches.to_string()),
             col(&|s| fmt_f64(s.loss)),
+            col(&|s| fmt_f64(s.lr)),
+            col(&|s| fmt_f64(s.grad_norm)),
             col(&|s| fmt_f64(s.drop_rate())),
         ));
         out.push('}');
@@ -170,8 +179,24 @@ fn fmt_f64(v: f64) -> String {
     }
 }
 
+/// JSON string escaping: backslash, quote, and control characters
+/// (a label with an embedded newline/tab used to produce invalid JSON).
 fn escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -222,6 +247,32 @@ mod tests {
         assert!(j.contains("\"label\":\"test\""));
         assert!(j.contains("\"speedup\":1.25"));
         assert!(j.contains("\"loss\":[5,4.5,4,3.5,3]"));
+        // The once-dropped CSV columns are present with full length.
+        assert!(j.contains("\"wall_time\":[0,0,0,0,0]"));
+        assert!(j.contains("\"completed\":[9,9,9,9,9]"));
+        assert!(j.contains("\"scheduled\":[10,10,10,10,10]"));
+        assert!(j.contains("\"lr\":[0,0,0,0,0]"));
+        assert!(j.contains("\"grad_norm\":[0,0,0,0,0]"));
+        // Parses with the in-tree JSON parser.
+        let parsed = crate::runtime::json::Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.path(&["completed"]).unwrap().as_arr().unwrap().len(),
+            5
+        );
+    }
+
+    #[test]
+    fn json_escapes_control_chars_in_labels() {
+        let mut log = RunLog::new("line1\nline2\ttab\u{1}");
+        log.push(StepRecord::default());
+        let j = log.to_json();
+        assert!(j.contains("line1\\nline2\\ttab\\u0001"));
+        // Still valid JSON, and the label round-trips.
+        let parsed = crate::runtime::json::Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.path(&["label"]).unwrap().as_str(),
+            Some("line1\nline2\ttab\u{1}")
+        );
     }
 
     #[test]

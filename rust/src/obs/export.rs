@@ -1,0 +1,693 @@
+//! Exporters for [`ObsRecorder`]: Prometheus text exposition format
+//! and a JSON snapshot — plus an in-tree exposition-format linter the
+//! CI smoke job runs against our own output.
+//!
+//! Metric families (all prefixed `dropcompute_`):
+//!
+//! * `dropcompute_steps_total` — counter, steps observed;
+//! * `dropcompute_drops_total{cause=...}` — counter per typed cause
+//!   (`tau` counts events; `tau_microbatches` /
+//!   `comm_lost_microbatches` count micro-batches);
+//! * `dropcompute_{iter_time,compute_time,arrival_offset}_seconds` —
+//!   histograms (sparse cumulative buckets + `+Inf`, `_sum`, `_count`)
+//!   with companion `*_quantile_seconds{q=...}` gauges for
+//!   p50/p90/p99/p99.9;
+//! * `dropcompute_phase_time_seconds{phase=...,stat=...}` — gauge,
+//!   per-collective-phase mean/max completion time;
+//! * `dropcompute_worker_*_total{worker=...}` — the per-worker
+//!   straggler-attribution table.
+
+use std::fmt::Write as _;
+
+use super::hist::{bucket_hi, LogHistogram};
+use super::recorder::ObsRecorder;
+
+const QUANTILES: [(f64, &str); 4] =
+    [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99"), (0.999, "0.999")];
+
+/// Format an f64 the exposition format accepts (finite shortest-ish
+/// decimal, or +Inf/-Inf/NaN).
+fn prom_num(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == f64::INFINITY {
+        "+Inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn prom_histogram(out: &mut String, name: &str, help: &str, h: &LogHistogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, c) in h.nonzero_buckets() {
+        cum += c;
+        let le = bucket_hi(i);
+        if le.is_finite() {
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{le=\"{}\"}} {cum}",
+                prom_num(le)
+            );
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum {}", prom_num(h.sum()));
+    let _ = writeln!(out, "{name}_count {}", h.count());
+    // Companion quantile gauges (skipped when empty: no NaN samples).
+    if h.count() > 0 {
+        let qname = name
+            .strip_suffix("_seconds")
+            .map(|base| format!("{base}_quantile_seconds"))
+            .unwrap_or_else(|| format!("{name}_quantile"));
+        let _ = writeln!(out, "# TYPE {qname} gauge");
+        for (q, label) in QUANTILES {
+            let _ = writeln!(
+                out,
+                "{qname}{{q=\"{label}\"}} {}",
+                prom_num(h.percentile(q))
+            );
+        }
+    }
+}
+
+/// Render the recorder as Prometheus text exposition format.
+pub fn to_prometheus(rec: &ObsRecorder) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# HELP dropcompute_steps_total Steps observed.");
+    let _ = writeln!(out, "# TYPE dropcompute_steps_total counter");
+    let _ = writeln!(out, "dropcompute_steps_total {}", rec.steps);
+
+    let _ = writeln!(
+        out,
+        "# HELP dropcompute_drops_total Drop events/micro-batches by cause."
+    );
+    let _ = writeln!(out, "# TYPE dropcompute_drops_total counter");
+    for (cause, v) in [
+        ("tau", rec.drops.tau_events),
+        ("tau_microbatches", rec.drops.tau_microbatches),
+        ("step_deadline", rec.drops.step_deadline),
+        ("phase_checkpoint", rec.drops.phase_checkpoint),
+        ("survivor_restart", rec.drops.survivor_restart),
+        ("comm_lost_microbatches", rec.drops.comm_lost_microbatches),
+    ] {
+        let _ =
+            writeln!(out, "dropcompute_drops_total{{cause=\"{cause}\"}} {v}");
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP dropcompute_microbatches_total Scheduled vs completed micro-batches."
+    );
+    let _ = writeln!(out, "# TYPE dropcompute_microbatches_total counter");
+    let _ = writeln!(
+        out,
+        "dropcompute_microbatches_total{{kind=\"scheduled\"}} {}",
+        rec.scheduled_microbatches
+    );
+    let _ = writeln!(
+        out,
+        "dropcompute_microbatches_total{{kind=\"completed\"}} {}",
+        rec.completed_microbatches
+    );
+
+    prom_histogram(
+        &mut out,
+        "dropcompute_iter_time_seconds",
+        "Full iteration time (compute + collective).",
+        &rec.iter_time,
+    );
+    prom_histogram(
+        &mut out,
+        "dropcompute_compute_time_seconds",
+        "Per-worker compute draw.",
+        &rec.compute_time,
+    );
+    prom_histogram(
+        &mut out,
+        "dropcompute_arrival_offset_seconds",
+        "Per-worker arrival offset behind the step's fastest worker.",
+        &rec.arrival_offset,
+    );
+
+    if !rec.phases.is_empty() {
+        let _ = writeln!(
+            out,
+            "# HELP dropcompute_phase_time_seconds Per-phase collective completion time."
+        );
+        let _ = writeln!(out, "# TYPE dropcompute_phase_time_seconds gauge");
+        for (p, s) in rec.phases.iter().enumerate() {
+            if s.count == 0 {
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "dropcompute_phase_time_seconds{{phase=\"{p}\",stat=\"mean\"}} {}",
+                prom_num(s.mean())
+            );
+            let _ = writeln!(
+                out,
+                "dropcompute_phase_time_seconds{{phase=\"{p}\",stat=\"max\"}} {}",
+                prom_num(s.max)
+            );
+        }
+    }
+
+    for (name, help, get) in [
+        (
+            "dropcompute_worker_steps_total",
+            "Steps the worker participated in.",
+            0usize,
+        ),
+        (
+            "dropcompute_worker_was_max_total",
+            "Steps the worker had the maximum compute draw.",
+            1,
+        ),
+        (
+            "dropcompute_worker_dropped_total",
+            "Steps the worker was excluded from the collective.",
+            2,
+        ),
+        (
+            "dropcompute_worker_tau_microbatches_total",
+            "Micro-batches the worker trimmed to the compute threshold.",
+            3,
+        ),
+        (
+            "dropcompute_worker_triggered_checkpoint_total",
+            "Steps the worker was the latest arrival among the excluded.",
+            4,
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for (w, s) in rec.workers.iter().enumerate() {
+            let v = match get {
+                0 => s.steps,
+                1 => s.was_max,
+                2 => s.dropped,
+                3 => s.tau_microbatches,
+                _ => s.triggered_checkpoint,
+            };
+            let _ = writeln!(out, "{name}{{worker=\"{w}\"}} {v}");
+        }
+    }
+    out
+}
+
+/// JSON number or null for non-finite (NaN percentiles on empty
+/// histograms must stay valid JSON).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+fn json_hist(h: &LogHistogram) -> String {
+    let mut buckets = String::from("[");
+    for (k, (i, c)) in h.nonzero_buckets().enumerate() {
+        if k > 0 {
+            buckets.push(',');
+        }
+        let _ = write!(buckets, "[{i},{c}]");
+    }
+    buckets.push(']');
+    format!(
+        "{{\"count\":{},\"rejected\":{},\"sum\":{},\"min\":{},\"max\":{},\
+         \"mean\":{},\"p50\":{},\"p90\":{},\"p99\":{},\"p999\":{},\
+         \"buckets\":{buckets}}}",
+        h.count(),
+        h.rejected(),
+        json_num(h.sum()),
+        json_num(h.min()),
+        json_num(h.max()),
+        json_num(h.mean()),
+        json_num(h.percentile(0.5)),
+        json_num(h.percentile(0.9)),
+        json_num(h.percentile(0.99)),
+        json_num(h.percentile(0.999)),
+    )
+}
+
+/// Render the recorder as one JSON object (parseable by
+/// [`crate::runtime::json::Json`]; `buckets` are sparse
+/// `[index, count]` pairs over the fixed bin grid).
+pub fn to_json_snapshot(rec: &ObsRecorder) -> String {
+    let mut out = String::from("{");
+    let _ = write!(out, "\"steps\":{}", rec.steps);
+    let _ = write!(
+        out,
+        ",\"scheduled_microbatches\":{},\"completed_microbatches\":{}",
+        rec.scheduled_microbatches, rec.completed_microbatches
+    );
+    let _ = write!(
+        out,
+        ",\"drops\":{{\"tau_events\":{},\"tau_microbatches\":{},\
+         \"step_deadline\":{},\"phase_checkpoint\":{},\
+         \"survivor_restart\":{},\"comm_lost_microbatches\":{}}}",
+        rec.drops.tau_events,
+        rec.drops.tau_microbatches,
+        rec.drops.step_deadline,
+        rec.drops.phase_checkpoint,
+        rec.drops.survivor_restart,
+        rec.drops.comm_lost_microbatches,
+    );
+    let _ = write!(out, ",\"iter_time\":{}", json_hist(&rec.iter_time));
+    let _ = write!(out, ",\"compute_time\":{}", json_hist(&rec.compute_time));
+    let _ =
+        write!(out, ",\"arrival_offset\":{}", json_hist(&rec.arrival_offset));
+    out.push_str(",\"phases\":[");
+    for (p, s) in rec.phases.iter().enumerate() {
+        if p > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"count\":{},\"mean\":{},\"max\":{}}}",
+            s.count,
+            json_num(s.mean()),
+            json_num(if s.count == 0 { f64::NAN } else { s.max })
+        );
+    }
+    out.push_str("],\"workers\":[");
+    for (w, s) in rec.workers.iter().enumerate() {
+        if w > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"steps\":{},\"was_max\":{},\"dropped\":{},\
+             \"tau_microbatches\":{},\"triggered_checkpoint\":{}}}",
+            s.steps, s.was_max, s.dropped, s.tau_microbatches,
+            s.triggered_checkpoint
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+// ---------------------------------------------------------------------
+// Prometheus exposition-format linter
+// ---------------------------------------------------------------------
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_value(s: &str) -> Option<f64> {
+    match s {
+        "+Inf" | "Inf" => Some(f64::INFINITY),
+        "-Inf" => Some(f64::NEG_INFINITY),
+        "NaN" => Some(f64::NAN),
+        _ => s.parse().ok(),
+    }
+}
+
+/// One parsed sample line.
+struct Sample {
+    name: String,
+    labels: Vec<(String, String)>,
+    value: f64,
+    line: usize,
+}
+
+/// Split `name{labels} value` / `name value`; returns `None` with a
+/// pushed violation on malformed lines.
+fn parse_sample(
+    line: &str,
+    lineno: usize,
+    errs: &mut Vec<String>,
+) -> Option<Sample> {
+    let bad = |errs: &mut Vec<String>, why: &str| {
+        errs.push(format!("line {lineno}: {why}"));
+        None
+    };
+    let (head, rest) = match line.find('{') {
+        Some(b) => {
+            let close = match line.rfind('}') {
+                Some(c) if c > b => c,
+                _ => return bad(errs, "unclosed label braces"),
+            };
+            (&line[..b], Some((&line[b + 1..close], &line[close + 1..])))
+        }
+        None => (line, None),
+    };
+    let (name, labels, tail) = match rest {
+        Some((label_body, tail)) => {
+            let mut labels = Vec::new();
+            let mut s = label_body;
+            while !s.is_empty() {
+                let eq = match s.find('=') {
+                    Some(e) => e,
+                    None => return bad(errs, "label without '='"),
+                };
+                let key = s[..eq].trim();
+                if !valid_label_name(key) {
+                    return bad(errs, &format!("bad label name {key:?}"));
+                }
+                let after = &s[eq + 1..];
+                if !after.starts_with('"') {
+                    return bad(errs, "label value not quoted");
+                }
+                // Find the closing quote, honoring \" escapes.
+                let bytes = after.as_bytes();
+                let mut i = 1;
+                let mut val = String::new();
+                let mut closed = false;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'\\' => {
+                            match bytes.get(i + 1) {
+                                Some(b'\\') => val.push('\\'),
+                                Some(b'"') => val.push('"'),
+                                Some(b'n') => val.push('\n'),
+                                _ => {
+                                    return bad(
+                                        errs,
+                                        "bad escape in label value",
+                                    )
+                                }
+                            }
+                            i += 2;
+                        }
+                        b'"' => {
+                            closed = true;
+                            i += 1;
+                            break;
+                        }
+                        _ => {
+                            val.push(after[i..].chars().next().unwrap());
+                            i += after[i..].chars().next().unwrap().len_utf8();
+                        }
+                    }
+                }
+                if !closed {
+                    return bad(errs, "unterminated label value");
+                }
+                labels.push((key.to_string(), val));
+                s = after[i..].trim_start_matches(',').trim_start();
+            }
+            (head.trim(), labels, tail.trim())
+        }
+        None => {
+            let mut parts = line.splitn(2, char::is_whitespace);
+            let name = parts.next().unwrap_or("");
+            (name, Vec::new(), parts.next().unwrap_or("").trim())
+        }
+    };
+    if !valid_metric_name(name) {
+        return bad(errs, &format!("bad metric name {name:?}"));
+    }
+    // Value (+ optional timestamp, which we accept and ignore).
+    let mut tail_parts = tail.split_whitespace();
+    let value = match tail_parts.next().and_then(parse_value) {
+        Some(v) => v,
+        None => return bad(errs, "missing or unparsable sample value"),
+    };
+    if let Some(ts) = tail_parts.next() {
+        if ts.parse::<i64>().is_err() {
+            return bad(errs, "bad timestamp");
+        }
+    }
+    if tail_parts.next().is_some() {
+        return bad(errs, "trailing garbage after value");
+    }
+    Some(Sample { name: name.to_string(), labels, value, line: lineno })
+}
+
+/// Family name for TYPE bookkeeping: strips histogram/summary suffixes.
+fn family_of(name: &str) -> &str {
+    for suf in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suf) {
+            return base;
+        }
+    }
+    name
+}
+
+/// Lint a Prometheus text exposition payload. Returns the list of
+/// violations (empty = clean). Checks: metric/label name syntax,
+/// sample value syntax, `# TYPE` declared at most once per family and
+/// before its samples, and for histogram families: `le` strictly
+/// increasing with non-decreasing cumulative counts, a `+Inf` bucket
+/// equal to `_count`, and `_sum` present.
+pub fn lint_prometheus(text: &str) -> Vec<String> {
+    let mut errs = Vec::new();
+    let mut types: std::collections::BTreeMap<String, String> =
+        std::collections::BTreeMap::new();
+    let mut seen_samples: std::collections::BTreeSet<String> =
+        std::collections::BTreeSet::new();
+    let mut samples: Vec<Sample> = Vec::new();
+
+    for (k, raw) in text.lines().enumerate() {
+        let lineno = k + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            let c = comment.trim_start();
+            if let Some(rest) = c.strip_prefix("TYPE ") {
+                let mut parts = rest.split_whitespace();
+                let name = parts.next().unwrap_or("");
+                let kind = parts.next().unwrap_or("");
+                if !valid_metric_name(name) {
+                    errs.push(format!(
+                        "line {lineno}: bad metric name in TYPE: {name:?}"
+                    ));
+                    continue;
+                }
+                if !matches!(
+                    kind,
+                    "counter" | "gauge" | "histogram" | "summary" | "untyped"
+                ) {
+                    errs.push(format!(
+                        "line {lineno}: unknown TYPE {kind:?} for {name}"
+                    ));
+                }
+                if types.contains_key(name) {
+                    errs.push(format!(
+                        "line {lineno}: duplicate TYPE for {name}"
+                    ));
+                }
+                if seen_samples.contains(name) {
+                    errs.push(format!(
+                        "line {lineno}: TYPE for {name} after its samples"
+                    ));
+                }
+                types.insert(name.to_string(), kind.to_string());
+            }
+            // HELP and plain comments: free text, nothing to check.
+            continue;
+        }
+        if let Some(s) = parse_sample(line, lineno, &mut errs) {
+            seen_samples.insert(family_of(&s.name).to_string());
+            samples.push(s);
+        }
+    }
+
+    // Histogram family checks.
+    for (family, kind) in &types {
+        if kind != "histogram" {
+            continue;
+        }
+        let bucket_name = format!("{family}_bucket");
+        let mut prev_le = f64::NEG_INFINITY;
+        let mut prev_cum = 0.0f64;
+        let mut inf_bucket: Option<f64> = None;
+        let mut count: Option<f64> = None;
+        let mut has_sum = false;
+        for s in &samples {
+            if s.name == bucket_name {
+                let le = match s
+                    .labels
+                    .iter()
+                    .find(|(k, _)| k == "le")
+                    .and_then(|(_, v)| parse_value(v))
+                {
+                    Some(v) => v,
+                    None => {
+                        errs.push(format!(
+                            "line {}: {bucket_name} without parsable le",
+                            s.line
+                        ));
+                        continue;
+                    }
+                };
+                if le <= prev_le {
+                    errs.push(format!(
+                        "line {}: {bucket_name} le not increasing",
+                        s.line
+                    ));
+                }
+                if s.value < prev_cum {
+                    errs.push(format!(
+                        "line {}: {bucket_name} cumulative count decreased",
+                        s.line
+                    ));
+                }
+                prev_le = le;
+                prev_cum = s.value;
+                if le == f64::INFINITY {
+                    inf_bucket = Some(s.value);
+                }
+            } else if s.name == format!("{family}_sum") {
+                has_sum = true;
+            } else if s.name == format!("{family}_count") {
+                count = Some(s.value);
+            }
+        }
+        match (inf_bucket, count) {
+            (None, _) => {
+                errs.push(format!("histogram {family}: missing +Inf bucket"))
+            }
+            (Some(b), Some(c)) if b != c => errs.push(format!(
+                "histogram {family}: +Inf bucket {b} != _count {c}"
+            )),
+            (Some(_), None) => {
+                errs.push(format!("histogram {family}: missing _count"))
+            }
+            _ => {}
+        }
+        if !has_sum {
+            errs.push(format!("histogram {family}: missing _sum"));
+        }
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{DropCause, SimObserver};
+    use crate::runtime::json::Json;
+    use crate::sim::StepOutcome;
+
+    fn sample_recorder() -> ObsRecorder {
+        let mut r = ObsRecorder::new(2);
+        r.on_worker(0, 0.5, 4);
+        r.on_worker(1, 1.5, 3);
+        r.on_drop(1, DropCause::Tau { microbatches: 1 });
+        r.on_phase(0, &[0.5, 1.5]);
+        r.on_step(&StepOutcome {
+            worker_compute: vec![0.5, 1.5],
+            completed: vec![4, 3],
+            compute_time: 1.5,
+            iter_time: 1.8,
+        });
+        r
+    }
+
+    #[test]
+    fn prometheus_output_passes_own_linter() {
+        let text = to_prometheus(&sample_recorder());
+        let errs = lint_prometheus(&text);
+        assert!(errs.is_empty(), "lint violations: {errs:?}");
+        assert!(text.contains("dropcompute_steps_total 1"));
+        assert!(text.contains("dropcompute_drops_total{cause=\"tau\"} 1"));
+        assert!(text.contains("dropcompute_iter_time_seconds_count 1"));
+        assert!(
+            text.contains("dropcompute_worker_was_max_total{worker=\"1\"} 1")
+        );
+    }
+
+    #[test]
+    fn empty_recorder_exports_cleanly() {
+        let r = ObsRecorder::new(0);
+        let errs = lint_prometheus(&to_prometheus(&r));
+        assert!(errs.is_empty(), "{errs:?}");
+        let j = Json::parse(&to_json_snapshot(&r)).unwrap();
+        assert_eq!(j.path(&["steps"]).unwrap().as_f64(), Some(0.0));
+        // Empty histogram percentiles serialize as null, not NaN.
+        assert!(matches!(
+            j.path(&["iter_time", "p50"]).unwrap(),
+            Json::Null
+        ));
+    }
+
+    #[test]
+    fn json_snapshot_round_trips() {
+        let r = sample_recorder();
+        let j = Json::parse(&to_json_snapshot(&r)).unwrap();
+        assert_eq!(j.path(&["steps"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            j.path(&["drops", "tau_microbatches"]).unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            j.path(&["iter_time", "count"]).unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            j.path(&["iter_time", "p50"]).unwrap().as_f64(),
+            Some(1.8)
+        );
+        let workers = j.path(&["workers"]).unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(
+            workers[1].get("tau_microbatches").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(j.path(&["phases"]).unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn linter_catches_deliberate_violations() {
+        // Bad metric name.
+        assert!(!lint_prometheus("9bad_name 1").is_empty());
+        // Unquoted label value.
+        assert!(!lint_prometheus("m{l=x} 1").is_empty());
+        // Unparsable value.
+        assert!(!lint_prometheus("m 1.2.3").is_empty());
+        // TYPE after samples.
+        assert!(!lint_prometheus("m 1\n# TYPE m counter").is_empty());
+        // Duplicate TYPE.
+        assert!(
+            !lint_prometheus("# TYPE m counter\n# TYPE m counter\nm 1")
+                .is_empty()
+        );
+        // Histogram: +Inf bucket disagrees with _count.
+        let h = "# TYPE h histogram\n\
+                 h_bucket{le=\"1\"} 1\n\
+                 h_bucket{le=\"+Inf\"} 2\n\
+                 h_sum 1.0\n\
+                 h_count 3\n";
+        assert!(!lint_prometheus(h).is_empty());
+        // Histogram: le not increasing.
+        let h2 = "# TYPE h histogram\n\
+                  h_bucket{le=\"2\"} 1\n\
+                  h_bucket{le=\"1\"} 2\n\
+                  h_bucket{le=\"+Inf\"} 2\n\
+                  h_sum 1.0\n\
+                  h_count 2\n";
+        assert!(!lint_prometheus(h2).is_empty());
+        // Histogram: missing _sum.
+        let h3 = "# TYPE h histogram\n\
+                  h_bucket{le=\"+Inf\"} 1\n\
+                  h_count 1\n";
+        assert!(!lint_prometheus(h3).is_empty());
+        // A clean payload stays clean.
+        let ok = "# TYPE m counter\nm{a=\"b\"} 1\n";
+        assert!(lint_prometheus(ok).is_empty());
+    }
+}

@@ -1,0 +1,373 @@
+//! Streaming log-bucketed histograms (HDR-style fixed bins).
+//!
+//! Bucket edges are a pure function of the f64 bit pattern — exponent
+//! plus the top [`SUB_BITS`] mantissa bits — so recording never calls
+//! `log()`/`powf()` and every machine places a given sample in the same
+//! bucket. Buckets form a geometric grid with 2^[`SUB_BITS`] = 8
+//! sub-buckets per octave (≤ 12.5% relative error per bucket), anchored
+//! at [`LO`] = 1e-6 s; values below `LO` share bucket 0 and values past
+//! the top land in the saturating last bucket.
+//!
+//! **Merge determinism.** [`LogHistogram::merge`] is an element-wise
+//! `u64` add plus one f64 `sum` add. Counts and percentiles are
+//! therefore order-independent outright; the f64 `sum` is bitwise
+//! reproducible as long as merges fold in a fixed order. The sweep
+//! runner guarantees that: each grid point records into its own
+//! histogram (pure per index) and [`crate::sweep::SweepSpec::run_observed`]
+//! folds the per-point recorders in index order, so the merged result
+//! is bitwise independent of `--jobs`.
+//!
+//! Percentiles are "exact" in the HDR sense: `percentile(q)` returns
+//! the upper edge of the bucket holding the rank-`ceil(q·n)` sample,
+//! clamped to the exact observed `[min, max]` — so p0/p100 are exact,
+//! single-sample histograms report the sample itself, and interior
+//! quantiles are within one bucket width (≤ 12.5%) of the true order
+//! statistic.
+
+/// Lower edge of the first log bucket (seconds). Everything in
+/// `[0, LO)` shares bucket 0.
+pub const LO: f64 = 1e-6;
+
+/// Mantissa bits per bucket index: 2^3 = 8 sub-buckets per octave.
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Total bucket count. Bucket 0 is `[0, LO)`; buckets `1..BUCKETS-1`
+/// tile `[LO, LO·2^63)` geometrically; the last bucket saturates to
+/// `+∞`. 512 buckets cover ~63 octaves above `LO` — 1 µs to ~290k
+/// years, far past any simulated time.
+pub const BUCKETS: usize = 512;
+
+/// Bucket index for a finite, non-negative value. Pure bit
+/// manipulation: scale by `1/LO`, then read the unbiased exponent and
+/// top [`SUB_BITS`] mantissa bits.
+#[inline]
+fn bucket_of(v: f64) -> usize {
+    let scaled = v / LO;
+    if scaled < 1.0 {
+        return 0;
+    }
+    let bits = scaled.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as u64 - 1023; // >= 0: scaled >= 1
+    let man = (bits >> (52 - SUB_BITS)) & (SUB - 1);
+    let idx = (exp * SUB + man + 1) as usize;
+    idx.min(BUCKETS - 1)
+}
+
+/// Upper edge (exclusive) of bucket `i`: bucket `i` covers
+/// `[bucket_hi(i-1), bucket_hi(i))`, with bucket 0 = `[0, LO)` and the
+/// last bucket open-ended.
+pub fn bucket_hi(i: usize) -> f64 {
+    if i == 0 {
+        return LO;
+    }
+    if i >= BUCKETS - 1 {
+        return f64::INFINITY;
+    }
+    let k = (i - 1) as u64;
+    let e = (k / SUB) as i32;
+    let m = (k % SUB) as f64;
+    // 2^e is exact in f64; (1 + (m+1)/8) has 3 fractional bits — the
+    // product rounds once, identically everywhere.
+    LO * 2f64.powi(e) * (1.0 + (m + 1.0) / SUB as f64)
+}
+
+/// Lower edge (inclusive) of bucket `i`.
+pub fn bucket_lo(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        bucket_hi(i - 1)
+    }
+}
+
+/// Streaming log-bucketed histogram over non-negative seconds.
+/// Fixed-size (one `[u64; BUCKETS]` worth of counts), allocation-free
+/// after construction, deterministically mergeable.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// Samples refused by [`record`](Self::record): NaN, ±∞, negative.
+    rejected: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            rejected: 0,
+        }
+    }
+
+    /// Record one sample. NaN, infinite, and negative values are
+    /// rejected (tallied in [`rejected`](Self::rejected), never mixed
+    /// into counts/sum/percentiles).
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            self.rejected += 1;
+            return;
+        }
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact observed minimum (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact observed maximum (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile readout. `q` is clamped to `[0, 1]`; returns NaN when
+    /// the histogram is empty. The rank-`ceil(q·n)` sample's bucket
+    /// upper edge, clamped to the observed `[min, max]`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        // The rank-1 order statistic is the exact observed minimum —
+        // reporting its bucket's upper edge would bias p0 upward.
+        if rank == 1 {
+            return self.min;
+        }
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_hi(i).clamp(self.min, self.max);
+            }
+        }
+        self.max // unreachable: cum == count >= rank at the last bucket
+    }
+
+    /// Element-wise merge. Counts are order-independent; the f64 `sum`
+    /// is bitwise reproducible when merges fold in a fixed order (see
+    /// module docs).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.rejected += other.rejected;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Occupied buckets as `(index, count)`, ascending — the sparse
+    /// form the exporters serialize.
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+    }
+
+    /// Raw count of bucket `i` (test/export helper).
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_half_open_and_monotone() {
+        // [0, LO) is bucket 0; LO itself starts bucket 1.
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(LO * 0.999), 0);
+        assert_eq!(bucket_of(LO), 1);
+        // Edges strictly increase and every edge value lands in the
+        // bucket it opens (half-open [lo, hi)).
+        for i in 1..BUCKETS - 1 {
+            assert!(bucket_hi(i) > bucket_hi(i - 1), "edge {i} not increasing");
+            let lo = bucket_lo(i);
+            assert_eq!(bucket_of(lo), i, "lower edge of bucket {i}");
+            let hi = bucket_hi(i);
+            if hi.is_finite() {
+                assert_eq!(bucket_of(hi), i + 1, "upper edge of bucket {i}");
+            }
+        }
+        assert_eq!(bucket_hi(BUCKETS - 1), f64::INFINITY);
+        // Huge values saturate instead of indexing out of range.
+        assert_eq!(bucket_of(f64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn relative_error_bounded_by_sub_bucket_width() {
+        for &v in &[1e-6, 3.7e-5, 0.00123, 0.5, 1.0, 17.3, 4096.0] {
+            let i = bucket_of(v);
+            let (lo, hi) = (bucket_lo(i), bucket_hi(i));
+            assert!(lo <= v && v < hi, "{v} outside [{lo}, {hi})");
+            assert!(
+                (hi - lo) / lo <= 0.125 + 1e-12,
+                "bucket {i} wider than 12.5%"
+            );
+        }
+    }
+
+    #[test]
+    fn percentile_empty_is_nan() {
+        let h = LogHistogram::new();
+        assert!(h.percentile(0.5).is_nan());
+        assert!(h.min().is_nan());
+        assert!(h.max().is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn percentile_single_sample_is_exact() {
+        let mut h = LogHistogram::new();
+        h.record(0.0371);
+        for q in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(h.percentile(q), 0.0371, "q={q}");
+        }
+    }
+
+    #[test]
+    fn rejects_nan_inf_negative() {
+        let mut h = LogHistogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        h.record(-1.0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.rejected(), 4);
+        assert!(h.percentile(0.5).is_nan());
+        h.record(2.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(0.5), 2.0);
+    }
+
+    #[test]
+    fn percentiles_track_order_statistics_within_a_bucket() {
+        let mut h = LogHistogram::new();
+        // 1..=1000 ms: true p50 = 0.5s, p99 = 0.99s.
+        for k in 1..=1000 {
+            h.record(k as f64 * 1e-3);
+        }
+        let p50 = h.percentile(0.5);
+        let p99 = h.percentile(0.99);
+        assert!((p50 - 0.5).abs() / 0.5 <= 0.125, "p50 {p50}");
+        assert!((p99 - 0.99).abs() / 0.99 <= 0.125, "p99 {p99}");
+        assert_eq!(h.percentile(0.0), 1e-3);
+        assert_eq!(h.percentile(1.0), 1.0);
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn merge_equals_serial_bitwise() {
+        // One stream recorded serially vs. split into shards and merged
+        // in shard order: identical counts and bitwise-identical sum.
+        let vals: Vec<f64> =
+            (0..500).map(|k| 1e-4 * (1.0 + (k as f64) * 0.37)).collect();
+        let mut serial = LogHistogram::new();
+        for &v in &vals {
+            serial.record(v);
+        }
+        let mut shards: Vec<LogHistogram> = Vec::new();
+        for chunk in vals.chunks(97) {
+            let mut h = LogHistogram::new();
+            for &v in chunk {
+                h.record(v);
+            }
+            shards.push(h);
+        }
+        let mut merged = LogHistogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.count(), serial.count());
+        assert_eq!(merged.counts, serial.counts);
+        assert_eq!(merged.sum().to_bits(), serial.sum().to_bits());
+        assert_eq!(merged.min().to_bits(), serial.min().to_bits());
+        assert_eq!(merged.max().to_bits(), serial.max().to_bits());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(
+                merged.percentile(q).to_bits(),
+                serial.percentile(q).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn merge_order_leaves_counts_invariant() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for k in 0..100 {
+            a.record(1e-3 * (k + 1) as f64);
+            b.record(2e-3 * (k + 1) as f64);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.counts, ba.counts);
+        assert_eq!(ab.count(), ba.count());
+        // min/max are order-independent too.
+        assert_eq!(ab.min().to_bits(), ba.min().to_bits());
+        assert_eq!(ab.max().to_bits(), ba.max().to_bits());
+    }
+}

@@ -1,0 +1,112 @@
+//! Leveled logging shim: one switchboard for every diagnostic line the
+//! crate prints.
+//!
+//! All human-facing chatter (progress/ETA, `info!`/`debug!`/`warn!`
+//! macros, report tables) routes through here so the `--quiet`/`-v`
+//! flags have a single authority — and so stdout stays reserved for
+//! machine-readable output (JSON, Prometheus text) while diagnostics go
+//! to stderr. The legacy [`crate::util::set_verbosity`] numeric scale
+//! (0 = quiet, 1 = info, 2 = debug) is a thin shim over [`Level`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first. A message prints when its level is
+/// `<=` the configured [`level`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// The `[tag]` prefix printed before the message.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+/// Process-wide log level. Default: [`Level::Info`].
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    Level::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// Whether a message at `l` would print.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Resolve the CLI flags into a level: `--quiet` wins (errors only),
+/// `-v`/`--verbose` raises to debug, default is info.
+pub fn set_from_flags(quiet: bool, verbose: bool) {
+    set_level(if quiet {
+        Level::Error
+    } else if verbose {
+        Level::Debug
+    } else {
+        Level::Info
+    });
+}
+
+/// Print one leveled line to stderr (no-op when the level is disabled).
+/// Formatting is lazy: `format_args!` defers all rendering to the
+/// write, so a disabled call costs one atomic load.
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{}] {args}", l.tag());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_and_flags() {
+        // NOTE: LEVEL is process-global; restore the default at the end
+        // so parallel tests relying on Info keep passing.
+        set_from_flags(true, false);
+        assert_eq!(level(), Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Warn));
+        set_from_flags(false, true);
+        assert_eq!(level(), Level::Debug);
+        assert!(enabled(Level::Info));
+        set_from_flags(true, true);
+        assert_eq!(level(), Level::Error, "--quiet wins over -v");
+        set_from_flags(false, false);
+        assert_eq!(level(), Level::Info);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn tags_are_stable() {
+        assert_eq!(Level::Error.tag(), "error");
+        assert_eq!(Level::Warn.tag(), "warn");
+        assert_eq!(Level::Info.tag(), "info");
+        assert_eq!(Level::Debug.tag(), "debug");
+    }
+}

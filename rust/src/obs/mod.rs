@@ -1,0 +1,44 @@
+//! Opt-in, allocation-free observability for the simulator and sweep
+//! engine — the runtime form of the paper's compute-variance analysis.
+//!
+//! The paper's scalability argument is a statement about *compute-time
+//! distributions* (max-over-workers arrival offsets, tail percentiles,
+//! who straggles); this module makes those quantities visible while a
+//! run executes instead of only as end-of-run means, and it is the
+//! groundwork for the ROADMAP's `pallas serve` endpoint (cf.
+//! OptiReduce's case that tail percentiles, not means, are the metric
+//! that matters for bounded-wait AllReduce).
+//!
+//! Pieces:
+//!
+//! * [`observer`] — the [`SimObserver`] hook set threaded through
+//!   [`crate::sim::ClusterSim`]'s step path, with [`NoopObserver`]
+//!   (the default) monomorphizing to exactly the un-instrumented code:
+//!   disabled runs are bitwise and perf-identical (`obs_overhead`
+//!   bench pair, `tests/obs_equivalence.rs`);
+//! * [`hist`] — [`LogHistogram`], HDR-style log-bucketed streaming
+//!   histograms with deterministic element-wise merge: per-point sweep
+//!   shards reduce to one histogram bitwise-independent of `--jobs`;
+//! * [`recorder`] — [`ObsRecorder`], the standard observer: iter-time
+//!   / compute-time / arrival-offset histograms, per-worker
+//!   straggler-attribution table, typed [`DropCause`] totals;
+//! * [`export`] — Prometheus text + JSON snapshot exporters and the
+//!   in-tree exposition-format linter CI runs against our own output;
+//! * [`log`] — the leveled logging shim behind `--quiet`/`-v` and the
+//!   crate's `info!`/`warn!`/`debug!` macros.
+//!
+//! Wiring: `--obs-out BASE` on `simulate`/`sweep`/`trace replay`
+//! writes `BASE.prom` + `BASE.json`; the `[obs]` config section turns
+//! recording on without a file (summary table instead); sweeps merge
+//! per-point recorders in index order.
+
+pub mod export;
+pub mod hist;
+pub mod log;
+pub mod observer;
+pub mod recorder;
+
+pub use export::{lint_prometheus, to_json_snapshot, to_prometheus};
+pub use hist::LogHistogram;
+pub use observer::{DropCause, NoopObserver, SimObserver};
+pub use recorder::{DropTotals, ObsRecorder, PhaseStat, WorkerStats};

@@ -1,0 +1,146 @@
+//! The [`SimObserver`] hook set: the zero-cost seam between
+//! [`crate::sim::ClusterSim`]'s hot step path and any instrumentation.
+//!
+//! The sim's step methods are generic over `O: SimObserver` and the
+//! default method bodies are empty `#[inline]` fns, so the
+//! [`NoopObserver`] monomorphization compiles to exactly the
+//! un-instrumented code — disabled runs are bitwise and perf-identical
+//! (held by the `obs_overhead` bench pair and the equivalence tests in
+//! `tests/obs_equivalence.rs`). Observers only *read*: no hook receives
+//! mutable sim state, so an attached observer can never perturb a run.
+//!
+//! Hook order within one step:
+//! 1. [`on_worker`](SimObserver::on_worker) once per worker, in worker
+//!    order, as compute draws finish (plus a
+//!    [`DropCause::Tau`] `on_drop` right after a worker that dropped
+//!    micro-batches locally);
+//! 2. [`on_phase`](SimObserver::on_phase) once per collective phase on
+//!    the compiled full-cluster path, with the raw post-phase readiness
+//!    slice (the observer computes its own fold so the noop closure
+//!    does literally nothing);
+//! 3. [`on_drop`](SimObserver::on_drop) for every comm-side exclusion
+//!    (step deadline, per-phase checkpoint, survivor restart);
+//! 4. [`on_step`](SimObserver::on_step) once with the finished
+//!    [`StepOutcome`].
+
+use crate::sim::StepOutcome;
+
+/// Why a worker lost work this step. `Tau` is a *local* drop (the
+/// worker stays in the collective with fewer micro-batches); the other
+/// three are *comm* drops (the worker's whole contribution is excluded
+/// from the reduction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropCause {
+    /// Compute-threshold τ drop: the worker abandoned `microbatches`
+    /// of its scheduled accumulation (or local-SGD steps) locally.
+    Tau { microbatches: usize },
+    /// The worker missed the whole-step DropComm deadline.
+    StepDeadline,
+    /// The worker was dropped at a per-phase budget checkpoint.
+    /// `checkpoint` is the *closing* checkpoint of the bounded scan —
+    /// when one scan merges drops from several checkpoints the last
+    /// (triggering) one is reported. The event-queue oracle path only
+    /// produces a merged drop mask, so it reports `checkpoint: 0`;
+    /// exact indices come from the compiled path.
+    PhaseCheckpoint { checkpoint: usize },
+    /// The worker survived the initial cut but was dropped in a
+    /// recursive survivor-restart round at `checkpoint`.
+    SurvivorRestart { checkpoint: usize },
+}
+
+impl DropCause {
+    /// Stable label used by the exporters (`cause="..."`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            DropCause::Tau { .. } => "tau",
+            DropCause::StepDeadline => "step_deadline",
+            DropCause::PhaseCheckpoint { .. } => "phase_checkpoint",
+            DropCause::SurvivorRestart { .. } => "survivor_restart",
+        }
+    }
+
+    /// Whether this cause excludes the worker from the collective
+    /// (vs. a local τ trim).
+    pub fn is_comm(&self) -> bool {
+        !matches!(self, DropCause::Tau { .. })
+    }
+}
+
+/// Per-step event hooks. All methods default to empty `#[inline]`
+/// bodies — implement only what you need; [`NoopObserver`] implements
+/// nothing and costs nothing.
+pub trait SimObserver {
+    /// Worker `worker` finished its compute with total draw `compute`
+    /// seconds and `completed` surviving micro-batches (pre-comm).
+    #[inline]
+    fn on_worker(&mut self, _worker: usize, _compute: f64, _completed: usize) {}
+
+    /// Collective phase `phase` completed; `ready` is the raw
+    /// per-position readiness slice after the phase (compiled
+    /// full-cluster path only).
+    #[inline]
+    fn on_phase(&mut self, _phase: usize, _ready: &[f64]) {}
+
+    /// Worker `worker` lost work for `cause`.
+    #[inline]
+    fn on_drop(&mut self, _worker: usize, _cause: DropCause) {}
+
+    /// The step finished; `outcome` is final (post-comm zeroing).
+    #[inline]
+    fn on_step(&mut self, _outcome: &StepOutcome) {}
+}
+
+/// The default do-nothing observer: every un-instrumented entry point
+/// delegates to the observed one with `&mut NoopObserver`, and the
+/// empty inline hooks vanish at codegen.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopObserver;
+
+impl SimObserver for NoopObserver {}
+
+/// `&mut O` forwards, so observed methods can be called with a
+/// reborrowed observer without consuming it.
+impl<O: SimObserver + ?Sized> SimObserver for &mut O {
+    #[inline]
+    fn on_worker(&mut self, worker: usize, compute: f64, completed: usize) {
+        (**self).on_worker(worker, compute, completed);
+    }
+
+    #[inline]
+    fn on_phase(&mut self, phase: usize, ready: &[f64]) {
+        (**self).on_phase(phase, ready);
+    }
+
+    #[inline]
+    fn on_drop(&mut self, worker: usize, cause: DropCause) {
+        (**self).on_drop(worker, cause);
+    }
+
+    #[inline]
+    fn on_step(&mut self, outcome: &StepOutcome) {
+        (**self).on_step(outcome);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cause_labels_and_kind() {
+        assert_eq!(DropCause::Tau { microbatches: 2 }.label(), "tau");
+        assert_eq!(DropCause::StepDeadline.label(), "step_deadline");
+        assert_eq!(
+            DropCause::PhaseCheckpoint { checkpoint: 1 }.label(),
+            "phase_checkpoint"
+        );
+        assert_eq!(
+            DropCause::SurvivorRestart { checkpoint: 0 }.label(),
+            "survivor_restart"
+        );
+        assert!(!DropCause::Tau { microbatches: 1 }.is_comm());
+        assert!(DropCause::StepDeadline.is_comm());
+        assert!(DropCause::PhaseCheckpoint { checkpoint: 0 }.is_comm());
+        assert!(DropCause::SurvivorRestart { checkpoint: 3 }.is_comm());
+    }
+}

@@ -1,0 +1,372 @@
+//! [`ObsRecorder`]: the standard [`SimObserver`] implementation —
+//! streaming histograms, per-worker straggler attribution, and typed
+//! drop totals, all in preallocated buffers (no allocation per step
+//! once the worker count is seen).
+
+use crate::sim::StepOutcome;
+
+use super::hist::LogHistogram;
+use super::observer::{DropCause, SimObserver};
+
+/// Per-worker straggler-attribution row — the operational form of the
+/// paper's compute-variance analysis: who is slow, who pays for it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Steps this worker participated in.
+    pub steps: u64,
+    /// Steps where this worker had the maximum compute draw (ties go
+    /// to the lowest index).
+    pub was_max: u64,
+    /// Steps where this worker was excluded from the collective
+    /// (step deadline / phase checkpoint / survivor restart).
+    pub dropped: u64,
+    /// Micro-batches (or local-SGD steps) this worker abandoned to the
+    /// compute threshold τ.
+    pub tau_microbatches: u64,
+    /// Steps where this worker was the latest arrival among those
+    /// excluded — the straggler that most motivated the drop.
+    pub triggered_checkpoint: u64,
+}
+
+/// Totals per typed drop cause, plus the micro-batch bookkeeping that
+/// lets attribution be cross-checked against [`StepOutcome`] counts:
+/// `scheduled - completed == tau_microbatches + comm_lost_microbatches`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DropTotals {
+    /// τ drop events (one per worker-step that trimmed work locally).
+    pub tau_events: u64,
+    /// Micro-batches trimmed by τ across all workers and steps.
+    pub tau_microbatches: u64,
+    /// Worker-steps excluded by the whole-step DropComm deadline.
+    pub step_deadline: u64,
+    /// Worker-steps excluded at a per-phase budget checkpoint.
+    pub phase_checkpoint: u64,
+    /// Worker-steps excluded in a recursive survivor-restart round.
+    pub survivor_restart: u64,
+    /// Micro-batches computed but lost to comm-side exclusion.
+    pub comm_lost_microbatches: u64,
+}
+
+impl DropTotals {
+    /// Comm-side exclusion events (worker-steps), all causes.
+    pub fn comm_events(&self) -> u64 {
+        self.step_deadline + self.phase_checkpoint + self.survivor_restart
+    }
+}
+
+/// Streaming per-phase completion-time stats (compiled full-cluster
+/// collective path).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseStat {
+    pub count: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl PhaseStat {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// The standard recorder. Worker-indexed tables grow on first sight of
+/// a worker index and never per step thereafter; the per-step scratch
+/// (`step_completed`, `step_drops`) is reused across steps.
+///
+/// Merging ([`merge`](Self::merge)) is element-wise and deterministic:
+/// fold per-shard recorders in a fixed order and the result is bitwise
+/// independent of how work was parallelized (see
+/// [`super::hist`] module docs for the f64-sum argument).
+#[derive(Debug, Clone, Default)]
+pub struct ObsRecorder {
+    /// Steps observed ([`on_step`](SimObserver::on_step) calls).
+    pub steps: u64,
+    /// Full iteration times (compute + collective).
+    pub iter_time: LogHistogram,
+    /// Per-worker compute draws (one sample per worker per step).
+    pub compute_time: LogHistogram,
+    /// Arrival offsets: each worker's compute draw minus the step's
+    /// fastest draw (one sample per worker per step; the fastest
+    /// contributes 0).
+    pub arrival_offset: LogHistogram,
+    /// Per-phase completion stats, indexed by phase.
+    pub phases: Vec<PhaseStat>,
+    /// Straggler-attribution table, indexed by worker.
+    pub workers: Vec<WorkerStats>,
+    /// Typed drop totals.
+    pub drops: DropTotals,
+    /// Micro-batches scheduled (pre-τ): Σ completed-pre + τ shortfall.
+    pub scheduled_microbatches: u64,
+    /// Micro-batches that made it into the reduction (post-comm).
+    pub completed_microbatches: u64,
+
+    // --- per-step scratch, cleared/overwritten each step ---
+    /// Pre-comm completed counts buffered from `on_worker`, so comm
+    /// drops know how many micro-batches each exclusion cost.
+    step_completed: Vec<usize>,
+    /// Comm-side drops seen this step (for triggered-checkpoint
+    /// attribution, which needs the step's compute draws).
+    step_drops: Vec<usize>,
+}
+
+impl ObsRecorder {
+    /// `workers` presizes the per-worker tables (0 is fine — they grow
+    /// on first use).
+    pub fn new(workers: usize) -> Self {
+        let mut r = Self::default();
+        if workers > 0 {
+            r.ensure_worker(workers - 1);
+        }
+        r
+    }
+
+    fn ensure_worker(&mut self, worker: usize) {
+        if self.workers.len() <= worker {
+            self.workers.resize(worker + 1, WorkerStats::default());
+            self.step_completed.resize(worker + 1, 0);
+        }
+    }
+
+    /// Element-wise merge of another recorder (index order matters for
+    /// bitwise f64 sums; counts are order-independent).
+    pub fn merge(&mut self, other: &ObsRecorder) {
+        self.steps += other.steps;
+        self.iter_time.merge(&other.iter_time);
+        self.compute_time.merge(&other.compute_time);
+        self.arrival_offset.merge(&other.arrival_offset);
+        if self.phases.len() < other.phases.len() {
+            self.phases.resize(other.phases.len(), PhaseStat::default());
+        }
+        for (a, b) in self.phases.iter_mut().zip(&other.phases) {
+            a.count += b.count;
+            a.sum += b.sum;
+            if b.max > a.max {
+                a.max = b.max;
+            }
+        }
+        if !other.workers.is_empty() {
+            self.ensure_worker(other.workers.len() - 1);
+        }
+        for (a, b) in self.workers.iter_mut().zip(&other.workers) {
+            a.steps += b.steps;
+            a.was_max += b.was_max;
+            a.dropped += b.dropped;
+            a.tau_microbatches += b.tau_microbatches;
+            a.triggered_checkpoint += b.triggered_checkpoint;
+        }
+        self.drops.tau_events += other.drops.tau_events;
+        self.drops.tau_microbatches += other.drops.tau_microbatches;
+        self.drops.step_deadline += other.drops.step_deadline;
+        self.drops.phase_checkpoint += other.drops.phase_checkpoint;
+        self.drops.survivor_restart += other.drops.survivor_restart;
+        self.drops.comm_lost_microbatches += other.drops.comm_lost_microbatches;
+        self.scheduled_microbatches += other.scheduled_microbatches;
+        self.completed_microbatches += other.completed_microbatches;
+    }
+
+    /// The attribution cross-check the tests hold: every scheduled
+    /// micro-batch is either completed, τ-trimmed, or comm-lost.
+    pub fn microbatches_balance(&self) -> bool {
+        self.scheduled_microbatches
+            == self.completed_microbatches
+                + self.drops.tau_microbatches
+                + self.drops.comm_lost_microbatches
+    }
+}
+
+impl SimObserver for ObsRecorder {
+    fn on_worker(&mut self, worker: usize, compute: f64, completed: usize) {
+        self.ensure_worker(worker);
+        self.step_completed[worker] = completed;
+        self.workers[worker].steps += 1;
+        self.scheduled_microbatches += completed as u64;
+    }
+
+    fn on_phase(&mut self, phase: usize, ready: &[f64]) {
+        if self.phases.len() <= phase {
+            self.phases.resize(phase + 1, PhaseStat::default());
+        }
+        let t = ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let stat = &mut self.phases[phase];
+        stat.count += 1;
+        stat.sum += t;
+        if t > stat.max {
+            stat.max = t;
+        }
+    }
+
+    fn on_drop(&mut self, worker: usize, cause: DropCause) {
+        self.ensure_worker(worker);
+        match cause {
+            DropCause::Tau { microbatches } => {
+                self.drops.tau_events += 1;
+                self.drops.tau_microbatches += microbatches as u64;
+                self.workers[worker].tau_microbatches += microbatches as u64;
+                // on_worker already counted the surviving micro-batches
+                // into `scheduled`; add back the trimmed ones.
+                self.scheduled_microbatches += microbatches as u64;
+            }
+            comm => {
+                match comm {
+                    DropCause::StepDeadline => self.drops.step_deadline += 1,
+                    DropCause::PhaseCheckpoint { .. } => {
+                        self.drops.phase_checkpoint += 1
+                    }
+                    DropCause::SurvivorRestart { .. } => {
+                        self.drops.survivor_restart += 1
+                    }
+                    DropCause::Tau { .. } => unreachable!(),
+                }
+                self.workers[worker].dropped += 1;
+                self.drops.comm_lost_microbatches +=
+                    self.step_completed[worker] as u64;
+                self.step_drops.push(worker);
+            }
+        }
+    }
+
+    fn on_step(&mut self, outcome: &StepOutcome) {
+        self.steps += 1;
+        self.iter_time.record(outcome.iter_time);
+        self.completed_microbatches += outcome.total_completed() as u64;
+        if !outcome.worker_compute.is_empty() {
+            let min = outcome
+                .worker_compute
+                .iter()
+                .cloned()
+                .fold(f64::INFINITY, f64::min);
+            let mut argmax = 0usize;
+            let mut max = f64::NEG_INFINITY;
+            for (w, &c) in outcome.worker_compute.iter().enumerate() {
+                self.compute_time.record(c);
+                self.arrival_offset.record(c - min);
+                if c > max {
+                    max = c;
+                    argmax = w;
+                }
+            }
+            self.ensure_worker(outcome.worker_compute.len() - 1);
+            self.workers[argmax].was_max += 1;
+            // Triggered-checkpoint attribution: the latest arrival
+            // among the step's excluded workers (first pushed wins
+            // ties) is charged with having triggered the cut.
+            if !self.step_drops.is_empty() {
+                let mut trig = self.step_drops[0];
+                let mut trig_c = outcome.worker_compute[trig];
+                for &w in &self.step_drops[1..] {
+                    let c = outcome.worker_compute[w];
+                    if c > trig_c {
+                        trig_c = c;
+                        trig = w;
+                    }
+                }
+                self.workers[trig].triggered_checkpoint += 1;
+            }
+        }
+        self.step_drops.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(compute: &[f64], completed: &[usize], iter: f64) -> StepOutcome {
+        StepOutcome {
+            worker_compute: compute.to_vec(),
+            completed: completed.to_vec(),
+            compute_time: compute.iter().cloned().fold(0.0, f64::max),
+            iter_time: iter,
+        }
+    }
+
+    #[test]
+    fn attribution_and_balance_over_synthetic_steps() {
+        let mut r = ObsRecorder::new(3);
+        // Step 1: worker 2 straggles and τ-trims one micro-batch.
+        for (w, (&c, &d)) in [0.8, 0.9, 1.5].iter().zip(&[4usize, 4, 3]).enumerate()
+        {
+            r.on_worker(w, c, d);
+        }
+        r.on_drop(2, DropCause::Tau { microbatches: 1 });
+        r.on_step(&outcome(&[0.8, 0.9, 1.5], &[4, 4, 3], 1.7));
+        // Step 2: worker 1 straggles and misses the step deadline.
+        for (w, (&c, &d)) in [0.7, 2.0, 0.9].iter().zip(&[4usize, 4, 4]).enumerate()
+        {
+            r.on_worker(w, c, d);
+        }
+        r.on_drop(1, DropCause::StepDeadline);
+        r.on_step(&outcome(&[0.7, 2.0, 0.9], &[4, 0, 4], 1.1));
+
+        assert_eq!(r.steps, 2);
+        assert_eq!(r.workers[2].was_max, 1);
+        assert_eq!(r.workers[1].was_max, 1);
+        assert_eq!(r.workers[0].was_max, 0);
+        assert_eq!(r.workers[2].tau_microbatches, 1);
+        assert_eq!(r.workers[1].dropped, 1);
+        assert_eq!(r.workers[1].triggered_checkpoint, 1);
+        assert_eq!(r.drops.tau_events, 1);
+        assert_eq!(r.drops.tau_microbatches, 1);
+        assert_eq!(r.drops.step_deadline, 1);
+        assert_eq!(r.drops.comm_lost_microbatches, 4);
+        // scheduled = 2 steps × 3 workers × 4 micro-batches
+        assert_eq!(r.scheduled_microbatches, 24);
+        assert_eq!(r.completed_microbatches, 11 + 8);
+        assert!(r.microbatches_balance());
+        // iter/compute/offset histograms saw 2, 6, 6 samples.
+        assert_eq!(r.iter_time.count(), 2);
+        assert_eq!(r.compute_time.count(), 6);
+        assert_eq!(r.arrival_offset.count(), 6);
+        // Fastest worker's offset is exactly 0 → bucket 0 occupied.
+        assert!(r.arrival_offset.bucket_count(0) >= 2);
+    }
+
+    #[test]
+    fn merge_matches_one_recorder_fed_serially() {
+        let step = |r: &mut ObsRecorder, base: f64| {
+            r.on_worker(0, base, 2);
+            r.on_worker(1, base * 2.0, 2);
+            r.on_drop(1, DropCause::PhaseCheckpoint { checkpoint: 1 });
+            r.on_step(&outcome(&[base, base * 2.0], &[2, 0], base * 2.5));
+        };
+        let mut serial = ObsRecorder::new(2);
+        step(&mut serial, 0.5);
+        step(&mut serial, 0.7);
+        let mut a = ObsRecorder::new(2);
+        step(&mut a, 0.5);
+        let mut b = ObsRecorder::new(2);
+        step(&mut b, 0.7);
+        let mut merged = ObsRecorder::new(2);
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.steps, serial.steps);
+        assert_eq!(merged.workers, serial.workers);
+        assert_eq!(merged.drops, serial.drops);
+        assert_eq!(
+            merged.iter_time.sum().to_bits(),
+            serial.iter_time.sum().to_bits()
+        );
+        assert_eq!(
+            merged.arrival_offset.percentile(0.99).to_bits(),
+            serial.arrival_offset.percentile(0.99).to_bits()
+        );
+        assert!(merged.microbatches_balance());
+    }
+
+    #[test]
+    fn phase_stats_fold_from_raw_readiness() {
+        let mut r = ObsRecorder::new(0);
+        r.on_phase(0, &[0.1, 0.4, 0.2]);
+        r.on_phase(1, &[0.5, 0.6, 0.55]);
+        r.on_phase(0, &[0.2, 0.3, 0.1]);
+        assert_eq!(r.phases.len(), 2);
+        assert_eq!(r.phases[0].count, 2);
+        assert_eq!(r.phases[0].max, 0.4);
+        assert!((r.phases[0].mean() - 0.35).abs() < 1e-12);
+        assert_eq!(r.phases[1].count, 1);
+    }
+}

@@ -52,8 +52,13 @@ impl Table {
         out
     }
 
+    /// Print to stdout — unless `--quiet` dropped the
+    /// [`crate::obs::log`] level below info, keeping stdout clean for
+    /// machine-readable output.
     pub fn print(&self) {
-        println!("{}", self.render());
+        if crate::obs::log::enabled(crate::obs::log::Level::Info) {
+            println!("{}", self.render());
+        }
     }
 }
 

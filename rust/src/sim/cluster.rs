@@ -8,6 +8,7 @@
 //! trainer via [`StepOutcome::completed`].
 
 use crate::config::ClusterConfig;
+use crate::obs::{DropCause, NoopObserver, SimObserver};
 use crate::policy::DropPolicy;
 use crate::rng::Xoshiro256pp;
 use crate::util::{Error, Result};
@@ -350,10 +351,24 @@ impl ClusterSim {
     /// Full-cluster collective completion for `arrivals`: the compiled
     /// heapless pass when available, else the cached-schedule event
     /// reference, else the fixed-`T^c` model.
-    fn collective_time(&mut self, arrivals: &[f64]) -> f64 {
+    ///
+    /// The observer's [`SimObserver::on_phase`] hook fires after each
+    /// phase of the compiled pass with the raw readiness slice (the
+    /// event/fixed reference arms have no per-phase structure to
+    /// report). With [`NoopObserver`] the closure is empty and the pass
+    /// monomorphizes to exactly the unhooked loop.
+    fn collective_time<O: SimObserver>(
+        &mut self,
+        arrivals: &[f64],
+        obs: &mut O,
+    ) -> f64 {
         if self.use_compiled {
             if let Some(c) = self.compiled.as_ref() {
-                return c.completion_with(arrivals, &mut self.scratch);
+                return c.completion_with_phases(
+                    arrivals,
+                    &mut self.scratch,
+                    |p, ready| obs.on_phase(p, ready),
+                );
             }
         }
         self.comm.completion_time_with(arrivals, self.schedule.as_ref())
@@ -363,8 +378,10 @@ impl ClusterSim {
     /// comm-side drop policy late workers are excluded — their
     /// completed micro-batches are zeroed (dropped work) and the
     /// survivors' reduction sets the iteration time. Operates in place
-    /// on `out`'s already-filled per-worker vectors.
-    fn finish_into(&mut self, out: &mut StepOutcome) {
+    /// on `out`'s already-filled per-worker vectors. Emits the
+    /// comm-side [`DropCause`] events and the closing
+    /// [`SimObserver::on_step`].
+    fn finish_into<O: SimObserver>(&mut self, out: &mut StepOutcome, obs: &mut O) {
         // max over an empty set folds to -inf; a zero-worker outcome
         // computes for zero seconds
         out.compute_time = if out.worker_compute.is_empty() {
@@ -376,11 +393,12 @@ impl ClusterSim {
                 .fold(f64::NEG_INFINITY, f64::max)
         };
         if !self.phase_cutoffs.is_empty() {
-            out.iter_time = self.per_phase_iter_time(out);
+            out.iter_time = self.per_phase_iter_time(out, obs);
+            obs.on_step(out);
             return;
         }
         out.iter_time = match self.comm_drop {
-            None => self.collective_time(&out.worker_compute),
+            None => self.collective_time(&out.worker_compute, obs),
             Some(deadline) => {
                 // the shared membership rule, evaluated allocation-free
                 // for the common no-drop case
@@ -391,16 +409,20 @@ impl ClusterSim {
                 if out.worker_compute.iter().all(|&a| a <= cutoff) {
                     // common path: nobody missed the deadline — plain
                     // collective over the compiled full-N schedule
-                    self.collective_time(&out.worker_compute)
+                    self.collective_time(&out.worker_compute, obs)
                 } else {
                     // drop path: zero the late workers' contributions
                     // and count the k survivors while at it
                     let mut k = 0usize;
-                    for (done, &a) in
-                        out.completed.iter_mut().zip(&out.worker_compute)
+                    for (n, (done, &a)) in out
+                        .completed
+                        .iter_mut()
+                        .zip(&out.worker_compute)
+                        .enumerate()
                     {
                         if a > cutoff {
                             *done = 0;
+                            obs.on_drop(n, DropCause::StepDeadline);
                         } else {
                             k += 1;
                         }
@@ -420,6 +442,7 @@ impl ClusterSim {
                 }
             }
         };
+        obs.on_step(out);
     }
 
     /// The per-phase-deadline collective: compiled scan
@@ -437,7 +460,17 @@ impl ClusterSim {
     /// of [`CommModel::per_phase_bounded_completion_recursive`], bitwise
     /// identical to it. [`Self::with_single_restart`] restores the old
     /// unchecked restart.
-    fn per_phase_iter_time(&mut self, out: &mut StepOutcome) -> f64 {
+    ///
+    /// Drop attribution: per-phase drop events report the scan's
+    /// *closing* checkpoint (one scan can merge drops from several
+    /// checkpoints; the last — triggering — one is reported). The
+    /// event-queue oracle arm only produces a merged mask, so it
+    /// reports `checkpoint: 0`.
+    fn per_phase_iter_time<O: SimObserver>(
+        &mut self,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) -> f64 {
         if self.use_compiled {
             if let Some(c) = self.compiled.as_ref() {
                 let res = c.bounded_completion_with(
@@ -449,11 +482,18 @@ impl ClusterSim {
                 return match res {
                     PhaseBounded::Complete(t) => t,
                     PhaseBounded::Dropped { survivors, close, checkpoint } => {
-                        for (done, &d) in
-                            out.completed.iter_mut().zip(&self.drop_mask)
+                        for (n, (done, &d)) in out
+                            .completed
+                            .iter_mut()
+                            .zip(&self.drop_mask)
+                            .enumerate()
                         {
                             if d {
                                 *done = 0;
+                                obs.on_drop(
+                                    n,
+                                    DropCause::PhaseCheckpoint { checkpoint },
+                                );
                             }
                         }
                         if survivors == 0 {
@@ -476,7 +516,7 @@ impl ClusterSim {
                                 self.survivors.completion(survivors, close)
                             } else {
                                 self.recursive_survivor_time(
-                                    out, survivors, close,
+                                    out, survivors, close, obs,
                                 )
                             }
                         }
@@ -500,9 +540,14 @@ impl ClusterSim {
                 self.schedule.as_ref(),
             )
         };
-        for (done, &alive) in out.completed.iter_mut().zip(&mask) {
+        for (n, (done, &alive)) in
+            out.completed.iter_mut().zip(&mask).enumerate()
+        {
             if !alive {
                 *done = 0;
+                // the oracle reports a merged mask, not per-checkpoint
+                // structure — coarse attribution (checkpoint 0)
+                obs.on_drop(n, DropCause::PhaseCheckpoint { checkpoint: 0 });
             }
         }
         t
@@ -517,11 +562,12 @@ impl ClusterSim {
     /// oracle loop in
     /// [`CommModel::per_phase_bounded_completion_recursive`] (bitwise
     /// pair, property-tested in `tests/policy_equivalence.rs`).
-    fn recursive_survivor_time(
+    fn recursive_survivor_time<O: SimObserver>(
         &mut self,
         out: &mut StepOutcome,
         mut k: usize,
         mut close: f64,
+        obs: &mut O,
     ) -> f64 {
         // sub-scan position -> global worker id, from the level-0 mask
         self.alive_buf.clear();
@@ -547,6 +593,10 @@ impl ClusterSim {
                         let worker = self.alive_buf[j];
                         if self.drop_mask[j] {
                             out.completed[worker] = 0;
+                            obs.on_drop(
+                                worker,
+                                DropCause::SurvivorRestart { checkpoint },
+                            );
                         } else {
                             self.alive_buf[w] = worker;
                             w += 1;
@@ -586,10 +636,21 @@ impl ClusterSim {
         policy: &DropPolicy,
         out: &mut StepOutcome,
     ) {
+        self.step_with_observed(policy, out, &mut NoopObserver);
+    }
+
+    /// [`Self::step_with_into`] with a [`SimObserver`] receiving the
+    /// step's per-worker, per-phase and drop events.
+    pub fn step_with_observed<O: SimObserver>(
+        &mut self,
+        policy: &DropPolicy,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) {
         if *policy != self.policy {
             self.set_policy(policy);
         }
-        self.step_installed_into(out);
+        self.step_installed_observed(out, obs);
     }
 
     /// One step under the already-installed policy
@@ -597,9 +658,21 @@ impl ClusterSim {
     /// [`Self::local_sgd_period_into`] (threshold per local step),
     /// anything else to [`Self::step_into`].
     pub fn step_installed_into(&mut self, out: &mut StepOutcome) {
+        self.step_installed_observed(out, &mut NoopObserver);
+    }
+
+    /// [`Self::step_installed_into`] with a [`SimObserver`]. The
+    /// [`NoopObserver`] monomorphization is exactly the un-instrumented
+    /// step (bitwise and perf-identical — `tests/obs_equivalence.rs`,
+    /// `obs_overhead` bench pair).
+    pub fn step_installed_observed<O: SimObserver>(
+        &mut self,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) {
         match self.eff_h {
-            Some(h) => self.local_sgd_period_into(h, self.eff_tau, out),
-            None => self.step_into(self.eff_tau, out),
+            Some(h) => self.local_sgd_period_observed(h, self.eff_tau, out, obs),
+            None => self.step_observed(self.eff_tau, out, obs),
         }
     }
 
@@ -625,6 +698,20 @@ impl ClusterSim {
     /// all seeded results — are bitwise identical to the un-batched
     /// code (property-tested in `tests/perf_equivalence.rs`).
     pub fn step_into(&mut self, threshold: Option<f64>, out: &mut StepOutcome) {
+        self.step_observed(threshold, out, &mut NoopObserver);
+    }
+
+    /// [`Self::step_into`] with a [`SimObserver`]: per worker an
+    /// [`SimObserver::on_worker`] event (plus a [`DropCause::Tau`]
+    /// drop when the threshold trimmed micro-batches), then the
+    /// collective's phase/drop events and the closing
+    /// [`SimObserver::on_step`].
+    pub fn step_observed<O: SimObserver>(
+        &mut self,
+        threshold: Option<f64>,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) {
         let step_idx = self.step_idx;
         self.step_idx += 1;
         out.worker_compute.clear();
@@ -699,11 +786,18 @@ impl ClusterSim {
             );
             out.worker_compute.push(t);
             out.completed.push(done);
+            obs.on_worker(n, t, done);
+            if done < self.accums {
+                obs.on_drop(
+                    n,
+                    DropCause::Tau { microbatches: self.accums - done },
+                );
+            }
         }
         if let Some(r) = self.replay.as_mut() {
             r.pos += 1;
         }
-        self.finish_into(out);
+        self.finish_into(out, obs);
         if let Some(w) = self.writer.as_mut() {
             w.push_outcome(out);
         }
@@ -739,6 +833,19 @@ impl ClusterSim {
         h: usize,
         threshold: Option<f64>,
         out: &mut StepOutcome,
+    ) {
+        self.local_sgd_period_observed(h, threshold, out, &mut NoopObserver);
+    }
+
+    /// [`Self::local_sgd_period_into`] with a [`SimObserver`]; a
+    /// [`DropCause::Tau`] event counts local steps the threshold
+    /// skipped.
+    pub fn local_sgd_period_observed<O: SimObserver>(
+        &mut self,
+        h: usize,
+        threshold: Option<f64>,
+        out: &mut StepOutcome,
+        obs: &mut O,
     ) {
         let step_idx = self.step_idx;
         self.step_idx += 1;
@@ -829,11 +936,15 @@ impl ClusterSim {
             }
             out.worker_compute[n] = compute;
             out.completed[n] = done;
+            obs.on_worker(n, compute, done);
+            if done < h {
+                obs.on_drop(n, DropCause::Tau { microbatches: h - done });
+            }
         }
         if let Some(r) = self.replay.as_mut() {
             r.pos += 1;
         }
-        self.finish_into(out);
+        self.finish_into(out, obs);
         if let Some(w) = self.writer.as_mut() {
             w.push_outcome(out);
         }
@@ -975,6 +1086,16 @@ impl ClusterSim {
     /// trace), or the trace's mode (step vs Local-SGD period) does not
     /// match the installed policy.
     pub fn replay_into(&mut self, out: &mut StepOutcome) -> Result<()> {
+        self.replay_observed(out, &mut NoopObserver)
+    }
+
+    /// [`Self::replay_into`] with a [`SimObserver`] — the same event
+    /// stream a live step emits, driven by the recorded draws.
+    pub fn replay_observed<O: SimObserver>(
+        &mut self,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) -> Result<()> {
         let r = self.replay.as_ref().ok_or_else(|| {
             Error::Runtime(
                 "no replay source installed (ClusterSim::with_replay)".into(),
@@ -998,7 +1119,7 @@ impl ClusterSim {
                     .into(),
             )),
             _ => {
-                self.step_installed_into(out);
+                self.step_installed_observed(out, obs);
                 Ok(())
             }
         }

@@ -128,6 +128,21 @@ impl CompiledSchedule {
         arrivals: &[f64],
         scratch: &mut ScheduleScratch,
     ) -> f64 {
+        self.completion_with_phases(arrivals, scratch, |_, _| {})
+    }
+
+    /// [`Self::completion_with`] with an observation hook: `on_phase`
+    /// receives `(phase_index, post-phase readiness slice)` after each
+    /// phase's transfer pass. The hook gets the *raw* slice (no fold
+    /// precomputed) so the no-op closure — which `completion_with`
+    /// passes — monomorphizes to exactly the unhooked loop: disabled
+    /// observation is bitwise and perf-identical.
+    pub fn completion_with_phases<F: FnMut(usize, &[f64])>(
+        &self,
+        arrivals: &[f64],
+        scratch: &mut ScheduleScratch,
+        mut on_phase: F,
+    ) -> f64 {
         assert_eq!(
             self.workers,
             arrivals.len(),
@@ -158,6 +173,7 @@ impl CompiledSchedule {
                 }
             }
             std::mem::swap(ready, next);
+            on_phase(p, ready);
         }
         ready.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }

@@ -7,6 +7,7 @@
 use std::sync::Arc;
 
 use crate::config::ClusterConfig;
+use crate::obs::{NoopObserver, ObsRecorder, SimObserver};
 use crate::policy::DropPolicy;
 use crate::rng::SplitMix64;
 use crate::sim::{ClusterSim, StepOutcome, TraceRecord};
@@ -284,10 +285,22 @@ impl SweepSpec {
         index: usize,
         pool: &SurvivorCachePool,
     ) -> SweepPoint {
+        self.run_point_observed(index, pool, &mut NoopObserver)
+    }
+
+    /// [`Self::run_point_pooled`] with a [`SimObserver`] receiving
+    /// every step's events. The [`NoopObserver`] monomorphization is
+    /// the plain point runner, so un-observed sweeps pay nothing.
+    pub fn run_point_observed<O: SimObserver>(
+        &self,
+        index: usize,
+        pool: &SurvivorCachePool,
+        obs: &mut O,
+    ) -> SweepPoint {
         let p = self.params(index);
         let policy = self.point_policy(&p);
         if let Some(trace) = &self.replay {
-            return self.run_replay_point(index, &p, policy, trace, pool);
+            return self.run_replay_point(index, &p, policy, trace, pool, obs);
         }
         let mut cfg = self.base.clone();
         cfg.workers = p.workers;
@@ -302,7 +315,7 @@ impl SweepSpec {
         let mut compute_sum = 0.0;
         let mut completed = 0usize;
         for _ in 0..self.iters {
-            sim.step_installed_into(&mut out);
+            sim.step_installed_observed(&mut out, obs);
             t_sum += out.iter_time;
             compute_sum += out.compute_time;
             completed += out.total_completed();
@@ -335,13 +348,14 @@ impl SweepSpec {
     /// never samples — so the parallel-equals-serial contract holds
     /// trivially, and the warm survivor caches still amortize the drop
     /// path across points.
-    fn run_replay_point(
+    fn run_replay_point<O: SimObserver>(
         &self,
         index: usize,
         p: &SweepParams,
         policy: DropPolicy,
         trace: &TraceRecord,
         pool: &SurvivorCachePool,
+        obs: &mut O,
     ) -> SweepPoint {
         assert_eq!(
             p.workers, trace.meta.workers,
@@ -358,7 +372,7 @@ impl SweepSpec {
         let mut compute_sum = 0.0;
         let mut completed = 0usize;
         for _ in 0..iters {
-            sim.replay_into(&mut out).expect(
+            sim.replay_observed(&mut out, obs).expect(
                 "replay point within the recorded length and mode \
                  (policy mode must match the trace)",
             );
@@ -407,6 +421,40 @@ impl SweepSpec {
             });
         SweepResult { points }
     }
+
+    /// [`Self::run`] with observability: each point records into its
+    /// own [`ObsRecorder`] (pure per index), and the per-point
+    /// recorders fold into one merged recorder **in index order** after
+    /// [`run_indexed`] returns them — so both the per-point shards and
+    /// the merged histogram are bitwise independent of `--jobs`
+    /// (property-tested in `tests/obs_equivalence.rs`).
+    pub fn run_observed(&self) -> (SweepResult, SweepObs) {
+        let spec = Arc::new(self.clone());
+        let pool = Arc::new(SurvivorCachePool::new());
+        let label = if self.progress { Some("sweep") } else { None };
+        let pairs = run_indexed(self.len(), self.jobs, label, move |i| {
+            let mut rec = ObsRecorder::new(0);
+            let point = spec.run_point_observed(i, &pool, &mut rec);
+            (point, rec)
+        });
+        let mut points = Vec::with_capacity(pairs.len());
+        let mut per_point = Vec::with_capacity(pairs.len());
+        let mut merged = ObsRecorder::new(0);
+        for (p, rec) in pairs {
+            merged.merge(&rec);
+            points.push(p);
+            per_point.push(rec);
+        }
+        (SweepResult { points }, SweepObs { per_point, merged })
+    }
+}
+
+/// Observability output of [`SweepSpec::run_observed`]: one recorder
+/// per grid point (index order) plus their deterministic merge.
+#[derive(Debug, Clone, Default)]
+pub struct SweepObs {
+    pub per_point: Vec<ObsRecorder>,
+    pub merged: ObsRecorder,
 }
 
 impl SweepResult {

@@ -39,5 +39,5 @@ pub mod grid;
 pub mod runner;
 
 pub use cache::SurvivorCachePool;
-pub use grid::{SweepParams, SweepPoint, SweepResult, SweepSpec};
+pub use grid::{SweepObs, SweepParams, SweepPoint, SweepResult, SweepSpec};
 pub use runner::{resolve_jobs, run_indexed, Progress};

@@ -54,8 +54,10 @@ where
     })
 }
 
-/// Throttled stderr progress/ETA reporter (at most ~2 lines per second,
-/// plus a final line at completion).
+/// Throttled progress/ETA reporter (at most ~2 lines per second, plus
+/// a final line at completion). Lines go through [`crate::obs::log`]
+/// at info level — always stderr, suppressed by `--quiet` — so
+/// progress never interleaves with machine-readable results on stdout.
 pub struct Progress {
     label: String,
     total: usize,
@@ -77,6 +79,9 @@ impl Progress {
 
     pub fn tick(&mut self) {
         self.done += 1;
+        if !crate::obs::log::enabled(crate::obs::log::Level::Info) {
+            return; // --quiet: skip even the rate-limit bookkeeping
+        }
         let now = Instant::now();
         let due = match self.last_print {
             None => true,
@@ -89,7 +94,7 @@ impl Progress {
         let elapsed = now.duration_since(self.started).as_secs_f64();
         let rate = self.done as f64 / elapsed.max(1e-9);
         let eta = (self.total - self.done) as f64 / rate.max(1e-9);
-        eprintln!(
+        crate::info!(
             "[{}] {}/{} points ({:.1}%) — {:.1} pts/s, {:.1}s elapsed, ETA {:.1}s",
             self.label,
             self.done,

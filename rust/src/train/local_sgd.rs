@@ -33,6 +33,9 @@ pub struct LocalSgdTrainer {
     /// Reusable period-timing outcome
     /// ([`ClusterSim::local_sgd_period_into`] recycles its vectors).
     outcome: StepOutcome,
+    /// Optional observability recorder ([`Self::observe`]); boxed so
+    /// the unobserved path pays one pointer, nothing more.
+    obs: Option<Box<crate::obs::ObsRecorder>>,
 }
 
 impl LocalSgdTrainer {
@@ -78,7 +81,26 @@ impl LocalSgdTrainer {
             drop_policy: policy,
             virtual_time: 0.0,
             outcome: StepOutcome::default(),
+            obs: None,
         })
+    }
+
+    /// Attach an [`crate::obs::ObsRecorder`]; subsequent periods route
+    /// through [`ClusterSim::step_installed_observed`].
+    pub fn observe(&mut self) {
+        self.obs = Some(Box::new(crate::obs::ObsRecorder::new(
+            self.cfg.cluster.workers,
+        )));
+    }
+
+    /// The attached recorder, if any.
+    pub fn observer(&self) -> Option<&crate::obs::ObsRecorder> {
+        self.obs.as_deref()
+    }
+
+    /// Detach and return the recorder.
+    pub fn take_observer(&mut self) -> Option<Box<crate::obs::ObsRecorder>> {
+        self.obs.take()
     }
 
     /// The synchronization period H the policy measures.
@@ -93,7 +115,12 @@ impl LocalSgdTrainer {
     pub fn period(&mut self, period_idx: usize) -> Result<StepRecord> {
         let sw = Stopwatch::start();
         let h = self.period_len();
-        self.sim.step_installed_into(&mut self.outcome);
+        match self.obs.as_deref_mut() {
+            Some(rec) => {
+                self.sim.step_installed_observed(&mut self.outcome, rec)
+            }
+            None => self.sim.step_installed_into(&mut self.outcome),
+        }
         let outcome = &self.outcome;
 
         let lr = self.cfg.train.lr;

@@ -58,6 +58,10 @@ pub struct Trainer {
     accums: usize,
     /// Effective total steps (inflated by ExtraSteps).
     total_steps: usize,
+    /// Attached step observer ([`Self::observe`]); `None` (default)
+    /// routes every step through the zero-cost
+    /// [`crate::obs::NoopObserver`] path.
+    obs: Option<Box<crate::obs::ObsRecorder>>,
 }
 
 impl Trainer {
@@ -115,7 +119,27 @@ impl Trainer {
             calibration_time: 0.0,
             accums: cfg.cluster.accumulations,
             total_steps: cfg.train.steps,
+            obs: None,
         })
+    }
+
+    /// Attach an [`crate::obs::ObsRecorder`] to every subsequent
+    /// training step's timing simulation. Observation only reads — the
+    /// step outcomes are bitwise identical with or without it.
+    pub fn observe(&mut self) {
+        self.obs = Some(Box::new(crate::obs::ObsRecorder::new(
+            self.cfg.cluster.workers,
+        )));
+    }
+
+    /// The attached recorder, if [`Self::observe`] was called.
+    pub fn observer(&self) -> Option<&crate::obs::ObsRecorder> {
+        self.obs.as_deref()
+    }
+
+    /// Detach and return the recorder.
+    pub fn take_observer(&mut self) -> Option<Box<crate::obs::ObsRecorder>> {
+        self.obs.take()
     }
 
     /// Phase 0 — choose the threshold per policy (Algorithm 2 for Auto),
@@ -199,14 +223,28 @@ impl Trainer {
         // Timing + drop decisions from the cluster simulator. If the
         // batch was inflated (IncreasedBatch) rebuild the sim dimension.
         let outcome = if self.accums == self.sim.accums {
-            self.sim.step_with(&self.drop_policy)
+            let mut out = Default::default();
+            match self.obs.as_deref_mut() {
+                Some(rec) => {
+                    self.sim.step_with_observed(&self.drop_policy, &mut out, rec)
+                }
+                None => self.sim.step_with_into(&self.drop_policy, &mut out),
+            }
+            out
         } else {
             // temporary sim with adjusted accumulation count
             let mut cfg = self.cfg.cluster.clone();
             cfg.accumulations = self.accums;
             let mut sim =
                 ClusterSim::new(&cfg, self.cfg.train.seed ^ step as u64);
-            sim.step_with(&self.drop_policy)
+            let mut out = Default::default();
+            match self.obs.as_deref_mut() {
+                Some(rec) => {
+                    sim.step_with_observed(&self.drop_policy, &mut out, rec)
+                }
+                None => sim.step_with_into(&self.drop_policy, &mut out),
+            }
+            out
         };
 
         self.runtime.upload_params(self.params.tensors())?;

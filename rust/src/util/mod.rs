@@ -4,7 +4,6 @@ mod threadpool;
 
 pub use threadpool::ThreadPool;
 
-use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
 /// Crate-wide error type (hand-rolled Display/From — the sandbox
@@ -55,34 +54,58 @@ impl From<xla::Error> for Error {
     }
 }
 
-/// Log verbosity (0 = quiet, 1 = info, 2 = debug).
-static VERBOSITY: AtomicU8 = AtomicU8::new(1);
-
+/// Legacy numeric verbosity shim over [`crate::obs::log`]
+/// (0 = quiet, 1 = info, 2 = debug). New code should use
+/// [`crate::obs::log::set_level`] / the leveled macros directly.
 pub fn set_verbosity(v: u8) {
-    VERBOSITY.store(v, Ordering::Relaxed);
+    use crate::obs::log::Level;
+    crate::obs::log::set_level(match v {
+        0 => Level::Error,
+        1 => Level::Info,
+        _ => Level::Debug,
+    });
 }
 
+/// Legacy numeric verbosity readout (see [`set_verbosity`]).
 pub fn verbosity() -> u8 {
-    VERBOSITY.load(Ordering::Relaxed)
+    use crate::obs::log::Level;
+    match crate::obs::log::level() {
+        Level::Error | Level::Warn => 0,
+        Level::Info => 1,
+        Level::Debug => 2,
+    }
 }
 
-/// Print an info-level line (respects verbosity).
+/// Print an info-level line (routed through [`crate::obs::log`]).
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
-        if $crate::util::verbosity() >= 1 {
-            eprintln!("[info] {}", format!($($arg)*));
-        }
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Info,
+            format_args!($($arg)*),
+        )
     };
 }
 
-/// Print a debug-level line.
+/// Print a warning line (shown unless `--quiet` drops to errors-only).
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Warn,
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Print a debug-level line (needs `-v`/`--verbose`).
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => {
-        if $crate::util::verbosity() >= 2 {
-            eprintln!("[debug] {}", format!($($arg)*));
-        }
+        $crate::obs::log::log(
+            $crate::obs::log::Level::Debug,
+            format_args!($($arg)*),
+        )
     };
 }
 

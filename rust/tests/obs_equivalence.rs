@@ -1,0 +1,309 @@
+//! Property tests for the observability layer: attaching an observer
+//! must never perturb the simulation (outputs bitwise equal to the
+//! observer-free paths over every topology and policy variant), the
+//! recorder's typed drop attribution must cross-check against the
+//! `StepOutcome` counts it observed, sweep histograms merged from
+//! per-point shards must be bitwise independent of `--jobs`, and the
+//! exporters must emit lint-clean Prometheus text and parseable JSON.
+
+use dropcompute::config::{ClusterConfig, NoiseKind, StragglerKind};
+use dropcompute::obs::{
+    lint_prometheus, to_json_snapshot, to_prometheus, LogHistogram,
+    ObsRecorder,
+};
+use dropcompute::policy::DropPolicy;
+use dropcompute::runtime::json::Json;
+use dropcompute::sim::{ClusterSim, StepOutcome};
+use dropcompute::sweep::SweepSpec;
+use dropcompute::topology::TopologyKind;
+
+/// Drop-heavy base config over `kind` (or the fixed-T^c model).
+fn cfg(kind: Option<TopologyKind>, workers: usize) -> ClusterConfig {
+    ClusterConfig {
+        workers,
+        accumulations: 4,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        noise: NoiseKind::Exponential { mean: 0.5 },
+        stragglers: StragglerKind::Uniform { p: 0.3, delay: 4.0 },
+        topology: kind,
+        link_latency: 1e-3,
+        link_bandwidth: 1e9,
+        grad_bytes: 4e6,
+        ..Default::default()
+    }
+}
+
+/// The policy variants the attribution must cover: tau-only, step
+/// deadline, composed, per-phase checkpoints (which also exercises the
+/// survivor-restart path), and local-SGD + tau.
+fn policy_variants() -> Vec<DropPolicy> {
+    vec![
+        DropPolicy::compute_tau(1.2),
+        DropPolicy::comm_deadline(1.0),
+        DropPolicy::compute_tau(1.5).and(DropPolicy::comm_deadline(1.5)),
+        DropPolicy::per_phase_deadline(vec![1.0, 0.3, 0.3]),
+        DropPolicy::parse("local-sgd=5+tau=0.9").expect("valid spec"),
+    ]
+}
+
+#[test]
+fn observer_attached_stepping_is_bitwise_observer_free() {
+    // the zero-overhead contract's correctness half: a live ObsRecorder
+    // must not perturb a single bit of any outcome — every topology
+    // plus fixed-T^c, every policy variant, compiled and event-queue
+    // oracle arms.
+    let topos: Vec<Option<TopologyKind>> = std::iter::once(None)
+        .chain(TopologyKind::ALL.iter().copied().map(Some))
+        .collect();
+    for topo in topos {
+        for policy in policy_variants() {
+            for reference in [false, true] {
+                let build = || {
+                    let sim = ClusterSim::new(&cfg(topo, 10), 0x0B5E)
+                        .with_policy(policy.clone());
+                    if reference {
+                        sim.with_reference_timing()
+                    } else {
+                        sim
+                    }
+                };
+                let mut plain = build();
+                let mut observed = build();
+                let mut out_a = StepOutcome::default();
+                let mut out_b = StepOutcome::default();
+                let mut rec = ObsRecorder::new(10);
+                for step in 0..15 {
+                    plain.step_installed_into(&mut out_a);
+                    observed.step_installed_observed(&mut out_b, &mut rec);
+                    assert_eq!(
+                        out_a.completed, out_b.completed,
+                        "{topo:?} {} ref={reference} step {step}",
+                        policy.spec()
+                    );
+                    assert_eq!(
+                        out_a.iter_time.to_bits(),
+                        out_b.iter_time.to_bits(),
+                        "{topo:?} {} ref={reference} step {step}",
+                        policy.spec()
+                    );
+                    assert_eq!(
+                        out_a.compute_time.to_bits(),
+                        out_b.compute_time.to_bits()
+                    );
+                    assert_eq!(out_a.worker_compute, out_b.worker_compute);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn drop_attribution_cross_checks_against_step_outcomes() {
+    // the recorder's typed totals must reconcile exactly with what the
+    // StepOutcomes say happened: micro-batch balance, completed totals,
+    // comm-excluded worker-steps (zeroed completions that comm caused),
+    // and per-worker step participation.
+    let topos: Vec<Option<TopologyKind>> = std::iter::once(None)
+        .chain(TopologyKind::ALL.iter().copied().map(Some))
+        .collect();
+    for topo in topos {
+        for policy in policy_variants() {
+            let n = 10usize;
+            let mut sim = ClusterSim::new(&cfg(topo, n), 0xCC0)
+                .with_policy(policy.clone());
+            let mut rec = ObsRecorder::new(n);
+            let mut out = StepOutcome::default();
+            let steps = 25usize;
+            let mut completed_total = 0u64;
+            let per_step = policy.local_sgd_h().unwrap_or(4);
+            for _ in 0..steps {
+                sim.step_installed_observed(&mut out, &mut rec);
+                completed_total += out.total_completed() as u64;
+            }
+            let label =
+                format!("{topo:?} {}", policy.spec());
+            assert_eq!(rec.steps, steps as u64, "{label}");
+            assert_eq!(
+                rec.completed_microbatches, completed_total,
+                "{label}"
+            );
+            // every worker scheduled per_step micro-batches every step
+            assert_eq!(
+                rec.scheduled_microbatches,
+                (steps * n * per_step) as u64,
+                "{label}"
+            );
+            assert!(rec.microbatches_balance(), "{label}");
+            assert_eq!(rec.workers.len(), n, "{label}");
+            for (w, s) in rec.workers.iter().enumerate() {
+                assert_eq!(s.steps, steps as u64, "{label} worker {w}");
+                assert!(
+                    s.dropped <= steps as u64,
+                    "{label} worker {w}"
+                );
+            }
+            // the drop-heavy configs must actually exercise the cause
+            // this policy variant is about
+            let eff = policy.effective();
+            if eff.tau.is_some() {
+                assert!(rec.drops.tau_events > 0, "{label}");
+            }
+            // a preemptive tau clause flattens every trimmed arrival to
+            // exactly tau, so a composed deadline may legitimately never
+            // fire — only the deadline-only variant must show exclusions
+            if eff.step_deadline.is_some() && eff.tau.is_none() {
+                assert!(rec.drops.step_deadline > 0, "{label}");
+            }
+            if !eff.phase_offsets.is_empty() {
+                assert!(rec.drops.phase_checkpoint > 0, "{label}");
+                assert_eq!(rec.drops.step_deadline, 0, "{label}");
+            }
+            // comm exclusions are exactly one event per excluded
+            // worker-step, and each zeroed a positive completion count
+            // or the worker had already finished nothing
+            assert_eq!(
+                rec.drops.comm_events(),
+                rec.workers.iter().map(|s| s.dropped).sum::<u64>(),
+                "{label}"
+            );
+            // was_max is awarded exactly once per step
+            assert_eq!(
+                rec.workers.iter().map(|s| s.was_max).sum::<u64>(),
+                steps as u64,
+                "{label}"
+            );
+            // triggered-checkpoint only on steps with comm exclusions
+            assert!(
+                rec.workers
+                    .iter()
+                    .map(|s| s.triggered_checkpoint)
+                    .sum::<u64>()
+                    <= steps as u64,
+                "{label}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_merged_histograms_are_bitwise_independent_of_jobs() {
+    // the mergeability contract end to end: per-point recorders from a
+    // parallel sweep fold into a merged recorder bitwise identical to
+    // the serial run's — sums, percentiles, attribution tables.
+    let spec = SweepSpec::new(cfg(Some(TopologyKind::Ring), 6))
+        .workers(&[4, 6])
+        .policies(&policy_variants())
+        .seeds(&[1, 2])
+        .iters(8)
+        .progress(false);
+    let (r1, o1) = spec.clone().jobs(1).run_observed();
+    let (r4, o4) = spec.clone().jobs(4).run_observed();
+    for (a, b) in r1.points.iter().zip(&r4.points) {
+        assert_eq!(a.mean_iter_time.to_bits(), b.mean_iter_time.to_bits());
+    }
+    assert_eq!(o1.per_point.len(), o4.per_point.len());
+    for (i, (a, b)) in o1.per_point.iter().zip(&o4.per_point).enumerate() {
+        assert_eq!(a.steps, b.steps, "point {i}");
+        assert_eq!(
+            a.iter_time.sum().to_bits(),
+            b.iter_time.sum().to_bits(),
+            "point {i}"
+        );
+        assert_eq!(a.drops, b.drops, "point {i}");
+    }
+    let (a, b) = (&o1.merged, &o4.merged);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.workers, b.workers);
+    assert_eq!(a.drops, b.drops);
+    for (ha, hb) in [
+        (&a.iter_time, &b.iter_time),
+        (&a.compute_time, &b.compute_time),
+        (&a.arrival_offset, &b.arrival_offset),
+    ] {
+        assert_eq!(ha.count(), hb.count());
+        assert_eq!(ha.sum().to_bits(), hb.sum().to_bits());
+        assert_eq!(ha.min().to_bits(), hb.min().to_bits());
+        assert_eq!(ha.max().to_bits(), hb.max().to_bits());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(
+                ha.percentile(q).to_bits(),
+                hb.percentile(q).to_bits(),
+                "q={q}"
+            );
+        }
+    }
+    assert!(a.microbatches_balance());
+    // and the merged recorder saw every point's steps
+    assert_eq!(a.steps, (spec.len() * 8) as u64);
+}
+
+#[test]
+fn histogram_percentile_edge_cases() {
+    // empty histogram: every readout is NaN, count 0
+    let h = LogHistogram::new();
+    assert_eq!(h.count(), 0);
+    assert!(h.percentile(0.5).is_nan());
+    assert!(h.mean().is_nan());
+    assert!(h.min().is_nan());
+
+    // single sample: every percentile is exactly that sample
+    let mut h = LogHistogram::new();
+    h.record(0.3721);
+    for q in [0.0, 0.5, 0.99, 1.0] {
+        assert_eq!(h.percentile(q).to_bits(), 0.3721f64.to_bits(), "q={q}");
+    }
+
+    // non-finite and negative samples are rejected, not recorded
+    let mut h = LogHistogram::new();
+    h.record(f64::NAN);
+    h.record(f64::INFINITY);
+    h.record(f64::NEG_INFINITY);
+    h.record(-1.0);
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.rejected(), 4);
+    assert!(h.percentile(0.5).is_nan());
+
+    // zero is a valid sample (bucket 0: the p0 readout is bucket 0's
+    // upper edge), and the saturating top bucket clamps to the exact
+    // observed max instead of reporting infinity
+    let mut h = LogHistogram::new();
+    h.record(0.0);
+    h.record(1e300);
+    assert_eq!(h.count(), 2);
+    assert_eq!(h.min().to_bits(), 0.0f64.to_bits());
+    assert!(h.percentile(0.0) <= dropcompute::obs::hist::LO);
+    assert_eq!(h.percentile(1.0).to_bits(), 1e300f64.to_bits());
+    assert!(h.percentile(1.0).is_finite());
+}
+
+#[test]
+fn exports_from_a_real_run_lint_and_parse() {
+    // a drop-heavy observed run's Prometheus text must pass the
+    // in-tree exposition linter, and the JSON snapshot must round-trip
+    // through the crate's own parser with consistent totals.
+    let mut sim = ClusterSim::new(&cfg(Some(TopologyKind::Torus { rows: 0 }), 8), 0xE59)
+        .with_policy(
+            DropPolicy::compute_tau(1.5).and(DropPolicy::comm_deadline(1.2)),
+        );
+    let mut rec = ObsRecorder::new(8);
+    let mut out = StepOutcome::default();
+    for _ in 0..30 {
+        sim.step_installed_observed(&mut out, &mut rec);
+    }
+    let prom = to_prometheus(&rec);
+    let issues = lint_prometheus(&prom);
+    assert!(issues.is_empty(), "lint issues: {issues:?}");
+    assert!(prom.contains("dropcompute_steps_total 30"));
+
+    let snap = to_json_snapshot(&rec);
+    let doc = Json::parse(&snap).expect("snapshot parses");
+    assert_eq!(
+        doc.get("steps").and_then(Json::as_f64),
+        Some(30.0)
+    );
+    let workers = doc.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(workers.len(), 8);
+    let hist = doc.get("iter_time").expect("iter_time histogram");
+    assert_eq!(hist.get("count").and_then(Json::as_f64), Some(30.0));
+}
