@@ -1,0 +1,225 @@
+//! Churn ablation — graceful degradation under dynamic membership.
+//!
+//! The scenario lab's headline question: how much useful throughput
+//! does a synchronous cluster keep when workers fail, rejoin, and slow
+//! down mid-run, and how much does a drop policy buy back? For each
+//! topology (ring, tree, hierarchical, torus) the bench sweeps one
+//! [`SweepSpec::scenarios`] axis — fault-free / transient fail+rejoin /
+//! compound churn (permanent loss + transient loss + a 2x slowdown) —
+//! against a policy axis (none / tau / tau+DropComm), all through the
+//! same deterministic sweep engine the CLI uses, so every cell is
+//! bitwise reproducible from its coordinates.
+//!
+//! Emits `BENCH_churn.json` (validated in-process with the crate's own
+//! parser) for the CI artifact trail. `--smoke` shrinks the grid for
+//! the scenario-smoke CI job.
+
+mod common;
+
+use common::{header, paper_cluster};
+use dropcompute::policy::DropPolicy;
+use dropcompute::report::{f, pct, Table};
+use dropcompute::runtime::json::Json;
+use dropcompute::sim::FaultPlan;
+use dropcompute::sweep::SweepSpec;
+use dropcompute::topology::TopologyKind;
+
+/// The churn axis: scripted fault plans in the `--scenario` grammar.
+/// Worker ids are valid for every N the bench sweeps (smallest is 8).
+fn scenario_axis(iters: usize) -> Vec<(&'static str, FaultPlan)> {
+    // scale event steps with the horizon so smoke runs still see every
+    // membership regime (fail, rejoin, compound churn)
+    let q = (iters / 4).max(1);
+    let transient = format!("fail@{q}:w2,rejoin+{q}");
+    let compound = format!(
+        "fail@{}:w0;fail@{q}:w1,rejoin+{q};slow@0:w3,x2.0",
+        2 * q
+    );
+    vec![
+        ("fault-free", FaultPlan::default()),
+        (
+            "transient",
+            FaultPlan::parse(&transient).expect("bench scenario specs"),
+        ),
+        (
+            "compound",
+            FaultPlan::parse(&compound).expect("bench scenario specs"),
+        ),
+    ]
+}
+
+fn main() {
+    header(
+        "Churn ablation — drop policies under dynamic membership",
+        "synchronous training stalls on its slowest member; DropCompute \
+         (tau) and DropComm (bounded wait) must degrade gracefully — \
+         not collapse — when the membership itself churns",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        println!("(smoke mode: reduced grid/iters)");
+    }
+    let n = if smoke { 8 } else { 16 };
+    let iters = if smoke { 20 } else { 60 };
+
+    let policy_axis: Vec<DropPolicy> = ["none", "tau=9", "tau=9+deadline=3"]
+        .iter()
+        .map(|s| DropPolicy::parse(s).expect("bench policy specs"))
+        .collect();
+    let scenarios = scenario_axis(iters);
+    let plans: Vec<FaultPlan> =
+        scenarios.iter().map(|(_, p)| p.clone()).collect();
+
+    let mut json = String::from("{\n  \"bench\": \"churn_ablation\",\n");
+    json.push_str(&format!(
+        "  \"workers\": {n}, \"iters\": {iters}, \"smoke\": {smoke},\n"
+    ));
+    json.push_str("  \"topologies\": [\n");
+
+    for (ti, kind) in TopologyKind::ALL.iter().enumerate() {
+        let mut base = paper_cluster(n);
+        base.topology = Some(*kind);
+        base.link_latency = 25e-6;
+        base.link_bandwidth = 12.5e9;
+        base.grad_bytes = 4.0 * 335e6;
+        let result = SweepSpec::new(base)
+            .workers(&[n])
+            .policies(&policy_axis)
+            .scenarios(&plans)
+            .seeds(&[0xC4A0 + ti as u64])
+            .iters(iters)
+            .jobs(0)
+            .progress(false)
+            .run();
+        assert_eq!(
+            result.points.len(),
+            policy_axis.len() * plans.len(),
+            "policy x scenario grid"
+        );
+        let mut t = Table::new(
+            format!("churn ablation — {} topology, N={n}", kind.name()),
+            &["scenario", "policy", "iter time", "mb/s", "drop"],
+        );
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"points\": [\n",
+            kind.name()
+        ));
+        for (pi, p) in result.points.iter().enumerate() {
+            let spec = p.scenario.as_deref().unwrap_or("none");
+            let label = scenarios
+                .iter()
+                .find(|(_, plan)| plan.spec() == spec)
+                .map(|(name, _)| *name)
+                .unwrap_or("?");
+            let policy = p.policy.as_deref().expect("policy axis");
+            t.row(vec![
+                label.to_string(),
+                policy.to_string(),
+                f(p.mean_iter_time, 3),
+                f(p.throughput, 1),
+                pct(p.drop_rate),
+            ]);
+            json.push_str(&format!(
+                "      {{\"scenario\": \"{label}\", \"spec\": \"{spec}\", \
+                 \"policy\": \"{policy}\", \"mean_iter_time\": {:.4}, \
+                 \"throughput\": {:.4}, \"drop_rate\": {:.4}}}{}\n",
+                p.mean_iter_time,
+                p.throughput,
+                p.drop_rate,
+                if pi + 1 < result.points.len() { "," } else { "" },
+            ));
+        }
+        t.print();
+        json.push_str(&format!(
+            "    ]}}{}\n",
+            if ti + 1 < TopologyKind::ALL.len() { "," } else { "" }
+        ));
+
+        // Shape checks per topology. Pull a (scenario, policy) cell out
+        // of the enumeration (scenario axis is slower than seeds,
+        // faster than policies — but addressing by spec is robust to
+        // ordering).
+        let cell = |scen: &str, pol: &str| {
+            result
+                .points
+                .iter()
+                .find(|p| {
+                    p.scenario.as_deref().unwrap_or("none")
+                        == scenarios
+                            .iter()
+                            .find(|(l, _)| *l == scen)
+                            .map(|(_, pl)| pl.spec())
+                            .unwrap()
+                            .as_str()
+                        && p.policy.as_deref() == Some(pol)
+                })
+                .expect("grid cell present")
+        };
+        let clean = cell("fault-free", "none");
+        let churn_none = cell("compound", "none");
+        let churn_both = cell("compound", "tau=9+deadline=3");
+        // churn must cost something (a dead worker's micro-batches are
+        // lost)...
+        assert!(
+            churn_none.drop_rate > 0.0,
+            "{}: compound churn must drop work",
+            kind.name()
+        );
+        assert!(
+            clean.drop_rate < churn_none.drop_rate,
+            "{}: fault-free baseline out-drops churn?",
+            kind.name()
+        );
+        // ...but the cluster must degrade, not collapse: the surviving
+        // members keep reducing and useful throughput stays within the
+        // same order of magnitude.
+        assert!(
+            churn_none.throughput > 0.3 * clean.throughput,
+            "{}: churn collapsed throughput ({} vs {})",
+            kind.name(),
+            churn_none.throughput,
+            clean.throughput
+        );
+        // the composed policy should not do worse than no policy under
+        // the same churn (it sheds stragglers the fault plan slowed)
+        assert!(
+            churn_both.throughput > 0.8 * churn_none.throughput,
+            "{}: policies made churn worse ({} vs {})",
+            kind.name(),
+            churn_both.throughput,
+            churn_none.throughput
+        );
+        // every cell stays finite and NaN-free — the degenerate guards
+        for p in &result.points {
+            assert!(p.mean_iter_time.is_finite());
+            assert!(!p.drop_rate.is_nan());
+            assert!((0.0..=1.0).contains(&p.drop_rate));
+        }
+    }
+    json.push_str("  ]\n}\n");
+
+    println!("JSON_BEGIN");
+    print!("{json}");
+    println!("JSON_END");
+
+    let doc = Json::parse(&json).expect("bench must emit valid JSON");
+    let topos = doc.get("topologies").unwrap().as_arr().unwrap();
+    assert_eq!(topos.len(), TopologyKind::ALL.len());
+    for t in topos {
+        let pts = t.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 9, "3 scenarios x 3 policies");
+        assert!(
+            pts.iter().any(|p| p
+                .get("spec")
+                .and_then(Json::as_str)
+                .is_some_and(|s| s.contains("rejoin+"))),
+            "transient arm missing"
+        );
+    }
+    std::fs::write("BENCH_churn.json", &json).expect("write BENCH_churn.json");
+    println!(
+        "\nSHAPE CHECK PASSED: {} topologies x 3 scenarios x 3 policies; \
+         wrote BENCH_churn.json",
+        TopologyKind::ALL.len()
+    );
+}

@@ -25,6 +25,17 @@ pub enum NoiseKind {
     Bernoulli { p: f64, value: f64 },
     Exponential { mean: f64 },
     Gamma { mean: f64, var: f64 },
+    /// Correlated straggler bursts: one seeded burst process shared by
+    /// workers `0..subset`. Each `period`-step window bursts with prob
+    /// `p`, adding `delay` seconds to every subset worker's step start —
+    /// the whole subset straggles *together* (rack/switch contention).
+    /// Step-indexed: consumes no per-worker draws.
+    SharedBurst { p: f64, period: u64, delay: f64, subset: usize, seed: u64 },
+    /// Time-varying per-worker mean: each worker's step-start offset
+    /// random-walks with increment `U(-sigma, sigma)` per step, clamped
+    /// at 0 (thermal drift / slow degradation). Step-indexed: consumes
+    /// no per-worker draws.
+    Drift { sigma: f64, seed: u64 },
 }
 
 /// Straggler injection scenarios (Fig 12).
@@ -310,6 +321,10 @@ pub struct SweepConfig {
     /// `workers × policies × seeds` over parsed
     /// [`crate::policy::DropPolicy`] specs.
     pub policies: Vec<crate::policy::DropPolicy>,
+    /// Fault-plan axis (`[scenario] sweep = ["none", "fail@100:w3", ...]`):
+    /// when non-empty each grid point also runs under every parsed
+    /// [`crate::sim::FaultPlan`] (the churn ablation).
+    pub scenarios: Vec<crate::sim::FaultPlan>,
     /// Seed axis (same seed across arms = paired comparisons).
     pub seeds: Vec<u64>,
     /// Progress/ETA reporting to stderr.
@@ -325,6 +340,7 @@ impl Default for SweepConfig {
             thresholds: vec![0.0],
             deadlines: vec![0.0],
             policies: Vec::new(),
+            scenarios: Vec::new(),
             seeds: vec![0],
             progress: true,
         }
@@ -363,6 +379,9 @@ pub struct Config {
     /// falls back to the legacy `[comm] drop_deadline` surface — see
     /// [`Config::effective_policy`].
     pub policy: Option<crate::policy::DropPolicy>,
+    /// Run-level fault plan (`[scenario] spec = "..."`); `None` (or the
+    /// literal spec `"none"`) runs fault-free.
+    pub scenario: Option<crate::sim::FaultPlan>,
     /// Artifact root directory.
     pub artifacts_dir: String,
 }
@@ -378,6 +397,7 @@ impl Default for Config {
             trace: TraceConfig::default(),
             obs: ObsConfig::default(),
             policy: None,
+            scenario: None,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -522,6 +542,25 @@ impl Config {
         }
         c.cluster.single_restart = doc.bool_or("policy.single_restart", false);
 
+        // [scenario] — the fault-injection lab (crate::sim::FaultPlan).
+        // `spec` drives single runs; `sweep` is the grid's churn axis.
+        c.scenario = match doc.get("scenario.spec") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    Error::Config("scenario.spec: expected string".into())
+                })?;
+                let plan = crate::sim::FaultPlan::parse(s)?;
+                if plan.is_empty() { None } else { Some(plan) }
+            }
+        };
+        if let Some(specs) = str_list(doc, "scenario.sweep")? {
+            c.sweep.scenarios = specs
+                .iter()
+                .map(|s| crate::sim::FaultPlan::parse(s))
+                .collect::<Result<_>>()?;
+        }
+
         // [trace] — trace record / replay / fit (crate::sim::TraceRecord,
         // crate::analysis::budget_fit)
         c.trace.path = doc.str_or("trace.path", &c.trace.path);
@@ -618,6 +657,11 @@ impl Config {
             return Err(Error::Config(
                 "sweep.thresholds and sweep.deadlines must be >= 0".into(),
             ));
+        }
+        if let Some(plan) = &self.scenario {
+            // sweep-axis plans are validated against each point's
+            // worker count when the grid materializes
+            plan.validate_for(self.cluster.workers)?;
         }
         Ok(())
     }
@@ -722,6 +766,17 @@ fn parse_noise(doc: &Document) -> Result<NoiseKind> {
         "gamma" => NoiseKind::Gamma {
             mean: doc.float_or("noise.mean", 0.225),
             var: doc.float_or("noise.var", 0.05),
+        },
+        "shared_burst" => NoiseKind::SharedBurst {
+            p: doc.float_or("noise.p", 0.1),
+            period: doc.int_or("noise.period", 10).max(1) as u64,
+            delay: doc.float_or("noise.delay", 1.0),
+            subset: doc.int_or("noise.subset", 4).max(1) as usize,
+            seed: doc.int_or("noise.seed", 0) as u64,
+        },
+        "drift" => NoiseKind::Drift {
+            sigma: doc.float_or("noise.sigma", 0.01),
+            seed: doc.int_or("noise.seed", 0) as u64,
         },
         other => return Err(Error::Config(format!("unknown noise kind `{other}`"))),
     })
@@ -932,6 +987,82 @@ mod tests {
             let doc = Document::parse(bad).unwrap();
             assert!(Config::from_doc(&doc).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn scenario_section_roundtrip() {
+        let doc = Document::parse(
+            r#"
+            [cluster]
+            workers = 8
+            [scenario]
+            spec = "fail@100:w3,rejoin+50;slow@20:w1,x2.5"
+            sweep = ["none", "fail@10:w0", "drift@0:w2,+0.01"]
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        let plan = c.scenario.expect("spec installs a plan");
+        assert_eq!(plan.spec(), "fail@100:w3,rejoin+50;slow@20:w1,x2.5");
+        assert_eq!(c.sweep.scenarios.len(), 3);
+        assert!(c.sweep.scenarios[0].is_empty());
+        assert_eq!(c.sweep.scenarios[1].spec(), "fail@10:w0");
+
+        // "none" and an absent section both mean fault-free
+        let doc = Document::parse("[scenario]\nspec = \"none\"").unwrap();
+        assert!(Config::from_doc(&doc).unwrap().scenario.is_none());
+        assert!(Config::default().scenario.is_none());
+
+        // a plan naming a worker outside the cluster is a config error
+        let doc = Document::parse(
+            "[cluster]\nworkers = 4\n[scenario]\nspec = \"fail@10:w7\"",
+        )
+        .unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+
+        // bad specs rejected at the config boundary
+        for bad in [
+            "[scenario]\nspec = \"explode@3\"",
+            "[scenario]\nspec = 3",
+            "[scenario]\nsweep = [\"fail@:w1\"]",
+            "[scenario]\nsweep = [3]",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(Config::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn churn_noise_kinds_roundtrip() {
+        let doc = Document::parse(
+            r#"
+            [noise]
+            kind = "shared_burst"
+            p = 0.25
+            period = 5
+            delay = 2.0
+            subset = 3
+            seed = 7
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(
+            c.cluster.noise,
+            NoiseKind::SharedBurst {
+                p: 0.25,
+                period: 5,
+                delay: 2.0,
+                subset: 3,
+                seed: 7
+            }
+        );
+        let doc = Document::parse(
+            "[noise]\nkind = \"drift\"\nsigma = 0.02\nseed = 9",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.cluster.noise, NoiseKind::Drift { sigma: 0.02, seed: 9 });
     }
 
     #[test]

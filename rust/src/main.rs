@@ -22,7 +22,7 @@ use dropcompute::obs::ObsRecorder;
 use dropcompute::coordinator::ScaleRun;
 use dropcompute::policy::DropPolicy;
 use dropcompute::report::{f, pct, Table};
-use dropcompute::sim::ClusterSim;
+use dropcompute::sim::{ClusterSim, FaultPlan};
 use dropcompute::train::{LocalSgdTrainer, Trainer};
 use dropcompute::util::Result;
 
@@ -68,6 +68,22 @@ Drop policies (simulate/sweep; the one drop-decision surface):
               config section; legacy --tau/--comm-drop-deadline compose
               into the same surface.
 
+Fault scenarios (simulate/sweep; the churn lab):
+  --scenario SPEC
+              `;`-separated fault events varying live membership and
+              per-worker speed between steps:
+                fail@S:wN[,rejoin+R]   worker N dies at step S (rejoins
+                                       at S+R when given)
+                slow@S:wN,xF[,forD]    worker N runs F x slower from S
+                                       (for D steps when given)
+                drift@S:wN,+R          worker N degrades by rate R per
+                                       step from S on
+              e.g. `fail@100:w3,rejoin+50;slow@20:w1,x2.5`; `none` is
+              the fault-free plan. Deterministic: same seed + same plan
+              give bitwise-identical outcomes on both timing paths.
+              Repeat --scenario in `sweep` for a churn axis. Defaults
+              to the `[scenario]` config section.
+
 simulate/scale/sweep also take the topology-aware collective model:
   --topology fixed|ring|tree|hierarchical[:group]|torus[:rows]
               event-driven schedule model (`fixed` = the paper's T^c)
@@ -101,7 +117,7 @@ fn main() -> ExitCode {
         .value_keys(&[
             "config", "set", "out", "iters", "tau", "periods", "workers",
             "grid", "topology", "comm-drop-deadline", "jobs", "thresholds",
-            "deadlines", "seeds", "policy", "trace", "obs-out",
+            "deadlines", "seeds", "policy", "scenario", "trace", "obs-out",
         ])
         .short('v', "verbose")
         .short('q', "quiet");
@@ -244,13 +260,14 @@ fn print_obs_summary(rec: &ObsRecorder) {
         ),
     ]);
     t.row(vec![
-        "drops (tau/ddl/phase/restart)".into(),
+        "drops (tau/ddl/phase/restart/fault)".into(),
         format!(
-            "{}/{}/{}/{}",
+            "{}/{}/{}/{}/{}",
             rec.drops.tau_events,
             rec.drops.step_deadline,
             rec.drops.phase_checkpoint,
-            rec.drops.survivor_restart
+            rec.drops.survivor_restart,
+            rec.drops.worker_fault
         ),
     ]);
     for (name, h) in [
@@ -370,8 +387,21 @@ fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
     if tau > 0.0 {
         policy = policy.and(DropPolicy::compute_tau(tau));
     }
+    // fault scenario: --scenario flag replaces the [scenario] config
+    // section; `none` (the empty plan) disables either
+    let scenario = match args.get("scenario") {
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec)?;
+            (!plan.is_empty()).then_some(plan)
+        }
+        None => cfg.scenario.clone(),
+    };
     let mut sim =
         ClusterSim::new(&cluster, cfg.train.seed).with_policy(policy.clone());
+    if let Some(plan) = &scenario {
+        plan.validate_for(cluster.workers)?;
+        sim = sim.with_fault_plan(plan.clone());
+    }
     let mut out = dropcompute::sim::StepOutcome::default();
     let mut iter_w = dropcompute::stats::Welford::new();
     let mut completed = 0usize;
@@ -401,6 +431,9 @@ fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
         },
     ]);
     t.row(vec!["drop policy".into(), policy.spec()]);
+    if let Some(plan) = &scenario {
+        t.row(vec!["scenario".into(), plan.spec()]);
+    }
     t.row(vec!["iterations".into(), iters.to_string()]);
     t.row(vec!["mean iter time".into(), f(iter_w.mean(), 3)]);
     t.row(vec!["iter time std".into(), f(iter_w.std(), 3)]);
@@ -549,6 +582,19 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         None => sc.deadlines.clone(),
     };
     let seeds = csv_list::<u64>(args, "seeds", &sc.seeds)?;
+    // scenario (churn) axis precedence mirrors the policy axis:
+    // repeated --scenario flags, else the `[scenario] sweep` config
+    // list. Events naming workers beyond a point's cluster size are
+    // inert there, so one axis composes with any worker axis.
+    let scenario_args = args.get_all("scenario");
+    let scenarios: Vec<FaultPlan> = if !scenario_args.is_empty() {
+        scenario_args
+            .iter()
+            .map(|s| FaultPlan::parse(s))
+            .collect::<Result<_>>()?
+    } else {
+        sc.scenarios.clone()
+    };
     // same range rule the [sweep] config section enforces
     if thresholds.iter().any(|&t| t < 0.0) || deadlines.iter().any(|&d| d < 0.0)
     {
@@ -561,16 +607,22 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         .thresholds(&thresholds)
         .deadlines(&deadlines)
         .policies(&policies)
+        .scenarios(&scenarios)
         .seeds(&seeds)
         .iters(args.usize_or("iters", sc.iters)?)
         .jobs(args.usize_or("jobs", sc.jobs)?)
         .progress(sc.progress && !args.flag("quiet"));
     let n = spec.len();
     let jobs = dropcompute::sweep::resolve_jobs(spec.jobs);
+    let scen_note = if scenarios.is_empty() {
+        String::new()
+    } else {
+        format!("{} scenarios x ", scenarios.len())
+    };
     if policies.is_empty() {
         println!(
             "sweep: {} points ({} workers x {} thresholds x {} deadlines x \
-             {} seeds), {} iters each, {jobs} jobs",
+             {scen_note}{} seeds), {} iters each, {jobs} jobs",
             n,
             workers.len(),
             thresholds.len(),
@@ -580,8 +632,8 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         );
     } else {
         println!(
-            "sweep: {} points ({} workers x {} policies x {} seeds), \
-             {} iters each, {jobs} jobs",
+            "sweep: {} points ({} workers x {} policies x {scen_note}\
+             {} seeds), {} iters each, {jobs} jobs",
             n,
             workers.len(),
             policies.len(),
@@ -697,6 +749,19 @@ fn cmd_trace(args: &Args, cfg: &Config) -> Result<()> {
             };
             let mut sim = ClusterSim::new(&cluster, cfg.train.seed)
                 .with_policy(policy.clone());
+            // churn recording: the plan rides in the trace meta so
+            // replay restores the exact membership history
+            let scenario = match args.get("scenario") {
+                Some(spec) => {
+                    let plan = FaultPlan::parse(spec)?;
+                    (!plan.is_empty()).then_some(plan)
+                }
+                None => cfg.scenario.clone(),
+            };
+            if let Some(plan) = &scenario {
+                plan.validate_for(cluster.workers)?;
+                sim = sim.with_fault_plan(plan.clone());
+            }
             sim.start_recording();
             let mut out = dropcompute::sim::StepOutcome::default();
             let mut t_sum = 0.0;
@@ -713,6 +778,9 @@ fn cmd_trace(args: &Args, cfg: &Config) -> Result<()> {
                 format!("N={} M={}", cluster.workers, cluster.accumulations),
             ]);
             t.row(vec!["policy".into(), policy.spec()]);
+            if let Some(plan) = &scenario {
+                t.row(vec!["scenario".into(), plan.spec()]);
+            }
             t.row(vec!["mean iter time".into(), f(t_sum / iters as f64, 3)]);
             t.print();
             println!("wrote {}", path.display());

@@ -92,6 +92,7 @@ pub fn to_prometheus(rec: &ObsRecorder) -> String {
         ("step_deadline", rec.drops.step_deadline),
         ("phase_checkpoint", rec.drops.phase_checkpoint),
         ("survivor_restart", rec.drops.survivor_restart),
+        ("worker_fault", rec.drops.worker_fault),
         ("comm_lost_microbatches", rec.drops.comm_lost_microbatches),
     ] {
         let _ =
@@ -250,12 +251,14 @@ pub fn to_json_snapshot(rec: &ObsRecorder) -> String {
         out,
         ",\"drops\":{{\"tau_events\":{},\"tau_microbatches\":{},\
          \"step_deadline\":{},\"phase_checkpoint\":{},\
-         \"survivor_restart\":{},\"comm_lost_microbatches\":{}}}",
+         \"survivor_restart\":{},\"worker_fault\":{},\
+         \"comm_lost_microbatches\":{}}}",
         rec.drops.tau_events,
         rec.drops.tau_microbatches,
         rec.drops.step_deadline,
         rec.drops.phase_checkpoint,
         rec.drops.survivor_restart,
+        rec.drops.worker_fault,
         rec.drops.comm_lost_microbatches,
     );
     let _ = write!(out, ",\"iter_time\":{}", json_hist(&rec.iter_time));

@@ -352,6 +352,92 @@ mod tests {
         }
     }
 
+    /// Deterministic pseudo-random shards spanning several decades,
+    /// with a sprinkle of rejected (negative) samples.
+    fn shard(seed: u64, n: usize) -> LogHistogram {
+        let mut rng = crate::rng::SplitMix64::new(seed);
+        let mut h = LogHistogram::new();
+        for k in 0..n {
+            let u = rng.next_u64();
+            let unit = (u >> 11) as f64 / (1u64 << 53) as f64;
+            let v = unit * 10f64.powi((u % 7) as i32 - 3);
+            h.record(if k % 41 == 40 { -v - 1.0 } else { v });
+        }
+        h
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let shards =
+            [shard(0xA11CE, 257), shard(0xB0B, 301), shard(0xCAFE, 129)];
+        let fold = |order: [usize; 3]| {
+            let mut m = LogHistogram::new();
+            for &i in &order {
+                m.merge(&shards[i]);
+            }
+            m
+        };
+        // ((a·b)·c) against every other association/permutation:
+        // counts, min/max, rejected and therefore percentiles must be
+        // exactly invariant (element-wise u64 adds commute); the f64
+        // sum may differ by addition order, but only within rounding
+        let want = fold([0, 1, 2]);
+        for order in
+            [[0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]]
+        {
+            let got = fold(order);
+            assert_eq!(got.counts, want.counts, "{order:?}");
+            assert_eq!(got.count(), want.count());
+            assert_eq!(got.rejected(), want.rejected());
+            assert_eq!(got.min().to_bits(), want.min().to_bits());
+            assert_eq!(got.max().to_bits(), want.max().to_bits());
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                assert_eq!(
+                    got.percentile(q).to_bits(),
+                    want.percentile(q).to_bits(),
+                    "{order:?} q={q}"
+                );
+            }
+            let rel = (got.sum() - want.sum()).abs() / want.sum().abs();
+            assert!(rel < 1e-12, "{order:?} sum off by {rel}");
+        }
+        // nested association: a·(b·c) == (a·b)·c element-wise
+        let mut bc = shards[1].clone();
+        bc.merge(&shards[2]);
+        let mut nested = shards[0].clone();
+        nested.merge(&bc);
+        assert_eq!(nested.counts, want.counts);
+        assert_eq!(nested.count(), want.count());
+        // merging an empty histogram is the identity on every exact
+        // field (min/max stay NaN-free, counts untouched)
+        let mut id = want.clone();
+        id.merge(&LogHistogram::new());
+        assert_eq!(id.counts, want.counts);
+        assert_eq!(id.min().to_bits(), want.min().to_bits());
+        assert_eq!(id.max().to_bits(), want.max().to_bits());
+        assert_eq!(id.sum().to_bits(), want.sum().to_bits());
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_rank() {
+        for seed in [1u64, 7, 42, 0xDEAD] {
+            let h = shard(seed, 513);
+            let mut prev = f64::NEG_INFINITY;
+            for k in 0..=100 {
+                let q = k as f64 / 100.0;
+                let p = h.percentile(q);
+                assert!(
+                    p >= prev,
+                    "seed {seed}: percentile({q}) = {p} < {prev}"
+                );
+                prev = p;
+            }
+            // the endpoints are the exact observed extrema
+            assert_eq!(h.percentile(0.0).to_bits(), h.min().to_bits());
+            assert_eq!(h.percentile(1.0).to_bits(), h.max().to_bits());
+        }
+    }
+
     #[test]
     fn merge_order_leaves_counts_invariant() {
         let mut a = LogHistogram::new();

@@ -46,6 +46,10 @@ pub enum DropCause {
     /// The worker survived the initial cut but was dropped in a
     /// recursive survivor-restart round at `checkpoint`.
     SurvivorRestart { checkpoint: usize },
+    /// The worker is dead this step under the installed
+    /// [`crate::sim::FaultPlan`] (failed and not yet rejoined): it
+    /// computed nothing and the collective ran over the survivors.
+    WorkerFault,
 }
 
 impl DropCause {
@@ -56,6 +60,7 @@ impl DropCause {
             DropCause::StepDeadline => "step_deadline",
             DropCause::PhaseCheckpoint { .. } => "phase_checkpoint",
             DropCause::SurvivorRestart { .. } => "survivor_restart",
+            DropCause::WorkerFault => "worker_fault",
         }
     }
 
@@ -142,5 +147,7 @@ mod tests {
         assert!(DropCause::StepDeadline.is_comm());
         assert!(DropCause::PhaseCheckpoint { checkpoint: 0 }.is_comm());
         assert!(DropCause::SurvivorRestart { checkpoint: 3 }.is_comm());
+        assert_eq!(DropCause::WorkerFault.label(), "worker_fault");
+        assert!(DropCause::WorkerFault.is_comm());
     }
 }

@@ -43,6 +43,9 @@ pub struct DropTotals {
     pub phase_checkpoint: u64,
     /// Worker-steps excluded in a recursive survivor-restart round.
     pub survivor_restart: u64,
+    /// Worker-steps lost to an injected fault (dead under the
+    /// installed [`crate::sim::FaultPlan`]).
+    pub worker_fault: u64,
     /// Micro-batches computed but lost to comm-side exclusion.
     pub comm_lost_microbatches: u64,
 }
@@ -50,7 +53,10 @@ pub struct DropTotals {
 impl DropTotals {
     /// Comm-side exclusion events (worker-steps), all causes.
     pub fn comm_events(&self) -> u64 {
-        self.step_deadline + self.phase_checkpoint + self.survivor_restart
+        self.step_deadline
+            + self.phase_checkpoint
+            + self.survivor_restart
+            + self.worker_fault
     }
 }
 
@@ -163,6 +169,7 @@ impl ObsRecorder {
         self.drops.step_deadline += other.drops.step_deadline;
         self.drops.phase_checkpoint += other.drops.phase_checkpoint;
         self.drops.survivor_restart += other.drops.survivor_restart;
+        self.drops.worker_fault += other.drops.worker_fault;
         self.drops.comm_lost_microbatches += other.drops.comm_lost_microbatches;
         self.scheduled_microbatches += other.scheduled_microbatches;
         self.completed_microbatches += other.completed_microbatches;
@@ -219,6 +226,7 @@ impl SimObserver for ObsRecorder {
                     DropCause::SurvivorRestart { .. } => {
                         self.drops.survivor_restart += 1
                     }
+                    DropCause::WorkerFault => self.drops.worker_fault += 1,
                     DropCause::Tau { .. } => unreachable!(),
                 }
                 self.workers[worker].dropped += 1;
@@ -323,6 +331,25 @@ mod tests {
         assert_eq!(r.arrival_offset.count(), 6);
         // Fastest worker's offset is exactly 0 → bucket 0 occupied.
         assert!(r.arrival_offset.bucket_count(0) >= 2);
+    }
+
+    #[test]
+    fn worker_fault_steps_keep_the_balance_invariant() {
+        let mut r = ObsRecorder::new(3);
+        // Worker 1 is dead this step: it computed nothing, so the
+        // fault exclusion must charge zero comm-lost micro-batches.
+        r.on_worker(0, 0.8, 4);
+        r.on_worker(1, 0.0, 0);
+        r.on_worker(2, 0.9, 4);
+        r.on_drop(1, DropCause::WorkerFault);
+        r.on_step(&outcome(&[0.8, 0.0, 0.9], &[4, 0, 4], 1.2));
+        assert_eq!(r.drops.worker_fault, 1);
+        assert_eq!(r.drops.comm_events(), 1);
+        assert_eq!(r.drops.comm_lost_microbatches, 0);
+        assert_eq!(r.workers[1].dropped, 1);
+        assert_eq!(r.scheduled_microbatches, 8);
+        assert_eq!(r.completed_microbatches, 8);
+        assert!(r.microbatches_balance());
     }
 
     #[test]

@@ -134,6 +134,19 @@ pub struct ClusterSim {
     alive_buf: Vec<usize>,
     /// Reusable rebased-offsets buffer for the recursive drop path.
     rebase_buf: Vec<f64>,
+    /// Installed fault plan (the scenario lab): scripted fail / rejoin /
+    /// slow / drift events varying live membership and per-worker
+    /// latency scale between steps. `None` keeps every step on the
+    /// exact pre-scenario code path.
+    fault: Option<super::fault::FaultPlan>,
+    /// Per-worker base latency scales captured at plan install time:
+    /// the plan's slow/drift multipliers compose on top of these.
+    fault_base_scale: Vec<f64>,
+    /// Reusable live-position -> global worker id map for faulted steps.
+    live_ids: Vec<usize>,
+    /// Reusable compacted live-arrival buffer for faulted steps (a dead
+    /// worker's 0.0 "arrival" must never reach collective timing).
+    live_arrivals: Vec<f64>,
     /// Root seed (stamped into recorded trace metadata).
     seed: u64,
     /// Active trace recording ([`Self::start_recording`]), if any.
@@ -222,6 +235,10 @@ impl ClusterSim {
             recursive_restart: true,
             alive_buf: Vec::new(),
             rebase_buf: Vec::new(),
+            fault: None,
+            fault_base_scale: Vec::new(),
+            live_ids: Vec::new(),
+            live_arrivals: Vec::new(),
             seed,
             writer: None,
             replay: None,
@@ -294,6 +311,64 @@ impl ClusterSim {
     pub fn with_single_restart(mut self) -> Self {
         self.recursive_restart = false;
         self
+    }
+
+    /// Install a [`super::fault::FaultPlan`] (the scenario lab). Dead
+    /// workers compute nothing, consume no random draws — per-worker
+    /// streams keep every survivor's draws bitwise those of an
+    /// undisturbed run — and take no seat in the collective, which
+    /// reduces over the live sub-cluster through the per-k
+    /// [`super::survivor::SurvivorScheduleCache`]; a rejoin restores
+    /// the full-membership fast path. Slow and drift events rescale
+    /// the worker's base latency per step through the same seam Fig 6's
+    /// static heterogeneity uses. An empty plan is a no-op install.
+    pub fn with_fault_plan(mut self, plan: super::fault::FaultPlan) -> Self {
+        self.fault_base_scale =
+            (0..self.workers).map(|n| self.model.worker_scale(n)).collect();
+        self.fault = if plan.is_empty() { None } else { Some(plan) };
+        self
+    }
+
+    /// The installed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&super::fault::FaultPlan> {
+        self.fault.as_ref()
+    }
+
+    /// Whether worker `n` is dead at `step_idx` under the installed
+    /// fault plan (always live without one).
+    #[inline]
+    fn worker_dead(&self, n: usize, step_idx: usize) -> bool {
+        match &self.fault {
+            Some(plan) => !plan.alive(n, step_idx as u64),
+            None => false,
+        }
+    }
+
+    /// Whether the installed fault plan kills anyone at `step_idx` —
+    /// the gate between [`Self::finish_into`] (full membership, the
+    /// exact pre-scenario path) and [`Self::finish_faulted`].
+    #[inline]
+    fn any_worker_dead(&self, step_idx: usize) -> bool {
+        match &self.fault {
+            Some(plan) => plan.any_dead(self.workers, step_idx as u64),
+            None => false,
+        }
+    }
+
+    /// Apply the plan's per-step latency scaling (slow windows, drift)
+    /// on top of the install-time base scales. An event scale of
+    /// exactly 1.0 writes back exactly the base scale, so inert steps
+    /// stay bitwise identical to an unscaled run; plans without
+    /// scaling events skip the loop entirely.
+    fn apply_fault_scaling(&mut self, step_idx: usize) {
+        let Some(plan) = &self.fault else { return };
+        if !plan.has_scaling() {
+            return;
+        }
+        for n in 0..self.workers {
+            let s = self.fault_base_scale[n] * plan.scale(n, step_idx as u64);
+            self.model.set_worker_scale(n, s);
+        }
     }
 
     /// Enable/disable the step-level bounded-wait (DropComm)
@@ -565,8 +640,8 @@ impl ClusterSim {
     fn recursive_survivor_time<O: SimObserver>(
         &mut self,
         out: &mut StepOutcome,
-        mut k: usize,
-        mut close: f64,
+        k: usize,
+        close: f64,
         obs: &mut O,
     ) -> f64 {
         // sub-scan position -> global worker id, from the level-0 mask
@@ -577,6 +652,39 @@ impl ClusterSim {
             }
         }
         debug_assert_eq!(self.alive_buf.len(), k);
+        self.recursive_restart_rounds(out, k, close, obs)
+    }
+
+    /// [`Self::recursive_survivor_time`] for a *faulted* step: the
+    /// level-0 drop mask is indexed by live position, so the survivor
+    /// map routes through `self.live_ids` instead of global worker ids.
+    fn recursive_survivor_time_mapped<O: SimObserver>(
+        &mut self,
+        out: &mut StepOutcome,
+        k: usize,
+        close: f64,
+        obs: &mut O,
+    ) -> f64 {
+        self.alive_buf.clear();
+        for (j, &d) in self.drop_mask.iter().enumerate() {
+            if !d {
+                self.alive_buf.push(self.live_ids[j]);
+            }
+        }
+        debug_assert_eq!(self.alive_buf.len(), k);
+        self.recursive_restart_rounds(out, k, close, obs)
+    }
+
+    /// The shared restart loop of both recursive drop paths:
+    /// `self.alive_buf` maps sub-scan positions to global worker ids,
+    /// `self.rebase_buf` holds the already-rebased remaining offsets.
+    fn recursive_restart_rounds<O: SimObserver>(
+        &mut self,
+        out: &mut StepOutcome,
+        mut k: usize,
+        mut close: f64,
+        obs: &mut O,
+    ) -> f64 {
         loop {
             let res = self.survivors.bounded_completion(
                 k,
@@ -618,6 +726,184 @@ impl ClusterSim {
                 }
             }
         }
+    }
+
+    /// [`Self::finish_into`] for a step where the installed fault plan
+    /// killed at least one worker. The dead seats are compacted out
+    /// *before* any collective timing — a dead worker's 0.0 "arrival"
+    /// would otherwise drag first-arrival cutoffs to zero — and the
+    /// installed policy's comm-side rules run over the live
+    /// sub-cluster: its k-member collective comes from the per-k
+    /// survivor cache (compiled path) or a freshly built k-schedule
+    /// (event-queue oracle), bitwise pair as everywhere else.
+    /// Degenerates are well-defined: zero live workers complete
+    /// instantly with the step's (zero) compute, one live worker
+    /// reduces as a 1-member collective.
+    fn finish_faulted<O: SimObserver>(
+        &mut self,
+        step_idx: usize,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) {
+        out.compute_time = if out.worker_compute.is_empty() {
+            0.0
+        } else {
+            out.worker_compute
+                .iter()
+                .cloned()
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        // compact the live seats: position -> global id, plus arrivals
+        self.live_ids.clear();
+        self.live_arrivals.clear();
+        if let Some(plan) = &self.fault {
+            for n in 0..self.workers {
+                if plan.alive(n, step_idx as u64) {
+                    self.live_ids.push(n);
+                    self.live_arrivals.push(out.worker_compute[n]);
+                }
+            }
+        }
+        if self.live_ids.is_empty() {
+            // every worker is dead: nothing to reduce, nothing computed
+            out.iter_time = out.compute_time;
+            obs.on_step(out);
+            return;
+        }
+        if !self.phase_cutoffs.is_empty() {
+            out.iter_time = self.per_phase_faulted_time(out, obs);
+            obs.on_step(out);
+            return;
+        }
+        out.iter_time = match self.comm_drop {
+            None => {
+                if self.use_compiled {
+                    self.survivors.completion_at(&self.live_arrivals)
+                } else {
+                    // the cached full-N schedule cannot time the live
+                    // sub-cluster; the oracle builds the k-schedule
+                    self.comm.completion_time_with(&self.live_arrivals, None)
+                }
+            }
+            Some(deadline) => {
+                // the DropComm membership rule over the live arrivals
+                let cutoff = crate::sim::comm::bounded_wait_cutoff(
+                    &self.live_arrivals,
+                    deadline,
+                );
+                if self.live_arrivals.iter().all(|&a| a <= cutoff) {
+                    if self.use_compiled {
+                        self.survivors.completion_at(&self.live_arrivals)
+                    } else {
+                        self.comm
+                            .completion_time_with(&self.live_arrivals, None)
+                    }
+                } else {
+                    let mut k = 0usize;
+                    for (j, &a) in self.live_arrivals.iter().enumerate() {
+                        if a > cutoff {
+                            out.completed[self.live_ids[j]] = 0;
+                            obs.on_drop(
+                                self.live_ids[j],
+                                DropCause::StepDeadline,
+                            );
+                        } else {
+                            k += 1;
+                        }
+                    }
+                    if self.use_compiled {
+                        self.survivors.completion(k, cutoff)
+                    } else {
+                        let (_, t) = self.comm.bounded_wait_completion(
+                            &self.live_arrivals,
+                            deadline,
+                        );
+                        t
+                    }
+                }
+            }
+        };
+        obs.on_step(out);
+    }
+
+    /// The per-phase-deadline collective over the live sub-cluster of a
+    /// faulted step — [`Self::per_phase_iter_time`] with the dead seats
+    /// compacted out. The compiled arm runs the k-live schedule from
+    /// the per-k survivor cache (the full-N compiled schedule cannot
+    /// time a sub-cluster); drop events map back to global worker ids
+    /// through `self.live_ids`.
+    fn per_phase_faulted_time<O: SimObserver>(
+        &mut self,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) -> f64 {
+        let k = self.live_ids.len();
+        if self.use_compiled {
+            let res = self.survivors.bounded_completion_at(
+                &self.live_arrivals,
+                &self.phase_cutoffs,
+                &mut self.drop_mask,
+            );
+            return match res {
+                PhaseBounded::Complete(t) => t,
+                PhaseBounded::Dropped { survivors, close, checkpoint } => {
+                    for j in 0..k {
+                        if self.drop_mask[j] {
+                            out.completed[self.live_ids[j]] = 0;
+                            obs.on_drop(
+                                self.live_ids[j],
+                                DropCause::PhaseCheckpoint { checkpoint },
+                            );
+                        }
+                    }
+                    if survivors == 0 {
+                        close.max(0.0)
+                    } else {
+                        self.rebase_buf.clear();
+                        self.rebase_buf
+                            .extend_from_slice(&self.phase_cutoffs);
+                        crate::policy::rebase_offsets_in_place(
+                            &mut self.rebase_buf,
+                            checkpoint,
+                        );
+                        if !self.recursive_restart
+                            || self.rebase_buf.is_empty()
+                        {
+                            self.survivors.completion(survivors, close)
+                        } else {
+                            self.recursive_survivor_time_mapped(
+                                out, survivors, close, obs,
+                            )
+                        }
+                    }
+                }
+            };
+        }
+        // event-queue reference / fixed-T^c arm over the live seats
+        let (mask, t) = if self.recursive_restart {
+            self.comm.per_phase_bounded_completion_recursive(
+                &self.live_arrivals,
+                &self.phase_cutoffs,
+                None,
+            )
+        } else {
+            self.comm.per_phase_bounded_completion(
+                &self.live_arrivals,
+                &self.phase_cutoffs,
+                None,
+            )
+        };
+        for (j, &alive) in mask.iter().enumerate() {
+            if !alive {
+                out.completed[self.live_ids[j]] = 0;
+                // the oracle reports a merged mask — coarse attribution
+                obs.on_drop(
+                    self.live_ids[j],
+                    DropCause::PhaseCheckpoint { checkpoint: 0 },
+                );
+            }
+        }
+        t
     }
 
     /// Simulate one step (or Local-SGD period, if the policy carries
@@ -714,6 +1000,7 @@ impl ClusterSim {
     ) {
         let step_idx = self.step_idx;
         self.step_idx += 1;
+        self.apply_fault_scaling(step_idx);
         out.worker_compute.clear();
         out.completed.clear();
         out.worker_compute.reserve(self.workers);
@@ -736,21 +1023,42 @@ impl ClusterSim {
             w.begin_step(TraceMode::Step, threshold == self.eff_tau);
         }
         for n in 0..self.workers {
+            if self.worker_dead(n, step_idx) {
+                // dead under the fault plan: no compute, no random
+                // draws (the worker's stream simply does not advance,
+                // so survivors' draws stay bitwise those of an
+                // undisturbed run), and no seat in the collective —
+                // finish_faulted compacts it out below
+                self.sample_buf.clear();
+                if let Some(w) = self.writer.as_mut() {
+                    w.push_worker(0.0, &self.sample_buf);
+                }
+                out.worker_compute.push(0.0);
+                out.completed.push(0);
+                obs.on_worker(n, 0.0, 0);
+                obs.on_drop(n, DropCause::WorkerFault);
+                continue;
+            }
             let straggle;
             if let Some(r) = &self.replay {
                 // replay: the recorded draws stand in for the latency
                 // model; the shared scan below then reproduces the
-                // recorded run's compute decisions bit for bit
+                // recorded run's compute decisions bit for bit (the
+                // recorded straggle already folds in any step-indexed
+                // burst/drift offset)
                 let rec = &r.steps[r.pos];
                 straggle = rec.straggle[n];
                 self.sample_buf.clear();
                 self.sample_buf.extend_from_slice(&rec.samples[n]);
             } else {
+                // the step-indexed burst/drift offset delays the step
+                // start like a straggler; exactly 0.0 for the classic
+                // noise families, so the sum is a bitwise no-op there
                 straggle = self.model.sample_straggler_at(
                     n,
                     step_idx,
                     &mut self.streams[n],
-                );
+                ) + self.model.step_offset(n, step_idx as u64);
                 match threshold {
                     None => {
                         self.model.fill_microbatches(
@@ -797,7 +1105,11 @@ impl ClusterSim {
         if let Some(r) = self.replay.as_mut() {
             r.pos += 1;
         }
-        self.finish_into(out, obs);
+        if self.any_worker_dead(step_idx) {
+            self.finish_faulted(step_idx, out, obs);
+        } else {
+            self.finish_into(out, obs);
+        }
         if let Some(w) = self.writer.as_mut() {
             w.push_outcome(out);
         }
@@ -849,6 +1161,7 @@ impl ClusterSim {
     ) {
         let step_idx = self.step_idx;
         self.step_idx += 1;
+        self.apply_fault_scaling(step_idx);
         out.worker_compute.clear();
         out.completed.clear();
         out.worker_compute.resize(self.workers, 0.0);
@@ -874,9 +1187,22 @@ impl ClusterSim {
             );
         }
         for n in 0..self.workers {
+            if self.worker_dead(n, step_idx) {
+                // dead under the fault plan: no local steps, no random
+                // draws, no seat in the sync collective (the resize
+                // above already zeroed this worker's outcome columns)
+                self.sample_buf.clear();
+                if let Some(w) = self.writer.as_mut() {
+                    w.push_worker(0.0, &self.sample_buf);
+                }
+                obs.on_worker(n, 0.0, 0);
+                obs.on_drop(n, DropCause::WorkerFault);
+                continue;
+            }
             if let Some(r) = &self.replay {
                 // replay: each recorded entry is one local step's total
-                // compute time (straggle folded in at record time)
+                // compute time (straggle and any step-indexed offset
+                // folded in at record time)
                 let rec = &r.steps[r.pos];
                 self.sample_buf.clear();
                 self.sample_buf.extend_from_slice(&rec.samples[n]);
@@ -891,16 +1217,26 @@ impl ClusterSim {
                     &mut self.sample_buf,
                     &mut self.streams[n],
                 );
+                // step-indexed burst/drift offset: delays every local
+                // step; the guard keeps classic families untouched
+                let off = self.model.step_offset(n, step_idx as u64);
+                if off != 0.0 {
+                    for s in self.sample_buf.iter_mut() {
+                        *s += off;
+                    }
+                }
             } else {
                 // straggle is a pure function of (worker, step): draw the
                 // whole period's micro-batches in one batched fill, then
                 // fold the constant straggle into each local step — the
-                // same `straggle + s` sum the tally always consumed
+                // same `straggle + s` sum the tally always consumed (the
+                // step-indexed burst/drift offset rides along, exactly
+                // 0.0 for the classic noise families)
                 let straggle = self.model.sample_straggler_at(
                     n,
                     step_idx,
                     &mut self.streams[n],
-                );
+                ) + self.model.step_offset(n, step_idx as u64);
                 self.model.fill_microbatches(
                     n,
                     h,
@@ -944,7 +1280,11 @@ impl ClusterSim {
         if let Some(r) = self.replay.as_mut() {
             r.pos += 1;
         }
-        self.finish_into(out, obs);
+        if self.any_worker_dead(step_idx) {
+            self.finish_faulted(step_idx, out, obs);
+        } else {
+            self.finish_into(out, obs);
+        }
         if let Some(w) = self.writer.as_mut() {
             w.push_outcome(out);
         }
@@ -978,6 +1318,7 @@ impl ClusterSim {
             policy: self.policy.spec(),
             comm: TraceComm::from_model(&self.comm),
             single_restart: !self.recursive_restart,
+            scenario: self.fault.as_ref().map(|p| p.spec()),
         }));
     }
 
@@ -1055,6 +1396,13 @@ impl ClusterSim {
             // restore the recorded run's restart semantics — bitwise
             // conformance requires replaying under the same rules
             sim = sim.with_single_restart();
+        }
+        if let Some(spec) = &trace.meta.scenario {
+            // churn traces replay under the recorded fault plan; the
+            // membership schedule is part of the timing semantics
+            let plan = super::fault::FaultPlan::parse(spec)?;
+            plan.validate_for(trace.meta.workers)?;
+            sim = sim.with_fault_plan(plan);
         }
         sim.with_replay(trace)
     }
@@ -1149,7 +1497,7 @@ impl ClusterSim {
                     n,
                     step_idx,
                     &mut self.streams[n],
-                );
+                ) + self.model.step_offset(n, step_idx as u64);
                 self.model.fill_microbatches(
                     n,
                     self.accums,
@@ -2059,5 +2407,287 @@ mod tests {
         let out = sim.local_sgd_period(20, Some(0.9));
         assert!(out.total_completed() < 4 * 20);
         assert!(out.total_completed() > 0);
+    }
+
+    // ---- the scenario lab: dynamic membership under fault plans ----
+
+    fn churn_config(workers: usize, accums: usize) -> ClusterConfig {
+        let mut c = config(workers, accums);
+        c.noise = NoiseKind::Exponential { mean: 0.4 };
+        c.link_latency = 1e-4;
+        c.link_bandwidth = 1e9;
+        c.grad_bytes = 4e6;
+        c
+    }
+
+    #[test]
+    fn churn_compiled_equals_oracle_on_every_topology_and_policy() {
+        // dynamic membership degrades the collective through the per-k
+        // survivor cache (compiled) or a fresh k-schedule (oracle);
+        // both timing paths must stay a bitwise pair through fails,
+        // rejoins, slowdowns, and drift, under every drop policy shape
+        let plan = crate::sim::FaultPlan::parse(
+            "fail@2:w3,rejoin+4;fail@5:w0,rejoin+2;slow@1:w1,x2.5,for6;\
+             drift@4:w2,+0.05",
+        )
+        .unwrap();
+        for kind in crate::topology::TopologyKind::ALL {
+            for spec in ["tau=3", "deadline=1", "phase-deadline=1.0/0.5"] {
+                let mut c = churn_config(6, 4);
+                c.topology = Some(kind);
+                let policy = DropPolicy::parse(spec).unwrap();
+                let mut fast = ClusterSim::new(&c, 99)
+                    .with_policy(policy.clone())
+                    .with_fault_plan(plan.clone());
+                let mut slow = ClusterSim::new(&c, 99)
+                    .with_policy(policy)
+                    .with_fault_plan(plan.clone())
+                    .with_reference_timing();
+                let mut faulted_steps = 0;
+                let mut out_f = StepOutcome::default();
+                let mut out_s = StepOutcome::default();
+                for step in 0..10 {
+                    fast.step_installed_into(&mut out_f);
+                    slow.step_installed_into(&mut out_s);
+                    assert_eq!(
+                        out_f.iter_time.to_bits(),
+                        out_s.iter_time.to_bits(),
+                        "{} policy={spec} step={step}",
+                        kind.name()
+                    );
+                    assert_eq!(out_f.completed, out_s.completed);
+                    assert!(out_f.iter_time.is_finite());
+                    if out_f.completed.iter().any(|&d| d == 0) {
+                        faulted_steps += 1;
+                    }
+                }
+                assert!(
+                    faulted_steps >= 4,
+                    "membership must actually vary: {faulted_steps}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn churn_zero_and_one_survivor_degenerates() {
+        // satellite guard: an all-dead step completes instantly with
+        // zero compute, a lone survivor reduces as a 1-member
+        // collective — finite, NaN-free, and balance-exact on both
+        // timing paths, with and without a comm deadline
+        for (spec, survivors) in [
+            ("fail@1:w0;fail@1:w1;fail@1:w2", 0usize),
+            ("fail@1:w0;fail@1:w1", 1usize),
+        ] {
+            let plan = crate::sim::FaultPlan::parse(spec).unwrap();
+            for reference in [false, true] {
+                for policy in ["none", "deadline=1", "phase-deadline=1.0"] {
+                    let mut c = churn_config(3, 4);
+                    c.topology =
+                        Some(crate::topology::TopologyKind::Ring);
+                    let mut sim = ClusterSim::new(&c, 7)
+                        .with_policy(DropPolicy::parse(policy).unwrap())
+                        .with_fault_plan(plan.clone());
+                    if reference {
+                        sim = sim.with_reference_timing();
+                    }
+                    let mut rec = crate::obs::ObsRecorder::new(3);
+                    let mut out = StepOutcome::default();
+                    for step in 0..3 {
+                        sim.step_installed_observed(&mut out, &mut rec);
+                        assert!(
+                            out.iter_time.is_finite(),
+                            "{spec} step={step}"
+                        );
+                        assert!(!out.drop_rate(4).is_nan());
+                        if step >= 1 {
+                            let live = out
+                                .completed
+                                .iter()
+                                .filter(|&&d| d > 0)
+                                .count();
+                            assert!(
+                                live <= survivors,
+                                "{spec}: {live} live, want <= {survivors}"
+                            );
+                            if survivors == 0 {
+                                assert_eq!(out.compute_time, 0.0);
+                                assert_eq!(out.iter_time, 0.0);
+                            }
+                        }
+                    }
+                    assert!(
+                        rec.microbatches_balance(),
+                        "{spec} policy={policy} reference={reference}"
+                    );
+                    assert!(rec.drops.worker_fault > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn churn_rejoin_restores_full_membership() {
+        // a failed worker that rejoins computes again with its RNG
+        // stream undisturbed: after the rejoin the run is bitwise the
+        // fault-free run again (dead steps consume no draws)
+        let plan =
+            crate::sim::FaultPlan::parse("fail@2:w1,rejoin+3").unwrap();
+        let c = churn_config(4, 3);
+        let mut churned =
+            ClusterSim::new(&c, 21).with_fault_plan(plan.clone());
+        let mut clean = ClusterSim::new(&c, 21);
+        for step in 0..8 {
+            let a = churned.step(None);
+            let b = clean.step(None);
+            if (2..5).contains(&step) {
+                assert_eq!(a.completed[1], 0, "dead at step {step}");
+                assert_eq!(a.worker_compute[1], 0.0);
+            } else {
+                assert_eq!(
+                    a.iter_time.to_bits(),
+                    b.iter_time.to_bits(),
+                    "step {step} must match the fault-free run"
+                );
+                assert_eq!(a.completed, b.completed);
+                assert_eq!(a.total_completed(), 4 * 3);
+            }
+        }
+    }
+
+    #[test]
+    fn churn_local_sgd_periods_pair_bitwise() {
+        // the Local-SGD period path routes through the same faulted
+        // finish: compiled and oracle stay a pair, dead seats idle
+        let plan = crate::sim::FaultPlan::parse(
+            "fail@1:w2,rejoin+2;slow@0:w0,x1.5",
+        )
+        .unwrap();
+        let mut c = churn_config(4, 1);
+        c.topology = Some(crate::topology::TopologyKind::Tree);
+        let policy = DropPolicy::parse("local-sgd=3+tau=2.0").unwrap();
+        let mut fast = ClusterSim::new(&c, 31)
+            .with_policy(policy.clone())
+            .with_fault_plan(plan.clone());
+        let mut slow = ClusterSim::new(&c, 31)
+            .with_policy(policy)
+            .with_fault_plan(plan)
+            .with_reference_timing();
+        let mut out_f = StepOutcome::default();
+        let mut out_s = StepOutcome::default();
+        for period in 0..5 {
+            fast.step_installed_into(&mut out_f);
+            slow.step_installed_into(&mut out_s);
+            assert_eq!(
+                out_f.iter_time.to_bits(),
+                out_s.iter_time.to_bits(),
+                "period {period}"
+            );
+            assert_eq!(out_f.completed, out_s.completed);
+        }
+    }
+
+    #[test]
+    fn churn_record_replay_reproduces_outcomes_bitwise() {
+        // a recorded churn run carries its scenario in the trace meta;
+        // from_trace reinstalls the plan so the replay reproduces the
+        // membership history — and every outcome — bit for bit on both
+        // timing paths, through the JSON round trip
+        let plan = crate::sim::FaultPlan::parse(
+            "fail@2:w1,rejoin+2;slow@1:w0,x2.0,for3",
+        )
+        .unwrap();
+        let mut c = churn_config(4, 3);
+        c.topology = Some(crate::topology::TopologyKind::Ring);
+        let policy = DropPolicy::parse("tau=2.5+deadline=1").unwrap();
+        let mut live = ClusterSim::new(&c, 0xC4A0)
+            .with_policy(policy)
+            .with_fault_plan(plan.clone());
+        live.start_recording();
+        let mut out = StepOutcome::default();
+        for _ in 0..6 {
+            live.step_installed_into(&mut out);
+        }
+        let trace = live.finish_recording().unwrap();
+        assert_eq!(trace.meta.scenario.as_deref(), Some(plan.spec().as_str()));
+        let parsed =
+            crate::sim::TraceRecord::parse(&trace.to_json()).unwrap();
+        assert_eq!(parsed.meta.scenario, trace.meta.scenario);
+        for reference in [false, true] {
+            let mut replay = ClusterSim::from_trace(&parsed).unwrap();
+            assert_eq!(
+                replay.fault_plan().map(super::super::fault::FaultPlan::spec),
+                Some(plan.spec()),
+                "from_trace reinstalls the scenario"
+            );
+            if reference {
+                replay = replay.with_reference_timing();
+            }
+            for (i, rec) in parsed.outcomes.iter().enumerate() {
+                let mut out = StepOutcome::default();
+                replay.replay_into(&mut out).unwrap();
+                assert!(
+                    rec.matches(&out),
+                    "churn replay step {i} reference={reference}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn churn_empty_plan_is_inert_and_accessor_reports() {
+        // installing the empty plan is a no-op (bitwise the plain run);
+        // a real plan is reported back by the accessor
+        let c = churn_config(3, 2);
+        let mut plain = ClusterSim::new(&c, 5);
+        let mut noop = ClusterSim::new(&c, 5)
+            .with_fault_plan(crate::sim::FaultPlan::default());
+        assert!(noop.fault_plan().is_none());
+        for _ in 0..4 {
+            let a = plain.step(None);
+            let b = noop.step(None);
+            assert_eq!(a.iter_time.to_bits(), b.iter_time.to_bits());
+        }
+        let plan = crate::sim::FaultPlan::parse("fail@1:w0").unwrap();
+        let sim = ClusterSim::new(&c, 5).with_fault_plan(plan.clone());
+        assert_eq!(sim.fault_plan(), Some(&plan));
+    }
+
+    #[test]
+    fn churn_step_indexed_noise_is_reproducible() {
+        // SharedBurst / Drift are pure functions of (worker, step):
+        // two sims with the same seed agree to the bit, and the burst
+        // actually perturbs the timeline relative to quiet noise
+        for noise in [
+            // seed 4's burst clock fires in windows 0 and 2, so the
+            // 6-step horizon is guaranteed to see a burst
+            NoiseKind::SharedBurst {
+                p: 0.5,
+                period: 2,
+                delay: 3.0,
+                subset: 3,
+                seed: 4,
+            },
+            NoiseKind::Drift { sigma: 0.2, seed: 9 },
+        ] {
+            let mut c = config(4, 3);
+            c.noise = noise.clone();
+            let mut a = ClusterSim::new(&c, 17);
+            let mut b = ClusterSim::new(&c, 17);
+            let mut quiet_cfg = config(4, 3);
+            quiet_cfg.noise = NoiseKind::None;
+            let mut quiet = ClusterSim::new(&quiet_cfg, 17);
+            let mut diverged = false;
+            for _ in 0..6 {
+                let x = a.step(None);
+                let y = b.step(None);
+                let q = quiet.step(None);
+                assert_eq!(x.iter_time.to_bits(), y.iter_time.to_bits());
+                if x.iter_time.to_bits() != q.iter_time.to_bits() {
+                    diverged = true;
+                }
+            }
+            assert!(diverged, "{noise:?} must perturb the timeline");
+        }
     }
 }

@@ -1,0 +1,577 @@
+//! [`FaultPlan`] — deterministic fault injection for the scenario lab.
+//!
+//! A plan is a scripted list of membership / speed events, each pinned
+//! to a virtual step index:
+//!
+//! * **fail** — the worker leaves the cluster at step `s`, either
+//!   permanently or rejoining `r` steps later;
+//! * **slow** — a transient (or permanent) multiplicative slowdown
+//!   window starting at step `s`;
+//! * **drift** — a permanent slow-drift: the worker's latency scale
+//!   grows linearly from step `s` on (the scripted stand-in for a
+//!   per-worker mean that walks away from the fleet).
+//!
+//! Plans are *pure functions of `(worker, step)`*: [`FaultPlan::alive`]
+//! and [`FaultPlan::scale`] consult only the event list, so the same
+//! seed + the same plan reproduce the same run bit for bit on both
+//! timing paths, and replay needs nothing beyond the plan itself
+//! (carried in the v2 [`crate::sim::TraceRecord`] meta).
+//!
+//! Plans round-trip through a spec-string grammar shared by the CLI
+//! (`--scenario`), the `[scenario]` config section, the sweep axis and
+//! the trace meta:
+//!
+//! ```text
+//! spec   := "none" | clause (';' clause)*
+//! clause := "fail@" step ":w" worker ["," "rejoin+" steps]
+//!         | "slow@" step ":w" worker ",x" factor ["," "for" steps]
+//!         | "drift@" step ":w" worker ",+" rate
+//! ```
+//!
+//! e.g. `fail@100:w3,rejoin+50`, `slow@20:w1,x2.5,for30`,
+//! `drift@0:w2,+0.05`, or several joined with `;`. The separator is
+//! `;` (not the policy grammar's `+`) because clauses themselves
+//! contain `+`.
+
+use crate::rng::SplitMix64;
+use crate::util::{Error, Result};
+
+/// One scripted fault event (see the module docs for the grammar).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// Worker `worker` fails at `step`; with `rejoin = Some(r)` it is
+    /// live again from `step + r` on, with `None` it never returns.
+    Fail { step: u64, worker: usize, rejoin: Option<u64> },
+    /// Worker `worker`'s per-micro-batch latency is multiplied by
+    /// `factor` from `step` on; `duration = Some(d)` limits the window
+    /// to steps `[step, step + d)`, `None` makes it permanent.
+    Slow { step: u64, worker: usize, factor: f64, duration: Option<u64> },
+    /// Permanent slow-drift: from `step` on the worker's latency scale
+    /// is multiplied by `1 + rate * (current_step - step)`.
+    Drift { step: u64, worker: usize, rate: f64 },
+}
+
+impl FaultEvent {
+    /// The worker this event targets.
+    pub fn worker(&self) -> usize {
+        match self {
+            FaultEvent::Fail { worker, .. }
+            | FaultEvent::Slow { worker, .. }
+            | FaultEvent::Drift { worker, .. } => *worker,
+        }
+    }
+
+    /// The step this event activates at.
+    pub fn step(&self) -> u64 {
+        match self {
+            FaultEvent::Fail { step, .. }
+            | FaultEvent::Slow { step, .. }
+            | FaultEvent::Drift { step, .. } => *step,
+        }
+    }
+
+    fn spec(&self) -> String {
+        match self {
+            FaultEvent::Fail { step, worker, rejoin } => match rejoin {
+                Some(r) => format!("fail@{step}:w{worker},rejoin+{r}"),
+                None => format!("fail@{step}:w{worker}"),
+            },
+            FaultEvent::Slow { step, worker, factor, duration } => {
+                match duration {
+                    Some(d) => {
+                        format!("slow@{step}:w{worker},x{factor},for{d}")
+                    }
+                    None => format!("slow@{step}:w{worker},x{factor}"),
+                }
+            }
+            FaultEvent::Drift { step, worker, rate } => {
+                format!("drift@{step}:w{worker},+{rate}")
+            }
+        }
+    }
+}
+
+/// A deterministic fault-injection plan: a validated list of
+/// [`FaultEvent`]s. The empty plan (`FaultPlan::default()`, spec
+/// `none`) injects nothing and leaves every consumer on its exact
+/// pre-scenario code path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build from an explicit event list. Validates.
+    pub fn new(events: Vec<FaultEvent>) -> Result<Self> {
+        let plan = FaultPlan { events };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// The scripted events, in spec order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// No events at all?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Is worker `worker` live at `step`? A worker inside a fail
+    /// interval (`[s, s + r)`, or `[s, inf)` when permanent) is dead:
+    /// it draws nothing, computes nothing, and is excluded from the
+    /// collective. Workers the plan never mentions are always live, so
+    /// a plan written for a big cluster is inert on a small one.
+    pub fn alive(&self, worker: usize, step: u64) -> bool {
+        for e in &self.events {
+            if let FaultEvent::Fail { step: s, worker: w, rejoin } = e {
+                if *w == worker && step >= *s {
+                    match rejoin {
+                        None => return false,
+                        Some(r) => {
+                            if step < s.saturating_add(*r) {
+                                return false;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// The latency scale multiplier for worker `worker` at `step`: the
+    /// product of every active slow window's factor and every active
+    /// drift's `1 + rate * (step - start)`. Exactly `1.0` when nothing
+    /// is active (multiplying a draw by `1.0` is a bitwise no-op, so
+    /// inert plans perturb nothing).
+    pub fn scale(&self, worker: usize, step: u64) -> f64 {
+        let mut scale = 1.0f64;
+        for e in &self.events {
+            match e {
+                FaultEvent::Slow { step: s, worker: w, factor, duration }
+                    if *w == worker && step >= *s =>
+                {
+                    let active = match duration {
+                        None => true,
+                        Some(d) => step < s.saturating_add(*d),
+                    };
+                    if active {
+                        scale *= factor;
+                    }
+                }
+                FaultEvent::Drift { step: s, worker: w, rate }
+                    if *w == worker && step >= *s =>
+                {
+                    scale *= 1.0 + rate * (step - s) as f64;
+                }
+                _ => {}
+            }
+        }
+        scale
+    }
+
+    /// Does any event rescale latency (vs pure membership churn)?
+    pub fn has_scaling(&self) -> bool {
+        self.events.iter().any(|e| {
+            matches!(e, FaultEvent::Slow { .. } | FaultEvent::Drift { .. })
+        })
+    }
+
+    /// Any of the first `workers` workers dead at `step`?
+    pub fn any_dead(&self, workers: usize, step: u64) -> bool {
+        (0..workers).any(|n| !self.alive(n, step))
+    }
+
+    /// Live workers among the first `workers` at `step`.
+    pub fn live_count(&self, workers: usize, step: u64) -> usize {
+        (0..workers).filter(|&n| self.alive(n, step)).count()
+    }
+
+    /// The largest worker id any event targets.
+    pub fn max_worker(&self) -> Option<usize> {
+        self.events.iter().map(FaultEvent::worker).max()
+    }
+
+    /// Structural validation (grammar-level; worker-range checks need a
+    /// cluster size — see [`Self::validate_for`]): rejoin/for spans
+    /// must be >= 1 step, slow factors finite and > 0, drift rates
+    /// finite and >= 0, per-worker fail intervals and slow windows must
+    /// not overlap, and at most one drift per worker.
+    pub fn validate(&self) -> Result<()> {
+        for e in &self.events {
+            match e {
+                FaultEvent::Fail { rejoin: Some(0), .. } => {
+                    return Err(Error::Config(format!(
+                        "scenario: `{}`: rejoin span must be >= 1 step \
+                         (a rejoin cannot precede its fail)",
+                        e.spec()
+                    )));
+                }
+                FaultEvent::Slow { factor, duration, .. } => {
+                    if !(factor.is_finite() && *factor > 0.0) {
+                        return Err(Error::Config(format!(
+                            "scenario: `{}`: slow factor must be finite \
+                             and > 0",
+                            e.spec()
+                        )));
+                    }
+                    if *duration == Some(0) {
+                        return Err(Error::Config(format!(
+                            "scenario: `{}`: slow window must be >= 1 step",
+                            e.spec()
+                        )));
+                    }
+                }
+                FaultEvent::Drift { rate, .. } => {
+                    if !(rate.is_finite() && *rate >= 0.0) {
+                        return Err(Error::Config(format!(
+                            "scenario: `{}`: drift rate must be finite \
+                             and >= 0",
+                            e.spec()
+                        )));
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Per-worker interval overlap checks. Intervals are
+        // `[start, end)` with `end = None` meaning unbounded.
+        let overlaps = |a: (u64, Option<u64>), b: (u64, Option<u64>)| {
+            let a_before_b = a.1.is_some_and(|end| end <= b.0);
+            let b_before_a = b.1.is_some_and(|end| end <= a.0);
+            !(a_before_b || b_before_a)
+        };
+        let span = |start: u64, len: Option<u64>| {
+            (start, len.map(|l| start.saturating_add(l)))
+        };
+        for (i, a) in self.events.iter().enumerate() {
+            for b in &self.events[i + 1..] {
+                if a.worker() != b.worker() {
+                    continue;
+                }
+                let clash = match (a, b) {
+                    (
+                        FaultEvent::Fail { step: s1, rejoin: r1, .. },
+                        FaultEvent::Fail { step: s2, rejoin: r2, .. },
+                    ) => overlaps(span(*s1, *r1), span(*s2, *r2)),
+                    (
+                        FaultEvent::Slow { step: s1, duration: d1, .. },
+                        FaultEvent::Slow { step: s2, duration: d2, .. },
+                    ) => overlaps(span(*s1, *d1), span(*s2, *d2)),
+                    (
+                        FaultEvent::Drift { .. },
+                        FaultEvent::Drift { .. },
+                    ) => true,
+                    _ => false,
+                };
+                if clash {
+                    return Err(Error::Config(format!(
+                        "scenario: `{}` overlaps `{}` on worker {}",
+                        a.spec(),
+                        b.spec(),
+                        a.worker()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate against a concrete cluster size: every targeted worker
+    /// id must be `< workers`. The single-run CLI/config boundary calls
+    /// this; the sweep's worker axis deliberately does not (events
+    /// beyond the current point's cluster are inert, see
+    /// [`Self::alive`]).
+    pub fn validate_for(&self, workers: usize) -> Result<()> {
+        if let Some(w) = self.max_worker() {
+            if w >= workers {
+                return Err(Error::Config(format!(
+                    "scenario: worker id w{w} out of range for a \
+                     {workers}-worker cluster"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a spec string (see the module-docs grammar). Validates.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(Error::Config("scenario: empty spec".into()));
+        }
+        if spec.eq_ignore_ascii_case("none") {
+            return Ok(FaultPlan::default());
+        }
+        let mut events = Vec::new();
+        for clause in spec.split(';') {
+            events.push(Self::parse_clause(clause.trim())?);
+        }
+        Self::new(events)
+    }
+
+    fn parse_clause(clause: &str) -> Result<FaultEvent> {
+        let bad = |why: &str| {
+            Error::Config(format!(
+                "scenario: bad clause `{clause}`: {why} (want \
+                 fail@S:wN[,rejoin+R], slow@S:wN,xF[,forD] or \
+                 drift@S:wN,+R)"
+            ))
+        };
+        let (kind, rest) =
+            clause.split_once('@').ok_or_else(|| bad("missing `@`"))?;
+        let (step_str, tail) =
+            rest.split_once(':').ok_or_else(|| bad("missing `:`"))?;
+        let step: u64 = step_str
+            .trim()
+            .parse()
+            .map_err(|_| bad(&format!("bad step `{step_str}`")))?;
+        let mut parts = tail.split(',').map(str::trim);
+        let wtok = parts.next().unwrap_or("");
+        let worker: usize = wtok
+            .strip_prefix('w')
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad(&format!("bad worker `{wtok}` (want wN)")))?;
+        let event = match kind.trim() {
+            "fail" => {
+                let rejoin = match parts.next() {
+                    None => None,
+                    Some(tok) => {
+                        let r: u64 = tok
+                            .strip_prefix("rejoin+")
+                            .and_then(|s| s.parse().ok())
+                            .ok_or_else(|| {
+                                bad(&format!(
+                                    "bad rejoin `{tok}` (want rejoin+R)"
+                                ))
+                            })?;
+                        Some(r)
+                    }
+                };
+                FaultEvent::Fail { step, worker, rejoin }
+            }
+            "slow" => {
+                let ftok = parts.next().ok_or_else(|| bad("missing xF"))?;
+                let factor: f64 = ftok
+                    .strip_prefix('x')
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| {
+                        bad(&format!("bad factor `{ftok}` (want xF)"))
+                    })?;
+                let duration = match parts.next() {
+                    None => None,
+                    Some(tok) => {
+                        let d: u64 = tok
+                            .strip_prefix("for")
+                            .and_then(|s| s.parse().ok())
+                            .ok_or_else(|| {
+                                bad(&format!("bad window `{tok}` (want forD)"))
+                            })?;
+                        Some(d)
+                    }
+                };
+                FaultEvent::Slow { step, worker, factor, duration }
+            }
+            "drift" => {
+                let rtok = parts.next().ok_or_else(|| bad("missing +R"))?;
+                let rate: f64 = rtok
+                    .strip_prefix('+')
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| {
+                        bad(&format!("bad rate `{rtok}` (want +R)"))
+                    })?;
+                FaultEvent::Drift { step, worker, rate }
+            }
+            other => return Err(bad(&format!("unknown kind `{other}`"))),
+        };
+        if let Some(extra) = parts.next() {
+            return Err(bad(&format!("trailing `{extra}`")));
+        }
+        Ok(event)
+    }
+
+    /// Render back to the spec-string grammar (round-trips through
+    /// [`Self::parse`]; carried in trace metas and sweep JSON).
+    pub fn spec(&self) -> String {
+        if self.events.is_empty() {
+            return "none".into();
+        }
+        let parts: Vec<String> =
+            self.events.iter().map(FaultEvent::spec).collect();
+        parts.join(";")
+    }
+
+    /// A seeded scripted plan over `workers` workers and `horizon`
+    /// steps: each worker independently draws at most one role (fail +
+    /// rejoin, transient slow window, or drift) from a SplitMix64
+    /// stream, so the event list is deterministic in `seed` and never
+    /// self-overlaps. `spec()` of the result round-trips like any
+    /// scripted plan.
+    pub fn seeded(seed: u64, workers: usize, horizon: u64) -> Self {
+        const SEED_DOMAIN: u64 = 0xFA17_7FA7_5EED_0001;
+        let mut rng = SplitMix64::new(seed ^ SEED_DOMAIN);
+        let horizon = horizon.max(1);
+        let mut events = Vec::new();
+        for worker in 0..workers {
+            let roll = rng.next_u64() % 8;
+            let step = rng.next_u64() % horizon;
+            let span = 1 + rng.next_u64() % horizon.div_ceil(4).max(1);
+            match roll {
+                // 2/8 fail + rejoin, 1/8 transient slow, 1/8 drift.
+                0 | 1 => events.push(FaultEvent::Fail {
+                    step,
+                    worker,
+                    rejoin: Some(span),
+                }),
+                2 => events.push(FaultEvent::Slow {
+                    step,
+                    worker,
+                    factor: 1.5 + (rng.next_u64() % 256) as f64 / 128.0,
+                    duration: Some(span),
+                }),
+                3 => events.push(FaultEvent::Drift {
+                    step,
+                    worker,
+                    rate: (1 + rng.next_u64() % 64) as f64 / 1024.0,
+                }),
+                _ => {}
+            }
+        }
+        let plan = FaultPlan { events };
+        debug_assert!(plan.validate().is_ok());
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_clause_shape() {
+        for spec in [
+            "none",
+            "fail@100:w3",
+            "fail@100:w3,rejoin+50",
+            "slow@20:w1,x2.5",
+            "slow@20:w1,x2.5,for30",
+            "drift@0:w2,+0.05",
+            "fail@100:w3,rejoin+50;slow@20:w1,x2.5,for30;drift@0:w2,+0.05",
+            "fail@10:w0,rejoin+5;fail@40:w0,rejoin+5",
+        ] {
+            let p = FaultPlan::parse(spec).expect(spec);
+            assert_eq!(p.spec(), spec, "spec round trip");
+            let again = FaultPlan::parse(&p.spec()).expect(spec);
+            assert_eq!(p, again, "{spec}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_typed_errors() {
+        for spec in [
+            "",
+            "fail",
+            "fail@",
+            "fail@abc:w1",
+            "fail@3",
+            "fail@3:x1",
+            "fail@3:w",
+            "fail@3:w-1",
+            "fail@3:w1,rejoin+0",
+            "fail@3:w1,rejoin-2",
+            "fail@3:w1,rejoin+2,extra",
+            "slow@3:w1",
+            "slow@3:w1,x0",
+            "slow@3:w1,x-2",
+            "slow@3:w1,xNaN",
+            "slow@3:w1,x2,for0",
+            "slow@3:w1,x2,four5",
+            "drift@3:w1",
+            "drift@3:w1,+-1",
+            "drift@3:w1,+inf",
+            "wat@3:w1",
+            "fail@3:w1;;fail@9:w2",
+            // duplicate / overlapping events on one worker
+            "fail@3:w1;fail@3:w1",
+            "fail@3:w1,rejoin+10;fail@8:w1,rejoin+2",
+            "fail@3:w1;fail@900:w1",
+            "slow@3:w1,x2;slow@4:w1,x3",
+            "drift@3:w1,+0.1;drift@9:w1,+0.2",
+        ] {
+            let err = FaultPlan::parse(spec);
+            assert!(err.is_err(), "{spec:?} should be rejected");
+            let msg = format!("{}", err.unwrap_err());
+            assert!(msg.contains("scenario"), "typed error for {spec:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn disjoint_events_on_one_worker_are_fine() {
+        for spec in [
+            "fail@3:w1,rejoin+2;fail@5:w1,rejoin+2",
+            "slow@0:w1,x2,for10;slow@10:w1,x3",
+            "fail@3:w1,rejoin+2;slow@3:w1,x2",
+        ] {
+            FaultPlan::parse(spec).expect(spec);
+        }
+    }
+
+    #[test]
+    fn alive_tracks_fail_and_rejoin_windows() {
+        let p = FaultPlan::parse("fail@10:w1,rejoin+5;fail@20:w2").unwrap();
+        assert!(p.alive(1, 9));
+        assert!(!p.alive(1, 10));
+        assert!(!p.alive(1, 14));
+        assert!(p.alive(1, 15));
+        assert!(p.alive(2, 19));
+        assert!(!p.alive(2, 20));
+        assert!(!p.alive(2, 1_000_000));
+        // untouched / out-of-plan workers are always live
+        assert!(p.alive(0, 12));
+        assert!(p.alive(7, 12));
+        assert!(p.any_dead(3, 12));
+        assert!(!p.any_dead(3, 9));
+        assert_eq!(p.live_count(3, 12), 2);
+        assert_eq!(p.live_count(3, 25), 2);
+    }
+
+    #[test]
+    fn scale_composes_slow_windows_and_drift() {
+        let p =
+            FaultPlan::parse("slow@10:w0,x2,for5;drift@20:w0,+0.5").unwrap();
+        assert_eq!(p.scale(0, 9), 1.0);
+        assert_eq!(p.scale(0, 10), 2.0);
+        assert_eq!(p.scale(0, 14), 2.0);
+        assert_eq!(p.scale(0, 15), 1.0);
+        assert_eq!(p.scale(0, 20), 1.0);
+        assert_eq!(p.scale(0, 22), 2.0);
+        // another worker is untouched — exactly 1.0
+        assert_eq!(p.scale(1, 22).to_bits(), 1.0f64.to_bits());
+        assert!(p.has_scaling());
+        assert!(!FaultPlan::parse("fail@1:w0").unwrap().has_scaling());
+    }
+
+    #[test]
+    fn validate_for_rejects_out_of_range_workers() {
+        let p = FaultPlan::parse("fail@1:w7").unwrap();
+        assert!(p.validate_for(8).is_ok());
+        let err = p.validate_for(4).unwrap_err();
+        assert!(format!("{err}").contains("out of range"));
+        assert!(FaultPlan::default().validate_for(0).is_ok());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_valid() {
+        let a = FaultPlan::seeded(42, 16, 200);
+        let b = FaultPlan::seeded(42, 16, 200);
+        assert_eq!(a, b);
+        assert!(a.validate().is_ok());
+        assert!(!a.is_empty(), "16 workers should draw some events");
+        assert_ne!(a, FaultPlan::seeded(43, 16, 200));
+        // spec round-trips like any scripted plan
+        assert_eq!(FaultPlan::parse(&a.spec()).unwrap(), a);
+        assert!(a.max_worker().unwrap() < 16);
+    }
+}

@@ -14,6 +14,9 @@
 //! * [`survivor`] — per-survivor-count compiled schedules for the
 //!   DropComm exclusion branch ([`SurvivorScheduleCache`]), making
 //!   drop-heavy stepping as cheap as the no-drop path;
+//! * [`fault`] — the scenario lab's deterministic fault injection
+//!   ([`FaultPlan`]): scripted fail/rejoin/slow/drift events that vary
+//!   live membership and per-worker latency scale between steps;
 //! * [`cluster`] — synchronous / DropCompute / DropComm / Local-SGD
 //!   step timing, driven by the unified [`crate::policy::DropPolicy`]
 //!   surface ([`ClusterSim::step_with`]);
@@ -29,11 +32,13 @@ pub mod cluster;
 pub mod comm;
 pub mod compiled;
 pub mod event;
+pub mod fault;
 pub mod noise;
 pub mod survivor;
 pub mod trace;
 
 pub use cluster::{ClusterSim, PreemptionMode, StepOutcome};
+pub use fault::{FaultEvent, FaultPlan};
 pub use comm::{
     bounded_wait_cutoff, bounded_wait_survivors, schedule_completion, CommModel,
 };

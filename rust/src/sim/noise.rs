@@ -16,7 +16,7 @@
 use crate::config::{ClusterConfig, NoiseKind, StragglerKind};
 use crate::rng::{
     Bernoulli, BoundedLogNormal, Distribution, Exponential, Gamma, LogNormal,
-    Normal, Xoshiro256pp,
+    Normal, SplitMix64, Xoshiro256pp,
 };
 
 /// Build the additive-noise sampler for a config (None = no noise).
@@ -45,6 +45,10 @@ pub fn build_noise(kind: &NoiseKind) -> Option<Box<dyn Distribution>> {
         NoiseKind::Gamma { mean, var } => {
             Some(Box::new(Gamma::from_moments(*mean, *var)))
         }
+        // the step-indexed scenario families draw nothing per
+        // micro-batch — their whole effect is the deterministic
+        // [`NoiseSampler::step_offset`]
+        NoiseKind::SharedBurst { .. } | NoiseKind::Drift { .. } => None,
     }
 }
 
@@ -68,6 +72,20 @@ pub enum NoiseSampler {
     Bernoulli(Bernoulli),
     Exponential(Exponential),
     Gamma(Gamma),
+    /// Correlated shared-burst straggler process (the scenario lab):
+    /// one seeded burst clock divides time into windows of `period`
+    /// steps; a window bursts with probability `p`, and during a burst
+    /// every worker with id `< subset` pays `delay` extra seconds at
+    /// its step start. Step-indexed — the effect is surfaced through
+    /// [`NoiseSampler::step_offset`], never per-draw sampling, so
+    /// per-worker streams are untouched.
+    SharedBurst { seed: u64, p: f64, period: u64, delay: f64, subset: usize },
+    /// Per-worker mean drift (the scenario lab): each worker's step
+    /// offset random-walks across steps with increments uniform in
+    /// `[-sigma, sigma]`, clamped at 0 (a worker can drift back to
+    /// nominal but never run ahead of it). Step-indexed like
+    /// [`NoiseSampler::SharedBurst`].
+    Drift { seed: u64, sigma: f64 },
 }
 
 impl NoiseSampler {
@@ -94,12 +112,51 @@ impl NoiseSampler {
             NoiseKind::Gamma { mean, var } => {
                 NoiseSampler::Gamma(Gamma::from_moments(*mean, *var))
             }
+            NoiseKind::SharedBurst { p, period, delay, subset, seed } => {
+                NoiseSampler::SharedBurst {
+                    seed: *seed,
+                    p: *p,
+                    period: *period,
+                    delay: *delay,
+                    subset: *subset,
+                }
+            }
+            NoiseKind::Drift { sigma, seed } => {
+                NoiseSampler::Drift { seed: *seed, sigma: *sigma }
+            }
         }
     }
 
+    /// Whether this kind contributes no *per-draw* noise. True for the
+    /// step-indexed scenario families too: their whole effect is
+    /// [`Self::step_offset`], so the micro-batch draw paths treat them
+    /// exactly like `None`.
     #[inline]
     pub fn is_none(&self) -> bool {
-        matches!(self, NoiseSampler::None)
+        matches!(
+            self,
+            NoiseSampler::None
+                | NoiseSampler::SharedBurst { .. }
+                | NoiseSampler::Drift { .. }
+        )
+    }
+
+    /// Deterministic step-indexed latency offset (0.0 for every
+    /// per-draw family). A pure function of `(worker, step)`: the burst
+    /// clock and the drift walks are reseeded from their own seeds on
+    /// every call, consuming nothing from any worker stream, so replay,
+    /// parallel sweeps and the event-queue oracle all see identical
+    /// bits with no shared mutable state.
+    pub fn step_offset(&self, worker: usize, step: u64) -> f64 {
+        match *self {
+            NoiseSampler::SharedBurst { seed, p, period, delay, subset } => {
+                shared_burst_offset(seed, p, period, delay, subset, worker, step)
+            }
+            NoiseSampler::Drift { seed, sigma } => {
+                drift_offset(seed, sigma, worker, step)
+            }
+            _ => 0.0,
+        }
     }
 
     /// Draw one sample (0.0 for `None`). Same stream position per draw
@@ -114,6 +171,7 @@ impl NoiseSampler {
             NoiseSampler::Bernoulli(d) => d.sample(rng),
             NoiseSampler::Exponential(d) => d.sample(rng),
             NoiseSampler::Gamma(d) => d.sample(rng),
+            NoiseSampler::SharedBurst { .. } | NoiseSampler::Drift { .. } => 0.0,
         }
     }
 
@@ -130,6 +188,9 @@ impl NoiseSampler {
             NoiseSampler::Bernoulli(d) => fill_slice(d, buf, rng),
             NoiseSampler::Exponential(d) => fill_slice(d, buf, rng),
             NoiseSampler::Gamma(d) => fill_slice(d, buf, rng),
+            NoiseSampler::SharedBurst { .. } | NoiseSampler::Drift { .. } => {
+                buf.fill(0.0)
+            }
         }
     }
 
@@ -143,6 +204,9 @@ impl NoiseSampler {
             NoiseSampler::Bernoulli(d) => d.mean(),
             NoiseSampler::Exponential(d) => d.mean(),
             NoiseSampler::Gamma(d) => d.mean(),
+            // the step-indexed offsets live outside the per-draw
+            // compute model the analytic moments describe
+            NoiseSampler::SharedBurst { .. } | NoiseSampler::Drift { .. } => 0.0,
         }
     }
 
@@ -156,8 +220,59 @@ impl NoiseSampler {
             NoiseSampler::Bernoulli(d) => d.variance(),
             NoiseSampler::Exponential(d) => d.variance(),
             NoiseSampler::Gamma(d) => d.variance(),
+            NoiseSampler::SharedBurst { .. } | NoiseSampler::Drift { .. } => 0.0,
         }
     }
+}
+
+/// Domain separator of the shared burst clock.
+const BURST_SEED_DOMAIN: u64 = 0xB025_7C10_C45E_ED01;
+/// Domain separator of the per-worker drift walks.
+const DRIFT_SEED_DOMAIN: u64 = 0xD21F_70A1_C5EE_D001;
+
+/// One uniform f64 in [0, 1) from 64 raw bits — the standard 53-bit
+/// mantissa construction `Xoshiro256pp::next_f64` uses.
+#[inline]
+fn unit_f64(bits: u64) -> f64 {
+    (bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The shared-burst offset for `(worker, step)`: the burst clock hashes
+/// the window index through its own [`SplitMix64`] stream, so every
+/// in-subset worker sees the *same* burst decision — the correlation
+/// the independent per-worker streams cannot express.
+fn shared_burst_offset(
+    seed: u64,
+    p: f64,
+    period: u64,
+    delay: f64,
+    subset: usize,
+    worker: usize,
+    step: u64,
+) -> f64 {
+    if worker >= subset {
+        return 0.0;
+    }
+    let window = step / period.max(1);
+    let mut clock = SplitMix64::new((seed ^ BURST_SEED_DOMAIN).wrapping_add(window));
+    if unit_f64(clock.next_u64()) < p {
+        delay
+    } else {
+        0.0
+    }
+}
+
+/// The drift-walk offset for `(worker, step)`: the worker's walk is
+/// replayed from its seed on every call (O(step) — scenario horizons
+/// are short; purity buys bitwise replay with no cached walk state).
+fn drift_offset(seed: u64, sigma: f64, worker: usize, step: u64) -> f64 {
+    let mut walk =
+        SplitMix64::new((seed ^ DRIFT_SEED_DOMAIN).wrapping_add(worker as u64));
+    let mut x = 0.0f64;
+    for _ in 0..=step {
+        x = (x + sigma * (2.0 * unit_f64(walk.next_u64()) - 1.0)).max(0.0);
+    }
+    x
 }
 
 /// Statically-dispatched draw loop: monomorphized per sampler family,
@@ -207,6 +322,31 @@ impl LatencyModel {
     pub fn with_worker_scales(mut self, scales: Vec<f64>) -> Self {
         self.worker_scale = scales;
         self
+    }
+
+    /// Worker `n`'s current base-latency multiplier (1.0 when unset).
+    #[inline]
+    pub fn worker_scale(&self, n: usize) -> f64 {
+        self.worker_scale.get(n).copied().unwrap_or(1.0)
+    }
+
+    /// Set worker `n`'s base-latency multiplier in place — the fault
+    /// plan's slow/drift events re-scale workers between steps through
+    /// the same seam Fig 6's static heterogeneity uses.
+    pub fn set_worker_scale(&mut self, n: usize, scale: f64) {
+        if self.worker_scale.len() <= n {
+            self.worker_scale.resize(n + 1, 1.0);
+        }
+        self.worker_scale[n] = scale;
+    }
+
+    /// The deterministic step-indexed latency offset of the installed
+    /// noise kind ([`NoiseSampler::step_offset`]): exactly 0.0 for
+    /// every classic per-draw family, so adding it to a step's straggle
+    /// is a bitwise no-op outside the scenario families.
+    #[inline]
+    pub fn step_offset(&self, n: usize, step: u64) -> f64 {
+        self.noise.step_offset(n, step)
     }
 
     /// Sample the compute latency of one micro-batch for worker `n`.
@@ -307,6 +447,11 @@ impl LatencyModel {
             }
             NoiseSampler::Gamma(d) => {
                 self.fill_core(n, m, bound, buf, rng, |r| d.sample(r), true)
+            }
+            // step-indexed families: no per-draw noise (the offset is
+            // added to the step's straggle by the caller)
+            NoiseSampler::SharedBurst { .. } | NoiseSampler::Drift { .. } => {
+                self.fill_core(n, m, bound, buf, rng, |_| 0.0, false)
             }
         }
     }
@@ -429,6 +574,9 @@ impl LatencyModel {
                 .fill_local_core(n, h, p, delay, buf, rng, |r| d.sample(r), true),
             NoiseSampler::Gamma(d) => self
                 .fill_local_core(n, h, p, delay, buf, rng, |r| d.sample(r), true),
+            NoiseSampler::SharedBurst { .. } | NoiseSampler::Drift { .. } => {
+                self.fill_local_core(n, h, p, delay, buf, rng, |_| 0.0, false)
+            }
         }
     }
 
@@ -771,6 +919,104 @@ mod tests {
         let before = rng.clone().next_u64();
         ss.sample_straggler(2, &mut rng);
         assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn shared_burst_offsets_are_correlated_and_deterministic() {
+        let kind = NoiseKind::SharedBurst {
+            p: 0.5,
+            period: 10,
+            delay: 2.0,
+            subset: 2,
+            seed: 42,
+        };
+        let s = NoiseSampler::from_kind(&kind);
+        assert!(s.is_none(), "step-indexed families draw nothing per batch");
+        assert!(build_noise(&kind).is_none());
+        let mut burst_steps = 0usize;
+        for step in 0..400u64 {
+            let a = s.step_offset(0, step);
+            let b = s.step_offset(1, step);
+            // one shared burst clock: in-subset workers agree exactly
+            assert_eq!(a.to_bits(), b.to_bits(), "step {step}");
+            assert!(a == 0.0 || a == 2.0, "step {step}: {a}");
+            // out-of-subset workers never burst
+            assert_eq!(s.step_offset(2, step), 0.0);
+            // pure in (worker, step): re-query is bitwise identical
+            assert_eq!(a.to_bits(), s.step_offset(0, step).to_bits());
+            // windows are 10 steps wide: the decision is constant
+            // within a window
+            assert_eq!(a.to_bits(), s.step_offset(0, (step / 10) * 10).to_bits());
+            if a > 0.0 {
+                burst_steps += 1;
+            }
+        }
+        // p = 0.5 over 40 windows: some burst, some don't
+        assert!(burst_steps > 0 && burst_steps < 400, "{burst_steps}");
+    }
+
+    #[test]
+    fn drift_walk_is_deterministic_per_worker_and_non_negative() {
+        let kind = NoiseKind::Drift { sigma: 0.05, seed: 7 };
+        let s = NoiseSampler::from_kind(&kind);
+        assert!(s.is_none());
+        let mut moved = false;
+        for step in 0..200u64 {
+            let a = s.step_offset(0, step);
+            assert!(a >= 0.0, "walk clamps at nominal: step {step} -> {a}");
+            assert!(a <= 0.05 * (step + 1) as f64 + 1e-12);
+            assert_eq!(a.to_bits(), s.step_offset(0, step).to_bits());
+            if (a - s.step_offset(1, step)).abs() > 1e-12 {
+                moved = true;
+            }
+        }
+        assert!(moved, "independent walks per worker");
+        // classic families have exactly zero step offset
+        let classic = NoiseSampler::from_kind(&NoiseKind::Exponential {
+            mean: 0.2,
+        });
+        for step in [0u64, 7, 99] {
+            assert_eq!(classic.step_offset(0, step).to_bits(), 0.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn step_indexed_kinds_leave_the_draw_paths_untouched() {
+        // a SharedBurst model's micro-batch draws must be bitwise the
+        // no-noise model's (the offset rides the straggle, not the
+        // per-draw stream)
+        let mut c = base_config();
+        c.noise = NoiseKind::SharedBurst {
+            p: 1.0,
+            period: 5,
+            delay: 1.0,
+            subset: 4,
+            seed: 1,
+        };
+        let burst = LatencyModel::from_config(&c);
+        let plain = LatencyModel::from_config(&base_config());
+        let mut r1 = Xoshiro256pp::seed_from_u64(77);
+        let mut r2 = Xoshiro256pp::seed_from_u64(77);
+        let (mut b1, mut b2) = (Vec::new(), Vec::new());
+        burst.fill_microbatches(0, 12, &mut b1, &mut r1);
+        plain.fill_microbatches(0, 12, &mut b2, &mut r2);
+        for (i, (a, b)) in b1.iter().zip(&b2).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "sample {i}");
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64(), "same stream position");
+    }
+
+    #[test]
+    fn worker_scale_accessors_roundtrip() {
+        let mut m = LatencyModel::from_config(&base_config());
+        assert_eq!(m.worker_scale(1), 1.0);
+        m.set_worker_scale(1, 2.5);
+        assert_eq!(m.worker_scale(1), 2.5);
+        // out-of-range set grows the table; unset workers stay nominal
+        m.set_worker_scale(9, 1.5);
+        assert_eq!(m.worker_scale(9), 1.5);
+        assert_eq!(m.worker_scale(8), 1.0);
+        assert_eq!(m.worker_scale(100), 1.0);
     }
 
     #[test]

@@ -70,22 +70,12 @@ impl SurvivorScheduleCache {
         self.model == *model
     }
 
-    /// Completion time of the k-survivor collective whose members all
-    /// start at `close` (the membership decision instant). Bitwise equal
-    /// to the oracle's `completion_time(&vec![close; k])` — the max over
-    /// k equal arrivals is `close`, and the compiled pass is bitwise
-    /// equal to the event-queue simulation of the same k-worker
-    /// schedule — with no allocation or schedule build after the first
-    /// drop to a given k.
-    pub fn completion(&mut self, k: usize, close: f64) -> f64 {
-        if k == 0 {
-            // an empty reduction completes instantly, matching
-            // `CommModel::completion_time(&[])`
-            return 0.0;
-        }
-        if let CommModel::Fixed(tc) = self.model {
-            return close + tc;
-        }
+    /// Lazily compile (and memoize) the k-member schedule. Callers have
+    /// already dispatched away the fixed-`T^c` model, which has no
+    /// schedule to compile. Returns nothing so call sites can take the
+    /// slot as a direct field projection alongside the arrivals buffer
+    /// (disjoint borrows).
+    fn ensure_slot(&mut self, k: usize) {
         if self.slots.len() <= k {
             self.slots.resize_with(k + 1, || None);
         }
@@ -106,10 +96,112 @@ impl SurvivorScheduleCache {
             });
             self.compiled += 1;
         }
+    }
+
+    /// Completion time of the k-survivor collective whose members all
+    /// start at `close` (the membership decision instant). Bitwise equal
+    /// to the oracle's `completion_time(&vec![close; k])` — the max over
+    /// k equal arrivals is `close`, and the compiled pass is bitwise
+    /// equal to the event-queue simulation of the same k-worker
+    /// schedule — with no allocation or schedule build after the first
+    /// drop to a given k.
+    pub fn completion(&mut self, k: usize, close: f64) -> f64 {
+        if k == 0 {
+            // an empty reduction completes instantly, matching
+            // `CommModel::completion_time(&[])`
+            return 0.0;
+        }
+        if let CommModel::Fixed(tc) = self.model {
+            return close + tc;
+        }
+        self.ensure_slot(k);
         let slot = self.slots[k].as_mut().expect("slot just ensured");
         self.arrivals.clear();
         self.arrivals.resize(k, close);
         slot.compiled.completion_with(&self.arrivals, &mut slot.scratch)
+    }
+
+    /// Completion time of the `arrivals.len()`-member collective over
+    /// *heterogeneous* arrivals — the fault path's plain collective:
+    /// live workers keep their own arrival times (unlike the
+    /// membership-close restart, where all k start together). Bitwise
+    /// equal to the oracle's `completion_time(arrivals)` over the same
+    /// k-worker schedule, through the same memoized per-k slots.
+    pub fn completion_at(&mut self, arrivals: &[f64]) -> f64 {
+        let k = arrivals.len();
+        if k == 0 {
+            return 0.0;
+        }
+        if let CommModel::Fixed(tc) = self.model {
+            let start =
+                arrivals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            return start + tc;
+        }
+        self.ensure_slot(k);
+        let slot = self.slots[k].as_mut().expect("slot just ensured");
+        slot.compiled.completion_with(arrivals, &mut slot.scratch)
+    }
+
+    /// The per-phase bounded scan over *heterogeneous* arrivals — the
+    /// fault path's per-phase collective: the live sub-cluster's
+    /// k-member schedule is checked against the cumulative budget
+    /// `offsets` exactly like the full-cluster compiled scan, bitwise
+    /// equal to the event-queue oracle
+    /// ([`CommModel::per_phase_bounded_completion`]) over the same
+    /// arrivals. `dropped` is indexed by arrival position, not global
+    /// worker id. The fixed-`T^c` model has no phase structure, so its
+    /// budgets lump to their total — same rule as the oracle.
+    pub fn bounded_completion_at(
+        &mut self,
+        arrivals: &[f64],
+        offsets: &[f64],
+        dropped: &mut Vec<bool>,
+    ) -> PhaseBounded {
+        let k = arrivals.len();
+        if k == 0 {
+            dropped.clear();
+            return PhaseBounded::Complete(0.0);
+        }
+        if let CommModel::Fixed(tc) = self.model {
+            // lumped membership rule on raw arrivals (the oracle's
+            // fixed-model arm, bit for bit): one cutoff at the last
+            // cumulative offset
+            dropped.clear();
+            dropped.resize(k, false);
+            let Some(&total) = offsets.last() else {
+                let start =
+                    arrivals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                return PhaseBounded::Complete(start + tc);
+            };
+            let first =
+                arrivals.iter().cloned().fold(f64::INFINITY, f64::min);
+            let cutoff = first + total;
+            let mut survivors = k;
+            for (j, &a) in arrivals.iter().enumerate() {
+                if a > cutoff {
+                    dropped[j] = true;
+                    survivors -= 1;
+                }
+            }
+            if survivors == k {
+                let start =
+                    arrivals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                return PhaseBounded::Complete(start + tc);
+            }
+            return PhaseBounded::Dropped {
+                survivors,
+                close: cutoff,
+                checkpoint: offsets.len() - 1,
+            };
+        }
+        self.ensure_slot(k);
+        let slot = self.slots[k].as_mut().expect("slot just ensured");
+        slot.compiled.bounded_completion_with(
+            arrivals,
+            offsets,
+            &mut slot.scratch,
+            dropped,
+        )
     }
 
     /// The k-survivor collective starting at `close`, *re-checked*
@@ -140,26 +232,7 @@ impl SurvivorScheduleCache {
             dropped.resize(k, false);
             return PhaseBounded::Complete(close + tc);
         }
-        if self.slots.len() <= k {
-            self.slots.resize_with(k + 1, || None);
-        }
-        if self.slots[k].is_none() {
-            let (latency, bandwidth, bytes) = self
-                .model
-                .link_params()
-                .expect("schedule-driven model has link params");
-            let schedule = self
-                .model
-                .schedule_for(k)
-                .expect("schedule-driven model has a schedule");
-            self.slots[k] = Some(Slot {
-                compiled: CompiledSchedule::compile(
-                    &schedule, latency, bandwidth, bytes,
-                ),
-                scratch: ScheduleScratch::with_capacity(k),
-            });
-            self.compiled += 1;
-        }
+        self.ensure_slot(k);
         let slot = self.slots[k].as_mut().expect("slot just ensured");
         self.arrivals.clear();
         self.arrivals.resize(k, close);
@@ -290,6 +363,137 @@ mod tests {
             fixed.bounded_completion(3, 1.0, &[0.0], &mut dropped),
             PhaseBounded::Complete(1.5)
         );
+    }
+
+    #[test]
+    fn completion_at_matches_oracle_over_heterogeneous_arrivals() {
+        // the fault path's plain collective: live workers keep their
+        // own arrivals; the per-k compiled pass must be bitwise the
+        // event-queue oracle's completion_time over the same k
+        for kind in TopologyKind::ALL {
+            let model = CommModel::Topology {
+                kind,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                bytes: 4e6,
+            };
+            let mut cache = SurvivorScheduleCache::new(&model);
+            for arrivals in [
+                &[0.3][..],
+                &[0.3, 0.1][..],
+                &[0.3, 0.1, 0.7, 0.2, 0.5][..],
+            ] {
+                let want = model.completion_time(arrivals);
+                let got = cache.completion_at(arrivals);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{} k={}",
+                    kind.name(),
+                    arrivals.len()
+                );
+            }
+            // the homogeneous form is the special case
+            let close = 0.7;
+            assert_eq!(
+                cache.completion_at(&[close; 3]).to_bits(),
+                cache.completion(3, close).to_bits(),
+                "{}",
+                kind.name()
+            );
+        }
+        // fixed model and degenerates
+        let mut fixed = SurvivorScheduleCache::new(&CommModel::Fixed(0.5));
+        assert_eq!(fixed.completion_at(&[1.0, 3.0, 2.0]), 3.5);
+        assert_eq!(fixed.completion_at(&[]), 0.0);
+    }
+
+    #[test]
+    fn bounded_completion_at_matches_per_phase_oracle() {
+        use crate::sim::compiled::PhaseBounded;
+        for kind in TopologyKind::ALL {
+            let model = CommModel::Topology {
+                kind,
+                latency: 1e-4,
+                bandwidth: 1e9,
+                bytes: 4e6,
+            };
+            let mut cache = SurvivorScheduleCache::new(&model);
+            let mut dropped = Vec::new();
+            let arrivals = [0.3, 0.1, 7.0, 0.2, 0.5];
+            for deadline in [0.0, 1.0, 100.0] {
+                let offsets = crate::policy::cumulative_offsets(&[deadline]);
+                let (want_mask, want_t) = model
+                    .per_phase_bounded_completion(&arrivals, &offsets, None);
+                let res = cache.bounded_completion_at(
+                    &arrivals, &offsets, &mut dropped,
+                );
+                match res {
+                    PhaseBounded::Complete(t) => {
+                        assert!(want_mask.iter().all(|&a| a));
+                        assert_eq!(
+                            t.to_bits(),
+                            want_t.to_bits(),
+                            "{} d={deadline}",
+                            kind.name()
+                        );
+                    }
+                    PhaseBounded::Dropped { survivors, close, .. } => {
+                        for (j, &d) in dropped.iter().enumerate() {
+                            assert_eq!(
+                                d, !want_mask[j],
+                                "{} d={deadline} pos {j}",
+                                kind.name()
+                            );
+                        }
+                        // the single-budget restart is the step-level
+                        // rule: survivors start at the window close
+                        let t = cache.completion(survivors, close);
+                        assert_eq!(
+                            t.to_bits(),
+                            want_t.to_bits(),
+                            "{} d={deadline}",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_completion_at_fixed_model_lumps_budgets() {
+        use crate::sim::compiled::PhaseBounded;
+        let model = CommModel::Fixed(0.5);
+        let mut cache = SurvivorScheduleCache::new(&model);
+        let mut dropped = Vec::new();
+        let arrivals = [0.3, 0.1, 7.0, 0.2];
+        // lumped cutoff at the last cumulative offset: first + 1.0
+        let res =
+            cache.bounded_completion_at(&arrivals, &[0.4, 1.0], &mut dropped);
+        let PhaseBounded::Dropped { survivors, close, checkpoint } = res else {
+            panic!("the 7.0 arrival must miss the lumped cutoff: {res:?}");
+        };
+        assert_eq!(survivors, 3);
+        assert_eq!(checkpoint, 1, "attributed to the closing checkpoint");
+        assert_eq!(dropped, vec![false, false, true, false]);
+        // restart at the close is the oracle's exclusion arm, bit for bit
+        let (_, want) = model.bounded_wait_completion(&arrivals, 1.0);
+        assert_eq!(
+            cache.completion(survivors, close).to_bits(),
+            want.to_bits()
+        );
+        // loose budgets: everyone survives, plain fixed-model timing
+        let res =
+            cache.bounded_completion_at(&arrivals, &[100.0], &mut dropped);
+        assert_eq!(res, PhaseBounded::Complete(7.5));
+        assert!(dropped.iter().all(|&d| !d));
+        // no offsets at all is the unconstrained collective
+        let res = cache.bounded_completion_at(&arrivals, &[], &mut dropped);
+        assert_eq!(res, PhaseBounded::Complete(7.5));
+        // and the empty reduction completes instantly
+        let res = cache.bounded_completion_at(&[], &[1.0], &mut dropped);
+        assert_eq!(res, PhaseBounded::Complete(0.0));
     }
 
     #[test]

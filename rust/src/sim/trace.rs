@@ -19,15 +19,16 @@
 //!   (OptiReduce derives its per-phase deadlines from measured tails
 //!   the same way).
 //!
-//! JSON schema (version 1):
+//! JSON schema (version 2):
 //!
 //! ```json
 //! {
 //!   "format": "dropcompute-trace",
-//!   "version": 1,
+//!   "version": 2,
 //!   "mode": "step",                    // or "period" (Local-SGD)
 //!   "workers": 6, "accums": 3, "seed": 42,
 //!   "policy": "deadline=0.75",         // DropPolicy spec grammar
+//!   "scenario": "fail@100:w3,rejoin+50",  // optional: FaultPlan spec (v2)
 //!   "comm": {"kind": "ring", "latency": 1e-3,
 //!            "bandwidth": 1e9, "bytes": 4e6},   // or {"kind": "fixed", "latency": 0.5}
 //!   "steps":    [{"straggle": [..N..], "samples": [[..],..N..]}, ..],
@@ -199,10 +200,12 @@ impl Trace {
     }
 }
 
-/// Version of the replayable-trace JSON format this build writes (and
-/// the only one it reads — forward versions are a typed error, not a
-/// guess).
-pub const TRACE_FORMAT_VERSION: u64 = 1;
+/// Version of the replayable-trace JSON format this build writes.
+/// Version 2 added the optional `scenario` field (the recorded run's
+/// [`crate::sim::FaultPlan`] spec); version-1 documents still read —
+/// they simply carry no scenario. Forward versions are a typed error,
+/// not a guess.
+pub const TRACE_FORMAT_VERSION: u64 = 2;
 
 /// What one recorded entry of a [`TraceRecord`] is: a synchronous step
 /// (per-worker straggle + micro-batch latency draws) or a Local-SGD
@@ -305,6 +308,11 @@ pub struct TraceMeta {
     /// the flag would not reproduce bitwise. Serialized only when true
     /// (absent = recursive default).
     pub single_restart: bool,
+    /// [`crate::sim::FaultPlan`] spec the run was recorded under
+    /// (format v2; `None` = fault-free). Recorded so churn traces
+    /// replay under the same membership schedule — the dead seats are
+    /// part of the collective's timing. Serialized only when present.
+    pub scenario: Option<String>,
 }
 
 /// One recorded step (or Local-SGD period): per worker, the straggler
@@ -456,6 +464,9 @@ impl TraceRecord {
         if self.meta.single_restart {
             s.push_str("  \"single_restart\": true,\n");
         }
+        if let Some(sc) = &self.meta.scenario {
+            s.push_str(&format!("  \"scenario\": \"{sc}\",\n"));
+        }
         match &self.meta.comm {
             TraceComm::Fixed { latency } => {
                 s.push_str(&format!(
@@ -524,6 +535,18 @@ impl TraceRecord {
                 ))
             }
         };
+        let scenario = match doc.get("scenario") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| {
+                        Error::Data(
+                            "trace: `scenario` must be a string".into(),
+                        )
+                    })?,
+            ),
+        };
         let comm_obj = req(&doc, "comm")?;
         let kind = req_str(comm_obj, "kind")?;
         let comm = if kind == "fixed" {
@@ -582,6 +605,7 @@ impl TraceRecord {
                 policy,
                 comm,
                 single_restart,
+                scenario,
             },
             steps,
             outcomes,
@@ -593,11 +617,18 @@ impl TraceRecord {
     /// Structural validation (see [`Self::parse`]): version, shapes,
     /// finiteness, and mode-vs-policy consistency.
     pub fn validate(&self) -> Result<()> {
-        if self.meta.version != TRACE_FORMAT_VERSION {
+        if !(1..=TRACE_FORMAT_VERSION).contains(&self.meta.version) {
             return Err(Error::Data(format!(
-                "trace: unsupported format version {} (this build reads {})",
+                "trace: unsupported format version {} (this build reads \
+                 1..={})",
                 self.meta.version, TRACE_FORMAT_VERSION
             )));
+        }
+        if let Some(spec) = &self.meta.scenario {
+            // the recorded fault plan must parse and fit the recorded
+            // cluster, or replay could never honor it
+            let plan = crate::sim::FaultPlan::parse(spec)?;
+            plan.validate_for(self.meta.workers)?;
         }
         let policy = crate::policy::DropPolicy::parse(&self.meta.policy)?;
         let eff_h = policy.local_sgd_h();
@@ -892,6 +923,7 @@ mod tests {
                     bytes: 4e6,
                 },
                 single_restart: false,
+                scenario: None,
             },
             steps: vec![
                 StepTrace {
@@ -964,7 +996,7 @@ mod tests {
             "not json at all".into(),
             "{}".into(),
             good.replace("dropcompute-trace", "other-format"),
-            good.replace("\"version\": 1", "\"version\": 99"),
+            good.replace("\"version\": 2", "\"version\": 99"),
             good.replace("\"mode\": \"step\"", "\"mode\": \"sideways\""),
             good.replace("\"kind\": \"ring\"", "\"kind\": \"moebius\""),
             good.replace("\"workers\": 2", "\"workers\": 5"), // shape lie
@@ -994,6 +1026,38 @@ mod tests {
         let mut odd = sample_record();
         odd.outcomes.pop();
         assert!(odd.validate().is_err());
+    }
+
+    #[test]
+    fn version_1_documents_still_parse() {
+        let v1 = sample_record()
+            .to_json()
+            .replace("\"version\": 2", "\"version\": 1");
+        let rec = TraceRecord::parse(&v1).unwrap();
+        assert_eq!(rec.meta.version, 1);
+        assert_eq!(rec.meta.scenario, None);
+    }
+
+    #[test]
+    fn scenario_meta_roundtrips_and_is_validated() {
+        let mut r = sample_record();
+        r.meta.scenario = Some("fail@1:w0,rejoin+3;slow@0:w1,x2".into());
+        let parsed = TraceRecord::parse(&r.to_json()).unwrap();
+        assert_eq!(parsed.meta.scenario, r.meta.scenario);
+        assert_eq!(parsed, r);
+        // a scenario that does not parse is rejected
+        let mut bad = sample_record();
+        bad.meta.scenario = Some("explode@3".into());
+        assert!(bad.validate().is_err());
+        // so is one naming a worker outside the recorded cluster
+        let mut oob = sample_record();
+        oob.meta.scenario = Some("fail@1:w9".into());
+        assert!(oob.validate().is_err());
+        // and a non-string field in the document
+        let doc = sample_record()
+            .to_json()
+            .replace("\"seed\": 7,", "\"seed\": 7,\n  \"scenario\": 3,");
+        assert!(TraceRecord::parse(&doc).is_err());
     }
 
     #[test]

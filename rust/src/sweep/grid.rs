@@ -10,7 +10,7 @@ use crate::config::ClusterConfig;
 use crate::obs::{NoopObserver, ObsRecorder, SimObserver};
 use crate::policy::DropPolicy;
 use crate::rng::SplitMix64;
-use crate::sim::{ClusterSim, StepOutcome, TraceRecord};
+use crate::sim::{ClusterSim, FaultPlan, StepOutcome, TraceRecord};
 
 use super::cache::SurvivorCachePool;
 use super::runner::run_indexed;
@@ -44,6 +44,11 @@ pub struct SweepSpec {
     /// adding what they cannot express: per-phase deadlines, preemption
     /// variants, Local-SGD arms, compositions — all in one axis.
     pub policies: Vec<DropPolicy>,
+    /// Scenario axis: when non-empty every point also runs under one
+    /// [`FaultPlan`] (the churn ablation — an empty plan is the
+    /// fault-free arm). Events naming workers beyond a point's cluster
+    /// are inert by design, so one plan spans a whole workers axis.
+    pub scenarios: Vec<FaultPlan>,
     /// Seed axis. The same seed value across other axes gives paired
     /// (common-random-number) comparisons between arms.
     pub seeds: Vec<u64>,
@@ -81,6 +86,8 @@ pub struct SweepParams {
     pub deadline: f64,
     pub seed: u64,
     pub policy: Option<DropPolicy>,
+    /// The point's fault plan (scenario-axis sweeps only).
+    pub scenario: Option<FaultPlan>,
 }
 
 /// Measured outcome of one grid point.
@@ -95,6 +102,9 @@ pub struct SweepPoint {
     /// Spec string of the point's [`DropPolicy`] (policy-axis sweeps
     /// only; `None` on the legacy axes).
     pub policy: Option<String>,
+    /// Spec string of the point's [`FaultPlan`] (scenario-axis sweeps
+    /// only).
+    pub scenario: Option<String>,
     pub mean_iter_time: f64,
     pub mean_compute_time: f64,
     /// Useful micro-batches per second (dropped work excluded).
@@ -119,6 +129,7 @@ impl SweepSpec {
             thresholds: vec![0.0],
             deadlines,
             policies: Vec::new(),
+            scenarios: Vec::new(),
             seeds: vec![0],
             replay: None,
             iters: 50,
@@ -161,6 +172,13 @@ impl SweepSpec {
         self
     }
 
+    /// Sweep [`FaultPlan`]s: every point also runs under each plan
+    /// (see the field docs). An empty plan is the fault-free arm.
+    pub fn scenarios(mut self, plans: &[FaultPlan]) -> Self {
+        self.scenarios = plans.to_vec();
+        self
+    }
+
     pub fn seeds(mut self, seeds: &[u64]) -> Self {
         self.seeds = seeds.to_vec();
         self
@@ -190,15 +208,20 @@ impl SweepSpec {
 
     /// Number of grid points: `workers × thresholds × deadlines × seeds`
     /// on the legacy axes, `workers × policies × seeds` on the policy
-    /// axis.
+    /// axis; a non-empty scenario axis multiplies either product.
     pub fn len(&self) -> usize {
+        let scenarios = self.scenarios.len().max(1);
         if self.policies.is_empty() {
             self.workers.len()
                 * self.thresholds.len()
                 * self.deadlines.len()
+                * scenarios
                 * self.seeds.len()
         } else {
-            self.workers.len() * self.policies.len() * self.seeds.len()
+            self.workers.len()
+                * self.policies.len()
+                * scenarios
+                * self.seeds.len()
         }
     }
 
@@ -208,19 +231,33 @@ impl SweepSpec {
 
     /// Coordinates of point `index` in the fixed serial enumeration
     /// order: workers slowest, then thresholds, then deadlines (or the
-    /// policy axis in their place), seeds fastest — the order a nested
-    /// `for` loop would visit.
+    /// policy axis in their place), then scenarios, seeds fastest — the
+    /// order a nested `for` loop would visit.
     pub fn params(&self, index: usize) -> SweepParams {
         debug_assert!(index < self.len());
         let seed = self.seeds[index % self.seeds.len()];
-        let index = index / self.seeds.len();
+        let mut index = index / self.seeds.len();
+        let scenario = if self.scenarios.is_empty() {
+            None
+        } else {
+            let plan = self.scenarios[index % self.scenarios.len()].clone();
+            index /= self.scenarios.len();
+            Some(plan)
+        };
         if self.policies.is_empty() {
             let deadline = self.deadlines[index % self.deadlines.len()];
             let index = index / self.deadlines.len();
             let threshold = self.thresholds[index % self.thresholds.len()];
             let index = index / self.thresholds.len();
             let workers = self.workers[index % self.workers.len()];
-            SweepParams { workers, threshold, deadline, seed, policy: None }
+            SweepParams {
+                workers,
+                threshold,
+                deadline,
+                seed,
+                policy: None,
+                scenario,
+            }
         } else {
             let policy = self.policies[index % self.policies.len()].clone();
             let index = index / self.policies.len();
@@ -232,6 +269,7 @@ impl SweepSpec {
                 deadline: eff.step_deadline.unwrap_or(0.0),
                 seed,
                 policy: Some(policy),
+                scenario,
             }
         }
     }
@@ -307,8 +345,11 @@ impl SweepSpec {
         // the point's policy is its entire drop surface; neutralize the
         // base config's own deadline so nothing is applied twice
         cfg.comm_drop_deadline = 0.0;
-        let sim = ClusterSim::new(&cfg, Self::sim_seed(&p))
+        let mut sim = ClusterSim::new(&cfg, Self::sim_seed(&p))
             .with_policy(policy.clone());
+        if let Some(plan) = &p.scenario {
+            sim = sim.with_fault_plan(plan.clone());
+        }
         let mut sim = pool.lend(sim);
         let mut out = StepOutcome::default();
         let mut t_sum = 0.0;
@@ -331,6 +372,7 @@ impl SweepSpec {
             deadline: p.deadline,
             seed: p.seed,
             policy: p.policy.as_ref().map(DropPolicy::spec),
+            scenario: p.scenario.as_ref().map(FaultPlan::spec),
             mean_iter_time: t_sum / self.iters as f64,
             mean_compute_time: compute_sum / self.iters as f64,
             throughput: completed as f64 / t_sum,
@@ -365,6 +407,11 @@ impl SweepSpec {
         let mut sim = ClusterSim::from_trace(trace)
             .expect("SweepSpec::replay holds a validated trace");
         sim.set_policy(&policy);
+        if let Some(plan) = &p.scenario {
+            // the point's plan replaces any trace-carried one: recorded
+            // compute re-timed under this churn schedule
+            sim = sim.with_fault_plan(plan.clone());
+        }
         let mut sim = pool.lend(sim);
         let iters = self.iters.min(trace.len());
         let mut out = StepOutcome::default();
@@ -391,6 +438,7 @@ impl SweepSpec {
             deadline: p.deadline,
             seed: p.seed,
             policy: p.policy.as_ref().map(DropPolicy::spec),
+            scenario: p.scenario.as_ref().map(FaultPlan::spec),
             mean_iter_time: t_sum / iters.max(1) as f64,
             mean_compute_time: compute_sum / iters.max(1) as f64,
             throughput: if t_sum > 0.0 {
@@ -468,9 +516,14 @@ impl SweepResult {
                 Some(spec) => format!("\"policy\": \"{spec}\", "),
                 None => String::new(),
             };
+            let scenario = match &p.scenario {
+                // scenario spec strings are JSON-clean too
+                Some(spec) => format!("\"scenario\": \"{spec}\", "),
+                None => String::new(),
+            };
             s.push_str(&format!(
                 "    {{\"index\": {}, \"workers\": {}, \"threshold\": {:?}, \
-                 \"deadline\": {:?}, \"seed\": {}, {}\"mean_iter_time\": {:?}, \
+                 \"deadline\": {:?}, \"seed\": {}, {}{}\"mean_iter_time\": {:?}, \
                  \"mean_compute_time\": {:?}, \"throughput\": {:?}, \
                  \"drop_rate\": {:?}}}{}\n",
                 p.index,
@@ -479,6 +532,7 @@ impl SweepResult {
                 p.deadline,
                 p.seed,
                 policy,
+                scenario,
                 p.mean_iter_time,
                 p.mean_compute_time,
                 p.throughput,
@@ -530,6 +584,7 @@ mod tests {
                             deadline: 0.0,
                             seed,
                             policy: None,
+                            scenario: None,
                         },
                         "idx={idx}"
                     );
@@ -547,6 +602,7 @@ mod tests {
             deadline,
             seed,
             policy: None,
+            scenario: None,
         };
         let a = p(2, 0.0, 0.0, 0);
         let b = p(2, 0.0, 0.0, 1);
@@ -778,6 +834,51 @@ mod tests {
             serial.points[0].mean_iter_time.to_bits(),
             recorded_mean.to_bits()
         );
+    }
+
+    #[test]
+    fn scenario_axis_multiplies_the_grid_and_rides_into_json() {
+        let plans = [
+            FaultPlan::default(),
+            FaultPlan::parse("fail@2:w0,rejoin+3").unwrap(),
+        ];
+        let spec = SweepSpec::new(base())
+            .workers(&[3])
+            .thresholds(&[0.0])
+            .scenarios(&plans)
+            .seeds(&[1, 2])
+            .iters(6)
+            .jobs(1);
+        assert_eq!(spec.len(), 4, "scenario axis multiplies the grid");
+        // enumeration: seeds fastest, scenarios next
+        assert_eq!(spec.params(0).scenario, Some(plans[0].clone()));
+        assert_eq!(spec.params(1).seed, 2);
+        assert_eq!(spec.params(2).scenario, Some(plans[1].clone()));
+        let r = spec.clone().run();
+        // the fault-free arm drops nothing; the churn arm loses worker
+        // 0's seat (and its scheduled work) while it is down
+        assert_eq!(r.points[0].drop_rate, 0.0);
+        assert!(r.points[2].drop_rate > 0.0);
+        assert!(r.points[2].drop_rate < 1.0);
+        assert_eq!(r.points[0].scenario.as_deref(), Some("none"));
+        assert_eq!(
+            r.points[2].scenario.as_deref(),
+            Some("fail@2:w0,rejoin+3")
+        );
+        // parallel run is bitwise the serial one
+        let par = spec.jobs(3).run();
+        for (a, b) in r.points.iter().zip(&par.points) {
+            assert_eq!(a.mean_iter_time.to_bits(), b.mean_iter_time.to_bits());
+            assert_eq!(a.drop_rate.to_bits(), b.drop_rate.to_bits());
+        }
+        // JSON carries the scenario axis
+        let doc = Json::parse(&r.to_json()).expect("valid JSON");
+        let pts = doc.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(
+            pts[2].get("scenario").and_then(Json::as_str),
+            Some("fail@2:w0,rejoin+3")
+        );
+        assert!(pts[0].get("scenario").is_some());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! on `i` (every sweep point seeds its own simulator — see
 //! [`super::grid::SweepSpec`]).
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::util::ThreadPool;
@@ -64,7 +65,13 @@ pub struct Progress {
     done: usize,
     started: Instant,
     last_print: Option<Instant>,
+    /// Completion times of the last [`ETA_WINDOW`] points — the moving
+    /// window the throughput/ETA is computed from.
+    recent: VecDeque<Instant>,
 }
+
+/// Completions kept in the [`Progress`] moving window.
+const ETA_WINDOW: usize = 32;
 
 impl Progress {
     pub fn new(label: &str, total: usize) -> Self {
@@ -74,6 +81,7 @@ impl Progress {
             done: 0,
             started: Instant::now(),
             last_print: None,
+            recent: VecDeque::with_capacity(ETA_WINDOW),
         }
     }
 
@@ -83,6 +91,7 @@ impl Progress {
             return; // --quiet: skip even the rate-limit bookkeeping
         }
         let now = Instant::now();
+        self.record(now);
         let due = match self.last_print {
             None => true,
             Some(t) => now.duration_since(t).as_secs_f64() >= 0.5,
@@ -92,8 +101,7 @@ impl Progress {
         }
         self.last_print = Some(now);
         let elapsed = now.duration_since(self.started).as_secs_f64();
-        let rate = self.done as f64 / elapsed.max(1e-9);
-        let eta = (self.total - self.done) as f64 / rate.max(1e-9);
+        let (rate, eta) = self.rate_and_eta(now);
         crate::info!(
             "[{}] {}/{} points ({:.1}%) — {:.1} pts/s, {:.1}s elapsed, ETA {:.1}s",
             self.label,
@@ -104,6 +112,34 @@ impl Progress {
             elapsed,
             eta,
         );
+    }
+
+    fn record(&mut self, now: Instant) {
+        if self.recent.len() == ETA_WINDOW {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(now);
+    }
+
+    /// Throughput and ETA from the completion moving window: the rate
+    /// over the last up-to-[`ETA_WINDOW`] points, not the whole run.
+    /// A grid whose per-point cost grows as an axis advances (more
+    /// workers, bigger schedules) gets an ETA tracking the *current*
+    /// cost instead of the stale run-wide mean. Falls back to the
+    /// overall rate until two completions have landed.
+    fn rate_and_eta(&self, now: Instant) -> (f64, f64) {
+        let rate = match self.recent.front() {
+            Some(&first) if self.recent.len() >= 2 => {
+                let span = now.duration_since(first).as_secs_f64();
+                (self.recent.len() - 1) as f64 / span.max(1e-9)
+            }
+            _ => {
+                let elapsed = now.duration_since(self.started).as_secs_f64();
+                self.done as f64 / elapsed.max(1e-9)
+            }
+        };
+        let eta = self.total.saturating_sub(self.done) as f64 / rate.max(1e-9);
+        (rate, eta)
     }
 }
 
@@ -155,5 +191,46 @@ mod tests {
         p.tick();
         p.tick();
         assert_eq!(p.done, 3);
+    }
+
+    #[test]
+    fn eta_tracks_the_recent_rate_not_the_global_mean() {
+        use std::time::Duration;
+        let mut p = Progress::new("test", 100);
+        let mut t = Instant::now();
+        // 40 fast points (10/s) followed by 32 slow ones (1/s): the
+        // window only sees slow completions by the end
+        for _ in 0..40 {
+            t += Duration::from_millis(100);
+            p.done += 1;
+            p.record(t);
+        }
+        for _ in 0..32 {
+            t += Duration::from_secs(1);
+            p.done += 1;
+            p.record(t);
+        }
+        let (rate, eta) = p.rate_and_eta(t);
+        assert!(
+            (0.6..1.5).contains(&rate),
+            "windowed rate ~1 pt/s, got {rate}"
+        );
+        // 28 points remain at ~1/s; the run-wide mean (2 pts/s) would
+        // claim ~14s — the moving window must not
+        assert!(eta > 18.0 && eta < 50.0, "eta {eta}");
+    }
+
+    #[test]
+    fn eta_falls_back_to_the_overall_rate_early_on() {
+        use std::time::Duration;
+        let started = Instant::now();
+        let mut p = Progress::new("test", 10);
+        p.started = started;
+        p.done = 1;
+        p.record(started + Duration::from_secs(2));
+        let (rate, eta) =
+            p.rate_and_eta(started + Duration::from_secs(2));
+        assert!((rate - 0.5).abs() < 1e-9, "1 point / 2s, got {rate}");
+        assert!((eta - 18.0).abs() < 1e-6, "9 points / 0.5 pt/s, got {eta}");
     }
 }

@@ -356,3 +356,44 @@ fn dropcomm_survives_compute_stall() {
         }
     }
 }
+
+/// The scenario-lab reference config loads, validates, and drives a
+/// churned end-to-end run: the plan from `[scenario]` reaches the sim,
+/// kills and revives workers on schedule, and the correlated
+/// shared-burst noise stays bitwise reproducible across runs.
+#[test]
+fn churn_stress_config_drives_scenario_lab() {
+    let doc = dropcompute::config::Document::load(std::path::Path::new(
+        "configs/churn_stress.toml",
+    ))
+    .unwrap();
+    let cfg = Config::from_doc(&doc).unwrap();
+    assert!(matches!(cfg.cluster.noise, NoiseKind::SharedBurst { .. }));
+    let plan = cfg.scenario.clone().expect("[scenario] spec installs");
+    assert!(plan.spec().contains("rejoin+30"));
+    // the sweep churn axis rides alongside: fault-free + 2 churn arms
+    assert_eq!(cfg.sweep.scenarios.len(), 3);
+    assert!(cfg.sweep.scenarios[0].is_empty(), "arm 0 is `none`");
+    // worker 3 dies at 40 and is back at 70; worker 7 never returns
+    assert!(!plan.alive(3, 50));
+    assert!(plan.alive(3, 75));
+    assert!(!plan.alive(7, 500));
+    let mut a = ClusterSim::new(&cfg.cluster, cfg.train.seed)
+        .with_fault_plan(plan.clone());
+    let mut b = ClusterSim::new(&cfg.cluster, cfg.train.seed)
+        .with_fault_plan(plan);
+    for step in 0..130 {
+        let x = a.step(None);
+        let y = b.step(None);
+        assert_eq!(x.iter_time.to_bits(), y.iter_time.to_bits(), "{step}");
+        assert!(x.iter_time.is_finite());
+        let workers = cfg.cluster.workers;
+        let expect_live = match step {
+            40..=69 => workers - 1,       // w3 down
+            120..=129 => workers - 1,     // w7 down (w3 is back)
+            _ => workers,
+        };
+        let live = x.completed.iter().filter(|&&d| d > 0).count();
+        assert_eq!(live, expect_live, "step {step}");
+    }
+}

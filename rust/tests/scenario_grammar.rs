@@ -1,0 +1,192 @@
+//! Scenario-grammar fuzz suite: the `--scenario` spec language must
+//! round-trip losslessly for every plan the generator can emit, and
+//! reject malformed/inconsistent input with typed errors — never a
+//! panic — because the same parser guards the CLI, the `[scenario]`
+//! config section, the sweep axis, and v2 trace metas.
+
+use dropcompute::rng::SplitMix64;
+use dropcompute::sim::{FaultEvent, FaultPlan};
+use dropcompute::util::Error;
+
+/// A random *valid* plan: one event per chosen worker (distinct workers
+/// can never overlap, so structural validation always passes).
+fn random_plan(rng: &mut SplitMix64, workers: usize, horizon: u64) -> FaultPlan {
+    let mut events = Vec::new();
+    for worker in 0..workers {
+        let step = rng.next_u64() % horizon;
+        let span = 1 + rng.next_u64() % horizon;
+        match rng.next_u64() % 5 {
+            0 => events.push(FaultEvent::Fail { step, worker, rejoin: None }),
+            1 => events.push(FaultEvent::Fail {
+                step,
+                worker,
+                rejoin: Some(span),
+            }),
+            2 => events.push(FaultEvent::Slow {
+                step,
+                worker,
+                factor: 1.0 + (rng.next_u64() % 1000) as f64 / 250.0,
+                duration: (rng.next_u64() % 2 == 0).then_some(span),
+            }),
+            3 => events.push(FaultEvent::Drift {
+                step,
+                worker,
+                rate: (rng.next_u64() % 1000) as f64 / 10_000.0,
+            }),
+            _ => {} // worker untouched by the plan
+        }
+    }
+    FaultPlan::new(events).expect("distinct workers cannot clash")
+}
+
+#[test]
+fn random_plans_round_trip_through_the_spec_grammar() {
+    let mut rng = SplitMix64::new(0x5CE4_A410);
+    for trial in 0..200 {
+        let workers = 1 + (rng.next_u64() % 12) as usize;
+        let horizon = 1 + rng.next_u64() % 500;
+        let plan = random_plan(&mut rng, workers, horizon);
+        let spec = plan.spec();
+        let back = FaultPlan::parse(&spec)
+            .unwrap_or_else(|e| panic!("trial {trial}: `{spec}`: {e}"));
+        assert_eq!(back, plan, "trial {trial}: `{spec}`");
+        assert_eq!(back.spec(), spec, "spec() is a fixed point");
+        // semantic agreement, not just structural: alive/scale are the
+        // contract the simulator consumes
+        for _ in 0..32 {
+            let w = (rng.next_u64() % workers as u64) as usize;
+            let s = rng.next_u64() % (2 * horizon);
+            assert_eq!(plan.alive(w, s), back.alive(w, s));
+            assert_eq!(
+                plan.scale(w, s).to_bits(),
+                back.scale(w, s).to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_plans_round_trip_too() {
+    // the seeded generator promises parseable, non-overlapping output
+    for seed in 0..100u64 {
+        let plan = FaultPlan::seeded(seed, 16, 200);
+        plan.validate().expect("seeded plans validate");
+        let back = FaultPlan::parse(&plan.spec()).unwrap();
+        assert_eq!(back, plan, "seed {seed}: `{}`", plan.spec());
+    }
+}
+
+#[test]
+fn mutated_specs_fail_typed_never_panic() {
+    // chop, splice, and corrupt valid specs: every outcome must be
+    // either a clean parse or an Error::Config — no panics, no
+    // silently-wrong plans (anything that parses must round-trip)
+    let seeds = [
+        "fail@100:w3,rejoin+50",
+        "slow@20:w1,x2.5,for30",
+        "drift@0:w2,+0.05",
+        "fail@5:w0;slow@9:w4,x1.5;drift@3:w7,+0.01",
+    ];
+    let garbage = "@;:,wx+forrejoin0123456789garbage!";
+    let mut rng = SplitMix64::new(0xBAD_5EED);
+    for base in seeds {
+        for trial in 0..300 {
+            let mut s: Vec<char> = base.chars().collect();
+            for _ in 0..=(rng.next_u64() % 3) {
+                let g: Vec<char> = garbage.chars().collect();
+                match rng.next_u64() % 3 {
+                    0 if !s.is_empty() => {
+                        // delete a char
+                        let i = (rng.next_u64() as usize) % s.len();
+                        s.remove(i);
+                    }
+                    1 if !s.is_empty() => {
+                        // overwrite a char
+                        let i = (rng.next_u64() as usize) % s.len();
+                        s[i] = g[(rng.next_u64() as usize) % g.len()];
+                    }
+                    _ => {
+                        // insert a char
+                        let i = (rng.next_u64() as usize) % (s.len() + 1);
+                        s.insert(i, g[(rng.next_u64() as usize) % g.len()]);
+                    }
+                }
+            }
+            let mutated: String = s.into_iter().collect();
+            match FaultPlan::parse(&mutated) {
+                Ok(plan) => {
+                    // a surviving parse must still be self-consistent
+                    let again = FaultPlan::parse(&plan.spec()).unwrap();
+                    assert_eq!(again, plan, "trial {trial}: `{mutated}`");
+                }
+                Err(Error::Config(msg)) => {
+                    assert!(
+                        msg.contains("scenario"),
+                        "trial {trial}: `{mutated}`: \
+                         error should name the scenario surface: {msg}"
+                    );
+                }
+                Err(other) => {
+                    panic!("trial {trial}: `{mutated}`: wrong error {other}")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn inconsistent_plans_are_rejected_with_typed_errors() {
+    // grammar-valid but semantically broken specs
+    let bad = [
+        // rejoin before (at) the fail: zero-length fail interval
+        "fail@10:w0,rejoin+0",
+        // overlapping fail intervals on one worker
+        "fail@10:w0,rejoin+20;fail@15:w0,rejoin+5",
+        // two unbounded fails on one worker
+        "fail@10:w0;fail@50:w0",
+        // overlapping slow windows on one worker
+        "slow@0:w1,x2.0;slow@5:w1,x3.0",
+        // duplicate drift on one worker
+        "drift@0:w2,+0.01;drift@9:w2,+0.02",
+        // non-positive slow factor / zero window
+        "slow@0:w1,x0",
+        "slow@0:w1,x-2.0",
+        "slow@0:w1,x2.0,for0",
+        // negative drift rate
+        "drift@0:w1,+-0.5",
+    ];
+    for spec in bad {
+        match FaultPlan::parse(spec) {
+            Err(Error::Config(_)) => {}
+            Ok(_) => panic!("`{spec}` must not validate"),
+            Err(other) => panic!("`{spec}`: wrong error kind {other}"),
+        }
+    }
+    // disjoint intervals on one worker are fine
+    FaultPlan::parse("fail@10:w0,rejoin+5;fail@30:w0,rejoin+5").unwrap();
+    FaultPlan::parse("slow@0:w1,x2.0,for5;slow@9:w1,x3.0").unwrap();
+}
+
+#[test]
+fn out_of_range_worker_ids_are_a_boundary_check() {
+    let plan = FaultPlan::parse("fail@0:w7").unwrap();
+    // grammar-valid for any cluster...
+    plan.validate().unwrap();
+    // ...but a concrete 4-worker cluster rejects it at the boundary
+    match plan.validate_for(4) {
+        Err(Error::Config(msg)) => {
+            assert!(msg.contains("w7"), "{msg}");
+            assert!(msg.contains('4'), "{msg}");
+        }
+        other => panic!("want typed range error, got {other:?}"),
+    }
+    // ...while the sweep's inertness contract holds: the plan simply
+    // never kills anyone who exists
+    for w in 0..4 {
+        for s in 0..10 {
+            assert!(plan.alive(w, s));
+            assert_eq!(plan.scale(w, s), 1.0);
+        }
+    }
+    plan.validate_for(8).unwrap();
+}

@@ -81,6 +81,133 @@ fn golden_fixtures_replay_bitwise_on_both_timing_paths() {
 }
 
 #[test]
+fn churn_golden_fixture_replays_bitwise_with_membership_history() {
+    // the v2 golden: a hand-mintable fixed-T^c churn run whose
+    // `[scenario]` meta kills worker 2 for exactly step 1. Replay must
+    // reinstall the plan from the meta and reproduce the pinned
+    // outcomes bitwise on both timing paths — including the faulted
+    // step's compacted 2-member collective.
+    let trace = TraceRecord::load(&fixture_path("churn.trace.json")).unwrap();
+    assert_eq!(trace.meta.version, 2);
+    assert_eq!(
+        trace.meta.scenario.as_deref(),
+        Some("fail@1:w2,rejoin+1")
+    );
+    // the JSON round trip keeps the scenario
+    let reparsed = TraceRecord::parse(&trace.to_json()).unwrap();
+    assert_eq!(reparsed, trace);
+    for reference in [false, true] {
+        let mut sim = ClusterSim::from_trace(&trace).unwrap();
+        assert!(
+            sim.fault_plan().is_some(),
+            "from_trace must reinstall the recorded plan"
+        );
+        if reference {
+            sim = sim.with_reference_timing();
+        }
+        for (i, rec) in trace.outcomes.iter().enumerate() {
+            let mut out = StepOutcome::default();
+            sim.replay_into(&mut out)
+                .unwrap_or_else(|e| panic!("churn step {i}: {e}"));
+            assert!(
+                rec.matches(&out),
+                "churn step {i} (reference={reference}): replay diverged\n  \
+                 recorded: iter={:?} compute={:?} completed={:?}\n  \
+                 replayed: iter={:?} compute={:?} completed={:?}",
+                rec.iter_time,
+                rec.compute_time,
+                rec.completed,
+                out.iter_time,
+                out.compute_time,
+                out.completed,
+            );
+        }
+    }
+    // the fixture pins the churn path for real: step 1 lost a worker
+    assert_eq!(trace.outcomes[1].completed, vec![2, 2, 0]);
+    assert_eq!(trace.outcomes[2].completed, vec![2, 2, 2], "rejoined");
+}
+
+#[test]
+fn churn_record_replay_roundtrips_for_every_topology_and_policy() {
+    // the scenario-lab acceptance sweep: a live run under a fault plan
+    // (fail + rejoin + slow window) recorded on each topology x policy
+    // replays bitwise after the JSON round trip, on both timing paths.
+    let plan = dropcompute::sim::FaultPlan::parse(
+        "fail@2:w1,rejoin+2;fail@5:w4;slow@0:w2,x1.5,for4",
+    )
+    .unwrap();
+    let topologies: Vec<Option<TopologyKind>> = std::iter::once(None)
+        .chain(TopologyKind::ALL.iter().copied().map(Some))
+        .collect();
+    let policies =
+        ["none", "tau=2.5", "deadline=1", "phase-deadline=1/0.3"];
+    for &topo in &topologies {
+        for spec in policies {
+            let policy = DropPolicy::parse(spec).expect(spec);
+            let cfg = ClusterConfig {
+                workers: 6,
+                accumulations: 3,
+                microbatch_mean: 0.45,
+                microbatch_std: 0.02,
+                comm_latency: 0.3,
+                noise: NoiseKind::Exponential { mean: 0.4 },
+                stragglers: StragglerKind::Uniform { p: 0.3, delay: 3.0 },
+                topology: topo,
+                link_latency: 1e-3,
+                link_bandwidth: 1e9,
+                grad_bytes: 4e6,
+                ..Default::default()
+            };
+            let mut live = ClusterSim::new(&cfg, 0xC0FFEE)
+                .with_policy(policy)
+                .with_fault_plan(plan.clone());
+            live.start_recording();
+            let mut recorded = Vec::new();
+            for _ in 0..8 {
+                let mut out = StepOutcome::default();
+                live.step_installed_into(&mut out);
+                recorded.push(out);
+            }
+            let trace = live
+                .finish_recording()
+                .unwrap_or_else(|e| panic!("{topo:?} {spec}: {e}"));
+            assert_eq!(trace.meta.version, 2, "{topo:?} {spec}");
+            assert_eq!(
+                trace.meta.scenario.as_deref(),
+                Some(plan.spec().as_str())
+            );
+            let parsed = TraceRecord::parse(&trace.to_json())
+                .unwrap_or_else(|e| panic!("{topo:?} {spec}: {e}"));
+            assert_eq!(parsed, trace, "{topo:?} {spec}: JSON round trip");
+            for reference in [false, true] {
+                let mut replay = ClusterSim::from_trace(&parsed)
+                    .unwrap_or_else(|e| panic!("{topo:?} {spec}: {e}"));
+                if reference {
+                    replay = replay.with_reference_timing();
+                }
+                for (i, want) in recorded.iter().enumerate() {
+                    let mut out = StepOutcome::default();
+                    replay.replay_into(&mut out).unwrap_or_else(|e| {
+                        panic!("{topo:?} {spec} step {i}: {e}")
+                    });
+                    assert!(
+                        want.iter_time.to_bits()
+                            == out.iter_time.to_bits()
+                            && want.completed == out.completed,
+                        "{topo:?} {spec} step {i} ref={reference}: churn \
+                         replay diverged"
+                    );
+                }
+            }
+            // the plan actually bit: w4 is gone from step 5 on
+            assert_eq!(recorded[6].completed[4], 0, "{topo:?} {spec}");
+            assert_eq!(recorded[6].worker_compute[4], 0.0);
+        }
+    }
+}
+
+#[test]
 fn record_serialize_parse_replay_roundtrips_bitwise_for_all_policies() {
     // the acceptance property: for every topology (plus the fixed-T^c
     // model) x every DropPolicy variant, a recorded seeded live run
@@ -189,7 +316,8 @@ fn malformed_short_and_nan_traces_are_typed_errors() {
     for bad in [
         text.replace("2.5,", "NaN,"),
         text.replace("2.5,", "1e999,"),
-        text.replace("\"version\": 1", "\"version\": 2"),
+        // version 2 is readable now (scenario metas); 3 is the future
+        text.replace("\"version\": 1", "\"version\": 3"),
         text.replace("\"steps\"", "\"stepz\""),
         text.replace("\"mode\": \"step\"", "\"mode\": \"period\""),
     ] {
