@@ -1,0 +1,228 @@
+//! Real-socket loopback latency — what the sim-to-real bridge costs.
+//!
+//! Two sections:
+//!
+//! 1. **Collective floor.** Per topology, the wall time of one socket
+//!    (UDS) all-reduce vs the in-process mpsc mesh on the same
+//!    schedule. The gap is pure transport overhead (syscalls, framing,
+//!    copies) — the real-world constant the simulator's link model
+//!    abstracts away.
+//! 2. **Harness step rate.** A full `run_loopback` with a mid-run kill:
+//!    steps per second including membership rounds and fault handling,
+//!    plus both acceptance gates (bitwise replay, ordering
+//!    conformance) asserted in-process.
+//!
+//! `--smoke` shrinks sizes for CI.
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::header;
+use dropcompute::collective::{topology_all_reduce, MeshComm};
+use dropcompute::policy::DropPolicy;
+use dropcompute::report::{f, Table};
+use dropcompute::runtime::json::Json;
+use dropcompute::sim::FaultPlan;
+use dropcompute::topology::TopologyKind;
+use dropcompute::transport::{
+    bind_mesh, replay_bitwise, run_loopback, transport_all_reduce,
+    RetryPolicy, RunSpec, SocketMesh, TransportKind,
+};
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "dropcompute-tbench-{}-{}-{}",
+        std::process::id(),
+        tag,
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Slowest rank's mean seconds per socket all-reduce.
+fn socket_op_secs(
+    topo: TopologyKind,
+    n: usize,
+    len: usize,
+    iters: usize,
+) -> f64 {
+    let dir = scratch_dir(topo.name());
+    let (bindings, endpoints) =
+        bind_mesh(TransportKind::Uds, n, &dir).unwrap();
+    let eps = Arc::new(endpoints);
+    let mut handles = Vec::new();
+    for binding in bindings {
+        let eps = Arc::clone(&eps);
+        handles.push(std::thread::spawn(move || {
+            let rank = binding.rank;
+            let mesh = SocketMesh::<f32>::establish(
+                binding,
+                &eps,
+                RetryPolicy::default(),
+                Duration::from_secs(20),
+            )
+            .unwrap();
+            let mut buf: Vec<f32> =
+                (0..len).map(|i| (rank + i) as f32).collect();
+            let start = Instant::now();
+            for step in 0..iters {
+                transport_all_reduce(
+                    &mesh,
+                    topo,
+                    step as u64,
+                    &mut buf,
+                    Duration::from_secs(20),
+                )
+                .unwrap();
+            }
+            start.elapsed().as_secs_f64() / iters as f64
+        }));
+    }
+    let secs = handles
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .fold(0.0f64, f64::max);
+    std::fs::remove_dir_all(&dir).ok();
+    secs
+}
+
+/// Slowest rank's mean seconds per mpsc all-reduce.
+fn mpsc_op_secs(topo: TopologyKind, n: usize, len: usize, iters: usize) -> f64 {
+    let handles: Vec<_> = MeshComm::<f32>::full(n)
+        .into_iter()
+        .map(|comm| {
+            std::thread::spawn(move || {
+                let mut buf: Vec<f32> =
+                    (0..len).map(|i| (comm.rank + i) as f32).collect();
+                let start = Instant::now();
+                for _ in 0..iters {
+                    topology_all_reduce(&comm, topo, &mut buf);
+                }
+                start.elapsed().as_secs_f64() / iters as f64
+            })
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .fold(0.0f64, f64::max)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    header(
+        "Real-socket loopback — transport overhead + harness step rate",
+        "the paper's drops are timing decisions; this measures what the \
+         real clock adds on top of the simulated one",
+    );
+    if smoke {
+        println!("(smoke mode: reduced sizes)");
+    }
+
+    let n = 4;
+    let len = if smoke { 256 } else { 4096 };
+    let iters = if smoke { 6 } else { 40 };
+
+    let mut t = Table::new(
+        format!("all-reduce wall time, N={n} len={len} iters={iters}"),
+        &["topology", "socket ms/op", "mpsc ms/op", "ratio"],
+    );
+    let mut json = String::from("{\n  \"bench\": \"transport_loopback\",\n");
+    json.push_str(&format!("  \"n\": {n}, \"len\": {len},\n"));
+    json.push_str("  \"collectives\": [\n");
+    for (ti, topo) in TopologyKind::ALL.iter().enumerate() {
+        let socket = socket_op_secs(*topo, n, len, iters);
+        let mpsc = mpsc_op_secs(*topo, n, len, iters);
+        t.row(vec![
+            topo.name().to_string(),
+            f(socket * 1e3, 3),
+            f(mpsc * 1e3, 3),
+            f(socket / mpsc.max(1e-12), 2),
+        ]);
+        json.push_str(&format!(
+            "    {{\"topology\": \"{}\", \"socket_ms\": {:.4}, \
+             \"mpsc_ms\": {:.4}}}{}\n",
+            topo.name(),
+            socket * 1e3,
+            mpsc * 1e3,
+            if ti + 1 < TopologyKind::ALL.len() { "," } else { "" },
+        ));
+    }
+    t.print();
+    json.push_str("  ],\n");
+
+    // ---- harness step rate under churn -----------------------------
+    let steps = if smoke { 4 } else { 12 };
+    let spec = RunSpec {
+        workers: n,
+        accums: 2,
+        iters: steps,
+        kind: TransportKind::Uds,
+        topo: TopologyKind::Ring,
+        policy: DropPolicy::parse("deadline=0.25").unwrap(),
+        plan: Some(FaultPlan::parse("kill@1:w3").unwrap()),
+        retry: RetryPolicy::default(),
+        recv_deadline: Duration::from_secs(5),
+        compute_ms: 2.0,
+        skew_ms: 5.0,
+        min_gap: 0.1,
+        grad_len: len,
+        seed: 0xBE9C,
+        dir: None,
+        latency: 25e-6,
+        bandwidth: 12.5e9,
+        bytes: len as f64 * 4.0,
+    };
+    let start = Instant::now();
+    let report = run_loopback(&spec, None).expect("loopback run");
+    let wall = start.elapsed().as_secs_f64();
+    let replayed = replay_bitwise(&report.trace).expect("bitwise replay");
+
+    let mut t = Table::new(
+        "loopback harness, ring N=4 with kill@1:w3",
+        &["metric", "value"],
+    );
+    t.row(vec!["steps".into(), steps.to_string()]);
+    t.row(vec!["wall (s)".into(), f(wall, 3)]);
+    t.row(vec!["steps/s".into(), f(steps as f64 / wall, 2)]);
+    t.row(vec![
+        "degraded steps".into(),
+        report.stats.degraded_steps.to_string(),
+    ]);
+    t.row(vec!["replayed bitwise".into(), replayed.to_string()]);
+    t.row(vec!["conformance".into(), format!("{}", report.conformance)]);
+    t.print();
+    json.push_str(&format!(
+        "  \"harness\": {{\"steps\": {steps}, \"wall_s\": {wall:.4}, \
+         \"replayed\": {replayed}, \"conformance_passed\": {}}}\n}}\n",
+        report.conformance.passed(),
+    ));
+
+    println!("JSON_BEGIN");
+    print!("{json}");
+    println!("JSON_END");
+
+    // shape checks: the emitted JSON must parse, every topology must be
+    // covered, and both acceptance gates must hold
+    let doc = Json::parse(&json).expect("bench must emit valid JSON");
+    assert_eq!(
+        doc.get("collectives").unwrap().as_arr().unwrap().len(),
+        TopologyKind::ALL.len()
+    );
+    assert_eq!(replayed as u64, steps);
+    assert!(
+        report.conformance.passed(),
+        "conformance: {}",
+        report.conformance
+    );
+    println!(
+        "\nSHAPE CHECK PASSED: {} topologies, {} harness steps, both \
+         gates green",
+        TopologyKind::ALL.len(),
+        steps
+    );
+}

@@ -16,7 +16,77 @@
 //! same collectives serve f32 gradients and f64 latency statistics.
 
 use std::ops::AddAssign;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// Typed communication failure. The historical failure mode this
+/// replaces was an *infinite hang*: `mpsc::Receiver::recv` blocks
+/// forever while the peer's `Sender` is still alive but the peer thread
+/// has stopped participating (e.g. it panicked between collectives with
+/// its `MeshComm` still on its stack). Every deadline-aware receive
+/// distinguishes the two observable causes so callers can degrade the
+/// collective instead of wedging the whole step.
+///
+/// The same vocabulary is shared by the in-process mesh and the
+/// real-socket transport ([`crate::transport`]): `PeerLost` is a
+/// disconnect (channel dropped / socket EOF / connection reset),
+/// `Timeout` is a deadline expiry with the peer possibly still alive —
+/// the distinction the DropComm membership rule needs (a lost peer can
+/// never arrive; a timed-out one may show up next step).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommError {
+    /// The peer is gone for good: its sending endpoint disconnected
+    /// (thread exited/panicked and dropped the channel, or the socket
+    /// hit EOF/reset).
+    PeerLost { peer: usize },
+    /// Nothing arrived from `peer` within `waited`; the peer may still
+    /// be alive (slow, stalled, or dropped by its own deadline).
+    Timeout { peer: usize, waited: Duration },
+}
+
+impl CommError {
+    /// The rank this failure implicates.
+    pub fn peer(&self) -> usize {
+        match self {
+            CommError::PeerLost { peer } | CommError::Timeout { peer, .. } => {
+                *peer
+            }
+        }
+    }
+
+    /// True when the peer can never deliver (disconnect, not deadline).
+    pub fn is_fatal(&self) -> bool {
+        matches!(self, CommError::PeerLost { .. })
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::PeerLost { peer } => {
+                write!(f, "peer w{peer} lost (disconnected)")
+            }
+            CommError::Timeout { peer, waited } => write!(
+                f,
+                "recv from w{peer} timed out after {:.3}s",
+                waited.as_secs_f64()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+impl From<CommError> for crate::util::Error {
+    fn from(e: CommError) -> Self {
+        crate::util::Error::Runtime(format!("collective: {e}"))
+    }
+}
+
+/// Default per-receive deadline for the infallible collective wrappers:
+/// long enough that no healthy in-process peer can miss it, short
+/// enough that a wedged test run fails loudly instead of hanging CI.
+pub const DEFAULT_RECV_DEADLINE: Duration = Duration::from_secs(30);
 
 /// Full-mesh communicator: a channel from every rank to every rank.
 pub struct MeshComm<T = f32> {
@@ -61,8 +131,39 @@ impl<T: Send + 'static> MeshComm<T> {
         self.to[dst].send(data).expect("mesh send");
     }
 
+    /// Fallible send: a disconnected destination (its thread exited and
+    /// dropped the receiving ends) surfaces as [`CommError::PeerLost`]
+    /// instead of a panic.
+    pub fn try_send(&self, dst: usize, data: Vec<T>) -> Result<(), CommError> {
+        self.to[dst]
+            .send(data)
+            .map_err(|_| CommError::PeerLost { peer: dst })
+    }
+
     pub fn recv(&self, src: usize) -> Vec<T> {
         self.from[src].recv().expect("mesh recv")
+    }
+
+    /// Receive from `src` with a deadline. Returns
+    /// [`CommError::PeerLost`] when `src`'s sending endpoint is gone
+    /// (its thread panicked or exited) and [`CommError::Timeout`] when
+    /// the deadline elapses with the peer still connected. This is the
+    /// hang-proof receive every deadline-aware collective routes
+    /// through.
+    pub fn recv_deadline(
+        &self,
+        src: usize,
+        timeout: Duration,
+    ) -> Result<Vec<T>, CommError> {
+        match self.from[src].recv_timeout(timeout) {
+            Ok(v) => Ok(v),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(CommError::PeerLost { peer: src })
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                Err(CommError::Timeout { peer: src, waited: timeout })
+            }
+        }
     }
 }
 
@@ -70,7 +171,27 @@ impl<T: Send + 'static> MeshComm<T> {
 /// broadcast down. 2·ceil(log2 N) hops of the full buffer. Association
 /// matches `topology::BinaryTree`'s schedule, so both paths produce
 /// bitwise-identical results.
+///
+/// Routed through [`MeshComm::recv_deadline`] with
+/// [`DEFAULT_RECV_DEADLINE`]: a dead peer aborts the collective with a
+/// panic that names the lost rank instead of hanging the thread.
 pub fn tree_all_reduce<T>(comm: &MeshComm<T>, buf: &mut [T])
+where
+    T: Copy + AddAssign + Send + 'static,
+{
+    try_tree_all_reduce(comm, buf, DEFAULT_RECV_DEADLINE)
+        .unwrap_or_else(|e| panic!("tree all-reduce: {e}"));
+}
+
+/// Deadline-aware binary-tree all-reduce: every receive is bounded by
+/// `deadline`, so a peer that died (or stalls past the deadline) turns
+/// into a typed [`CommError`] the caller can use to degrade the
+/// collective instead of hanging forever.
+pub fn try_tree_all_reduce<T>(
+    comm: &MeshComm<T>,
+    buf: &mut [T],
+    deadline: Duration,
+) -> Result<(), CommError>
 where
     T: Copy + AddAssign + Send + 'static,
 {
@@ -82,10 +203,10 @@ where
     while stride < n {
         if rank & stride != 0 {
             // sender: ship the buffer up and exit the reduce phase
-            comm.send(rank - stride, buf.to_vec());
+            comm.try_send(rank - stride, buf.to_vec())?;
             break;
         } else if rank + stride < n {
-            let incoming = comm.recv(rank + stride);
+            let incoming = comm.recv_deadline(rank + stride, deadline)?;
             for (dst, src) in buf.iter_mut().zip(&incoming) {
                 *dst += *src;
             }
@@ -97,38 +218,55 @@ where
     while stride >= 1 {
         if rank & (stride - 1) == 0 {
             if rank & stride != 0 {
-                let incoming = comm.recv(rank - stride);
+                let incoming = comm.recv_deadline(rank - stride, deadline)?;
                 buf.copy_from_slice(&incoming);
             } else if rank + stride < n {
-                comm.send(rank + stride, buf.to_vec());
+                comm.try_send(rank + stride, buf.to_vec())?;
             }
         }
         stride >>= 1;
     }
+    Ok(())
 }
 
 /// Naive all-reduce: every worker sends its full buffer to every other
 /// worker (N-1 full-buffer sends per worker). Accumulation in rank
 /// order, so the result is deterministic (and exact for integer-valued
 /// payloads regardless of association).
+///
+/// Routed through [`MeshComm::recv_deadline`] like [`tree_all_reduce`].
 pub fn naive_all_reduce<T>(comm: &MeshComm<T>, buf: &mut [T])
+where
+    T: Copy + AddAssign + Send + 'static,
+{
+    try_naive_all_reduce(comm, buf, DEFAULT_RECV_DEADLINE)
+        .unwrap_or_else(|e| panic!("naive all-reduce: {e}"));
+}
+
+/// Deadline-aware naive all-reduce (see [`try_tree_all_reduce`]).
+pub fn try_naive_all_reduce<T>(
+    comm: &MeshComm<T>,
+    buf: &mut [T],
+    deadline: Duration,
+) -> Result<(), CommError>
 where
     T: Copy + AddAssign + Send + 'static,
 {
     let n = comm.size;
     for dst in 0..n {
         if dst != comm.rank {
-            comm.send(dst, buf.to_vec());
+            comm.try_send(dst, buf.to_vec())?;
         }
     }
     for src in 0..n {
         if src != comm.rank {
-            let incoming = comm.recv(src);
+            let incoming = comm.recv_deadline(src, deadline)?;
             for (dst, s) in buf.iter_mut().zip(&incoming) {
                 *dst += *s;
             }
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -247,6 +385,76 @@ mod tests {
                     b.iter().map(|x| x.to_bits()).collect();
                 assert_eq!(a_bits, b_bits, "f32 n={n} rank={rank}");
             }
+        }
+    }
+
+    #[test]
+    fn dead_peer_fails_typed_instead_of_hanging() {
+        // Regression: a peer that exits before the collective (dropping
+        // its MeshComm, as a panicking thread would) used to hang every
+        // survivor forever inside `recv`. With deadline routing the
+        // survivors must all come back with a typed CommError, fast.
+        let n = 4;
+        let deadline = Duration::from_millis(250);
+        let comms = MeshComm::<f32>::full(n);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                thread::spawn(move || {
+                    if rank == 1 {
+                        // dies before participating; MeshComm drops here
+                        return Ok(());
+                    }
+                    let mut buf = vec![(rank + 1) as f32; 8];
+                    try_tree_all_reduce(&comm, &mut buf, deadline)
+                })
+            })
+            .collect();
+        let sw = crate::util::Stopwatch::start();
+        let results: Vec<_> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(results[0].is_err(), "rank 0 depends on the dead peer");
+        for (rank, r) in results.iter().enumerate().skip(2) {
+            assert!(r.is_err(), "rank {rank} must not silently succeed");
+        }
+        // every survivor unwound within a couple of deadlines, not ∞
+        assert!(sw.seconds() < 5.0, "survivors must not hang");
+    }
+
+    #[test]
+    fn stalled_peer_times_out_with_peer_id() {
+        // A peer that is alive (its channels stay open) but never sends
+        // is a Timeout, not a PeerLost — and the error names the rank
+        // the membership rule should exclude.
+        let n = 2;
+        let comms = MeshComm::<f32>::full(n);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .enumerate()
+            .map(|(rank, comm)| {
+                thread::spawn(move || {
+                    if rank == 1 {
+                        // stall well past the peer's deadline with the
+                        // comm alive, then exit without sending
+                        thread::sleep(Duration::from_millis(400));
+                        drop(comm);
+                        return None;
+                    }
+                    let mut buf = vec![1.0f32; 4];
+                    Some(try_naive_all_reduce(
+                        &comm,
+                        &mut buf,
+                        Duration::from_millis(50),
+                    ))
+                })
+            })
+            .collect();
+        let results: Vec<_> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        match results[0] {
+            Some(Err(CommError::Timeout { peer, .. })) => assert_eq!(peer, 1),
+            ref other => panic!("want Timeout from w1, got {other:?}"),
         }
     }
 

@@ -24,7 +24,10 @@ pub mod engine;
 pub mod mesh;
 
 pub use engine::{schedule_all_reduce, topology_all_reduce};
-pub use mesh::{naive_all_reduce, tree_all_reduce, MeshComm};
+pub use mesh::{
+    naive_all_reduce, tree_all_reduce, try_naive_all_reduce,
+    try_tree_all_reduce, CommError, MeshComm, DEFAULT_RECV_DEADLINE,
+};
 
 use crate::topology::chunk_bounds;
 

@@ -365,6 +365,64 @@ impl ObsConfig {
     }
 }
 
+/// `[transport]` — the real-socket loopback harness
+/// ([`crate::transport`], `transport run|bench`). Cluster shape,
+/// topology, policy, and fault plan come from the usual sections; this
+/// one holds only the socket/timing knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransportConfig {
+    /// Socket family carrying the collective (`uds` or `tcp`).
+    pub kind: crate::transport::TransportKind,
+    /// Steps a `transport run` executes.
+    pub iters: usize,
+    /// Failure-detection receive deadline, seconds (per blocking recv,
+    /// not per step — generous by default so only real peer death or a
+    /// policy deadline causes drops).
+    pub recv_deadline: f64,
+    /// Bounded connect/send retry attempts.
+    pub connect_attempts: usize,
+    /// Exponential backoff base between retries, seconds.
+    pub backoff_base: f64,
+    /// Backoff ceiling, seconds.
+    pub backoff_max: f64,
+    /// Backoff jitter fraction in `[0, 1)`.
+    pub jitter: f64,
+    /// Nominal per-micro-batch compute sleep, milliseconds.
+    pub compute_ms: f64,
+    /// Uniform per-micro-batch jitter amplitude, milliseconds (the
+    /// compute-variance knob: larger skew = more stragglers).
+    pub skew_ms: f64,
+    /// Conformance gate's minimum discriminable gap, seconds: ordering
+    /// pairs closer than this are ties and not scored.
+    pub min_gap: f64,
+    /// Elements in the gradient buffer each worker reduces.
+    pub grad_len: usize,
+    /// Socket directory for UDS endpoints (empty = fresh temp dir).
+    pub dir: String,
+    /// Where `transport run` writes the recorded trace.
+    pub trace_out: String,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            kind: crate::transport::TransportKind::Uds,
+            iters: 8,
+            recv_deadline: 30.0,
+            connect_attempts: 5,
+            backoff_base: 0.005,
+            backoff_max: 0.25,
+            jitter: 0.2,
+            compute_ms: 4.0,
+            skew_ms: 15.0,
+            min_gap: 0.04,
+            grad_len: 256,
+            dir: String::new(),
+            trace_out: "artifacts/transport.trace.json".to_string(),
+        }
+    }
+}
+
 /// Top-level run configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -375,6 +433,7 @@ pub struct Config {
     pub sweep: SweepConfig,
     pub trace: TraceConfig,
     pub obs: ObsConfig,
+    pub transport: TransportConfig,
     /// Explicit run-level drop policy (`[policy] spec = "..."`). `None`
     /// falls back to the legacy `[comm] drop_deadline` surface — see
     /// [`Config::effective_policy`].
@@ -396,6 +455,7 @@ impl Default for Config {
             sweep: SweepConfig::default(),
             trace: TraceConfig::default(),
             obs: ObsConfig::default(),
+            transport: TransportConfig::default(),
             policy: None,
             scenario: None,
             artifacts_dir: "artifacts".to_string(),
@@ -598,6 +658,49 @@ impl Config {
         c.obs.enabled = doc.bool_or("obs.enabled", false);
         c.obs.out = doc.str_or("obs.out", "");
 
+        // [transport] — real-socket loopback harness (crate::transport)
+        c.transport.kind = crate::transport::TransportKind::parse(
+            &doc.str_or("transport.kind", c.transport.kind.name()),
+        )?;
+        let tr_iters = doc.int_or("transport.iters", c.transport.iters as i64);
+        if tr_iters < 1 {
+            return Err(Error::Config(format!(
+                "transport.iters must be >= 1, got {tr_iters}"
+            )));
+        }
+        c.transport.iters = tr_iters as usize;
+        let tr_attempts = doc
+            .int_or("transport.connect_attempts", c.transport.connect_attempts as i64);
+        if tr_attempts < 1 {
+            return Err(Error::Config(format!(
+                "transport.connect_attempts must be >= 1, got {tr_attempts}"
+            )));
+        }
+        c.transport.connect_attempts = tr_attempts as usize;
+        c.transport.recv_deadline =
+            doc.float_or("transport.recv_deadline", c.transport.recv_deadline);
+        c.transport.backoff_base =
+            doc.float_or("transport.backoff_base", c.transport.backoff_base);
+        c.transport.backoff_max =
+            doc.float_or("transport.backoff_max", c.transport.backoff_max);
+        c.transport.jitter = doc.float_or("transport.jitter", c.transport.jitter);
+        c.transport.compute_ms =
+            doc.float_or("transport.compute_ms", c.transport.compute_ms);
+        c.transport.skew_ms =
+            doc.float_or("transport.skew_ms", c.transport.skew_ms);
+        c.transport.min_gap =
+            doc.float_or("transport.min_gap", c.transport.min_gap);
+        let tr_len = doc.int_or("transport.grad_len", c.transport.grad_len as i64);
+        if tr_len < 1 {
+            return Err(Error::Config(format!(
+                "transport.grad_len must be >= 1, got {tr_len}"
+            )));
+        }
+        c.transport.grad_len = tr_len as usize;
+        c.transport.dir = doc.str_or("transport.dir", &c.transport.dir);
+        c.transport.trace_out =
+            doc.str_or("transport.trace_out", &c.transport.trace_out);
+
         c.validate()?;
         Ok(c)
     }
@@ -662,6 +765,32 @@ impl Config {
             // sweep-axis plans are validated against each point's
             // worker count when the grid materializes
             plan.validate_for(self.cluster.workers)?;
+        }
+        let t = &self.transport;
+        if !(t.recv_deadline > 0.0) || !t.recv_deadline.is_finite() {
+            return Err(Error::Config(
+                "transport.recv_deadline must be finite and > 0".into(),
+            ));
+        }
+        if !t.backoff_base.is_finite()
+            || !t.backoff_max.is_finite()
+            || t.backoff_base < 0.0
+            || t.backoff_max < t.backoff_base
+        {
+            return Err(Error::Config(
+                "transport backoff must satisfy 0 <= base <= max".into(),
+            ));
+        }
+        if !(0.0..1.0).contains(&t.jitter) {
+            return Err(Error::Config(
+                "transport.jitter must be in [0, 1)".into(),
+            ));
+        }
+        if t.compute_ms < 0.0 || t.skew_ms < 0.0 || !(t.min_gap > 0.0) {
+            return Err(Error::Config(
+                "transport compute_ms/skew_ms must be >= 0 and min_gap > 0"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -1095,6 +1224,59 @@ mod tests {
             "[trace]\niters = 0",
             "[trace]\nfit_grid = 1",
             "[trace]\nfit_deadlines = 0",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(Config::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn transport_section_roundtrip() {
+        let doc = Document::parse(
+            r#"
+            [transport]
+            kind = "tcp"
+            iters = 6
+            recv_deadline = 5.0
+            connect_attempts = 3
+            backoff_base = 0.001
+            backoff_max = 0.1
+            jitter = 0.5
+            compute_ms = 2.0
+            skew_ms = 8.0
+            min_gap = 0.02
+            grad_len = 64
+            dir = "/tmp/dc-sockets"
+            trace_out = "runs/real.trace.json"
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.transport.kind, crate::transport::TransportKind::Tcp);
+        assert_eq!(c.transport.iters, 6);
+        assert_eq!(c.transport.recv_deadline, 5.0);
+        assert_eq!(c.transport.connect_attempts, 3);
+        assert_eq!(c.transport.backoff_base, 0.001);
+        assert_eq!(c.transport.backoff_max, 0.1);
+        assert_eq!(c.transport.jitter, 0.5);
+        assert_eq!(c.transport.grad_len, 64);
+        assert_eq!(c.transport.dir, "/tmp/dc-sockets");
+        assert_eq!(c.transport.trace_out, "runs/real.trace.json");
+        // defaults: UDS, generous deadline, fresh temp socket dir
+        let d = Config::default();
+        assert_eq!(d.transport, TransportConfig::default());
+        assert_eq!(d.transport.kind, crate::transport::TransportKind::Uds);
+        assert!(d.transport.dir.is_empty());
+        // bad values rejected at the config boundary
+        for bad in [
+            "[transport]\nkind = \"pigeon\"",
+            "[transport]\niters = 0",
+            "[transport]\nconnect_attempts = 0",
+            "[transport]\nrecv_deadline = 0.0",
+            "[transport]\nbackoff_base = 0.5\nbackoff_max = 0.1",
+            "[transport]\njitter = 1.0",
+            "[transport]\nmin_gap = 0.0",
+            "[transport]\ngrad_len = 0",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(Config::from_doc(&doc).is_err(), "{bad}");

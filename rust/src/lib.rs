@@ -38,4 +38,5 @@ pub mod stats;
 pub mod sweep;
 pub mod topology;
 pub mod train;
+pub mod transport;
 pub mod util;

@@ -54,6 +54,18 @@ SUBCOMMANDS:
                     per-phase) maximizing predicted speedup over the
                     trace; emits a ready-to-use --policy spec
   analyze     closed-form E[T], E[M~], S_eff      [--tau T]
+  transport   real-socket loopback collective (the sim-to-real bridge):
+                transport run   [--iters N] [--kind uds|tcp] [--policy SPEC]
+                                [--scenario SPEC] [--trace file] [--obs-out B]
+                    one OS thread + socket endpoint per worker executes
+                    the configured topology's schedule with DropCompute
+                    membership deadlines, bounded retry, and fault
+                    injection; records a v2 trace (transport meta) and
+                    gates on bitwise replay + sim-vs-real ordering
+                    conformance ([transport] config keys)
+                transport bench [--iters N] [--kind uds|tcp] [--smoke]
+                    per-topology loopback all-reduce wall time vs the
+                    in-process mpsc mesh
   obs         observability utilities:
                 obs lint <file.prom>   check Prometheus exposition format
 
@@ -112,12 +124,13 @@ fn main() -> ExitCode {
     let spec = Spec::new()
         .subcommands(&[
             "train", "local-sgd", "simulate", "tune", "scale", "sweep",
-            "trace", "analyze", "obs",
+            "trace", "analyze", "obs", "transport",
         ])
         .value_keys(&[
             "config", "set", "out", "iters", "tau", "periods", "workers",
             "grid", "topology", "comm-drop-deadline", "jobs", "thresholds",
             "deadlines", "seeds", "policy", "scenario", "trace", "obs-out",
+            "kind",
         ])
         .short('v', "verbose")
         .short('q', "quiet");
@@ -156,6 +169,7 @@ fn run(args: &Args) -> Result<()> {
         "sweep" => cmd_sweep(args, &cfg),
         "trace" => cmd_trace(args, &cfg),
         "analyze" => cmd_analyze(args, &cfg),
+        "transport" => cmd_transport(args, &cfg),
         "obs" => cmd_obs(args),
         other => {
             eprintln!("unknown subcommand `{other}`\n{USAGE}");
@@ -337,6 +351,221 @@ fn cmd_obs(args: &Args) -> Result<()> {
     }
 }
 
+/// `transport` subcommand: the real-socket loopback harness
+/// ([`dropcompute::transport`]).
+fn cmd_transport(args: &Args, cfg: &Config) -> Result<()> {
+    let action = args.positional.first().map(String::as_str).unwrap_or("run");
+    match action {
+        "run" => cmd_transport_run(args, cfg),
+        "bench" => cmd_transport_bench(args, cfg),
+        other => Err(dropcompute::util::Error::Cli(format!(
+            "unknown transport action `{other}` (want run|bench)"
+        ))),
+    }
+}
+
+fn cmd_transport_run(args: &Args, cfg: &Config) -> Result<()> {
+    use dropcompute::transport::{self, RunSpec, TransportKind};
+    let mut spec = RunSpec::from_config(cfg)?;
+    spec.iters = args.usize_or("iters", spec.iters as usize)? as u64;
+    if let Some(k) = args.get("kind") {
+        spec.kind = TransportKind::parse(k)?;
+    }
+    if let Some(t) = args.get("topology") {
+        spec.topo = dropcompute::topology::TopologyKind::parse(t)?;
+    }
+    if let Some(p) = args.get("policy") {
+        spec.policy = DropPolicy::parse(p)?;
+    }
+    if let Some(s) = args.get("scenario") {
+        let plan = FaultPlan::parse(s)?;
+        spec.plan = (!plan.is_empty()).then_some(plan);
+    }
+    spec.validate()?;
+
+    let mut obs =
+        obs_active(args, cfg).then(|| ObsRecorder::new(spec.workers));
+    let report = transport::run_loopback(&spec, obs.as_mut())?;
+
+    let mut t = Table::new(
+        format!("transport run N={} M={}", spec.workers, spec.accums),
+        &["metric", "value"],
+    );
+    t.row(vec![
+        "transport".into(),
+        format!("{} (real sockets)", spec.kind),
+    ]);
+    t.row(vec!["topology".into(), spec.topo.name().to_string()]);
+    t.row(vec!["drop policy".into(), spec.policy.spec()]);
+    if let Some(plan) = &spec.plan {
+        t.row(vec!["scenario".into(), plan.spec()]);
+    }
+    t.row(vec!["steps".into(), report.steps.len().to_string()]);
+    t.row(vec![
+        "degraded steps".into(),
+        report.stats.degraded_steps.to_string(),
+    ]);
+    t.row(vec![
+        "excluded arrivals".into(),
+        report.stats.excluded_arrivals.to_string(),
+    ]);
+    t.row(vec![
+        "peers lost / recv timeouts".into(),
+        format!("{}/{}", report.stats.peers_lost, report.stats.recv_timeouts),
+    ]);
+    t.row(vec![
+        "retries (connect/send)".into(),
+        format!(
+            "{}/{}",
+            report.stats.connect_retries, report.stats.send_retries
+        ),
+    ]);
+    t.row(vec![
+        "frames / bytes sent".into(),
+        format!("{}/{}", report.stats.frames_sent, report.stats.bytes_sent),
+    ]);
+    t.print();
+
+    // persist the recorded trace, then run the two acceptance gates:
+    // bitwise replay (both sim timing paths agree on the recorded
+    // draws) and sim-vs-real ordering conformance
+    let trace_path =
+        PathBuf::from(args.str_or("trace", &cfg.transport.trace_out));
+    report.trace.save(&trace_path)?;
+    println!("wrote {}", trace_path.display());
+    let replayed = transport::replay_bitwise(&report.trace)?;
+    println!("replay gate: {replayed} steps bitwise on both timing paths");
+    println!("conformance: {}", report.conformance);
+
+    if let Some(rec) = &obs {
+        print_obs_summary(rec);
+        if let Some(base) = obs_base(args, cfg) {
+            write_obs_outputs(rec, &base)?;
+        }
+    }
+    if !report.conformance.passed() {
+        return Err(dropcompute::util::Error::Runtime(format!(
+            "transport run: conformance gate failed ({})",
+            report.conformance
+        )));
+    }
+    Ok(())
+}
+
+/// Loopback all-reduce wall time per topology, real sockets vs the
+/// in-process mpsc mesh (same schedules, same reduce discipline).
+fn cmd_transport_bench(args: &Args, cfg: &Config) -> Result<()> {
+    use dropcompute::collective::{topology_all_reduce, MeshComm};
+    use dropcompute::topology::TopologyKind;
+    use dropcompute::transport::{
+        bind_mesh, transport_all_reduce, RetryPolicy, SocketMesh,
+        TransportKind,
+    };
+    use std::time::{Duration, Instant};
+
+    let smoke = args.flag("smoke");
+    let iters = args.usize_or("iters", if smoke { 4 } else { 25 })?;
+    let kind = match args.get("kind") {
+        Some(k) => TransportKind::parse(k)?,
+        None => cfg.transport.kind,
+    };
+    let n = cfg.cluster.workers.clamp(2, if smoke { 4 } else { 8 });
+    let len = if smoke { 64 } else { cfg.transport.grad_len.max(64) };
+    let deadline = Duration::from_secs_f64(cfg.transport.recv_deadline);
+
+    let mut t = Table::new(
+        format!("transport bench {kind} N={n} len={len} iters={iters}"),
+        &["topology", "socket ms/op", "mpsc ms/op", "ratio"],
+    );
+    for topo in TopologyKind::ALL {
+        // real sockets: one thread per rank, timed on rank 0
+        let dir = std::env::temp_dir().join(format!(
+            "dropcompute-bench-{}-{}",
+            std::process::id(),
+            topo.name()
+        ));
+        let (bindings, endpoints) = bind_mesh(kind, n, &dir)?;
+        let eps: std::sync::Arc<Vec<_>> = std::sync::Arc::new(endpoints);
+        let mut handles = Vec::new();
+        for binding in bindings {
+            let eps = std::sync::Arc::clone(&eps);
+            handles.push(std::thread::spawn(move || -> Result<f64> {
+                let rank = binding.rank;
+                let mesh = SocketMesh::<f32>::establish(
+                    binding,
+                    &eps,
+                    RetryPolicy::default(),
+                    Duration::from_secs(10),
+                )?;
+                let mut buf: Vec<f32> =
+                    (0..len).map(|i| (rank + i) as f32).collect();
+                let start = Instant::now();
+                for step in 0..iters {
+                    transport_all_reduce(
+                        &mesh,
+                        topo,
+                        step as u64,
+                        &mut buf,
+                        deadline,
+                    )
+                    .map_err(|e| {
+                        dropcompute::util::Error::Runtime(format!(
+                            "bench all-reduce: {e:?}"
+                        ))
+                    })?;
+                }
+                Ok(start.elapsed().as_secs_f64() / iters as f64)
+            }));
+        }
+        let mut socket_secs = 0.0f64;
+        for h in handles {
+            let per_op = h.join().map_err(|_| {
+                dropcompute::util::Error::Runtime(
+                    "transport bench: worker panicked".into(),
+                )
+            })??;
+            socket_secs = socket_secs.max(per_op);
+        }
+        if kind == TransportKind::Uds {
+            std::fs::remove_dir_all(&dir).ok();
+        }
+
+        // mpsc mesh: same shape, in-process channels
+        let comms = MeshComm::<f32>::full(n);
+        let mut handles = Vec::new();
+        for comm in comms {
+            handles.push(std::thread::spawn(move || {
+                let rank = comm.rank;
+                let mut buf: Vec<f32> =
+                    (0..len).map(|i| (rank + i) as f32).collect();
+                let start = Instant::now();
+                for _ in 0..iters {
+                    topology_all_reduce(&comm, topo, &mut buf);
+                }
+                start.elapsed().as_secs_f64() / iters as f64
+            }));
+        }
+        let mut mpsc_secs = 0.0f64;
+        for h in handles {
+            let per_op = h.join().map_err(|_| {
+                dropcompute::util::Error::Runtime(
+                    "transport bench: mpsc worker panicked".into(),
+                )
+            })?;
+            mpsc_secs = mpsc_secs.max(per_op);
+        }
+
+        t.row(vec![
+            topo.name().to_string(),
+            f(socket_secs * 1e3, 3),
+            f(mpsc_secs * 1e3, 3),
+            f(socket_secs / mpsc_secs.max(1e-12), 2),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
 /// Apply `--topology` / `--comm-drop-deadline` overrides to a cluster
 /// config (shared by `simulate` and `scale`).
 fn comm_overrides(
@@ -400,6 +629,7 @@ fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
         ClusterSim::new(&cluster, cfg.train.seed).with_policy(policy.clone());
     if let Some(plan) = &scenario {
         plan.validate_for(cluster.workers)?;
+        plan.validate_horizon(iters as u64)?;
         sim = sim.with_fault_plan(plan.clone());
     }
     let mut out = dropcompute::sim::StepOutcome::default();
@@ -760,6 +990,7 @@ fn cmd_trace(args: &Args, cfg: &Config) -> Result<()> {
             };
             if let Some(plan) = &scenario {
                 plan.validate_for(cluster.workers)?;
+                plan.validate_horizon(iters as u64)?;
                 sim = sim.with_fault_plan(plan.clone());
             }
             sim.start_recording();

@@ -197,6 +197,64 @@ pub fn to_prometheus(rec: &ObsRecorder) -> String {
             let _ = writeln!(out, "{name}{{worker=\"{w}\"}} {v}");
         }
     }
+
+    // Real-transport counters — emitted only when a socket run fed the
+    // recorder, so sim-only exposition stays byte-identical.
+    let t = &rec.transport;
+    if t.used() {
+        let _ = writeln!(
+            out,
+            "# HELP dropcompute_transport_events_total Socket-transport \
+             events by kind."
+        );
+        let _ =
+            writeln!(out, "# TYPE dropcompute_transport_events_total counter");
+        for (kind, v) in [
+            ("connect_retry", t.connect_retries),
+            ("send_retry", t.send_retries),
+            ("recv_timeout", t.recv_timeouts),
+            ("peer_lost", t.peers_lost),
+            ("degraded_step", t.degraded_steps),
+            ("excluded_arrival", t.excluded_arrivals),
+        ] {
+            let _ = writeln!(
+                out,
+                "dropcompute_transport_events_total{{kind=\"{kind}\"}} {v}"
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP dropcompute_transport_frames_total Frames written to \
+             peers."
+        );
+        let _ =
+            writeln!(out, "# TYPE dropcompute_transport_frames_total counter");
+        let _ = writeln!(
+            out,
+            "dropcompute_transport_frames_total {}",
+            t.frames_sent
+        );
+        let _ = writeln!(
+            out,
+            "# HELP dropcompute_transport_bytes_total Bytes written to peers."
+        );
+        let _ =
+            writeln!(out, "# TYPE dropcompute_transport_bytes_total counter");
+        let _ =
+            writeln!(out, "dropcompute_transport_bytes_total {}", t.bytes_sent);
+        prom_histogram(
+            &mut out,
+            "dropcompute_transport_backoff_seconds",
+            "Backoff sleeps taken on connect/send retry.",
+            &t.backoff_wait,
+        );
+        prom_histogram(
+            &mut out,
+            "dropcompute_transport_recv_wait_seconds",
+            "Time blocked in socket receives.",
+            &t.recv_wait,
+        );
+    }
     out
 }
 
@@ -291,7 +349,28 @@ pub fn to_json_snapshot(rec: &ObsRecorder) -> String {
             s.triggered_checkpoint
         );
     }
-    out.push_str("]}");
+    out.push(']');
+    if rec.transport.used() {
+        let t = &rec.transport;
+        let _ = write!(
+            out,
+            ",\"transport\":{{\"connect_retries\":{},\"send_retries\":{},\
+             \"recv_timeouts\":{},\"peers_lost\":{},\"degraded_steps\":{},\
+             \"excluded_arrivals\":{},\"frames_sent\":{},\"bytes_sent\":{},\
+             \"backoff_wait\":{},\"recv_wait\":{}}}",
+            t.connect_retries,
+            t.send_retries,
+            t.recv_timeouts,
+            t.peers_lost,
+            t.degraded_steps,
+            t.excluded_arrivals,
+            t.frames_sent,
+            t.bytes_sent,
+            json_hist(&t.backoff_wait),
+            json_hist(&t.recv_wait),
+        );
+    }
+    out.push('}');
     out
 }
 
@@ -692,5 +771,46 @@ mod tests {
         // A clean payload stays clean.
         let ok = "# TYPE m counter\nm{a=\"b\"} 1\n";
         assert!(lint_prometheus(ok).is_empty());
+    }
+
+    #[test]
+    fn transport_block_is_gated_on_use_and_lints() {
+        // Sim-only recorders export no transport family at all — the
+        // output is byte-identical to the pre-transport format.
+        let plain = sample_recorder();
+        assert!(!to_prometheus(&plain).contains("transport"));
+        assert!(!to_json_snapshot(&plain).contains("transport"));
+
+        let mut r = sample_recorder();
+        r.transport.peers_lost = 2;
+        r.transport.frames_sent = 40;
+        r.transport.bytes_sent = 1024;
+        r.transport.recv_wait.record(0.003);
+        r.transport.backoff_wait.record(0.010);
+        let text = to_prometheus(&r);
+        let errs = lint_prometheus(&text);
+        assert!(errs.is_empty(), "lint violations: {errs:?}");
+        assert!(text
+            .contains("dropcompute_transport_events_total{kind=\"peer_lost\"} 2"));
+        assert!(text.contains("dropcompute_transport_frames_total 40"));
+        assert!(text.contains("dropcompute_transport_recv_wait_seconds_count 1"));
+
+        let j = Json::parse(&to_json_snapshot(&r)).unwrap();
+        assert_eq!(
+            j.path(&["transport", "peers_lost"]).unwrap().as_f64(),
+            Some(2.0)
+        );
+        assert_eq!(
+            j.path(&["transport", "recv_wait", "count"]).unwrap().as_f64(),
+            Some(1.0)
+        );
+
+        // merge folds transport counters element-wise
+        let mut merged = ObsRecorder::new(2);
+        merged.merge(&r);
+        merged.merge(&r);
+        assert_eq!(merged.transport.peers_lost, 4);
+        assert_eq!(merged.transport.recv_wait.count(), 2);
+        assert!(merged.transport.used());
     }
 }

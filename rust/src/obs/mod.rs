@@ -41,4 +41,6 @@ pub mod recorder;
 pub use export::{lint_prometheus, to_json_snapshot, to_prometheus};
 pub use hist::LogHistogram;
 pub use observer::{DropCause, NoopObserver, SimObserver};
-pub use recorder::{DropTotals, ObsRecorder, PhaseStat, WorkerStats};
+pub use recorder::{
+    DropTotals, ObsRecorder, PhaseStat, TransportStats, WorkerStats,
+};

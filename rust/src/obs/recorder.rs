@@ -60,6 +60,65 @@ impl DropTotals {
     }
 }
 
+/// Socket-transport counters (see [`crate::transport`]): retries,
+/// typed failures, degradation events, and wait-time histograms.
+/// All-zero (and absent from exports) unless a real-transport run fed
+/// the recorder. Merging is element-wise; fold per-rank stats in rank
+/// order for a deterministic run total.
+#[derive(Debug, Clone, Default)]
+pub struct TransportStats {
+    /// Connect attempts that failed and were retried with backoff.
+    pub connect_retries: u64,
+    /// Send attempts that failed transiently and were retried.
+    pub send_retries: u64,
+    /// Receives that expired their deadline (typed `Timeout`).
+    pub recv_timeouts: u64,
+    /// Typed `PeerLost` observations (EOF/reset/retry-exhaustion).
+    pub peers_lost: u64,
+    /// Steps where some worker degraded after membership agreement.
+    pub degraded_steps: u64,
+    /// Worker-steps excluded by the membership deadline.
+    pub excluded_arrivals: u64,
+    /// Frames successfully written to peers.
+    pub frames_sent: u64,
+    /// Bytes successfully written to peers (headers + payloads).
+    pub bytes_sent: u64,
+    /// Backoff sleeps taken (seconds).
+    pub backoff_wait: LogHistogram,
+    /// Time spent blocked in receives (seconds).
+    pub recv_wait: LogHistogram,
+}
+
+impl TransportStats {
+    /// Did any transport activity happen? Gates export emission so
+    /// sim-only snapshots are byte-identical to pre-transport ones.
+    pub fn used(&self) -> bool {
+        self.connect_retries != 0
+            || self.send_retries != 0
+            || self.recv_timeouts != 0
+            || self.peers_lost != 0
+            || self.degraded_steps != 0
+            || self.excluded_arrivals != 0
+            || self.frames_sent != 0
+            || self.bytes_sent != 0
+            || self.backoff_wait.count() != 0
+            || self.recv_wait.count() != 0
+    }
+
+    pub fn merge(&mut self, other: &TransportStats) {
+        self.connect_retries += other.connect_retries;
+        self.send_retries += other.send_retries;
+        self.recv_timeouts += other.recv_timeouts;
+        self.peers_lost += other.peers_lost;
+        self.degraded_steps += other.degraded_steps;
+        self.excluded_arrivals += other.excluded_arrivals;
+        self.frames_sent += other.frames_sent;
+        self.bytes_sent += other.bytes_sent;
+        self.backoff_wait.merge(&other.backoff_wait);
+        self.recv_wait.merge(&other.recv_wait);
+    }
+}
+
 /// Streaming per-phase completion-time stats (compiled full-cluster
 /// collective path).
 #[derive(Debug, Clone, Copy, Default)]
@@ -109,6 +168,8 @@ pub struct ObsRecorder {
     pub scheduled_microbatches: u64,
     /// Micro-batches that made it into the reduction (post-comm).
     pub completed_microbatches: u64,
+    /// Real-transport counters (all-zero for sim-only runs).
+    pub transport: TransportStats,
 
     // --- per-step scratch, cleared/overwritten each step ---
     /// Pre-comm completed counts buffered from `on_worker`, so comm
@@ -173,6 +234,7 @@ impl ObsRecorder {
         self.drops.comm_lost_microbatches += other.drops.comm_lost_microbatches;
         self.scheduled_microbatches += other.scheduled_microbatches;
         self.completed_microbatches += other.completed_microbatches;
+        self.transport.merge(&other.transport);
     }
 
     /// The attribution cross-check the tests hold: every scheduled

@@ -326,6 +326,15 @@ impl DropPolicy {
         }
     }
 
+    /// True when the policy acts purely on the comm side (membership
+    /// deadlines, or nothing): no τ threshold and no local-SGD period.
+    /// This is the contract the real transport enforces — its workers
+    /// always compute every micro-batch, so a compute-side clause
+    /// could never take effect and is rejected up front.
+    pub fn comm_only(&self) -> bool {
+        self.compute_cutoff().is_none() && self.local_sgd_h().is_none()
+    }
+
     /// Local-SGD period, if this policy measures periods.
     pub fn local_sgd_h(&self) -> Option<usize> {
         match self {

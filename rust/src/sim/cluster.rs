@@ -1319,6 +1319,7 @@ impl ClusterSim {
             comm: TraceComm::from_model(&self.comm),
             single_restart: !self.recursive_restart,
             scenario: self.fault.as_ref().map(|p| p.spec()),
+            transport: None,
         }));
     }
 

@@ -24,6 +24,7 @@
 //! ```text
 //! spec   := "none" | clause (';' clause)*
 //! clause := "fail@" step ":w" worker ["," "rejoin+" steps]
+//!         | "kill@" step ":w" worker
 //!         | "slow@" step ":w" worker ",x" factor ["," "for" steps]
 //!         | "drift@" step ":w" worker ",+" rate
 //! ```
@@ -31,7 +32,10 @@
 //! e.g. `fail@100:w3,rejoin+50`, `slow@20:w1,x2.5,for30`,
 //! `drift@0:w2,+0.05`, or several joined with `;`. The separator is
 //! `;` (not the policy grammar's `+`) because clauses themselves
-//! contain `+`.
+//! contain `+`. `kill@S:wN` is sugar for a permanent `fail@S:wN` —
+//! the transport fault injector's vocabulary for "this worker dies
+//! and never rejoins" — and renders back as `fail@S:wN` (the two are
+//! the same event; `spec()` picks the canonical form).
 
 use crate::rng::SplitMix64;
 use crate::util::{Error, Result};
@@ -296,6 +300,33 @@ impl FaultPlan {
         Ok(())
     }
 
+    /// Validate against a run horizon of `horizon` steps (steps
+    /// `0..horizon`): a `rejoin` that lands at or beyond the horizon
+    /// can never fire — the worker is dead for the rest of the run and
+    /// the spec's `rejoin+R` is silently inert, which is almost always
+    /// a typo'd span or a too-short run. Rejected with a typed error
+    /// instead (write `fail@S:wN` / `kill@S:wN` for a permanent loss).
+    /// Events *starting* at or beyond the horizon stay legal: plans are
+    /// written to be inert on shorter runs (see [`Self::alive`]).
+    pub fn validate_horizon(&self, horizon: u64) -> Result<()> {
+        for e in &self.events {
+            if let FaultEvent::Fail { step, rejoin: Some(r), .. } = e {
+                if *step < horizon && step.saturating_add(*r) >= horizon {
+                    return Err(Error::Config(format!(
+                        "scenario: `{}`: rejoin at step {} is at/beyond \
+                         the {horizon}-step run horizon and would never \
+                         fire — use fail@{step}:w{} (or kill@) for a \
+                         permanent failure, or extend the run",
+                        e.spec(),
+                        step.saturating_add(*r),
+                        e.worker(),
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Parse a spec string (see the module-docs grammar). Validates.
     pub fn parse(spec: &str) -> Result<Self> {
         let spec = spec.trim();
@@ -316,8 +347,8 @@ impl FaultPlan {
         let bad = |why: &str| {
             Error::Config(format!(
                 "scenario: bad clause `{clause}`: {why} (want \
-                 fail@S:wN[,rejoin+R], slow@S:wN,xF[,forD] or \
-                 drift@S:wN,+R)"
+                 fail@S:wN[,rejoin+R], kill@S:wN, slow@S:wN,xF[,forD] \
+                 or drift@S:wN,+R)"
             ))
         };
         let (kind, rest) =
@@ -351,6 +382,19 @@ impl FaultPlan {
                     }
                 };
                 FaultEvent::Fail { step, worker, rejoin }
+            }
+            // `kill` is the no-rejoin alias: a permanent fail. A rejoin
+            // argument contradicts the word, so it is rejected rather
+            // than silently reinterpreted.
+            "kill" => {
+                if let Some(extra) = parts.next() {
+                    return Err(bad(&format!(
+                        "kill takes no arguments (got `{extra}`); a \
+                         killed worker never rejoins — use \
+                         fail@S:wN,rejoin+R for that"
+                    )));
+                }
+                FaultEvent::Fail { step, worker, rejoin: None }
             }
             "slow" => {
                 let ftok = parts.next().ok_or_else(|| bad("missing xF"))?;
@@ -551,6 +595,52 @@ mod tests {
         assert_eq!(p.scale(1, 22).to_bits(), 1.0f64.to_bits());
         assert!(p.has_scaling());
         assert!(!FaultPlan::parse("fail@1:w0").unwrap().has_scaling());
+    }
+
+    #[test]
+    fn kill_is_a_permanent_fail_alias() {
+        let k = FaultPlan::parse("kill@7:w2").unwrap();
+        let f = FaultPlan::parse("fail@7:w2").unwrap();
+        assert_eq!(k, f, "kill parses to the same event as fail");
+        // canonical rendering: spec() emits the fail form, which still
+        // round-trips
+        assert_eq!(k.spec(), "fail@7:w2");
+        assert_eq!(FaultPlan::parse(&k.spec()).unwrap(), k);
+        assert!(!k.alive(2, 7));
+        assert!(!k.alive(2, u64::MAX));
+        // mixed clauses work; kill + rejoin is a contradiction
+        FaultPlan::parse("kill@3:w0;slow@1:w1,x2.0").unwrap();
+        for spec in ["kill@3:w0,rejoin+5", "kill@3:w0,x2", "kill@3:w0,extra"]
+        {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(
+                format!("{err}").contains("scenario"),
+                "{spec}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejoin_beyond_horizon_is_rejected_not_inert() {
+        let p = FaultPlan::parse("fail@10:w1,rejoin+5").unwrap();
+        // rejoin at step 15: fine for >= 16 steps, dead weight below
+        assert!(p.validate_horizon(16).is_ok());
+        for horizon in [15, 12, 11] {
+            let err = p.validate_horizon(horizon).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("scenario"), "{msg}");
+            assert!(msg.contains("horizon"), "{msg}");
+        }
+        // a fail that *starts* beyond the horizon stays legal (plans
+        // are allowed to be inert on shorter runs)...
+        let late = FaultPlan::parse("fail@100:w1,rejoin+5").unwrap();
+        assert!(late.validate_horizon(50).is_ok());
+        // ...and permanent fails have no rejoin to strand
+        assert!(FaultPlan::parse("kill@10:w1")
+            .unwrap()
+            .validate_horizon(11)
+            .is_ok());
+        assert!(FaultPlan::default().validate_horizon(0).is_ok());
     }
 
     #[test]

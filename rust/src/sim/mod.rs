@@ -48,5 +48,5 @@ pub use noise::{build_noise, LatencyModel, NoiseSampler};
 pub use survivor::SurvivorScheduleCache;
 pub use trace::{
     StepTrace, Trace, TraceComm, TraceMeta, TraceMode, TraceOutcome,
-    TraceRecord, TraceWriter, TRACE_FORMAT_VERSION,
+    TraceRecord, TraceTransport, TraceWriter, TRACE_FORMAT_VERSION,
 };

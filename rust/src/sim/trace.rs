@@ -290,6 +290,59 @@ impl TraceComm {
     }
 }
 
+/// Transport provenance of a trace recorded by a *real* loopback run
+/// ([`crate::transport::run_loopback`]): which socket family carried
+/// the collective and the retry/backoff/deadline knobs in force.
+/// Replay never consumes these (the recorded samples already embed
+/// every real-world effect), but `budget_fit` and audits need to know
+/// what produced the data. Optional v2 field: v1 traces and
+/// sim-recorded v2 traces simply omit it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceTransport {
+    pub kind: crate::transport::TransportKind,
+    /// Failure-detection receive deadline, seconds.
+    pub recv_deadline: f64,
+    /// Bounded connect/send retry attempts.
+    pub connect_attempts: u32,
+    /// Exponential backoff base, seconds.
+    pub backoff_base: f64,
+    /// Backoff ceiling, seconds.
+    pub backoff_max: f64,
+    /// Jitter fraction in `[0, 1)`.
+    pub jitter: f64,
+}
+
+impl TraceTransport {
+    fn validate(&self) -> Result<()> {
+        if !(self.recv_deadline > 0.0) || !self.recv_deadline.is_finite() {
+            return Err(Error::Data(
+                "trace: transport.recv_deadline must be finite and > 0".into(),
+            ));
+        }
+        if self.connect_attempts == 0 {
+            return Err(Error::Data(
+                "trace: transport.connect_attempts must be >= 1".into(),
+            ));
+        }
+        if !self.backoff_base.is_finite()
+            || !self.backoff_max.is_finite()
+            || self.backoff_base < 0.0
+            || self.backoff_max < self.backoff_base
+        {
+            return Err(Error::Data(
+                "trace: transport backoff must satisfy 0 <= base <= max"
+                    .into(),
+            ));
+        }
+        if !(0.0..1.0).contains(&self.jitter) {
+            return Err(Error::Data(
+                "trace: transport.jitter must be in [0, 1)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Run metadata of a [`TraceRecord`]: everything needed to rebuild the
 /// recorded sim (minus the latency model, which replay never samples).
 #[derive(Debug, Clone, PartialEq)]
@@ -313,6 +366,9 @@ pub struct TraceMeta {
     /// replay under the same membership schedule — the dead seats are
     /// part of the collective's timing. Serialized only when present.
     pub scenario: Option<String>,
+    /// Real-socket transport provenance (see [`TraceTransport`]).
+    /// `None` for sim-recorded traces. Serialized only when present.
+    pub transport: Option<TraceTransport>,
 }
 
 /// One recorded step (or Local-SGD period): per worker, the straggler
@@ -467,6 +523,19 @@ impl TraceRecord {
         if let Some(sc) = &self.meta.scenario {
             s.push_str(&format!("  \"scenario\": \"{sc}\",\n"));
         }
+        if let Some(t) = &self.meta.transport {
+            s.push_str(&format!(
+                "  \"transport\": {{\"kind\": \"{}\", \"recv_deadline\": \
+                 {:?}, \"connect_attempts\": {}, \"backoff_base\": {:?}, \
+                 \"backoff_max\": {:?}, \"jitter\": {:?}}},\n",
+                t.kind.name(),
+                t.recv_deadline,
+                t.connect_attempts,
+                t.backoff_base,
+                t.backoff_max,
+                t.jitter,
+            ));
+        }
         match &self.meta.comm {
             TraceComm::Fixed { latency } => {
                 s.push_str(&format!(
@@ -547,6 +616,19 @@ impl TraceRecord {
                     })?,
             ),
         };
+        let transport = match doc.get("transport") {
+            None => None,
+            Some(t) => Some(TraceTransport {
+                kind: crate::transport::TransportKind::parse(&req_str(
+                    t, "kind",
+                )?)?,
+                recv_deadline: req_f64(t, "recv_deadline")?,
+                connect_attempts: req_uint(t, "connect_attempts")? as u32,
+                backoff_base: req_f64(t, "backoff_base")?,
+                backoff_max: req_f64(t, "backoff_max")?,
+                jitter: req_f64(t, "jitter")?,
+            }),
+        };
         let comm_obj = req(&doc, "comm")?;
         let kind = req_str(comm_obj, "kind")?;
         let comm = if kind == "fixed" {
@@ -606,6 +688,7 @@ impl TraceRecord {
                 comm,
                 single_restart,
                 scenario,
+                transport,
             },
             steps,
             outcomes,
@@ -629,6 +712,9 @@ impl TraceRecord {
             // cluster, or replay could never honor it
             let plan = crate::sim::FaultPlan::parse(spec)?;
             plan.validate_for(self.meta.workers)?;
+        }
+        if let Some(t) = &self.meta.transport {
+            t.validate()?;
         }
         let policy = crate::policy::DropPolicy::parse(&self.meta.policy)?;
         let eff_h = policy.local_sgd_h();
@@ -924,6 +1010,7 @@ mod tests {
                 },
                 single_restart: false,
                 scenario: None,
+                transport: None,
             },
             steps: vec![
                 StepTrace {
@@ -1057,6 +1144,46 @@ mod tests {
         let doc = sample_record()
             .to_json()
             .replace("\"seed\": 7,", "\"seed\": 7,\n  \"scenario\": 3,");
+        assert!(TraceRecord::parse(&doc).is_err());
+    }
+
+    #[test]
+    fn transport_meta_roundtrips_and_is_validated() {
+        let mut r = sample_record();
+        r.meta.transport = Some(TraceTransport {
+            kind: crate::transport::TransportKind::Uds,
+            recv_deadline: 30.0,
+            connect_attempts: 5,
+            backoff_base: 0.005,
+            backoff_max: 0.25,
+            jitter: 0.2,
+        });
+        let text = r.to_json();
+        assert!(text.contains("\"transport\""));
+        let parsed = TraceRecord::parse(&text).unwrap();
+        assert_eq!(parsed.meta.transport, r.meta.transport);
+        assert_eq!(parsed, r);
+        // sim-recorded traces omit the block entirely, and still parse
+        let sim_only = sample_record();
+        assert!(!sim_only.to_json().contains("transport"));
+        assert_eq!(
+            TraceRecord::parse(&sim_only.to_json()).unwrap().meta.transport,
+            None
+        );
+        // bad knob values are typed errors
+        for mutate in [
+            |t: &mut TraceTransport| t.recv_deadline = 0.0,
+            |t: &mut TraceTransport| t.recv_deadline = f64::NAN,
+            |t: &mut TraceTransport| t.connect_attempts = 0,
+            |t: &mut TraceTransport| t.backoff_max = 0.001, // < base
+            |t: &mut TraceTransport| t.jitter = 1.0,
+        ] {
+            let mut bad = r.clone();
+            mutate(bad.meta.transport.as_mut().unwrap());
+            assert!(bad.validate().is_err());
+        }
+        // unknown transport kinds in the document are rejected
+        let doc = text.replace("\"kind\": \"uds\"", "\"kind\": \"pigeon\"");
         assert!(TraceRecord::parse(&doc).is_err());
     }
 

@@ -162,6 +162,38 @@ impl Schedule {
         }
         ready.iter().cloned().fold(0.0, f64::max)
     }
+
+    /// Per-worker completion times under the [`Self::uniform_cost`]
+    /// readiness recurrence, but seeded with heterogeneous `arrivals`
+    /// (one per worker, same time base). This is the prediction the
+    /// real-transport conformance gate scores against measured wall
+    /// clocks: given when each worker *actually* finished computing,
+    /// when does the model say each finishes the collective?
+    pub fn worker_completion_from(
+        &self,
+        arrivals: &[f64],
+        latency: f64,
+        bandwidth: f64,
+        bytes: f64,
+    ) -> Vec<f64> {
+        debug_assert_eq!(arrivals.len(), self.workers, "arrival count");
+        let mut ready = arrivals.to_vec();
+        for phase in &self.phases {
+            let mut next = ready.clone();
+            for t in &phase.transfers {
+                let hop = latency + t.chunk.fraction() * bytes / bandwidth;
+                let done = ready[t.src] + hop;
+                if done > next[t.dst] {
+                    next[t.dst] = done;
+                }
+                if done > next[t.src] {
+                    next[t.src] = done;
+                }
+            }
+            ready = next;
+        }
+        ready
+    }
 }
 
 #[cfg(test)]
@@ -245,5 +277,36 @@ mod tests {
         let s = Schedule::empty(1);
         assert_eq!(s.uniform_cost(1e-4, 1e9, 4e6), 0.0);
         assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn worker_completion_from_generalizes_uniform_cost() {
+        let mut s = Schedule::empty(3);
+        s.phases.push(Phase {
+            transfers: vec![
+                Transfer {
+                    src: 0,
+                    dst: 1,
+                    chunk: Chunk::FULL,
+                    op: TransferOp::Reduce,
+                },
+                Transfer {
+                    src: 2,
+                    dst: 0,
+                    chunk: Chunk::FULL,
+                    op: TransferOp::Reduce,
+                },
+            ],
+        });
+        // zero arrivals reproduce uniform_cost at the max
+        let z = s.worker_completion_from(&[0.0; 3], 1e-3, 1e9, 4e6);
+        let max = z.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(max.to_bits(), s.uniform_cost(1e-3, 1e9, 4e6).to_bits());
+        // a straggling sender delays its receiver past the straggle
+        let hop = 1e-3 + 4e6 / 1e9;
+        let f = s.worker_completion_from(&[0.0, 0.0, 0.5], 1e-3, 1e9, 4e6);
+        assert_eq!(f[0].to_bits(), (0.5 + hop).to_bits());
+        assert_eq!(f[1].to_bits(), hop.to_bits());
+        assert_eq!(f[2].to_bits(), (0.5 + hop).to_bits());
     }
 }

@@ -1,0 +1,103 @@
+//! Schedule execution over the socket mesh — including *survivor
+//! subsets*.
+//!
+//! The discipline is byte-for-byte the one in
+//! [`collective::engine`](crate::collective::engine): per phase, ship
+//! every outgoing chunk where `t.src == me`, then apply incoming
+//! chunks in schedule order (Reduce → `+=`, Copy → overwrite). Fixed
+//! application order ⇒ fixed association ⇒ the socket path is
+//! bitwise-identical to the mpsc path for the same schedule, which is
+//! what the parity suite asserts.
+//!
+//! The subset form is the DropCompute degradation path: after the
+//! membership round agrees on `members` (sorted global ranks), the
+//! survivors execute a fresh `k = members.len()` schedule, with
+//! schedule rank = index in `members` — the same membership rule the
+//! simulator's `SurvivorScheduleCache` models.
+
+use std::ops::AddAssign;
+use std::time::Duration;
+
+use crate::collective::CommError;
+use crate::topology::{Schedule, TopologyKind, TransferOp};
+
+use super::peer::SocketMesh;
+use super::wire::{FrameTag, Wire};
+
+/// Execute `schedule` over the subset `members` of the mesh (sorted
+/// global ranks; must contain this rank). Each receive is bounded by
+/// `deadline`; a late or dead member surfaces as a typed [`CommError`]
+/// so the caller can degrade the step instead of hanging.
+pub fn subgroup_all_reduce<T: Wire + AddAssign>(
+    mesh: &SocketMesh<T>,
+    members: &[usize],
+    schedule: &Schedule,
+    step: u64,
+    buf: &mut [T],
+    deadline: Duration,
+) -> Result<(), CommError> {
+    debug_assert_eq!(schedule.workers, members.len(), "schedule/subset size");
+    debug_assert!(schedule.validate().is_ok(), "invalid schedule");
+    let me = members
+        .iter()
+        .position(|&r| r == mesh.rank)
+        .expect("subgroup_all_reduce called by a non-member");
+    let len = buf.len();
+    for (p, phase) in schedule.phases.iter().enumerate() {
+        let phase_id = p as u32;
+        // 1. ship outgoing chunks (socket buffers absorb them — at most
+        //    one chunk per peer per phase, so this does not block).
+        for t in &phase.transfers {
+            if t.src == me {
+                let (a, b) = t.chunk.bounds(len);
+                mesh.send(
+                    members[t.dst],
+                    step,
+                    phase_id,
+                    FrameTag::Data,
+                    &buf[a..b],
+                )?;
+            }
+        }
+        // 2. apply incoming chunks in schedule order.
+        for t in &phase.transfers {
+            if t.dst == me {
+                let incoming = mesh.recv_matching(
+                    members[t.src],
+                    step,
+                    phase_id,
+                    FrameTag::Data,
+                    deadline,
+                )?;
+                let (a, b) = t.chunk.bounds(len);
+                debug_assert_eq!(incoming.len(), b - a, "chunk size");
+                match t.op {
+                    TransferOp::Reduce => {
+                        for (dst, src) in buf[a..b].iter_mut().zip(&incoming)
+                        {
+                            *dst += *src;
+                        }
+                    }
+                    TransferOp::Copy => {
+                        buf[a..b].copy_from_slice(&incoming);
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Full-mesh convenience: build `kind`'s schedule for the whole mesh
+/// and execute it (step tags the frames; pick a fresh step per op).
+pub fn transport_all_reduce<T: Wire + AddAssign>(
+    mesh: &SocketMesh<T>,
+    kind: TopologyKind,
+    step: u64,
+    buf: &mut [T],
+    deadline: Duration,
+) -> Result<(), CommError> {
+    let members: Vec<usize> = (0..mesh.size).collect();
+    let schedule = kind.build(mesh.size);
+    subgroup_all_reduce(mesh, &members, &schedule, step, buf, deadline)
+}

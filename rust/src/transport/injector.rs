@@ -1,0 +1,92 @@
+//! Plan-driven fault injection over *real* worker threads.
+//!
+//! The same [`FaultPlan`] grammar that drives the simulator's virtual
+//! faults here changes what actual threads do:
+//!
+//! * dead at step `s` with no future rejoin → the worker thread
+//!   **returns**, dropping its mesh — peers observe EOF and get typed
+//!   [`PeerLost`](crate::collective::CommError) instead of a hang;
+//! * dead with a rejoin ahead → the thread idles the step (sockets
+//!   stay open) and resynchronizes at the rejoin step;
+//! * slowed → the thread's synthetic compute sleeps are stretched by
+//!   the plan's scale factor, for real, on the clock.
+//!
+//! Because the plan is shared, membership coordination needs no
+//! failure detector for *planned* deaths: every worker derives the
+//! same coordinator (lowest plan-alive rank) and the same wait set per
+//! step. Unplanned deaths still degrade typed via socket errors.
+
+use crate::sim::FaultPlan;
+
+/// A [`FaultPlan`] specialized to a concrete run horizon.
+#[derive(Debug, Clone)]
+pub struct Injector {
+    plan: Option<FaultPlan>,
+    horizon: u64,
+}
+
+impl Injector {
+    pub fn new(plan: Option<FaultPlan>, horizon: u64) -> Self {
+        Injector { plan, horizon }
+    }
+
+    /// Is `worker` scheduled to participate in `step`?
+    pub fn alive(&self, worker: usize, step: u64) -> bool {
+        self.plan.as_ref().map_or(true, |p| p.alive(worker, step))
+    }
+
+    /// Compute-time stretch factor for `worker` at `step`.
+    pub fn scale(&self, worker: usize, step: u64) -> f64 {
+        self.plan.as_ref().map_or(1.0, |p| p.scale(worker, step))
+    }
+
+    /// Dead at `step` and at every remaining step of the run — the
+    /// worker thread should exit (a real kill), not idle.
+    pub fn gone_for_good(&self, worker: usize, step: u64) -> bool {
+        !self.alive(worker, step)
+            && (step..self.horizon).all(|s| !self.alive(worker, s))
+    }
+
+    /// The membership coordinator for `step`: the lowest plan-alive
+    /// rank. A pure function of the shared plan, so every worker
+    /// agrees without any election traffic. `None` when the plan has
+    /// everyone dead this step.
+    pub fn coordinator(&self, workers: usize, step: u64) -> Option<usize> {
+        (0..workers).find(|&w| self.alive(w, step))
+    }
+
+    /// All plan-alive ranks at `step`, ascending.
+    pub fn alive_set(&self, workers: usize, step: u64) -> Vec<usize> {
+        (0..workers).filter(|&w| self.alive(w, step)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_rejoin_and_coordinator_handoff() {
+        let plan = FaultPlan::parse("kill@2:w0;fail@1:w2,rejoin+2").unwrap();
+        let inj = Injector::new(Some(plan), 6);
+        // w0 alive for steps 0-1, then permanently gone
+        assert!(inj.alive(0, 1));
+        assert!(!inj.alive(0, 2));
+        assert!(inj.gone_for_good(0, 2));
+        assert!(!inj.gone_for_good(0, 1));
+        // w2 is down for steps 1-2 but rejoins at 3: not gone for good
+        assert!(!inj.alive(2, 1));
+        assert!(!inj.gone_for_good(2, 1));
+        assert!(inj.alive(2, 3));
+        // coordinator hands off from w0 to w1 when w0 dies
+        assert_eq!(inj.coordinator(4, 0), Some(0));
+        assert_eq!(inj.coordinator(4, 2), Some(1));
+        assert_eq!(inj.alive_set(4, 1), vec![0, 1, 3]);
+        assert_eq!(inj.alive_set(4, 2), vec![1, 3]);
+        // no plan: everyone always alive at scale 1
+        let none = Injector::new(None, 6);
+        assert!(none.alive(7, 100));
+        assert_eq!(none.scale(7, 100), 1.0);
+        assert_eq!(none.coordinator(3, 5), Some(0));
+    }
+}

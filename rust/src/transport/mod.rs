@@ -1,0 +1,181 @@
+//! Real-socket collective transport — the sim-to-real bridge.
+//!
+//! Everything else in this crate *models* the cluster: the simulator
+//! draws compute times, the mpsc [`MeshComm`](crate::collective::MeshComm)
+//! executes [`topology::Schedule`](crate::topology::Schedule) plans
+//! between threads of one process. This module executes the *same*
+//! schedules over real sockets — Unix-domain by default, TCP optional —
+//! hardened for a hostile network:
+//!
+//! * **Deadlines.** Every receive is bounded. Phase-0 arrival
+//!   collection is driven by the installed [`DropPolicy`]'s comm
+//!   cutoff, so late peers are *excluded*, exactly like the paper's
+//!   DropCompute rule, and the survivor subset reduces as a k-member
+//!   collective over a freshly built k-worker schedule.
+//! * **Retries.** Connect and send go through bounded retry with
+//!   exponential backoff and deterministic jitter ([`RetryPolicy`]).
+//! * **Typed degradation.** Peer death surfaces as
+//!   [`CommError::PeerLost`](crate::collective::CommError); deadline
+//!   expiry as [`CommError::Timeout`](crate::collective::CommError).
+//!   A collective never hangs: it completes over the live sub-group or
+//!   fails typed.
+//! * **Fault injection.** A [`FaultPlan`](crate::sim::FaultPlan) drives
+//!   a real [`Injector`]: killed workers' threads exit and drop their
+//!   sockets mid-run; slowed workers stretch their (real, slept)
+//!   compute.
+//! * **Trace capture.** Each worker records wall-clock per-micro-batch
+//!   compute durations; the run assembles a v2
+//!   [`TraceRecord`](crate::sim::TraceRecord) (with transport meta)
+//!   that replays bitwise through the simulator on both timing paths
+//!   and feeds `budget_fit`. A [`ConformanceReport`] compares the
+//!   sim-predicted completion ordering against measured wall clocks.
+//!
+//! Module map: [`wire`] (frame format), [`peer`] (socket mesh),
+//! [`executor`] (schedule execution over survivor subsets),
+//! [`injector`] (plan-driven fault behavior), [`run`] (loopback
+//! harness + conformance gates).
+//!
+//! [`DropPolicy`]: crate::policy::DropPolicy
+
+use std::time::Duration;
+
+use crate::rng::SplitMix64;
+use crate::util::{Error, Result};
+
+pub mod executor;
+pub mod injector;
+pub mod peer;
+pub mod run;
+pub mod wire;
+
+pub use executor::{subgroup_all_reduce, transport_all_reduce};
+pub use injector::Injector;
+pub use peer::{bind_mesh, Endpoint, MeshBinding, SocketMesh};
+pub use run::{
+    replay_bitwise, run_loopback, ConformanceReport, RunReport, RunSpec,
+    StepSummary,
+};
+pub use wire::{Frame, FrameTag, Wire};
+
+/// Which socket family carries the collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Unix-domain sockets under a run directory (loopback default).
+    Uds,
+    /// TCP over 127.0.0.1 with OS-assigned ports.
+    Tcp,
+}
+
+impl TransportKind {
+    pub const ALL: [TransportKind; 2] = [TransportKind::Uds, TransportKind::Tcp];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Uds => "uds",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "uds" | "unix" => Ok(TransportKind::Uds),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(Error::Config(format!(
+                "transport: unknown kind `{other}` (want uds|tcp)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Bounded retry with exponential backoff and multiplicative jitter.
+///
+/// Attempt `a` (0-based) sleeps `min(base·2^a, max) · (1 − jitter·u)`
+/// with `u ∈ [0, 1)` drawn from a seeded [`SplitMix64`] — deterministic
+/// per rank, so two runs with the same seed back off identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts before giving up (≥ 1).
+    pub attempts: u32,
+    /// First backoff delay.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Jitter fraction in `[0, 1)`: how much of the delay may be shaved.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 5,
+            backoff_base: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(250),
+            jitter: 0.2,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before retry number `attempt` (0-based).
+    pub fn delay(&self, attempt: u32, rng: &mut SplitMix64) -> Duration {
+        let exp = self.backoff_base.as_secs_f64()
+            * 2f64.powi(attempt.min(20) as i32);
+        let capped = exp.min(self.backoff_max.as_secs_f64());
+        // 53 high bits → uniform in [0, 1)
+        let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        Duration::from_secs_f64(capped * (1.0 - self.jitter * u))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_round_trips() {
+        for k in TransportKind::ALL {
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+        }
+        assert_eq!(TransportKind::parse("unix").unwrap(), TransportKind::Uds);
+        assert!(matches!(
+            TransportKind::parse("carrier-pigeon"),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_deterministically() {
+        let p = RetryPolicy {
+            attempts: 8,
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_millis(100),
+            jitter: 0.5,
+        };
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for attempt in 0..8 {
+            let da = p.delay(attempt, &mut a);
+            let db = p.delay(attempt, &mut b);
+            assert_eq!(da, db, "same seed, same delays");
+            let nominal = (0.010 * 2f64.powi(attempt as i32)).min(0.100);
+            let secs = da.as_secs_f64();
+            assert!(secs <= nominal + 1e-12, "attempt {attempt}: {secs}");
+            assert!(secs >= nominal * 0.5 - 1e-12, "attempt {attempt}: {secs}");
+        }
+        // attempt 4 onward is capped at the ceiling
+        let capped = p.delay(6, &mut a).as_secs_f64();
+        assert!(capped <= 0.100 + 1e-12);
+        // zero jitter is exact
+        let exact = RetryPolicy { jitter: 0.0, ..p };
+        assert_eq!(
+            exact.delay(1, &mut a),
+            Duration::from_secs_f64(0.020)
+        );
+    }
+}

@@ -1,0 +1,591 @@
+//! The socket mesh: n fully-connected peers, one *unidirectional*
+//! connection per ordered pair. Rank `a` dials rank `b`'s listener and
+//! only ever writes on that connection; `b` accepts it and only reads.
+//! Every inbound connection gets a reader thread that decodes frames
+//! into a per-source mpsc channel, which makes the receive side
+//! *exactly* the [`MeshComm`](crate::collective::MeshComm) contract:
+//!
+//! * peer closes or dies → reader sees EOF/reset → sender dropped →
+//!   `recv` returns [`CommError::PeerLost`];
+//! * deadline expires with the channel empty →
+//!   [`CommError::Timeout`] naming the peer and the wait.
+//!
+//! Because both meshes speak the same [`CommError`] vocabulary, the
+//! schedule executor and every degradation path above it are shared
+//! between the simulated and real transports.
+//!
+//! Setup cannot deadlock: all listeners are bound (in [`bind_mesh`])
+//! before any worker dials, and `connect(2)` against a bound listener
+//! succeeds from the OS backlog without an `accept(2)` — so every rank
+//! may dial all its outbound connections first and accept inbound
+//! afterwards, for any mesh ≤ the OS backlog (≫ any loopback run).
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::collective::CommError;
+use crate::obs::TransportStats;
+use crate::rng::SplitMix64;
+use crate::util::{Error, Result};
+
+use super::wire::{read_frame, write_frame, seq_key, Frame, FrameTag, Wire};
+use super::{RetryPolicy, TransportKind};
+
+/// Where a peer's listener can be dialed.
+#[derive(Debug, Clone)]
+pub enum Endpoint {
+    Uds(PathBuf),
+    Tcp(SocketAddr),
+}
+
+enum Listener {
+    Uds(UnixListener),
+    Tcp(TcpListener),
+}
+
+enum Conn {
+    Uds(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Uds(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Uds(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Uds(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+impl Conn {
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Uds(s) => s.set_read_timeout(d),
+            Conn::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+fn io_err(ctx: &str, e: io::Error) -> Error {
+    Error::Io(format!("transport: {ctx}: {e}"))
+}
+
+/// A bound, not-yet-connected listener for one rank.
+pub struct MeshBinding {
+    pub rank: usize,
+    listener: Listener,
+}
+
+/// Bind one listener per rank up front (UDS sockets under `dir`, or
+/// TCP on 127.0.0.1 with OS-assigned ports) and return the bindings
+/// plus the endpoint table every rank needs to dial the others.
+pub fn bind_mesh(
+    kind: TransportKind,
+    n: usize,
+    dir: &Path,
+) -> Result<(Vec<MeshBinding>, Vec<Endpoint>)> {
+    let mut bindings = Vec::with_capacity(n);
+    let mut endpoints = Vec::with_capacity(n);
+    if kind == TransportKind::Uds {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| io_err(&format!("mkdir {}", dir.display()), e))?;
+    }
+    for rank in 0..n {
+        match kind {
+            TransportKind::Uds => {
+                let path = dir.join(format!("w{rank}.sock"));
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)
+                    .map_err(|e| io_err(&format!("bind {}", path.display()), e))?;
+                l.set_nonblocking(true)
+                    .map_err(|e| io_err("listener nonblocking", e))?;
+                bindings.push(MeshBinding {
+                    rank,
+                    listener: Listener::Uds(l),
+                });
+                endpoints.push(Endpoint::Uds(path));
+            }
+            TransportKind::Tcp => {
+                let l = TcpListener::bind("127.0.0.1:0")
+                    .map_err(|e| io_err("bind 127.0.0.1:0", e))?;
+                let addr =
+                    l.local_addr().map_err(|e| io_err("local_addr", e))?;
+                l.set_nonblocking(true)
+                    .map_err(|e| io_err("listener nonblocking", e))?;
+                bindings.push(MeshBinding {
+                    rank,
+                    listener: Listener::Tcp(l),
+                });
+                endpoints.push(Endpoint::Tcp(addr));
+            }
+        }
+    }
+    Ok((bindings, endpoints))
+}
+
+fn dial(ep: &Endpoint) -> io::Result<Conn> {
+    match ep {
+        Endpoint::Uds(path) => UnixStream::connect(path).map(Conn::Uds),
+        Endpoint::Tcp(addr) => TcpStream::connect(addr).map(Conn::Tcp),
+    }
+}
+
+fn accept_one(listener: &Listener) -> io::Result<Conn> {
+    match listener {
+        Listener::Uds(l) => l.accept().map(|(s, _)| Conn::Uds(s)),
+        Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+    }
+}
+
+/// Errors that mean the connection is gone for good — retrying a send
+/// cannot help (and the stream may already be desynchronized).
+fn fatal_io(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::BrokenPipe
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::NotConnected
+    )
+}
+
+fn reader_loop<T: Wire>(mut conn: Conn, tx: Sender<Frame<T>>) {
+    loop {
+        match read_frame::<T>(&mut conn) {
+            Ok(f) => {
+                if tx.send(f).is_err() {
+                    return; // receiver gone: mesh dropped
+                }
+            }
+            // EOF, reset, or corruption: dropping `tx` is the signal —
+            // the owner sees Disconnected and maps it to PeerLost.
+            Err(_) => return,
+        }
+    }
+}
+
+/// One rank's view of the fully-connected socket mesh.
+pub struct SocketMesh<T: Wire> {
+    pub rank: usize,
+    pub size: usize,
+    retry: RetryPolicy,
+    writers: Vec<Option<Mutex<Conn>>>,
+    from: Vec<Option<Receiver<Frame<T>>>>,
+    stats: Mutex<TransportStats>,
+    rng: Mutex<SplitMix64>,
+}
+
+impl<T: Wire> SocketMesh<T> {
+    /// Dial every peer (with bounded, jittered retry), announce
+    /// ourselves with a HELLO frame, then accept and identify every
+    /// inbound connection. Must run concurrently on all ranks; a peer
+    /// that never shows up fails the setup typed after `setup_timeout`.
+    pub fn establish(
+        binding: MeshBinding,
+        endpoints: &[Endpoint],
+        retry: RetryPolicy,
+        setup_timeout: Duration,
+    ) -> Result<Self> {
+        let n = endpoints.len();
+        let rank = binding.rank;
+        let mut stats = TransportStats::default();
+        let mut rng = SplitMix64::new(0xD50C_0000 ^ rank as u64);
+
+        // Outbound: dial + HELLO toward every peer.
+        let mut writers: Vec<Option<Mutex<Conn>>> = Vec::with_capacity(n);
+        for dst in 0..n {
+            if dst == rank {
+                writers.push(None);
+                continue;
+            }
+            let mut attempt = 0u32;
+            let conn = loop {
+                match dial(&endpoints[dst]) {
+                    Ok(c) => break c,
+                    Err(e) => {
+                        attempt += 1;
+                        if attempt >= retry.attempts.max(1) {
+                            return Err(io_err(
+                                &format!("rank {rank}: dial peer {dst}"),
+                                e,
+                            ));
+                        }
+                        stats.connect_retries += 1;
+                        let d = retry.delay(attempt - 1, &mut rng);
+                        stats.backoff_wait.record(d.as_secs_f64());
+                        thread::sleep(d);
+                    }
+                }
+            };
+            let mut conn = conn;
+            let sent =
+                write_frame::<T>(&mut conn, rank, 0, 0, FrameTag::Hello, &[])
+                    .map_err(|e| {
+                        io_err(&format!("rank {rank}: hello to {dst}"), e)
+                    })?;
+            stats.frames_sent += 1;
+            stats.bytes_sent += sent as u64;
+            writers.push(Some(Mutex::new(conn)));
+        }
+
+        // Inbound: accept n-1 connections, identify each by its HELLO.
+        let mut senders: Vec<Option<Sender<Frame<T>>>> =
+            (0..n).map(|_| None).collect();
+        let mut from: Vec<Option<Receiver<Frame<T>>>> =
+            (0..n).map(|_| None).collect();
+        for src in 0..n {
+            if src == rank {
+                continue;
+            }
+            let (tx, rx) = channel();
+            senders[src] = Some(tx);
+            from[src] = Some(rx);
+        }
+        let deadline = Instant::now() + setup_timeout;
+        let mut accepted = 0usize;
+        while accepted < n.saturating_sub(1) {
+            if Instant::now() >= deadline {
+                return Err(Error::Runtime(format!(
+                    "transport: rank {rank}: only {accepted}/{} peers \
+                     connected within {:.1}s",
+                    n - 1,
+                    setup_timeout.as_secs_f64()
+                )));
+            }
+            let conn = match accept_one(&binding.listener) {
+                Ok(c) => c,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+                Err(e) => {
+                    return Err(io_err(&format!("rank {rank}: accept"), e))
+                }
+            };
+            conn.set_nonblocking_off()
+                .map_err(|e| io_err("accepted conn blocking", e))?;
+            conn.set_read_timeout(Some(
+                deadline.saturating_duration_since(Instant::now())
+                    .max(Duration::from_millis(10)),
+            ))
+            .map_err(|e| io_err("hello read timeout", e))?;
+            let mut conn = conn;
+            let hello = read_frame::<T>(&mut conn)
+                .map_err(|e| io_err(&format!("rank {rank}: read hello"), e))?;
+            if hello.tag != FrameTag::Hello
+                || hello.src >= n
+                || hello.src == rank
+            {
+                return Err(Error::Runtime(format!(
+                    "transport: rank {rank}: bad hello (tag {:?}, src {})",
+                    hello.tag, hello.src
+                )));
+            }
+            let tx = senders[hello.src].take().ok_or_else(|| {
+                Error::Runtime(format!(
+                    "transport: rank {rank}: duplicate hello from {}",
+                    hello.src
+                ))
+            })?;
+            conn.set_read_timeout(None)
+                .map_err(|e| io_err("clear read timeout", e))?;
+            thread::Builder::new()
+                .name(format!("dc-rx-{rank}-from-{}", hello.src))
+                .spawn(move || reader_loop(conn, tx))
+                .map_err(|e| io_err("spawn reader", e))?;
+            accepted += 1;
+        }
+
+        Ok(SocketMesh {
+            rank,
+            size: n,
+            retry,
+            writers,
+            from,
+            stats: Mutex::new(stats),
+            rng: Mutex::new(rng),
+        })
+    }
+
+    fn with_stats<R>(&self, f: impl FnOnce(&mut TransportStats) -> R) -> R {
+        let mut g = self.stats.lock().unwrap_or_else(|p| p.into_inner());
+        f(&mut g)
+    }
+
+    /// Drain the mesh's transport counters (merge rank-by-rank for a
+    /// deterministic run total).
+    pub fn take_stats(&self) -> TransportStats {
+        self.with_stats(std::mem::take)
+    }
+
+    /// Send one frame to `dst`, retrying transient I/O failures with
+    /// the mesh's backoff policy. Fatal socket errors (peer closed,
+    /// reset) short-circuit to [`CommError::PeerLost`] — retrying a
+    /// half-dead stream could interleave a partial frame.
+    pub fn send(
+        &self,
+        dst: usize,
+        step: u64,
+        phase: u32,
+        tag: FrameTag,
+        payload: &[T],
+    ) -> std::result::Result<(), CommError> {
+        assert_ne!(dst, self.rank, "transport: self-send");
+        let slot = self.writers[dst]
+            .as_ref()
+            .expect("writer table covers every peer");
+        let mut conn = slot.lock().unwrap_or_else(|p| p.into_inner());
+        let mut attempt = 0u32;
+        loop {
+            match write_frame(&mut *conn, self.rank, step, phase, tag, payload)
+            {
+                Ok(sent) => {
+                    self.with_stats(|s| {
+                        s.frames_sent += 1;
+                        s.bytes_sent += sent as u64;
+                    });
+                    return Ok(());
+                }
+                Err(e) if fatal_io(&e) => {
+                    self.with_stats(|s| s.peers_lost += 1);
+                    return Err(CommError::PeerLost { peer: dst });
+                }
+                Err(_) => {
+                    attempt += 1;
+                    if attempt >= self.retry.attempts.max(1) {
+                        self.with_stats(|s| s.peers_lost += 1);
+                        return Err(CommError::PeerLost { peer: dst });
+                    }
+                    let d = {
+                        let mut rng =
+                            self.rng.lock().unwrap_or_else(|p| p.into_inner());
+                        self.retry.delay(attempt - 1, &mut rng)
+                    };
+                    self.with_stats(|s| {
+                        s.send_retries += 1;
+                        s.backoff_wait.record(d.as_secs_f64());
+                    });
+                    thread::sleep(d);
+                }
+            }
+        }
+    }
+
+    /// Receive the next frame from `src`, waiting at most `timeout`.
+    /// Mirrors [`MeshComm::recv_deadline`](crate::collective::MeshComm):
+    /// a dead peer is `PeerLost`, an expired deadline is `Timeout`.
+    pub fn recv_deadline(
+        &self,
+        src: usize,
+        timeout: Duration,
+    ) -> std::result::Result<Frame<T>, CommError> {
+        assert_ne!(src, self.rank, "transport: self-recv");
+        let rx = self.from[src]
+            .as_ref()
+            .expect("receiver table covers every peer");
+        let t0 = Instant::now();
+        let out = match rx.recv_timeout(timeout) {
+            Ok(f) => Ok(f),
+            Err(RecvTimeoutError::Disconnected) => {
+                self.with_stats(|s| s.peers_lost += 1);
+                Err(CommError::PeerLost { peer: src })
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                self.with_stats(|s| s.recv_timeouts += 1);
+                Err(CommError::Timeout {
+                    peer: src,
+                    waited: timeout,
+                })
+            }
+        };
+        self.with_stats(|s| s.recv_wait.record(t0.elapsed().as_secs_f64()));
+        out
+    }
+
+    /// Receive the frame matching `(step, tag, phase)` from `src`,
+    /// *discarding* any stale frames first — leftovers from steps or
+    /// phases a previously excluded/degraded peer sent before
+    /// resynchronizing. A frame from the *future* means this worker
+    /// itself fell behind the protocol; that surfaces as `Timeout`.
+    pub fn recv_matching(
+        &self,
+        src: usize,
+        step: u64,
+        phase: u32,
+        tag: FrameTag,
+        timeout: Duration,
+    ) -> std::result::Result<Vec<T>, CommError> {
+        let want = seq_key(step, tag, phase);
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let f = self.recv_deadline(src, remaining)?;
+            let key = f.key();
+            if key < want {
+                continue; // stale: excluded peer catching up
+            }
+            if key == want {
+                return Ok(f.payload);
+            }
+            return Err(CommError::Timeout {
+                peer: src,
+                waited: timeout,
+            });
+        }
+    }
+}
+
+impl Conn {
+    /// Accepted sockets may or may not inherit the listener's
+    /// nonblocking flag depending on platform; force blocking mode.
+    fn set_nonblocking_off(&self) -> io::Result<()> {
+        match self {
+            Conn::Uds(s) => s.set_nonblocking(false),
+            Conn::Tcp(s) => s.set_nonblocking(false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("dropcompute-peer-{}-{tag}", std::process::id()))
+    }
+
+    /// Establish an n-rank mesh concurrently and hand each to `body`.
+    fn with_mesh<F>(kind: TransportKind, n: usize, tag: &str, body: F)
+    where
+        F: Fn(SocketMesh<f32>) + Send + Sync + 'static + Clone,
+    {
+        let dir = scratch(tag);
+        let (bindings, endpoints) = bind_mesh(kind, n, &dir).unwrap();
+        let endpoints = std::sync::Arc::new(endpoints);
+        let mut handles = Vec::new();
+        for b in bindings {
+            let eps = endpoints.clone();
+            let body = body.clone();
+            handles.push(thread::spawn(move || {
+                let mesh = SocketMesh::<f32>::establish(
+                    b,
+                    &eps,
+                    RetryPolicy::default(),
+                    Duration::from_secs(10),
+                )
+                .unwrap();
+                body(mesh);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn uds_pair_exchanges_frames_bit_exact() {
+        with_mesh(TransportKind::Uds, 2, "pair", |mesh| {
+            let other = 1 - mesh.rank;
+            let payload = vec![mesh.rank as f32 + 0.25, -1.5e-7];
+            mesh.send(other, 3, 1, FrameTag::Data, &payload).unwrap();
+            let got = mesh
+                .recv_matching(
+                    other,
+                    3,
+                    1,
+                    FrameTag::Data,
+                    Duration::from_secs(5),
+                )
+                .unwrap();
+            assert_eq!(got.len(), 2);
+            assert_eq!(got[0].to_bits(), (other as f32 + 0.25).to_bits());
+            assert_eq!(got[1].to_bits(), (-1.5e-7f32).to_bits());
+        });
+    }
+
+    #[test]
+    fn tcp_mesh_works_too_and_discards_stale_frames() {
+        with_mesh(TransportKind::Tcp, 2, "tcp", |mesh| {
+            let other = 1 - mesh.rank;
+            // a stale step-0 frame followed by the wanted step-1 frame
+            mesh.send(other, 0, 0, FrameTag::Data, &[9.0]).unwrap();
+            mesh.send(other, 1, 0, FrameTag::Data, &[42.0]).unwrap();
+            let got = mesh
+                .recv_matching(
+                    other,
+                    1,
+                    0,
+                    FrameTag::Data,
+                    Duration::from_secs(5),
+                )
+                .unwrap();
+            assert_eq!(got, vec![42.0]);
+        });
+    }
+
+    #[test]
+    fn dead_peer_is_typed_peer_lost_and_timeout_names_the_peer() {
+        with_mesh(TransportKind::Uds, 2, "dead", |mesh| {
+            if mesh.rank == 0 {
+                // rank 1 exits immediately; our reader sees EOF.
+                let err = mesh
+                    .recv_deadline(1, Duration::from_secs(5))
+                    .unwrap_err();
+                assert_eq!(err, CommError::PeerLost { peer: 1 });
+                assert!(mesh.take_stats().peers_lost >= 1);
+            }
+            // rank 1: drop the mesh right away (sockets close)
+        });
+        // Timeout: peer alive but silent.
+        with_mesh(TransportKind::Uds, 2, "slow", |mesh| {
+            if mesh.rank == 0 {
+                let err = mesh
+                    .recv_deadline(1, Duration::from_millis(30))
+                    .unwrap_err();
+                match err {
+                    CommError::Timeout { peer, waited } => {
+                        assert_eq!(peer, 1);
+                        assert_eq!(waited, Duration::from_millis(30));
+                    }
+                    other => panic!("want timeout, got {other}"),
+                }
+                assert!(mesh.take_stats().recv_timeouts >= 1);
+                // unblock rank 1
+                mesh.send(1, 0, 0, FrameTag::Data, &[1.0]).unwrap();
+            } else {
+                mesh.recv_matching(
+                    0,
+                    0,
+                    0,
+                    FrameTag::Data,
+                    Duration::from_secs(5),
+                )
+                .unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,854 @@
+//! The loopback harness: real worker threads, real sockets, real
+//! clocks — driven by the same config surface as the simulator, and
+//! feeding its artifacts straight back into it.
+//!
+//! Per step, each plan-alive worker:
+//!
+//! 1. **computes** its `M` micro-batches for real (synthetic sleeps:
+//!    `(compute_ms + rank·skew_ms)·scale`, with the [`FaultPlan`]'s
+//!    slow factors applied on the clock), measuring each duration;
+//! 2. reports its arrival offset to the step's **coordinator** (the
+//!    lowest plan-alive rank — a pure function of the shared plan, so
+//!    no election traffic), which applies the DropCompute membership
+//!    rule `arrival ≤ first + deadline` from the installed policy and
+//!    broadcasts the survivor set;
+//! 3. if a survivor, executes the survivor-subset schedule over the
+//!    socket mesh; a peer lost or a deadline blown mid-collective
+//!    degrades the step typed instead of hanging.
+//!
+//! Workers that are plan-dead with a rejoin ahead stay passively
+//! synchronized (they wait for each step's membership broadcast);
+//! permanently killed workers' threads exit, dropping their sockets so
+//! peers observe real EOFs.
+//!
+//! The run emits a v2 [`TraceRecord`] whose samples are the *measured*
+//! wall-clock micro-batch durations (outcomes empty — the acceptance
+//! gate is replay-vs-replay: [`replay_bitwise`] checks the compiled
+//! and reference timing paths agree bitwise on the recorded draws),
+//! plus a [`ConformanceReport`] comparing sim-predicted against
+//! measured completion ordering.
+//!
+//! A note on clocks: arrival offsets are per-worker (each measures
+//! from its own step start, as the simulator's common-barrier model
+//! does), while ordering conformance uses one shared epoch clock — a
+//! persistently excluded worker drifts behind the survivors' cadence,
+//! and the gate is exactly the check that this drift never reorders
+//! what the model says should be ordered.
+//!
+//! [`FaultPlan`]: crate::sim::FaultPlan
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::collective::CommError;
+use crate::config::Config;
+use crate::obs::{ObsRecorder, TransportStats};
+use crate::policy::DropPolicy;
+use crate::rng::SplitMix64;
+use crate::sim::{
+    ClusterSim, FaultPlan, StepOutcome, StepTrace, TraceComm, TraceMeta,
+    TraceMode, TraceOutcome, TraceRecord, TraceTransport,
+    TRACE_FORMAT_VERSION,
+};
+use crate::topology::{Schedule, TopologyKind};
+use crate::util::{Error, Result};
+
+use super::executor::subgroup_all_reduce;
+use super::injector::Injector;
+use super::peer::{bind_mesh, Endpoint, MeshBinding, SocketMesh};
+use super::wire::FrameTag;
+use super::{RetryPolicy, TransportKind};
+
+/// Coordinator poll quantum while collecting arrivals.
+const POLL: Duration = Duration::from_millis(2);
+
+/// Everything one loopback run needs, decoupled from the config
+/// surface so tests can construct it directly.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub workers: usize,
+    pub accums: usize,
+    pub iters: u64,
+    pub kind: TransportKind,
+    pub topo: TopologyKind,
+    /// Comm-side policy driving the membership deadline. Compute-side
+    /// policies (τ, local SGD) are rejected: real workers compute all
+    /// `M` micro-batches.
+    pub policy: DropPolicy,
+    pub plan: Option<FaultPlan>,
+    pub retry: RetryPolicy,
+    /// Failure-detection bound on every non-membership receive.
+    pub recv_deadline: Duration,
+    /// Nominal per-micro-batch compute, milliseconds.
+    pub compute_ms: f64,
+    /// Extra per-micro-batch compute per rank, milliseconds — the
+    /// deterministic skew that makes completion ordering predictable.
+    pub skew_ms: f64,
+    /// Ordering pairs closer than this (predicted, seconds) are not
+    /// scored — below it, OS scheduling noise dominates.
+    pub min_gap: f64,
+    pub grad_len: usize,
+    pub seed: u64,
+    /// UDS socket directory (`None` = fresh temp dir, removed after).
+    pub dir: Option<PathBuf>,
+    /// Link parameters recorded into the trace comm model.
+    pub latency: f64,
+    pub bandwidth: f64,
+    pub bytes: f64,
+}
+
+impl RunSpec {
+    /// Build from the `[transport]`/`[cluster]`/`[policy]`/`[scenario]`
+    /// config sections.
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let t = &cfg.transport;
+        let spec = RunSpec {
+            workers: cfg.cluster.workers,
+            accums: cfg.cluster.accumulations,
+            iters: t.iters as u64,
+            kind: t.kind,
+            topo: cfg.cluster.topology.unwrap_or(TopologyKind::Ring),
+            policy: cfg.effective_policy(),
+            plan: cfg.scenario.clone(),
+            retry: RetryPolicy {
+                attempts: t.connect_attempts as u32,
+                backoff_base: Duration::from_secs_f64(t.backoff_base),
+                backoff_max: Duration::from_secs_f64(t.backoff_max),
+                jitter: t.jitter,
+            },
+            recv_deadline: Duration::from_secs_f64(t.recv_deadline),
+            compute_ms: t.compute_ms,
+            skew_ms: t.skew_ms,
+            min_gap: t.min_gap,
+            grad_len: t.grad_len,
+            seed: cfg.train.seed,
+            dir: (!t.dir.is_empty()).then(|| PathBuf::from(&t.dir)),
+            latency: cfg.cluster.link_latency,
+            bandwidth: cfg.cluster.link_bandwidth,
+            bytes: cfg.cluster.grad_bytes,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.accums == 0 || self.iters == 0 {
+            return Err(Error::Config(
+                "transport: workers, accums, and iters must be >= 1".into(),
+            ));
+        }
+        if self.grad_len == 0 {
+            return Err(Error::Config("transport: grad_len must be >= 1".into()));
+        }
+        if !self.policy.comm_only() {
+            return Err(Error::Config(format!(
+                "transport: policy `{}` has a compute-side component \
+                 (tau/local-sgd); real workers compute every micro-batch — \
+                 use a comm-side policy (none|deadline|phase-deadline)",
+                self.policy.spec()
+            )));
+        }
+        if let Some(plan) = &self.plan {
+            plan.validate_for(self.workers)?;
+            plan.validate_horizon(self.iters)?;
+        }
+        if self.compute_ms < 0.0 || self.skew_ms < 0.0 {
+            return Err(Error::Config(
+                "transport: compute_ms and skew_ms must be >= 0".into(),
+            ));
+        }
+        if !(self.min_gap > 0.0) {
+            return Err(Error::Config("transport: min_gap must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    fn comm(&self) -> TraceComm {
+        TraceComm::Topology {
+            kind: self.topo,
+            latency: self.latency,
+            bandwidth: self.bandwidth,
+            bytes: self.bytes,
+        }
+    }
+
+    fn transport_meta(&self) -> TraceTransport {
+        TraceTransport {
+            kind: self.kind,
+            recv_deadline: self.recv_deadline.as_secs_f64(),
+            connect_attempts: self.retry.attempts,
+            backoff_base: self.retry.backoff_base.as_secs_f64(),
+            backoff_max: self.retry.backoff_max.as_secs_f64(),
+            jitter: self.retry.jitter,
+        }
+    }
+}
+
+/// One step as the driver sees it, merged across workers.
+#[derive(Debug, Clone)]
+pub struct StepSummary {
+    /// Ranks the fault plan had participating.
+    pub plan_alive: Vec<usize>,
+    /// The survivor set the coordinator chose (sorted global ranks).
+    pub members: Vec<usize>,
+    /// Per-worker arrival offset from its own step start (NaN = dead).
+    pub arrivals: Vec<f64>,
+    /// Per-worker arrival instant on the shared epoch clock (NaN = dead).
+    pub arrivals_wall: Vec<f64>,
+    /// Per-worker collective-completion instant on the epoch clock
+    /// (NaN = not a member, degraded, or dead).
+    pub completions_wall: Vec<f64>,
+    /// Some worker failed typed (peer lost / deadline) after membership.
+    pub degraded: bool,
+}
+
+/// Sim-vs-real conformance: membership must match exactly; orderings
+/// are scored only where the model predicts a gap ≥ `min_gap`.
+#[derive(Debug, Clone, Default)]
+pub struct ConformanceReport {
+    pub steps: usize,
+    /// Steps where the coordinator's survivor set differs from the
+    /// membership rule applied to the recorded arrivals.
+    pub membership_mismatches: usize,
+    /// Scored arrival-ordering pairs (compute-completion events).
+    pub arrival_pairs: usize,
+    pub arrival_agreements: usize,
+    /// Scored collective-completion ordering pairs (predicted via the
+    /// schedule's readiness recurrence over the recorded arrivals).
+    pub completion_pairs: usize,
+    pub completion_agreements: usize,
+    pub min_gap: f64,
+}
+
+impl ConformanceReport {
+    pub fn passed(&self) -> bool {
+        self.membership_mismatches == 0
+            && self.arrival_agreements == self.arrival_pairs
+            && self.completion_agreements == self.completion_pairs
+    }
+}
+
+impl std::fmt::Display for ConformanceReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "steps {}: membership mismatches {}, arrival ordering {}/{}, \
+             completion ordering {}/{} (gap >= {}s)",
+            self.steps,
+            self.membership_mismatches,
+            self.arrival_agreements,
+            self.arrival_pairs,
+            self.completion_agreements,
+            self.completion_pairs,
+            self.min_gap
+        )
+    }
+}
+
+/// Everything a loopback run produces.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub trace: TraceRecord,
+    pub steps: Vec<StepSummary>,
+    pub stats: TransportStats,
+    pub conformance: ConformanceReport,
+}
+
+#[derive(Debug, Clone)]
+struct WorkerStepLog {
+    samples: Vec<f64>,
+    arrival: f64,
+    arrival_wall: f64,
+    completion_wall: f64,
+    members: Vec<usize>,
+    degraded: bool,
+}
+
+impl WorkerStepLog {
+    fn dead() -> Self {
+        WorkerStepLog {
+            samples: Vec::new(),
+            arrival: f64::NAN,
+            arrival_wall: f64::NAN,
+            completion_wall: f64::NAN,
+            members: Vec::new(),
+            degraded: false,
+        }
+    }
+}
+
+/// Collect arrivals as this step's coordinator and apply the
+/// membership rule. The wall budget is the policy cutoff plus slack
+/// for cross-worker step-start drift; peers that die while reporting
+/// are simply excluded.
+fn coordinate(
+    spec: &RunSpec,
+    inj: &Injector,
+    mesh: &SocketMesh<f32>,
+    step: u64,
+    step_start: Instant,
+    own_arrival: f64,
+) -> Vec<usize> {
+    let mut got: Vec<(usize, f64)> = vec![(mesh.rank, own_arrival)];
+    let mut pending: Vec<usize> = inj
+        .alive_set(spec.workers, step)
+        .into_iter()
+        .filter(|&p| p != mesh.rank)
+        .collect();
+    loop {
+        if pending.is_empty() {
+            break;
+        }
+        let first =
+            got.iter().map(|&(_, a)| a).fold(f64::INFINITY, f64::min);
+        let budget = match spec.policy.comm_cutoff(0, first) {
+            Some(cut) => cut + 0.5 * (cut - first).max(0.0) + 0.02,
+            None => spec.recv_deadline.as_secs_f64(),
+        };
+        if step_start.elapsed().as_secs_f64() >= budget {
+            break;
+        }
+        let mut i = 0;
+        while i < pending.len() {
+            let src = pending[i];
+            match mesh.recv_matching(src, step, 0, FrameTag::Arrive, POLL) {
+                Ok(p) => {
+                    let a =
+                        p.first().map_or(f64::INFINITY, |&v| v as f64);
+                    got.push((src, a));
+                    pending.swap_remove(i);
+                }
+                Err(CommError::Timeout { .. }) => i += 1,
+                Err(CommError::PeerLost { .. }) => {
+                    pending.swap_remove(i);
+                }
+            }
+        }
+    }
+    let first = got.iter().map(|&(_, a)| a).fold(f64::INFINITY, f64::min);
+    let mut members: Vec<usize> = match spec.policy.comm_cutoff(0, first) {
+        Some(cut) => got
+            .iter()
+            .filter(|&&(_, a)| a <= cut)
+            .map(|&(r, _)| r)
+            .collect(),
+        None => got.iter().map(|&(r, _)| r).collect(),
+    };
+    members.sort_unstable();
+    members
+}
+
+fn worker_main(
+    spec: &RunSpec,
+    inj: &Injector,
+    binding: MeshBinding,
+    endpoints: &[Endpoint],
+    epoch: Instant,
+) -> Result<(Vec<WorkerStepLog>, TransportStats)> {
+    let rank = binding.rank;
+    let setup = spec.recv_deadline.max(Duration::from_secs(5));
+    let mesh =
+        SocketMesh::<f32>::establish(binding, endpoints, spec.retry, setup)?;
+    let mut rng = SplitMix64::new(
+        spec.seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(rank as u64 + 1),
+    );
+    let mut grad: Vec<f32> = (0..spec.grad_len)
+        .map(|i| ((rank + 2) * (i % 13 + 1)) as f32)
+        .collect();
+    let mut schedules: HashMap<usize, Schedule> = HashMap::new();
+    let mut log: Vec<WorkerStepLog> = Vec::with_capacity(spec.iters as usize);
+    let n = spec.workers;
+    let nominal_step = Duration::from_secs_f64(
+        spec.accums as f64 * spec.compute_ms.max(0.5) / 1000.0,
+    );
+
+    for step in 0..spec.iters {
+        if !inj.alive(rank, step) {
+            if inj.gone_for_good(rank, step) {
+                // a real kill: exit, dropping every socket — peers see
+                // EOF and get typed PeerLost instead of a hang
+                return Ok((log, mesh.take_stats()));
+            }
+            log.push(WorkerStepLog::dead());
+            // stay passively step-synchronized until the rejoin: wait
+            // for this step's membership broadcast like everyone else
+            match inj.coordinator(n, step) {
+                Some(coord) => {
+                    let _ = mesh.recv_matching(
+                        coord,
+                        step,
+                        0,
+                        FrameTag::Members,
+                        spec.recv_deadline,
+                    );
+                }
+                None => thread::sleep(nominal_step),
+            }
+            continue;
+        }
+
+        let step_start = Instant::now();
+        let scale = inj.scale(rank, step);
+        let mut samples = Vec::with_capacity(spec.accums);
+        for _ in 0..spec.accums {
+            // deterministic ±5% jitter so draws are not perfectly flat
+            let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+            let nominal = (spec.compute_ms + spec.skew_ms * rank as f64)
+                / 1000.0
+                * scale
+                * (0.95 + 0.1 * u);
+            let t0 = Instant::now();
+            thread::sleep(Duration::from_secs_f64(nominal.max(0.0)));
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let arrival = step_start.elapsed().as_secs_f64();
+        let arrival_wall = epoch.elapsed().as_secs_f64();
+
+        let coord = inj
+            .coordinator(n, step)
+            .expect("an alive worker implies a coordinator");
+        let members = if rank == coord {
+            let members =
+                coordinate(spec, inj, &mesh, step, step_start, arrival);
+            let payload: Vec<f32> =
+                members.iter().map(|&r| r as f32).collect();
+            for dst in 0..n {
+                // every still-connected worker gets the broadcast —
+                // including plan-dead-but-rejoining ones, which use it
+                // to stay step-synchronized
+                if dst != rank && !inj.gone_for_good(dst, step) {
+                    let _ = mesh
+                        .send(dst, step, 0, FrameTag::Members, &payload);
+                }
+            }
+            members
+        } else {
+            let _ = mesh.send(
+                coord,
+                step,
+                0,
+                FrameTag::Arrive,
+                &[arrival as f32],
+            );
+            match mesh.recv_matching(
+                coord,
+                step,
+                0,
+                FrameTag::Members,
+                spec.recv_deadline,
+            ) {
+                Ok(p) => p.iter().map(|&v| v as usize).collect(),
+                Err(_) => {
+                    // coordinator unreachable: degrade the step typed
+                    log.push(WorkerStepLog {
+                        samples,
+                        arrival,
+                        arrival_wall,
+                        completion_wall: f64::NAN,
+                        members: Vec::new(),
+                        degraded: true,
+                    });
+                    continue;
+                }
+            }
+        };
+
+        let mut completion_wall = f64::NAN;
+        let mut degraded = false;
+        if members.contains(&rank) {
+            let k = members.len();
+            let sched = schedules
+                .entry(k)
+                .or_insert_with(|| spec.topo.build(k));
+            let ok = if k >= 2 {
+                subgroup_all_reduce(
+                    &mesh,
+                    &members,
+                    sched,
+                    step,
+                    &mut grad,
+                    spec.recv_deadline,
+                )
+                .is_ok()
+            } else {
+                true // sole survivor: the reduce is the identity
+            };
+            if ok {
+                completion_wall = epoch.elapsed().as_secs_f64();
+            } else {
+                degraded = true;
+            }
+        }
+        log.push(WorkerStepLog {
+            samples,
+            arrival,
+            arrival_wall,
+            completion_wall,
+            members,
+            degraded,
+        });
+    }
+    Ok((log, mesh.take_stats()))
+}
+
+static RUN_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Execute the full loopback run: bind, spawn, step, join, assemble
+/// the trace, score conformance, and (optionally) populate an
+/// [`ObsRecorder`] with the run's observability events.
+pub fn run_loopback(
+    spec: &RunSpec,
+    mut obs: Option<&mut ObsRecorder>,
+) -> Result<RunReport> {
+    spec.validate()?;
+    let n = spec.workers;
+    let inj = Injector::new(spec.plan.clone(), spec.iters);
+
+    let (dir, ephemeral) = match &spec.dir {
+        Some(d) => (d.clone(), false),
+        None => (
+            std::env::temp_dir().join(format!(
+                "dropcompute-run-{}-{}",
+                std::process::id(),
+                RUN_COUNTER.fetch_add(1, Ordering::Relaxed)
+            )),
+            true,
+        ),
+    };
+    let (bindings, endpoints) = bind_mesh(spec.kind, n, &dir)?;
+    let endpoints = Arc::new(endpoints);
+    let spec_arc = Arc::new(spec.clone());
+    let inj_arc = Arc::new(inj.clone());
+    let epoch = Instant::now();
+
+    let mut handles = Vec::with_capacity(n);
+    for binding in bindings {
+        let spec = Arc::clone(&spec_arc);
+        let inj = Arc::clone(&inj_arc);
+        let eps = Arc::clone(&endpoints);
+        handles.push(
+            thread::Builder::new()
+                .name(format!("dc-worker-{}", binding.rank))
+                .spawn(move || worker_main(&spec, &inj, binding, &eps, epoch))
+                .map_err(|e| {
+                    Error::Runtime(format!("transport: spawn worker: {e}"))
+                })?,
+        );
+    }
+    let mut logs: Vec<Vec<WorkerStepLog>> = Vec::with_capacity(n);
+    let mut stats = TransportStats::default();
+    let mut first_err: Option<Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok((log, s))) => {
+                stats.merge(&s);
+                logs.push(log);
+            }
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+                logs.push(Vec::new());
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err =
+                        Some(Error::Runtime("transport: worker panicked".into()));
+                }
+                logs.push(Vec::new());
+            }
+        }
+    }
+    if ephemeral {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    // killed workers' logs stop early: pad with dead rows
+    for log in &mut logs {
+        while (log.len() as u64) < spec.iters {
+            log.push(WorkerStepLog::dead());
+        }
+    }
+
+    // Merge per-worker logs into per-step summaries; the coordinator's
+    // membership view is canonical and every live view must agree.
+    let mut steps = Vec::with_capacity(spec.iters as usize);
+    let mut trace_steps = Vec::with_capacity(spec.iters as usize);
+    for step in 0..spec.iters {
+        let s = step as usize;
+        let plan_alive = inj.alive_set(n, step);
+        let coord = inj.coordinator(n, step);
+        let members = coord
+            .map(|c| logs[c][s].members.clone())
+            .unwrap_or_default();
+        for &w in &plan_alive {
+            let view = &logs[w][s];
+            if !view.degraded && view.members != members {
+                return Err(Error::Runtime(format!(
+                    "transport: step {step}: worker {w} membership view \
+                     {:?} disagrees with coordinator {:?}",
+                    view.members, members
+                )));
+            }
+        }
+        let degraded = plan_alive.iter().any(|&w| logs[w][s].degraded);
+        steps.push(StepSummary {
+            plan_alive,
+            members,
+            arrivals: (0..n).map(|w| logs[w][s].arrival).collect(),
+            arrivals_wall: (0..n).map(|w| logs[w][s].arrival_wall).collect(),
+            completions_wall: (0..n)
+                .map(|w| logs[w][s].completion_wall)
+                .collect(),
+            degraded,
+        });
+        trace_steps.push(StepTrace {
+            straggle: vec![0.0; n],
+            samples: (0..n).map(|w| logs[w][s].samples.clone()).collect(),
+        });
+    }
+
+    let trace = TraceRecord {
+        meta: TraceMeta {
+            version: TRACE_FORMAT_VERSION,
+            mode: TraceMode::Step,
+            workers: n,
+            accums: spec.accums,
+            seed: spec.seed,
+            policy: spec.policy.spec(),
+            comm: spec.comm(),
+            single_restart: false,
+            scenario: spec.plan.as_ref().map(|p| p.spec()),
+            transport: Some(spec.transport_meta()),
+        },
+        steps: trace_steps,
+        outcomes: Vec::new(),
+    };
+    trace.validate()?;
+
+    let conformance = conformance(spec, &steps);
+
+    // run-level counters, then the optional recorder
+    for s in &steps {
+        if s.degraded {
+            stats.degraded_steps += 1;
+        }
+        stats.excluded_arrivals +=
+            (s.plan_alive.len() - s.members.len()) as u64;
+    }
+    if let Some(rec) = obs.as_deref_mut() {
+        record_obs(rec, spec, &steps, &stats);
+    }
+
+    Ok(RunReport {
+        trace,
+        steps,
+        stats,
+        conformance,
+    })
+}
+
+/// Populate an [`ObsRecorder`] from the run — same semantics as the
+/// simulator's observer stream (drops typed per cause, balance held:
+/// every scheduled micro-batch is completed or comm-lost).
+fn record_obs(
+    rec: &mut ObsRecorder,
+    spec: &RunSpec,
+    steps: &[StepSummary],
+    stats: &TransportStats,
+) {
+    let n = spec.workers;
+    let m = spec.accums as u64;
+    if rec.workers.len() < n {
+        rec.workers.resize(n, Default::default());
+    }
+    for s in steps {
+        rec.steps += 1;
+        let mut latest = f64::NEG_INFINITY;
+        let mut argmax = None;
+        let mut fastest = f64::INFINITY;
+        for &w in &s.plan_alive {
+            let a = s.arrivals[w];
+            if a.is_finite() {
+                rec.compute_time.record(a);
+                fastest = fastest.min(a);
+                if a > latest {
+                    latest = a;
+                    argmax = Some(w);
+                }
+            }
+        }
+        for &w in &s.plan_alive {
+            if s.arrivals[w].is_finite() {
+                rec.arrival_offset.record(s.arrivals[w] - fastest);
+            }
+        }
+        for w in 0..n {
+            if !s.plan_alive.contains(&w) {
+                // plan-dead: a worker-fault exclusion event; it computed
+                // nothing, so no micro-batches are lost to comm
+                rec.drops.worker_fault += 1;
+                rec.workers[w].dropped += 1;
+                continue;
+            }
+            rec.workers[w].steps += 1;
+            rec.scheduled_microbatches += m;
+            if s.members.contains(&w)
+                && s.completions_wall[w].is_finite()
+            {
+                rec.completed_microbatches += m;
+            } else {
+                // excluded by the membership deadline (or degraded):
+                // the computed micro-batches are lost to the comm side
+                rec.drops.step_deadline += 1;
+                rec.drops.comm_lost_microbatches += m;
+                rec.workers[w].dropped += 1;
+            }
+        }
+        if let Some(w) = argmax {
+            rec.workers[w].was_max += 1;
+        }
+        // iter time: earliest live step start to last collective
+        // completion, both on the epoch clock
+        let begin = s
+            .plan_alive
+            .iter()
+            .map(|&w| s.arrivals_wall[w] - s.arrivals[w])
+            .filter(|v| v.is_finite())
+            .fold(f64::INFINITY, f64::min);
+        let done = s
+            .completions_wall
+            .iter()
+            .cloned()
+            .filter(|v| v.is_finite())
+            .fold(f64::NEG_INFINITY, f64::max);
+        if begin.is_finite() && done.is_finite() {
+            rec.iter_time.record((done - begin).max(1e-9));
+        }
+    }
+    rec.transport.merge(stats);
+}
+
+/// Score sim-vs-real conformance (see [`ConformanceReport`]).
+pub fn conformance(spec: &RunSpec, steps: &[StepSummary]) -> ConformanceReport {
+    let mut rep = ConformanceReport {
+        steps: steps.len(),
+        min_gap: spec.min_gap,
+        ..ConformanceReport::default()
+    };
+    for s in steps {
+        if s.plan_alive.is_empty() {
+            continue;
+        }
+        // membership: the rule on recorded arrivals must reproduce the
+        // coordinator's choice exactly
+        let arr: Vec<f64> =
+            s.plan_alive.iter().map(|&w| s.arrivals[w]).collect();
+        let first = arr.iter().cloned().fold(f64::INFINITY, f64::min);
+        let predicted: Vec<usize> = match spec.policy.comm_cutoff(0, first) {
+            Some(cut) => s
+                .plan_alive
+                .iter()
+                .cloned()
+                .filter(|&w| s.arrivals[w] <= cut)
+                .collect(),
+            None => s.plan_alive.clone(),
+        };
+        if predicted != s.members {
+            rep.membership_mismatches += 1;
+        }
+        // arrival ordering: per-worker offsets (the sim's common-start
+        // model) must order like the shared-epoch wall instants
+        score_pairs(
+            &arr,
+            &s.plan_alive
+                .iter()
+                .map(|&w| s.arrivals_wall[w])
+                .collect::<Vec<_>>(),
+            spec.min_gap,
+            &mut rep.arrival_pairs,
+            &mut rep.arrival_agreements,
+        );
+        // completion ordering among survivors, where the schedule's
+        // readiness recurrence predicts a scoreable gap
+        if s.members.len() >= 2 && !s.degraded {
+            let marr: Vec<f64> =
+                s.members.iter().map(|&w| s.arrivals[w]).collect();
+            let sched = spec.topo.build(s.members.len());
+            let fin = sched.worker_completion_from(
+                &marr,
+                spec.latency,
+                spec.bandwidth,
+                spec.bytes,
+            );
+            let real: Vec<f64> = s
+                .members
+                .iter()
+                .map(|&w| s.completions_wall[w])
+                .collect();
+            if real.iter().all(|v| v.is_finite()) {
+                score_pairs(
+                    &fin,
+                    &real,
+                    spec.min_gap,
+                    &mut rep.completion_pairs,
+                    &mut rep.completion_agreements,
+                );
+            }
+        }
+    }
+    rep
+}
+
+fn score_pairs(
+    predicted: &[f64],
+    real: &[f64],
+    min_gap: f64,
+    pairs: &mut usize,
+    agreements: &mut usize,
+) {
+    for i in 0..predicted.len() {
+        for j in (i + 1)..predicted.len() {
+            if !predicted[i].is_finite()
+                || !predicted[j].is_finite()
+                || !real[i].is_finite()
+                || !real[j].is_finite()
+                || (predicted[i] - predicted[j]).abs() < min_gap
+            {
+                continue;
+            }
+            *pairs += 1;
+            if (predicted[i] < predicted[j]) == (real[i] < real[j]) {
+                *agreements += 1;
+            }
+        }
+    }
+}
+
+/// The bitwise acceptance gate: the recorded trace must replay through
+/// [`ClusterSim`] identically on the compiled and reference timing
+/// paths (floats compared by bits). Returns the number of steps
+/// checked.
+pub fn replay_bitwise(trace: &TraceRecord) -> Result<usize> {
+    let mut compiled = ClusterSim::from_trace(trace)?;
+    let mut reference = ClusterSim::from_trace(trace)?.with_reference_timing();
+    let mut a = StepOutcome::default();
+    let mut b = StepOutcome::default();
+    for step in 0..trace.len() {
+        compiled.replay_into(&mut a)?;
+        reference.replay_into(&mut b)?;
+        if !TraceOutcome::from_outcome(&a).matches(&b) {
+            return Err(Error::Runtime(format!(
+                "transport: recorded trace diverges between compiled and \
+                 reference timing at step {step}"
+            )));
+        }
+    }
+    Ok(trace.len())
+}

@@ -1,0 +1,259 @@
+//! Wire format: length-prefixed, little-endian, self-describing frames.
+//!
+//! Every message on a transport connection is one frame:
+//!
+//! ```text
+//! magic:u32 | src:u32 | step:u32 | phase:u32 | tag:u32 | count:u32 | payload…
+//! ```
+//!
+//! The 24-byte header is fixed; the payload is `count` little-endian
+//! elements of the connection's element type (f32 or f64 via [`Wire`]).
+//! The `(step, tag, phase)` triple totally orders a connection's
+//! frames within the step protocol (ARRIVE → MEMBERS → DATA phases in
+//! ascending order), which is what lets receivers *discard* stale
+//! frames from excluded-then-resynchronizing peers instead of
+//! desynchronizing — see [`Frame::key`].
+
+use std::io::{self, Read, Write};
+
+/// Frame preamble; anything else on the stream is corruption.
+pub const MAGIC: u32 = 0xD50C_C0DE;
+/// Header size in bytes.
+pub const HEADER_BYTES: usize = 24;
+/// Upper bound on payload elements — guards allocation against a
+/// corrupt or hostile length field.
+pub const MAX_FRAME_ELEMS: u32 = 1 << 26;
+
+/// Element types that can cross the wire. Little-endian on the wire
+/// regardless of host order; `f32::to_le_bytes`/`from_le_bytes` are
+/// bit-exact, so framing never perturbs gradients.
+pub trait Wire: Copy + Send + 'static {
+    const SIZE: usize;
+    fn put(&self, out: &mut Vec<u8>);
+    fn get(bytes: &[u8]) -> Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+impl Wire for f32 {
+    const SIZE: usize = 4;
+    fn put(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn get(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes[..4].try_into().unwrap())
+    }
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Wire for f64 {
+    const SIZE: usize = 8;
+    fn put(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn get(bytes: &[u8]) -> Self {
+        f64::from_le_bytes(bytes[..8].try_into().unwrap())
+    }
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+/// Frame kind, in protocol order *within a step*: arrival report to
+/// the coordinator, membership broadcast back, then data phases.
+/// `Hello` only appears once per connection, during setup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FrameTag {
+    Hello,
+    Arrive,
+    Members,
+    Data,
+}
+
+impl FrameTag {
+    pub fn code(&self) -> u32 {
+        match self {
+            FrameTag::Hello => 0,
+            FrameTag::Arrive => 1,
+            FrameTag::Members => 2,
+            FrameTag::Data => 3,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Option<Self> {
+        match c {
+            0 => Some(FrameTag::Hello),
+            1 => Some(FrameTag::Arrive),
+            2 => Some(FrameTag::Members),
+            3 => Some(FrameTag::Data),
+            _ => None,
+        }
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone)]
+pub struct Frame<T> {
+    pub src: usize,
+    pub step: u64,
+    pub phase: u32,
+    pub tag: FrameTag,
+    pub payload: Vec<T>,
+}
+
+impl<T> Frame<T> {
+    /// Total protocol order of this frame on its connection: steps
+    /// ascend, and within a step ARRIVE < MEMBERS < DATA phases. Stale
+    /// frames (smaller key than expected) are safe to drop.
+    pub fn key(&self) -> u128 {
+        seq_key(self.step, self.tag, self.phase)
+    }
+}
+
+/// See [`Frame::key`].
+pub fn seq_key(step: u64, tag: FrameTag, phase: u32) -> u128 {
+    ((step as u128) << 34) | ((tag.code() as u128) << 32) | phase as u128
+}
+
+/// Encode and write one frame. A single `write_all` of one contiguous
+/// buffer: the per-connection writer lock in
+/// [`SocketMesh`](super::SocketMesh) guarantees frames never interleave.
+pub fn write_frame<T: Wire>(
+    w: &mut impl Write,
+    src: usize,
+    step: u64,
+    phase: u32,
+    tag: FrameTag,
+    payload: &[T],
+) -> io::Result<usize> {
+    debug_assert!(step < u32::MAX as u64, "step counter exceeds wire width");
+    let mut buf = Vec::with_capacity(HEADER_BYTES + payload.len() * T::SIZE);
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&(src as u32).to_le_bytes());
+    buf.extend_from_slice(&(step as u32).to_le_bytes());
+    buf.extend_from_slice(&phase.to_le_bytes());
+    buf.extend_from_slice(&tag.code().to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    for v in payload {
+        v.put(&mut buf);
+    }
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(buf.len())
+}
+
+fn header_u32(h: &[u8], idx: usize) -> u32 {
+    u32::from_le_bytes(h[idx * 4..idx * 4 + 4].try_into().unwrap())
+}
+
+fn corrupt(what: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, what)
+}
+
+/// Read and decode one frame (blocking until the connection's read
+/// timeout, if any, expires).
+pub fn read_frame<T: Wire>(r: &mut impl Read) -> io::Result<Frame<T>> {
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header)?;
+    let magic = header_u32(&header, 0);
+    if magic != MAGIC {
+        return Err(corrupt(format!(
+            "transport: bad frame magic {magic:#010x}"
+        )));
+    }
+    let src = header_u32(&header, 1) as usize;
+    let step = header_u32(&header, 2) as u64;
+    let phase = header_u32(&header, 3);
+    let tag = FrameTag::from_code(header_u32(&header, 4))
+        .ok_or_else(|| corrupt("transport: unknown frame tag".into()))?;
+    let count = header_u32(&header, 5);
+    if count > MAX_FRAME_ELEMS {
+        return Err(corrupt(format!(
+            "transport: frame claims {count} elements (cap {MAX_FRAME_ELEMS})"
+        )));
+    }
+    let mut bytes = vec![0u8; count as usize * T::SIZE];
+    r.read_exact(&mut bytes)?;
+    let payload = bytes.chunks_exact(T::SIZE).map(T::get).collect();
+    Ok(Frame {
+        src,
+        step,
+        phase,
+        tag,
+        payload,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn round_trip<T: Wire + PartialEq + std::fmt::Debug>(payload: &[T]) {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, 3, 17, 2, FrameTag::Data, payload)
+            .unwrap();
+        assert_eq!(n, HEADER_BYTES + payload.len() * T::SIZE);
+        let f: Frame<T> = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(f.src, 3);
+        assert_eq!(f.step, 17);
+        assert_eq!(f.phase, 2);
+        assert_eq!(f.tag, FrameTag::Data);
+        assert_eq!(f.payload, payload);
+    }
+
+    #[test]
+    fn frames_round_trip_bit_exact() {
+        round_trip::<f32>(&[1.5, -0.0, f32::MIN_POSITIVE, 3.0e-39]);
+        round_trip::<f64>(&[std::f64::consts::PI, -1.0e-300, 0.0]);
+        round_trip::<f32>(&[]);
+        // NaN payloads survive with their exact bit pattern
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 0, 0, 0, FrameTag::Arrive, &[f32::NAN])
+            .unwrap();
+        let f: Frame<f32> = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(f.payload[0].to_bits(), f32::NAN.to_bits());
+    }
+
+    #[test]
+    fn corruption_is_a_typed_io_error_not_a_panic() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, 2, 0, FrameTag::Data, &[1.0f32, 2.0])
+            .unwrap();
+        // bad magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        let e = read_frame::<f32>(&mut Cursor::new(&bad)).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
+        // unknown tag
+        let mut bad = buf.clone();
+        bad[16] = 99;
+        assert!(read_frame::<f32>(&mut Cursor::new(&bad)).is_err());
+        // absurd length field must not allocate; it must error
+        let mut bad = buf.clone();
+        bad[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame::<f32>(&mut Cursor::new(&bad)).is_err());
+        // truncated payload
+        let e = read_frame::<f32>(&mut Cursor::new(&buf[..buf.len() - 2]))
+            .unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn seq_key_orders_the_step_protocol() {
+        let arrive = seq_key(5, FrameTag::Arrive, 0);
+        let members = seq_key(5, FrameTag::Members, 0);
+        let d0 = seq_key(5, FrameTag::Data, 0);
+        let d1 = seq_key(5, FrameTag::Data, 1);
+        let next = seq_key(6, FrameTag::Arrive, 0);
+        assert!(arrive < members && members < d0 && d0 < d1 && d1 < next);
+    }
+}

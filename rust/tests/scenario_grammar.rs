@@ -83,9 +83,11 @@ fn mutated_specs_fail_typed_never_panic() {
     // silently-wrong plans (anything that parses must round-trip)
     let seeds = [
         "fail@100:w3,rejoin+50",
+        "kill@100:w3",
         "slow@20:w1,x2.5,for30",
         "drift@0:w2,+0.05",
         "fail@5:w0;slow@9:w4,x1.5;drift@3:w7,+0.01",
+        "kill@5:w0;slow@9:w4,x1.5;kill@3:w7",
     ];
     let garbage = "@;:,wx+forrejoin0123456789garbage!";
     let mut rng = SplitMix64::new(0xBAD_5EED);
@@ -165,6 +167,72 @@ fn inconsistent_plans_are_rejected_with_typed_errors() {
     // disjoint intervals on one worker are fine
     FaultPlan::parse("fail@10:w0,rejoin+5;fail@30:w0,rejoin+5").unwrap();
     FaultPlan::parse("slow@0:w1,x2.0,for5;slow@9:w1,x3.0").unwrap();
+}
+
+#[test]
+fn kill_alias_fuzz_agrees_with_permanent_fail() {
+    // For random (step, worker) the kill@ form must parse, agree with
+    // fail@ semantically everywhere, and canonicalize to the fail form;
+    // kill with any trailing argument is a typed rejection.
+    let mut rng = SplitMix64::new(0x4B11_4_11A5);
+    for trial in 0..200 {
+        let step = rng.next_u64() % 1000;
+        let worker = (rng.next_u64() % 64) as usize;
+        let kill = FaultPlan::parse(&format!("kill@{step}:w{worker}"))
+            .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        let fail =
+            FaultPlan::parse(&format!("fail@{step}:w{worker}")).unwrap();
+        assert_eq!(kill, fail, "trial {trial}");
+        assert_eq!(kill.spec(), format!("fail@{step}:w{worker}"));
+        for _ in 0..8 {
+            let s = rng.next_u64() % 2000;
+            assert_eq!(kill.alive(worker, s), fail.alive(worker, s));
+        }
+        match FaultPlan::parse(&format!(
+            "kill@{step}:w{worker},rejoin+{}",
+            1 + rng.next_u64() % 100
+        )) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("scenario"), "{msg}")
+            }
+            other => panic!("kill+rejoin must be rejected, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn stranded_rejoins_are_rejected_at_the_horizon_boundary() {
+    // Fuzz validate_horizon: for random fail+rejoin plans, the check
+    // must fire exactly when a started fail's rejoin lands at or past
+    // the horizon (the previously silently-inert shape), and never for
+    // permanent fails or not-yet-started events.
+    let mut rng = SplitMix64::new(0x51A4_0412_0);
+    for trial in 0..300 {
+        let step = rng.next_u64() % 100;
+        let span = 1 + rng.next_u64() % 100;
+        let horizon = 1 + rng.next_u64() % 250;
+        let plan =
+            FaultPlan::parse(&format!("fail@{step}:w0,rejoin+{span}"))
+                .unwrap();
+        let stranded = step < horizon && step + span >= horizon;
+        match plan.validate_horizon(horizon) {
+            Ok(()) => assert!(
+                !stranded,
+                "trial {trial}: fail@{step},rejoin+{span} vs {horizon} \
+                 should have been rejected"
+            ),
+            Err(Error::Config(msg)) => {
+                assert!(stranded, "trial {trial}: spurious: {msg}");
+                assert!(msg.contains("scenario"), "{msg}");
+            }
+            Err(other) => panic!("trial {trial}: wrong kind {other}"),
+        }
+        // permanent forms never strand
+        FaultPlan::parse(&format!("kill@{step}:w0"))
+            .unwrap()
+            .validate_horizon(horizon)
+            .unwrap();
+    }
 }
 
 #[test]

@@ -1,0 +1,294 @@
+//! Sim-to-real parity: the socket transport executes the *same*
+//! [`topology::Schedule`] plans as the in-process mpsc mesh, with the
+//! same fixed application order — so on integer-valued gradients
+//! (where float addition is exact under any association) every rank's
+//! result must be bitwise identical across the socket path, the mpsc
+//! path, and a straight summation oracle, for every topology and both
+//! element widths. Plus the degradation path: a survivor subset with a
+//! peer dead before phase 0, and a full loopback kill run through both
+//! acceptance gates.
+//!
+//! [`topology::Schedule`]: dropcompute::topology::Schedule
+
+use std::ops::AddAssign;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dropcompute::collective::{topology_all_reduce, MeshComm};
+use dropcompute::obs::ObsRecorder;
+use dropcompute::policy::DropPolicy;
+use dropcompute::sim::FaultPlan;
+use dropcompute::topology::TopologyKind;
+use dropcompute::transport::{
+    bind_mesh, replay_bitwise, run_loopback, subgroup_all_reduce,
+    transport_all_reduce, RetryPolicy, RunSpec, SocketMesh, TransportKind,
+    Wire,
+};
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "dropcompute-parity-{}-{}-{}",
+        std::process::id(),
+        tag,
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Integer-valued per-rank gradient: exact under float addition in any
+/// order, so cross-path comparisons can demand bitwise equality.
+fn init<T: Wire>(rank: usize, len: usize) -> Vec<T> {
+    (0..len)
+        .map(|i| T::from_f64(((rank + 1) * (i % 7 + 3)) as f64))
+        .collect()
+}
+
+/// Every rank's buffer after a full socket all-reduce over `topo`.
+fn socket_all_reduce<T: Wire + AddAssign>(
+    transport: TransportKind,
+    topo: TopologyKind,
+    n: usize,
+    len: usize,
+) -> Vec<Vec<T>> {
+    let dir = scratch_dir(topo.name());
+    let (bindings, endpoints) = bind_mesh(transport, n, &dir).unwrap();
+    let eps = Arc::new(endpoints);
+    let mut handles = Vec::new();
+    for binding in bindings {
+        let eps = Arc::clone(&eps);
+        handles.push(std::thread::spawn(move || {
+            let rank = binding.rank;
+            let mesh = SocketMesh::<T>::establish(
+                binding,
+                &eps,
+                RetryPolicy::default(),
+                Duration::from_secs(20),
+            )
+            .unwrap();
+            let mut buf = init::<T>(rank, len);
+            transport_all_reduce(
+                &mesh,
+                topo,
+                0,
+                &mut buf,
+                Duration::from_secs(20),
+            )
+            .unwrap();
+            buf
+        }));
+    }
+    let out: Vec<Vec<T>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    std::fs::remove_dir_all(&dir).ok();
+    out
+}
+
+/// The same collective over the in-process mpsc mesh.
+fn mpsc_all_reduce<T: Wire + AddAssign>(
+    topo: TopologyKind,
+    n: usize,
+    len: usize,
+) -> Vec<Vec<T>> {
+    let handles: Vec<_> = MeshComm::<T>::full(n)
+        .into_iter()
+        .map(|comm| {
+            std::thread::spawn(move || {
+                let mut buf = init::<T>(comm.rank, len);
+                topology_all_reduce(&comm, topo, &mut buf);
+                buf
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn assert_parity<T: Wire + AddAssign>(
+    transport: TransportKind,
+    topo: TopologyKind,
+    n: usize,
+    len: usize,
+) {
+    let socket = socket_all_reduce::<T>(transport, topo, n, len);
+    let mpsc = mpsc_all_reduce::<T>(topo, n, len);
+    // straight-summation oracle: exact for integer-valued inputs
+    let oracle: Vec<f64> = (0..len)
+        .map(|i| {
+            (0..n).map(|r| init::<T>(r, len)[i].to_f64()).sum::<f64>()
+        })
+        .collect();
+    for rank in 0..n {
+        for i in 0..len {
+            assert_eq!(
+                socket[rank][i].to_f64().to_bits(),
+                mpsc[rank][i].to_f64().to_bits(),
+                "{transport}/{} rank {rank} elem {i}: socket vs mpsc",
+                topo.name()
+            );
+            assert_eq!(
+                socket[rank][i].to_f64(),
+                oracle[i],
+                "{transport}/{} rank {rank} elem {i}: socket vs oracle",
+                topo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn uds_matches_mpsc_and_oracle_on_every_topology() {
+    // odd length exercises the chunk-remainder paths
+    for topo in TopologyKind::ALL {
+        assert_parity::<f32>(TransportKind::Uds, topo, 4, 97);
+        assert_parity::<f64>(TransportKind::Uds, topo, 4, 97);
+    }
+}
+
+#[test]
+fn tcp_matches_mpsc_and_oracle() {
+    assert_parity::<f32>(TransportKind::Tcp, TopologyKind::Ring, 4, 97);
+    assert_parity::<f64>(TransportKind::Tcp, TopologyKind::Tree, 4, 33);
+}
+
+/// The degradation path: rank 2 connects, then dies before phase 0.
+/// The survivors reduce as a 3-member subgroup and must match a
+/// 3-rank mpsc mesh carrying the same (global-rank-valued) gradients.
+#[test]
+fn survivor_subset_matches_reduced_mpsc_mesh() {
+    let n = 4;
+    let len = 61;
+    let members: Vec<usize> = vec![0, 1, 3];
+    let topo = TopologyKind::Ring;
+
+    let dir = scratch_dir("subset");
+    let (bindings, endpoints) = bind_mesh(TransportKind::Uds, n, &dir).unwrap();
+    let eps = Arc::new(endpoints);
+    let mut handles = Vec::new();
+    for binding in bindings {
+        let eps = Arc::clone(&eps);
+        let members = members.clone();
+        handles.push(std::thread::spawn(move || {
+            let rank = binding.rank;
+            let mesh = SocketMesh::<f32>::establish(
+                binding,
+                &eps,
+                RetryPolicy::default(),
+                Duration::from_secs(20),
+            )
+            .unwrap();
+            if rank == 2 {
+                // die before phase 0: drop the mesh, sockets close,
+                // survivors never hear from us
+                return None;
+            }
+            let schedule = topo.build(members.len());
+            let mut buf = init::<f32>(rank, len);
+            subgroup_all_reduce(
+                &mesh,
+                &members,
+                &schedule,
+                0,
+                &mut buf,
+                Duration::from_secs(20),
+            )
+            .unwrap();
+            Some(buf)
+        }));
+    }
+    let socket: Vec<Option<Vec<f32>>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(socket[2].is_none());
+
+    // reference: a k=3 mpsc mesh where mesh rank j carries global rank
+    // members[j]'s gradient
+    let members_ref = members.clone();
+    let handles: Vec<_> = MeshComm::<f32>::full(members.len())
+        .into_iter()
+        .map(|comm| {
+            let members = members_ref.clone();
+            std::thread::spawn(move || {
+                let mut buf = init::<f32>(members[comm.rank], len);
+                topology_all_reduce(&comm, topo, &mut buf);
+                buf
+            })
+        })
+        .collect();
+    let reference: Vec<Vec<f32>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (j, &rank) in members.iter().enumerate() {
+        let got = socket[rank].as_ref().unwrap();
+        for i in 0..len {
+            assert_eq!(
+                got[i].to_bits(),
+                reference[j][i].to_bits(),
+                "member {rank} elem {i}"
+            );
+        }
+    }
+}
+
+/// End-to-end: a loopback run with a mid-run kill completes (nobody
+/// hangs on the dead peer), its trace replays bitwise through the
+/// simulator on both timing paths, the conformance gate passes, and
+/// the obs recorder books the fault exactly once per dead step.
+#[test]
+fn loopback_kill_run_survives_and_replays_bitwise() {
+    let spec = RunSpec {
+        workers: 4,
+        accums: 2,
+        iters: 4,
+        kind: TransportKind::Uds,
+        topo: TopologyKind::Ring,
+        policy: DropPolicy::parse("deadline=0.25").unwrap(),
+        plan: Some(FaultPlan::parse("kill@1:w3").unwrap()),
+        retry: RetryPolicy::default(),
+        recv_deadline: Duration::from_secs(5),
+        compute_ms: 2.0,
+        skew_ms: 10.0,
+        // the deterministic rank skew here is 2·10 = 20ms per adjacent
+        // pair; a 0.1s gate means no ordering pair is scored, keeping
+        // the test robust on loaded CI machines (membership is still
+        // checked exactly)
+        min_gap: 0.1,
+        grad_len: 64,
+        seed: 0xD50C,
+        dir: None,
+        latency: 25e-6,
+        bandwidth: 12.5e9,
+        bytes: 64.0 * 4.0,
+    };
+    let mut rec = ObsRecorder::new(spec.workers);
+    let report = run_loopback(&spec, Some(&mut rec)).unwrap();
+
+    assert_eq!(report.steps.len(), 4);
+    // steps 1..4: worker 3 is plan-dead and out of the membership
+    for (s, step) in report.steps.iter().enumerate() {
+        if s == 0 {
+            assert_eq!(step.plan_alive, vec![0, 1, 2, 3]);
+        } else {
+            assert_eq!(step.plan_alive, vec![0, 1, 2]);
+            assert!(!step.members.contains(&3));
+        }
+    }
+    // trace: v2, transport meta present, replays bitwise on both paths
+    let trace = &report.trace;
+    assert!(trace.meta.transport.is_some());
+    // kill@ is sugar; spec() renders the canonical rejoin-less fail
+    assert_eq!(trace.meta.scenario.as_deref(), Some("fail@1:w3"));
+    let reparsed =
+        dropcompute::sim::TraceRecord::parse(&trace.to_json()).unwrap();
+    assert_eq!(reparsed.meta.transport, trace.meta.transport);
+    assert_eq!(replay_bitwise(trace).unwrap(), 4);
+    assert!(
+        report.conformance.passed(),
+        "conformance: {}",
+        report.conformance
+    );
+    // obs: one worker_fault per dead step, transport stats populated
+    assert_eq!(rec.drops.worker_fault, 3);
+    assert!(rec.transport.used());
+    assert!(rec.transport.frames_sent > 0);
+}
