@@ -27,6 +27,7 @@ pub mod collective;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod lint;
 pub mod metrics;
 pub mod obs;
 pub mod policy;

@@ -1,0 +1,123 @@
+//! Checked-in lint baseline: grandfathered findings that pre-date a
+//! rule, so adoption can be incremental without inline noise.
+//!
+//! Entries are content-addressed, not line-addressed: a finding is
+//! keyed by `(rule, file, trimmed source line)`, so unrelated edits
+//! that shift line numbers never invalidate the baseline, while
+//! *touching the flagged line itself* resurfaces the finding — exactly
+//! when a human is already looking at it. Duplicate lines count as a
+//! multiset: two identical findings need two entries. Entries that no
+//! longer match anything are reported as warn-level `lint-usage`
+//! diagnostics so the file can only shrink.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::Result;
+
+use super::Diagnostic;
+
+const HEADER: &str = "\
+# dropcompute lint baseline — grandfathered findings, one per line:
+#   rule|file|first-matching-source-line (trimmed)
+# Matching is by content, not line number; regenerate with
+# `dropcompute lint --update-baseline`.
+";
+
+/// Multiset of grandfathered findings keyed `rule|file|snippet`.
+#[derive(Debug, Default)]
+pub struct Baseline {
+    entries: BTreeMap<(String, String, String), usize>,
+}
+
+impl Baseline {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Parse the baseline format. Blank lines and `#` comments are
+    /// ignored; malformed lines (fewer than three `|`-separated
+    /// fields) are ignored too — a lint pass degrades, never fails.
+    pub fn parse(text: &str) -> Self {
+        let mut entries: BTreeMap<(String, String, String), usize> =
+            BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(3, '|');
+            let (Some(rule), Some(file), Some(snippet)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                continue;
+            };
+            *entries
+                .entry((
+                    rule.trim().to_string(),
+                    file.trim().to_string(),
+                    snippet.to_string(),
+                ))
+                .or_insert(0) += 1;
+        }
+        Baseline { entries }
+    }
+
+    /// Load from `path`; a missing file is an empty baseline (the
+    /// common state — this repo keeps itself clean).
+    pub fn load(path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Ok(Self::empty());
+        }
+        Ok(Self::parse(&std::fs::read_to_string(path)?))
+    }
+
+    /// Serialize `diags` as a baseline file (sorted, deduplicated into
+    /// multiset entries by repetition).
+    pub fn format<'d>(diags: impl IntoIterator<Item = &'d Diagnostic>) -> String {
+        let mut lines: Vec<String> = diags
+            .into_iter()
+            .map(|d| format!("{}|{}|{}", d.rule, d.file, d.snippet))
+            .collect();
+        lines.sort();
+        let mut out = String::from(HEADER);
+        for l in lines {
+            out.push_str(&l);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Consume one matching entry if present.
+    pub fn take(&mut self, rule: &str, file: &str, snippet: &str) -> bool {
+        let key =
+            (rule.to_string(), file.to_string(), snippet.to_string());
+        match self.entries.get_mut(&key) {
+            Some(n) if *n > 0 => {
+                *n -= 1;
+                if *n == 0 {
+                    self.entries.remove(&key);
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Entries never consumed by [`Self::take`] — stale grandfathering
+    /// that should be deleted from the file.
+    pub fn stale(&self) -> Vec<(String, String, String)> {
+        self.entries
+            .iter()
+            .flat_map(|(k, &n)| std::iter::repeat(k.clone()).take(n))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.values().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}

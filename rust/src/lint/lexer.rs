@@ -1,0 +1,336 @@
+//! Minimal Rust-source tokenizer for the invariant lint pass.
+//!
+//! Just enough lexing to make the rules sound: comments (line + nested
+//! block) are stripped — so prose mentioning `HashMap` or `Instant`
+//! never trips a rule — while `// lint:allow(rule)` markers inside
+//! them are captured as [`Allow`] suppressions; string literals
+//! (escaped, raw `r#"…"#`, byte, byte-raw) and char literals collapse
+//! to opaque [`Kind::Literal`] tokens; the `'a`-vs-`'a'`
+//! lifetime/char-literal ambiguity is disambiguated by the closing
+//! quote. Identifiers keep their text (rules match on names), numbers
+//! keep theirs (match-arm patterns like `0 =>` are inspected), and the
+//! three multi-char puncts the scanner cares about (`::`, `=>`, `->`)
+//! are fused. Every token carries its 1-based source line so
+//! diagnostics point at real code.
+
+/// Token class. Keywords are plain [`Kind::Ident`]s — the scanner
+/// recognizes `fn` / `match` / `let` by text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Literal,
+    Lifetime,
+}
+
+/// One lexical token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// An inline `// lint:allow(rule)` suppression captured from a line
+/// comment. One [`Allow`] per rule named in the parenthesized,
+/// comma-separated list; anything after the closing paren (e.g. a
+/// `: justification` tail) is free-form commentary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    pub rule: String,
+    pub line: u32,
+}
+
+/// Output of [`lex`]: the token stream plus the suppression markers.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<Allow>,
+}
+
+pub fn is_ident(t: &Token, s: &str) -> bool {
+    t.kind == Kind::Ident && t.text == s
+}
+
+pub fn is_punct(t: &Token, s: &str) -> bool {
+    t.kind == Kind::Punct && t.text == s
+}
+
+fn ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes become single-char
+/// puncts, unterminated literals run to end-of-file — a lint pass must
+/// degrade gracefully on code it half-understands, not refuse to scan.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        // line comment: capture lint:allow markers — but not from
+        // `///` / `//!` doc comments, which are prose *about* the
+        // suppression syntax, not suppressions
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            let text = &src[start..i];
+            let is_doc = text.starts_with("///") || text.starts_with("//!");
+            if !is_doc {
+                scan_allows(text, line, &mut out.allows);
+            }
+            continue;
+        }
+        // block comment, nesting like rustc
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        if c == b'"' {
+            let l = line;
+            i = skip_string(b, i, &mut line);
+            out.tokens.push(Token { kind: Kind::Literal, text: String::new(), line: l });
+            continue;
+        }
+        // raw / byte string forms: r"…", r#"…"#, b"…", br#"…"#, b'…'
+        if (c == b'r' || c == b'b') && i + 1 < n {
+            let l = line;
+            if let Some(next) = raw_or_byte_end(b, i, &mut line) {
+                out.tokens.push(Token {
+                    kind: Kind::Literal,
+                    text: String::new(),
+                    line: l,
+                });
+                i = next;
+                continue;
+            }
+        }
+        if c == b'\'' {
+            let l = line;
+            if let Some(next) = char_literal_end(b, i) {
+                out.tokens.push(Token { kind: Kind::Literal, text: String::new(), line: l });
+                i = next;
+            } else {
+                // lifetime / loop label: consume the ident run
+                let mut j = i + 1;
+                while j < n && ident_char(b[j]) {
+                    j += 1;
+                }
+                out.tokens.push(Token { kind: Kind::Lifetime, text: String::new(), line: l });
+                i = j;
+            }
+            continue;
+        }
+        if ident_start(c) {
+            let start = i;
+            while i < n && ident_char(b[i]) {
+                i += 1;
+            }
+            out.tokens.push(Token {
+                kind: Kind::Ident,
+                text: src[start..i].to_string(),
+                line,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                if ident_char(b[i]) {
+                    i += 1;
+                } else if b[i] == b'.'
+                    && i + 1 < n
+                    && b[i + 1].is_ascii_digit()
+                {
+                    // `1.5` continues the number; `0..3` and `1.max(…)`
+                    // stop before the dot
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Token {
+                kind: Kind::Literal,
+                text: src[start..i].to_string(),
+                line,
+            });
+            continue;
+        }
+        // punct: fuse the multi-char forms the scanner dispatches on
+        let two = if i + 1 < n { &src[i..i + 2] } else { "" };
+        if two == "::" || two == "=>" || two == "->" {
+            out.tokens.push(Token { kind: Kind::Punct, text: two.to_string(), line });
+            i += 2;
+        } else {
+            out.tokens.push(Token {
+                kind: Kind::Punct,
+                text: src[i..i + 1].to_string(),
+                line,
+            });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Skip a `"…"` string starting at the opening quote; returns the index
+/// past the closing quote and counts embedded newlines.
+fn skip_string(b: &[u8], start: usize, line: &mut u32) -> usize {
+    let mut i = start + 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => {
+                // an escaped newline (line-continuation) still ends a
+                // source line — count it or every later diagnostic in
+                // the file points one line short
+                if b.get(i + 1) == Some(&b'\n') {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// If position `i` (at `r` or `b`) starts a raw/byte string or byte
+/// char literal, skip it and return the index past its end. `None`
+/// means this is an ordinary identifier like `rank` or `bytes`.
+fn raw_or_byte_end(b: &[u8], i: usize, line: &mut u32) -> Option<usize> {
+    let n = b.len();
+    let (raw_from, is_byte) = if b[i] == b'r' {
+        (i + 1, false)
+    } else {
+        // b"…" / b'…' / br#"…"#
+        match b.get(i + 1) {
+            Some(b'"') => return Some(skip_string(b, i + 1, line)),
+            Some(b'\'') => return char_literal_end(b, i + 1),
+            Some(b'r') => (i + 2, true),
+            _ => return None,
+        }
+    };
+    let _ = is_byte;
+    let mut hashes = 0usize;
+    let mut j = raw_from;
+    while j < n && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || b[j] != b'"' {
+        return None;
+    }
+    // raw string body: no escapes; ends at `"` + `hashes` hashes
+    j += 1;
+    while j < n {
+        if b[j] == b'\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < n && seen < hashes && b[k] == b'#' {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(j)
+}
+
+/// If position `i` (at `'`) starts a char literal, return the index
+/// past its closing quote; `None` means it is a lifetime/label.
+fn char_literal_end(b: &[u8], i: usize) -> Option<usize> {
+    let n = b.len();
+    let next = *b.get(i + 1)?;
+    if next == b'\\' {
+        // escaped char: scan to the closing quote (covers \n, \u{…})
+        let mut j = i + 3;
+        while j < n && b[j] != b'\'' {
+            j += 1;
+        }
+        return Some((j + 1).min(n));
+    }
+    if ident_char(next) {
+        // `'a'` is a char literal, `'a` (no closing quote after the
+        // ident run) is a lifetime
+        let mut j = i + 1;
+        while j < n && ident_char(b[j]) {
+            j += 1;
+        }
+        if j < n && b[j] == b'\'' {
+            return Some(j + 1);
+        }
+        return None;
+    }
+    // punctuation / space / non-ascii char literal like '(' or 'é'
+    let mut j = i + 1;
+    while j < n && b[j] != b'\'' && b[j] != b'\n' {
+        j += 1;
+    }
+    if j < n && b[j] == b'\'' {
+        return Some(j + 1);
+    }
+    None
+}
+
+/// Collect every `lint:allow(rule[, rule])` marker in a line comment.
+fn scan_allows(comment: &str, line: u32, out: &mut Vec<Allow>) {
+    let mut rest = comment;
+    while let Some(at) = rest.find("lint:allow(") {
+        rest = &rest[at + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else { return };
+        for rule in rest[..close].split(',') {
+            let rule = rule.trim();
+            if !rule.is_empty() {
+                out.push(Allow { rule: rule.to_string(), line });
+            }
+        }
+        rest = &rest[close + 1..];
+    }
+}

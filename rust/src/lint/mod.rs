@@ -1,0 +1,292 @@
+//! In-tree invariant lint engine: the machine checker for the
+//! contracts every PR note used to assert by hand.
+//!
+//! A hand-rolled Rust-source static-analysis pass (lexer →
+//! brace-aware item/function scanner → rules, same spirit as the
+//! `obs lint` exposition checker) walks `rust/src/**` and enforces the
+//! project invariants as named, severity-tagged rules:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `wall-clock`     | determinism: no `Instant::now`/`SystemTime` outside the transport/util/progress allowlist |
+//! | `unordered-iter` | determinism: no `HashMap`/`HashSet` in result-feeding modules |
+//! | `enum-wildcard`  | no `_` arms in matches on closed enums (`DropPolicy`, `NoiseKind`, `NoiseSampler`, `DropCause`, `FaultEvent`) |
+//! | `hotpath-panic`  | no `unwrap()`/`expect()` in designated steady-state functions |
+//! | `hotpath-alloc`  | no `Vec::new`/`vec![]`/`collect()`/`Box::new` in those functions |
+//! | `lock-across-io` | transport: no Mutex guard live across a blocking send/recv/sleep |
+//!
+//! Findings are suppressed inline with `// lint:allow(rule)` (same
+//! line or the line above, with a `: justification` tail by
+//! convention) or grandfathered via the checked-in content-addressed
+//! [`Baseline`]. Diagnostics flow through [`crate::report::Table`]
+//! (human) and JSON (machine) from the `dropcompute lint` subcommand;
+//! `--deny` turns any active deny-severity finding into a non-zero
+//! exit, which is what the CI `lint-gate` job runs. The
+//! `tests/lint_rules.rs` suite pins one bad fixture per rule, clean
+//! fixtures, suppression and baseline round-trips, and a self-lint of
+//! this very repo.
+
+mod baseline;
+mod lexer;
+mod rules;
+mod scan;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Result;
+
+pub use baseline::Baseline;
+pub use lexer::{lex, Allow};
+pub use rules::{
+    known_rule, rule_info, RuleInfo, ENUM_WILDCARD, HOTPATH_ALLOC,
+    HOTPATH_PANIC, LINT_USAGE, LOCK_ACROSS_IO, RULES, UNORDERED_ITER,
+    WALL_CLOCK,
+};
+pub use scan::SourceModel;
+
+/// How bad is a finding: `Deny` findings fail the `--deny` gate,
+/// `Warn` findings (the `lint-usage` meta rule) only report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// Why a finding is not active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suppressed {
+    /// An inline `// lint:allow(rule)` on the finding's line or the
+    /// line above.
+    Inline,
+    /// A matching entry in the checked-in baseline file.
+    Baseline,
+}
+
+/// One lint finding, pointing at a real source line.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    /// The trimmed source line — the baseline's content address.
+    pub snippet: String,
+    pub suppressed: Option<Suppressed>,
+}
+
+impl Diagnostic {
+    pub fn is_active(&self) -> bool {
+        self.suppressed.is_none()
+    }
+}
+
+/// Lint one file's source. `rel_path` is the path under the lint root
+/// with `/` separators — rules scope by it (`sim/…` vs `transport/…`).
+/// Inline suppressions are applied; the baseline is applied by
+/// [`lint_root`] / [`apply_baseline`].
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Diagnostic> {
+    let model = SourceModel::build(lexer::lex(src));
+    let mut diags = rules::run_rules(rel_path, &model);
+    for a in &model.allows {
+        if !rules::known_rule(&a.rule) {
+            diags.push(Diagnostic {
+                rule: rules::LINT_USAGE,
+                severity: Severity::Warn,
+                file: rel_path.to_string(),
+                line: a.line,
+                message: format!(
+                    "unknown rule `{}` in lint:allow (known: {})",
+                    a.rule,
+                    rules::RULES
+                        .iter()
+                        .map(|r| r.key)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+                snippet: String::new(),
+                suppressed: None,
+            });
+        }
+    }
+    let lines: Vec<&str> = src.lines().collect();
+    for d in &mut diags {
+        d.snippet = lines
+            .get(d.line.saturating_sub(1) as usize)
+            .map_or("", |l| l.trim())
+            .to_string();
+        let inline = model.allows.iter().any(|a| {
+            a.rule == d.rule && (a.line == d.line || a.line + 1 == d.line)
+        });
+        if inline {
+            d.suppressed = Some(Suppressed::Inline);
+        }
+    }
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// Consume baseline entries against `diags`, marking matches
+/// suppressed. Inline-suppressed findings never consume an entry.
+pub fn apply_baseline(diags: &mut [Diagnostic], baseline: &mut Baseline) {
+    for d in diags.iter_mut() {
+        if d.suppressed.is_none()
+            && baseline.take(d.rule, &d.file, &d.snippet)
+        {
+            d.suppressed = Some(Suppressed::Baseline);
+        }
+    }
+}
+
+/// The whole-tree report [`lint_root`] produces.
+#[derive(Debug)]
+pub struct LintReport {
+    pub root: String,
+    pub files_scanned: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn active(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.is_active())
+    }
+
+    pub fn active_deny(&self) -> usize {
+        self.active().filter(|d| d.severity == Severity::Deny).count()
+    }
+
+    pub fn active_warn(&self) -> usize {
+        self.active().filter(|d| d.severity == Severity::Warn).count()
+    }
+
+    pub fn suppressed(&self, by: Suppressed) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.suppressed == Some(by))
+            .count()
+    }
+
+    /// Machine-readable report (the CI `lint-gate` artifact).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"root\": \"{}\",\n", esc(&self.root)));
+        s.push_str(&format!(
+            "  \"files_scanned\": {},\n",
+            self.files_scanned
+        ));
+        s.push_str(&format!(
+            "  \"summary\": {{\"active\": {}, \"deny\": {}, \"warn\": {}, \
+             \"suppressed_inline\": {}, \"suppressed_baseline\": {}}},\n",
+            self.active().count(),
+            self.active_deny(),
+            self.active_warn(),
+            self.suppressed(Suppressed::Inline),
+            self.suppressed(Suppressed::Baseline),
+        ));
+        s.push_str("  \"diagnostics\": [\n");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            let suppressed = match d.suppressed {
+                None => "null".to_string(),
+                Some(Suppressed::Inline) => "\"inline\"".to_string(),
+                Some(Suppressed::Baseline) => "\"baseline\"".to_string(),
+            };
+            s.push_str(&format!(
+                "    {{\"rule\": \"{}\", \"severity\": \"{}\", \
+                 \"file\": \"{}\", \"line\": {}, \"message\": \"{}\", \
+                 \"snippet\": \"{}\", \"suppressed\": {}}}{}\n",
+                esc(d.rule),
+                d.severity.name(),
+                esc(&d.file),
+                d.line,
+                esc(&d.message),
+                esc(&d.snippet),
+                suppressed,
+                if i + 1 < self.diagnostics.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Lint every `.rs` file under `root` (sorted walk — deterministic
+/// report order), consuming `baseline`; leftover entries surface as
+/// warn-level stale-baseline diagnostics.
+pub fn lint_root(root: &Path, mut baseline: Baseline) -> Result<LintReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, Path::new(""), &mut files)?;
+    files.sort();
+    let mut diagnostics = Vec::new();
+    for rel in &files {
+        let src = std::fs::read_to_string(root.join(rel))?;
+        let rel_s = rel.to_string_lossy().replace('\\', "/");
+        let mut diags = lint_source(&rel_s, &src);
+        apply_baseline(&mut diags, &mut baseline);
+        diagnostics.extend(diags);
+    }
+    for (rule, file, snippet) in baseline.stale() {
+        diagnostics.push(Diagnostic {
+            rule: rules::LINT_USAGE,
+            severity: Severity::Warn,
+            file,
+            line: 0,
+            message: format!(
+                "stale baseline entry for rule `{rule}` no longer \
+                 matches any finding — delete it: `{snippet}`"
+            ),
+            snippet,
+            suppressed: None,
+        });
+    }
+    Ok(LintReport {
+        root: root.to_string_lossy().into_owned(),
+        files_scanned: files.len(),
+        diagnostics,
+    })
+}
+
+fn collect_rs(
+    root: &Path,
+    rel: &Path,
+    out: &mut Vec<PathBuf>,
+) -> Result<()> {
+    for entry in std::fs::read_dir(root.join(rel))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let child = rel.join(&name);
+        let ty = entry.file_type()?;
+        if ty.is_dir() {
+            collect_rs(root, &child, out)?;
+        } else if name.to_string_lossy().ends_with(".rs") {
+            out.push(child);
+        }
+    }
+    Ok(())
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}

@@ -1,0 +1,636 @@
+//! The invariant rules: each one encodes a project-wide contract that
+//! used to live only in reviewers' memories and PR notes.
+//!
+//! Rules are scoped by *relative path under the lint root* (e.g.
+//! `sim/cluster.rs`), so moving a file in or out of a
+//! determinism-critical module changes what is enforced — exactly the
+//! intent. All rules skip test code ([`SourceModel::in_test`]): tests
+//! may panic, allocate, and read clocks freely.
+
+use super::lexer::{is_ident, is_punct, Kind, Token};
+use super::scan::{brace_depths, skip_braces, SourceModel};
+use super::{Diagnostic, Severity};
+
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const UNORDERED_ITER: &str = "unordered-iter";
+pub const ENUM_WILDCARD: &str = "enum-wildcard";
+pub const HOTPATH_PANIC: &str = "hotpath-panic";
+pub const HOTPATH_ALLOC: &str = "hotpath-alloc";
+pub const LOCK_ACROSS_IO: &str = "lock-across-io";
+/// Meta rule: misuse of the lint surface itself (unknown rule names in
+/// `lint:allow`, stale baseline entries). Warn-level — it never gates.
+pub const LINT_USAGE: &str = "lint-usage";
+
+/// Catalog entry for one rule: suppression key, full invariant name,
+/// severity, one-line summary (the README table renders from this).
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    pub key: &'static str,
+    pub name: &'static str,
+    pub severity: Severity,
+    pub summary: &'static str,
+}
+
+pub const RULES: [RuleInfo; 6] = [
+    RuleInfo {
+        key: WALL_CLOCK,
+        name: "determinism/wall-clock",
+        severity: Severity::Deny,
+        summary: "Instant::now/SystemTime outside transport/, util/, \
+                  sweep/runner.rs: simulated time comes from the \
+                  virtual clock, never the host clock",
+    },
+    RuleInfo {
+        key: UNORDERED_ITER,
+        name: "determinism/unordered-iteration",
+        severity: Severity::Deny,
+        summary: "HashMap/HashSet in sim/, sweep/, obs/, analysis/, \
+                  transport/: hash order is not deterministic across \
+                  runs; use BTreeMap/BTreeSet or index-ordered Vecs",
+    },
+    RuleInfo {
+        key: ENUM_WILDCARD,
+        name: "closed-enum-exhaustiveness",
+        severity: Severity::Deny,
+        summary: "wildcard `_` arm in a match on a closed enum \
+                  (DropPolicy, NoiseKind, NoiseSampler, DropCause, \
+                  FaultEvent): a future variant must be a compile \
+                  error, not a silent fallthrough",
+    },
+    RuleInfo {
+        key: HOTPATH_PANIC,
+        name: "hot-path-panic",
+        severity: Severity::Deny,
+        summary: "unwrap()/expect() in a designated steady-state \
+                  function: the stepping hot path must not panic",
+    },
+    RuleInfo {
+        key: HOTPATH_ALLOC,
+        name: "hot-path-allocation",
+        severity: Severity::Deny,
+        summary: "Vec::new/vec![]/collect()/Box::new in a designated \
+                  steady-state function: stepping is allocation-free \
+                  after warmup",
+    },
+    RuleInfo {
+        key: LOCK_ACROSS_IO,
+        name: "transport-lock-discipline",
+        severity: Severity::Deny,
+        summary: "Mutex guard bound by `let` and still live across a \
+                  blocking send/recv/sleep: a stalled peer must never \
+                  stall unrelated lock holders",
+    },
+];
+
+/// Look up a rule's catalog entry (the meta rule has no entry).
+pub fn rule_info(key: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.key == key)
+}
+
+/// Is `key` a rule name `lint:allow` may legitimately reference?
+pub fn known_rule(key: &str) -> bool {
+    key == LINT_USAGE || rule_info(key).is_some()
+}
+
+/// Files where wall-clock reads are the point: the real transport
+/// measures reality, the sweep progress meter reports to a human, and
+/// `util::Stopwatch` is the sanctioned timer.
+const CLOCK_ALLOWLIST: &[&str] = &["transport/", "util/", "sweep/runner.rs"];
+
+/// Modules whose state feeds deterministic results: any iteration
+/// order that reaches an output must be total and stable.
+const ORDERED_MODULES: &[&str] =
+    &["sim/", "sweep/", "obs/", "analysis/", "transport/"];
+
+/// Closed enums whose matches must stay exhaustive (no `_` arms):
+/// adding a variant to any of these must break the build everywhere a
+/// decision is made about it.
+const CLOSED_ENUMS: &[&str] =
+    &["DropPolicy", "NoiseKind", "NoiseSampler", "DropCause", "FaultEvent"];
+
+/// The designated steady-state functions: one entry per (file,
+/// function) pair, so a name like `completion` can be hot in
+/// `sim/survivor.rs` without designating every `completion` in the
+/// crate. These are the allocation-free, panic-free stepping paths the
+/// perf suite and the PR notes have claimed since PR 2/3.
+const HOT_FUNCTIONS: &[(&str, &[&str])] = &[
+    (
+        "sim/cluster.rs",
+        &[
+            "step_into",
+            "step_observed",
+            "finish_into",
+            "per_phase_iter_time",
+            "recursive_survivor_time",
+            "recursive_restart_rounds",
+            "finish_faulted",
+        ],
+    ),
+    (
+        "sim/compiled.rs",
+        &["completion_with", "completion_with_phases", "bounded_completion_with"],
+    ),
+    (
+        "sim/survivor.rs",
+        &["completion", "completion_at", "bounded_completion", "bounded_completion_at"],
+    ),
+];
+
+/// Modules where the lock-discipline rule applies (everything that
+/// talks to channels or sockets).
+const LOCK_MODULES: &[&str] = &["transport/", "collective/"];
+
+/// Calls that can block on a peer: holding a lock across any of these
+/// couples unrelated threads to the slowest peer.
+const BLOCKING_CALLS: &[&str] = &[
+    "write_frame",
+    "read_frame",
+    "recv",
+    "recv_timeout",
+    "recv_deadline",
+    "recv_matching",
+    "sleep",
+    "connect",
+    "accept",
+    "write_all",
+    "read_exact",
+    "flush",
+];
+
+/// Run every rule over one file's model. `path` is the relative path
+/// under the lint root with `/` separators.
+pub fn run_rules(path: &str, model: &SourceModel) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    wall_clock(path, model, &mut out);
+    unordered_iter(path, model, &mut out);
+    enum_wildcard(path, model, &mut out);
+    hotpath_panic(path, model, &mut out);
+    hotpath_alloc(path, model, &mut out);
+    lock_across_io(path, model, &mut out);
+    out
+}
+
+fn diag(rule: &'static str, path: &str, line: u32, message: String) -> Diagnostic {
+    let severity = rule_info(rule).map_or(Severity::Warn, |r| r.severity);
+    Diagnostic {
+        rule,
+        severity,
+        file: path.to_string(),
+        line,
+        message,
+        snippet: String::new(),
+        suppressed: None,
+    }
+}
+
+fn path_in(path: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| {
+        if p.ends_with('/') {
+            path.starts_with(p)
+        } else {
+            path == *p
+        }
+    })
+}
+
+/// Rule 1: no wall-clock reads outside the allowlist. Flags
+/// `Instant::now` call paths and any `SystemTime` use.
+fn wall_clock(path: &str, model: &SourceModel, out: &mut Vec<Diagnostic>) {
+    if path_in(path, CLOCK_ALLOWLIST) {
+        return;
+    }
+    let t = &model.tokens;
+    for i in 0..t.len() {
+        if model.in_test(i) {
+            continue;
+        }
+        if is_ident(&t[i], "Instant")
+            && i + 2 < t.len()
+            && is_punct(&t[i + 1], "::")
+            && is_ident(&t[i + 2], "now")
+        {
+            out.push(diag(
+                WALL_CLOCK,
+                path,
+                t[i].line,
+                "`Instant::now()` outside the wall-clock allowlist \
+                 (transport/, util/, sweep/runner.rs): simulated timing \
+                 must come from the virtual clock"
+                    .to_string(),
+            ));
+        } else if is_ident(&t[i], "SystemTime") {
+            out.push(diag(
+                WALL_CLOCK,
+                path,
+                t[i].line,
+                "`SystemTime` outside the wall-clock allowlist: \
+                 simulated timing must come from the virtual clock"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule 2: no hash-ordered containers in determinism-critical modules.
+fn unordered_iter(path: &str, model: &SourceModel, out: &mut Vec<Diagnostic>) {
+    if !path_in(path, ORDERED_MODULES) {
+        return;
+    }
+    let t = &model.tokens;
+    for i in 0..t.len() {
+        if model.in_test(i) || t[i].kind != Kind::Ident {
+            continue;
+        }
+        if t[i].text == "HashMap" || t[i].text == "HashSet" {
+            out.push(diag(
+                UNORDERED_ITER,
+                path,
+                t[i].line,
+                format!(
+                    "`{}` in a determinism-critical module: iteration \
+                     order is unstable across runs and can feed \
+                     results; use BTreeMap/BTreeSet or an \
+                     index-ordered Vec",
+                    t[i].text
+                ),
+            ));
+        }
+    }
+}
+
+/// One parsed match arm: pattern token range (guard excluded), whether
+/// a guard follows, and the pattern's first line.
+struct Arm {
+    pattern: (usize, usize),
+    has_guard: bool,
+    line: u32,
+}
+
+/// Parse the arms of the `match` whose keyword sits at `mi`. Pattern
+/// tokens run to the `=>` (or the guard `if`) at arm depth; arm bodies
+/// are skipped with balanced delimiters, so nested matches inside a
+/// body never masquerade as outer arms (they get their own parse from
+/// the outer token walk). Returns `None` for shapes that are not a
+/// match expression we understand.
+fn parse_match_arms(t: &[Token], mi: usize) -> Option<Vec<Arm>> {
+    // scrutinee: everything to the first `{` at paren/bracket depth 0
+    let mut paren = 0i64;
+    let mut brack = 0i64;
+    let mut j = mi + 1;
+    loop {
+        let tok = t.get(j)?;
+        if is_punct(tok, "(") {
+            paren += 1;
+        } else if is_punct(tok, ")") {
+            paren -= 1;
+        } else if is_punct(tok, "[") {
+            brack += 1;
+        } else if is_punct(tok, "]") {
+            brack -= 1;
+        } else if paren == 0 && brack == 0 {
+            if is_punct(tok, "{") {
+                break;
+            }
+            if is_punct(tok, ";") {
+                return None;
+            }
+        }
+        j += 1;
+    }
+    let close = skip_braces(t, j).checked_sub(1)?;
+    let mut arms = Vec::new();
+    let mut k = j + 1;
+    while k < close {
+        let arm_line = t[k].line;
+        let pat_start = k;
+        let mut p = 0i64;
+        let mut b = 0i64;
+        let mut br = 0i64;
+        let mut has_guard = false;
+        let mut pat_end = None;
+        let mut found_arrow = false;
+        while k < close {
+            let tok = &t[k];
+            if is_punct(tok, "(") {
+                p += 1;
+            } else if is_punct(tok, ")") {
+                p -= 1;
+            } else if is_punct(tok, "[") {
+                b += 1;
+            } else if is_punct(tok, "]") {
+                b -= 1;
+            } else if is_punct(tok, "{") {
+                br += 1;
+            } else if is_punct(tok, "}") {
+                br -= 1;
+            } else if p == 0 && b == 0 && br == 0 {
+                if is_ident(tok, "if") && pat_end.is_none() {
+                    has_guard = true;
+                    pat_end = Some(k);
+                } else if is_punct(tok, "=>") {
+                    if pat_end.is_none() {
+                        pat_end = Some(k);
+                    }
+                    found_arrow = true;
+                    k += 1;
+                    break;
+                }
+            }
+            k += 1;
+        }
+        let (Some(pe), true) = (pat_end, found_arrow) else { break };
+        arms.push(Arm { pattern: (pat_start, pe), has_guard, line: arm_line });
+        // arm body: a block (optionally comma-terminated) or an
+        // expression running to the `,` at arm depth
+        if k < close && is_punct(&t[k], "{") {
+            k = skip_braces(t, k);
+            if k < close && is_punct(&t[k], ",") {
+                k += 1;
+            }
+        } else {
+            let mut p2 = 0i64;
+            let mut b2 = 0i64;
+            let mut br2 = 0i64;
+            while k < close {
+                let tok = &t[k];
+                if is_punct(tok, "(") {
+                    p2 += 1;
+                } else if is_punct(tok, ")") {
+                    p2 -= 1;
+                } else if is_punct(tok, "[") {
+                    b2 += 1;
+                } else if is_punct(tok, "]") {
+                    b2 -= 1;
+                } else if is_punct(tok, "{") {
+                    br2 += 1;
+                } else if is_punct(tok, "}") {
+                    br2 -= 1;
+                } else if p2 == 0
+                    && b2 == 0
+                    && br2 == 0
+                    && is_punct(tok, ",")
+                {
+                    k += 1;
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+    Some(arms)
+}
+
+/// Which closed enum (if any) do this match's arm *patterns* name?
+/// Patterns only — `match parts.len()` with `DropPolicy::…`
+/// constructors in arm bodies is not a match *on* the enum.
+fn closed_enum_in_patterns(t: &[Token], arms: &[Arm]) -> Option<&'static str> {
+    for arm in arms {
+        for i in arm.pattern.0..arm.pattern.1 {
+            if t[i].kind == Kind::Ident
+                && i + 1 < arm.pattern.1
+                && is_punct(&t[i + 1], "::")
+            {
+                if let Some(e) =
+                    CLOSED_ENUMS.iter().find(|e| **e == t[i].text)
+                {
+                    return Some(e);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Rule 3: no bare `_` arms in matches on closed enums. A guarded
+/// wildcard (`_ if cond =>`) is a deliberate predicate catch-all and
+/// is not flagged; neither is a tuple pattern with `_` elements — only
+/// the arm whose entire pattern is `_` silently swallows variants.
+fn enum_wildcard(path: &str, model: &SourceModel, out: &mut Vec<Diagnostic>) {
+    let t = &model.tokens;
+    for i in 0..t.len() {
+        if !is_ident(&t[i], "match") || model.in_test(i) {
+            continue;
+        }
+        let Some(arms) = parse_match_arms(t, i) else { continue };
+        let Some(enum_name) = closed_enum_in_patterns(t, &arms) else {
+            continue;
+        };
+        for arm in &arms {
+            let (s, e) = arm.pattern;
+            if !arm.has_guard && e - s == 1 && is_ident(&t[s], "_") {
+                out.push(diag(
+                    ENUM_WILDCARD,
+                    path,
+                    arm.line,
+                    format!(
+                        "wildcard `_` arm in a match on closed enum \
+                         `{enum_name}`: a future variant would fall \
+                         through silently; list the remaining variants \
+                         explicitly"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Iterate the designated steady-state functions of `path`.
+fn hot_fns<'m>(
+    path: &str,
+    model: &'m SourceModel,
+) -> impl Iterator<Item = &'m super::scan::FnSpan> {
+    let names: &'static [&'static str] =
+        match HOT_FUNCTIONS.iter().find(|(f, _)| *f == path) {
+            Some(&(_, names)) => names,
+            None => &[],
+        };
+    model
+        .fns
+        .iter()
+        .filter(move |f| !f.in_test && names.contains(&f.name.as_str()))
+}
+
+/// Rule 4: no `unwrap()`/`expect()` in designated hot functions.
+fn hotpath_panic(path: &str, model: &SourceModel, out: &mut Vec<Diagnostic>) {
+    let t = &model.tokens;
+    for f in hot_fns(path, model) {
+        for i in f.body.0..f.body.1.min(t.len()) {
+            if is_punct(&t[i], ".")
+                && i + 2 < t.len()
+                && (is_ident(&t[i + 1], "unwrap") || is_ident(&t[i + 1], "expect"))
+                && is_punct(&t[i + 2], "(")
+            {
+                out.push(diag(
+                    HOTPATH_PANIC,
+                    path,
+                    t[i + 1].line,
+                    format!(
+                        "`.{}()` in steady-state function `{}`: the \
+                         stepping hot path must not panic — return a \
+                         typed error or restructure the borrow",
+                        t[i + 1].text, f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 5: no allocation in designated hot functions.
+fn hotpath_alloc(path: &str, model: &SourceModel, out: &mut Vec<Diagnostic>) {
+    let t = &model.tokens;
+    for f in hot_fns(path, model) {
+        for i in f.body.0..f.body.1.min(t.len()) {
+            let what = if is_ident(&t[i], "Vec")
+                && i + 2 < t.len()
+                && is_punct(&t[i + 1], "::")
+                && is_ident(&t[i + 2], "new")
+            {
+                Some("Vec::new")
+            } else if is_ident(&t[i], "Box")
+                && i + 2 < t.len()
+                && is_punct(&t[i + 1], "::")
+                && is_ident(&t[i + 2], "new")
+            {
+                Some("Box::new")
+            } else if is_ident(&t[i], "vec")
+                && i + 1 < t.len()
+                && is_punct(&t[i + 1], "!")
+            {
+                Some("vec![]")
+            } else if is_punct(&t[i], ".")
+                && i + 1 < t.len()
+                && is_ident(&t[i + 1], "collect")
+            {
+                Some("collect()")
+            } else {
+                None
+            };
+            if let Some(what) = what {
+                out.push(diag(
+                    HOTPATH_ALLOC,
+                    path,
+                    t[i].line,
+                    format!(
+                        "allocation (`{what}`) in steady-state function \
+                         `{}`: stepping is allocation-free after warmup \
+                         — reuse a scratch buffer",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 6: a `let`-bound Mutex guard must not stay live across a
+/// blocking call. The guard's scope is approximated by the brace depth
+/// of its `let`: the scan runs from the end of the binding statement
+/// until the enclosing block closes (or an explicit `drop(name)`),
+/// flagging the first blocking call inside that window. The `.lock()`
+/// is attributed to the *innermost* enclosing `let`, so a guard
+/// confined to a `{ … }` initializer block never taints the outer
+/// binding.
+fn lock_across_io(path: &str, model: &SourceModel, out: &mut Vec<Diagnostic>) {
+    if !path_in(path, LOCK_MODULES) {
+        return;
+    }
+    let t = &model.tokens;
+    let depths = brace_depths(t);
+    for f in model.fns.iter().filter(|f| !f.in_test) {
+        let (start, end) = (f.body.0, f.body.1.min(t.len()));
+        // every `let` statement in the body and its terminating `;`
+        let mut lets: Vec<(usize, usize)> = Vec::new();
+        for i in start..end {
+            if !is_ident(&t[i], "let") {
+                continue;
+            }
+            // `if let` / `while let` scrutinees are not guard bindings
+            if i > 0
+                && (is_ident(&t[i - 1], "if") || is_ident(&t[i - 1], "while"))
+            {
+                continue;
+            }
+            let d = depths[i];
+            let mut paren = 0i64;
+            let mut brack = 0i64;
+            let mut j = i + 1;
+            while j < end {
+                if is_punct(&t[j], "(") {
+                    paren += 1;
+                } else if is_punct(&t[j], ")") {
+                    paren -= 1;
+                } else if is_punct(&t[j], "[") {
+                    brack += 1;
+                } else if is_punct(&t[j], "]") {
+                    brack -= 1;
+                } else if paren == 0
+                    && brack == 0
+                    && depths[j] == d
+                    && is_punct(&t[j], ";")
+                {
+                    break;
+                }
+                j += 1;
+            }
+            lets.push((i, j));
+        }
+        // each `.lock(` goes to its innermost enclosing `let`
+        for i in start..end {
+            if !(is_punct(&t[i], ".")
+                && i + 2 < end
+                && is_ident(&t[i + 1], "lock")
+                && is_punct(&t[i + 2], "("))
+            {
+                continue;
+            }
+            let Some(&(li, lend)) = lets
+                .iter()
+                .filter(|&&(s, e)| s < i && i < e)
+                .max_by_key(|&&(s, _)| s)
+            else {
+                continue; // temporary guard, dropped at statement end
+            };
+            // binding name: `let [mut] name = …` (skip destructuring)
+            let mut ni = li + 1;
+            if ni < end && is_ident(&t[ni], "mut") {
+                ni += 1;
+            }
+            if ni >= end || t[ni].kind != Kind::Ident {
+                continue;
+            }
+            let name = &t[ni].text;
+            let let_depth = depths[li];
+            let mut k = lend + 1;
+            while k < end && depths[k] >= let_depth {
+                if is_ident(&t[k], "drop")
+                    && k + 2 < end
+                    && is_punct(&t[k + 1], "(")
+                    && is_ident(&t[k + 2], name)
+                {
+                    break;
+                }
+                if t[k].kind == Kind::Ident
+                    && BLOCKING_CALLS.contains(&t[k].text.as_str())
+                    && k + 1 < end
+                    && is_punct(&t[k + 1], "(")
+                {
+                    out.push(diag(
+                        LOCK_ACROSS_IO,
+                        path,
+                        t[li].line,
+                        format!(
+                            "mutex guard `{name}` is still live across \
+                             blocking `{}`: a stalled peer would stall \
+                             every thread contending this lock — drop \
+                             the guard first",
+                            t[k].text
+                        ),
+                    ));
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Brace-aware item/function scanner over the lexed token stream.
+//!
+//! Builds the structural model the rules consume: function spans (so
+//! the hot-path rules can scope to designated steady-state functions),
+//! test regions (`#[cfg(test)]` items and `#[test]` functions are
+//! exempt from every rule — test code may panic, allocate, and read
+//! clocks at will), and balanced-delimiter navigation helpers. Same
+//! spirit as the `obs lint` exposition checker: hand-rolled, total,
+//! and tolerant — malformed input yields fewer spans, never a panic.
+
+use super::lexer::{is_ident, is_punct, Allow, Kind, Lexed, Token};
+
+/// A function item with its body as a half-open token-index range
+/// (excluding the outer braces).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub line: u32,
+    pub body: (usize, usize),
+    pub in_test: bool,
+}
+
+/// The per-file structural model: tokens, suppressions, functions,
+/// test regions.
+#[derive(Debug)]
+pub struct SourceModel {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<Allow>,
+    pub fns: Vec<FnSpan>,
+    test_ranges: Vec<(usize, usize)>,
+}
+
+impl SourceModel {
+    pub fn build(lexed: Lexed) -> Self {
+        let Lexed { tokens, allows } = lexed;
+        let test_ranges = find_test_ranges(&tokens);
+        let fns = find_fns(&tokens, &test_ranges);
+        SourceModel { tokens, allows, fns, test_ranges }
+    }
+
+    /// Is token index `ti` inside a `#[cfg(test)]` item or `#[test]`
+    /// function?
+    pub fn in_test(&self, ti: usize) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| ti >= s && ti < e)
+    }
+}
+
+/// Index just past the `}` matching the `{` at `open`.
+pub fn skip_braces(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0i64;
+    let mut i = open;
+    while i < toks.len() {
+        if is_punct(&toks[i], "{") {
+            depth += 1;
+        } else if is_punct(&toks[i], "}") {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Brace-nesting depth at every token: both braces of a block sit at
+/// the *outer* depth, everything between them one deeper. Rules use
+/// this to bound a `let` binding's scope (the guard-across-blocking
+/// check) without re-walking.
+pub fn brace_depths(toks: &[Token]) -> Vec<i64> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut depth = 0i64;
+    for t in toks {
+        if is_punct(t, "}") {
+            depth -= 1;
+        }
+        out.push(depth);
+        if is_punct(t, "{") {
+            depth += 1;
+        }
+    }
+    out
+}
+
+/// Does this attribute body (tokens between `#[` and `]`) mark test
+/// code? Exactly `#[test]`, or any `cfg(test…)` — `cfg(not(test))`
+/// does *not* match (the `test` ident is not directly after `cfg(`).
+fn is_test_attr(attr: &[Token]) -> bool {
+    if attr.len() == 1 && is_ident(&attr[0], "test") {
+        return true;
+    }
+    attr.windows(3).any(|w| {
+        is_ident(&w[0], "cfg") && is_punct(&w[1], "(") && is_ident(&w[2], "test")
+    })
+}
+
+/// Token ranges of test-only items: from each test attribute through
+/// the end of the item it decorates (`;` for a bare item, the matching
+/// `}` for a block item).
+fn find_test_ranges(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(is_punct(&toks[i], "#")
+            && i + 1 < toks.len()
+            && is_punct(&toks[i + 1], "["))
+        {
+            i += 1;
+            continue;
+        }
+        let (attr_end, attr) = read_attr(toks, i);
+        if !is_test_attr(attr) {
+            i = attr_end;
+            continue;
+        }
+        // skip any further attributes stacked on the same item
+        let mut k = attr_end;
+        while k + 1 < toks.len()
+            && is_punct(&toks[k], "#")
+            && is_punct(&toks[k + 1], "[")
+        {
+            k = read_attr(toks, k).0;
+        }
+        // the item itself: runs to `;` or a balanced `{…}` block
+        let mut paren = 0i64;
+        let mut brack = 0i64;
+        let mut end = k;
+        while end < toks.len() {
+            let t = &toks[end];
+            if is_punct(t, "(") {
+                paren += 1;
+            } else if is_punct(t, ")") {
+                paren -= 1;
+            } else if is_punct(t, "[") {
+                brack += 1;
+            } else if is_punct(t, "]") {
+                brack -= 1;
+            } else if paren == 0 && brack == 0 {
+                if is_punct(t, ";") {
+                    end += 1;
+                    break;
+                }
+                if is_punct(t, "{") {
+                    end = skip_braces(toks, end);
+                    break;
+                }
+            }
+            end += 1;
+        }
+        out.push((i, end));
+        i = end;
+    }
+    out
+}
+
+/// Read one `#[…]` attribute starting at the `#`; returns (index past
+/// the closing `]`, body tokens).
+fn read_attr(toks: &[Token], hash: usize) -> (usize, &[Token]) {
+    let body_start = hash + 2;
+    let mut depth = 1i64;
+    let mut j = body_start;
+    while j < toks.len() && depth > 0 {
+        if is_punct(&toks[j], "[") {
+            depth += 1;
+        } else if is_punct(&toks[j], "]") {
+            depth -= 1;
+        }
+        j += 1;
+    }
+    (j, &toks[body_start..j.saturating_sub(1).max(body_start)])
+}
+
+/// Every `fn name(…) … { body }` item (top-level, impl, or nested).
+/// `fn(…)` pointer types (no name ident) and bodyless trait
+/// declarations (`;` before `{`) are skipped.
+fn find_fns(toks: &[Token], test_ranges: &[(usize, usize)]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !is_ident(&toks[i], "fn") {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { continue };
+        if name_tok.kind != Kind::Ident {
+            continue;
+        }
+        let mut paren = 0i64;
+        let mut brack = 0i64;
+        let mut j = i + 2;
+        let mut body = None;
+        while j < toks.len() {
+            let t = &toks[j];
+            if is_punct(t, "(") {
+                paren += 1;
+            } else if is_punct(t, ")") {
+                paren -= 1;
+            } else if is_punct(t, "[") {
+                brack += 1;
+            } else if is_punct(t, "]") {
+                brack -= 1;
+            } else if paren == 0 && brack == 0 {
+                if is_punct(t, ";") {
+                    break;
+                }
+                if is_punct(t, "{") {
+                    body = Some((j + 1, skip_braces(toks, j).saturating_sub(1)));
+                    break;
+                }
+            }
+            j += 1;
+        }
+        if let Some(body) = body {
+            let in_test =
+                test_ranges.iter().any(|&(s, e)| i >= s && i < e);
+            out.push(FnSpan {
+                name: name_tok.text.clone(),
+                line: toks[i].line,
+                body,
+                in_test,
+            });
+        }
+    }
+    out
+}

@@ -68,6 +68,14 @@ SUBCOMMANDS:
                     in-process mpsc mesh
   obs         observability utilities:
                 obs lint <file.prom>   check Prometheus exposition format
+  lint        in-tree invariant lint (static analysis over the crate):
+                lint [DIR] [--root DIR] [--baseline FILE] [--deny]
+                     [--json FILE] [--update-baseline] [file.prom]...
+              walks DIR (default rust/src) enforcing the determinism /
+              no-hang / allocation-free rules (see README \"Static
+              analysis\"); `--deny` exits non-zero on any active
+              deny-severity finding (the CI lint-gate); `.prom`
+              positionals run the exposition sub-check
 
 Drop policies (simulate/sweep; the one drop-decision surface):
   --policy SPEC
@@ -124,13 +132,13 @@ fn main() -> ExitCode {
     let spec = Spec::new()
         .subcommands(&[
             "train", "local-sgd", "simulate", "tune", "scale", "sweep",
-            "trace", "analyze", "obs", "transport",
+            "trace", "analyze", "obs", "transport", "lint",
         ])
         .value_keys(&[
             "config", "set", "out", "iters", "tau", "periods", "workers",
             "grid", "topology", "comm-drop-deadline", "jobs", "thresholds",
             "deadlines", "seeds", "policy", "scenario", "trace", "obs-out",
-            "kind",
+            "kind", "root", "baseline", "json",
         ])
         .short('v', "verbose")
         .short('q', "quiet");
@@ -171,6 +179,7 @@ fn run(args: &Args) -> Result<()> {
         "analyze" => cmd_analyze(args, &cfg),
         "transport" => cmd_transport(args, &cfg),
         "obs" => cmd_obs(args),
+        "lint" => cmd_lint(args),
         other => {
             eprintln!("unknown subcommand `{other}`\n{USAGE}");
             Ok(())
@@ -351,6 +360,113 @@ fn cmd_obs(args: &Args) -> Result<()> {
     }
 }
 
+/// `lint` subcommand: the in-tree invariant lint engine
+/// ([`dropcompute::lint`]). Walks a source root (default `rust/src`),
+/// applies inline `lint:allow` suppressions and the checked-in
+/// baseline, renders active findings, and under `--deny` exits
+/// non-zero on any active deny-severity finding — the CI `lint-gate`.
+/// `.prom` positionals run the `obs lint` exposition checker as a
+/// sub-check whose issues also count toward the `--deny` gate.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use dropcompute::lint::{self, Baseline};
+    use dropcompute::util::Error;
+    use std::path::Path;
+
+    let mut prom_issues = 0usize;
+    let mut prom_files = 0usize;
+    let mut dir_pos: Option<&str> = None;
+    for p in &args.positional {
+        if p.ends_with(".prom") {
+            prom_files += 1;
+            let text = std::fs::read_to_string(p)?;
+            let issues = dropcompute::obs::lint_prometheus(&text);
+            for i in &issues {
+                eprintln!("{p}: {i}");
+            }
+            if issues.is_empty() {
+                println!("{p}: OK ({} lines)", text.lines().count());
+            }
+            prom_issues += issues.len();
+        } else if dir_pos.is_none() {
+            dir_pos = Some(p.as_str());
+        } else {
+            return Err(Error::Cli(format!(
+                "lint: unexpected argument `{p}`"
+            )));
+        }
+    }
+
+    // a pure exposition-check invocation (`lint metrics.prom`) has no
+    // tree to walk; anything else lints a source root
+    let mut deny_findings = 0usize;
+    if prom_files == 0 || dir_pos.is_some() || args.get("root").is_some() {
+        let root = args
+            .get("root")
+            .or(dir_pos)
+            .unwrap_or("rust/src");
+        let root_path = Path::new(root);
+        if !root_path.is_dir() {
+            return Err(Error::Cli(format!(
+                "lint: `{root}` is not a directory (pass a source root \
+                 or run from the repo top level)"
+            )));
+        }
+        let baseline_path = args.get("baseline").unwrap_or("lint-baseline.txt");
+        let baseline = Baseline::load(Path::new(baseline_path))?;
+        let report = lint::lint_root(root_path, baseline)?;
+
+        if args.flag("update-baseline") {
+            let n = report.active().count();
+            std::fs::write(baseline_path, Baseline::format(report.active()))?;
+            println!("lint: baselined {n} finding(s) into {baseline_path}");
+            return Ok(());
+        }
+
+        let mut t = Table::new(
+            format!("lint {root} ({} files)", report.files_scanned),
+            &["rule", "sev", "location", "finding"],
+        );
+        for d in report.active() {
+            t.row(vec![
+                d.rule.to_string(),
+                d.severity.name().to_string(),
+                format!("{}:{}", d.file, d.line),
+                d.message.clone(),
+            ]);
+        }
+        t.print();
+        println!(
+            "lint: {} active ({} deny, {} warn); {} inline-allowed, \
+             {} baselined",
+            report.active().count(),
+            report.active_deny(),
+            report.active_warn(),
+            report.suppressed(dropcompute::lint::Suppressed::Inline),
+            report.suppressed(dropcompute::lint::Suppressed::Baseline),
+        );
+
+        if let Some(json) = args.get("json") {
+            let jp = Path::new(json);
+            if let Some(parent) = jp.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            std::fs::write(jp, report.to_json())?;
+            println!("lint: wrote {json}");
+        }
+        deny_findings = report.active_deny();
+    }
+
+    if args.flag("deny") && deny_findings + prom_issues > 0 {
+        return Err(Error::Runtime(format!(
+            "lint: {} deny finding(s), {} exposition issue(s)",
+            deny_findings, prom_issues
+        )));
+    }
+    Ok(())
+}
+
 /// `transport` subcommand: the real-socket loopback harness
 /// ([`dropcompute::transport`]).
 fn cmd_transport(args: &Args, cfg: &Config) -> Result<()> {
@@ -499,6 +615,7 @@ fn cmd_transport_bench(args: &Args, cfg: &Config) -> Result<()> {
                 )?;
                 let mut buf: Vec<f32> =
                     (0..len).map(|i| (rank + i) as f32).collect();
+                // lint:allow(wall-clock): bench wall-time report, not a simulated timing path
                 let start = Instant::now();
                 for step in 0..iters {
                     transport_all_reduce(
@@ -538,6 +655,7 @@ fn cmd_transport_bench(args: &Args, cfg: &Config) -> Result<()> {
                 let rank = comm.rank;
                 let mut buf: Vec<f32> =
                     (0..len).map(|i| (rank + i) as f32).collect();
+                // lint:allow(wall-clock): bench wall-time report, not a simulated timing path
                 let start = Instant::now();
                 for _ in 0..iters {
                     topology_all_reduce(&comm, topo, &mut buf);
@@ -871,6 +989,7 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
             spec.iters,
         );
     }
+    // lint:allow(wall-clock): CLI wall-time report, not a simulated timing path
     let t0 = std::time::Instant::now();
     let (result, sweep_obs) = if obs_active(args, cfg) {
         let (r, o) = spec.run_observed();

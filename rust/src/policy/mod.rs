@@ -219,7 +219,10 @@ impl DropPolicy {
                     p.set_preemption(mode);
                 }
             }
-            _ => {}
+            DropPolicy::None
+            | DropPolicy::CommDeadline { .. }
+            | DropPolicy::PerPhaseDeadline { .. }
+            | DropPolicy::LocalSgdPeriod { .. } => {}
         }
     }
 
@@ -265,7 +268,10 @@ impl DropPolicy {
         match self {
             DropPolicy::None => true,
             DropPolicy::Composed(ps) => ps.iter().all(|p| p.is_none()),
-            _ => false,
+            DropPolicy::ComputeTau { .. }
+            | DropPolicy::CommDeadline { .. }
+            | DropPolicy::PerPhaseDeadline { .. }
+            | DropPolicy::LocalSgdPeriod { .. } => false,
         }
     }
 
@@ -288,7 +294,10 @@ impl DropPolicy {
                 }
                 best
             }
-            _ => None,
+            DropPolicy::None
+            | DropPolicy::CommDeadline { .. }
+            | DropPolicy::PerPhaseDeadline { .. }
+            | DropPolicy::LocalSgdPeriod { .. } => None,
         }
     }
 
@@ -322,7 +331,9 @@ impl DropPolicy {
                         _ => c,
                     })
                 }),
-            _ => None,
+            DropPolicy::None
+            | DropPolicy::ComputeTau { .. }
+            | DropPolicy::LocalSgdPeriod { .. } => None,
         }
     }
 
@@ -342,7 +353,10 @@ impl DropPolicy {
             DropPolicy::Composed(ps) => {
                 ps.iter().find_map(|p| p.local_sgd_h())
             }
-            _ => None,
+            DropPolicy::None
+            | DropPolicy::ComputeTau { .. }
+            | DropPolicy::CommDeadline { .. }
+            | DropPolicy::PerPhaseDeadline { .. } => None,
         }
     }
 
@@ -420,7 +434,10 @@ impl DropPolicy {
                     p.count_local_sgd(count);
                 }
             }
-            _ => {}
+            DropPolicy::None
+            | DropPolicy::ComputeTau { .. }
+            | DropPolicy::CommDeadline { .. }
+            | DropPolicy::PerPhaseDeadline { .. } => {}
         }
     }
 

@@ -170,7 +170,10 @@ impl FaultPlan {
                 {
                     scale *= 1.0 + rate * (step - s) as f64;
                 }
-                _ => {}
+                // inactive windows / other workers: guards above failed
+                FaultEvent::Fail { .. }
+                | FaultEvent::Slow { .. }
+                | FaultEvent::Drift { .. } => {}
             }
         }
         scale
@@ -237,7 +240,9 @@ impl FaultPlan {
                         )));
                     }
                 }
-                _ => {}
+                // remaining Fail shapes: the Some(0) arm above is the
+                // only structurally invalid one
+                FaultEvent::Fail { .. } => {}
             }
         }
         // Per-worker interval overlap checks. Intervals are
@@ -268,7 +273,11 @@ impl FaultPlan {
                         FaultEvent::Drift { .. },
                         FaultEvent::Drift { .. },
                     ) => true,
-                    _ => false,
+                    // mixed kinds never clash: each pair rule above is
+                    // same-kind, and fail/slow/drift windows coexist
+                    (FaultEvent::Fail { .. }, _)
+                    | (FaultEvent::Slow { .. }, _)
+                    | (FaultEvent::Drift { .. }, _) => false,
                 };
                 if clash {
                     return Err(Error::Config(format!(

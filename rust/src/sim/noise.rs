@@ -155,7 +155,14 @@ impl NoiseSampler {
             NoiseSampler::Drift { seed, sigma } => {
                 drift_offset(seed, sigma, worker, step)
             }
-            _ => 0.0,
+            // every per-draw family: step-indexed offsets don't apply
+            NoiseSampler::None
+            | NoiseSampler::PaperBounded(_)
+            | NoiseSampler::LogNormal(_)
+            | NoiseSampler::Normal(_)
+            | NoiseSampler::Bernoulli(_)
+            | NoiseSampler::Exponential(_)
+            | NoiseSampler::Gamma(_) => 0.0,
         }
     }
 

@@ -115,6 +115,7 @@ impl SurvivorScheduleCache {
             return close + tc;
         }
         self.ensure_slot(k);
+        // lint:allow(hotpath-panic): ensure_slot(k) filled this slot on the line above
         let slot = self.slots[k].as_mut().expect("slot just ensured");
         self.arrivals.clear();
         self.arrivals.resize(k, close);
@@ -138,6 +139,7 @@ impl SurvivorScheduleCache {
             return start + tc;
         }
         self.ensure_slot(k);
+        // lint:allow(hotpath-panic): ensure_slot(k) filled this slot on the line above
         let slot = self.slots[k].as_mut().expect("slot just ensured");
         slot.compiled.completion_with(arrivals, &mut slot.scratch)
     }
@@ -195,6 +197,7 @@ impl SurvivorScheduleCache {
             };
         }
         self.ensure_slot(k);
+        // lint:allow(hotpath-panic): ensure_slot(k) filled this slot on the line above
         let slot = self.slots[k].as_mut().expect("slot just ensured");
         slot.compiled.bounded_completion_with(
             arrivals,
@@ -233,6 +236,7 @@ impl SurvivorScheduleCache {
             return PhaseBounded::Complete(close + tc);
         }
         self.ensure_slot(k);
+        // lint:allow(hotpath-panic): ensure_slot(k) filled this slot on the line above
         let slot = self.slots[k].as_mut().expect("slot just ensured");
         self.arrivals.clear();
         self.arrivals.resize(k, close);

@@ -161,8 +161,12 @@ impl Trace {
         let dims: Vec<usize> = header
             .split(|c: char| !c.is_ascii_digit())
             .filter(|s| !s.is_empty())
-            .map(|s| s.parse().unwrap())
-            .collect();
+            .map(|s| {
+                s.parse().map_err(|_| {
+                    Error::Data(format!("bad trace header `{header}`"))
+                })
+            })
+            .collect::<Result<_>>()?;
         if dims.len() != 3 {
             return Err(Error::Data(format!("bad trace header `{header}`")));
         }
@@ -718,7 +722,10 @@ impl TraceRecord {
         }
         let policy = crate::policy::DropPolicy::parse(&self.meta.policy)?;
         let eff_h = policy.local_sgd_h();
-        match (self.meta.mode, eff_h) {
+        // one decision, one binding: the same match that rejects the
+        // inconsistent mode/policy pairs yields the per-row sample
+        // limit, so no later `expect` has to re-derive "checked above"
+        let per_row_limit = match (self.meta.mode, eff_h) {
             (TraceMode::Period, None) => {
                 return Err(Error::Data(
                     "trace: period mode requires a local-sgd policy clause"
@@ -731,8 +738,9 @@ impl TraceRecord {
                         .into(),
                 ))
             }
-            _ => {}
-        }
+            (TraceMode::Period, Some(h)) => h,
+            (TraceMode::Step, None) => self.meta.accums,
+        };
         let n = self.meta.workers;
         for (i, st) in self.steps.iter().enumerate() {
             if st.straggle.len() != n || st.samples.len() != n {
@@ -750,18 +758,12 @@ impl TraceRecord {
                 }
             }
             for (w, row) in st.samples.iter().enumerate() {
-                let limit = match self.meta.mode {
-                    TraceMode::Step => self.meta.accums,
-                    TraceMode::Period => {
-                        eff_h.expect("period mode checked above")
-                    }
-                };
-                if row.len() > limit {
+                if row.len() > per_row_limit {
                     return Err(Error::Data(format!(
                         "trace: step {i} worker {w}: {} samples exceed the \
                          {} scheduled per {}",
                         row.len(),
-                        limit,
+                        per_row_limit,
                         self.meta.mode.name(),
                     )));
                 }

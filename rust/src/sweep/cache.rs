@@ -16,7 +16,7 @@
 //! compiles, which is what keeps the parallel sweep bitwise identical
 //! to the serial one; property-tested in `tests/policy_equivalence.rs`).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::sim::{ClusterSim, CommModel, SurvivorScheduleCache};
@@ -24,7 +24,7 @@ use crate::topology::TopologyKind;
 
 /// The comm-model identity a survivor cache is valid for: topology kind
 /// plus the exact link-parameter bits.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct PoolKey {
     kind: TopologyKind,
     latency: u64,
@@ -58,7 +58,7 @@ fn pool_key(model: &CommModel) -> Option<PoolKey> {
 /// around each grid point.
 #[derive(Debug, Default)]
 pub struct SurvivorCachePool {
-    slots: Mutex<HashMap<PoolKey, Vec<SurvivorScheduleCache>>>,
+    slots: Mutex<BTreeMap<PoolKey, Vec<SurvivorScheduleCache>>>,
 }
 
 impl SurvivorCachePool {

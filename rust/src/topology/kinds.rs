@@ -297,7 +297,7 @@ impl Topology for Torus2d {
 /// Config/CLI-level topology selector (the trait objects above carry no
 /// state beyond these parameters, so a `Copy` enum travels through
 /// `ClusterConfig` cheaply).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum TopologyKind {
     Ring,
     Tree,

@@ -356,6 +356,7 @@ impl<T: Wire> SocketMesh<T> {
         let slot = self.writers[dst]
             .as_ref()
             .expect("writer table covers every peer");
+        // lint:allow(lock-across-io): frame atomicity — a retried send must not interleave a partial frame
         let mut conn = slot.lock().unwrap_or_else(|p| p.into_inner());
         let mut attempt = 0u32;
         loop {

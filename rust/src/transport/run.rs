@@ -37,7 +37,7 @@
 //!
 //! [`FaultPlan`]: crate::sim::FaultPlan
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -359,7 +359,7 @@ fn worker_main(
     let mut grad: Vec<f32> = (0..spec.grad_len)
         .map(|i| ((rank + 2) * (i % 13 + 1)) as f32)
         .collect();
-    let mut schedules: HashMap<usize, Schedule> = HashMap::new();
+    let mut schedules: BTreeMap<usize, Schedule> = BTreeMap::new();
     let mut log: Vec<WorkerStepLog> = Vec::with_capacity(spec.iters as usize);
     let n = spec.workers;
     let nominal_step = Duration::from_secs_f64(

@@ -1,0 +1,426 @@
+//! Lint-engine rule tests: one seeded bad fixture per rule asserting
+//! the exact diagnostic (rule key, severity, line, message), clean
+//! fixtures per rule exercising the deliberate non-flags (allowlisted
+//! paths, guarded wildcards, pattern-only enum detection, inner-block
+//! guards, test-code exemption), suppression and baseline round-trips,
+//! and a self-lint of this very repo under deny semantics.
+
+use std::path::Path;
+
+use dropcompute::lint::{
+    self, apply_baseline, known_rule, lint_source, rule_info, Baseline,
+    Diagnostic, LintReport, Severity, Suppressed, ENUM_WILDCARD,
+    HOTPATH_ALLOC, HOTPATH_PANIC, LINT_USAGE, LOCK_ACROSS_IO, RULES,
+    UNORDERED_ITER, WALL_CLOCK,
+};
+
+fn active(diags: &[Diagnostic]) -> Vec<&Diagnostic> {
+    diags.iter().filter(|d| d.is_active()).collect()
+}
+
+// ---------------------------------------------------------------- rule 1
+
+#[test]
+fn wall_clock_flagged_outside_allowlist() {
+    let src = r#"
+pub fn step() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+"#;
+    let diags = lint_source("sim/clock_use.rs", src);
+    let act = active(&diags);
+    assert_eq!(act.len(), 1);
+    let d = act[0];
+    assert_eq!(d.rule, WALL_CLOCK);
+    assert_eq!(d.severity, Severity::Deny);
+    assert_eq!(d.line, 3);
+    assert!(d.message.contains("virtual clock"), "{}", d.message);
+    assert_eq!(d.snippet, "let t0 = std::time::Instant::now();");
+
+    // SystemTime is flagged by bare name (no call path required)
+    let sys = "pub fn t() -> std::time::SystemTime { todo!() }\n";
+    let diags = lint_source("analysis/x.rs", sys);
+    assert_eq!(active(&diags).len(), 1);
+    assert_eq!(active(&diags)[0].rule, WALL_CLOCK);
+}
+
+#[test]
+fn wall_clock_clean_shapes() {
+    let src = "pub fn t() -> f64 { Instant::now().elapsed().as_secs_f64() }\n";
+    // the real transport, the sanctioned timer, and the sweep progress
+    // meter read wall clocks by design
+    for path in ["transport/peer.rs", "util/stopwatch.rs", "sweep/runner.rs"] {
+        assert!(active(&lint_source(path, src)).is_empty(), "{path}");
+    }
+    // test code anywhere may read clocks freely
+    let test_src = r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn timer() {
+        let _ = std::time::Instant::now();
+    }
+}
+"#;
+    assert!(active(&lint_source("sim/x.rs", test_src)).is_empty());
+    // prose in comments never trips the rule
+    let comment = "// Instant::now() would be wrong here\npub fn f() {}\n";
+    assert!(active(&lint_source("sim/x.rs", comment)).is_empty());
+}
+
+// ---------------------------------------------------------------- rule 2
+
+#[test]
+fn unordered_iter_flagged_in_ordered_modules() {
+    let src = "use std::collections::HashMap;\npub struct S { m: HashMap<u32, u32> }\n";
+    let diags = lint_source("sweep/cache.rs", src);
+    let act = active(&diags);
+    assert_eq!(act.len(), 2);
+    assert!(act.iter().all(|d| d.rule == UNORDERED_ITER));
+    assert_eq!(act[0].line, 1);
+    assert!(act[0].message.contains("BTreeMap"), "{}", act[0].message);
+
+    let set = "use std::collections::HashSet;\n";
+    assert_eq!(active(&lint_source("obs/x.rs", set)).len(), 1);
+
+    // outside the determinism-critical modules the same source is fine
+    assert!(active(&lint_source("report/table.rs", src)).is_empty());
+    assert!(active(&lint_source("config/mod.rs", src)).is_empty());
+}
+
+// ---------------------------------------------------------------- rule 3
+
+#[test]
+fn enum_wildcard_flagged_on_closed_enum() {
+    let src = r#"
+fn f(p: &DropPolicy) -> bool {
+    match p {
+        DropPolicy::None => true,
+        _ => false,
+    }
+}
+"#;
+    let diags = lint_source("policy/mod.rs", src);
+    let act = active(&diags);
+    assert_eq!(act.len(), 1);
+    let d = act[0];
+    assert_eq!(d.rule, ENUM_WILDCARD);
+    assert_eq!(d.severity, Severity::Deny);
+    assert_eq!(d.line, 5);
+    assert!(d.message.contains("DropPolicy"), "{}", d.message);
+    assert!(d.message.contains("future variant"), "{}", d.message);
+}
+
+#[test]
+fn enum_wildcard_clean_shapes() {
+    // a guarded wildcard is a deliberate predicate catch-all
+    let guarded = r#"
+fn f(p: &DropPolicy, c: bool) -> bool {
+    match p {
+        DropPolicy::None => true,
+        _ if c => true,
+        DropPolicy::ComputeTau { .. } | DropPolicy::Composed(_) => false,
+    }
+}
+"#;
+    assert!(active(&lint_source("policy/mod.rs", guarded)).is_empty());
+
+    // constructors in arm *bodies* do not make this a match on the
+    // enum — only patterns count
+    let len_match = r#"
+fn g(parts: &[u32]) -> DropPolicy {
+    match parts.len() {
+        0 => DropPolicy::None,
+        _ => DropPolicy::Composed(Vec::new()),
+    }
+}
+"#;
+    assert!(active(&lint_source("policy/mod.rs", len_match)).is_empty());
+
+    // tuple patterns with per-element wildcards are fine — only an arm
+    // whose entire pattern is `_` swallows variants
+    let tuple = r#"
+fn t(a: &FaultEvent, b: &FaultEvent) -> bool {
+    match (a, b) {
+        (FaultEvent::Fail { .. }, FaultEvent::Fail { .. }) => true,
+        (FaultEvent::Fail { .. }, _)
+        | (FaultEvent::Slow { .. }, _)
+        | (FaultEvent::Drift { .. }, _) => false,
+    }
+}
+"#;
+    assert!(active(&lint_source("sim/fault.rs", tuple)).is_empty());
+
+    // open (non-catalog) enums may wildcard at will
+    let open_enum = r#"
+fn h(e: std::io::ErrorKind) -> bool {
+    match e {
+        std::io::ErrorKind::BrokenPipe => true,
+        _ => false,
+    }
+}
+"#;
+    assert!(active(&lint_source("util/mod.rs", open_enum)).is_empty());
+}
+
+// ---------------------------------------------------------------- rule 4
+
+#[test]
+fn hotpath_panic_flagged_only_in_designated_fn() {
+    let src = r#"
+impl C {
+    pub fn step_into(&mut self) -> f64 {
+        self.slot.as_ref().unwrap().value()
+    }
+    pub fn warmup(&mut self) -> f64 {
+        self.slot.as_ref().expect("warmed").value()
+    }
+}
+"#;
+    let diags = lint_source("sim/cluster.rs", src);
+    let act = active(&diags);
+    assert_eq!(act.len(), 1, "only the designated fn is flagged");
+    let d = act[0];
+    assert_eq!(d.rule, HOTPATH_PANIC);
+    assert_eq!(d.line, 4);
+    assert!(d.message.contains("step_into"), "{}", d.message);
+    assert!(d.message.contains("unwrap"), "{}", d.message);
+
+    // the designation is (file, fn): the same source elsewhere is clean
+    assert!(active(&lint_source("sim/other.rs", src)).is_empty());
+}
+
+// ---------------------------------------------------------------- rule 5
+
+#[test]
+fn hotpath_alloc_flags_every_form() {
+    let src = r#"
+impl S {
+    pub fn bounded_completion(&mut self) -> usize {
+        let v = vec![1u32];
+        let w: Vec<u32> = v.iter().copied().collect();
+        let b = Box::new(w.len());
+        *b
+    }
+    pub fn ensure_slot(&mut self) {
+        self.scratch = Vec::new();
+    }
+}
+"#;
+    let diags = lint_source("sim/survivor.rs", src);
+    let act = active(&diags);
+    assert_eq!(act.len(), 3, "vec![], collect(), Box::new — warmup exempt");
+    assert!(act.iter().all(|d| d.rule == HOTPATH_ALLOC));
+    assert_eq!(act[0].line, 4);
+    assert!(act[0].message.contains("vec![]"), "{}", act[0].message);
+    assert!(act[1].message.contains("collect()"), "{}", act[1].message);
+    assert!(act[2].message.contains("Box::new"), "{}", act[2].message);
+    assert!(act.iter().all(|d| d.message.contains("bounded_completion")));
+}
+
+// ---------------------------------------------------------------- rule 6
+
+#[test]
+fn lock_across_io_flagged() {
+    let src = r#"
+fn send(&self) {
+    let mut conn = self.slot.lock().unwrap();
+    write_frame(&mut conn);
+}
+"#;
+    let diags = lint_source("transport/x.rs", src);
+    let act = active(&diags);
+    assert_eq!(act.len(), 1);
+    let d = act[0];
+    assert_eq!(d.rule, LOCK_ACROSS_IO);
+    assert_eq!(d.severity, Severity::Deny);
+    assert_eq!(d.line, 3, "diagnostic points at the guard's `let`");
+    assert!(d.message.contains("conn"), "{}", d.message);
+    assert!(d.message.contains("write_frame"), "{}", d.message);
+}
+
+#[test]
+fn lock_across_io_clean_shapes() {
+    // an explicit drop releases the guard before the blocking call
+    let dropped = r#"
+fn send(&self) {
+    let mut conn = self.slot.lock().unwrap();
+    conn.push(1);
+    drop(conn);
+    write_frame();
+}
+"#;
+    assert!(active(&lint_source("transport/x.rs", dropped)).is_empty());
+
+    // a guard confined to an initializer block dies at the `}` and
+    // never taints the outer binding
+    let inner = r#"
+fn send(&self) {
+    let d = {
+        let mut rng = self.rng.lock().unwrap();
+        rng.next()
+    };
+    sleep(d);
+}
+"#;
+    assert!(active(&lint_source("transport/x.rs", inner)).is_empty());
+
+    // outside transport/ and collective/ the rule does not apply
+    let outside = r#"
+fn send(&self) {
+    let mut conn = self.slot.lock().unwrap();
+    write_frame(&mut conn);
+}
+"#;
+    assert!(active(&lint_source("sweep/pool.rs", outside)).is_empty());
+}
+
+// ----------------------------------------------------------- suppression
+
+#[test]
+fn inline_allow_suppresses_same_line_and_line_above() {
+    let same_line = "fn f() -> f64 { now_secs(Instant::now()) } // lint:allow(wall-clock): report timer\n";
+    let diags = lint_source("sim/x.rs", same_line);
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].suppressed, Some(Suppressed::Inline));
+    assert!(active(&diags).is_empty());
+
+    let line_above = r#"
+fn f() {
+    // lint:allow(wall-clock): host timer for a human-facing report
+    let _ = std::time::Instant::now();
+}
+"#;
+    let diags = lint_source("sim/x.rs", line_above);
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].suppressed, Some(Suppressed::Inline));
+
+    // an allow only covers its own rule
+    let wrong_rule = r#"
+fn f() {
+    // lint:allow(unordered-iter): misdirected
+    let _ = std::time::Instant::now();
+}
+"#;
+    assert_eq!(active(&lint_source("sim/x.rs", wrong_rule)).len(), 1);
+}
+
+#[test]
+fn unknown_allow_rule_is_a_warn_finding() {
+    let src = "fn f() {} // lint:allow(no-such-rule)\n";
+    let diags = lint_source("sim/x.rs", src);
+    assert_eq!(diags.len(), 1);
+    let d = &diags[0];
+    assert_eq!(d.rule, LINT_USAGE);
+    assert_eq!(d.severity, Severity::Warn);
+    assert!(d.is_active(), "misuse of the surface is never self-excused");
+    assert!(d.message.contains("no-such-rule"), "{}", d.message);
+    assert!(d.message.contains("wall-clock"), "lists known rules: {}", d.message);
+}
+
+// -------------------------------------------------------------- baseline
+
+#[test]
+fn baseline_round_trip_suppresses_then_resurfaces() {
+    let src = "\
+use std::collections::HashMap;
+pub type M = HashMap<u32, u32>;
+";
+    let mut diags = lint_source("sim/map.rs", src);
+    assert_eq!(active(&diags).len(), 2);
+
+    // format → parse → apply: every finding suppressed, nothing stale
+    let text = Baseline::format(diags.iter());
+    let mut bl = Baseline::parse(&text);
+    assert_eq!(bl.len(), 2);
+    apply_baseline(&mut diags, &mut bl);
+    assert!(active(&diags).is_empty());
+    assert!(diags
+        .iter()
+        .all(|d| d.suppressed == Some(Suppressed::Baseline)));
+    assert!(bl.stale().is_empty());
+
+    // touching the flagged line changes its content address: the
+    // finding resurfaces and the orphaned entry reports stale
+    let edited = "\
+use std::collections::HashMap as Map;
+pub type M = HashMap<u32, u32>;
+";
+    let mut diags2 = lint_source("sim/map.rs", edited);
+    let mut bl2 = Baseline::parse(&text);
+    apply_baseline(&mut diags2, &mut bl2);
+    assert_eq!(active(&diags2).len(), 1);
+    assert_eq!(bl2.stale().len(), 1);
+}
+
+// ----------------------------------------------------- catalog + report
+
+#[test]
+fn rule_catalog_is_deny_and_known() {
+    assert_eq!(RULES.len(), 6);
+    for r in &RULES {
+        assert_eq!(r.severity, Severity::Deny, "{}", r.key);
+        assert!(known_rule(r.key));
+        assert!(rule_info(r.key).is_some());
+        assert!(!r.name.is_empty() && !r.summary.is_empty());
+    }
+    assert!(known_rule(LINT_USAGE), "meta rule is a legal allow target");
+    assert!(rule_info(LINT_USAGE).is_none(), "but has no catalog entry");
+    assert!(!known_rule("no-such-rule"));
+}
+
+#[test]
+fn report_json_escapes_and_summarizes() {
+    let report = LintReport {
+        root: "rust/src".into(),
+        files_scanned: 1,
+        diagnostics: vec![Diagnostic {
+            rule: WALL_CLOCK,
+            severity: Severity::Deny,
+            file: "sim/x.rs".into(),
+            line: 3,
+            message: "uses \"quotes\"".into(),
+            snippet: "let t = Instant::now();".into(),
+            suppressed: None,
+        }],
+    };
+    let json = report.to_json();
+    assert!(json.contains("\"files_scanned\": 1"), "{json}");
+    assert!(json.contains("\\\"quotes\\\""), "{json}");
+    assert!(json.contains("\"deny\": 1"), "{json}");
+    assert!(json.contains("\"suppressed\": null"), "{json}");
+}
+
+// -------------------------------------------------------------- self-lint
+
+/// The deny gate on this very repo: the tree lints clean against the
+/// checked-in (empty) baseline, with every deliberate exception
+/// inline-allowed at its site. This is exactly what the CI `lint-gate`
+/// job runs via `dropcompute lint --deny`.
+#[test]
+fn repo_self_lints_clean_under_deny() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest.join("rust/src");
+    let baseline =
+        Baseline::load(&manifest.join("lint-baseline.txt")).unwrap();
+    let report = lint::lint_root(&root, baseline).unwrap();
+    assert!(report.files_scanned > 50, "walked {}", report.files_scanned);
+
+    let act: Vec<String> = report
+        .active()
+        .map(|d| format!("{} {}:{} {}", d.rule, d.file, d.line, d.message))
+        .collect();
+    assert!(act.is_empty(), "self-lint found findings:\n{}", act.join("\n"));
+    assert_eq!(report.active_deny(), 0);
+    assert_eq!(report.active_warn(), 0, "no unknown allows, no stale baseline");
+
+    // the deliberate exceptions live inline next to their code: the 3
+    // CLI bench timers, the 4 ensure_slot expects, the send-path guard
+    assert!(
+        report.suppressed(Suppressed::Inline) >= 8,
+        "expected the known inline allows, got {}",
+        report.suppressed(Suppressed::Inline)
+    );
+    assert_eq!(report.suppressed(Suppressed::Baseline), 0);
+}
