@@ -6,8 +6,10 @@
 //! observer overhead (NoopObserver step path vs a live ObsRecorder),
 //! trace replay rate (recorded trace through the compiled pass vs the
 //! event-queue oracle, conformance-gated), batched noise sampling (enum
-//! vs boxed dispatch), parallel sweep scaling, Algorithm-2 sweep cost,
-//! PJRT grad-step + upload overhead.
+//! vs boxed dispatch), multi-replica batched stepping (SoA lockstep vs
+//! per-replica scalar, parity-gated) with the 4-wide phase-scan
+//! reduction, parallel sweep scaling, Algorithm-2 sweep cost, PJRT
+//! grad-step + upload overhead.
 //!
 //! Besides the human-readable table, emits `BENCH_perf.json` — one
 //! entry per path with `metric`, `value` and (where the path has a
@@ -31,7 +33,10 @@ use dropcompute::report::{f, Table};
 use dropcompute::rng::{Distribution, Xoshiro256pp};
 use dropcompute::runtime::json::Json;
 use dropcompute::runtime::ModelRuntime;
-use dropcompute::sim::{build_noise, ClusterSim, EventQueue, NoiseSampler, StepOutcome};
+use dropcompute::sim::{
+    build_noise, scan_max4, ClusterSim, EventQueue, NoiseSampler,
+    ReplicaBatch, StepOutcome,
+};
 use dropcompute::sweep::SweepSpec;
 use dropcompute::topology::TopologyKind;
 use dropcompute::train::ParamStore;
@@ -562,10 +567,124 @@ fn main() {
         }
     }
 
+    // ---- multi-replica batched stepping: SoA lockstep vs solo scalar -
+    // S replicas (same topology/policy, different seeds) step through
+    // ONE walk of the compiled phase schedule instead of S; at N=128
+    // the schedule stream (offsets/srcs/dsts/hops) is ~0.5 MB per
+    // scalar step, so serving all lanes per walk is the win. before =
+    // S solo scalar sims stepped sequentially (per-replica-step time),
+    // after = ReplicaBatch::step_installed_into / S. The parity loop
+    // ahead of the timing is the CI batched-vs-scalar sanity gate: the
+    // scalar pass stays the oracle.
+    {
+        let lanes = 16usize;
+        let mut cfg = paper_cluster(128);
+        cfg.topology = Some(TopologyKind::Ring);
+        cfg.link_latency = 25e-6;
+        cfg.link_bandwidth = 12.5e9;
+        cfg.grad_bytes = 4.0 * 335e6;
+        cfg.accumulations = 2; // cheap noise: the schedule walk dominates
+        let policy = DropPolicy::compute_tau(9.0);
+        let mk_sims = || -> Vec<ClusterSim> {
+            (0..lanes as u64)
+                .map(|r| {
+                    ClusterSim::new(&cfg, 0xBA7C + r)
+                        .with_policy(policy.clone())
+                })
+                .collect()
+        };
+
+        // parity gate: every lane bitwise equal to its solo run
+        let mut solo = mk_sims();
+        let mut batch = ReplicaBatch::from_sims(mk_sims());
+        let mut outs = vec![StepOutcome::default(); lanes];
+        let mut out = StepOutcome::default();
+        for i in 0..5 {
+            batch.step_installed_into(&mut outs);
+            for (r, s) in solo.iter_mut().enumerate() {
+                s.step_installed_into(&mut out);
+                assert_eq!(
+                    out.iter_time.to_bits(),
+                    outs[r].iter_time.to_bits(),
+                    "batched lane {r} must equal its solo run (step {i})"
+                );
+                assert_eq!(out.completed, outs[r].completed, "lane {r}");
+            }
+        }
+
+        let reps = if smoke { 8 } else { 30 };
+        let mut solo = mk_sims();
+        let t_before = bench(reps, || {
+            for s in solo.iter_mut() {
+                s.step_installed_into(&mut out);
+            }
+            out.iter_time
+        }) / lanes as f64;
+        let mut batch = ReplicaBatch::from_sims(mk_sims());
+        let t_after = bench(reps, || {
+            batch.step_installed_into(&mut outs);
+            outs[0].iter_time
+        }) / lanes as f64;
+        perf.record_ba(
+            "batched_step_rate",
+            &format!("replica-steps/s (ring n128, S={lanes})"),
+            1.0 / t_before,
+            1.0 / t_after,
+        );
+        gate("batched_step_rate", t_before, t_after, 4.0, smoke);
+    }
+
+    // ---- SIMD phase scan: chunked 4-wide max vs sequential fold ------
+    // The batched pass's per-phase reduction. scan_max4 keeps four
+    // independent accumulators (breaking the fold's serial dependence)
+    // with an order-fixed combine, so it is bitwise equal to the
+    // sequential fold on every readiness buffer the simulator can
+    // produce — asserted here on random + edge-case inputs, then timed.
+    {
+        let len = if smoke { 4096 } else { 16384 };
+        let mut rng = Xoshiro256pp::seed_from_u64(0x5CA9);
+        let mut buf = vec![0.0f64; len];
+        for v in buf.iter_mut() {
+            *v = rng.next_f64() * 12.0;
+        }
+        // bitwise parity, including ragged tails
+        for n in [0, 1, 2, 3, 4, 5, 7, 63, len - 1, len] {
+            let seq = buf[..n]
+                .iter()
+                .cloned()
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(
+                scan_max4(&buf[..n]).to_bits(),
+                seq.to_bits(),
+                "scan_max4 must equal the sequential fold (len {n})"
+            );
+        }
+        let reps = if smoke { 200 } else { 2000 };
+        let t_before = bench(reps, || {
+            buf.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        });
+        let t_after = bench(reps, || scan_max4(&buf));
+        perf.record_ba(
+            "simd_scan_rate",
+            "Melem/s (16k f64 max-reduce)",
+            len as f64 / t_before / 1e6,
+            len as f64 / t_after / 1e6,
+        );
+        gate("simd_scan_rate", t_before, t_after, 1.5, smoke);
+    }
+
     // ---- parallel sweep scaling --------------------------------------
-    // Grid-points/s, serial vs 4 jobs, on the fixed-T^c model (cheap
-    // steps => scheduler overhead is what's being measured).
-    let sweep_spec = SweepSpec::new(paper_cluster(16))
+    // Grid-points/s, serial scalar vs thread pool vs thread pool +
+    // seed-axis batching. A ring comm model so each step walks a
+    // compiled schedule — the cost the ReplicaBatch seed axis
+    // amortizes; on the fixed-T^c model the batched arm would degrade
+    // to scalar stepping and measure nothing.
+    let mut sweep_cfg = paper_cluster(16);
+    sweep_cfg.topology = Some(TopologyKind::Ring);
+    sweep_cfg.link_latency = 25e-6;
+    sweep_cfg.link_bandwidth = 12.5e9;
+    sweep_cfg.grad_bytes = 4.0 * 335e6;
+    let sweep_spec = SweepSpec::new(sweep_cfg)
         .workers(&[8, 16, 24, 32])
         .thresholds(&[0.0, 9.0])
         .seeds(&[1, 2, 3, 4])
@@ -585,11 +704,39 @@ fn main() {
             "parallel sweep must be bitwise identical to serial"
         );
     }
+    // after arm: threads AND seed-axis batching (4 seeds -> one
+    // ReplicaBatch per non-seed grid coordinate), still bitwise equal
+    let t0 = Instant::now();
+    let batched = sweep_spec.clone().jobs(4).batch(4).run();
+    let t_batched = t0.elapsed().as_secs_f64();
+    for (a, b) in serial.points.iter().zip(&batched.points) {
+        assert_eq!(
+            a.mean_iter_time.to_bits(),
+            b.mean_iter_time.to_bits(),
+            "batched sweep must be bitwise identical to serial"
+        );
+        assert_eq!(
+            a.throughput.to_bits(),
+            b.throughput.to_bits(),
+            "batched sweep throughput must be bitwise identical"
+        );
+        assert_eq!(
+            a.drop_rate.to_bits(),
+            b.drop_rate.to_bits(),
+            "batched sweep drop_rate must be bitwise identical"
+        );
+    }
     perf.record_ba(
         "sweep_points_per_sec",
-        "points/s",
+        "points/s (serial -> jobs4+batch4)",
         n_points / t_serial,
-        n_points / t_parallel,
+        n_points / t_batched,
+    );
+    perf.record(
+        "sweep_batch4_vs_jobs4",
+        "x vs jobs4 unbatched",
+        t_parallel / t_batched,
+        f(t_parallel / t_batched, 2),
     );
     perf.record(
         "sweep_scaling_jobs4",
@@ -669,6 +816,8 @@ fn main() {
         "obs_overhead",
         "trace_replay_rate",
         "noise_fill_rate",
+        "batched_step_rate",
+        "simd_scan_rate",
         "sweep_points_per_sec",
     ] {
         assert!(

@@ -327,6 +327,10 @@ pub struct SweepConfig {
     pub scenarios: Vec<crate::sim::FaultPlan>,
     /// Seed axis (same seed across arms = paired comparisons).
     pub seeds: Vec<u64>,
+    /// Seed-axis lockstep batch width for the SoA multi-replica
+    /// stepper ([`crate::sim::ReplicaBatch`]); 0/1 = scalar per-point
+    /// stepping. Results are bitwise independent of the width.
+    pub batch: usize,
     /// Progress/ETA reporting to stderr.
     pub progress: bool,
 }
@@ -342,6 +346,7 @@ impl Default for SweepConfig {
             policies: Vec::new(),
             scenarios: Vec::new(),
             seeds: vec![0],
+            batch: 1,
             progress: true,
         }
     }
@@ -569,6 +574,13 @@ impl Config {
             )));
         }
         c.sweep.iters = iters as usize;
+        let batch = doc.int_or("sweep.batch", 1);
+        if batch < 1 {
+            return Err(Error::Config(format!(
+                "sweep.batch must be >= 1, got {batch}"
+            )));
+        }
+        c.sweep.batch = batch as usize;
         c.sweep.progress = doc.bool_or("sweep.progress", true);
         c.sweep.workers = int_list(doc, "sweep.workers", &c.sweep.workers)?
             .into_iter()
@@ -1026,6 +1038,7 @@ mod tests {
             [sweep]
             jobs = 4
             iters = 25
+            batch = 8
             workers = [8, 16, 32]
             thresholds = [0.0, 2.5, 9]
             deadlines = [0.0, 3.0]
@@ -1037,15 +1050,17 @@ mod tests {
         let c = Config::from_doc(&doc).unwrap();
         assert_eq!(c.sweep.jobs, 4);
         assert_eq!(c.sweep.iters, 25);
+        assert_eq!(c.sweep.batch, 8);
         assert_eq!(c.sweep.workers, vec![8, 16, 32]);
         assert_eq!(c.sweep.thresholds, vec![0.0, 2.5, 9.0]);
         assert_eq!(c.sweep.deadlines, vec![0.0, 3.0]);
         assert_eq!(c.sweep.seeds, vec![1, 2, 3, 4]);
         assert!(!c.sweep.progress);
-        // defaults: auto jobs, one point per axis
+        // defaults: auto jobs, one point per axis, scalar stepping
         let d = Config::default();
         assert_eq!(d.sweep.jobs, 0);
         assert_eq!(d.sweep.workers, vec![16]);
+        assert_eq!(d.sweep.batch, 1);
         // scalars act as one-element lists
         let doc1 = Document::parse("[sweep]\nworkers = 64").unwrap();
         assert_eq!(
@@ -1059,6 +1074,8 @@ mod tests {
             "[sweep]\nseeds = [-1]",
             "[sweep]\njobs = -4",
             "[sweep]\niters = -40",
+            "[sweep]\nbatch = 0",
+            "[sweep]\nbatch = -2",
             "[sweep]\nthresholds = [-1.0]",
             "[sweep]\nworkers = []",
         ] {

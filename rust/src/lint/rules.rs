@@ -119,12 +119,19 @@ const HOT_FUNCTIONS: &[(&str, &[&str])] = &[
         &[
             "step_into",
             "step_observed",
+            "begin_step_observed",
+            "finish_step_observed",
+            "seal_batched_step",
             "finish_into",
             "per_phase_iter_time",
             "recursive_survivor_time",
             "recursive_restart_rounds",
             "finish_faulted",
         ],
+    ),
+    (
+        "sim/batch.rs",
+        &["step_installed_into", "lockstep_pass", "scan_max4"],
     ),
     (
         "sim/compiled.rs",

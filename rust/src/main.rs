@@ -22,7 +22,7 @@ use dropcompute::obs::ObsRecorder;
 use dropcompute::coordinator::ScaleRun;
 use dropcompute::policy::DropPolicy;
 use dropcompute::report::{f, pct, Table};
-use dropcompute::sim::{ClusterSim, FaultPlan};
+use dropcompute::sim::{ClusterSim, FaultPlan, ReplicaBatch};
 use dropcompute::train::{LocalSgdTrainer, Trainer};
 use dropcompute::util::Result;
 
@@ -35,13 +35,14 @@ SUBCOMMANDS:
   train       pretrain with/without DropCompute   [--out dir]
   local-sgd   Local-SGD + DropCompute             [--periods N] [--tau T]
   simulate    timing-only cluster simulation      [--iters N] [--tau T]
+              [--batch S]
   tune        Algorithm 2 threshold sweep         [--iters N]
   scale       throughput vs N sweep               [--workers 8,16,...] [--jobs J]
   sweep       parallel scenario grid: workers x tau x deadline x seed,
               or workers x policy x seed with --policy
               [--workers 8,16] [--thresholds 0,2.5] [--deadlines 0,3]
               [--policy SPEC]... [--seeds 1,2,3] [--iters N] [--jobs J]
-              [--out dir]
+              [--batch S] [--out dir]
   trace       record / replay / fit replayable timing traces:
                 trace record [--iters N] [--policy SPEC] [--trace file]
                     run the simulator, record per-worker draws +
@@ -119,6 +120,13 @@ scale/sweep fan grid points over a thread pool: --jobs J (0 = all
 cores, 1 = serial; output is bitwise identical either way). Grid axes
 default to the `[sweep]` config section.
 
+simulate/sweep step replicas in SoA lockstep: --batch S (default 1,
+`[sweep] batch` config). `simulate --batch S` runs S replicas (seeds
+seed..seed+S-1) through one shared compiled phase pass and reports
+aggregate stats; `sweep --batch S` chunks the seed axis S-wide per
+pass. Batched output is bitwise identical to --batch 1 — the scalar
+pass stays the oracle (see tests/batch_equivalence.rs).
+
 Observability (simulate/sweep/trace replay): --obs-out BASE attaches
 the zero-overhead step recorder and writes BASE.prom (Prometheus text)
 + BASE.json (snapshot: tail histograms, per-worker straggler table,
@@ -136,7 +144,8 @@ fn main() -> ExitCode {
         ])
         .value_keys(&[
             "config", "set", "out", "iters", "tau", "periods", "workers",
-            "grid", "topology", "comm-drop-deadline", "jobs", "thresholds",
+            "grid", "topology", "comm-drop-deadline", "jobs", "batch",
+            "thresholds",
             "deadlines", "seeds", "policy", "scenario", "trace", "obs-out",
             "kind", "root", "baseline", "json",
         ])
@@ -743,30 +752,59 @@ fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
         }
         None => cfg.scenario.clone(),
     };
-    let mut sim =
-        ClusterSim::new(&cluster, cfg.train.seed).with_policy(policy.clone());
+    let batch = args.usize_or("batch", 1)?.max(1);
     if let Some(plan) = &scenario {
         plan.validate_for(cluster.workers)?;
         plan.validate_horizon(iters as u64)?;
-        sim = sim.with_fault_plan(plan.clone());
     }
-    let mut out = dropcompute::sim::StepOutcome::default();
+    // --batch S: S replicas (seeds seed..seed+S-1) step in SoA lockstep
+    // through one shared compiled phase pass; each replica's outcomes
+    // are bitwise what a solo run with its seed would produce, so the
+    // aggregate below is just an S-replica average of solo runs.
+    let mut sims = Vec::with_capacity(batch);
+    for r in 0..batch as u64 {
+        let mut sim = ClusterSim::new(&cluster, cfg.train.seed + r)
+            .with_policy(policy.clone());
+        if let Some(plan) = &scenario {
+            sim = sim.with_fault_plan(plan.clone());
+        }
+        sims.push(sim);
+    }
+    let mut rb = ReplicaBatch::from_sims(sims);
+    let mut outs =
+        vec![dropcompute::sim::StepOutcome::default(); batch];
     let mut iter_w = dropcompute::stats::Welford::new();
     let mut completed = 0usize;
-    let mut obs = obs_active(args, cfg)
-        .then(|| ObsRecorder::new(cluster.workers));
+    let mut recs = obs_active(args, cfg)
+        .then(|| {
+            (0..batch)
+                .map(|_| ObsRecorder::new(cluster.workers))
+                .collect::<Vec<_>>()
+        });
     for _ in 0..iters {
-        match obs.as_mut() {
-            Some(rec) => sim.step_installed_observed(&mut out, rec),
-            None => sim.step_installed_into(&mut out),
+        match recs.as_mut() {
+            Some(rs) => rb.step_installed_observed(&mut outs, rs),
+            None => rb.step_installed_into(&mut outs),
         }
-        iter_w.push(out.iter_time);
-        completed += out.total_completed();
+        for out in &outs {
+            iter_w.push(out.iter_time);
+            completed += out.total_completed();
+        }
     }
+    // replica recorders merge in replica order — deterministic, and
+    // for --batch 1 bitwise identical to the unbatched recorder
+    let obs = recs.map(|rs| {
+        let mut it = rs.into_iter();
+        let mut merged = it.next().expect("batch >= 1");
+        for rec in it {
+            merged.merge(&rec);
+        }
+        merged
+    });
     // a Local-SGD policy schedules one micro-batch per local step
     let per_iter =
         policy.local_sgd_h().unwrap_or(cfg.cluster.accumulations);
-    let scheduled = iters * cfg.cluster.workers * per_iter;
+    let scheduled = iters * batch * cfg.cluster.workers * per_iter;
     let mut t = Table::new(
         format!("simulate N={} M={}", cfg.cluster.workers, cfg.cluster.accumulations),
         &["metric", "value"],
@@ -782,6 +820,9 @@ fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
     if let Some(plan) = &scenario {
         t.row(vec!["scenario".into(), plan.spec()]);
     }
+    if batch > 1 {
+        t.row(vec!["batched replicas".into(), batch.to_string()]);
+    }
     t.row(vec!["iterations".into(), iters.to_string()]);
     t.row(vec!["mean iter time".into(), f(iter_w.mean(), 3)]);
     t.row(vec!["iter time std".into(), f(iter_w.std(), 3)]);
@@ -792,7 +833,7 @@ fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
     ]);
     t.row(vec![
         "throughput (mb/s)".into(),
-        f(completed as f64 / (iter_w.mean() * iters as f64), 2),
+        f(completed as f64 / (iter_w.mean() * (iters * batch) as f64), 2),
     ]);
     t.print();
     if let Some(rec) = &obs {
@@ -959,6 +1000,7 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         .seeds(&seeds)
         .iters(args.usize_or("iters", sc.iters)?)
         .jobs(args.usize_or("jobs", sc.jobs)?)
+        .batch(args.usize_or("batch", sc.batch)?)
         .progress(sc.progress && !args.flag("quiet"));
     let n = spec.len();
     let jobs = dropcompute::sweep::resolve_jobs(spec.jobs);

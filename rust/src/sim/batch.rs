@@ -1,0 +1,526 @@
+//! Multi-replica batched stepping — a structure-of-arrays lockstep
+//! pass over S independent replicas.
+//!
+//! A sweep's seed axis steps S simulators that share everything but
+//! their RNG streams: same topology, same compiled schedule, same
+//! policy. Stepped one at a time, each replica re-streams the whole
+//! flat `(srcs, dsts, hops)` transfer array per step — for a 128-worker
+//! ring that is ~half a megabyte of schedule traffic per replica-step,
+//! and the compiled phase pass is the dominant per-step cost
+//! (`BENCH_perf.json: sim_step_rate_*`). [`ReplicaBatch`] steps the
+//! replicas in lockstep instead: one walk over the schedule updates S
+//! readiness lanes laid out worker-major (`ready[w * S + lane]`), so
+//! the per-edge inner loop is a chunked 4-wide unroll across lanes and
+//! the schedule stream is amortized S ways.
+//!
+//! **Bitwise contract.** Batched stepping is bitwise identical to
+//! stepping each replica alone, for every topology, policy, width and
+//! fault plan — property-tested in `tests/batch_equivalence.rs`:
+//!
+//! * *RNG*: each replica keeps its own [`ClusterSim`] and therefore its
+//!   own per-worker SplitMix64-derived streams; the compute side of a
+//!   batched step is the scalar compute side run replica-by-replica
+//!   ([`ClusterSim::begin_step_observed`]), so every draw — including
+//!   the bounded fill's early stop — lands in the same stream position
+//!   as in a solo run.
+//! * *Timing*: each lane of the SoA pass performs the scalar
+//!   [`super::compiled::CompiledSchedule`] pass's per-edge operations
+//!   in the same order (`mul_add`-free, `>`-guarded max), and the final
+//!   per-lane reduction ([`scan_max4`]) is order-fixed, so the result
+//!   bits equal the scalar fold's.
+//! * *Drops*: tau decisions happen on the compute side (per replica,
+//!   scalar); any step whose collective would leave the compiled
+//!   full-membership fast path — a missed step deadline, per-phase
+//!   checkpoints, a fault-plan kill, the event-queue reference behind
+//!   [`ClusterSim::with_reference_timing`], the fixed-`T^c` model —
+//!   falls back to the scalar finish for that replica
+//!   ([`ClusterSim::batch_lockstep_eligible`]), with survivor-restart
+//!   schedules memoized in one batch-shared
+//!   [`SurvivorScheduleCache`]. The scalar path *is* the oracle; the
+//!   fallback is bitwise by construction.
+//!
+//! Live observers ([`SimObserver`]) consume per-phase readiness slices
+//! that the lane-parallel pass does not materialize, so
+//! [`ReplicaBatch::step_installed_observed`] routes observed replicas
+//! through the scalar pass — every hook fires exactly as in a solo run,
+//! which is what keeps sweep obs output independent of `--batch`.
+
+use crate::config::ClusterConfig;
+use crate::obs::{NoopObserver, SimObserver};
+use crate::policy::DropPolicy;
+
+use super::cluster::{ClusterSim, StepOutcome};
+use super::survivor::SurvivorScheduleCache;
+
+/// S replicas (same cluster shape and policy, independent seeds)
+/// stepped in lockstep through one structure-of-arrays phase pass.
+#[derive(Debug)]
+pub struct ReplicaBatch {
+    sims: Vec<ClusterSim>,
+    /// One survivor cache shared by every replica's fallback drop
+    /// branch (swapped in around scalar finishes; memoization never
+    /// changes results, so sharing is bitwise-safe).
+    cache: SurvivorScheduleCache,
+    /// Replica indices eligible for this step's lockstep pass.
+    lanes: Vec<usize>,
+    /// The step index each eligible lane was begun at (parallel to
+    /// `lanes`).
+    lane_steps: Vec<usize>,
+    /// Lane-major readiness: worker `w` of lane `l` at `w * lanes + l`.
+    ready: Vec<f64>,
+    next: Vec<f64>,
+    /// One lane's column, gathered for the final per-lane reduction.
+    lane_buf: Vec<f64>,
+}
+
+impl ReplicaBatch {
+    /// One replica per seed, each built exactly like a solo
+    /// [`ClusterSim::new`] + [`ClusterSim::with_policy`] run.
+    pub fn new(
+        cfg: &ClusterConfig,
+        policy: &DropPolicy,
+        seeds: &[u64],
+    ) -> Self {
+        let sims = seeds
+            .iter()
+            .map(|&s| ClusterSim::new(cfg, s).with_policy(policy.clone()))
+            .collect();
+        Self::from_sims(sims)
+    }
+
+    /// Batch caller-built sims (e.g. with fault plans or replay sources
+    /// attached). The replicas must share a worker count and comm model
+    /// — that is what makes one compiled schedule (and one survivor
+    /// cache) serve every lane.
+    pub fn from_sims(sims: Vec<ClusterSim>) -> Self {
+        assert!(!sims.is_empty(), "a batch needs at least one replica");
+        let cache = SurvivorScheduleCache::new(sims[0].comm_model());
+        let n = sims[0].worker_count();
+        for sim in &sims {
+            assert_eq!(
+                sim.worker_count(),
+                n,
+                "batched replicas must share a worker count"
+            );
+            assert!(
+                cache.matches(sim.comm_model()),
+                "batched replicas must share a comm model"
+            );
+        }
+        let s = sims.len();
+        Self {
+            cache,
+            lanes: Vec::with_capacity(s),
+            lane_steps: Vec::with_capacity(s),
+            ready: Vec::with_capacity(n * s),
+            next: Vec::with_capacity(n * s),
+            lane_buf: Vec::with_capacity(n),
+            sims,
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.sims.len()
+    }
+
+    pub fn sims(&self) -> &[ClusterSim] {
+        &self.sims
+    }
+
+    /// Dissolve the batch back into its replicas (their RNG streams and
+    /// step counters are exactly where solo stepping would have left
+    /// them).
+    pub fn into_sims(self) -> Vec<ClusterSim> {
+        self.sims
+    }
+
+    /// Adopt a warm shared survivor cache (e.g. from a sweep's
+    /// [`crate::sweep::SurvivorCachePool`]); a cache built for a
+    /// different comm model is discarded, like
+    /// [`ClusterSim::with_survivor_cache`].
+    pub fn with_survivor_cache(mut self, cache: SurvivorScheduleCache) -> Self {
+        if cache.matches(self.sims[0].comm_model()) {
+            self.cache = cache;
+        }
+        self
+    }
+
+    /// Hand the shared survivor cache back (for pooling), leaving a
+    /// fresh empty one behind.
+    pub fn take_survivor_cache(&mut self) -> SurvivorScheduleCache {
+        std::mem::replace(
+            &mut self.cache,
+            SurvivorScheduleCache::new(self.sims[0].comm_model()),
+        )
+    }
+
+    /// Step every replica once under its installed policy (allocating
+    /// convenience; prefer [`Self::step_installed_into`] in loops).
+    pub fn step_installed(&mut self) -> Vec<StepOutcome> {
+        let mut outs = vec![StepOutcome::default(); self.sims.len()];
+        self.step_installed_into(&mut outs);
+        outs
+    }
+
+    /// Step every replica once under its installed policy, in lockstep:
+    /// per replica the scalar compute side (RNG fills + tau scan), then
+    /// one SoA phase pass timing every eligible replica's collective,
+    /// with ineligible replicas finished by the scalar oracle. `outs`
+    /// holds one [`StepOutcome`] per replica; in steady state the whole
+    /// batched step is allocation-free.
+    pub fn step_installed_into(&mut self, outs: &mut [StepOutcome]) {
+        assert_eq!(
+            outs.len(),
+            self.sims.len(),
+            "one StepOutcome per replica"
+        );
+        self.lanes.clear();
+        self.lane_steps.clear();
+        for r in 0..self.sims.len() {
+            // Local-SGD periods interleave compute and sync h times;
+            // the whole period takes the scalar path
+            if self.sims[r].installed_local_sgd().is_some() {
+                self.sims[r].swap_survivor_cache(&mut self.cache);
+                self.sims[r].step_installed_into(&mut outs[r]);
+                self.sims[r].swap_survivor_cache(&mut self.cache);
+                continue;
+            }
+            let tau = self.sims[r].installed_tau();
+            let step_idx = self.sims[r].begin_step_observed(
+                tau,
+                &mut outs[r],
+                &mut NoopObserver,
+            );
+            if self.sims[r]
+                .batch_lockstep_eligible(step_idx, &outs[r].worker_compute)
+            {
+                self.lanes.push(r);
+                self.lane_steps.push(step_idx);
+            } else {
+                self.sims[r].swap_survivor_cache(&mut self.cache);
+                self.sims[r].finish_step_observed(
+                    step_idx,
+                    &mut outs[r],
+                    &mut NoopObserver,
+                );
+                self.sims[r].swap_survivor_cache(&mut self.cache);
+            }
+        }
+        if self.lanes.is_empty() {
+            return;
+        }
+        self.lockstep_pass(outs);
+    }
+
+    /// Step every replica once with per-replica observers. Observers
+    /// consume per-phase readiness slices the SoA pass does not build,
+    /// so this routes through the scalar pass replica-by-replica — the
+    /// oracle path, bitwise identical to solo observed runs by
+    /// construction (and the reason sweep obs output cannot depend on
+    /// the batch width).
+    pub fn step_installed_observed<O: SimObserver>(
+        &mut self,
+        outs: &mut [StepOutcome],
+        obs: &mut [O],
+    ) {
+        assert_eq!(
+            outs.len(),
+            self.sims.len(),
+            "one StepOutcome per replica"
+        );
+        assert_eq!(obs.len(), self.sims.len(), "one observer per replica");
+        for r in 0..self.sims.len() {
+            self.sims[r].swap_survivor_cache(&mut self.cache);
+            self.sims[r].step_installed_observed(&mut outs[r], &mut obs[r]);
+            self.sims[r].swap_survivor_cache(&mut self.cache);
+        }
+    }
+
+    /// The lockstep collective: one walk over the compiled schedule
+    /// updating `lanes.len()` readiness lanes per edge. Per lane the
+    /// op sequence is exactly the scalar
+    /// [`super::compiled::CompiledSchedule::completion_with_phases`]
+    /// pass — same clamp, same hop expression, same `>`-guarded max in
+    /// the same order — so each lane's bits equal a solo run's.
+    fn lockstep_pass(&mut self, outs: &mut [StepOutcome]) {
+        if self.sims[self.lanes[0]].batch_schedule().is_none() {
+            // unreachable per batch_lockstep_eligible; degrade to the
+            // scalar oracle rather than trusting the invariant
+            for i in 0..self.lanes.len() {
+                let r = self.lanes[i];
+                let step_idx = self.lane_steps[i];
+                self.sims[r].swap_survivor_cache(&mut self.cache);
+                self.sims[r].finish_step_observed(
+                    step_idx,
+                    &mut outs[r],
+                    &mut NoopObserver,
+                );
+                self.sims[r].swap_survivor_cache(&mut self.cache);
+            }
+            return;
+        }
+        let Some(c) = self.sims[self.lanes[0]].batch_schedule() else {
+            return;
+        };
+        let n = c.workers();
+        let e = self.lanes.len();
+        let total = n * e;
+        let ready = &mut self.ready;
+        let next = &mut self.next;
+        ready.resize(total, 0.0);
+        next.resize(total, 0.0);
+        // lane-major init, clamped exactly like the scalar pass (NaN
+        // arrivals land at 0.0 under f64::max, both here and there)
+        for (l, &r) in self.lanes.iter().enumerate() {
+            let arrivals = &outs[r].worker_compute;
+            for (w, &a) in arrivals.iter().enumerate() {
+                ready[w * e + l] = a.max(0.0);
+            }
+        }
+        let (srcs, dsts, hops) = c.edges();
+        for p in 0..c.phase_count() {
+            next[..total].copy_from_slice(&ready[..total]);
+            let (lo, hi) = c.phase_bounds(p);
+            for k in lo..hi {
+                let src = srcs[k] as usize * e;
+                let dst = dsts[k] as usize * e;
+                let hop = hops[k];
+                // chunked 4-wide unroll across replica lanes; no
+                // mul_add, no reassociation — each lane runs the
+                // scalar pass's two guarded maxes
+                let mut l = 0;
+                while l + 4 <= e {
+                    let d0 = ready[src + l] + hop;
+                    let d1 = ready[src + l + 1] + hop;
+                    let d2 = ready[src + l + 2] + hop;
+                    let d3 = ready[src + l + 3] + hop;
+                    if d0 > next[dst + l] {
+                        next[dst + l] = d0;
+                    }
+                    if d1 > next[dst + l + 1] {
+                        next[dst + l + 1] = d1;
+                    }
+                    if d2 > next[dst + l + 2] {
+                        next[dst + l + 2] = d2;
+                    }
+                    if d3 > next[dst + l + 3] {
+                        next[dst + l + 3] = d3;
+                    }
+                    if d0 > next[src + l] {
+                        next[src + l] = d0;
+                    }
+                    if d1 > next[src + l + 1] {
+                        next[src + l + 1] = d1;
+                    }
+                    if d2 > next[src + l + 2] {
+                        next[src + l + 2] = d2;
+                    }
+                    if d3 > next[src + l + 3] {
+                        next[src + l + 3] = d3;
+                    }
+                    l += 4;
+                }
+                while l < e {
+                    let done = ready[src + l] + hop;
+                    if done > next[dst + l] {
+                        next[dst + l] = done;
+                    }
+                    if done > next[src + l] {
+                        next[src + l] = done;
+                    }
+                    l += 1;
+                }
+            }
+            std::mem::swap(ready, next);
+        }
+        // per-lane completion: gather the lane's column and reduce
+        // with the order-fixed 4-wide scan; compute_time replicates
+        // finish_into's empty-guarded sequential fold verbatim
+        self.lane_buf.resize(n, 0.0);
+        for (l, &r) in self.lanes.iter().enumerate() {
+            for w in 0..n {
+                self.lane_buf[w] = ready[w * e + l];
+            }
+            let out = &mut outs[r];
+            out.compute_time = if out.worker_compute.is_empty() {
+                0.0
+            } else {
+                out.worker_compute
+                    .iter()
+                    .cloned()
+                    .fold(f64::NEG_INFINITY, f64::max)
+            };
+            out.iter_time = scan_max4(&self.lane_buf);
+        }
+        for i in 0..self.lanes.len() {
+            let r = self.lanes[i];
+            self.sims[r].seal_batched_step(&mut outs[r], &mut NoopObserver);
+        }
+    }
+}
+
+/// Order-fixed chunked 4-wide max reduction, bitwise equal to
+/// `xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)`.
+///
+/// Why reassociating is safe here, bit for bit: `f64::max` ignores NaN
+/// (a NaN operand yields the other operand), every accumulator is
+/// seeded with `NEG_INFINITY`, and for any non-NaN value set the
+/// reduction returns the set's maximum element — the same bits
+/// whichever association computed it. The lone formal exception is a
+/// maximum attained by both `+0.0` and `-0.0` (IEEE leaves the sign
+/// unspecified); the batched pass never feeds that case — readiness
+/// values are clamped non-negative at phase entry and `-0.0` cannot
+/// reach them. Empty input folds to `NEG_INFINITY`, like the scalar
+/// fold (callers with empty-set semantics guard first, as
+/// `finish_into` does).
+pub fn scan_max4(xs: &[f64]) -> f64 {
+    let chunks = xs.len() / 4;
+    let mut m0 = f64::NEG_INFINITY;
+    let mut m1 = f64::NEG_INFINITY;
+    let mut m2 = f64::NEG_INFINITY;
+    let mut m3 = f64::NEG_INFINITY;
+    for i in 0..chunks {
+        let b = i * 4;
+        m0 = m0.max(xs[b]);
+        m1 = m1.max(xs[b + 1]);
+        m2 = m2.max(xs[b + 2]);
+        m3 = m3.max(xs[b + 3]);
+    }
+    let mut m = m0.max(m1).max(m2.max(m3));
+    let mut i = chunks * 4;
+    while i < xs.len() {
+        m = m.max(xs[i]);
+        i += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NoiseKind, StragglerKind};
+    use crate::topology::TopologyKind;
+
+    fn config(workers: usize) -> ClusterConfig {
+        ClusterConfig {
+            workers,
+            accumulations: 6,
+            microbatch_mean: 0.4,
+            microbatch_std: 0.05,
+            noise: NoiseKind::Exponential { mean: 0.3 },
+            stragglers: StragglerKind::Uniform { p: 0.25, delay: 2.0 },
+            topology: Some(TopologyKind::Ring),
+            ..Default::default()
+        }
+    }
+
+    fn assert_outcomes_eq(a: &StepOutcome, b: &StepOutcome, what: &str) {
+        assert_eq!(
+            a.iter_time.to_bits(),
+            b.iter_time.to_bits(),
+            "{what}: iter_time"
+        );
+        assert_eq!(
+            a.compute_time.to_bits(),
+            b.compute_time.to_bits(),
+            "{what}: compute_time"
+        );
+        assert_eq!(a.completed, b.completed, "{what}: completed");
+        for (x, y) in a.worker_compute.iter().zip(&b.worker_compute) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: worker_compute");
+        }
+    }
+
+    #[test]
+    fn batched_steps_match_solo_runs_bitwise() {
+        let cfg = config(9);
+        let policy = DropPolicy::None;
+        let seeds = [3u64, 17, 92, 5];
+        let mut batch = ReplicaBatch::new(&cfg, &policy, &seeds);
+        let mut solos: Vec<ClusterSim> = seeds
+            .iter()
+            .map(|&s| ClusterSim::new(&cfg, s).with_policy(policy.clone()))
+            .collect();
+        let mut outs = batch.step_installed();
+        let mut want = StepOutcome::default();
+        for _ in 0..12 {
+            batch.step_installed_into(&mut outs);
+            for (r, solo) in solos.iter_mut().enumerate() {
+                solo.step_installed_into(&mut want);
+                assert_outcomes_eq(&outs[r], &want, "replica");
+            }
+        }
+    }
+
+    #[test]
+    fn drop_deadline_fallback_lanes_stay_bitwise() {
+        // a tight step deadline forces the drop path (scalar fallback)
+        // on many steps while others ride the lockstep pass
+        let mut cfg = config(8);
+        cfg.stragglers = StragglerKind::Uniform { p: 0.5, delay: 6.0 };
+        let policy = DropPolicy::comm_deadline(0.5);
+        let seeds = [1u64, 2, 3, 4, 5];
+        let mut batch = ReplicaBatch::new(&cfg, &policy, &seeds);
+        let mut solos: Vec<ClusterSim> = seeds
+            .iter()
+            .map(|&s| ClusterSim::new(&cfg, s).with_policy(policy.clone()))
+            .collect();
+        let mut outs = batch.step_installed();
+        let mut want = StepOutcome::default();
+        let mut dropped_steps = 0;
+        for _ in 0..20 {
+            batch.step_installed_into(&mut outs);
+            for (r, solo) in solos.iter_mut().enumerate() {
+                solo.step_installed_into(&mut want);
+                assert_outcomes_eq(&outs[r], &want, "replica");
+                if want.total_completed()
+                    < cfg.workers * cfg.accumulations
+                {
+                    dropped_steps += 1;
+                }
+            }
+        }
+        assert!(dropped_steps > 0, "deadline must actually drop someone");
+    }
+
+    #[test]
+    fn scan_max4_matches_sequential_fold() {
+        let cases: Vec<Vec<f64>> = vec![
+            vec![],
+            vec![1.5],
+            vec![3.0, 1.0, 2.0],
+            vec![0.0, f64::INFINITY, 2.0, 9.0, 4.4],
+            vec![f64::NAN, 1.0, f64::NAN, 5.0, f64::NAN],
+            vec![f64::NAN; 7],
+            (0..23).map(|i| (i * 37 % 11) as f64 * 0.125).collect(),
+        ];
+        for xs in &cases {
+            let want =
+                xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let got = scan_max4(xs);
+            assert_eq!(got.to_bits(), want.to_bits(), "{xs:?}");
+        }
+    }
+
+    #[test]
+    fn shared_cache_round_trips_through_the_pool_seam() {
+        let mut cfg = config(6);
+        cfg.comm_drop_deadline = 0.0;
+        let policy = DropPolicy::comm_deadline(0.4);
+        let mut batch =
+            ReplicaBatch::new(&cfg, &policy, &[7, 8]).with_survivor_cache(
+                SurvivorScheduleCache::new(
+                    ClusterSim::new(&cfg, 7).comm_model(),
+                ),
+            );
+        let mut outs = batch.step_installed();
+        for _ in 0..10 {
+            batch.step_installed_into(&mut outs);
+        }
+        let cache = batch.take_survivor_cache();
+        assert!(
+            cache.compiled_count() > 0,
+            "drop-heavy batch must warm the shared cache"
+        );
+    }
+}

@@ -14,7 +14,7 @@ use crate::rng::Xoshiro256pp;
 use crate::util::{Error, Result};
 
 use super::comm::CommModel;
-use super::compiled::PhaseBounded;
+use super::compiled::{CompiledSchedule, PhaseBounded};
 use super::noise::LatencyModel;
 use super::trace::{
     StepTrace, Trace, TraceComm, TraceMeta, TraceMode, TraceRecord,
@@ -998,6 +998,25 @@ impl ClusterSim {
         out: &mut StepOutcome,
         obs: &mut O,
     ) {
+        let step_idx = self.begin_step_observed(threshold, out, obs);
+        self.finish_step_observed(step_idx, out, obs);
+    }
+
+    /// The compute side of one step: advance the step index, draw (or
+    /// replay) every worker's straggle and micro-batch run, scan against
+    /// the threshold, and fill `out`'s per-worker vectors. Returns the
+    /// step index the collective must be finished under
+    /// ([`Self::finish_step_observed`]). Split out so
+    /// [`super::batch::ReplicaBatch`] can run the compute side of S
+    /// replicas back to back, then time their collectives in one
+    /// lane-parallel pass — recomposed verbatim by
+    /// [`Self::step_observed`], so the scalar step is bitwise untouched.
+    pub(crate) fn begin_step_observed<O: SimObserver>(
+        &mut self,
+        threshold: Option<f64>,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) -> usize {
         let step_idx = self.step_idx;
         self.step_idx += 1;
         self.apply_fault_scaling(step_idx);
@@ -1105,6 +1124,19 @@ impl ClusterSim {
         if let Some(r) = self.replay.as_mut() {
             r.pos += 1;
         }
+        step_idx
+    }
+
+    /// The collective side of one step: time the reduction over the
+    /// arrivals [`Self::begin_step_observed`] left in `out` (fault-
+    /// compacted when the plan kills anyone this step) and record the
+    /// outcome. The other half of the [`Self::step_observed`] split.
+    pub(crate) fn finish_step_observed<O: SimObserver>(
+        &mut self,
+        step_idx: usize,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) {
         if self.any_worker_dead(step_idx) {
             self.finish_faulted(step_idx, out, obs);
         } else {
@@ -1113,6 +1145,99 @@ impl ClusterSim {
         if let Some(w) = self.writer.as_mut() {
             w.push_outcome(out);
         }
+    }
+
+    /// Whether this step's collective can be timed by the lane-parallel
+    /// batched pass instead of [`Self::finish_step_observed`]: the
+    /// compiled full-membership pass must be the path the scalar step
+    /// would take, with no drop/fault branch diverting it. Per-phase
+    /// checkpoints, fault-compacted steps, the event-queue reference
+    /// ([`Self::with_reference_timing`]) and the fixed-`T^c` model all
+    /// answer `false` — those replicas fall back to the scalar oracle.
+    /// A step-level DropComm deadline stays eligible exactly when no
+    /// worker misses it (the no-drop fast path times the same full-N
+    /// compiled collective).
+    pub(crate) fn batch_lockstep_eligible(
+        &self,
+        step_idx: usize,
+        arrivals: &[f64],
+    ) -> bool {
+        if !self.use_compiled
+            || self.compiled.is_none()
+            || self.workers == 0
+            || !self.phase_cutoffs.is_empty()
+            || self.any_worker_dead(step_idx)
+        {
+            return false;
+        }
+        match self.comm_drop {
+            None => true,
+            Some(deadline) => {
+                let cutoff = crate::sim::comm::bounded_wait_cutoff(
+                    arrivals, deadline,
+                );
+                arrivals.iter().all(|&a| a <= cutoff)
+            }
+        }
+    }
+
+    /// The installed policy's Local-SGD period, if any — such replicas
+    /// take the whole-period scalar path in a batch.
+    pub(crate) fn installed_local_sgd(&self) -> Option<usize> {
+        self.eff_h
+    }
+
+    /// The installed policy's compute threshold (what
+    /// [`Self::step_installed_into`] steps under).
+    pub(crate) fn installed_tau(&self) -> Option<f64> {
+        self.eff_tau
+    }
+
+    /// The compiled schedule driving this sim's collectives, when the
+    /// compiled path is selected — the schedule the batched pass
+    /// replays lane-parallel.
+    pub(crate) fn batch_schedule(&self) -> Option<&CompiledSchedule> {
+        if self.use_compiled {
+            self.compiled.as_ref()
+        } else {
+            None
+        }
+    }
+
+    /// Close out a step whose collective was timed externally (the
+    /// batched pass): `out` is fully populated; fire the closing
+    /// observer event and record the outcome — exactly the tail
+    /// [`Self::finish_into`] + [`Self::finish_step_observed`] would
+    /// have run.
+    pub(crate) fn seal_batched_step<O: SimObserver>(
+        &mut self,
+        out: &mut StepOutcome,
+        obs: &mut O,
+    ) {
+        obs.on_step(out);
+        if let Some(w) = self.writer.as_mut() {
+            w.push_outcome(out);
+        }
+    }
+
+    /// Swap the survivor cache with a caller-held one (the batch's
+    /// shared cache) in place, guarded like
+    /// [`Self::with_survivor_cache`]: a cache built for a different
+    /// comm model is left untouched — memoization must never change
+    /// results, only skip compiles.
+    pub(crate) fn swap_survivor_cache(
+        &mut self,
+        cache: &mut super::survivor::SurvivorScheduleCache,
+    ) {
+        if cache.matches(&self.comm) {
+            std::mem::swap(&mut self.survivors, cache);
+        }
+    }
+
+    /// Worker count (the width of every per-worker vector this sim
+    /// fills).
+    pub fn worker_count(&self) -> usize {
+        self.workers
     }
 
     /// Simulate one Local-SGD synchronization period: `h` local steps of

@@ -113,6 +113,20 @@ impl CompiledSchedule {
         self.srcs.len()
     }
 
+    /// Transfer index range of phase `p` — the batched SoA pass
+    /// ([`super::batch::ReplicaBatch`]) walks the same flat arrays as
+    /// [`Self::completion_with_phases`], lane-parallel.
+    pub(crate) fn phase_bounds(&self, p: usize) -> (usize, usize) {
+        (self.offsets[p] as usize, self.offsets[p + 1] as usize)
+    }
+
+    /// The flat `(srcs, dsts, hops)` transfer arrays, for the batched
+    /// pass. Read-only: the per-edge update order these arrays encode
+    /// is what makes batched results bitwise equal to the scalar scan.
+    pub(crate) fn edges(&self) -> (&[u32], &[u32], &[f64]) {
+        (&self.srcs, &self.dsts, &self.hops)
+    }
+
     /// One-shot completion time (allocates its own scratch; prefer
     /// [`Self::completion_with`] in loops).
     pub fn completion(&self, arrivals: &[f64]) -> f64 {

@@ -28,6 +28,7 @@
 //!   both timing paths — the conformance harness and the input of
 //!   [`crate::analysis::budget_fit`].
 
+pub mod batch;
 pub mod cluster;
 pub mod comm;
 pub mod compiled;
@@ -37,6 +38,7 @@ pub mod noise;
 pub mod survivor;
 pub mod trace;
 
+pub use batch::{scan_max4, ReplicaBatch};
 pub use cluster::{ClusterSim, PreemptionMode, StepOutcome};
 pub use fault::{FaultEvent, FaultPlan};
 pub use comm::{

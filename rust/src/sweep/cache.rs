@@ -87,6 +87,36 @@ impl SurvivorCachePool {
         slots.entry(key).or_default().push(cache);
     }
 
+    /// Check a warm cache out directly for `model` — the batch-level
+    /// seam: a [`crate::sim::ReplicaBatch`] holds one shared cache for
+    /// all its replicas' fallback drop branches, rather than one per
+    /// sim. `None` when the pool has nothing warm (or the model
+    /// compiles nothing); the batch then runs with its own cold cache.
+    pub fn lend_cache(
+        &self,
+        model: &CommModel,
+    ) -> Option<SurvivorScheduleCache> {
+        let key = pool_key(model)?;
+        let mut slots = self.slots.lock().expect("cache pool poisoned");
+        slots.get_mut(&key).and_then(Vec::pop)
+    }
+
+    /// Return a batch's (now warmer) shared cache for `model` to the
+    /// pool. Caches for the fixed-`T^c` model compile nothing and are
+    /// dropped, mirroring [`Self::reclaim`].
+    pub fn reclaim_cache(
+        &self,
+        model: &CommModel,
+        cache: SurvivorScheduleCache,
+    ) {
+        let Some(key) = pool_key(model) else { return };
+        if !cache.matches(model) {
+            return;
+        }
+        let mut slots = self.slots.lock().expect("cache pool poisoned");
+        slots.entry(key).or_default().push(cache);
+    }
+
     /// Total compiled survivor schedules currently pooled (test /
     /// diagnostics introspection).
     pub fn compiled_count(&self) -> usize {

@@ -10,7 +10,9 @@ use crate::config::ClusterConfig;
 use crate::obs::{NoopObserver, ObsRecorder, SimObserver};
 use crate::policy::DropPolicy;
 use crate::rng::SplitMix64;
-use crate::sim::{ClusterSim, FaultPlan, StepOutcome, TraceRecord};
+use crate::sim::{
+    ClusterSim, FaultPlan, ReplicaBatch, StepOutcome, TraceRecord,
+};
 
 use super::cache::SurvivorCachePool;
 use super::runner::run_indexed;
@@ -72,6 +74,14 @@ pub struct SweepSpec {
     pub period: usize,
     /// Worker threads (0 = all cores, 1 = serial).
     pub jobs: usize,
+    /// Seed-axis batch width: `batch > 1` advances up to that many
+    /// consecutive seed-coordinate points per pass through one
+    /// [`crate::sim::ReplicaBatch`] SoA lockstep step (seeds are the
+    /// fastest-varying axis, so consecutive indices share every other
+    /// coordinate). Results are bitwise independent of the width —
+    /// batched == scalar per replica, property-tested in
+    /// `tests/batch_equivalence.rs`. 0/1 = scalar per-point stepping.
+    pub batch: usize,
     /// Report progress/ETA to stderr while running.
     pub progress: bool,
 }
@@ -135,6 +145,7 @@ impl SweepSpec {
             iters: 50,
             period: 1,
             jobs: 0,
+            batch: 1,
             progress: false,
         }
     }
@@ -198,6 +209,13 @@ impl SweepSpec {
 
     pub fn jobs(mut self, jobs: usize) -> Self {
         self.jobs = jobs;
+        self
+    }
+
+    /// Step up to `batch` seed-adjacent points per lockstep pass (see
+    /// the field docs); 0 and 1 both mean scalar per-point stepping.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
         self
     }
 
@@ -463,11 +481,139 @@ impl SweepSpec {
         let spec = Arc::new(self.clone());
         let pool = Arc::new(SurvivorCachePool::new());
         let label = if self.progress { Some("sweep") } else { None };
+        if self.batched() {
+            // seed-axis batching: each parallel task is one chunk of
+            // seed-adjacent points advanced in lockstep through a
+            // ReplicaBatch SoA pass. Chunks are pure per index and
+            // flattened in chunk order, so the point list is bitwise
+            // independent of both `jobs` and `batch` (batched == scalar
+            // per replica; property-tested in
+            // `tests/batch_equivalence.rs`).
+            let chunks = self.batch_chunks();
+            let groups = run_indexed(chunks, self.jobs, label, move |c| {
+                let (start, count) = spec.chunk_range(c);
+                spec.run_batch_points(start, count, &pool)
+            });
+            let mut points = Vec::with_capacity(self.len());
+            for group in groups {
+                points.extend(group);
+            }
+            return SweepResult { points };
+        }
         let points =
             run_indexed(self.len(), self.jobs, label, move |i| {
                 spec.run_point_pooled(i, &pool)
             });
         SweepResult { points }
+    }
+
+    /// Whether this spec takes the seed-axis batched path: a batch
+    /// width above 1 and more than one seed to fuse. Replay points
+    /// re-time a recorded trace — the seed axis is inert there — so
+    /// they always run scalar.
+    fn batched(&self) -> bool {
+        self.batch.max(1) > 1 && self.seeds.len() > 1 && self.replay.is_none()
+    }
+
+    /// Number of lockstep chunks the grid decomposes into at the
+    /// current batch width — the parallel task count of a batched run.
+    /// Seeds are the fastest-varying axis, so every chunk is a run of
+    /// consecutive indices sharing all non-seed coordinates.
+    fn batch_chunks(&self) -> usize {
+        let s = self.seeds.len().max(1);
+        let b = self.batch.max(1).min(s);
+        let per_group = s.div_ceil(b);
+        (self.len() / s) * per_group
+    }
+
+    /// `(start_index, point_count)` of batched chunk `chunk`.
+    fn chunk_range(&self, chunk: usize) -> (usize, usize) {
+        let s = self.seeds.len().max(1);
+        let b = self.batch.max(1).min(s);
+        let per_group = s.div_ceil(b);
+        let group = chunk / per_group;
+        let slot = chunk % per_group;
+        (group * s + slot * b, b.min(s - slot * b))
+    }
+
+    /// Measure `count` seed-adjacent points in lockstep. Per-point
+    /// construction, accumulation and [`SweepPoint`] assembly replicate
+    /// [`Self::run_point_observed`] exactly; only the stepping is
+    /// fused, and batched stepping is bitwise equal to scalar stepping
+    /// per replica — so the returned points carry the bits the scalar
+    /// path would have produced.
+    fn run_batch_points(
+        &self,
+        start: usize,
+        count: usize,
+        pool: &SurvivorCachePool,
+    ) -> Vec<SweepPoint> {
+        if count <= 1 {
+            return (start..start + count)
+                .map(|i| self.run_point_pooled(i, pool))
+                .collect();
+        }
+        let p0 = self.params(start);
+        let policy = self.point_policy(&p0);
+        let mut cfg = self.base.clone();
+        cfg.workers = p0.workers;
+        // the point's policy is its entire drop surface; neutralize the
+        // base config's own deadline so nothing is applied twice
+        cfg.comm_drop_deadline = 0.0;
+        let mut params = Vec::with_capacity(count);
+        let mut sims = Vec::with_capacity(count);
+        for i in start..start + count {
+            let p = self.params(i);
+            let mut sim = ClusterSim::new(&cfg, Self::sim_seed(&p))
+                .with_policy(policy.clone());
+            if let Some(plan) = &p.scenario {
+                sim = sim.with_fault_plan(plan.clone());
+            }
+            sims.push(sim);
+            params.push(p);
+        }
+        let mut batch = ReplicaBatch::from_sims(sims);
+        if let Some(cache) = pool.lend_cache(batch.sims()[0].comm_model()) {
+            batch = batch.with_survivor_cache(cache);
+        }
+        let mut outs = vec![StepOutcome::default(); count];
+        let mut t_sum = vec![0.0f64; count];
+        let mut compute_sum = vec![0.0f64; count];
+        let mut completed = vec![0usize; count];
+        for _ in 0..self.iters {
+            batch.step_installed_into(&mut outs);
+            for (r, out) in outs.iter().enumerate() {
+                t_sum[r] += out.iter_time;
+                compute_sum[r] += out.compute_time;
+                completed[r] += out.total_completed();
+            }
+        }
+        let cache = batch.take_survivor_cache();
+        pool.reclaim_cache(batch.sims()[0].comm_model(), cache);
+        // Local-SGD schedules one micro-batch per local step
+        let per_iter = policy.local_sgd_h().unwrap_or(cfg.accumulations);
+        let mut points = Vec::with_capacity(count);
+        for (r, p) in params.iter().enumerate() {
+            let scheduled = self.iters * p.workers * per_iter;
+            points.push(SweepPoint {
+                index: start + r,
+                workers: p.workers,
+                threshold: p.threshold,
+                deadline: p.deadline,
+                seed: p.seed,
+                policy: p.policy.as_ref().map(DropPolicy::spec),
+                scenario: p.scenario.as_ref().map(FaultPlan::spec),
+                mean_iter_time: t_sum[r] / self.iters as f64,
+                mean_compute_time: compute_sum[r] / self.iters as f64,
+                throughput: completed[r] as f64 / t_sum[r],
+                drop_rate: if scheduled == 0 {
+                    0.0
+                } else {
+                    1.0 - completed[r] as f64 / scheduled as f64
+                },
+            });
+        }
+        points
     }
 
     /// [`Self::run`] with observability: each point records into its
@@ -480,11 +626,33 @@ impl SweepSpec {
         let spec = Arc::new(self.clone());
         let pool = Arc::new(SurvivorCachePool::new());
         let label = if self.progress { Some("sweep") } else { None };
-        let pairs = run_indexed(self.len(), self.jobs, label, move |i| {
-            let mut rec = ObsRecorder::new(0);
-            let point = spec.run_point_observed(i, &pool, &mut rec);
-            (point, rec)
-        });
+        let pairs = if self.batched() {
+            // observed points keep the scalar pass — recorders consume
+            // per-phase readiness slices the SoA pass does not build —
+            // but run chunk-grouped so scheduling matches the batched
+            // unobserved run. Each point is still pure per index, so
+            // per-point shards and the merged fold below are bitwise
+            // independent of `jobs` *and* `batch`.
+            let chunks = self.batch_chunks();
+            let groups = run_indexed(chunks, self.jobs, label, move |c| {
+                let (start, count) = spec.chunk_range(c);
+                (start..start + count)
+                    .map(|i| {
+                        let mut rec = ObsRecorder::new(0);
+                        let point =
+                            spec.run_point_observed(i, &pool, &mut rec);
+                        (point, rec)
+                    })
+                    .collect::<Vec<_>>()
+            });
+            groups.into_iter().flatten().collect::<Vec<_>>()
+        } else {
+            run_indexed(self.len(), self.jobs, label, move |i| {
+                let mut rec = ObsRecorder::new(0);
+                let point = spec.run_point_observed(i, &pool, &mut rec);
+                (point, rec)
+            })
+        };
         let mut points = Vec::with_capacity(pairs.len());
         let mut per_point = Vec::with_capacity(pairs.len());
         let mut merged = ObsRecorder::new(0);

@@ -1,0 +1,583 @@
+//! Property tests for multi-replica batched stepping: a
+//! [`ReplicaBatch`] SoA lockstep step must be bitwise identical to
+//! stepping each replica alone through the scalar pass — across every
+//! topology, every `DropPolicy` variant, every batch width (including
+//! ragged tails), drop-heavy DropComm regimes, churned fault plans and
+//! replay-sourced timing — and a sweep's results must be bitwise
+//! independent of both `--batch` and `--jobs`. The batched RNG fills
+//! must leave every replica's per-worker streams exactly where solo
+//! stepping leaves them, including the bounded fill's early stop and
+//! the end-of-stream state.
+
+use dropcompute::config::{ClusterConfig, NoiseKind, StragglerKind};
+use dropcompute::policy::DropPolicy;
+use dropcompute::rng::Xoshiro256pp;
+use dropcompute::sim::{
+    scan_max4, ClusterSim, FaultPlan, LatencyModel, PreemptionMode,
+    ReplicaBatch, StepOutcome,
+};
+use dropcompute::sweep::SweepSpec;
+use dropcompute::topology::TopologyKind;
+
+fn cfg(kind: TopologyKind, workers: usize) -> ClusterConfig {
+    ClusterConfig {
+        workers,
+        accumulations: 5,
+        microbatch_mean: 0.45,
+        microbatch_std: 0.02,
+        noise: NoiseKind::Exponential { mean: 0.35 },
+        stragglers: StragglerKind::Uniform { p: 0.3, delay: 3.0 },
+        topology: Some(kind),
+        link_latency: 1e-4,
+        link_bandwidth: 1e9,
+        grad_bytes: 4e6,
+        ..Default::default()
+    }
+}
+
+/// Every policy shape the drop surface can express: none, tau under
+/// both preemption modes, step deadline, per-phase checkpoints,
+/// Local-SGD, and a composition.
+fn policy_variants() -> Vec<DropPolicy> {
+    vec![
+        DropPolicy::None,
+        DropPolicy::compute_tau(4.0),
+        DropPolicy::compute_tau(4.0)
+            .with_preemption(PreemptionMode::BetweenAccumulations),
+        DropPolicy::comm_deadline(1.0),
+        DropPolicy::per_phase_deadline(vec![1.0, 0.3, 0.3]),
+        DropPolicy::local_sgd(4),
+        DropPolicy::parse("tau=4+deadline=1.2").expect("valid spec"),
+    ]
+}
+
+fn assert_outcomes_eq(a: &StepOutcome, b: &StepOutcome, what: &str) {
+    assert_eq!(
+        a.iter_time.to_bits(),
+        b.iter_time.to_bits(),
+        "{what}: iter_time {} vs {}",
+        a.iter_time,
+        b.iter_time
+    );
+    assert_eq!(
+        a.compute_time.to_bits(),
+        b.compute_time.to_bits(),
+        "{what}: compute_time"
+    );
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(
+        a.worker_compute.len(),
+        b.worker_compute.len(),
+        "{what}: worker_compute len"
+    );
+    for (w, (x, y)) in
+        a.worker_compute.iter().zip(&b.worker_compute).enumerate()
+    {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: worker_compute[{w}]"
+        );
+    }
+}
+
+#[test]
+fn batched_stepping_bitwise_equals_solo_across_everything() {
+    // the tentpole invariant: all 4 topologies x every DropPolicy
+    // variant x batch widths 1, 2, S and S+ragged — every lane of the
+    // SoA pass carries the bits its solo scalar run would
+    for kind in TopologyKind::ALL {
+        for (pi, policy) in policy_variants().iter().enumerate() {
+            for width in [1usize, 2, 4, 7] {
+                let cfg = cfg(kind, 8);
+                let seeds: Vec<u64> =
+                    (0..width as u64).map(|r| 0xBA5E + 13 * r).collect();
+                let mut batch = ReplicaBatch::new(&cfg, policy, &seeds);
+                let mut solos: Vec<ClusterSim> = seeds
+                    .iter()
+                    .map(|&s| {
+                        ClusterSim::new(&cfg, s)
+                            .with_policy(policy.clone())
+                    })
+                    .collect();
+                let mut outs = vec![StepOutcome::default(); width];
+                let mut want = StepOutcome::default();
+                for step in 0..8 {
+                    batch.step_installed_into(&mut outs);
+                    for (r, solo) in solos.iter_mut().enumerate() {
+                        solo.step_installed_into(&mut want);
+                        assert_outcomes_eq(
+                            &outs[r],
+                            &want,
+                            &format!(
+                                "{} policy {pi} width {width} \
+                                 step {step} replica {r}",
+                                kind.name()
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn drop_heavy_dropcomm_batches_stay_bitwise_and_actually_drop() {
+    // a tight bounded-wait deadline under heavy stragglers: most steps
+    // take the scalar fallback (survivor restart), the rest ride the
+    // lockstep pass, and every lane stays bitwise either way
+    for kind in TopologyKind::ALL {
+        let mut cfg = cfg(kind, 8);
+        cfg.stragglers = StragglerKind::Uniform { p: 0.45, delay: 5.0 };
+        let policy = DropPolicy::comm_deadline(0.6);
+        let seeds = [11u64, 22, 33, 44, 55];
+        let mut batch = ReplicaBatch::new(&cfg, &policy, &seeds);
+        let mut solos: Vec<ClusterSim> = seeds
+            .iter()
+            .map(|&s| ClusterSim::new(&cfg, s).with_policy(policy.clone()))
+            .collect();
+        let mut outs = vec![StepOutcome::default(); seeds.len()];
+        let mut want = StepOutcome::default();
+        let (mut dropped, mut clean) = (0usize, 0usize);
+        for step in 0..15 {
+            batch.step_installed_into(&mut outs);
+            for (r, solo) in solos.iter_mut().enumerate() {
+                solo.step_installed_into(&mut want);
+                assert_outcomes_eq(
+                    &outs[r],
+                    &want,
+                    &format!("{} step {step} replica {r}", kind.name()),
+                );
+                if want.total_completed()
+                    < cfg.workers * cfg.accumulations
+                {
+                    dropped += 1;
+                } else {
+                    clean += 1;
+                }
+            }
+        }
+        assert!(dropped > 0, "{}: deadline must drop steps", kind.name());
+        assert!(
+            clean > 0,
+            "{}: some replica-steps must stay on the lockstep path",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn churned_fault_plan_batches_stay_bitwise() {
+    // kills, rejoins, slowdowns and drift change live membership and
+    // per-worker speed mid-run; dead-seat steps fall back to the scalar
+    // finish and rejoin steps return to the lockstep pass, bitwise
+    // throughout
+    let plan = FaultPlan::parse(
+        "fail@3:w1,rejoin+4;slow@2:w0,x2.5,for5;drift@6:w3,+0.1",
+    )
+    .expect("valid plan");
+    for kind in [TopologyKind::Ring, TopologyKind::Torus { rows: 0 }] {
+        let cfg = cfg(kind, 6);
+        let policy = DropPolicy::compute_tau(5.0);
+        let seeds = [5u64, 6, 7, 8];
+        let build = |seed: u64| {
+            ClusterSim::new(&cfg, seed)
+                .with_policy(policy.clone())
+                .with_fault_plan(plan.clone())
+        };
+        let mut batch = ReplicaBatch::from_sims(
+            seeds.iter().map(|&s| build(s)).collect(),
+        );
+        let mut solos: Vec<ClusterSim> =
+            seeds.iter().map(|&s| build(s)).collect();
+        let mut outs = vec![StepOutcome::default(); seeds.len()];
+        let mut want = StepOutcome::default();
+        for step in 0..16 {
+            batch.step_installed_into(&mut outs);
+            for (r, solo) in solos.iter_mut().enumerate() {
+                solo.step_installed_into(&mut want);
+                assert_outcomes_eq(
+                    &outs[r],
+                    &want,
+                    &format!("{} step {step} replica {r}", kind.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn replay_sourced_batches_stay_bitwise() {
+    // record three live runs (distinct seeds, same shape), then batch
+    // their replay sims: the recorded draws drive the lockstep pass and
+    // every lane reproduces its recorded outcomes bitwise
+    let cfg = cfg(TopologyKind::Ring, 6);
+    let policy = DropPolicy::compute_tau(4.5);
+    let steps = 10usize;
+    let mut traces = Vec::new();
+    for seed in [0x71A1u64, 0x71A2, 0x71A3] {
+        let mut live =
+            ClusterSim::new(&cfg, seed).with_policy(policy.clone());
+        live.start_recording();
+        let mut out = StepOutcome::default();
+        for _ in 0..steps {
+            live.step_installed_into(&mut out);
+        }
+        traces.push(live.finish_recording().expect("consistent recording"));
+    }
+    let sims: Vec<ClusterSim> = traces
+        .iter()
+        .map(|t| ClusterSim::from_trace(t).expect("valid trace"))
+        .collect();
+    let mut batch = ReplicaBatch::from_sims(sims);
+    let mut outs = vec![StepOutcome::default(); traces.len()];
+    for step in 0..steps {
+        batch.step_installed_into(&mut outs);
+        for (r, trace) in traces.iter().enumerate() {
+            let rec = &trace.outcomes[step];
+            assert!(
+                rec.matches(&outs[r]),
+                "batched replay must reproduce the recorded outcome \
+                 bitwise (step {step}, replica {r})"
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_results_bitwise_independent_of_batch_and_jobs() {
+    // the rewired seed axis: whatever (jobs, batch) pair runs the grid,
+    // every SweepPoint carries the serial scalar run's bits — including
+    // a ragged tail (5 seeds at widths 2, 3 and 8)
+    let mut base = cfg(TopologyKind::Ring, 4);
+    base.stragglers = StragglerKind::Uniform { p: 0.3, delay: 3.0 };
+    let policies = [
+        DropPolicy::None,
+        DropPolicy::compute_tau(2.0),
+        DropPolicy::parse("tau=2+deadline=0.8").expect("valid spec"),
+    ];
+    let spec = SweepSpec::new(base)
+        .workers(&[4, 6])
+        .policies(&policies)
+        .seeds(&[1, 2, 3, 4, 5])
+        .iters(6)
+        .progress(false);
+    let reference = spec.clone().jobs(1).batch(1).run();
+    assert_eq!(reference.points.len(), spec.len());
+    for (jobs, batch) in [(1, 3), (4, 3), (2, 8), (0, 2), (1, 5)] {
+        let got = spec.clone().jobs(jobs).batch(batch).run();
+        assert_eq!(reference.points.len(), got.points.len());
+        for (a, b) in reference.points.iter().zip(&got.points) {
+            assert_eq!(a.index, b.index, "jobs={jobs} batch={batch}");
+            assert_eq!((a.workers, a.seed), (b.workers, b.seed));
+            assert_eq!(a.policy, b.policy);
+            for (x, y) in [
+                (a.mean_iter_time, b.mean_iter_time),
+                (a.mean_compute_time, b.mean_compute_time),
+                (a.throughput, b.throughput),
+                (a.drop_rate, b.drop_rate),
+            ] {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "jobs={jobs} batch={batch} point {}",
+                    a.index
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_observed_output_bitwise_independent_of_batch() {
+    // live observers route through the scalar oracle per replica, so
+    // the per-point shards and the merged histograms cannot depend on
+    // the batch width (or the thread count)
+    let base = cfg(TopologyKind::Ring, 5);
+    let spec = SweepSpec::new(base)
+        .workers(&[5])
+        .policies(&[
+            DropPolicy::None,
+            DropPolicy::parse("tau=2+deadline=0.8").expect("valid spec"),
+        ])
+        .seeds(&[1, 2, 3])
+        .iters(8)
+        .progress(false);
+    let (r1, o1) = spec.clone().jobs(1).batch(1).run_observed();
+    let (r2, o2) = spec.clone().jobs(3).batch(2).run_observed();
+    for (a, b) in r1.points.iter().zip(&r2.points) {
+        assert_eq!(a.mean_iter_time.to_bits(), b.mean_iter_time.to_bits());
+        assert_eq!(a.drop_rate.to_bits(), b.drop_rate.to_bits());
+    }
+    assert_eq!(o1.per_point.len(), o2.per_point.len());
+    for (i, (a, b)) in o1.per_point.iter().zip(&o2.per_point).enumerate() {
+        assert_eq!(a.steps, b.steps, "point {i}");
+        assert_eq!(
+            a.iter_time.sum().to_bits(),
+            b.iter_time.sum().to_bits(),
+            "point {i}"
+        );
+        assert_eq!(a.drops, b.drops, "point {i}");
+    }
+    let (a, b) = (&o1.merged, &o2.merged);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.drops, b.drops);
+    for (ha, hb) in [
+        (&a.iter_time, &b.iter_time),
+        (&a.compute_time, &b.compute_time),
+        (&a.arrival_offset, &b.arrival_offset),
+    ] {
+        assert_eq!(ha.count(), hb.count());
+        assert_eq!(ha.sum().to_bits(), hb.sum().to_bits());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(
+                ha.percentile(q).to_bits(),
+                hb.percentile(q).to_bits(),
+                "q={q}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_fills_reproduce_each_replica_stream_draw_for_draw() {
+    // the RNG stream-isolation contract at the fill level, across
+    // replicas: the batched step draws each replica's workers through
+    // fill_microbatches(_bounded) replica-by-replica, and each call
+    // must reproduce that worker's sequential draws — values, the
+    // bounded fill's early-stop point, and the end-of-stream RNG state
+    let config = cfg(TopologyKind::Ring, 4);
+    let model = LatencyModel::from_config(&config);
+    let accums = 7usize;
+    for (tau, label) in
+        [(f64::INFINITY, "unbounded"), (2.0, "bounded"), (0.05, "tight")]
+    {
+        // one independent stream set per replica, built like ClusterSim
+        let seeds = [0xF00u64, 0xF01, 0xF02];
+        for (rep, &seed) in seeds.iter().enumerate() {
+            let root = Xoshiro256pp::seed_from_u64(seed);
+            for w in 0..config.workers {
+                let mut batched: Xoshiro256pp = root.split(w as u64);
+                let mut seq = batched.clone();
+                let mut buf = Vec::new();
+                let drawn = model.fill_microbatches_bounded(
+                    w, 0.0, tau, accums, &mut buf, &mut batched,
+                );
+                // sequential reference: draw until the running total
+                // crosses tau, exactly one sample past the crossing
+                let mut t = 0.0;
+                let mut want = Vec::new();
+                for _ in 0..accums {
+                    let s = model.sample_microbatch(w, &mut seq);
+                    want.push(s);
+                    t += s;
+                    if t >= tau {
+                        break;
+                    }
+                }
+                assert_eq!(
+                    drawn,
+                    want.len(),
+                    "{label} replica {rep} worker {w}: early-stop point"
+                );
+                for (i, (a, b)) in buf.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{label} replica {rep} worker {w} draw {i}"
+                    );
+                }
+                // end-of-stream state: the next raw word agrees
+                assert_eq!(
+                    batched.next_u64(),
+                    seq.next_u64(),
+                    "{label} replica {rep} worker {w}: stream position"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_leaves_replica_streams_where_solo_stepping_leaves_them() {
+    // end-of-stream at the ClusterSim level: step a batch, dissolve it,
+    // keep stepping each replica solo — outcomes must stay bitwise
+    // equal to replicas that were never batched, which they can only do
+    // if batched stepping left every RNG stream in the solo position
+    let cfg = cfg(TopologyKind::Tree, 7);
+    let policy = DropPolicy::parse("tau=4+deadline=1.2").expect("valid");
+    let seeds = [100u64, 200, 300];
+    let mut batch = ReplicaBatch::new(&cfg, &policy, &seeds);
+    let mut solos: Vec<ClusterSim> = seeds
+        .iter()
+        .map(|&s| ClusterSim::new(&cfg, s).with_policy(policy.clone()))
+        .collect();
+    let mut outs = vec![StepOutcome::default(); seeds.len()];
+    let mut want = StepOutcome::default();
+    for _ in 0..6 {
+        batch.step_installed_into(&mut outs);
+        for solo in solos.iter_mut() {
+            solo.step_installed_into(&mut want);
+        }
+    }
+    let mut dissolved = batch.into_sims();
+    for step in 6..14 {
+        for (r, (sim, solo)) in
+            dissolved.iter_mut().zip(&mut solos).enumerate()
+        {
+            sim.step_installed_into(&mut outs[r]);
+            solo.step_installed_into(&mut want);
+            assert_outcomes_eq(
+                &outs[r],
+                &want,
+                &format!("post-batch step {step} replica {r}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn scan_edge_cases_degenerate_schedules_stay_bitwise() {
+    // zero/one-worker schedules have empty or trivial phase lists;
+    // infinite straggler delays push +inf through the phase pass — the
+    // batched lanes must still carry the scalar bits
+    for kind in TopologyKind::ALL {
+        for workers in [1usize, 2] {
+            let cfg = cfg(kind, workers);
+            let policy = DropPolicy::None;
+            let seeds = [1u64, 2, 3];
+            let mut batch = ReplicaBatch::new(&cfg, &policy, &seeds);
+            let mut solos: Vec<ClusterSim> = seeds
+                .iter()
+                .map(|&s| {
+                    ClusterSim::new(&cfg, s).with_policy(policy.clone())
+                })
+                .collect();
+            let mut outs = vec![StepOutcome::default(); seeds.len()];
+            let mut want = StepOutcome::default();
+            for step in 0..6 {
+                batch.step_installed_into(&mut outs);
+                for (r, solo) in solos.iter_mut().enumerate() {
+                    solo.step_installed_into(&mut want);
+                    assert_outcomes_eq(
+                        &outs[r],
+                        &want,
+                        &format!(
+                            "{} n={workers} step {step} replica {r}",
+                            kind.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    // +inf arrivals: an infinitely-delayed straggler saturates the
+    // phase pass identically on both paths
+    let mut inf_cfg = cfg(TopologyKind::Ring, 5);
+    inf_cfg.stragglers = StragglerKind::Uniform {
+        p: 0.4,
+        delay: f64::INFINITY,
+    };
+    let seeds = [9u64, 10, 11, 12];
+    let mut batch = ReplicaBatch::new(&inf_cfg, &DropPolicy::None, &seeds);
+    let mut solos: Vec<ClusterSim> = seeds
+        .iter()
+        .map(|&s| ClusterSim::new(&inf_cfg, s))
+        .collect();
+    let mut outs = vec![StepOutcome::default(); seeds.len()];
+    let mut want = StepOutcome::default();
+    let mut saw_inf = false;
+    for step in 0..8 {
+        batch.step_installed_into(&mut outs);
+        for (r, solo) in solos.iter_mut().enumerate() {
+            solo.step_installed_into(&mut want);
+            assert_outcomes_eq(
+                &outs[r],
+                &want,
+                &format!("inf step {step} replica {r}"),
+            );
+            saw_inf |= want.iter_time.is_infinite();
+        }
+    }
+    assert!(saw_inf, "the infinite delay must actually land");
+}
+
+#[test]
+fn scan_max4_bitwise_equals_sequential_fold_on_adversarial_inputs() {
+    // ragged tails, NaN / +-inf mixes, empty input — then a fuzz loop
+    let mut cases: Vec<Vec<f64>> = vec![
+        vec![],
+        vec![2.25],
+        vec![f64::NAN],
+        vec![f64::NAN, f64::NAN, f64::NAN, f64::NAN, f64::NAN],
+        vec![f64::NEG_INFINITY, f64::INFINITY, 0.0],
+        vec![0.0, -1.5, f64::INFINITY, 3.0, f64::NAN, 7.5, 2.0],
+        vec![f64::NEG_INFINITY; 9],
+    ];
+    // every ragged tail length around the 4-wide chunking
+    for n in 0..=17 {
+        cases.push((0..n).map(|i| ((i * 31) % 13) as f64 * 0.375).collect());
+    }
+    let mut rng = Xoshiro256pp::seed_from_u64(0xFA22);
+    for _ in 0..200 {
+        let n = rng.next_below(40) as usize;
+        cases.push(
+            (0..n)
+                .map(|_| match rng.next_below(8) {
+                    0 => f64::NAN,
+                    1 => f64::INFINITY,
+                    2 => f64::NEG_INFINITY,
+                    _ => (rng.next_f64() - 0.25) * 50.0,
+                })
+                .collect(),
+        );
+    }
+    for xs in &cases {
+        let want = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(scan_max4(xs).to_bits(), want.to_bits(), "{xs:?}");
+    }
+}
+
+#[test]
+fn fuzzed_link_params_keep_batched_lanes_bitwise() {
+    // random link parameter triples (latency, bandwidth, bytes spanning
+    // several orders of magnitude), random topology and width: the SoA
+    // pass must stay a bitwise mirror of the scalar pass whatever hop
+    // values the schedule compiles to
+    let mut rng = Xoshiro256pp::seed_from_u64(0x11_4B);
+    for case in 0..25 {
+        let kind = TopologyKind::ALL[rng.next_below(4) as usize];
+        let workers = 2 + rng.next_below(9) as usize;
+        let width = 1 + rng.next_below(6) as usize;
+        let mut cfg = cfg(kind, workers);
+        cfg.link_latency = 1e-6 * 10f64.powi(rng.next_below(4) as i32);
+        cfg.link_bandwidth = 1e7 * 10f64.powi(rng.next_below(4) as i32);
+        cfg.grad_bytes = 1e4 * 10f64.powi(rng.next_below(5) as i32);
+        let policy = DropPolicy::compute_tau(3.0);
+        let seeds: Vec<u64> =
+            (0..width as u64).map(|r| rng.next_u64() ^ r).collect();
+        let mut batch = ReplicaBatch::new(&cfg, &policy, &seeds);
+        let mut solos: Vec<ClusterSim> = seeds
+            .iter()
+            .map(|&s| ClusterSim::new(&cfg, s).with_policy(policy.clone()))
+            .collect();
+        let mut outs = vec![StepOutcome::default(); width];
+        let mut want = StepOutcome::default();
+        for step in 0..4 {
+            batch.step_installed_into(&mut outs);
+            for (r, solo) in solos.iter_mut().enumerate() {
+                solo.step_installed_into(&mut want);
+                assert_outcomes_eq(
+                    &outs[r],
+                    &want,
+                    &format!(
+                        "case {case} {} n={workers} width={width} \
+                         step {step} replica {r}",
+                        kind.name()
+                    ),
+                );
+            }
+        }
+    }
+}

@@ -219,6 +219,81 @@ impl S {
     assert!(act.iter().all(|d| d.message.contains("bounded_completion")));
 }
 
+// ------------------------------------------- rules 4+5: batched stepping
+
+#[test]
+fn batch_lockstep_fns_are_designated_hot() {
+    // The PR-10 SoA stepping path is designated hot exactly like the
+    // scalar oracle it mirrors: `step_installed_into`, `lockstep_pass`
+    // and `scan_max4` in sim/batch.rs must stay panic- and
+    // allocation-free in steady state.
+    let bad = r#"
+impl ReplicaBatch {
+    pub fn step_installed_into(&mut self, outs: &mut [StepOutcome]) {
+        self.lanes.first().expect("a lane");
+    }
+    fn lockstep_pass(&mut self) {
+        let gathered: Vec<f64> = self.ready.iter().copied().collect();
+        self.lane_buf = gathered;
+    }
+}
+pub fn scan_max4(xs: &[f64]) -> f64 {
+    xs.iter().cloned().reduce(f64::max).unwrap()
+}
+"#;
+    let diags = lint_source("sim/batch.rs", bad);
+    let act = active(&diags);
+    assert_eq!(act.len(), 3, "expect, collect, unwrap");
+    assert_eq!(act[0].rule, HOTPATH_PANIC);
+    assert_eq!(act[0].line, 4);
+    assert!(
+        act[0].message.contains("step_installed_into"),
+        "{}",
+        act[0].message
+    );
+    assert_eq!(act[1].rule, HOTPATH_ALLOC);
+    assert_eq!(act[1].line, 7);
+    assert!(act[1].message.contains("lockstep_pass"), "{}", act[1].message);
+    assert_eq!(act[2].rule, HOTPATH_PANIC);
+    assert_eq!(act[2].line, 12);
+    assert!(act[2].message.contains("scan_max4"), "{}", act[2].message);
+
+    // the designation is (file, fn): the same source elsewhere is clean
+    assert!(active(&lint_source("sim/batch_scratch.rs", bad)).is_empty());
+
+    // the real steady-state idiom is clean — scratch reuse via clear /
+    // resize / push into pre-grown buffers, shape asserts allowed, and
+    // warmup/convenience fns (`step_installed`, `from_sims`) may
+    // allocate freely
+    let clean = r#"
+impl ReplicaBatch {
+    pub fn step_installed_into(&mut self, outs: &mut [StepOutcome]) {
+        assert_eq!(outs.len(), self.sims.len());
+        self.lanes.clear();
+        self.lanes.push(0);
+    }
+    fn lockstep_pass(&mut self) {
+        self.ready.resize(8, 0.0);
+        self.next.copy_from_slice(&self.ready);
+        std::mem::swap(&mut self.ready, &mut self.next);
+    }
+    pub fn step_installed(&mut self) -> Vec<StepOutcome> {
+        let mut outs = vec![StepOutcome::default(); self.sims.len()];
+        self.step_installed_into(&mut outs);
+        outs
+    }
+}
+pub fn scan_max4(xs: &[f64]) -> f64 {
+    let mut m = f64::NEG_INFINITY;
+    for &x in xs {
+        m = m.max(x);
+    }
+    m
+}
+"#;
+    assert!(active(&lint_source("sim/batch.rs", clean)).is_empty());
+}
+
 // ---------------------------------------------------------------- rule 6
 
 #[test]
